@@ -1,0 +1,125 @@
+//! Regenerate every paper table/figure in one run.
+//!
+//! ```text
+//! cargo run --release --example paper_figures -- [--table2] [--table3]
+//!     [--fig8] [--fig9] [--fig10] [--fig11] [--quick]
+//! ```
+//!
+//! With no flags, everything runs. `--quick` shrinks batch/spatial scale
+//! so the full sweep finishes in a couple of minutes on a laptop.
+
+use escoin::bench_harness::fig10::{fig10_cache_rates, Fig10Opts};
+use escoin::bench_harness::fig11::{fig11_overall, geomean_overall};
+use escoin::bench_harness::fig8::{fig8_sparse_conv, geomean_speedups, Fig8Opts};
+use escoin::bench_harness::fig9::fig9_breakdown;
+use escoin::bench_harness::{table2_platforms, table3_rows, BenchOpts, Table};
+use escoin::config::all_networks;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let has = |f: &str| args.iter().any(|a| a == f);
+    let all = !args.iter().any(|a| a.starts_with("--fig") || a.starts_with("--table"));
+    let quick = has("--quick");
+
+    let opts = Fig8Opts {
+        batch: if quick { 1 } else { 2 },
+        spatial_scale: if quick { 2 } else { 1 },
+        threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        bench: if quick {
+            BenchOpts { warmup: 0, iters: 1 }
+        } else {
+            BenchOpts::from_env()
+        },
+    };
+
+    if all || has("--table2") {
+        print!("{}", table2_platforms().render());
+        println!();
+    }
+    if all || has("--table3") {
+        print!("{}", table3_rows().render());
+        println!();
+    }
+    if all || has("--fig8") {
+        let mut t = Table::new(
+            "Fig 8: sparse CONV speedup over CUBLAS",
+            &["model", "CUSPARSE x", "Escoin x"],
+        );
+        let mut rows = Vec::new();
+        for net in all_networks() {
+            let row = fig8_sparse_conv(&net, opts);
+            t.row(vec![
+                row.model.clone(),
+                format!("{:.2}x", row.speedup_cusparse()),
+                format!("{:.2}x", row.speedup_escoin()),
+            ]);
+            rows.push(row);
+        }
+        let (cb, cs) = geomean_speedups(&rows);
+        print!("{}", t.render());
+        println!("geomean: {cb:.2}x over CUBLAS (paper 2.63x), {cs:.2}x over CUSPARSE (paper 3.07x)\n");
+    }
+    if all || has("--fig9") {
+        let mut t = Table::new(
+            "Fig 9: execution-time breakdown (fractions)",
+            &["model", "approach", "im2col", "sgemm", "csrmm", "sconv", "pad_in"],
+        );
+        for net in all_networks() {
+            for row in fig9_breakdown(&net, opts) {
+                t.row(vec![
+                    row.model.clone(),
+                    row.approach.to_string(),
+                    format!("{:.0}%", 100.0 * row.fraction("im2col")),
+                    format!("{:.0}%", 100.0 * row.fraction("sgemm")),
+                    format!("{:.0}%", 100.0 * row.fraction("csrmm")),
+                    format!("{:.0}%", 100.0 * row.fraction("sconv")),
+                    format!("{:.0}%", 100.0 * row.fraction("pad_in")),
+                ]);
+            }
+        }
+        print!("{}", t.render());
+        println!();
+    }
+    if all || has("--fig10") {
+        let fopts = Fig10Opts {
+            spatial_scale: if quick { 2 } else { 1 },
+            max_layers: if quick { 3 } else { 0 },
+        };
+        let mut t = Table::new(
+            "Fig 10: simulated cache hit rates",
+            &["model", "csrmm RO", "sconv RO", "csrmm L2", "sconv L2"],
+        );
+        for net in all_networks() {
+            let row = fig10_cache_rates(&net, fopts);
+            t.row(vec![
+                row.model.clone(),
+                format!("{:.0}%", 100.0 * row.csrmm_ro),
+                format!("{:.0}%", 100.0 * row.sconv_ro),
+                format!("{:.0}%", 100.0 * row.csrmm_l2),
+                format!("{:.0}%", 100.0 * row.sconv_l2),
+            ]);
+        }
+        print!("{}", t.render());
+        println!("(paper: sconv RO 71-81%, csrmm RO 52-57%)\n");
+    }
+    if all || has("--fig11") {
+        let mut t = Table::new(
+            "Fig 11: overall inference speedup over CUBLAS",
+            &["model", "CUSPARSE x", "Escoin x", "sparse-conv share"],
+        );
+        let mut rows = Vec::new();
+        for net in all_networks() {
+            let row = fig11_overall(&net, opts);
+            t.row(vec![
+                row.model.clone(),
+                format!("{:.2}x", row.speedup_cusparse()),
+                format!("{:.2}x", row.speedup_escoin()),
+                format!("{:.0}%", 100.0 * row.sparse_conv_fraction),
+            ]);
+            rows.push(row);
+        }
+        let (cb, cs) = geomean_overall(&rows);
+        print!("{}", t.render());
+        println!("geomean: {cb:.2}x over CUBLAS (paper 1.38x), {cs:.2}x over CUSPARSE (paper 1.60x)");
+    }
+}

@@ -1,0 +1,30 @@
+use escoin::config::ConvShape;
+use escoin::conv::*;
+use escoin::tensor::{Dims4, Tensor4};
+use escoin::util::Rng;
+use std::time::Instant;
+
+fn main() {
+    let threads = 8;
+    for (name, shape) in [
+        ("conv2 (5x5, 27x27, sp.85)", ConvShape::new(96, 256, 27, 27, 5, 5, 1, 2).with_groups(2).with_sparsity(0.85)),
+        ("conv3 (3x3, 13x13, sp.88)", ConvShape::new(256, 384, 13, 13, 3, 3, 1, 1).with_sparsity(0.88)),
+        ("conv3/2 (3x3, 6x6)", ConvShape::new(256, 384, 13, 13, 3, 3, 1, 1).with_sparsity(0.88).scaled_spatial(2)),
+    ] {
+        let mut rng = Rng::new(1);
+        let x = Tensor4::random_activations(Dims4::new(2, shape.c, shape.h, shape.w), &mut rng);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let banks = w.csr_banks();
+        let st = w.stretched_banks();
+        let t0 = Instant::now();
+        let _ = lowered_gemm_parallel(&shape, &x, &w, threads);
+        let g = t0.elapsed();
+        let t0 = Instant::now();
+        let _ = lowered_spmm_parallel(&shape, &x, &banks, threads);
+        let s = t0.elapsed();
+        let t0 = Instant::now();
+        let _ = sconv_parallel(&shape, &x, &st, threads);
+        let d = t0.elapsed();
+        println!("{name}: gemm {g:?} spmm {s:?} sconv {d:?}");
+    }
+}

@@ -1,0 +1,70 @@
+//! End-to-end serving driver (the DESIGN.md E2E validation): start the
+//! coordinator on a MiniCNN model artifact, fire a stream of single-image
+//! requests through the dynamic batcher, and report latency/throughput.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example serve_inference [requests] [artifact]
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use escoin::coordinator::{BatcherConfig, ServerConfig, ServerHandle};
+use escoin::util::Rng;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let total: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(256);
+    let artifact = args
+        .get(2)
+        .cloned()
+        .unwrap_or_else(|| "minicnn_sconv".to_string());
+
+    println!("starting server on {artifact} ...");
+    let t0 = Instant::now();
+    let server = ServerHandle::start(ServerConfig {
+        artifact_dir: "artifacts".into(),
+        artifact: artifact.clone(),
+        batcher: BatcherConfig {
+            batch_size: 4, // overridden by the artifact's static batch
+            max_wait: Duration::from_millis(2),
+        },
+        weight_seed: 42,
+    })?;
+    println!(
+        "server ready in {:?} (image elems {}, classes {})",
+        t0.elapsed(),
+        server.image_elems(),
+        server.num_classes()
+    );
+
+    let mut rng = Rng::new(1);
+    let elems = server.image_elems();
+    let t_run = Instant::now();
+    let mut pending = Vec::with_capacity(total);
+    for _ in 0..total {
+        pending.push(server.submit(rng.activation_vec(elems))?);
+    }
+    let mut latencies = Vec::with_capacity(total);
+    for rx in pending {
+        let resp = rx.recv()?;
+        latencies.push(resp.latency.as_secs_f64() * 1e3);
+    }
+    let wall = t_run.elapsed();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = |q: f64| latencies[((q * (total - 1) as f64) as usize).min(total - 1)];
+
+    let m = server.metrics();
+    println!("--- E2E serving results ({artifact}) ---");
+    println!("requests:       {total}");
+    println!("wall time:      {wall:?}");
+    println!("throughput:     {:.1} images/s", total as f64 / wall.as_secs_f64());
+    println!("latency p50:    {:.2} ms", p(0.50));
+    println!("latency p95:    {:.2} ms", p(0.95));
+    println!("latency p99:    {:.2} ms", p(0.99));
+    println!("batches:        {} (padded slots {})", m.batches, m.padded_slots);
+    let stats = server.shutdown()?;
+    println!("model compile:  {:?}", stats.compile_time);
+    assert_eq!(stats.snapshot.errors, 0, "no batch may fail");
+    Ok(())
+}

@@ -1,0 +1,209 @@
+"""AOT pipeline: lower every layer/model executable to HLO **text** and
+write ``artifacts/manifest.json`` for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --outdir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import (
+    ARTIFACT_BATCH,
+    ARTIFACT_LAYERS,
+    METHODS,
+    MINICNN_BATCH,
+    MINICNN_CLASSES,
+    MINICNN_LAYERS,
+    ConvShape,
+)
+from .model import conv_layer_fn, minicnn_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: tuple[int, ...], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_dict(s: ConvShape) -> dict:
+    return {
+        "c": s.c,
+        "m": s.m,
+        "h": s.h,
+        "w": s.w,
+        "r": s.r,
+        "s": s.s,
+        "stride": s.stride,
+        "pad": s.pad,
+        "sparsity": s.sparsity,
+    }
+
+
+def _input_entry(name: str, role: str, spec: jax.ShapeDtypeStruct) -> dict:
+    dt = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[spec.dtype]
+    return {"name": name, "role": role, "shape": list(spec.shape), "dtype": dt}
+
+
+def layer_artifact(name: str, shape: ConvShape, method: str, batch: int) -> tuple[dict, str]:
+    """Lower one CONV-layer executable; returns (manifest entry, hlo text)."""
+    k = shape.ell_k()
+    x = _spec((batch, shape.c, shape.h, shape.w))
+    out_shape = [batch, shape.m, shape.out_h, shape.out_w]
+    fn = conv_layer_fn(shape, method)
+    if method == "gemm":
+        w = _spec((shape.m, shape.crs))
+        lowered = jax.jit(fn).lower(x, w)
+        inputs = [
+            _input_entry("x", "activations", x),
+            _input_entry("weights", "weights_dense", w),
+        ]
+    else:
+        vals = _spec((shape.m, k))
+        idx = _spec((shape.m, k), jnp.int32)
+        lowered = jax.jit(fn).lower(x, vals, idx)
+        colidx_role = "ell_colidx_stretched" if method == "sconv" else "ell_colidx_canonical"
+        inputs = [
+            _input_entry("x", "activations", x),
+            _input_entry("values", "ell_values", vals),
+            _input_entry("colidx", colidx_role, idx),
+        ]
+    entry = {
+        "name": f"{name}_{method}",
+        "kind": "layer",
+        "method": method,
+        "layer": name,
+        "batch": batch,
+        "shape": _shape_dict(shape),
+        "ell_k": k if method != "gemm" else 0,
+        "inputs": inputs,
+        "output": out_shape,
+        "file": f"{name}_{method}.hlo.txt",
+    }
+    return entry, to_hlo_text(lowered)
+
+
+def minicnn_artifact(method: str) -> tuple[dict, str]:
+    """Lower the whole MiniCNN forward under ``method``."""
+    l1, l2, l3 = MINICNN_LAYERS
+    n = MINICNN_BATCH
+    x = _spec((n, l1.c, l1.h, l1.w))
+    w1 = _spec((l1.m, l1.crs))
+    fc_w = _spec((l3.m, MINICNN_CLASSES))
+    fc_b = _spec((MINICNN_CLASSES,))
+
+    fn = minicnn_fn(method)
+    colrole = "ell_colidx_stretched" if method == "sconv" else "ell_colidx_canonical"
+    if method == "gemm":
+        w2 = _spec((l2.m, l2.crs))
+        w3 = _spec((l3.m, l3.crs))
+        lowered = jax.jit(fn).lower(x, w1, w2, w3, fc_w, fc_b)
+        weight_inputs = [
+            _input_entry("w2", "weights_dense", w2),
+            _input_entry("w3", "weights_dense", w3),
+        ]
+    else:
+        v2 = _spec((l2.m, l2.ell_k()))
+        i2 = _spec((l2.m, l2.ell_k()), jnp.int32)
+        v3 = _spec((l3.m, l3.ell_k()))
+        i3 = _spec((l3.m, l3.ell_k()), jnp.int32)
+        lowered = jax.jit(fn).lower(x, w1, v2, i2, v3, i3, fc_w, fc_b)
+        weight_inputs = [
+            _input_entry("v2", "ell_values", v2),
+            _input_entry("i2", colrole, i2),
+            _input_entry("v3", "ell_values", v3),
+            _input_entry("i3", colrole, i3),
+        ]
+    entry = {
+        "name": f"minicnn_{method}",
+        "kind": "model",
+        "method": method,
+        "layer": "minicnn",
+        "batch": n,
+        "layers": [_shape_dict(l) for l in (l1, l2, l3)],
+        "ell_k": [0 if method == "gemm" else l.ell_k() for l in (l2, l3)],
+        "inputs": [
+            _input_entry("x", "activations", x),
+            _input_entry("w1", "weights_dense", w1),
+            *weight_inputs,
+            _input_entry("fc_w", "weights_dense", fc_w),
+            _input_entry("fc_b", "weights_dense", fc_b),
+        ],
+        "output": [n, MINICNN_CLASSES],
+        "file": f"minicnn_{method}.hlo.txt",
+    }
+    return entry, to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated artifact name prefixes to (re)build",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    only = args.only.split(",") if args.only else None
+
+    entries = []
+    jobs: list[tuple[str, object]] = []
+    for name, shape in ARTIFACT_LAYERS.items():
+        for method in METHODS:
+            jobs.append((f"{name}_{method}", (name, shape, method)))
+    for method in METHODS:
+        jobs.append((f"minicnn_{method}", ("minicnn", None, method)))
+
+    for art_name, job in jobs:
+        if only and not any(art_name.startswith(p) for p in only):
+            continue
+        name, shape, method = job
+        if name == "minicnn":
+            entry, text = minicnn_artifact(method)
+        else:
+            entry, text = layer_artifact(name, shape, method, ARTIFACT_BATCH)
+        path = os.path.join(args.outdir, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        entry["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+        entries.append(entry)
+        print(f"lowered {entry['name']:32s} -> {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.outdir, "manifest.json")
+    if only and os.path.exists(manifest_path):
+        # Partial rebuild: merge into the existing manifest by name.
+        with open(manifest_path) as f:
+            old = {e["name"]: e for e in json.load(f)["artifacts"]}
+        for e in entries:
+            old[e["name"]] = e
+        entries = list(old.values())
+    manifest = {"version": 1, "artifacts": entries}
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Layer shapes and sparse-format helpers shared by the compile path.
+
+Mirrors the Rust `config`/`sparse` modules:
+
+* :class:`ConvShape` — the paper's Table 1 shape parameters.
+* :func:`prune_magnitude` / :func:`dense_to_ell` / :func:`stretch_colidx`
+  — the same pruning + CSR->ELL + weight-stretching pipeline as
+  ``rust/src/sparse/``, so an ELL tensor built in Rust at runtime is
+  bit-compatible with what the AOT-lowered kernels expect.
+* :data:`ARTIFACT_LAYERS` — the layer executables ``aot.py`` lowers.
+  Interpret-mode Pallas cannot run batch-128 ImageNet layers on CPU, so
+  these are channel/spatially scaled versions of the paper's sparse CONV
+  layers (documented in DESIGN.md §7); the *structure* (filter size,
+  stride, padding, sparsity) is preserved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvShape:
+    """Geometry of one CONV layer (paper Table 1). Groups are handled at
+    the model level (the kernels see one group at a time)."""
+
+    c: int
+    m: int
+    h: int
+    w: int
+    r: int
+    s: int
+    stride: int = 1
+    pad: int = 0
+    sparsity: float = 0.0
+
+    @property
+    def out_h(self) -> int:
+        return (self.h + 2 * self.pad - self.r) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.w + 2 * self.pad - self.s) // self.stride + 1
+
+    @property
+    def padded_h(self) -> int:
+        return self.h + 2 * self.pad
+
+    @property
+    def padded_w(self) -> int:
+        return self.w + 2 * self.pad
+
+    @property
+    def weights(self) -> int:
+        return self.m * self.c * self.r * self.s
+
+    @property
+    def crs(self) -> int:
+        return self.c * self.r * self.s
+
+    @property
+    def ef(self) -> int:
+        return self.out_h * self.out_w
+
+    def nnz_per_row(self) -> int:
+        """Exact per-row nonzero count under per-row pruning."""
+        return self.crs - int(round(self.crs * self.sparsity))
+
+    def ell_k(self, align: int = 8) -> int:
+        """Static ELL slot budget per filter row (DESIGN.md §6).
+
+        Weights are pruned *per row* (each filter keeps its
+        ``crs - round(crs*sparsity)`` largest-magnitude taps), so the row
+        population is exact and the ELL shape is static — the property the
+        TPU adaptation needs. ``k`` is that count rounded up to ``align``.
+        """
+        k = max(1, self.nnz_per_row())
+        return ((k + align - 1) // align) * align
+
+
+def prune_magnitude(dense: np.ndarray, sparsity: float) -> np.ndarray:
+    """Zero the smallest-magnitude entries globally; same semantics as Rust
+    ``prune_magnitude`` (exact count via order statistic)."""
+    flat = dense.reshape(-1).copy()
+    zeros = int(round(flat.size * sparsity))
+    if zeros > 0:
+        order = np.argsort(np.abs(flat), kind="stable")
+        flat[order[:zeros]] = 0.0
+    return flat.reshape(dense.shape)
+
+
+def prune_per_row(dense_rows: np.ndarray, sparsity: float) -> np.ndarray:
+    """Per-row magnitude pruning: every row keeps its
+    ``cols - round(cols*sparsity)`` largest-magnitude entries.
+
+    This is the pruning model used for all synthetic filter banks (Rust
+    ``prune_magnitude`` applied row-wise): it matches global pruning in
+    expectation for i.i.d. weights while giving the exact static row
+    population the ELL/TPU format requires (DESIGN.md §6).
+    """
+    out = dense_rows.copy()
+    for i in range(out.shape[0]):
+        out[i] = prune_magnitude(out[i], sparsity)
+    return out
+
+
+def dense_to_ell(dense_rows: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Convert a dense ``(rows, cols)`` matrix to ELL ``(rows, k)`` arrays
+    ``(values f32, colidx int32)``. Rows are scanned left to right (CSR
+    order); padding slots hold value 0.0 / column 0. Asserts every row
+    fits in ``k`` slots — the same contract the Rust runtime enforces."""
+    rows, _cols = dense_rows.shape
+    values = np.zeros((rows, k), dtype=np.float32)
+    colidx = np.zeros((rows, k), dtype=np.int32)
+    for i in range(rows):
+        nz = np.nonzero(dense_rows[i])[0]
+        assert len(nz) <= k, f"row {i} has {len(nz)} nonzeros > ELL k={k}"
+        values[i, : len(nz)] = dense_rows[i, nz]
+        colidx[i, : len(nz)] = nz
+    return values, colidx
+
+
+def stretch_colidx(colidx: np.ndarray, shape: ConvShape) -> np.ndarray:
+    """Weight stretching (paper §3.1): canonical filter column
+    ``(c, r, s)`` -> flat offset ``c*Hp*Wp + r*Wp + s`` into the padded
+    image. Identical to Rust ``stretch_weights``."""
+    rs = shape.r * shape.s
+    c = colidx // rs
+    r = (colidx // shape.s) % shape.r
+    s = colidx % shape.s
+    return (c * shape.padded_h * shape.padded_w + r * shape.padded_w + s).astype(np.int32)
+
+
+def synthetic_weights(shape: ConvShape, seed: int) -> np.ndarray:
+    """Normal-initialised ``(M, C*R*S)`` filter bank pruned to
+    ``shape.sparsity`` — the DESIGN.md §7 stand-in for SkimCaffe models."""
+    rng = np.random.default_rng(seed)
+    dense = rng.standard_normal((shape.m, shape.crs)).astype(np.float32)
+    if shape.sparsity > 0.0:
+        dense = prune_per_row(dense, shape.sparsity)
+    return dense
+
+
+# ---------------------------------------------------------------------------
+# AOT artifact set.
+#
+# Scaled stand-ins for the paper's sparse CONV layer classes. Names encode
+# provenance: the paper layer each one is modelled on. Batch sizes are
+# small because interpret-mode Pallas executes the kernel body as lowered
+# HLO loops on CPU.
+# ---------------------------------------------------------------------------
+
+ARTIFACT_BATCH = 2
+
+ARTIFACT_LAYERS: dict[str, ConvShape] = {
+    # AlexNet conv2 class: 5x5 pad-2 (channels /8, spatial /2).
+    "alexnet_conv2": ConvShape(c=12, m=32, h=13, w=13, r=5, s=5, stride=1, pad=2, sparsity=0.85),
+    # AlexNet conv3 class: 3x3 pad-1 at native 13x13 (channels /8).
+    "alexnet_conv3": ConvShape(c=32, m=48, h=13, w=13, r=3, s=3, stride=1, pad=1, sparsity=0.88),
+    # GoogLeNet inception 5x5 branch class (4e geometry, channels /2).
+    "googlenet_inc4e_5x5": ConvShape(c=16, m=64, h=14, w=14, r=5, s=5, stride=1, pad=2, sparsity=0.84),
+    # ResNet conv4_x 3x3 class at native 14x14 (channels /8).
+    "resnet_conv4_3x3": ConvShape(c=32, m=32, h=14, w=14, r=3, s=3, stride=1, pad=1, sparsity=0.78),
+    # ResNet strided 3x3 (first block of a stage), exercises stride=2.
+    "resnet_conv3_s2": ConvShape(c=16, m=16, h=16, w=16, r=3, s=3, stride=2, pad=1, sparsity=0.74),
+}
+
+#: Methods lowered for each layer (the paper's three contenders).
+METHODS = ("gemm", "spmm", "sconv")
+
+#: The MiniCNN served by the end-to-end example (CIFAR-scale).
+MINICNN_LAYERS: list[ConvShape] = [
+    ConvShape(c=3, m=16, h=32, w=32, r=3, s=3, stride=1, pad=1, sparsity=0.0),
+    ConvShape(c=16, m=32, h=16, w=16, r=3, s=3, stride=1, pad=1, sparsity=0.80),
+    ConvShape(c=32, m=64, h=8, w=8, r=3, s=3, stride=1, pad=1, sparsity=0.80),
+]
+MINICNN_CLASSES = 10
+MINICNN_BATCH = 4

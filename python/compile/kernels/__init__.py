@@ -1,0 +1,16 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+Every kernel is lowered with ``interpret=True`` (the CPU PJRT client
+cannot execute Mosaic custom-calls); correctness is pinned against the
+pure-jnp oracles in :mod:`ref` by ``python/tests/``.
+
+Kernels:
+
+* :func:`pad.pad_input`      — ``pad_in`` (paper Fig 9's padding kernel).
+* :func:`im2col.im2col`      — the lowering transform (baseline path).
+* :func:`gemm.matmul`        — tiled dense matmul (cuBLAS ``sgemm`` proxy).
+* :func:`spmm.ell_spmm`      — sparse x dense matmul (cuSPARSE ``csrmm`` proxy).
+* :func:`sconv.sconv`        — **Escoin's direct sparse convolution**.
+"""
+
+from . import gemm, im2col, pad, ref, sconv, spmm  # noqa: F401

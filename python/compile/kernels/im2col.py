@@ -1,0 +1,55 @@
+"""The lowering kernel (paper §2.2, Fig 2): materialise the im2col matrix.
+
+This is the baseline path's data transformation — the memory-bandwidth
+overhead Escoin eliminates. Grid = (N, C*R*S): each step extracts one
+lowered row (the strided window of one filter tap) from the padded image.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import ConvShape
+
+
+def _im2col_kernel(x_ref, o_ref, *, shape: ConvShape):
+    # x_ref: (1, C*Hp, Wp); o_ref: (1, 1, E*F)
+    # grid: (n, row) with row = (c, r, s) flattened.
+    e, f = shape.out_h, shape.out_w
+    stride = shape.stride
+    row_id = pl.program_id(1)
+    rs = shape.r * shape.s
+    c = row_id // rs
+    r = (row_id // shape.s) % shape.r
+    s = row_id % shape.s
+    span_h = (e - 1) * stride + 1
+    span_w = (f - 1) * stride + 1
+    window = pl.load(
+        x_ref,
+        (0, pl.dslice(c * shape.padded_h + r, span_h), pl.dslice(s, span_w)),
+    )
+    if stride != 1:
+        window = window[::stride, ::stride]
+    o_ref[0, 0] = window.reshape(e * f)
+
+
+def im2col(x_padded: jax.Array, shape: ConvShape) -> jax.Array:
+    """Lower ``x_padded`` (N, C, Hp, Wp) to (N, C*R*S, E*F)."""
+    n, c, hp, wp = x_padded.shape
+    assert (hp, wp) == (shape.padded_h, shape.padded_w), "input not padded"
+    x2d = x_padded.reshape(n, c * hp, wp)
+    crs = shape.crs
+    ef = shape.ef
+    kernel = functools.partial(_im2col_kernel, shape=shape)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, crs),
+        in_specs=[pl.BlockSpec((1, c * hp, wp), lambda i, j: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, ef), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, crs, ef), jnp.float32),
+        interpret=True,
+    )(x2d)

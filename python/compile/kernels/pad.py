@@ -1,0 +1,37 @@
+"""``pad_in`` — Escoin's input-padding kernel (paper §3.1, Fig 9).
+
+The paper pads the ifmap once so the sconv inner loop needs no bounds
+checks. On TPU the analogue is a trivial grid-over-(N, C) kernel whose
+block writes the interior of a zero-initialised padded plane.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pad_kernel(x_ref, o_ref, *, pad: int, h: int, w: int):
+    # x_ref: (1, 1, H, W); o_ref: (1, 1, Hp, Wp)
+    o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[0, 0, pad : pad + h, pad : pad + w] = x_ref[0, 0]
+
+
+def pad_input(x: jax.Array, pad: int) -> jax.Array:
+    """Zero-pad ``x`` (N, C, H, W) spatially by ``pad`` on each side."""
+    if pad == 0:
+        return x
+    n, c, h, w = x.shape
+    hp, wp = h + 2 * pad, w + 2 * pad
+    kernel = functools.partial(_pad_kernel, pad=pad, h=h, w=w)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, c),
+        in_specs=[pl.BlockSpec((1, 1, h, w), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, hp, wp), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, hp, wp), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+These are deliberately written with stock XLA ops (``lax.conv``,
+``jnp.take``, ``jnp.einsum``) so that a bug in one of our Pallas kernels
+cannot be mirrored in its oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pad_ref(x: jax.Array, pad: int) -> jax.Array:
+    """Zero-pad NCHW input spatially by ``pad`` on each side."""
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+
+
+def conv_ref(x: jax.Array, w: jax.Array, stride: int, pad: int) -> jax.Array:
+    """Dense NCHW convolution via ``lax.conv`` — the layer-level oracle.
+
+    ``x``: (N, C, H, W); ``w``: (M, C, R, S). Returns (N, M, E, F).
+    """
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def im2col_ref(xp: jax.Array, r: int, s: int, stride: int, e: int, f: int) -> jax.Array:
+    """Lowered matrix from a padded input (paper Fig 2).
+
+    ``xp``: (N, C, Hp, Wp) already padded. Returns (N, C*R*S, E*F) where
+    row (c, rr, ss), column (h, w) holds ``xp[n, c, h*stride+rr, w*stride+ss]``.
+    """
+    n, c, _hp, _wp = xp.shape
+    cols = []
+    for rr in range(r):
+        for ss in range(s):
+            window = jax.lax.slice(
+                xp,
+                (0, 0, rr, ss),
+                (n, c, rr + (e - 1) * stride + 1, ss + (f - 1) * stride + 1),
+                (1, 1, stride, stride),
+            )  # (N, C, E, F)
+            cols.append(window.reshape(n, c, e * f))
+    # taps within channel: (N, C, R*S, E*F) then flatten to (N, C*R*S, E*F).
+    stacked = jnp.stack(cols, axis=2)
+    return stacked.reshape(n, c * r * s, e * f)
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched ``C[n] = A @ B[n]``: a (M, K), b (N, K, L) -> (N, M, L)."""
+    return jnp.einsum("mk,nkl->nml", a, b)
+
+
+def ell_spmm_ref(values: jax.Array, colidx: jax.Array, b: jax.Array) -> jax.Array:
+    """ELL sparse x dense: values/colidx (M, K), b (N, Kc, L) -> (N, M, L).
+
+    Padding slots carry value 0, so gathering row 0 for them is inert.
+    """
+    gathered = jnp.take(b, colidx, axis=1)  # (N, M, K, L)
+    return jnp.einsum("mk,nmkl->nml", values, gathered)
+
+
+def sconv_ref(x: jax.Array, dense_w: np.ndarray, shape) -> jax.Array:
+    """Oracle for the direct sparse conv: a dense conv with the pruned
+    weights (sparsity is an implementation detail, not semantics)."""
+    w = jnp.asarray(dense_w.reshape(shape.m, shape.c, shape.r, shape.s))
+    return conv_ref(x, w, shape.stride, shape.pad)

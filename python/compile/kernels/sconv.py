@@ -1,0 +1,86 @@
+"""Escoin's direct sparse convolution as a Pallas kernel (paper §3).
+
+TPU re-think of the paper's CUDA mapping (DESIGN.md §6):
+
+* The sparse filter bank arrives **weight-stretched** (paper §3.1) and
+  **ELL-padded**: ``values``/``colidx`` are (M, K) with K static, padding
+  slots hold value 0 / offset 0. ``colidx[m, k]`` is a flat offset into
+  the padded per-image input viewed as ``(C*Hp, Wp)``.
+* Grid = (N, M): each grid step owns one output plane (E, F) — the
+  thread-block-per-output-channel partitioning of §3.3, with the VMEM
+  accumulator playing the role of register-resident partial sums.
+* Per nonzero, a ``pl.load`` with dynamic start pulls an input window
+  whose rows are contiguous — the coalescing analogue of Fig 6 — and the
+  fori_loop over K slots is the static-trip-count version of the CSR row
+  walk in Algorithm 2.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import ConvShape
+
+
+def _sconv_kernel(x_ref, val_ref, idx_ref, o_ref, *, shape: ConvShape, k: int):
+    # x_ref:   (1, C*Hp, Wp)  one padded image, channel-rows flattened
+    # val_ref: (1, K) f32     one stretched+ELL filter row
+    # idx_ref: (1, K) i32     flat offsets (c*Hp + r)*Wp + s, stretched
+    # o_ref:   (1, 1, E, F)
+    e, f = shape.out_h, shape.out_w
+    wp = shape.padded_w
+    stride = shape.stride
+    span_h = (e - 1) * stride + 1
+    span_w = (f - 1) * stride + 1
+
+    def body(slot, acc):
+        off = idx_ref[0, slot]
+        row = off // wp
+        col = off % wp
+        window = pl.load(
+            x_ref,
+            (0, pl.dslice(row, span_h), pl.dslice(col, span_w)),
+        )
+        if stride != 1:
+            window = window[::stride, ::stride]
+        return acc + val_ref[0, slot] * window
+
+    acc = jax.lax.fori_loop(0, k, body, jnp.zeros((e, f), jnp.float32))
+    o_ref[0, 0] = acc
+
+
+def sconv(
+    x_padded: jax.Array,
+    values: jax.Array,
+    colidx: jax.Array,
+    shape: ConvShape,
+) -> jax.Array:
+    """Direct sparse convolution.
+
+    ``x_padded``: (N, C, Hp, Wp) — already padded (see :mod:`pad`).
+    ``values``/``colidx``: (M, K) ELL arrays with *stretched* offsets.
+    Returns (N, M, E, F).
+    """
+    n, c, hp, wp = x_padded.shape
+    assert (hp, wp) == (shape.padded_h, shape.padded_w), "input not padded"
+    m, k = values.shape
+    assert m == shape.m and colidx.shape == (m, k)
+    x2d = x_padded.reshape(n, c * hp, wp)
+    e, f = shape.out_h, shape.out_w
+    kernel = functools.partial(_sconv_kernel, shape=shape, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, m),
+        in_specs=[
+            pl.BlockSpec((1, c * hp, wp), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, e, f), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m, e, f), jnp.float32),
+        interpret=True,
+    )(x2d, values, colidx)

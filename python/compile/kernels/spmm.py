@@ -1,0 +1,50 @@
+"""ELL sparse x dense matmul — the cuSPARSE ``csrmm`` proxy.
+
+``C[n] = W_sparse @ B[n]`` where W is the pruned (M, CRS) filter matrix in
+ELL form (canonical, *unstretched* column ids into the lowered matrix's
+rows) and B is the (N, CRS, L) im2col output.
+
+Grid = (N, M): one output row per step. Every slot gathers one row of B
+by dynamic index — the irregular indirection that makes csrmm cache-
+hostile (the Fig 10 experiment); we reproduce the access pattern
+faithfully rather than hiding it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(val_ref, idx_ref, b_ref, o_ref, *, k: int, l: int):
+    # val_ref/idx_ref: (1, K); b_ref: (1, CRS, L); o_ref: (1, 1, L)
+    def body(slot, acc):
+        col = idx_ref[0, slot]
+        brow = pl.load(b_ref, (0, pl.dslice(col, 1), pl.dslice(0, l)))
+        return acc + val_ref[0, slot] * brow[0]
+
+    acc = jax.lax.fori_loop(0, k, body, jnp.zeros((l,), jnp.float32))
+    o_ref[0, 0] = acc
+
+
+def ell_spmm(values: jax.Array, colidx: jax.Array, b: jax.Array) -> jax.Array:
+    """values/colidx (M, K) ELL; b (N, CRS, L). Returns (N, M, L)."""
+    m, k = values.shape
+    n, crs, l = b.shape
+    assert colidx.shape == (m, k)
+    kernel = functools.partial(_spmm_kernel, k=k, l=l)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, m),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, crs, l), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, l), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m, l), jnp.float32),
+        interpret=True,
+    )(values, colidx, b)

@@ -1,0 +1,129 @@
+"""L2: JAX layer/model builders composing the L1 Pallas kernels.
+
+Python exists only on the compile path: each builder returns a jax
+function that ``aot.py`` lowers once to HLO text; the Rust coordinator
+executes the compiled artifact at serve time.
+
+Three executable *methods* per CONV layer — the paper's contenders:
+
+* ``gemm``  — ``pad -> im2col -> dense matmul`` (CUBLAS proxy; pruned
+  weights stay dense, zeros included).
+* ``spmm``  — ``pad -> im2col -> ELL spmm`` (CUSPARSE proxy; canonical
+  column ids into the lowered matrix).
+* ``sconv`` — ``pad -> direct sparse conv`` (Escoin; weight-stretched
+  offsets, no lowered matrix ever materialised).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ConvShape, MINICNN_CLASSES, MINICNN_LAYERS
+from .kernels import gemm, im2col, pad, sconv, spmm
+
+
+def conv_layer_fn(shape: ConvShape, method: str) -> Callable:
+    """Build the jax function for one CONV layer under ``method``.
+
+    Signatures (all return (N, M, E, F)):
+
+    * gemm:  ``fn(x, weights)`` with ``weights`` (M, C*R*S) dense.
+    * spmm:  ``fn(x, values, colidx)`` with canonical ELL (M, K).
+    * sconv: ``fn(x, values, colidx)`` with stretched ELL (M, K).
+    """
+    if method == "gemm":
+
+        def fn_gemm(x, weights):
+            xp = pad.pad_input(x, shape.pad)
+            lowered = im2col.im2col(xp, shape)  # the lowering overhead
+            y = gemm.matmul(weights, lowered)
+            return y.reshape(x.shape[0], shape.m, shape.out_h, shape.out_w)
+
+        return fn_gemm
+
+    if method == "spmm":
+
+        def fn_spmm(x, values, colidx):
+            xp = pad.pad_input(x, shape.pad)
+            lowered = im2col.im2col(xp, shape)  # same lowering overhead
+            y = spmm.ell_spmm(values, colidx, lowered)
+            return y.reshape(x.shape[0], shape.m, shape.out_h, shape.out_w)
+
+        return fn_spmm
+
+    if method == "sconv":
+
+        def fn_sconv(x, values, colidx):
+            xp = pad.pad_input(x, shape.pad)  # pad_in — no im2col
+            return sconv.sconv(xp, values, colidx, shape)
+
+        return fn_sconv
+
+    raise ValueError(f"unknown method {method!r}")
+
+
+def _maxpool2x2(x: jax.Array) -> jax.Array:
+    """2x2/2 max pool (NCHW) used between MiniCNN stages."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, 2, 2),
+        window_strides=(1, 1, 2, 2),
+        padding="VALID",
+    )
+
+
+def minicnn_fn(method: str) -> Callable:
+    """Whole-model forward for the E2E serving example (CIFAR-scale).
+
+    Layer 1 is dense (always the gemm path, like the paper keeping conv1
+    dense); layers 2-3 are pruned and use ``method``. Head: global average
+    pool + linear classifier.
+
+    Signature — gemm: ``fn(x, w1, w2, w3, fc_w, fc_b)`` with dense
+    (M, CRS) filter matrices; spmm/sconv:
+    ``fn(x, w1, v2, i2, v3, i3, fc_w, fc_b)`` with ELL (values, colidx)
+    pairs (canonical ids for spmm, stretched offsets for sconv).
+    """
+    l1, l2, l3 = MINICNN_LAYERS
+    conv1 = conv_layer_fn(l1, "gemm")
+    conv2 = conv_layer_fn(l2, method)
+    conv3 = conv_layer_fn(l3, method)
+
+    def head(y, fc_w, fc_b):
+        y = y.mean(axis=(2, 3))  # global average pool -> (N, 64)
+        return y @ fc_w + fc_b
+
+    if method == "gemm":
+
+        def fn_gemm(x, w1, w2, w3, fc_w, fc_b):
+            y = jax.nn.relu(conv1(x, w1))
+            y = _maxpool2x2(y)  # 32 -> 16
+            y = jax.nn.relu(conv2(y, w2))
+            y = _maxpool2x2(y)  # 16 -> 8
+            y = jax.nn.relu(conv3(y, w3))
+            return head(y, fc_w, fc_b)
+
+        return fn_gemm
+
+    def fn_sparse(x, w1, v2, i2, v3, i3, fc_w, fc_b):
+        y = jax.nn.relu(conv1(x, w1))
+        y = _maxpool2x2(y)  # 32 -> 16
+        y = jax.nn.relu(conv2(y, v2, i2))
+        y = _maxpool2x2(y)  # 16 -> 8
+        y = jax.nn.relu(conv3(y, v3, i3))
+        return head(y, fc_w, fc_b)
+
+    return fn_sparse
+
+
+def minicnn_feature_dim() -> int:
+    return MINICNN_LAYERS[-1].m
+
+
+def minicnn_num_classes() -> int:
+    return MINICNN_CLASSES

@@ -1,0 +1,93 @@
+"""AOT pipeline tests: manifest integrity and HLO-text sanity.
+
+These validate the artifacts directory if it exists (built by
+``make artifacts``); the lowering functions themselves are exercised
+directly on one small artifact so the test runs even on a fresh tree.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from compile.aot import layer_artifact, to_hlo_text
+from compile.configs import ARTIFACT_LAYERS, METHODS, MINICNN_LAYERS, ConvShape
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_layer_artifact_entry_schema():
+    name = "alexnet_conv3"
+    shape = ARTIFACT_LAYERS[name]
+    entry, text = layer_artifact(name, shape, "sconv", batch=2)
+    assert entry["name"] == "alexnet_conv3_sconv"
+    assert entry["kind"] == "layer"
+    assert entry["ell_k"] == shape.ell_k()
+    assert entry["output"] == [2, shape.m, shape.out_h, shape.out_w]
+    roles = [i["role"] for i in entry["inputs"]]
+    assert roles == ["activations", "ell_values", "ell_colidx_stretched"]
+    # HLO text sanity: parseable header + parameters of the right arity.
+    assert text.startswith("HloModule"), text[:50]
+    assert text.count("parameter(") >= 3
+
+
+def test_gemm_artifact_has_dense_weights_role():
+    shape = ConvShape(c=4, m=8, h=6, w=6, r=3, s=3, pad=1, sparsity=0.5)
+    entry, text = layer_artifact("tiny", shape, "gemm", batch=1)
+    roles = [i["role"] for i in entry["inputs"]]
+    assert roles == ["activations", "weights_dense"]
+    assert entry["ell_k"] == 0
+    assert "HloModule" in text
+
+
+def test_spmm_artifact_uses_canonical_colidx():
+    shape = ConvShape(c=4, m=8, h=6, w=6, r=3, s=3, pad=1, sparsity=0.5)
+    entry, _ = layer_artifact("tiny", shape, "spmm", batch=1)
+    roles = [i["role"] for i in entry["inputs"]]
+    assert roles == ["activations", "ell_values", "ell_colidx_canonical"]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltManifest:
+    @property
+    def manifest(self):
+        with open(os.path.join(ARTIFACT_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_full_artifact_set_present(self):
+        names = {a["name"] for a in self.manifest["artifacts"]}
+        for layer in ARTIFACT_LAYERS:
+            for method in METHODS:
+                assert f"{layer}_{method}" in names
+        for method in METHODS:
+            assert f"minicnn_{method}" in names
+
+    def test_hlo_files_exist_and_nonempty(self):
+        for a in self.manifest["artifacts"]:
+            path = os.path.join(ARTIFACT_DIR, a["file"])
+            assert os.path.getsize(path) > 1000, a["name"]
+            with open(path) as f:
+                assert f.read(9) == "HloModule"
+
+    def test_ell_k_matches_config(self):
+        for a in self.manifest["artifacts"]:
+            if a["kind"] == "layer" and a["method"] != "gemm":
+                shape = ARTIFACT_LAYERS[a["layer"]]
+                assert a["ell_k"] == shape.ell_k(), a["name"]
+
+    def test_minicnn_layers_match_config(self):
+        for a in self.manifest["artifacts"]:
+            if a["kind"] == "model":
+                assert len(a["layers"]) == len(MINICNN_LAYERS)
+                for got, want in zip(a["layers"], MINICNN_LAYERS):
+                    assert got["c"] == want.c and got["m"] == want.m
+
+    def test_input_shapes_are_positive(self):
+        for a in self.manifest["artifacts"]:
+            for i in a["inputs"]:
+                assert all(d > 0 for d in i["shape"]), (a["name"], i)

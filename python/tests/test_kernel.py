@@ -1,0 +1,211 @@
+"""Kernel vs ref allclose — the CORE correctness signal (L1).
+
+Hypothesis sweeps shapes/strides/pads/sparsities for every Pallas kernel
+against its pure-jnp oracle in ``compile.kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import (
+    ConvShape,
+    dense_to_ell,
+    prune_magnitude,
+    stretch_colidx,
+    synthetic_weights,
+)
+from compile.kernels import gemm, im2col, pad, ref, sconv, spmm
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def conv_shapes(draw, stride_choices=(1, 2)):
+    r = draw(st.sampled_from([1, 3, 5]))
+    s = r  # square filters, like every evaluated network
+    stride = draw(st.sampled_from(stride_choices))
+    pad_amt = draw(st.integers(0, (r - 1) // 2 + 1)) if r > 1 else 0
+    c = draw(st.integers(1, 6))
+    m = draw(st.integers(1, 8))
+    # input must be at least as large as the (unpadded) filter reach
+    h = draw(st.integers(max(r, 3), 10))
+    w = draw(st.integers(max(s, 3), 10))
+    sparsity = draw(st.sampled_from([0.0, 0.5, 0.8, 0.95]))
+    return ConvShape(c=c, m=m, h=h, w=w, r=r, s=s, stride=stride, pad=pad_amt, sparsity=sparsity)
+
+
+def _case(shape: ConvShape, seed: int, batch: int = 2):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((batch, shape.c, shape.h, shape.w)).astype(np.float32))
+    dw = synthetic_weights(shape, seed + 1)
+    return x, dw
+
+
+class TestPad:
+    @given(conv_shapes(), st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_matches_jnp_pad(self, shape, seed):
+        x, _ = _case(shape, seed)
+        got = pad.pad_input(x, shape.pad)
+        want = ref.pad_ref(x, shape.pad)
+        np.testing.assert_allclose(got, want)
+
+    def test_zero_pad_identity(self):
+        shape = ConvShape(c=2, m=2, h=4, w=4, r=3, s=3)
+        x, _ = _case(shape, 0)
+        assert pad.pad_input(x, 0) is x
+
+    def test_border_is_zero(self):
+        shape = ConvShape(c=1, m=1, h=3, w=3, r=3, s=3, pad=2)
+        x, _ = _case(shape, 1)
+        xp = pad.pad_input(x, 2)
+        assert float(jnp.abs(xp[:, :, :2, :]).max()) == 0.0
+        assert float(jnp.abs(xp[:, :, :, -2:]).max()) == 0.0
+
+
+class TestSconv:
+    @given(conv_shapes(), st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_matches_dense_conv(self, shape, seed):
+        x, dw = _case(shape, seed)
+        k = shape.ell_k()
+        vals, idx = dense_to_ell(dw, k)
+        sidx = stretch_colidx(idx, shape)
+        xp = pad.pad_input(x, shape.pad)
+        got = sconv.sconv(xp, jnp.asarray(vals), jnp.asarray(sidx), shape)
+        want = ref.sconv_ref(x, dw, shape)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_all_zero_weights(self):
+        shape = ConvShape(c=2, m=3, h=5, w=5, r=3, s=3, pad=1, sparsity=0.9)
+        x, _ = _case(shape, 3)
+        vals = jnp.zeros((shape.m, 8), jnp.float32)
+        idx = jnp.zeros((shape.m, 8), jnp.int32)
+        y = sconv.sconv(pad.pad_input(x, 1), vals, idx, shape)
+        assert float(jnp.abs(y).max()) == 0.0
+
+    def test_batch_independence(self):
+        shape = ConvShape(c=2, m=2, h=5, w=5, r=3, s=3, pad=1, sparsity=0.5)
+        x, dw = _case(shape, 4, batch=3)
+        vals, idx = dense_to_ell(dw, shape.ell_k())
+        sidx = stretch_colidx(idx, shape)
+        xp = pad.pad_input(x, 1)
+        y = sconv.sconv(xp, jnp.asarray(vals), jnp.asarray(sidx), shape)
+        y1 = sconv.sconv(xp[1:2], jnp.asarray(vals), jnp.asarray(sidx), shape)
+        np.testing.assert_allclose(y[1:2], y1, rtol=1e-5, atol=1e-6)
+
+    def test_padding_slots_are_inert(self):
+        # Doubling K (all extra slots zero) must not change the result.
+        shape = ConvShape(c=2, m=3, h=6, w=6, r=3, s=3, pad=1, sparsity=0.7)
+        x, dw = _case(shape, 5)
+        k = shape.ell_k()
+        v1, i1 = dense_to_ell(dw, k)
+        v2, i2 = dense_to_ell(dw, 2 * k)
+        xp = pad.pad_input(x, 1)
+        y1 = sconv.sconv(xp, jnp.asarray(v1), jnp.asarray(stretch_colidx(i1, shape)), shape)
+        y2 = sconv.sconv(xp, jnp.asarray(v2), jnp.asarray(stretch_colidx(i2, shape)), shape)
+        np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
+
+
+class TestIm2col:
+    @given(conv_shapes(), st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_matches_ref(self, shape, seed):
+        x, _ = _case(shape, seed)
+        xp = pad.pad_input(x, shape.pad)
+        got = im2col.im2col(xp, shape)
+        want = ref.im2col_ref(xp, shape.r, shape.s, shape.stride, shape.out_h, shape.out_w)
+        np.testing.assert_allclose(got, want)
+
+    def test_duplication_factor(self):
+        # Interior elements appear R*S times in the lowered matrix — the
+        # paper's bandwidth-waste argument (Fig 2).
+        shape = ConvShape(c=1, m=1, h=6, w=6, r=3, s=3, pad=0)
+        x, _ = _case(shape, 7, batch=1)
+        low = np.asarray(im2col.im2col(pad.pad_input(x, 0), shape))
+        centre = float(x[0, 0, 3, 3])
+        assert (np.isclose(low, centre)).sum() >= 9
+
+
+class TestGemm:
+    @given(
+        st.integers(1, 8),
+        st.integers(1, 32),
+        st.integers(1, 24),
+        st.integers(1, 3),
+        st.integers(0, 10_000),
+    )
+    @settings(**SETTINGS)
+    def test_matches_einsum(self, m, k, l, n, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((n, k, l)).astype(np.float32))
+        got = gemm.matmul(a, b)
+        want = ref.matmul_ref(a, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_identity(self):
+        a = jnp.eye(4, dtype=jnp.float32)
+        b = jnp.arange(2 * 4 * 3, dtype=jnp.float32).reshape(2, 4, 3)
+        np.testing.assert_allclose(gemm.matmul(a, b), b)
+
+
+class TestSpmm:
+    @given(
+        st.integers(1, 8),
+        st.integers(2, 30),
+        st.integers(1, 20),
+        st.integers(1, 3),
+        st.sampled_from([0.0, 0.5, 0.9]),
+        st.integers(0, 10_000),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, m, crs, l, n, sparsity, seed):
+        rng = np.random.default_rng(seed)
+        dense = rng.standard_normal((m, crs)).astype(np.float32)
+        if sparsity:
+            dense = prune_magnitude(dense, sparsity)
+        k = max(1, int(np.count_nonzero(dense, axis=1).max()))
+        vals, idx = dense_to_ell(dense, k)
+        b = jnp.asarray(rng.standard_normal((n, crs, l)).astype(np.float32))
+        got = spmm.ell_spmm(jnp.asarray(vals), jnp.asarray(idx), b)
+        want = ref.ell_spmm_ref(jnp.asarray(vals), jnp.asarray(idx), b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+        # and against the dense product
+        dense_want = ref.matmul_ref(jnp.asarray(dense), b)
+        np.testing.assert_allclose(got, dense_want, rtol=1e-4, atol=1e-4)
+
+
+class TestFormatHelpers:
+    @given(st.integers(1, 10), st.integers(1, 40), st.sampled_from([0.0, 0.3, 0.8]), st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_ell_roundtrip(self, rows, cols, sparsity, seed):
+        rng = np.random.default_rng(seed)
+        dense = rng.standard_normal((rows, cols)).astype(np.float32)
+        if sparsity:
+            dense = prune_magnitude(dense, sparsity)
+        k = max(1, int(np.count_nonzero(dense, axis=1).max()))
+        vals, idx = dense_to_ell(dense, k)
+        rebuilt = np.zeros_like(dense)
+        for i in range(rows):
+            for slot in range(k):
+                if vals[i, slot] != 0.0:
+                    rebuilt[i, idx[i, slot]] = vals[i, slot]
+        np.testing.assert_allclose(rebuilt, dense)
+
+    def test_stretch_matches_rust_formula(self):
+        # (c, r, s) -> c*Hp*Wp + r*Wp + s, same as rust stretch_weights.
+        shape = ConvShape(c=2, m=1, h=4, w=4, r=3, s=3, pad=1)
+        colidx = np.array([[15]], dtype=np.int32)  # c=1, r=2, s=0
+        got = stretch_colidx(colidx, shape)
+        assert got[0, 0] == 1 * 36 + 2 * 6 + 0
+
+    def test_prune_exact_count(self):
+        rng = np.random.default_rng(0)
+        w = rng.standard_normal(1000).astype(np.float32)
+        p = prune_magnitude(w, 0.85)
+        assert np.count_nonzero(p) == 150

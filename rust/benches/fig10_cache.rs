@@ -1,0 +1,40 @@
+//! Fig 10: read-only (texture) + L2 cache hit rates of csrmm vs sconv on
+//! the three models, from the memory-hierarchy simulator.
+//!
+//! Paper (P100, nvprof): sconv RO hit 71%-81%, csrmm RO hit 52%-57%;
+//! L2 shows the same trend.
+
+use escoin::bench_harness::fig10::{fig10_cache_rates, Fig10Opts};
+use escoin::bench_harness::Table;
+use escoin::config::all_networks;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let opts = Fig10Opts {
+        spatial_scale: env_usize("ESCOIN_BENCH_SCALE", 1),
+        max_layers: env_usize("ESCOIN_FIG10_MAX_LAYERS", 0),
+    };
+    eprintln!("fig10: {opts:?}");
+    let mut table = Table::new(
+        "Fig 10: simulated cache hit rates (paper: sconv RO 71-81%, csrmm RO 52-57%)",
+        &["model", "csrmm RO", "sconv RO", "csrmm L2", "sconv L2"],
+    );
+    for net in all_networks() {
+        let row = fig10_cache_rates(&net, opts);
+        table.row(vec![
+            row.model.clone(),
+            format!("{:.0}%", 100.0 * row.csrmm_ro),
+            format!("{:.0}%", 100.0 * row.sconv_ro),
+            format!("{:.0}%", 100.0 * row.csrmm_l2),
+            format!("{:.0}%", 100.0 * row.sconv_l2),
+        ]);
+        eprintln!("  {} done", row.model);
+    }
+    print!("{}", table.render());
+}

@@ -1,0 +1,54 @@
+//! Fig 11: overall inference speedup (whole-network iteration time),
+//! normalised to CUBLAS. Paper: Escoin 1.47x/1.18x/1.19x on P100 and
+//! 1.74x/1.34x/1.43x on 1080Ti for AlexNet/GoogLeNet/ResNet; geomean
+//! 1.38x over CUBLAS, 1.60x over CUSPARSE.
+
+use escoin::bench_harness::fig11::{fig11_overall, geomean_overall};
+use escoin::bench_harness::fig8::Fig8Opts;
+use escoin::bench_harness::{BenchOpts, Table};
+use escoin::config::all_networks;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let opts = Fig8Opts {
+        batch: env_usize("ESCOIN_BENCH_BATCH", 2),
+        spatial_scale: env_usize("ESCOIN_BENCH_SCALE", 1),
+        threads: env_usize(
+            "ESCOIN_BENCH_THREADS",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        ),
+        bench: BenchOpts::from_env(),
+    };
+    eprintln!("fig11: {opts:?}");
+    let mut table = Table::new(
+        "Fig 11: overall inference speedup over CUBLAS (whole iteration)",
+        &["model", "CUBLAS", "CUSPARSE", "Escoin", "CUSPARSE x", "Escoin x", "sparse-conv share"],
+    );
+    let mut rows = Vec::new();
+    for net in all_networks() {
+        let row = fig11_overall(&net, opts);
+        table.row(vec![
+            row.model.clone(),
+            format!("{:.1?}", row.cublas),
+            format!("{:.1?}", row.cusparse),
+            format!("{:.1?}", row.escoin),
+            format!("{:.2}x", row.speedup_cusparse()),
+            format!("{:.2}x", row.speedup_escoin()),
+            format!("{:.0}%", 100.0 * row.sparse_conv_fraction),
+        ]);
+        eprintln!("  {} done", row.model);
+        rows.push(row);
+    }
+    let (cb, cs) = geomean_overall(&rows);
+    print!("{}", table.render());
+    println!(
+        "geomean Escoin overall speedup: {cb:.2}x over CUBLAS (paper 1.38x), \
+         {cs:.2}x over CUSPARSE (paper 1.60x)"
+    );
+}

@@ -1,0 +1,53 @@
+//! Fig 8: sparse CONV layer speedup, three models x three approaches,
+//! normalised to CUBLAS. Regenerates the paper's bar chart as a table.
+//!
+//! Knobs: ESCOIN_BENCH_BATCH (default 2), ESCOIN_BENCH_SCALE (spatial
+//! divisor, default 1 = paper-native shapes), ESCOIN_BENCH_ITERS.
+
+use escoin::bench_harness::fig8::{fig8_sparse_conv, geomean_speedups, Fig8Opts};
+use escoin::bench_harness::{BenchOpts, Table};
+use escoin::config::all_networks;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let opts = Fig8Opts {
+        batch: env_usize("ESCOIN_BENCH_BATCH", 2),
+        spatial_scale: env_usize("ESCOIN_BENCH_SCALE", 1),
+        threads: env_usize(
+            "ESCOIN_BENCH_THREADS",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        ),
+        bench: BenchOpts::from_env(),
+    };
+    eprintln!("fig8: {opts:?}");
+    let mut table = Table::new(
+        "Fig 8: sparse CONV speedup over CUBLAS (paper: Escoin 1.50x-5.57x, avg 2.63x)",
+        &["model", "CUBLAS", "CUSPARSE", "Escoin", "CUSPARSE x", "Escoin x"],
+    );
+    let mut rows = Vec::new();
+    for net in all_networks() {
+        let row = fig8_sparse_conv(&net, opts);
+        table.row(vec![
+            row.model.clone(),
+            format!("{:.1?}", row.cublas),
+            format!("{:.1?}", row.cusparse),
+            format!("{:.1?}", row.escoin),
+            format!("{:.2}x", row.speedup_cusparse()),
+            format!("{:.2}x", row.speedup_escoin()),
+        ]);
+        eprintln!("  {} done", row.model);
+        rows.push(row);
+    }
+    let (over_cublas, over_cusparse) = geomean_speedups(&rows);
+    print!("{}", table.render());
+    println!(
+        "geomean Escoin speedup: {over_cublas:.2}x over CUBLAS (paper 2.63x), \
+         {over_cusparse:.2}x over CUSPARSE (paper 3.07x)"
+    );
+}

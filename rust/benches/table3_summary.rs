@@ -1,0 +1,9 @@
+//! Tables 2 & 3: evaluated platforms and network summaries.
+
+use escoin::bench_harness::{table2_platforms, table3_rows};
+
+fn main() {
+    print!("{}", table2_platforms().render());
+    println!();
+    print!("{}", table3_rows().render());
+}

@@ -1,0 +1,109 @@
+//! Fig 10: read-only (texture) and L2 cache hit rates of `csrmm` vs
+//! `sconv`, per model — produced by the memory-hierarchy simulator
+//! replaying each kernel's access stream over the models' sparse CONV
+//! layers (DESIGN.md §7 substitution for nvprof on the P100).
+
+use crate::config::{ConvShape, Network};
+use crate::conv::ConvWeights;
+use crate::simulator::{trace_csrmm, trace_sconv, MemoryHierarchy};
+use crate::util::Rng;
+
+/// One model's Fig 10 data point.
+#[derive(Clone, Debug)]
+pub struct Fig10Row {
+    pub model: String,
+    pub csrmm_ro: f64,
+    pub csrmm_l2: f64,
+    pub sconv_ro: f64,
+    pub sconv_l2: f64,
+}
+
+/// Simulation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig10Opts {
+    /// Divide spatial dims by this factor to bound trace length.
+    pub spatial_scale: usize,
+    /// Cap on sparse layers traced per model (0 = all).
+    pub max_layers: usize,
+}
+
+impl Default for Fig10Opts {
+    fn default() -> Self {
+        Self {
+            spatial_scale: 1,
+            max_layers: 0,
+        }
+    }
+}
+
+/// Aggregate hit rates over the sparse CONV layers of `net`: each layer's
+/// kernel trace runs through a fresh hierarchy (one kernel launch per
+/// layer, like the real execution); hits/accesses accumulate per model.
+pub fn fig10_cache_rates(net: &Network, opts: Fig10Opts) -> Fig10Row {
+    let mut acc = [[0u64; 4]; 2]; // [kernel][ro_hits, ro_acc, l2_hits, l2_acc]
+    let layers = net.sparse_conv_layers();
+    let take = if opts.max_layers == 0 {
+        layers.len()
+    } else {
+        opts.max_layers.min(layers.len())
+    };
+    for (idx, (_name, shape)) in layers.into_iter().take(take).enumerate() {
+        let shape: ConvShape = if opts.spatial_scale > 1 {
+            shape.scaled_spatial(opts.spatial_scale)
+        } else {
+            shape.clone()
+        };
+        let mut rng = Rng::new(0xF10 + idx as u64);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let ef = shape.out_h() * shape.out_w();
+
+        // One group is representative (groups only partition channels).
+        let mut mem = MemoryHierarchy::p100();
+        trace_csrmm(&w.csr_banks()[0], ef, &mut mem);
+        let r = mem.report();
+        acc[0][0] += r.ro.hits;
+        acc[0][1] += r.ro.accesses();
+        acc[0][2] += r.l2.hits;
+        acc[0][3] += r.l2.accesses();
+
+        let mut mem = MemoryHierarchy::p100();
+        trace_sconv(&shape, &w.stretched_banks()[0], &mut mem);
+        let r = mem.report();
+        acc[1][0] += r.ro.hits;
+        acc[1][1] += r.ro.accesses();
+        acc[1][2] += r.l2.hits;
+        acc[1][3] += r.l2.accesses();
+    }
+    let rate = |h: u64, a: u64| if a == 0 { 0.0 } else { h as f64 / a as f64 };
+    Fig10Row {
+        model: net.name.clone(),
+        csrmm_ro: rate(acc[0][0], acc[0][1]),
+        csrmm_l2: rate(acc[0][2], acc[0][3]),
+        sconv_ro: rate(acc[1][0], acc[1][1]),
+        sconv_l2: rate(acc[1][2], acc[1][3]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::alexnet;
+
+    #[test]
+    fn sconv_wins_read_only_cache_on_alexnet() {
+        let row = fig10_cache_rates(
+            &alexnet(),
+            Fig10Opts {
+                spatial_scale: 2,
+                max_layers: 2,
+            },
+        );
+        assert!(
+            row.sconv_ro > row.csrmm_ro,
+            "RO: sconv {:.3} vs csrmm {:.3}",
+            row.sconv_ro,
+            row.csrmm_ro
+        );
+        assert!(row.sconv_ro > 0.5 && row.sconv_ro < 1.0);
+    }
+}

@@ -1,0 +1,93 @@
+//! Fig 11: overall inference speedup — the whole-network iteration time
+//! (all layers, like the paper's Caffe iteration) under the three
+//! approaches, normalised to CUBLAS.
+
+use super::fig8::Fig8Opts;
+use crate::config::Network;
+use crate::coordinator::{Method, NetworkSchedule};
+use crate::util::geomean;
+use std::time::Duration;
+
+/// One model's Fig 11 data point.
+#[derive(Clone, Debug)]
+pub struct Fig11Row {
+    pub model: String,
+    pub cublas: Duration,
+    pub cusparse: Duration,
+    pub escoin: Duration,
+    /// Fraction of CUBLAS time spent in sparse CONV layers — the paper's
+    /// §4.4 explanation of why whole-network speedups dilute.
+    pub sparse_conv_fraction: f64,
+}
+
+impl Fig11Row {
+    pub fn speedup_cusparse(&self) -> f64 {
+        self.cublas.as_secs_f64() / self.cusparse.as_secs_f64()
+    }
+
+    pub fn speedup_escoin(&self) -> f64 {
+        self.cublas.as_secs_f64() / self.escoin.as_secs_f64()
+    }
+}
+
+/// Run the whole network under each approach.
+pub fn fig11_overall(net: &Network, opts: Fig8Opts) -> Fig11Row {
+    let mut scaled = net.clone();
+    if opts.spatial_scale > 1 {
+        for layer in &mut scaled.layers {
+            if let crate::config::LayerKind::Conv(c) = &mut layer.kind {
+                *c = c.scaled_spatial(opts.spatial_scale);
+            }
+        }
+    }
+    let sched = NetworkSchedule::build(scaled.clone(), 0xF11, opts.threads);
+
+    let run = |method: Method| {
+        let report = sched.run(opts.batch, |_, _| method);
+        (report.total(), report.sparse_conv_total(&scaled))
+    };
+    let (cublas, sparse_in_cublas) = run(Method::LoweredGemm);
+    let (cusparse, _) = run(Method::LoweredSpmm);
+    let (escoin, _) = run(Method::DirectSparse);
+    Fig11Row {
+        model: net.name.clone(),
+        cublas,
+        cusparse,
+        escoin,
+        sparse_conv_fraction: sparse_in_cublas.as_secs_f64() / cublas.as_secs_f64(),
+    }
+}
+
+/// Geomean overall speedups (paper: 1.38x over CUBLAS, 1.60x over
+/// CUSPARSE).
+pub fn geomean_overall(rows: &[Fig11Row]) -> (f64, f64) {
+    let cb: Vec<f64> = rows.iter().map(|r| r.speedup_escoin()).collect();
+    let cs: Vec<f64> = rows
+        .iter()
+        .map(|r| r.cusparse.as_secs_f64() / r.escoin.as_secs_f64())
+        .collect();
+    (geomean(&cb), geomean(&cs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::timing::BenchOpts;
+    use crate::config::alexnet;
+
+    #[test]
+    fn whole_network_speedup_is_diluted_but_positive() {
+        let opts = Fig8Opts {
+            batch: 1,
+            spatial_scale: 2,
+            threads: 2,
+            bench: BenchOpts { warmup: 0, iters: 1 },
+        };
+        let row = fig11_overall(&alexnet(), opts);
+        // Escoin still wins overall...
+        assert!(row.speedup_escoin() > 1.0, "{row:?}");
+        // ...and the sparse-conv fraction is < 1 (dilution exists).
+        assert!(row.sparse_conv_fraction < 1.0);
+        assert!(row.sparse_conv_fraction > 0.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Fig 8: execution-time speedup of the sparse CONV layers in the three
+//! models — CUBLAS lowering vs CUSPARSE lowering vs Escoin, normalised to
+//! CUBLAS.
+//!
+//! Like the paper, only the *sparse* CONV layers are timed (dense CONV
+//! and non-CONV layers are excluded here; Fig 11 covers whole networks).
+//! The three contenders run as native kernels at the networks' real layer
+//! shapes; batch and spatial scale are configurable because the paper's
+//! batch-128 ImageNet workload is hours of CPU time per data point.
+
+use super::timing::{bench_median, BenchOpts};
+use crate::config::{ConvShape, Network};
+use crate::conv::{lowered_gemm_parallel, lowered_spmm_parallel, sconv_parallel, ConvWeights};
+use crate::tensor::{Dims4, Tensor4};
+use crate::util::{geomean, Rng};
+use std::time::Duration;
+
+/// One model's Fig 8 data point.
+#[derive(Clone, Debug)]
+pub struct Fig8Row {
+    pub model: String,
+    pub cublas: Duration,
+    pub cusparse: Duration,
+    pub escoin: Duration,
+}
+
+impl Fig8Row {
+    /// Speedups normalised to CUBLAS (the paper's presentation).
+    pub fn speedup_cusparse(&self) -> f64 {
+        self.cublas.as_secs_f64() / self.cusparse.as_secs_f64()
+    }
+
+    pub fn speedup_escoin(&self) -> f64 {
+        self.cublas.as_secs_f64() / self.escoin.as_secs_f64()
+    }
+}
+
+/// Workload knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig8Opts {
+    pub batch: usize,
+    /// Divide spatial dims by this factor (1 = paper-native).
+    pub spatial_scale: usize,
+    pub threads: usize,
+    pub bench: BenchOpts,
+}
+
+impl Default for Fig8Opts {
+    fn default() -> Self {
+        Self {
+            batch: 4,
+            spatial_scale: 1,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            bench: BenchOpts::default(),
+        }
+    }
+}
+
+/// Time all sparse CONV layers of `net` under the three methods.
+pub fn fig8_sparse_conv(net: &Network, opts: Fig8Opts) -> Fig8Row {
+    let mut rng = Rng::new(0xF18);
+    let mut totals = [Duration::ZERO; 3];
+    for (idx, (_name, shape)) in net.sparse_conv_layers().into_iter().enumerate() {
+        let shape: ConvShape = if opts.spatial_scale > 1 {
+            shape.scaled_spatial(opts.spatial_scale)
+        } else {
+            shape.clone()
+        };
+        let x = Tensor4::random_activations(
+            Dims4::new(opts.batch, shape.c, shape.h, shape.w),
+            &mut rng,
+        );
+        let mut wrng = Rng::new(0xF18_000 + idx as u64);
+        let w = ConvWeights::synthetic(&shape, &mut wrng);
+        let banks = w.csr_banks();
+        let stretched = w.stretched_banks();
+
+        totals[0] += bench_median(opts.bench, || {
+            lowered_gemm_parallel(&shape, &x, &w, opts.threads)
+        });
+        totals[1] += bench_median(opts.bench, || {
+            lowered_spmm_parallel(&shape, &x, &banks, opts.threads)
+        });
+        totals[2] += bench_median(opts.bench, || {
+            sconv_parallel(&shape, &x, &stretched, opts.threads)
+        });
+    }
+    Fig8Row {
+        model: net.name.clone(),
+        cublas: totals[0],
+        cusparse: totals[1],
+        escoin: totals[2],
+    }
+}
+
+/// Geomean Escoin speedup over both baselines across models — the
+/// paper's headline "2.63x over CUBLAS, 3.07x over CUSPARSE".
+pub fn geomean_speedups(rows: &[Fig8Row]) -> (f64, f64) {
+    let over_cublas: Vec<f64> = rows.iter().map(|r| r.speedup_escoin()).collect();
+    let over_cusparse: Vec<f64> = rows
+        .iter()
+        .map(|r| r.cusparse.as_secs_f64() / r.escoin.as_secs_f64())
+        .collect();
+    (geomean(&over_cublas), geomean(&over_cusparse))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::alexnet;
+
+    #[test]
+    fn escoin_beats_both_baselines_on_alexnet_shapes() {
+        // Scaled-down but structurally faithful: Escoin must win on the
+        // pruned AlexNet layers (the paper's core result).
+        // Full spatial scale: the small-spatial regime erodes sconv's
+        // edge over csrmm (documented in EXPERIMENTS.md); the paper's
+        // claim is at native layer shapes.
+        let opts = Fig8Opts {
+            batch: 1,
+            spatial_scale: 1,
+            threads: 4,
+            bench: BenchOpts { warmup: 0, iters: 1 },
+        };
+        let row = fig8_sparse_conv(&alexnet(), opts);
+        assert!(
+            row.speedup_escoin() > 1.0,
+            "escoin {:?} vs cublas {:?}",
+            row.escoin,
+            row.cublas
+        );
+        assert!(row.escoin < row.cusparse, "sconv must beat csrmm+im2col");
+    }
+
+    #[test]
+    fn geomean_matches_manual() {
+        let rows = vec![
+            Fig8Row {
+                model: "a".into(),
+                cublas: Duration::from_millis(40),
+                cusparse: Duration::from_millis(20),
+                escoin: Duration::from_millis(10),
+            },
+            Fig8Row {
+                model: "b".into(),
+                cublas: Duration::from_millis(10),
+                cusparse: Duration::from_millis(40),
+                escoin: Duration::from_millis(10),
+            },
+        ];
+        let (cb, cs) = geomean_speedups(&rows);
+        assert!((cb - 2.0).abs() < 1e-9); // geomean(4, 1)
+        assert!((cs - (2.0f64 * 4.0).sqrt()).abs() < 1e-9); // geomean(2, 4)
+    }
+}

@@ -1,0 +1,33 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (§4) on this testbed.
+//!
+//! | Paper artifact | Module | Bench binary |
+//! |---|---|---|
+//! | Table 2 (platforms)            | [`platform`] | `table3_summary` |
+//! | Table 3 (networks)             | [`table3`]   | `table3_summary` |
+//! | Fig 8 (sparse CONV speedup)    | [`fig8`]     | `fig8_sparse_conv` |
+//! | Fig 9 (time breakdown)         | [`fig9`]     | `fig9_breakdown` |
+//! | Fig 10 (cache hit rates)       | [`fig10`]    | `fig10_cache` |
+//! | Fig 11 (overall speedup)       | [`fig11`]    | `fig11_overall` |
+//!
+//! Absolute numbers differ from the paper's P100/1080Ti (our substrate is
+//! the native CPU kernels + cache simulator, DESIGN.md §7); what must
+//! reproduce is the *shape*: who wins, by roughly what factor, and why.
+
+pub mod fig10;
+pub mod fig11;
+pub mod fig8;
+pub mod fig9;
+pub mod platform;
+pub mod report;
+pub mod table3;
+pub mod timing;
+
+pub use fig10::{fig10_cache_rates, Fig10Row};
+pub use fig11::{fig11_overall, Fig11Row};
+pub use fig8::{fig8_sparse_conv, Fig8Row};
+pub use fig9::{fig9_breakdown, Fig9Row};
+pub use platform::{table2_platforms, Testbed};
+pub use report::{markdown_table, Table};
+pub use table3::table3_rows;
+pub use timing::{bench_median, BenchOpts};

@@ -1,0 +1,64 @@
+//! Table 3: summary of the evaluated networks, computed from the config
+//! tables (not hard-coded — the test suite pins the numbers against the
+//! paper's row values).
+
+use super::report::Table;
+use crate::config::all_networks;
+
+fn human(n: usize) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.2}G", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.1}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.1}K", n as f64 / 1e3)
+    } else {
+        n.to_string()
+    }
+}
+
+/// Build Table 3 from the network tables.
+pub fn table3_rows() -> Table {
+    let mut t = Table::new(
+        "Table 3: Summary of networks",
+        &["model", "CONV layers", "sparse CONV layers", "weights", "MACs"],
+    );
+    for net in all_networks() {
+        let s = net.summary();
+        t.row(vec![
+            s.name,
+            s.conv_layers.to_string(),
+            s.sparse_conv_layers.to_string(),
+            human(s.weights),
+            human(s.macs),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_match_paper_counts() {
+        let t = table3_rows();
+        assert_eq!(t.rows.len(), 3);
+        // AlexNet row: 5 conv, 4 sparse
+        assert_eq!(t.rows[0][1], "5");
+        assert_eq!(t.rows[0][2], "4");
+        // GoogLeNet: 57 / 19
+        assert_eq!(t.rows[1][1], "57");
+        assert_eq!(t.rows[1][2], "19");
+        // ResNet: 53 / 16
+        assert_eq!(t.rows[2][1], "53");
+        assert_eq!(t.rows[2][2], "16");
+    }
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human(61_000_000), "61.0M");
+        assert_eq!(human(3_900_000_000), "3.90G");
+        assert_eq!(human(42), "42");
+    }
+}

@@ -1,0 +1,72 @@
+//! Micro-benchmark timing: warmup + repeated runs, median-of-N.
+//!
+//! The offline toolchain has no criterion; this is the in-tree
+//! replacement the `cargo bench` binaries use. Median over a handful of
+//! runs is robust to scheduler noise at the multi-millisecond scale our
+//! kernels run at.
+
+use std::time::{Duration, Instant};
+
+/// Repetition policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { warmup: 1, iters: 3 }
+    }
+}
+
+impl BenchOpts {
+    /// Read overrides from `ESCOIN_BENCH_WARMUP` / `ESCOIN_BENCH_ITERS`.
+    pub fn from_env() -> Self {
+        let get = |k: &str, d: usize| {
+            std::env::var(k)
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(d)
+        };
+        Self {
+            warmup: get("ESCOIN_BENCH_WARMUP", 1),
+            iters: get("ESCOIN_BENCH_ITERS", 3),
+        }
+    }
+}
+
+/// Median wall time of `f` over `opts.iters` runs (after warmup).
+pub fn bench_median<T>(opts: BenchOpts, mut f: impl FnMut() -> T) -> Duration {
+    for _ in 0..opts.warmup {
+        std::hint::black_box(f());
+    }
+    let mut times: Vec<Duration> = (0..opts.iters.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed()
+        })
+        .collect();
+    times.sort();
+    times[times.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_positive_and_ordered() {
+        let d = bench_median(BenchOpts { warmup: 0, iters: 3 }, || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert!(d >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn from_env_defaults() {
+        let o = BenchOpts::from_env();
+        assert!(o.iters >= 1);
+    }
+}

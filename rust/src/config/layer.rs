@@ -1,0 +1,306 @@
+//! Per-layer geometry and cost math (paper Table 1 shape parameters).
+
+
+
+/// Geometry of one CONV layer, using the paper's Table 1 nomenclature:
+/// `C` input channels of `H x W`, `M` filters of `C/groups x R x S`,
+/// producing `M` output channels of `E x F`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvShape {
+    /// Input channels (C).
+    pub c: usize,
+    /// Output channels / number of filters (M).
+    pub m: usize,
+    /// Input spatial height (H).
+    pub h: usize,
+    /// Input spatial width (W).
+    pub w: usize,
+    /// Filter height (R).
+    pub r: usize,
+    /// Filter width (S).
+    pub s: usize,
+    /// Spatial stride.
+    pub stride: usize,
+    /// Zero padding on every spatial side.
+    pub pad: usize,
+    /// Filter groups (AlexNet's two-GPU legacy; 1 elsewhere).
+    pub groups: usize,
+    /// Weight sparsity in `[0, 1)` after pruning; `0.0` means the layer is
+    /// kept dense (paper Table 3 distinguishes sparse vs dense CONV layers).
+    pub sparsity: f32,
+}
+
+impl ConvShape {
+    /// Dense (unpruned) convolution shape with stride/pad.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        c: usize,
+        m: usize,
+        h: usize,
+        w: usize,
+        r: usize,
+        s: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        Self {
+            c,
+            m,
+            h,
+            w,
+            r,
+            s,
+            stride,
+            pad,
+            groups: 1,
+            sparsity: 0.0,
+        }
+    }
+
+    pub fn with_groups(mut self, groups: usize) -> Self {
+        assert!(groups > 0 && self.c % groups == 0 && self.m % groups == 0);
+        self.groups = groups;
+        self
+    }
+
+    pub fn with_sparsity(mut self, sparsity: f32) -> Self {
+        assert!((0.0..1.0).contains(&sparsity));
+        self.sparsity = sparsity;
+        self
+    }
+
+    /// Output height `E = (H + 2p - R)/stride + 1`.
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.r) / self.stride + 1
+    }
+
+    /// Output width `F = (W + 2p - S)/stride + 1`.
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.s) / self.stride + 1
+    }
+
+    /// Padded input height `Hp = H + 2p`.
+    pub fn padded_h(&self) -> usize {
+        self.h + 2 * self.pad
+    }
+
+    /// Padded input width `Wp = W + 2p`.
+    pub fn padded_w(&self) -> usize {
+        self.w + 2 * self.pad
+    }
+
+    /// Input channels seen by one filter (`C / groups`).
+    pub fn c_per_group(&self) -> usize {
+        self.c / self.groups
+    }
+
+    /// Filters per group (`M / groups`).
+    pub fn m_per_group(&self) -> usize {
+        self.m / self.groups
+    }
+
+    /// Dense weight count `M * (C/g) * R * S`.
+    pub fn weights(&self) -> usize {
+        self.m * self.c_per_group() * self.r * self.s
+    }
+
+    /// Nonzeros after pruning at `self.sparsity`.
+    pub fn nnz(&self) -> usize {
+        let dense = self.weights();
+        ((dense as f64) * (1.0 - self.sparsity as f64)).round() as usize
+    }
+
+    /// Dense multiply-accumulate count for a batch of `n` images.
+    pub fn macs(&self, n: usize) -> usize {
+        n * self.m * self.c_per_group() * self.r * self.s * self.out_h() * self.out_w()
+    }
+
+    /// MACs actually performed by a sparse method (nnz-proportional).
+    pub fn sparse_macs(&self, n: usize) -> usize {
+        n * self.nnz() * self.out_h() * self.out_w()
+    }
+
+    /// Whether the paper counts this as a *sparse* CONV layer.
+    pub fn is_sparse(&self) -> bool {
+        self.sparsity > 0.0
+    }
+
+    /// Dimensions of the im2col-lowered input matrix: `(C/g)*R*S x E*F`
+    /// per image per group (paper Fig 2/3).
+    pub fn lowered_dims(&self) -> (usize, usize) {
+        (self.c_per_group() * self.r * self.s, self.out_h() * self.out_w())
+    }
+
+    /// Scale the spatial extent by `1/k` (used to shrink interpret-mode
+    /// Pallas workloads; documented in DESIGN.md §7). Filter/stride/pad are
+    /// preserved; H and W are divided and floored to at least R/S.
+    pub fn scaled_spatial(&self, k: usize) -> Self {
+        let mut out = self.clone();
+        out.h = (self.h / k).max(self.r);
+        out.w = (self.w / k).max(self.s);
+        out
+    }
+}
+
+impl std::fmt::Display for ConvShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "C{}->M{} {}x{} k{}x{} s{} p{} g{} sp{:.2}",
+            self.c, self.m, self.h, self.w, self.r, self.s, self.stride, self.pad, self.groups,
+            self.sparsity
+        )
+    }
+}
+
+/// Fully-connected layer shape (counted for Table 3 weights/MACs and timed
+/// as a GEMM in the fig. 11 whole-network runs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FcShape {
+    pub in_features: usize,
+    pub out_features: usize,
+}
+
+impl FcShape {
+    pub fn new(in_features: usize, out_features: usize) -> Self {
+        Self {
+            in_features,
+            out_features,
+        }
+    }
+
+    pub fn weights(&self) -> usize {
+        self.in_features * self.out_features
+    }
+
+    pub fn macs(&self, n: usize) -> usize {
+        n * self.weights()
+    }
+}
+
+/// Pooling flavour (only affects the modelled cost of non-CONV layers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// One network layer, as enumerated by the network tables.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    Conv(ConvShape),
+    Fc(FcShape),
+    /// Pooling over `c` channels of `h x w` with a `k x k` window, stride
+    /// `stride`, padding `pad`.
+    Pool {
+        kind: PoolKind,
+        c: usize,
+        h: usize,
+        w: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Elementwise ReLU over `elems` activations.
+    Relu { elems: usize },
+    /// Local response normalisation over `elems` activations (AlexNet).
+    Lrn { elems: usize },
+}
+
+impl LayerKind {
+    /// Dense MAC count (element ops for Pool/ReLU/LRN are counted as
+    /// 1, k*k, and 5 ops per element respectively for the fig. 11 cost
+    /// model; the paper's MAC totals only count Conv + FC).
+    pub fn macs(&self, n: usize) -> usize {
+        match self {
+            LayerKind::Conv(c) => c.macs(n),
+            LayerKind::Fc(f) => f.macs(n),
+            LayerKind::Pool { .. } | LayerKind::Relu { .. } | LayerKind::Lrn { .. } => 0,
+        }
+    }
+
+    pub fn weights(&self) -> usize {
+        match self {
+            LayerKind::Conv(c) => c.weights(),
+            LayerKind::Fc(f) => f.weights(),
+            _ => 0,
+        }
+    }
+
+    pub fn as_conv(&self) -> Option<&ConvShape> {
+        match self {
+            LayerKind::Conv(c) => Some(c),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_conv1_geometry() {
+        // 227x227x3, 96 11x11 filters, stride 4, no pad -> 55x55.
+        let c = ConvShape::new(3, 96, 227, 227, 11, 11, 4, 0);
+        assert_eq!(c.out_h(), 55);
+        assert_eq!(c.out_w(), 55);
+        assert_eq!(c.weights(), 96 * 3 * 121);
+    }
+
+    #[test]
+    fn padded_same_conv_geometry() {
+        // 3x3 pad-1 stride-1 preserves spatial dims.
+        let c = ConvShape::new(256, 384, 13, 13, 3, 3, 1, 1);
+        assert_eq!(c.out_h(), 13);
+        assert_eq!(c.out_w(), 13);
+        assert_eq!(c.padded_h(), 15);
+    }
+
+    #[test]
+    fn strided_conv_geometry() {
+        // ResNet stem: 7x7 stride 2 pad 3 on 224 -> 112.
+        let c = ConvShape::new(3, 64, 224, 224, 7, 7, 2, 3);
+        assert_eq!(c.out_h(), 112);
+    }
+
+    #[test]
+    fn groups_divide_weights_and_macs() {
+        let dense = ConvShape::new(96, 256, 27, 27, 5, 5, 1, 2);
+        let grouped = dense.clone().with_groups(2);
+        assert_eq!(grouped.weights(), dense.weights() / 2);
+        assert_eq!(grouped.macs(1), dense.macs(1) / 2);
+    }
+
+    #[test]
+    fn nnz_tracks_sparsity() {
+        let c = ConvShape::new(16, 16, 8, 8, 3, 3, 1, 1).with_sparsity(0.75);
+        assert_eq!(c.weights(), 16 * 16 * 9);
+        assert_eq!(c.nnz(), 16 * 16 * 9 / 4);
+        assert!(c.is_sparse());
+        assert_eq!(c.sparse_macs(1) * 4, c.macs(1));
+    }
+
+    #[test]
+    fn lowered_dims_match_paper_fig3() {
+        let c = ConvShape::new(96, 256, 27, 27, 5, 5, 1, 2);
+        assert_eq!(c.lowered_dims(), (96 * 25, 27 * 27));
+    }
+
+    #[test]
+    fn scaled_spatial_floors_at_filter() {
+        let c = ConvShape::new(3, 8, 11, 11, 5, 5, 1, 0);
+        let s = c.scaled_spatial(4);
+        assert_eq!(s.h, 5);
+        assert_eq!(s.w, 5);
+        let s2 = c.scaled_spatial(2);
+        assert_eq!(s2.h, 5);
+    }
+
+    #[test]
+    fn fc_costs() {
+        let f = FcShape::new(4096, 1000);
+        assert_eq!(f.weights(), 4_096_000);
+        assert_eq!(f.macs(2), 8_192_000);
+    }
+}

@@ -1,0 +1,15 @@
+//! Network and layer configuration.
+//!
+//! Encodes the exact CONV-layer geometry of the three networks the paper
+//! evaluates (Table 3): AlexNet, GoogLeNet (Inception v1), and ResNet-50,
+//! together with the per-layer weight sparsities used for the pruned
+//! models (DESIGN.md §7 — representative of the SkimCaffe checkpoints the
+//! paper downloaded).
+
+mod layer;
+mod network;
+mod networks;
+
+pub use layer::{ConvShape, FcShape, LayerKind, PoolKind};
+pub use network::{Layer, Network, NetworkSummary};
+pub use networks::{alexnet, all_networks, googlenet, network_by_name, resnet50};

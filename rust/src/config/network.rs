@@ -1,0 +1,87 @@
+//! Whole-network description and Table 3 summary math.
+
+use super::layer::LayerKind;
+
+
+/// One named layer of a network.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+impl Layer {
+    pub fn new(name: impl Into<String>, kind: LayerKind) -> Self {
+        Self {
+            name: name.into(),
+            kind,
+        }
+    }
+}
+
+/// A full network: ordered layers, as enumerated in `networks.rs`.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+/// The row this network contributes to the paper's Table 3.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkSummary {
+    pub name: String,
+    pub conv_layers: usize,
+    pub sparse_conv_layers: usize,
+    /// Total weights (Conv + FC), matching the paper's "Weights" column.
+    pub weights: usize,
+    /// Dense MACs for batch = 1 (paper's "MACs" column).
+    pub macs: usize,
+}
+
+impl Network {
+    /// All CONV layers in execution order.
+    pub fn conv_layers(&self) -> Vec<(&str, &super::ConvShape)> {
+        self.layers
+            .iter()
+            .filter_map(|l| l.kind.as_conv().map(|c| (l.name.as_str(), c)))
+            .collect()
+    }
+
+    /// CONV layers the paper counts as sparse (pruned).
+    pub fn sparse_conv_layers(&self) -> Vec<(&str, &super::ConvShape)> {
+        self.conv_layers()
+            .into_iter()
+            .filter(|(_, c)| c.is_sparse())
+            .collect()
+    }
+
+    /// Table 3 row for this network.
+    pub fn summary(&self) -> NetworkSummary {
+        NetworkSummary {
+            name: self.name.clone(),
+            conv_layers: self.conv_layers().len(),
+            sparse_conv_layers: self.sparse_conv_layers().len(),
+            weights: self.layers.iter().map(|l| l.kind.weights()).sum(),
+            macs: self.layers.iter().map(|l| l.kind.macs(1)).sum(),
+        }
+    }
+
+    /// Fraction of batch-1 MACs spent in CONV layers — the paper's §4.4
+    /// explanation of why speedups dilute for ResNet/GoogLeNet.
+    pub fn conv_mac_fraction(&self) -> f64 {
+        let conv: usize = self
+            .conv_layers()
+            .iter()
+            .map(|(_, c)| c.macs(1))
+            .sum();
+        let total: usize = self.layers.iter().map(|l| l.kind.macs(1)).sum();
+        conv as f64 / total.max(1) as f64
+    }
+
+    pub fn find_conv(&self, name: &str) -> Option<&super::ConvShape> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .and_then(|l| l.kind.as_conv())
+    }
+}

@@ -1,0 +1,141 @@
+//! Direct dense convolution — the paper's Algorithm 1, extended with
+//! stride, padding, and groups. This is the correctness oracle: slow,
+//! obvious, and exercised against every other kernel.
+
+use super::ConvWeights;
+use crate::config::ConvShape;
+use crate::tensor::{Dims4, Tensor4};
+
+/// Compute a full CONV layer with the 7-loop reference algorithm.
+///
+/// `input` is `N x C x H x W` (unpadded); the result is `N x M x E x F`.
+pub fn direct_dense(shape: &ConvShape, input: &Tensor4, weights: &ConvWeights) -> Tensor4 {
+    let d = input.dims();
+    assert_eq!(d.c, shape.c, "channel mismatch");
+    assert_eq!(d.h, shape.h, "height mismatch");
+    assert_eq!(d.w, shape.w, "width mismatch");
+    assert_eq!(weights.shape, *shape);
+
+    let padded = input.pad_spatial(shape.pad);
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
+    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
+
+    for n in 0..d.n {
+        for m in 0..shape.m {
+            let g = m / mg;
+            for c in 0..cg {
+                let cin = g * cg + c;
+                for h in 0..e {
+                    for w in 0..f {
+                        let mut acc = out.at(n, m, h, w);
+                        for r in 0..shape.r {
+                            for s in 0..shape.s {
+                                acc += padded.at(n, cin, h * shape.stride + r, w * shape.stride + s)
+                                    * weights.at(m, c, r, s);
+                            }
+                        }
+                        out.set(n, m, h, w, acc);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_filter_copies_input() {
+        // 1x1 filter with weight 1 on a single channel is the identity.
+        let shape = ConvShape::new(1, 1, 4, 4, 1, 1, 1, 0);
+        let mut rng = Rng::new(1);
+        let x = Tensor4::random_activations(Dims4::new(2, 1, 4, 4), &mut rng);
+        let w = ConvWeights::from_dense(&shape, vec![1.0]);
+        let y = direct_dense(&shape, &x, &w);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn known_3x3_valid_convolution() {
+        // 3x3 all-ones filter over a 4x4 ramp, valid padding:
+        // out[h][w] = sum of the 3x3 window.
+        let shape = ConvShape::new(1, 1, 4, 4, 3, 3, 1, 0);
+        let x = Tensor4::from_vec(
+            Dims4::new(1, 1, 4, 4),
+            (0..16).map(|i| i as f32).collect(),
+        );
+        let w = ConvWeights::from_dense(&shape, vec![1.0; 9]);
+        let y = direct_dense(&shape, &x, &w);
+        assert_eq!(y.dims(), Dims4::new(1, 1, 2, 2));
+        // window at (0,0): 0+1+2+4+5+6+8+9+10 = 45
+        assert_eq!(y.at(0, 0, 0, 0), 45.0);
+        assert_eq!(y.at(0, 0, 0, 1), 54.0);
+        assert_eq!(y.at(0, 0, 1, 0), 81.0);
+        assert_eq!(y.at(0, 0, 1, 1), 90.0);
+    }
+
+    #[test]
+    fn padding_preserves_spatial_dims() {
+        let shape = ConvShape::new(2, 3, 5, 5, 3, 3, 1, 1);
+        let mut rng = Rng::new(2);
+        let x = Tensor4::random_activations(Dims4::new(1, 2, 5, 5), &mut rng);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let y = direct_dense(&shape, &x, &w);
+        assert_eq!(y.dims(), Dims4::new(1, 3, 5, 5));
+    }
+
+    #[test]
+    fn stride_two_downsamples() {
+        let shape = ConvShape::new(1, 1, 6, 6, 3, 3, 2, 1);
+        let mut rng = Rng::new(3);
+        let x = Tensor4::random_activations(Dims4::new(1, 1, 6, 6), &mut rng);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let y = direct_dense(&shape, &x, &w);
+        assert_eq!(y.dims(), Dims4::new(1, 1, 3, 3));
+    }
+
+    #[test]
+    fn groups_partition_channels() {
+        // With 2 groups, filter 0 must ignore channels 2..4 entirely.
+        let shape = ConvShape::new(4, 2, 3, 3, 3, 3, 1, 1).with_groups(2);
+        let mut rng = Rng::new(4);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let x0 = Tensor4::random_activations(Dims4::new(1, 4, 3, 3), &mut rng);
+        let mut x1 = x0.clone();
+        // Perturb the second group's channels; filter 0 output must not move.
+        for c in 2..4 {
+            for h in 0..3 {
+                for wd in 0..3 {
+                    x1.set(0, c, h, wd, 99.0);
+                }
+            }
+        }
+        let y0 = direct_dense(&shape, &x0, &w);
+        let y1 = direct_dense(&shape, &x1, &w);
+        for h in 0..3 {
+            for wd in 0..3 {
+                assert_eq!(y0.at(0, 0, h, wd), y1.at(0, 0, h, wd));
+                // and filter 1 (group 1) must move (overwhelmingly likely)
+            }
+        }
+    }
+
+    #[test]
+    fn linearity_in_weights() {
+        // conv(x, 2w) == 2 * conv(x, w)
+        let shape = ConvShape::new(3, 4, 6, 6, 3, 3, 1, 1);
+        let mut rng = Rng::new(5);
+        let x = Tensor4::random_activations(Dims4::new(2, 3, 6, 6), &mut rng);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let w2 = ConvWeights::from_dense(&shape, w.dense.iter().map(|v| 2.0 * v).collect());
+        let y = direct_dense(&shape, &x, &w);
+        let y2 = direct_dense(&shape, &x, &w2);
+        let scaled = Tensor4::from_vec(y.dims(), y.data().iter().map(|v| 2.0 * v).collect());
+        assert!(y2.allclose(&scaled, 1e-5, 1e-5));
+    }
+}

@@ -1,0 +1,152 @@
+//! Dense GEMM — the cuBLAS `sgemm` stand-in for the lowering baseline.
+//!
+//! `C (m x n) = A (m x k) * B (k x n)`, all row-major. Three variants:
+//! a naive loop (oracle), a cache-blocked single-thread kernel, and a
+//! thread-parallel blocked kernel used by the figure benches.
+
+/// Naive i-k-j GEMM. The k-inner-of-j ordering keeps the innermost loop a
+/// contiguous AXPY over rows of B, which the auto-vectoriser handles.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            // NOTE: no zero-skipping — this is the *dense* baseline; the
+            // paper's cuBLAS multiplies every stored zero after pruning.
+            let aik = a[i * k + kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cj, bj) in crow.iter_mut().zip(brow) {
+                *cj += aik * bj;
+            }
+        }
+    }
+}
+
+/// Cache-blocked GEMM: tiles K so each stripe of B stays hot in L1/L2.
+pub fn gemm_blocked(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    const KB: usize = 64;
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        for i in 0..m {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let aik = a[i * k + kk]; // dense: zeros are multiplied too
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+    }
+}
+
+/// Thread-parallel blocked GEMM: rows of C are partitioned across
+/// `threads` OS threads (disjoint output, no synchronisation).
+pub fn gemm_parallel(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let threads = threads.max(1).min(m.max(1));
+    if threads == 1 || m < 4 {
+        return gemm_blocked(m, k, n, a, b, c);
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
+            let i0 = t * rows_per;
+            scope.spawn(move || {
+                let rows = c_chunk.len() / n;
+                gemm_blocked(rows, k, n, &a[i0 * k..(i0 + rows) * k], b, c_chunk);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive_oracle(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn close(a: &[f32], b: &[f32]) -> bool {
+        a.iter()
+            .zip(b)
+            .all(|(x, y)| (x - y).abs() <= 1e-4 + 1e-5 * y.abs().max(x.abs()))
+    }
+
+    #[test]
+    fn identity_matrix() {
+        let ident = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut c = vec![0.0; 6];
+        gemm(2, 2, 3, &ident, &b, &mut c);
+        assert_eq!(c, b);
+    }
+
+    #[test]
+    fn all_variants_match_oracle() {
+        let mut rng = Rng::new(42);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 128, 50)] {
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            let want = naive_oracle(m, k, n, &a, &b);
+            let mut c1 = vec![0.0; m * n];
+            gemm(m, k, n, &a, &b, &mut c1);
+            assert!(close(&c1, &want), "gemm {m}x{k}x{n}");
+            let mut c2 = vec![0.0; m * n];
+            gemm_blocked(m, k, n, &a, &b, &mut c2);
+            assert!(close(&c2, &want), "blocked {m}x{k}x{n}");
+            let mut c3 = vec![0.0; m * n];
+            gemm_parallel(m, k, n, &a, &b, &mut c3, 4);
+            assert!(close(&c3, &want), "parallel {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        // GEMM must add into C (the conv kernels rely on it for groups).
+        let a = vec![1.0];
+        let b = vec![2.0];
+        let mut c = vec![10.0];
+        gemm(1, 1, 1, &a, &b, &mut c);
+        assert_eq!(c, vec![12.0]);
+    }
+
+    #[test]
+    fn parallel_handles_more_threads_than_rows() {
+        let mut rng = Rng::new(7);
+        let (m, k, n) = (3, 8, 5);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let want = naive_oracle(m, k, n, &a, &b);
+        let mut c = vec![0.0; m * n];
+        gemm_parallel(m, k, n, &a, &b, &mut c, 64);
+        assert!(close(&c, &want));
+    }
+}

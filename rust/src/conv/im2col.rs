@@ -1,0 +1,301 @@
+//! The lowering method (paper §2.2, Figs 2–3): im2col + matrix multiply.
+//!
+//! `im2col_group` materialises the lowered input matrix
+//! `(C/g)*R*S x E*F` for one image and group — duplicating input features
+//! up to `R*S` times, exactly the overhead the paper attacks. On top of it:
+//!
+//! * [`lowered_gemm`]   — dense weights × lowered matrix (CUBLAS proxy).
+//! * [`lowered_spmm`]   — CSR weights × lowered matrix (CUSPARSE proxy).
+
+use super::{csrmm, gemm_blocked, gemm_parallel, ConvWeights};
+use crate::config::ConvShape;
+use crate::sparse::CsrMatrix;
+use crate::tensor::{Dims4, Tensor4};
+
+/// Materialise the lowered matrix for image `n`, group `g` of `padded`
+/// (an already spatially padded input) into `out`, which must hold
+/// `(C/g)*R*S * E*F` floats. Row = `(c, r, s)`, column = `(h, w)`.
+pub fn im2col_group(
+    shape: &ConvShape,
+    padded: &Tensor4,
+    n: usize,
+    g: usize,
+    out: &mut [f32],
+) {
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let cg = shape.c_per_group();
+    let ef = e * f;
+    assert_eq!(out.len(), cg * shape.r * shape.s * ef);
+    let pd = padded.dims();
+    debug_assert_eq!(pd.h, shape.padded_h());
+
+    let mut row = 0;
+    for c in 0..cg {
+        let cin = g * cg + c;
+        for r in 0..shape.r {
+            for s in 0..shape.s {
+                let dst = &mut out[row * ef..(row + 1) * ef];
+                for h in 0..e {
+                    let src_h = h * shape.stride + r;
+                    if shape.stride == 1 {
+                        // Contiguous copy of F elements — the common case.
+                        let base = pd.index(n, cin, src_h, s);
+                        dst[h * f..(h + 1) * f]
+                            .copy_from_slice(&padded.data()[base..base + f]);
+                    } else {
+                        for w in 0..f {
+                            dst[h * f + w] =
+                                padded.at(n, cin, src_h, w * shape.stride + s);
+                        }
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// CUBLAS-proxy convolution: im2col then dense GEMM per image and group.
+/// Weights are used in their dense form (zeros included), mirroring the
+/// paper's CUBLAS configuration where pruned weights stay dense.
+pub fn lowered_gemm(shape: &ConvShape, input: &Tensor4, weights: &ConvWeights) -> Tensor4 {
+    lowered_gemm_with_threads(shape, input, weights, 1)
+}
+
+/// Thread-parallel CUBLAS proxy. For multi-image batches the images are
+/// partitioned across threads (each with a private lowered buffer); for
+/// single images the GEMM itself is threaded.
+pub fn lowered_gemm_parallel(
+    shape: &ConvShape,
+    input: &Tensor4,
+    weights: &ConvWeights,
+    threads: usize,
+) -> Tensor4 {
+    let d = input.dims();
+    let threads = threads.max(1);
+    if threads == 1 || d.n < 2 {
+        return lowered_gemm_with_threads(shape, input, weights, threads);
+    }
+    assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
+    let padded = input.pad_spatial(shape.pad);
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let (k, ef) = shape.lowered_dims();
+    let mg = shape.m_per_group();
+    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
+    let per_image = shape.m * ef;
+    let images_per = d.n.div_ceil(threads.min(d.n));
+    let padded_ref = &padded;
+    std::thread::scope(|scope| {
+        for (t, chunk) in out.data_mut().chunks_mut(images_per * per_image).enumerate() {
+            scope.spawn(move || {
+                let first = t * images_per;
+                let mut lowered = vec![0.0f32; k * ef];
+                for (i, img_out) in chunk.chunks_mut(per_image).enumerate() {
+                    let n = first + i;
+                    for g in 0..shape.groups {
+                        im2col_group(shape, padded_ref, n, g, &mut lowered);
+                        let a = weights.group_matrix(g);
+                        let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
+                        gemm_blocked(mg, k, ef, a, &lowered, c);
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
+fn lowered_gemm_with_threads(
+    shape: &ConvShape,
+    input: &Tensor4,
+    weights: &ConvWeights,
+    threads: usize,
+) -> Tensor4 {
+    let d = input.dims();
+    assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
+    let padded = input.pad_spatial(shape.pad);
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let (k, ef) = shape.lowered_dims();
+    let mg = shape.m_per_group();
+    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
+    let mut lowered = vec![0.0f32; k * ef];
+
+    for n in 0..d.n {
+        for g in 0..shape.groups {
+            im2col_group(shape, &padded, n, g, &mut lowered);
+            let a = weights.group_matrix(g);
+            let out_base = out.dims().index(n, g * mg, 0, 0);
+            let c = &mut out.data_mut()[out_base..out_base + mg * ef];
+            if threads > 1 {
+                gemm_parallel(mg, k, ef, a, &lowered, c, threads);
+            } else {
+                gemm_blocked(mg, k, ef, a, &lowered, c);
+            }
+        }
+    }
+    out
+}
+
+/// Thread-parallel CUSPARSE proxy: images are partitioned across threads,
+/// each with its own lowered-matrix buffer (disjoint output planes, no
+/// synchronisation).
+pub fn lowered_spmm_parallel(
+    shape: &ConvShape,
+    input: &Tensor4,
+    banks: &[CsrMatrix],
+    threads: usize,
+) -> Tensor4 {
+    let d = input.dims();
+    assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
+    assert_eq!(banks.len(), shape.groups);
+    let threads = threads.max(1).min(d.n.max(1));
+    if threads == 1 {
+        return lowered_spmm(shape, input, banks);
+    }
+    let padded = input.pad_spatial(shape.pad);
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let (k, ef) = shape.lowered_dims();
+    let mg = shape.m_per_group();
+    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
+    let per_image = shape.m * ef;
+    let images_per = d.n.div_ceil(threads);
+    let padded_ref = &padded;
+    std::thread::scope(|scope| {
+        for (t, chunk) in out.data_mut().chunks_mut(images_per * per_image).enumerate() {
+            scope.spawn(move || {
+                let first = t * images_per;
+                let mut lowered = vec![0.0f32; k * ef];
+                for (i, img_out) in chunk.chunks_mut(per_image).enumerate() {
+                    let n = first + i;
+                    for (g, bank) in banks.iter().enumerate() {
+                        im2col_group(shape, padded_ref, n, g, &mut lowered);
+                        let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
+                        csrmm(bank, ef, &lowered, c);
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
+/// CUSPARSE-proxy convolution: im2col then CSR `csrmm` per image/group.
+/// `banks` must be `weights.csr_banks()` (unstretched, canonical columns).
+pub fn lowered_spmm(
+    shape: &ConvShape,
+    input: &Tensor4,
+    banks: &[CsrMatrix],
+) -> Tensor4 {
+    let d = input.dims();
+    assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
+    assert_eq!(banks.len(), shape.groups);
+    let padded = input.pad_spatial(shape.pad);
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let (k, ef) = shape.lowered_dims();
+    let mg = shape.m_per_group();
+    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
+    let mut lowered = vec![0.0f32; k * ef];
+
+    for n in 0..d.n {
+        for (g, bank) in banks.iter().enumerate() {
+            assert_eq!(bank.rows, mg);
+            assert_eq!(bank.cols, k);
+            im2col_group(shape, &padded, n, g, &mut lowered);
+            let out_base = out.dims().index(n, g * mg, 0, 0);
+            let c = &mut out.data_mut()[out_base..out_base + mg * ef];
+            csrmm(bank, ef, &lowered, c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct_dense;
+    use crate::util::Rng;
+
+    fn random_case(shape: &ConvShape, seed: u64) -> (Tensor4, ConvWeights) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor4::random_activations(
+            Dims4::new(2, shape.c, shape.h, shape.w),
+            &mut rng,
+        );
+        let w = ConvWeights::synthetic(shape, &mut rng);
+        (x, w)
+    }
+
+    #[test]
+    fn im2col_matches_paper_fig2_structure() {
+        // 2x2 filter over 3x3 input, no pad: lowered matrix is 4 x 4 and
+        // every input interior element appears multiple times (duplication).
+        let shape = ConvShape::new(1, 1, 3, 3, 2, 2, 1, 0);
+        let x = Tensor4::from_vec(
+            Dims4::new(1, 1, 3, 3),
+            (1..=9).map(|i| i as f32).collect(),
+        );
+        let padded = x.pad_spatial(0);
+        let mut lowered = vec![0.0; 4 * 4];
+        im2col_group(&shape, &padded, 0, 0, &mut lowered);
+        // rows = taps (r,s) in order (0,0),(0,1),(1,0),(1,1); cols = windows
+        assert_eq!(&lowered[0..4], &[1.0, 2.0, 4.0, 5.0]); // tap (0,0)
+        assert_eq!(&lowered[4..8], &[2.0, 3.0, 5.0, 6.0]); // tap (0,1)
+        assert_eq!(&lowered[8..12], &[4.0, 5.0, 7.0, 8.0]); // tap (1,0)
+        assert_eq!(&lowered[12..16], &[5.0, 6.0, 8.0, 9.0]); // tap (1,1)
+        // the centre element 5 is duplicated 4 times
+        assert_eq!(lowered.iter().filter(|&&v| v == 5.0).count(), 4);
+    }
+
+    #[test]
+    fn lowered_gemm_matches_direct_dense() {
+        for shape in [
+            ConvShape::new(3, 4, 6, 6, 3, 3, 1, 1),
+            ConvShape::new(2, 2, 8, 8, 5, 5, 1, 2).with_sparsity(0.6),
+            ConvShape::new(1, 3, 7, 7, 3, 3, 2, 1),
+            ConvShape::new(4, 4, 6, 6, 3, 3, 1, 0).with_groups(2),
+        ] {
+            let (x, w) = random_case(&shape, 11);
+            let want = direct_dense(&shape, &x, &w);
+            let got = lowered_gemm(&shape, &x, &w);
+            assert!(got.allclose(&want, 1e-4, 1e-5), "shape {shape}");
+        }
+    }
+
+    #[test]
+    fn lowered_gemm_parallel_matches() {
+        let shape = ConvShape::new(3, 8, 9, 9, 3, 3, 1, 1).with_sparsity(0.7);
+        let (x, w) = random_case(&shape, 13);
+        let want = direct_dense(&shape, &x, &w);
+        let got = lowered_gemm_parallel(&shape, &x, &w, 4);
+        assert!(got.allclose(&want, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn lowered_parallel_variants_match() {
+        let shape = ConvShape::new(3, 8, 9, 9, 3, 3, 1, 1).with_sparsity(0.7);
+        let mut rng = Rng::new(19);
+        let x = Tensor4::random_activations(Dims4::new(5, 3, 9, 9), &mut rng);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let want = direct_dense(&shape, &x, &w);
+        for threads in [2, 3, 8] {
+            let g = lowered_gemm_parallel(&shape, &x, &w, threads);
+            assert!(g.allclose(&want, 1e-4, 1e-5), "gemm t{threads}");
+            let s = lowered_spmm_parallel(&shape, &x, &w.csr_banks(), threads);
+            assert!(s.allclose(&want, 1e-4, 1e-5), "spmm t{threads}");
+        }
+    }
+
+    #[test]
+    fn lowered_spmm_matches_direct_dense() {
+        for shape in [
+            ConvShape::new(3, 4, 6, 6, 3, 3, 1, 1).with_sparsity(0.8),
+            ConvShape::new(4, 4, 6, 6, 3, 3, 1, 1).with_groups(2).with_sparsity(0.5),
+            ConvShape::new(2, 3, 9, 9, 5, 5, 2, 2).with_sparsity(0.7),
+        ] {
+            let (x, w) = random_case(&shape, 17);
+            let want = direct_dense(&shape, &x, &w);
+            let got = lowered_spmm(&shape, &x, &w.csr_banks());
+            assert!(got.allclose(&want, 1e-4, 1e-5), "shape {shape}");
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Native Rust convolution kernels.
+//!
+//! These are the host-side counterparts of the three GPU methods the paper
+//! compares, plus the paper's Algorithm 1 reference and its §3.4
+//! future-work Winograd path:
+//!
+//! * [`direct_dense`] — the 7-loop reference (paper Algorithm 1); the
+//!   correctness oracle for everything else.
+//! * [`lowered_gemm`] — im2col + dense GEMM, the **CUBLAS** baseline.
+//! * [`lowered_spmm`] — im2col + CSR×dense SpMM, the **CUSPARSE** baseline.
+//! * [`sconv`] — **Escoin**: direct sparse convolution over stretched
+//!   weights (paper Algorithm 2 + §3.2 dataflow), sequential and parallel.
+//! * [`winograd_3x3`] — Winograd F(2x2, 3x3) for small filters (§3.4).
+//!
+//! They serve three roles: correctness cross-checks against the Pallas/XLA
+//! artifacts, fast full-scale baselines for the figure benches (the
+//! interpret-mode Pallas path cannot run batch-128 ImageNet layers), and
+//! the loop structures the cache simulator replays for Fig 10.
+
+mod dense;
+mod gemm;
+mod im2col;
+mod sconv;
+mod spmm;
+mod weights;
+mod winograd;
+
+pub use dense::direct_dense;
+pub use gemm::{gemm, gemm_blocked, gemm_parallel};
+pub use im2col::{
+    im2col_group, lowered_gemm, lowered_gemm_parallel, lowered_spmm, lowered_spmm_parallel,
+};
+pub use sconv::{sconv, sconv_ell, sconv_parallel};
+pub use spmm::csrmm;
+pub use weights::ConvWeights;
+pub use winograd::{winograd_3x3, winograd_applicable};

@@ -1,0 +1,343 @@
+//! Escoin's direct sparse convolution (paper §3, Algorithm 2).
+//!
+//! The kernel never materialises a lowered matrix. The input is padded
+//! once (`pad_in`); weights arrive *stretched* (colidx = flat offset into
+//! the padded image, §3.1), so for every stored nonzero the inner loop is
+//! a shifted-window AXPY (Fig 5: "nonzero weight times a sub-matrix"):
+//!
+//! ```text
+//! for h in 0..E:  out[m][h][0..F] += val * in[off + h*stride*Wp ..][::stride]
+//! ```
+//!
+//! With stride 1 the inner slice is contiguous — the CPU analogue of the
+//! paper's coalesced warp mapping (Fig 6), and the auto-vectoriser turns
+//! it into packed FMAs. Partial sums accumulate in the output row held in
+//! cache/registers (the paper's register-resident partial sums).
+
+use crate::config::ConvShape;
+use crate::sparse::{EllMatrix, StretchedFilter};
+use crate::tensor::{Dims4, Tensor4};
+
+/// One output plane (`E x F`) for image `n`, group `g`, group-local filter
+/// `ml`, given the group's slice of the padded input.
+///
+/// Nonzeros are register-blocked four at a time (the CPU analogue of the
+/// warp-level ILP the paper's kernel gets for free): each pass over an
+/// output row performs four fused AXPYs, amortising the load/store of the
+/// accumulator row — without this, short rows (F ≈ 13 on the 3x3 layers)
+/// are store-bound and the direct method loses its edge.
+#[inline]
+fn sconv_plane(
+    shape: &ConvShape,
+    in_group: &[f32],
+    bank: &StretchedFilter,
+    ml: usize,
+    out_plane: &mut [f32],
+) {
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let wp = bank.wp;
+    let stride = shape.stride;
+    debug_assert_eq!(out_plane.len(), e * f);
+    let range = bank.csr.row_range(ml);
+    let vals = &bank.csr.values[range.clone()];
+    let offs = &bank.csr.colidx[range];
+
+    if stride == 1 {
+        // Stride-1 fast path: accumulate into a Wp-strided scratch plane.
+        // Because the output row stride then equals the input row stride,
+        // the whole E x F window collapses into ONE contiguous AXPY of
+        // `span = (E-1)*Wp + F` floats per nonzero — the junk that lands
+        // in the Wp-F padding columns is never read back. This is what
+        // keeps small-F layers (ResNet's 7x7/14x14 stages) vectorised.
+        let span = (e - 1) * wp + f;
+        let mut scratch = vec![0.0f32; span];
+        let mut j = 0;
+        while j + 4 <= vals.len() {
+            let (v0, v1, v2, v3) = (vals[j], vals[j + 1], vals[j + 2], vals[j + 3]);
+            let i0 = &in_group[offs[j] as usize..offs[j] as usize + span];
+            let i1 = &in_group[offs[j + 1] as usize..offs[j + 1] as usize + span];
+            let i2 = &in_group[offs[j + 2] as usize..offs[j + 2] as usize + span];
+            let i3 = &in_group[offs[j + 3] as usize..offs[j + 3] as usize + span];
+            for (idx, s) in scratch.iter_mut().enumerate() {
+                *s += v0 * i0[idx] + v1 * i1[idx] + v2 * i2[idx] + v3 * i3[idx];
+            }
+            j += 4;
+        }
+        while j < vals.len() {
+            let val = vals[j];
+            let src = &in_group[offs[j] as usize..offs[j] as usize + span];
+            for (s, i) in scratch.iter_mut().zip(src) {
+                *s += val * i;
+            }
+            j += 1;
+        }
+        // Extract the E x F window from the scratch plane.
+        for h in 0..e {
+            out_plane[h * f..(h + 1) * f].copy_from_slice(&scratch[h * wp..h * wp + f]);
+        }
+    } else {
+        // Strided path: per-row gathers, nonzeros blocked four at a time
+        // so each gathered output element gets four FMAs per store.
+        let mut j = 0;
+        while j + 4 <= vals.len() {
+            let (v0, v1, v2, v3) = (vals[j], vals[j + 1], vals[j + 2], vals[j + 3]);
+            let (o0, o1, o2, o3) = (
+                offs[j] as usize,
+                offs[j + 1] as usize,
+                offs[j + 2] as usize,
+                offs[j + 3] as usize,
+            );
+            for h in 0..e {
+                let base = h * stride * wp;
+                let out_row = &mut out_plane[h * f..(h + 1) * f];
+                for (w, o) in out_row.iter_mut().enumerate() {
+                    let ws = w * stride;
+                    *o += v0 * in_group[o0 + base + ws]
+                        + v1 * in_group[o1 + base + ws]
+                        + v2 * in_group[o2 + base + ws]
+                        + v3 * in_group[o3 + base + ws];
+                }
+            }
+            j += 4;
+        }
+        while j < vals.len() {
+            let val = vals[j];
+            let off = offs[j] as usize;
+            for h in 0..e {
+                let src = off + h * stride * wp;
+                let out_row = &mut out_plane[h * f..(h + 1) * f];
+                for (w, o) in out_row.iter_mut().enumerate() {
+                    *o += val * in_group[src + w * stride];
+                }
+            }
+            j += 1;
+        }
+    }
+}
+
+/// Direct sparse convolution, sequential. `banks` must come from
+/// [`ConvWeights::stretched_banks`] for the same `shape`.
+pub fn sconv(shape: &ConvShape, input: &Tensor4, banks: &[StretchedFilter]) -> Tensor4 {
+    let d = input.dims();
+    assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
+    assert_eq!(banks.len(), shape.groups);
+    let padded = input.pad_spatial(shape.pad); // pad_in
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
+    let group_len = cg * shape.padded_h() * shape.padded_w();
+    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
+    let ef = e * f;
+
+    let out_data = out.data_mut();
+    for n in 0..d.n {
+        let img = padded.image(n);
+        for m in 0..shape.m {
+            let g = m / mg;
+            let in_group = &img[g * group_len..(g + 1) * group_len];
+            let plane = &mut out_data[(n * shape.m + m) * ef..(n * shape.m + m + 1) * ef];
+            sconv_plane(shape, in_group, &banks[g], m % mg, plane);
+        }
+    }
+    out
+}
+
+/// Direct sparse convolution, parallel over output planes. Each thread owns
+/// a disjoint contiguous range of `(n, m)` planes — no synchronisation,
+/// mirroring the paper's thread-block-per-output-channel partitioning.
+pub fn sconv_parallel(
+    shape: &ConvShape,
+    input: &Tensor4,
+    banks: &[StretchedFilter],
+    threads: usize,
+) -> Tensor4 {
+    let d = input.dims();
+    assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
+    assert_eq!(banks.len(), shape.groups);
+    let total_planes = d.n * shape.m;
+    let threads = threads.max(1).min(total_planes.max(1));
+    if threads == 1 {
+        return sconv(shape, input, banks);
+    }
+    let padded = input.pad_spatial(shape.pad);
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
+    let group_len = cg * shape.padded_h() * shape.padded_w();
+    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
+    let ef = e * f;
+    let planes_per = total_planes.div_ceil(threads);
+
+    let padded_ref = &padded;
+    std::thread::scope(|scope| {
+        for (t, chunk) in out.data_mut().chunks_mut(planes_per * ef).enumerate() {
+            scope.spawn(move || {
+                let first_plane = t * planes_per;
+                for (p, plane) in chunk.chunks_mut(ef).enumerate() {
+                    let plane_id = first_plane + p;
+                    let (n, m) = (plane_id / shape.m, plane_id % shape.m);
+                    let g = m / mg;
+                    let img = padded_ref.image(n);
+                    let in_group = &img[g * group_len..(g + 1) * group_len];
+                    sconv_plane(shape, in_group, &banks[g], m % mg, plane);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// ELLPACK variant — the exact loop structure the Pallas kernel runs
+/// (static `k` slots per row, zero-padded). Used to validate the TPU
+/// adaptation and to measure the padding overhead natively.
+pub fn sconv_ell(shape: &ConvShape, input: &Tensor4, banks: &[EllMatrix]) -> Tensor4 {
+    let d = input.dims();
+    assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
+    assert_eq!(banks.len(), shape.groups);
+    let padded = input.pad_spatial(shape.pad);
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
+    let (wp, group_len) = (shape.padded_w(), cg * shape.padded_h() * shape.padded_w());
+    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
+    let ef = e * f;
+    let stride = shape.stride;
+
+    let out_data = out.data_mut();
+    for n in 0..d.n {
+        let img = padded.image(n);
+        for m in 0..shape.m {
+            let g = m / mg;
+            let bank = &banks[g];
+            let in_group = &img[g * group_len..(g + 1) * group_len];
+            let plane = &mut out_data[(n * shape.m + m) * ef..(n * shape.m + m + 1) * ef];
+            let ml = m % mg;
+            // Static trip count over k slots, exactly like the Pallas grid.
+            for slot in 0..bank.k {
+                let val = bank.values[ml * bank.k + slot];
+                let off = bank.colidx[ml * bank.k + slot] as usize;
+                for h in 0..e {
+                    let src = off + h * stride * wp;
+                    let out_row = &mut plane[h * f..(h + 1) * f];
+                    if stride == 1 {
+                        let input_row = &in_group[src..src + f];
+                        for (o, i) in out_row.iter_mut().zip(input_row) {
+                            *o += val * i;
+                        }
+                    } else {
+                        for (w, o) in out_row.iter_mut().enumerate() {
+                            *o += val * in_group[src + w * stride];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{direct_dense, ConvWeights};
+    use crate::util::Rng;
+
+    fn random_case(shape: &ConvShape, n: usize, seed: u64) -> (Tensor4, ConvWeights) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor4::random_activations(Dims4::new(n, shape.c, shape.h, shape.w), &mut rng);
+        let w = ConvWeights::synthetic(shape, &mut rng);
+        (x, w)
+    }
+
+    fn shapes_under_test() -> Vec<ConvShape> {
+        vec![
+            // 3x3 same-pad, the dominant sparse layer shape
+            ConvShape::new(3, 4, 6, 6, 3, 3, 1, 1).with_sparsity(0.7),
+            // 5x5 pad-2 (AlexNet conv2 / GoogLeNet 5x5 shape class)
+            ConvShape::new(2, 3, 9, 9, 5, 5, 1, 2).with_sparsity(0.8),
+            // strided (ResNet downsample 3x3 stride 2)
+            ConvShape::new(4, 4, 8, 8, 3, 3, 2, 1).with_sparsity(0.6),
+            // grouped (AlexNet conv4/conv5 class)
+            ConvShape::new(4, 6, 7, 7, 3, 3, 1, 1).with_groups(2).with_sparsity(0.5),
+            // 1x1 pointwise
+            ConvShape::new(8, 4, 5, 5, 1, 1, 1, 0).with_sparsity(0.6),
+            // valid padding, rectangular input
+            ConvShape::new(2, 2, 8, 6, 3, 3, 1, 0).with_sparsity(0.7),
+            // fully dense (sparsity 0 still must work)
+            ConvShape::new(3, 3, 5, 5, 3, 3, 1, 1),
+        ]
+    }
+
+    #[test]
+    fn sconv_matches_direct_dense() {
+        for (i, shape) in shapes_under_test().into_iter().enumerate() {
+            let (x, w) = random_case(&shape, 2, 100 + i as u64);
+            let want = direct_dense(&shape, &x, &w);
+            let got = sconv(&shape, &x, &w.stretched_banks());
+            assert!(got.allclose(&want, 1e-4, 1e-5), "shape {shape}");
+        }
+    }
+
+    #[test]
+    fn sconv_parallel_matches() {
+        for (i, shape) in shapes_under_test().into_iter().enumerate() {
+            let (x, w) = random_case(&shape, 3, 200 + i as u64);
+            let want = direct_dense(&shape, &x, &w);
+            for threads in [2, 4, 16] {
+                let got = sconv_parallel(&shape, &x, &w.stretched_banks(), threads);
+                assert!(got.allclose(&want, 1e-4, 1e-5), "shape {shape} t{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn sconv_ell_matches() {
+        for (i, shape) in shapes_under_test().into_iter().enumerate() {
+            let (x, w) = random_case(&shape, 2, 300 + i as u64);
+            let want = direct_dense(&shape, &x, &w);
+            for align in [1, 8] {
+                let got = sconv_ell(&shape, &x, &w.ell_banks(align));
+                assert!(got.allclose(&want, 1e-4, 1e-5), "shape {shape} align{align}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_weights_give_zero_output() {
+        let shape = ConvShape::new(2, 2, 5, 5, 3, 3, 1, 1);
+        let mut rng = Rng::new(9);
+        let x = Tensor4::random_activations(Dims4::new(1, 2, 5, 5), &mut rng);
+        let w = ConvWeights::from_dense(&shape, vec![0.0; shape.weights()]);
+        let y = sconv(&shape, &x, &w.stretched_banks());
+        assert!(y.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn single_nonzero_weight_is_shifted_window() {
+        // One weight at tap (r=1, s=1) of a 3x3 same-pad filter means the
+        // output equals val * input (the window centred on each pixel).
+        let shape = ConvShape::new(1, 1, 4, 4, 3, 3, 1, 1);
+        let mut dense = vec![0.0; 9];
+        dense[4] = 2.5; // (r=1, s=1)
+        let w = ConvWeights::from_dense(&shape, dense);
+        let mut rng = Rng::new(10);
+        let x = Tensor4::random_activations(Dims4::new(1, 1, 4, 4), &mut rng);
+        let y = sconv(&shape, &x, &w.stretched_banks());
+        for h in 0..4 {
+            for wd in 0..4 {
+                assert!((y.at(0, 0, h, wd) - 2.5 * x.at(0, 0, h, wd)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_images_are_independent() {
+        let shape = ConvShape::new(2, 3, 5, 5, 3, 3, 1, 1).with_sparsity(0.5);
+        let mut rng = Rng::new(11);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let banks = w.stretched_banks();
+        let x2 = Tensor4::random_activations(Dims4::new(2, 2, 5, 5), &mut rng);
+        let y2 = sconv(&shape, &x2, &banks);
+        // Convolve image 1 alone; plane must match the batched result.
+        let x1 = Tensor4::from_vec(Dims4::new(1, 2, 5, 5), x2.image(1).to_vec());
+        let y1 = sconv(&shape, &x1, &banks);
+        assert_eq!(y1.image(0), y2.image(1));
+    }
+}

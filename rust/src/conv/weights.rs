@@ -1,0 +1,174 @@
+//! Filter-bank container shared by all native kernels.
+
+use crate::config::ConvShape;
+use crate::sparse::{
+    prune_magnitude_per_row, stretch_weights, CsrMatrix, EllMatrix, StretchedFilter,
+};
+use crate::util::Rng;
+
+/// Dense filter bank of a CONV layer in `(M, C/g, R, S)` row-major layout
+/// (groups concatenated along `M`), with converters to every sparse
+/// representation the kernels need.
+#[derive(Clone, Debug)]
+pub struct ConvWeights {
+    pub shape: ConvShape,
+    /// `M * (C/g) * R * S` dense weights; pruned entries are exact zeros.
+    pub dense: Vec<f32>,
+}
+
+impl ConvWeights {
+    /// Synthetic weights for `shape`, pruned per filter row to
+    /// `shape.sparsity` by magnitude (DESIGN.md §7 substitution for the
+    /// SkimCaffe models; per-row so the ELL row population is static —
+    /// §6). Matches `python/compile/configs.py::synthetic_weights`.
+    pub fn synthetic(shape: &ConvShape, rng: &mut Rng) -> Self {
+        let mut dense = rng.normal_vec(shape.weights());
+        if shape.sparsity > 0.0 {
+            let cols = shape.c_per_group() * shape.r * shape.s;
+            prune_magnitude_per_row(&mut dense, cols, shape.sparsity);
+        }
+        Self {
+            shape: shape.clone(),
+            dense,
+        }
+    }
+
+    /// Wrap an existing dense buffer.
+    pub fn from_dense(shape: &ConvShape, dense: Vec<f32>) -> Self {
+        assert_eq!(dense.len(), shape.weights());
+        Self {
+            shape: shape.clone(),
+            dense,
+        }
+    }
+
+    /// Weight of filter `m` (global id), channel `c` (within group),
+    /// tap `(r, s)`.
+    #[inline(always)]
+    pub fn at(&self, m: usize, c: usize, r: usize, s: usize) -> f32 {
+        let sh = &self.shape;
+        self.dense[((m * sh.c_per_group() + c) * sh.r + r) * sh.s + s]
+    }
+
+    /// The `M/g x (C/g)*R*S` filter matrix of group `g` as a dense
+    /// row-major slice (it is contiguous in our layout).
+    pub fn group_matrix(&self, g: usize) -> &[f32] {
+        let sh = &self.shape;
+        let per_filter = sh.c_per_group() * sh.r * sh.s;
+        let per_group = sh.m_per_group() * per_filter;
+        &self.dense[g * per_group..(g + 1) * per_group]
+    }
+
+    /// CSR filter bank of group `g` (rows = M/g, cols = (C/g)*R*S) —
+    /// the representation CUSPARSE's csrmm consumes.
+    pub fn csr_bank(&self, g: usize) -> CsrMatrix {
+        let sh = &self.shape;
+        CsrMatrix::from_dense(
+            sh.m_per_group(),
+            sh.c_per_group() * sh.r * sh.s,
+            self.group_matrix(g),
+        )
+    }
+
+    /// All per-group CSR banks.
+    pub fn csr_banks(&self) -> Vec<CsrMatrix> {
+        (0..self.shape.groups).map(|g| self.csr_bank(g)).collect()
+    }
+
+    /// Weight-stretched banks (paper §3.1) — what Escoin's sconv consumes.
+    pub fn stretched_banks(&self) -> Vec<StretchedFilter> {
+        (0..self.shape.groups)
+            .map(|g| stretch_weights(&self.csr_bank(g), &self.shape))
+            .collect()
+    }
+
+    /// ELLPACK form of the stretched banks with slot alignment `align` —
+    /// what the Pallas sconv kernel consumes (DESIGN.md §6).
+    pub fn ell_banks(&self, align: usize) -> Vec<EllMatrix> {
+        self.stretched_banks()
+            .iter()
+            .map(|st| EllMatrix::from_csr(&st.csr, align))
+            .collect()
+    }
+
+    /// Stretched ELL banks with the slot count fixed by an AOT manifest.
+    pub fn ell_banks_fixed_k(&self, k: usize) -> Vec<EllMatrix> {
+        self.stretched_banks()
+            .iter()
+            .map(|st| EllMatrix::from_csr_fixed_k(&st.csr, k))
+            .collect()
+    }
+
+    /// Canonical (unstretched) ELL banks with a fixed slot count — the
+    /// representation the AOT `spmm` artifacts consume.
+    pub fn ell_banks_canonical_fixed_k(&self, k: usize) -> Vec<EllMatrix> {
+        (0..self.shape.groups)
+            .map(|g| EllMatrix::from_csr_fixed_k(&self.csr_bank(g), k))
+            .collect()
+    }
+
+    /// Measured sparsity of the dense buffer.
+    pub fn sparsity(&self) -> f64 {
+        let zeros = self.dense.iter().filter(|&&w| w == 0.0).count();
+        zeros as f64 / self.dense.len().max(1) as f64
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.dense.iter().filter(|&&w| w != 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_hits_requested_sparsity() {
+        let shape = ConvShape::new(16, 32, 9, 9, 3, 3, 1, 1).with_sparsity(0.8);
+        let mut rng = Rng::new(1);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        assert!((w.sparsity() - 0.8).abs() < 0.01, "{}", w.sparsity());
+        assert_eq!(w.dense.len(), shape.weights());
+    }
+
+    #[test]
+    fn group_matrix_partitions_dense() {
+        let shape = ConvShape::new(4, 6, 5, 5, 3, 3, 1, 1).with_groups(2);
+        let mut rng = Rng::new(2);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let total: usize = (0..2).map(|g| w.group_matrix(g).len()).sum();
+        assert_eq!(total, w.dense.len());
+        assert_eq!(w.group_matrix(0), &w.dense[..w.dense.len() / 2]);
+    }
+
+    #[test]
+    fn at_indexes_match_group_matrix() {
+        let shape = ConvShape::new(4, 6, 5, 5, 3, 3, 1, 1).with_groups(2);
+        let mut rng = Rng::new(3);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        // filter m=4 is filter 1 of group 1
+        let gm = w.group_matrix(1);
+        let per_filter = shape.c_per_group() * 9;
+        assert_eq!(w.at(4, 1, 2, 0), gm[per_filter + 9 + 6]);
+    }
+
+    #[test]
+    fn csr_banks_roundtrip() {
+        let shape = ConvShape::new(8, 8, 6, 6, 3, 3, 1, 1).with_sparsity(0.7);
+        let mut rng = Rng::new(4);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let bank = w.csr_bank(0);
+        bank.validate().unwrap();
+        assert_eq!(bank.to_dense(), w.dense);
+    }
+
+    #[test]
+    fn ell_banks_respect_alignment() {
+        let shape = ConvShape::new(8, 8, 6, 6, 3, 3, 1, 1).with_sparsity(0.9);
+        let mut rng = Rng::new(5);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let ell = &w.ell_banks(8)[0];
+        assert_eq!(ell.k % 8, 0);
+        assert_eq!(ell.nnz(), w.nnz());
+    }
+}

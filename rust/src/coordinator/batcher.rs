@@ -1,0 +1,158 @@
+//! Dynamic batcher: group single-image requests into fixed-size batches
+//! under a latency deadline.
+//!
+//! AOT artifacts are compiled for a static batch size (XLA shapes are
+//! static), so the batcher's contract is: emit batches of *up to*
+//! `batch_size` items within `max_wait` of the first item's arrival; the
+//! executor pads short batches with zero images (the padded rows are
+//! discarded on the way out).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Target batch size (the artifact's static batch).
+    pub batch_size: usize,
+    /// Max time to hold the first request while waiting for more.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 4,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// One formed batch.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub items: Vec<T>,
+    /// Time the first item waited in the batcher.
+    pub formation_time: Duration,
+}
+
+impl<T> Batch<T> {
+    /// Slots the executor must pad to reach the artifact batch.
+    pub fn padding(&self, batch_size: usize) -> usize {
+        batch_size.saturating_sub(self.items.len())
+    }
+}
+
+/// Pulls items from a channel and forms batches.
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    cfg: BatcherConfig,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(rx: Receiver<T>, cfg: BatcherConfig) -> Self {
+        assert!(cfg.batch_size > 0);
+        Self { rx, cfg }
+    }
+
+    /// Block until a batch can be emitted. Returns `None` once the input
+    /// channel is closed and drained.
+    pub fn next_batch(&self) -> Option<Batch<T>> {
+        // Block for the first item.
+        let first = self.rx.recv().ok()?;
+        let t0 = Instant::now();
+        let mut items = vec![first];
+        let deadline = t0 + self.cfg.max_wait;
+        while items.len() < self.cfg.batch_size {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => items.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(Batch {
+            items,
+            formation_time: t0.elapsed(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn cfg(batch: usize, wait_ms: u64) -> BatcherConfig {
+        BatcherConfig {
+            batch_size: batch,
+            max_wait: Duration::from_millis(wait_ms),
+        }
+    }
+
+    #[test]
+    fn full_batch_when_queue_is_deep() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(rx, cfg(4, 50));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items, vec![0, 1, 2, 3]);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn short_batch_on_timeout() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let b = Batcher::new(rx, cfg(8, 5));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items, vec![1]);
+        assert_eq!(batch.padding(8), 7);
+    }
+
+    #[test]
+    fn none_after_channel_closes() {
+        let (tx, rx) = channel::<u32>();
+        tx.send(7).unwrap();
+        drop(tx);
+        let b = Batcher::new(rx, cfg(4, 5));
+        assert_eq!(b.next_batch().unwrap().items, vec![7]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn order_is_preserved() {
+        let (tx, rx) = channel();
+        for i in 0..7 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = Batcher::new(rx, cfg(3, 5));
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            seen.extend(batch.items);
+        }
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn producer_thread_fills_batch_before_deadline() {
+        let (tx, rx) = channel();
+        let b = Batcher::new(rx, cfg(3, 250));
+        let sender = std::thread::spawn(move || {
+            for i in 0..3 {
+                tx.send(i).unwrap();
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items.len(), 3);
+        sender.join().unwrap();
+    }
+}

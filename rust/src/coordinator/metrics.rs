@@ -1,0 +1,183 @@
+//! Serving metrics: counters and a fixed-bucket latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Log-spaced latency histogram from 10us to ~100s.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    /// bucket i covers [10us * 2^i, 10us * 2^(i+1))
+    buckets: Vec<AtomicU64>,
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+const NUM_BUCKETS: usize = 24;
+const BASE_NS: u64 = 10_000; // 10us
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(d: Duration) -> usize {
+        let ns = d.as_nanos() as u64;
+        if ns < BASE_NS {
+            return 0;
+        }
+        (((ns / BASE_NS) as f64).log2().floor() as usize).min(NUM_BUCKETS - 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.buckets[Self::bucket_of(d)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound).
+    pub fn percentile(&self, p: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_nanos(BASE_NS << (i + 1));
+            }
+        }
+        Duration::from_nanos(BASE_NS << NUM_BUCKETS)
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub errors: AtomicU64,
+    pub latency: LatencyHistogram,
+    pub batch_latency: LatencyHistogram,
+    started: Mutex<Option<std::time::Instant>>,
+}
+
+/// Point-in-time view for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub errors: u64,
+    pub mean_latency: Duration,
+    pub p50_latency: Duration,
+    pub p99_latency: Duration,
+    pub throughput_rps: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        let m = Self::default();
+        *m.started.lock().unwrap() = Some(std::time::Instant::now());
+        m
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let elapsed = self
+            .started
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+            .max(1e-9);
+        let responses = self.responses.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses,
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_latency: self.latency.mean(),
+            p50_latency: self.latency.percentile(50.0),
+            p99_latency: self.latency.percentile(99.0),
+            throughput_rps: responses as f64 / elapsed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_millis(1));
+        h.record(Duration::from_millis(3));
+        assert_eq!(h.count(), 2);
+        let m = h.mean();
+        assert!(m >= Duration::from_millis(1) && m <= Duration::from_millis(3));
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let h = LatencyHistogram::new();
+        for i in 1..=100u64 {
+            h.record(Duration::from_micros(i * 100));
+        }
+        assert!(h.percentile(50.0) <= h.percentile(99.0));
+        assert!(h.percentile(99.0) >= Duration::from_micros(5_000));
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.percentile(99.0), Duration::ZERO);
+    }
+
+    #[test]
+    fn snapshot_throughput() {
+        let m = Metrics::new();
+        m.responses.fetch_add(10, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.responses, 10);
+        assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn tiny_latencies_land_in_first_bucket() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_nanos(5));
+        assert_eq!(h.count(), 1);
+        assert!(h.percentile(100.0) > Duration::ZERO);
+    }
+}

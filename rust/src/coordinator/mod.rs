@@ -1,0 +1,28 @@
+//! L3 coordinator: the serving engine around the kernels.
+//!
+//! The paper integrates Escoin into Caffe and times whole-network
+//! iterations; this crate grows that role into a deployable inference
+//! service (DESIGN.md §2):
+//!
+//! * [`router`] — adaptive kernel customization (paper §3.4): picks the
+//!   execution method per layer from its shape/sparsity, refined online
+//!   by measured latencies.
+//! * [`batcher`] — dynamic batcher: single-image requests are grouped
+//!   (and padded) to the artifact batch size under a latency deadline.
+//! * [`scheduler`] — whole-network layer pipeline with per-kernel timing
+//!   (drives the Fig 9/11 benches).
+//! * [`server`] — the request loop: worker threads pull batches, execute
+//!   the model artifact via PJRT, and fan responses back out.
+//! * [`metrics`] — counters + latency histograms for the E2E example.
+
+mod batcher;
+mod metrics;
+mod router;
+mod scheduler;
+mod server;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
+pub use router::{Method, Router, RouterConfig};
+pub use scheduler::{LayerTiming, NetworkSchedule, ScheduleReport};
+pub use server::{InferRequest, InferResponse, ServerConfig, ServerHandle, ServerStats};

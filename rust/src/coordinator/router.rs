@@ -1,0 +1,261 @@
+//! Adaptive kernel customization (paper §3.4).
+//!
+//! "Implementations following the direct sparse convolution approach
+//! should be specifically optimized for convolutions in certain parts of
+//! the parameter space" — the router is that policy, made first-class:
+//!
+//! 1. A static heuristic seeded from the paper's findings: dense layers
+//!    go to GEMM lowering (cuBLAS wins when there is no sparsity to
+//!    exploit), sparse layers go to direct sparse conv, with Winograd
+//!    available for dense 3x3/stride-1 layers.
+//! 2. An online refinement: measured per-(layer, method) latencies are
+//!    folded into an EWMA, and the router switches when another method is
+//!    consistently faster (epsilon-greedy exploration).
+
+use crate::config::ConvShape;
+use crate::conv::winograd_applicable;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Execution method for one CONV layer — the paper's three contenders
+/// plus the §3.4 Winograd extension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// im2col + dense GEMM (CUBLAS baseline).
+    LoweredGemm,
+    /// im2col + CSR SpMM (CUSPARSE baseline).
+    LoweredSpmm,
+    /// Direct sparse convolution (Escoin).
+    DirectSparse,
+    /// Winograd F(2x2, 3x3) for dense 3x3 stride-1 layers.
+    Winograd,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::LoweredGemm => "lowered-gemm",
+            Method::LoweredSpmm => "lowered-spmm",
+            Method::DirectSparse => "direct-sparse",
+            Method::Winograd => "winograd",
+        }
+    }
+}
+
+/// Router tuning knobs.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Sparsity above which the sparse path is considered at all.
+    pub sparsity_threshold: f32,
+    /// EWMA smoothing for online latency estimates.
+    pub ewma_alpha: f64,
+    /// Explore a non-best method once every `explore_every` decisions
+    /// (0 = never explore).
+    pub explore_every: u64,
+    /// Allow Winograd for dense 3x3/s1 layers.
+    pub enable_winograd: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            sparsity_threshold: 0.4,
+            ewma_alpha: 0.3,
+            explore_every: 16,
+            enable_winograd: false,
+        }
+    }
+}
+
+/// Per-layer method selection with online latency feedback.
+pub struct Router {
+    cfg: RouterConfig,
+    state: Mutex<RouterState>,
+}
+
+#[derive(Default)]
+struct RouterState {
+    /// EWMA latency per (layer, method), seconds.
+    ewma: HashMap<(String, Method), f64>,
+    decisions: u64,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Self {
+        Self {
+            cfg,
+            state: Mutex::new(RouterState::default()),
+        }
+    }
+
+    /// The static heuristic (no measurements yet): the paper's §4 winner
+    /// per layer class.
+    pub fn static_choice(&self, shape: &ConvShape) -> Method {
+        if shape.sparsity >= self.cfg.sparsity_threshold {
+            Method::DirectSparse
+        } else if self.cfg.enable_winograd && winograd_applicable(shape) {
+            Method::Winograd
+        } else {
+            Method::LoweredGemm
+        }
+    }
+
+    /// Candidate methods for a layer (what `choose` explores over).
+    pub fn candidates(&self, shape: &ConvShape) -> Vec<Method> {
+        let mut out = vec![Method::LoweredGemm];
+        if shape.sparsity > 0.0 {
+            out.push(Method::LoweredSpmm);
+            out.push(Method::DirectSparse);
+        }
+        if self.cfg.enable_winograd && winograd_applicable(shape) {
+            out.push(Method::Winograd);
+        }
+        out
+    }
+
+    /// Pick the method for `layer` with shape `shape`: best EWMA if we
+    /// have measurements, the static heuristic otherwise, with periodic
+    /// exploration of the runner-up.
+    pub fn choose(&self, layer: &str, shape: &ConvShape) -> Method {
+        let mut st = self.state.lock().unwrap();
+        st.decisions += 1;
+        let cands = self.candidates(shape);
+        let mut measured: Vec<(Method, f64)> = cands
+            .iter()
+            .filter_map(|m| {
+                st.ewma
+                    .get(&(layer.to_string(), *m))
+                    .map(|lat| (*m, *lat))
+            })
+            .collect();
+        // Exploration: revisit an unmeasured or runner-up method so a
+        // changing workload cannot pin us to a stale winner.
+        if self.cfg.explore_every > 0 && st.decisions % self.cfg.explore_every == 0 {
+            if let Some(unmeasured) = cands
+                .iter()
+                .find(|m| !st.ewma.contains_key(&(layer.to_string(), **m)))
+            {
+                return *unmeasured;
+            }
+            if measured.len() > 1 {
+                measured.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                return measured[1].0;
+            }
+        }
+        if measured.is_empty() {
+            return self.static_choice(shape);
+        }
+        measured
+            .into_iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0
+    }
+
+    /// Fold a measured latency into the EWMA for (layer, method).
+    pub fn observe(&self, layer: &str, method: Method, latency: Duration) {
+        let mut st = self.state.lock().unwrap();
+        let key = (layer.to_string(), method);
+        let secs = latency.as_secs_f64();
+        let alpha = self.cfg.ewma_alpha;
+        st.ewma
+            .entry(key)
+            .and_modify(|e| *e = alpha * secs + (1.0 - alpha) * *e)
+            .or_insert(secs);
+    }
+
+    /// Current latency estimate, if any.
+    pub fn estimate(&self, layer: &str, method: Method) -> Option<Duration> {
+        self.state
+            .lock()
+            .unwrap()
+            .ewma
+            .get(&(layer.to_string(), method))
+            .map(|s| Duration::from_secs_f64(*s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_3x3() -> ConvShape {
+        ConvShape::new(64, 64, 14, 14, 3, 3, 1, 1)
+    }
+
+    fn sparse_3x3() -> ConvShape {
+        dense_3x3().with_sparsity(0.8)
+    }
+
+    fn router() -> Router {
+        Router::new(RouterConfig {
+            explore_every: 0,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn static_heuristic_matches_paper() {
+        let r = router();
+        assert_eq!(r.static_choice(&sparse_3x3()), Method::DirectSparse);
+        assert_eq!(r.static_choice(&dense_3x3()), Method::LoweredGemm);
+    }
+
+    #[test]
+    fn winograd_offered_only_when_enabled_and_applicable() {
+        let r = Router::new(RouterConfig {
+            enable_winograd: true,
+            explore_every: 0,
+            ..Default::default()
+        });
+        assert_eq!(r.static_choice(&dense_3x3()), Method::Winograd);
+        // 5x5 not applicable
+        let five = ConvShape::new(8, 8, 14, 14, 5, 5, 1, 2);
+        assert_eq!(r.static_choice(&five), Method::LoweredGemm);
+    }
+
+    #[test]
+    fn online_feedback_overrides_heuristic() {
+        let r = router();
+        let shape = sparse_3x3();
+        // Pretend direct-sparse is slow and spmm is fast on this machine.
+        r.observe("l", Method::DirectSparse, Duration::from_millis(30));
+        r.observe("l", Method::LoweredSpmm, Duration::from_millis(5));
+        assert_eq!(r.choose("l", &shape), Method::LoweredSpmm);
+    }
+
+    #[test]
+    fn ewma_converges_to_new_latency() {
+        let r = router();
+        r.observe("l", Method::DirectSparse, Duration::from_millis(100));
+        for _ in 0..50 {
+            r.observe("l", Method::DirectSparse, Duration::from_millis(10));
+        }
+        let est = r.estimate("l", Method::DirectSparse).unwrap();
+        assert!(est < Duration::from_millis(12), "{est:?}");
+    }
+
+    #[test]
+    fn exploration_visits_unmeasured_methods() {
+        let r = Router::new(RouterConfig {
+            explore_every: 2,
+            ..Default::default()
+        });
+        let shape = sparse_3x3();
+        r.observe("l", Method::DirectSparse, Duration::from_millis(1));
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..8 {
+            seen.insert(r.choose("l", &shape));
+        }
+        // Must have explored at least one non-best method.
+        assert!(seen.len() >= 2, "{seen:?}");
+    }
+
+    #[test]
+    fn candidates_respect_sparsity() {
+        let r = router();
+        assert_eq!(r.candidates(&dense_3x3()), vec![Method::LoweredGemm]);
+        assert_eq!(r.candidates(&sparse_3x3()).len(), 3);
+    }
+}

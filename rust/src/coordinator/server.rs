@@ -1,0 +1,244 @@
+//! The serving request loop (vLLM-router-style, scaled to this paper):
+//! clients submit single images; a dynamic batcher forms fixed-size
+//! batches; one executor thread owns the PJRT engine (xla handles are not
+//! `Send`, and the CPU client parallelises compute internally) and runs
+//! the AOT **model** artifact; responses fan back out through per-request
+//! channels.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::{Metrics, MetricsSnapshot};
+use crate::conv::ConvWeights;
+use crate::runtime::Engine;
+use crate::tensor::{Dims4, Tensor4};
+use crate::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One inference request: a single CHW image.
+pub struct InferRequest {
+    pub id: u64,
+    /// C*H*W activations.
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+    pub resp: Sender<InferResponse>,
+}
+
+/// The reply: class logits for the image.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// End-to-end latency (submit -> response ready).
+    pub latency: Duration,
+}
+
+/// Server construction parameters.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Artifact directory (must contain manifest.json).
+    pub artifact_dir: std::path::PathBuf,
+    /// Model artifact name, e.g. `minicnn_sconv`.
+    pub artifact: String,
+    pub batcher: BatcherConfig,
+    /// Seed for the synthetic model weights.
+    pub weight_seed: u64,
+}
+
+/// Aggregated post-shutdown statistics.
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    pub snapshot: MetricsSnapshot,
+    pub compile_time: Duration,
+}
+
+/// Handle owned by clients: submit requests, then `shutdown` to join.
+pub struct ServerHandle {
+    tx: Option<Sender<InferRequest>>,
+    executor: Option<std::thread::JoinHandle<anyhow::Result<Duration>>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    image_elems: usize,
+    num_classes: usize,
+}
+
+impl ServerHandle {
+    /// Start the server: spawns the executor thread, which builds the
+    /// engine, compiles the artifact, and materialises model weights.
+    /// Blocks until the executor is ready to serve.
+    pub fn start(cfg: ServerConfig) -> anyhow::Result<Self> {
+        let (tx, rx) = channel::<InferRequest>();
+        let metrics = Arc::new(Metrics::new());
+        let metrics_exec = metrics.clone();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<(usize, usize)>>();
+        let executor = std::thread::Builder::new()
+            .name("escoin-executor".into())
+            .spawn(move || executor_loop(cfg, rx, metrics_exec, ready_tx))?;
+        let (image_elems, num_classes) = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("executor died during startup"))??;
+        Ok(Self {
+            tx: Some(tx),
+            executor: Some(executor),
+            metrics,
+            next_id: AtomicU64::new(0),
+            image_elems,
+            num_classes,
+        })
+    }
+
+    /// Elements one request image must contain (C*H*W).
+    pub fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Submit one image; returns the response channel.
+    pub fn submit(&self, image: Vec<f32>) -> anyhow::Result<Receiver<InferResponse>> {
+        anyhow::ensure!(
+            image.len() == self.image_elems,
+            "image has {} elems, model wants {}",
+            image.len(),
+            self.image_elems
+        );
+        let (resp_tx, resp_rx) = channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            image,
+            submitted: Instant::now(),
+            resp: resp_tx,
+        };
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("server already shut down")
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("executor gone"))?;
+        Ok(resp_rx)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Close the intake, drain, and join the executor.
+    pub fn shutdown(mut self) -> anyhow::Result<ServerStats> {
+        drop(self.tx.take());
+        let compile_time = self
+            .executor
+            .take()
+            .expect("double shutdown")
+            .join()
+            .map_err(|_| anyhow::anyhow!("executor panicked"))??;
+        Ok(ServerStats {
+            snapshot: self.metrics.snapshot(),
+            compile_time,
+        })
+    }
+}
+
+/// Build the weight literal list for the model artifact once at startup.
+fn model_weight_literals(
+    loaded: &crate::runtime::LoadedArtifact,
+    seed: u64,
+) -> anyhow::Result<Vec<xla::Literal>> {
+    let art = &loaded.artifact;
+    anyhow::ensure!(art.kind == "model", "server needs a model artifact");
+    let mut rng = Rng::new(seed);
+    let layers = &art.layers;
+    anyhow::ensure!(layers.len() == 3, "minicnn has 3 conv layers");
+    let convs: Vec<ConvWeights> = layers
+        .iter()
+        .map(|l| ConvWeights::synthetic(l, &mut rng))
+        .collect();
+    let num_classes = *art.output.last().unwrap();
+    let fc_w: Vec<f32> = rng
+        .normal_vec(layers[2].m * num_classes)
+        .iter()
+        .map(|v| v * 0.1)
+        .collect();
+    let fc_b: Vec<f32> = rng.normal_vec(num_classes).iter().map(|v| v * 0.01).collect();
+    loaded.model_weight_literals(&convs, &fc_w, &fc_b)
+}
+
+fn executor_loop(
+    cfg: ServerConfig,
+    rx: Receiver<InferRequest>,
+    metrics: Arc<Metrics>,
+    ready: Sender<anyhow::Result<(usize, usize)>>,
+) -> anyhow::Result<Duration> {
+    // Engine construction happens on this thread: xla handles are !Send.
+    let startup = (|| -> anyhow::Result<_> {
+        let engine = Engine::new(&cfg.artifact_dir)?;
+        let loaded = engine.load(&cfg.artifact)?;
+        let weight_lits = model_weight_literals(&loaded, cfg.weight_seed)?;
+        Ok((engine, loaded, weight_lits))
+    })();
+    let (_engine, loaded, weight_lits) = match startup {
+        Ok(v) => v,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = ready.send(Err(e));
+            anyhow::bail!("startup failed: {msg}");
+        }
+    };
+    let art = &loaded.artifact;
+    let xs = &art.inputs[0].shape; // (B, C, H, W)
+    let (batch_size, c, h, w) = (xs[0], xs[1], xs[2], xs[3]);
+    let image_elems = c * h * w;
+    let num_classes = *art.output.last().unwrap();
+    let _ = ready.send(Ok((image_elems, num_classes)));
+
+    let batcher = Batcher::new(
+        rx,
+        BatcherConfig {
+            batch_size,
+            ..cfg.batcher
+        },
+    );
+
+    while let Some(batch) = batcher.next_batch() {
+        let t_exec = Instant::now();
+        // Assemble the batch tensor, padding unused slots with zeros.
+        let mut x = Tensor4::zeros(Dims4::new(batch_size, c, h, w));
+        for (slot, req) in batch.items.iter().enumerate() {
+            let dst = slot * image_elems;
+            x.data_mut()[dst..dst + image_elems].copy_from_slice(&req.image);
+        }
+        metrics
+            .padded_slots
+            .fetch_add(batch.padding(batch_size) as u64, Ordering::Relaxed);
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+
+        let mut lits = vec![crate::runtime::tensor_to_literal(&x)?];
+        for wl in &weight_lits {
+            lits.push(wl.clone());
+        }
+        match loaded.execute(&lits) {
+            Ok(flat) => {
+                metrics.batch_latency.record(t_exec.elapsed());
+                for (slot, req) in batch.items.into_iter().enumerate() {
+                    let logits =
+                        flat[slot * num_classes..(slot + 1) * num_classes].to_vec();
+                    let latency = req.submitted.elapsed();
+                    metrics.latency.record(latency);
+                    metrics.responses.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.resp.send(InferResponse {
+                        id: req.id,
+                        logits,
+                        latency,
+                    });
+                }
+            }
+            Err(e) => {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!("executor: batch failed: {e:#}");
+            }
+        }
+    }
+    Ok(loaded.compile_time)
+}

@@ -1,0 +1,27 @@
+//! # Escoin — efficient sparse CNN inference
+//!
+//! Reproduction of *"Escoin: Efficient Sparse Convolutional Neural Network
+//! Inference on GPUs"* (Xuhao Chen, 2018) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **L1** (build time): Pallas kernels in `python/compile/kernels/` —
+//!   direct sparse convolution (`sconv`, the paper's contribution) plus the
+//!   lowering baselines (`im2col` + dense `gemm` ≈ cuBLAS, `spmm` ≈
+//!   cuSPARSE) — AOT-lowered to HLO text.
+//! * **L2** (build time): JAX conv-layer/model builders in
+//!   `python/compile/model.py`.
+//! * **L3** (this crate): the serving coordinator, PJRT runtime, native
+//!   reference kernels, GPU memory-hierarchy simulator, and benchmark
+//!   harness that regenerates every table and figure in the paper.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod bench_harness;
+pub mod config;
+pub mod conv;
+pub mod coordinator;
+pub mod runtime;
+pub mod simulator;
+pub mod sparse;
+pub mod tensor;
+pub mod util;

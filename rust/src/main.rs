@@ -1,0 +1,138 @@
+//! `escoin` CLI — leader entrypoint for the serving engine and the
+//! reproduction harness.
+//!
+//! Subcommands:
+//!   summary                       Table 2 + Table 3
+//!   prune <model> [sparsity]      sparsity statistics for a model's filters
+//!   infer [artifact]              one batched inference through PJRT
+//!   serve [n] [artifact]          E2E serving run (batcher + executor)
+//!   simulate [sparsity]           cache simulation of one layer
+//!   figures [--quick|--figN...]   regenerate the paper's tables/figures
+//!
+//! (The offline toolchain has no clap; parsing is by hand.)
+
+use escoin::bench_harness::{table2_platforms, table3_rows};
+use escoin::config::network_by_name;
+use escoin::conv::ConvWeights;
+use escoin::coordinator::{BatcherConfig, ServerConfig, ServerHandle};
+use escoin::runtime::Engine;
+use escoin::sparse::SparsityStats;
+use escoin::tensor::{Dims4, Tensor4};
+use escoin::util::Rng;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("summary") => {
+            print!("{}", table2_platforms().render());
+            println!();
+            print!("{}", table3_rows().render());
+        }
+        Some("prune") => {
+            let model = args.get(1).map(|s| s.as_str()).unwrap_or("alexnet");
+            let net = network_by_name(model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {model:?} (alexnet|googlenet|resnet)"))?;
+            let mut rng = Rng::new(0xE5);
+            println!("{}: per-layer pruned weight statistics", net.name);
+            println!(
+                "{:<28} {:>9} {:>9} {:>9} {:>10} {:>10}",
+                "layer", "rows", "cols", "nnz", "sparsity", "CSR bytes"
+            );
+            for (name, shape) in net.sparse_conv_layers() {
+                let w = ConvWeights::synthetic(shape, &mut rng);
+                let s = SparsityStats::of(&w.csr_bank(0));
+                println!(
+                    "{:<28} {:>9} {:>9} {:>9} {:>9.1}% {:>10}",
+                    name,
+                    s.rows,
+                    s.cols,
+                    s.nnz,
+                    100.0 * s.sparsity,
+                    s.csr_bytes
+                );
+            }
+        }
+        Some("infer") => {
+            let artifact = args
+                .get(1)
+                .cloned()
+                .unwrap_or_else(|| "alexnet_conv3_sconv".to_string());
+            let engine = Engine::new("artifacts")?;
+            let loaded = engine.load(&artifact)?;
+            let shape = loaded
+                .artifact
+                .shape
+                .clone()
+                .ok_or_else(|| anyhow::anyhow!("`infer` wants a layer artifact"))?;
+            let mut rng = Rng::new(1);
+            let x = Tensor4::random_activations(
+                Dims4::new(loaded.artifact.batch, shape.c, shape.h, shape.w),
+                &mut rng,
+            );
+            let w = ConvWeights::synthetic(&shape, &mut rng);
+            let lits = loaded.weight_literals(&w)?;
+            let t0 = Instant::now();
+            let y = loaded.run(&x, &lits)?;
+            println!(
+                "{artifact}: in {} -> out {} in {:?} (compile {:?}) on {}",
+                x.dims(),
+                y.dims(),
+                t0.elapsed(),
+                loaded.compile_time,
+                engine.platform()
+            );
+        }
+        Some("serve") => {
+            let n: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(64);
+            let artifact = args
+                .get(2)
+                .cloned()
+                .unwrap_or_else(|| "minicnn_sconv".to_string());
+            let server = ServerHandle::start(ServerConfig {
+                artifact_dir: "artifacts".into(),
+                artifact,
+                batcher: BatcherConfig {
+                    batch_size: 4,
+                    max_wait: Duration::from_millis(2),
+                },
+                weight_seed: 42,
+            })?;
+            let mut rng = Rng::new(2);
+            let elems = server.image_elems();
+            let t0 = Instant::now();
+            let pending: Vec<_> = (0..n)
+                .map(|_| server.submit(rng.activation_vec(elems)).unwrap())
+                .collect();
+            for rx in pending {
+                rx.recv()?;
+            }
+            let wall = t0.elapsed();
+            let m = server.metrics();
+            println!(
+                "{n} requests in {wall:?} ({:.1} img/s), p50 {:?}, p99 {:?}, {} batches",
+                n as f64 / wall.as_secs_f64(),
+                m.p50_latency,
+                m.p99_latency,
+                m.batches
+            );
+            server.shutdown()?;
+        }
+        Some("simulate") | Some("figures") => {
+            // Delegated to the examples to keep one implementation.
+            eprintln!(
+                "use: cargo run --release --example {} -- {}",
+                if args[0] == "simulate" { "cache_sim" } else { "paper_figures" },
+                args[1..].join(" ")
+            );
+        }
+        _ => {
+            eprintln!(
+                "escoin — sparse CNN inference (reproduction of Chen 2018)\n\
+                 usage: escoin <summary|prune|infer|serve|simulate|figures> [args]\n\
+                 see README.md"
+            );
+        }
+    }
+    Ok(())
+}

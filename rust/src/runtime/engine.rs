@@ -1,0 +1,229 @@
+//! The PJRT execution engine: one CPU client, a compiled-executable cache,
+//! and the weight-array preparation glue between [`crate::conv::ConvWeights`]
+//! and artifact input roles.
+
+use super::literal::{literal_to_vec_f32, vec_to_literal_f32, vec_to_literal_i32};
+use super::manifest::{Artifact, InputRole, Manifest};
+use crate::conv::ConvWeights;
+use crate::tensor::{Dims4, Tensor4};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall time spent in `client.compile` for this artifact.
+    pub compile_time: Duration,
+}
+
+impl LoadedArtifact {
+    /// Execute with already-marshalled literals (order per the manifest).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            inputs.len() == self.artifact.inputs.len(),
+            "artifact {} expects {} inputs, got {}",
+            self.artifact.name,
+            self.artifact.inputs.len(),
+            inputs.len()
+        );
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        literal_to_vec_f32(&out)
+    }
+
+    /// Execute on an activations tensor plus pre-built weight literals.
+    pub fn run(&self, x: &Tensor4, weight_literals: &[xla::Literal]) -> Result<Tensor4> {
+        let d = x.dims();
+        let xs = &self.artifact.inputs[0].shape;
+        anyhow::ensure!(
+            xs == &[d.n, d.c, d.h, d.w],
+            "artifact {} wants x shape {:?}, got {}",
+            self.artifact.name,
+            xs,
+            d
+        );
+        let mut literals = Vec::with_capacity(1 + weight_literals.len());
+        literals.push(super::literal::tensor_to_literal(x)?);
+        for w in weight_literals {
+            literals.push(w.clone());
+        }
+        let flat = self.execute(&literals)?;
+        let o = &self.artifact.output;
+        anyhow::ensure!(o.len() >= 2, "unexpected output rank");
+        let dims = if o.len() == 4 {
+            Dims4::new(o[0], o[1], o[2], o[3])
+        } else {
+            Dims4::new(o[0], o[1], 1, 1)
+        };
+        Ok(Tensor4::from_vec(dims, flat))
+    }
+
+    /// Build the weight literals a *layer* artifact needs from a dense
+    /// filter bank, according to each input's role. (Ungrouped layers —
+    /// the AOT set — have exactly one bank.)
+    pub fn weight_literals(&self, weights: &ConvWeights) -> Result<Vec<xla::Literal>> {
+        let k = *self.artifact.ell_k.first().unwrap_or(&0);
+        let mut out = Vec::new();
+        for spec in &self.artifact.inputs {
+            match spec.role {
+                InputRole::Activations => {}
+                InputRole::WeightsDense => {
+                    out.push(vec_to_literal_f32(&weights.dense, &spec.shape)?);
+                }
+                InputRole::EllValues => {
+                    let ell = &weights.ell_banks_fixed_k(k)[0];
+                    out.push(vec_to_literal_f32(&ell.values, &spec.shape)?);
+                }
+                InputRole::EllColidxStretched => {
+                    let ell = &weights.ell_banks_fixed_k(k)[0];
+                    let idx: Vec<i32> = ell.colidx.iter().map(|&c| c as i32).collect();
+                    out.push(vec_to_literal_i32(&idx, &spec.shape)?);
+                }
+                InputRole::EllColidxCanonical => {
+                    let ell = &weights.ell_banks_canonical_fixed_k(k)[0];
+                    let idx: Vec<i32> = ell.colidx.iter().map(|&c| c as i32).collect();
+                    out.push(vec_to_literal_i32(&idx, &spec.shape)?);
+                }
+                InputRole::Unused => {
+                    let zeros = vec![0i32; spec.elems()];
+                    out.push(vec_to_literal_i32(&zeros, &spec.shape)?);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl LoadedArtifact {
+    /// Build the weight literals for a MiniCNN *model* artifact from the
+    /// three conv banks + classifier weights, following each input spec's
+    /// name/role (`w1|w2|w3` dense, `v2/i2|v3/i3` ELL, `fc_w`, `fc_b`).
+    pub fn model_weight_literals(
+        &self,
+        convs: &[ConvWeights],
+        fc_w: &[f32],
+        fc_b: &[f32],
+    ) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(self.artifact.kind == "model", "not a model artifact");
+        anyhow::ensure!(convs.len() == 3, "minicnn has 3 conv layers");
+        let mut out = Vec::new();
+        for spec in &self.artifact.inputs {
+            let lit = match (spec.name.as_str(), spec.role) {
+                (_, InputRole::Activations) => continue,
+                ("w1", InputRole::WeightsDense) => {
+                    vec_to_literal_f32(&convs[0].dense, &spec.shape)?
+                }
+                ("w2", InputRole::WeightsDense) => {
+                    vec_to_literal_f32(&convs[1].dense, &spec.shape)?
+                }
+                ("w3", InputRole::WeightsDense) => {
+                    vec_to_literal_f32(&convs[2].dense, &spec.shape)?
+                }
+                ("fc_w", InputRole::WeightsDense) => vec_to_literal_f32(fc_w, &spec.shape)?,
+                ("fc_b", InputRole::WeightsDense) => vec_to_literal_f32(fc_b, &spec.shape)?,
+                (name @ ("v2" | "v3"), InputRole::EllValues) => {
+                    let w = if name == "v2" { &convs[1] } else { &convs[2] };
+                    let k = spec.shape[1];
+                    vec_to_literal_f32(&w.ell_banks_fixed_k(k)[0].values, &spec.shape)?
+                }
+                (name @ ("i2" | "i3"), InputRole::EllColidxStretched) => {
+                    let w = if name == "i2" { &convs[1] } else { &convs[2] };
+                    let k = spec.shape[1];
+                    let idx: Vec<i32> = w.ell_banks_fixed_k(k)[0]
+                        .colidx
+                        .iter()
+                        .map(|&c| c as i32)
+                        .collect();
+                    vec_to_literal_i32(&idx, &spec.shape)?
+                }
+                (name @ ("i2" | "i3"), InputRole::EllColidxCanonical) => {
+                    let w = if name == "i2" { &convs[1] } else { &convs[2] };
+                    let k = spec.shape[1];
+                    let idx: Vec<i32> = w.ell_banks_canonical_fixed_k(k)[0]
+                        .colidx
+                        .iter()
+                        .map(|&c| c as i32)
+                        .collect();
+                    vec_to_literal_i32(&idx, &spec.shape)?
+                }
+                (name, role) => anyhow::bail!("unexpected model input {name:?} role {role:?}"),
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+}
+
+/// One PJRT CPU client plus a lazy executable cache keyed by artifact name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedArtifact>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) one artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedArtifact>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let artifact = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.manifest.hlo_path(&artifact);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let loaded = std::sync::Arc::new(LoadedArtifact {
+            artifact,
+            exe,
+            compile_time: t0.elapsed(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Names of all manifest artifacts.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .artifacts
+            .iter()
+            .map(|a| a.name.clone())
+            .collect()
+    }
+}

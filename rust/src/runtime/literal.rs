@@ -1,0 +1,33 @@
+//! Tensor <-> `xla::Literal` marshalling helpers.
+
+use crate::tensor::Tensor4;
+use anyhow::Result;
+
+/// f32 buffer -> literal with the given dims.
+pub fn vec_to_literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape/len mismatch");
+    let flat = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims_i64)?)
+}
+
+/// i32 buffer -> literal with the given dims.
+pub fn vec_to_literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape/len mismatch");
+    let flat = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims_i64)?)
+}
+
+/// NCHW tensor -> rank-4 literal.
+pub fn tensor_to_literal(t: &Tensor4) -> Result<xla::Literal> {
+    let d = t.dims();
+    vec_to_literal_f32(t.data(), &[d.n, d.c, d.h, d.w])
+}
+
+/// Literal -> flat f32 vector.
+pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,266 @@
+//! `artifacts/manifest.json` schema (produced by `python -m compile.aot`).
+
+use crate::config::ConvShape;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// What the runtime must feed into one artifact parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputRole {
+    /// Activations (the request tensor).
+    Activations,
+    /// Dense `(M, C*R*S)` filter matrix (zeros included).
+    WeightsDense,
+    /// ELL values `(M, K)`.
+    EllValues,
+    /// ELL column ids, canonical (into the lowered matrix rows).
+    EllColidxCanonical,
+    /// ELL column ids, weight-stretched (flat padded-image offsets).
+    EllColidxStretched,
+    /// Placeholder kept only for arity uniformity; contents ignored.
+    Unused,
+}
+
+impl InputRole {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "activations" => Self::Activations,
+            "weights_dense" => Self::WeightsDense,
+            "ell_values" => Self::EllValues,
+            "ell_colidx_canonical" => Self::EllColidxCanonical,
+            "ell_colidx_stretched" => Self::EllColidxStretched,
+            "unused" => Self::Unused,
+            other => bail!("unknown input role {other:?}"),
+        })
+    }
+}
+
+/// One artifact parameter.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub role: InputRole,
+    pub shape: Vec<usize>,
+    /// `"f32"` or `"i32"`.
+    pub dtype: String,
+}
+
+impl InputSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    /// `"layer"` or `"model"`.
+    pub kind: String,
+    /// `"gemm"`, `"spmm"`, or `"sconv"`.
+    pub method: String,
+    /// Source layer name (e.g. `alexnet_conv3`) or `minicnn`.
+    pub layer: String,
+    pub batch: usize,
+    /// Layer geometry (`kind == "layer"` only).
+    pub shape: Option<ConvShape>,
+    /// Geometry of every conv layer (`kind == "model"` only).
+    pub layers: Vec<ConvShape>,
+    /// ELL slot budget (0 for the gemm method). For models: one per
+    /// sparse layer.
+    pub ell_k: Vec<usize>,
+    pub inputs: Vec<InputSpec>,
+    pub output: Vec<usize>,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+}
+
+/// The parsed manifest plus its base directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+fn conv_shape_from_json(v: &Json) -> Result<ConvShape> {
+    let get = |k: &str| -> Result<usize> {
+        v.get(k)
+            .as_usize()
+            .ok_or_else(|| anyhow!("shape field {k} missing"))
+    };
+    let sparsity = v.get("sparsity").as_f64().unwrap_or(0.0) as f32;
+    let mut s = ConvShape::new(
+        get("c")?,
+        get("m")?,
+        get("h")?,
+        get("w")?,
+        get("r")?,
+        get("s")?,
+        get("stride")?,
+        get("pad")?,
+    );
+    if sparsity > 0.0 {
+        s = s.with_sparsity(sparsity);
+    }
+    Ok(s)
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let root = Json::parse(text).context("manifest.json malformed")?;
+        let version = root.get("version").as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest has no artifacts array"))?
+        {
+            let name = a
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let kind = a.get("kind").as_str().unwrap_or("layer").to_string();
+            let shape = match a.get("shape") {
+                Json::Null => None,
+                v => Some(conv_shape_from_json(v)?),
+            };
+            let layers = match a.get("layers").as_arr() {
+                Some(items) => items
+                    .iter()
+                    .map(conv_shape_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                None => Vec::new(),
+            };
+            let ell_k = match a.get("ell_k") {
+                Json::Num(n) => vec![*n as usize],
+                Json::Arr(items) => items.iter().filter_map(|v| v.as_usize()).collect(),
+                _ => vec![],
+            };
+            let mut inputs = Vec::new();
+            for i in a
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("artifact {name} missing inputs"))?
+            {
+                inputs.push(InputSpec {
+                    name: i
+                        .get("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("input missing name"))?
+                        .to_string(),
+                    role: InputRole::parse(i.get("role").as_str().unwrap_or("activations"))?,
+                    shape: i
+                        .get("shape")
+                        .usize_vec()
+                        .ok_or_else(|| anyhow!("input missing shape"))?,
+                    dtype: i.get("dtype").as_str().unwrap_or("f32").to_string(),
+                });
+            }
+            artifacts.push(Artifact {
+                name,
+                kind,
+                method: a.get("method").as_str().unwrap_or("").to_string(),
+                layer: a.get("layer").as_str().unwrap_or("").to_string(),
+                batch: a.get("batch").as_usize().unwrap_or(1),
+                shape,
+                layers,
+                ell_k,
+                inputs,
+                output: a
+                    .get("output")
+                    .usize_vec()
+                    .ok_or_else(|| anyhow!("artifact missing output shape"))?,
+                file: a.get("file").as_str().unwrap_or("").to_string(),
+            });
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts of one layer (one per method).
+    pub fn for_layer(&self, layer: &str) -> Vec<&Artifact> {
+        self.artifacts.iter().filter(|a| a.layer == layer).collect()
+    }
+
+    pub fn hlo_path(&self, a: &Artifact) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {
+          "name": "alexnet_conv3_sconv", "kind": "layer", "method": "sconv",
+          "layer": "alexnet_conv3", "batch": 2,
+          "shape": {"c": 32, "m": 48, "h": 13, "w": 13, "r": 3, "s": 3,
+                     "stride": 1, "pad": 1, "sparsity": 0.88},
+          "ell_k": 40,
+          "inputs": [
+            {"name": "x", "role": "activations", "shape": [2,32,13,13], "dtype": "f32"},
+            {"name": "values", "role": "ell_values", "shape": [48,40], "dtype": "f32"},
+            {"name": "colidx", "role": "ell_colidx_stretched", "shape": [48,40], "dtype": "i32"}
+          ],
+          "output": [2,48,13,13],
+          "file": "alexnet_conv3_sconv.hlo.txt"
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_layer_artifact() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("alexnet_conv3_sconv").unwrap();
+        assert_eq!(a.method, "sconv");
+        assert_eq!(a.batch, 2);
+        let s = a.shape.as_ref().unwrap();
+        assert_eq!((s.c, s.m, s.r), (32, 48, 3));
+        assert!((s.sparsity - 0.88).abs() < 1e-6);
+        assert_eq!(a.ell_k, vec![40]);
+        assert_eq!(a.inputs[2].role, InputRole::EllColidxStretched);
+        assert_eq!(a.inputs[1].elems(), 48 * 40);
+        assert_eq!(m.hlo_path(a), PathBuf::from("/tmp/a/alexnet_conv3_sconv.hlo.txt"));
+    }
+
+    #[test]
+    fn for_layer_groups_methods() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert_eq!(m.for_layer("alexnet_conv3").len(), 1);
+        assert!(m.for_layer("nope").is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_role() {
+        let bad = SAMPLE.replace("ell_colidx_stretched", "mystery_role");
+        assert!(Manifest::parse(&bad, PathBuf::from(".")).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The build path (`make artifacts`) runs `python -m compile.aot`, which
+//! lowers every layer/model executable to `artifacts/*.hlo.txt` plus a
+//! `manifest.json` describing shapes, dtypes, and weight-array roles.
+//! This module is the serve-time half: it parses the manifest
+//! ([`manifest`]), compiles each HLO module once on the PJRT CPU client,
+//! caches the executables ([`engine`]), and marshals tensors in/out
+//! ([`literal`]). Python never runs here.
+
+mod engine;
+mod literal;
+mod manifest;
+
+pub use engine::{Engine, LoadedArtifact};
+pub use literal::{literal_to_vec_f32, tensor_to_literal, vec_to_literal_f32, vec_to_literal_i32};
+pub use manifest::{Artifact, InputRole, InputSpec, Manifest};

@@ -1,0 +1,48 @@
+//! Warp memory coalescing (paper §3.2).
+//!
+//! "If consecutive threads in a warp access consecutive memory locations,
+//! the memory requests are coalesced into one or several memory
+//! transactions" — this module is that rule: 32 lane addresses collapse
+//! into the set of distinct line-sized transactions.
+
+/// Collapse a warp's per-lane byte addresses into distinct line addresses
+/// (sorted). `line_bytes` must be a power of two.
+pub fn coalesce_warp(lane_addrs: &[u64], line_bytes: usize) -> Vec<u64> {
+    debug_assert!(line_bytes.is_power_of_two());
+    let mask = !(line_bytes as u64 - 1);
+    let mut lines: Vec<u64> = lane_addrs.iter().map(|&a| a & mask).collect();
+    lines.sort_unstable();
+    lines.dedup();
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_f32_lanes_coalesce_to_one_transaction() {
+        // 32 lanes x 4B contiguous = 128B = one 128B line.
+        let addrs: Vec<u64> = (0..32).map(|i| 4096 + i * 4).collect();
+        assert_eq!(coalesce_warp(&addrs, 128), vec![4096]);
+    }
+
+    #[test]
+    fn strided_lanes_explode_into_many_transactions() {
+        // Stride-128B lanes: every lane its own line — full divergence.
+        let addrs: Vec<u64> = (0..32).map(|i| i * 128).collect();
+        assert_eq!(coalesce_warp(&addrs, 128).len(), 32);
+    }
+
+    #[test]
+    fn identical_lanes_are_one_transaction() {
+        let addrs = vec![512u64; 32];
+        assert_eq!(coalesce_warp(&addrs, 128), vec![512 & !127]);
+    }
+
+    #[test]
+    fn misaligned_contiguous_range_spans_two_lines() {
+        let addrs: Vec<u64> = (0..32).map(|i| 100 + i * 4).collect();
+        assert_eq!(coalesce_warp(&addrs, 128).len(), 2);
+    }
+}

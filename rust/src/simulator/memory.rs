@@ -1,0 +1,234 @@
+//! The modelled hierarchy: read-only caches (per SM) -> shared L2 ->
+//! DRAM, with per-stream accounting (paper Fig 10 reports texture and L2
+//! hit rates).
+
+use super::cache::{Cache, CacheConfig, CacheStats};
+use super::coalesce::coalesce_warp;
+
+/// How a memory access is routed — mirrors the paper's §3.3 data
+/// placement: inputs through the read-only (texture) cache, weights via
+/// ordinary global loads (they are staged to shared memory once per
+/// block), outputs written back through L2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    /// Read-only data (`__ldg`/texture path): RO cache, then L2.
+    ReadOnly,
+    /// Plain global read: L2 only.
+    GlobalRead,
+    /// Global write: L2 only (write-allocate).
+    GlobalWrite,
+}
+
+/// P100-like geometry (Table 2 platform): 24 KiB read-only cache per SM,
+/// 4 MiB L2, 32 B RO lines / 128 B L2 lines (sectored transactions are
+/// modelled at line granularity).
+pub const P100_GEOMETRY: (CacheConfig, CacheConfig) = (
+    CacheConfig {
+        size_bytes: 24 * 1024,
+        line_bytes: 32,
+        ways: 8,
+    },
+    CacheConfig {
+        size_bytes: 4 * 1024 * 1024,
+        line_bytes: 128,
+        ways: 16,
+    },
+);
+
+/// Simulated SM count. Thread blocks distribute round-robin over the SMs
+/// (each with its own read-only cache); the interleaved miss streams meet
+/// at the shared L2 — this is what gives shared input data its cross-SM
+/// L2 reuse on the real chip. A handful of SMs is enough to expose the
+/// effect; simulating all 56 P100 SMs would only shrink per-SM traffic.
+pub const NUM_SM: usize = 4;
+
+/// Per-run report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemoryReport {
+    pub ro: CacheStats,
+    pub l2: CacheStats,
+    /// Bytes fetched from DRAM (L2 miss fills + write allocates).
+    pub dram_bytes: u64,
+    /// Warp-level transactions issued (after coalescing).
+    pub transactions: u64,
+}
+
+impl MemoryReport {
+    pub fn ro_hit_rate(&self) -> f64 {
+        self.ro.hit_rate()
+    }
+    pub fn l2_hit_rate(&self) -> f64 {
+        self.l2.hit_rate()
+    }
+}
+
+/// Several SMs' read-only caches in front of one chip-wide L2.
+pub struct MemoryHierarchy {
+    ro: Vec<Cache>,
+    l2: Cache,
+    dram_bytes: u64,
+    transactions: u64,
+}
+
+impl Default for MemoryHierarchy {
+    fn default() -> Self {
+        Self::p100()
+    }
+}
+
+impl MemoryHierarchy {
+    pub fn new(ro_cfg: CacheConfig, l2_cfg: CacheConfig) -> Self {
+        Self {
+            ro: (0..NUM_SM).map(|_| Cache::new(ro_cfg)).collect(),
+            l2: Cache::new(l2_cfg),
+            dram_bytes: 0,
+            transactions: 0,
+        }
+    }
+
+    pub fn p100() -> Self {
+        Self::new(P100_GEOMETRY.0, P100_GEOMETRY.1)
+    }
+
+    /// Issue one warp access from a thread block mapped to SM `sm`.
+    pub fn warp_access_on(&mut self, sm: usize, lane_addrs: &[u64], kind: AccessKind) {
+        let sm = sm % self.ro.len();
+        let line = match kind {
+            AccessKind::ReadOnly => self.ro[sm].config().line_bytes,
+            _ => self.l2.config().line_bytes,
+        };
+        for tx in coalesce_warp(lane_addrs, line) {
+            self.transactions += 1;
+            match kind {
+                AccessKind::ReadOnly => {
+                    if !self.ro[sm].access(tx) {
+                        // RO miss falls through to the shared L2.
+                        if !self.l2.access(tx) {
+                            self.dram_bytes += self.l2.config().line_bytes as u64;
+                        }
+                    }
+                }
+                AccessKind::GlobalRead | AccessKind::GlobalWrite => {
+                    if !self.l2.access(tx) {
+                        self.dram_bytes += self.l2.config().line_bytes as u64;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Warp access on SM 0 (single-SM convenience).
+    pub fn warp_access(&mut self, lane_addrs: &[u64], kind: AccessKind) {
+        self.warp_access_on(0, lane_addrs, kind);
+    }
+
+    /// Scalar convenience (single lane, SM 0).
+    pub fn access(&mut self, addr: u64, kind: AccessKind) {
+        self.warp_access_on(0, &[addr], kind);
+    }
+
+    /// New kernel launch on the same chip: the RO caches (per SM,
+    /// per-launch) flush; L2 persists across kernels in a stream.
+    pub fn kernel_boundary(&mut self) {
+        for ro in &mut self.ro {
+            ro.flush();
+        }
+    }
+
+    pub fn report(&self) -> MemoryReport {
+        let mut ro = CacheStats::default();
+        for c in &self.ro {
+            ro.hits += c.stats().hits;
+            ro.misses += c.stats().misses;
+        }
+        MemoryReport {
+            ro,
+            l2: self.l2.stats(),
+            dram_bytes: self.dram_bytes,
+            transactions: self.transactions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> MemoryHierarchy {
+        MemoryHierarchy::new(
+            CacheConfig {
+                size_bytes: 1024,
+                line_bytes: 32,
+                ways: 4,
+            },
+            CacheConfig {
+                size_bytes: 16 * 1024,
+                line_bytes: 128,
+                ways: 8,
+            },
+        )
+    }
+
+    #[test]
+    fn readonly_reuse_hits_in_ro_cache() {
+        let mut m = small();
+        let addrs: Vec<u64> = (0..32).map(|i| i * 4).collect();
+        m.warp_access(&addrs, AccessKind::ReadOnly);
+        m.warp_access(&addrs, AccessKind::ReadOnly);
+        let r = m.report();
+        assert!(r.ro.hits > 0);
+        assert_eq!(r.ro.hits, r.ro.misses); // second pass all hits
+    }
+
+    #[test]
+    fn global_reads_bypass_ro_cache() {
+        let mut m = small();
+        m.access(0, AccessKind::GlobalRead);
+        let r = m.report();
+        assert_eq!(r.ro.accesses(), 0);
+        assert_eq!(r.l2.accesses(), 1);
+    }
+
+    #[test]
+    fn dram_traffic_counts_l2_miss_fills() {
+        let mut m = small();
+        m.access(0, AccessKind::GlobalRead);
+        m.access(0, AccessKind::GlobalRead);
+        let r = m.report();
+        assert_eq!(r.dram_bytes, 128); // one fill
+    }
+
+    #[test]
+    fn kernel_boundary_flushes_ro_not_l2() {
+        let mut m = small();
+        m.access(0, AccessKind::ReadOnly);
+        m.kernel_boundary();
+        m.access(0, AccessKind::ReadOnly);
+        let r = m.report();
+        assert_eq!(r.ro.hits, 0); // RO flushed between kernels
+        assert_eq!(r.l2.hits, 1); // L2 retained the line
+    }
+
+    #[test]
+    fn transactions_reflect_coalescing() {
+        let mut m = small();
+        let contiguous: Vec<u64> = (0..32).map(|i| i * 4).collect();
+        m.warp_access(&contiguous, AccessKind::GlobalRead);
+        let divergent: Vec<u64> = (0..32).map(|i| i * 4096).collect();
+        m.warp_access(&divergent, AccessKind::GlobalRead);
+        let r = m.report();
+        assert_eq!(r.transactions, 1 + 32);
+    }
+
+    #[test]
+    fn sms_have_private_ro_caches_but_shared_l2() {
+        let mut m = small();
+        let addrs: Vec<u64> = (0..32).map(|i| i * 4).collect();
+        m.warp_access_on(0, &addrs, AccessKind::ReadOnly);
+        // Same data from another SM: RO misses again, but L2 hits.
+        m.warp_access_on(1, &addrs, AccessKind::ReadOnly);
+        let r = m.report();
+        assert_eq!(r.ro.hits, 0);
+        assert!(r.l2.hits > 0);
+    }
+}

@@ -1,0 +1,31 @@
+//! GPU memory-hierarchy simulator — the Fig 10 substrate.
+//!
+//! The paper measures texture (read-only) and L2 cache hit rates of the
+//! `csrmm` and `sconv` CUDA kernels with nvprof on a Tesla P100. Without
+//! the GPU, we *simulate* the memory behaviour (DESIGN.md §7): the
+//! kernels' exact access streams are replayed through a two-level cache
+//! model with warp coalescing:
+//!
+//! * [`coalesce`] — 32-lane warp accesses collapse into line-sized
+//!   transactions (the paper's §3.2 coalescing argument, made executable).
+//! * [`cache`]    — set-associative LRU caches with P100-like geometry.
+//! * [`memory`]   — read-only cache -> L2 -> DRAM hierarchy with
+//!   per-stream accounting.
+//! * [`trace`]    — address-stream generators that walk the same loop
+//!   structures as the real kernels (`sconv`, `csrmm`, `sgemm`, `im2col`).
+//!
+//! The claim under test is *relative*: Escoin's direct sparse convolution
+//! must show substantially higher read-only-cache and L2 hit rates than
+//! the lowered csrmm on the same layers, because the lowered matrix
+//! duplicates the input R*S times while sconv re-reads the compact padded
+//! image through overlapping windows.
+
+pub mod cache;
+pub mod coalesce;
+pub mod memory;
+pub mod trace;
+
+pub use cache::{Cache, CacheConfig, CacheStats};
+pub use coalesce::coalesce_warp;
+pub use memory::{AccessKind, MemoryHierarchy, MemoryReport, P100_GEOMETRY};
+pub use trace::{trace_csrmm, trace_im2col, trace_sconv, trace_sgemm, KernelTrace};

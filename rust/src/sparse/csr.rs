@@ -1,0 +1,204 @@
+//! Compressed Sparse Row matrices, exactly as the paper's Fig 4:
+//! `value` (nnz floats), `colidx` (nnz column ids), `rowptr` (rows+1).
+
+
+
+/// A CSR matrix of `f32` values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub values: Vec<f32>,
+    pub colidx: Vec<u32>,
+    pub rowptr: Vec<u32>,
+}
+
+impl CsrMatrix {
+    /// Build from a dense row-major matrix, keeping every nonzero.
+    pub fn from_dense(rows: usize, cols: usize, dense: &[f32]) -> Self {
+        assert_eq!(dense.len(), rows * cols);
+        let mut values = Vec::new();
+        let mut colidx = Vec::new();
+        let mut rowptr = Vec::with_capacity(rows + 1);
+        rowptr.push(0u32);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = dense[r * cols + c];
+                if v != 0.0 {
+                    values.push(v);
+                    colidx.push(c as u32);
+                }
+            }
+            rowptr.push(values.len() as u32);
+        }
+        Self {
+            rows,
+            cols,
+            values,
+            colidx,
+            rowptr,
+        }
+    }
+
+    /// Expand back to a dense row-major matrix.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            for j in self.row_range(r) {
+                out[r * self.cols + self.colidx[j] as usize] = self.values[j];
+            }
+        }
+        out
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Index range of row `r` into `values`/`colidx`.
+    #[inline(always)]
+    pub fn row_range(&self, r: usize) -> std::ops::Range<usize> {
+        self.rowptr[r] as usize..self.rowptr[r + 1] as usize
+    }
+
+    /// Nonzeros in row `r`.
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.rowptr[r + 1] - self.rowptr[r]) as usize
+    }
+
+    /// The largest row population — the ELL padding factor `Kmax`.
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.rows).map(|r| self.row_nnz(r)).max().unwrap_or(0)
+    }
+
+    /// Sparsity = fraction of zero cells (paper §2.3 definition).
+    pub fn sparsity(&self) -> f64 {
+        let total = (self.rows * self.cols) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / total
+    }
+
+    /// Bytes consumed by the compressed form — the paper's §2.3 formula
+    /// `(2*nnz + M + 1) * 4`.
+    pub fn memory_bytes(&self) -> usize {
+        (2 * self.nnz() + self.rows + 1) * 4
+    }
+
+    /// Bytes the dense form would consume.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    /// Iterate `(row, col, value)` triplets in row-major order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, f32)> + '_ {
+        (0..self.rows).flat_map(move |r| {
+            self.row_range(r)
+                .map(move |j| (r, self.colidx[j] as usize, self.values[j]))
+        })
+    }
+
+    /// Internal consistency check (monotone rowptr, in-range colidx,
+    /// no explicit zeros). Used by property tests and debug assertions.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rowptr.len() != self.rows + 1 {
+            return Err(format!("rowptr len {} != rows+1", self.rowptr.len()));
+        }
+        if self.rowptr[0] != 0 || *self.rowptr.last().unwrap() as usize != self.nnz() {
+            return Err("rowptr endpoints wrong".into());
+        }
+        if self.rowptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("rowptr not monotone".into());
+        }
+        if self.colidx.len() != self.values.len() {
+            return Err("colidx/values length mismatch".into());
+        }
+        if self.colidx.iter().any(|&c| c as usize >= self.cols) {
+            return Err("colidx out of range".into());
+        }
+        if self.values.iter().any(|&v| v == 0.0) {
+            return Err("explicit zero stored".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exact matrix from the paper's Fig 4.
+    fn fig4() -> (usize, usize, Vec<f32>) {
+        let dense = vec![
+            10., 20., 0., 0., 0., 0., //
+            0., 30., 0., 40., 0., 0., //
+            0., 0., 50., 60., 70., 0., //
+            0., 0., 0., 0., 0., 80.,
+        ];
+        (4, 6, dense)
+    }
+
+    #[test]
+    fn fig4_arrays_match_paper() {
+        let (r, c, dense) = fig4();
+        let m = CsrMatrix::from_dense(r, c, &dense);
+        assert_eq!(m.values, vec![10., 20., 30., 40., 50., 60., 70., 80.]);
+        assert_eq!(m.colidx, vec![0, 1, 1, 3, 2, 3, 4, 5]);
+        assert_eq!(m.rowptr, vec![0, 2, 4, 7, 8]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let (r, c, dense) = fig4();
+        let m = CsrMatrix::from_dense(r, c, &dense);
+        assert_eq!(m.to_dense(), dense);
+    }
+
+    #[test]
+    fn row_helpers() {
+        let (r, c, dense) = fig4();
+        let m = CsrMatrix::from_dense(r, c, &dense);
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(2), 3);
+        assert_eq!(m.max_row_nnz(), 3);
+        assert_eq!(m.row_range(2), 4..7);
+    }
+
+    #[test]
+    fn memory_formula_from_paper() {
+        let (r, c, dense) = fig4();
+        let m = CsrMatrix::from_dense(r, c, &dense);
+        // (2*8 + 4 + 1) * 4 = 84 bytes.
+        assert_eq!(m.memory_bytes(), 84);
+        assert_eq!(m.dense_bytes(), 96);
+    }
+
+    #[test]
+    fn sparsity_definition() {
+        let (r, c, dense) = fig4();
+        let m = CsrMatrix::from_dense(r, c, &dense);
+        assert!((m.sparsity() - (1.0 - 8.0 / 24.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = CsrMatrix::from_dense(3, 4, &vec![0.0; 12]);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.max_row_nnz(), 0);
+        m.validate().unwrap();
+        assert_eq!(m.to_dense(), vec![0.0; 12]);
+    }
+
+    #[test]
+    fn iter_triplets() {
+        let (r, c, dense) = fig4();
+        let m = CsrMatrix::from_dense(r, c, &dense);
+        let trips: Vec<_> = m.iter().collect();
+        assert_eq!(trips[0], (0, 0, 10.0));
+        assert_eq!(trips[7], (3, 5, 80.0));
+        assert_eq!(trips.len(), 8);
+    }
+}

@@ -1,0 +1,188 @@
+//! ELLPACK format: every row padded to the same nonzero count.
+//!
+//! The paper's CUDA kernel walks CSR rows with dynamic `rowptr` bounds; the
+//! TPU adaptation (DESIGN.md §6) needs a *static* inner trip count, so rows
+//! are padded to `k = max_row_nnz` with `value = 0` entries whose column
+//! index points at a safe (in-range) location. The wasted MACs are
+//! multiplications by zero — numerically inert.
+
+use super::CsrMatrix;
+
+
+/// An ELLPACK matrix: `rows x k` slots stored row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EllMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Slots per row (`Kmax`, possibly rounded up for alignment).
+    pub k: usize,
+    /// `rows * k` values; padding slots hold `0.0`.
+    pub values: Vec<f32>,
+    /// `rows * k` column indices; padding slots hold `0` (safe, in-range).
+    pub colidx: Vec<u32>,
+}
+
+impl EllMatrix {
+    /// Convert from CSR, padding every row to `max_row_nnz` rounded up to a
+    /// multiple of `align` (use `align = 1` for tight packing; the Pallas
+    /// kernel prefers multiples of 8 so the nnz loop tiles evenly).
+    pub fn from_csr(csr: &CsrMatrix, align: usize) -> Self {
+        assert!(align > 0);
+        let kmax = csr.max_row_nnz();
+        let k = if kmax == 0 {
+            align
+        } else {
+            kmax.div_ceil(align) * align
+        };
+        let mut values = vec![0.0f32; csr.rows * k];
+        let mut colidx = vec![0u32; csr.rows * k];
+        for r in 0..csr.rows {
+            for (slot, j) in csr.row_range(r).enumerate() {
+                values[r * k + slot] = csr.values[j];
+                colidx[r * k + slot] = csr.colidx[j];
+            }
+        }
+        Self {
+            rows: csr.rows,
+            cols: csr.cols,
+            k,
+            values,
+            colidx,
+        }
+    }
+
+    /// Convert from CSR with an externally fixed slot count `k` — used
+    /// when the slot budget comes from an AOT artifact's manifest and the
+    /// runtime must produce arrays of exactly that shape. Panics if any
+    /// row exceeds `k` (the manifest contract guarantees the fit for
+    /// per-row-pruned weights).
+    pub fn from_csr_fixed_k(csr: &CsrMatrix, k: usize) -> Self {
+        assert!(
+            csr.max_row_nnz() <= k,
+            "row with {} nonzeros exceeds manifest ELL k={}",
+            csr.max_row_nnz(),
+            k
+        );
+        let mut values = vec![0.0f32; csr.rows * k];
+        let mut colidx = vec![0u32; csr.rows * k];
+        for r in 0..csr.rows {
+            for (slot, j) in csr.row_range(r).enumerate() {
+                values[r * k + slot] = csr.values[j];
+                colidx[r * k + slot] = csr.colidx[j];
+            }
+        }
+        Self {
+            rows: csr.rows,
+            cols: csr.cols,
+            k,
+            values,
+            colidx,
+        }
+    }
+
+    /// Expand to dense row-major (padding slots contribute nothing).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            for s in 0..self.k {
+                let v = self.values[r * self.k + s];
+                if v != 0.0 {
+                    out[r * self.cols + self.colidx[r * self.k + s] as usize] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Stored slots (including padding).
+    pub fn slots(&self) -> usize {
+        self.rows * self.k
+    }
+
+    /// True nonzeros (padding excluded).
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Padding overhead: slots / nnz. 1.0 = no waste. The ablation bench
+    /// `ablation_sparsity` sweeps this against sparsity level.
+    pub fn padding_overhead(&self) -> f64 {
+        let nnz = self.nnz();
+        if nnz == 0 {
+            return f64::INFINITY;
+        }
+        self.slots() as f64 / nnz as f64
+    }
+
+    /// Value row `r` (length `k`).
+    pub fn value_row(&self, r: usize) -> &[f32] {
+        &self.values[r * self.k..(r + 1) * self.k]
+    }
+
+    /// Column-index row `r` (length `k`).
+    pub fn colidx_row(&self, r: usize) -> &[u32] {
+        &self.colidx[r * self.k..(r + 1) * self.k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig4_csr() -> CsrMatrix {
+        let dense = vec![
+            10., 20., 0., 0., 0., 0., //
+            0., 30., 0., 40., 0., 0., //
+            0., 0., 50., 60., 70., 0., //
+            0., 0., 0., 0., 0., 80.,
+        ];
+        CsrMatrix::from_dense(4, 6, &dense)
+    }
+
+    #[test]
+    fn from_csr_tight() {
+        let e = EllMatrix::from_csr(&fig4_csr(), 1);
+        assert_eq!(e.k, 3); // row 2 has 3 nonzeros
+        assert_eq!(e.value_row(0), &[10., 20., 0.]);
+        assert_eq!(e.value_row(2), &[50., 60., 70.]);
+        assert_eq!(e.colidx_row(2), &[2, 3, 4]);
+        assert_eq!(e.nnz(), 8);
+    }
+
+    #[test]
+    fn from_csr_aligned() {
+        let e = EllMatrix::from_csr(&fig4_csr(), 8);
+        assert_eq!(e.k, 8);
+        assert_eq!(e.slots(), 32);
+        assert_eq!(e.nnz(), 8);
+        assert_eq!(e.padding_overhead(), 4.0);
+    }
+
+    #[test]
+    fn dense_roundtrip_through_ell() {
+        let csr = fig4_csr();
+        let e = EllMatrix::from_csr(&csr, 4);
+        assert_eq!(e.to_dense(), csr.to_dense());
+    }
+
+    #[test]
+    fn empty_rows_are_all_padding() {
+        let dense = vec![0., 0., 1., 0., 0., 0.];
+        let csr = CsrMatrix::from_dense(3, 2, &dense);
+        let e = EllMatrix::from_csr(&csr, 1);
+        assert_eq!(e.k, 1);
+        assert_eq!(e.value_row(0), &[0.0]);
+        assert_eq!(e.value_row(1), &[1.0]);
+        assert_eq!(e.value_row(2), &[0.0]);
+        assert_eq!(e.to_dense(), dense);
+    }
+
+    #[test]
+    fn all_zero_matrix_gets_min_k() {
+        let csr = CsrMatrix::from_dense(2, 3, &vec![0.0; 6]);
+        let e = EllMatrix::from_csr(&csr, 8);
+        assert_eq!(e.k, 8);
+        assert_eq!(e.nnz(), 0);
+        assert_eq!(e.to_dense(), vec![0.0; 6]);
+    }
+}

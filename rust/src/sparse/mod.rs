@@ -1,0 +1,15 @@
+//! Sparse weight handling: CSR (paper Fig 4), ELLPACK (our TPU-friendly
+//! padded variant), magnitude pruning (produces the pruned models), and
+//! weight stretching (paper §3.1).
+
+mod csr;
+mod ell;
+mod prune;
+mod stats;
+mod stretch;
+
+pub use csr::CsrMatrix;
+pub use ell::EllMatrix;
+pub use prune::{prune_magnitude, prune_magnitude_per_row, prune_random, prune_to_exact_nnz};
+pub use stats::{row_nnz_histogram, RowImbalance, SparsityStats};
+pub use stretch::{stretch_weights, StretchedFilter};

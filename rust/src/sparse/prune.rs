@@ -1,0 +1,184 @@
+//! Magnitude weight pruning (Han et al. [19], the technique the paper's
+//! pruned models come from). We prune synthetically-initialised weights to
+//! the per-layer sparsity levels of the SkimCaffe checkpoints (DESIGN.md
+//! §7): Escoin's runtime behaviour depends on nnz structure, not trained
+//! values.
+
+use crate::util::Rng;
+
+/// Zero out the smallest-magnitude weights until `sparsity` of the tensor
+/// is zero. Operates in place on a dense buffer; returns the achieved nnz.
+///
+/// Uses an exact k-th order statistic (select_nth_unstable), so the
+/// achieved sparsity matches the request to within one element.
+pub fn prune_magnitude(weights: &mut [f32], sparsity: f32) -> usize {
+    assert!((0.0..1.0).contains(&sparsity), "sparsity {sparsity}");
+    let n = weights.len();
+    let zeros = (n as f64 * sparsity as f64).round() as usize;
+    if zeros == 0 {
+        return n;
+    }
+    let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    let (_, threshold, _) = mags.select_nth_unstable_by(zeros - 1, |a, b| a.partial_cmp(b).unwrap());
+    let threshold = *threshold;
+    // Zero everything strictly below the threshold, then zero ties until
+    // the exact count is reached (ties are rare with float weights but the
+    // property tests exercise them).
+    let mut zeroed = 0;
+    for w in weights.iter_mut() {
+        if w.abs() < threshold && *w != 0.0 {
+            *w = 0.0;
+            zeroed += 1;
+        } else if *w == 0.0 {
+            zeroed += 1;
+        }
+    }
+    if zeroed < zeros {
+        for w in weights.iter_mut() {
+            if zeroed == zeros {
+                break;
+            }
+            if *w != 0.0 && w.abs() == threshold {
+                *w = 0.0;
+                zeroed += 1;
+            }
+        }
+    }
+    n - zeros
+}
+
+/// Per-row magnitude pruning of a row-major `rows x cols` matrix: every
+/// row keeps its `cols - round(cols*sparsity)` largest-magnitude entries.
+///
+/// This is the pruning model for all synthetic filter banks (matching
+/// `python/compile/configs.py::prune_per_row`): statistically equivalent
+/// to global pruning for i.i.d. weights, and it gives the exact static
+/// per-row population the ELL/TPU format requires (DESIGN.md §6).
+pub fn prune_magnitude_per_row(weights: &mut [f32], cols: usize, sparsity: f32) -> usize {
+    assert!(cols > 0 && weights.len() % cols == 0);
+    let mut nnz = 0;
+    for row in weights.chunks_mut(cols) {
+        nnz += prune_magnitude(row, sparsity);
+    }
+    nnz
+}
+
+/// Prune to an exact nonzero count (used when a test needs a specific nnz).
+pub fn prune_to_exact_nnz(weights: &mut [f32], nnz: usize) -> usize {
+    let n = weights.len();
+    assert!(nnz <= n);
+    if nnz == n {
+        return n;
+    }
+    let sparsity = (n - nnz) as f32 / n as f32;
+    // prune_magnitude rounds; fix up any off-by-one by zeroing extra
+    // smallest values or leaving one extra nonzero.
+    prune_magnitude(weights, sparsity.min(0.999_999));
+    let mut live: Vec<(usize, f32)> = weights
+        .iter()
+        .enumerate()
+        .filter(|(_, &w)| w != 0.0)
+        .map(|(i, &w)| (i, w.abs()))
+        .collect();
+    while live.len() > nnz {
+        let (pos, _) = live
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+            .map(|(p, &(i, m))| (p, (i, m)))
+            .unwrap();
+        let (idx, _) = live.remove(pos);
+        weights[idx] = 0.0;
+    }
+    live.len()
+}
+
+/// Random (unstructured) pruning — used by ablations to decouple the
+/// magnitude criterion from the sparsity pattern.
+pub fn prune_random(weights: &mut [f32], sparsity: f32, rng: &mut Rng) -> usize {
+    assert!((0.0..1.0).contains(&sparsity));
+    let n = weights.len();
+    let zeros = (n as f64 * sparsity as f64).round() as usize;
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    for &i in idx.iter().take(zeros) {
+        weights[i] = 0.0;
+    }
+    n - zeros
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn prunes_to_requested_sparsity() {
+        let mut rng = Rng::new(11);
+        let mut w = rng.normal_vec(10_000);
+        prune_magnitude(&mut w, 0.85);
+        let nnz = w.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nnz, 1500);
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let mut w = vec![0.1, -5.0, 0.2, 3.0, -0.05, 1.0];
+        prune_magnitude(&mut w, 0.5);
+        assert_eq!(w, vec![0.0, -5.0, 0.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn zero_sparsity_is_noop() {
+        let mut w = vec![1.0, -2.0, 0.5];
+        let orig = w.clone();
+        assert_eq!(prune_magnitude(&mut w, 0.0), 3);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn handles_ties_exactly() {
+        let mut w = vec![1.0f32; 8];
+        prune_magnitude(&mut w, 0.5);
+        assert_eq!(w.iter().filter(|&&x| x != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn preexisting_zeros_count_toward_budget() {
+        let mut w = vec![0.0, 0.0, 3.0, 4.0];
+        prune_magnitude(&mut w, 0.5);
+        let nnz = w.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nnz, 2);
+        assert_eq!(&w[2..], &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn per_row_gives_static_row_population() {
+        let mut rng = Rng::new(21);
+        let (rows, cols) = (32, 288);
+        let mut w = rng.normal_vec(rows * cols);
+        prune_magnitude_per_row(&mut w, cols, 0.88);
+        let want = cols - (cols as f64 * 0.88).round() as usize;
+        for row in w.chunks(cols) {
+            assert_eq!(row.iter().filter(|&&x| x != 0.0).count(), want);
+        }
+    }
+
+    #[test]
+    fn exact_nnz() {
+        let mut rng = Rng::new(3);
+        let mut w = rng.normal_vec(1000);
+        let nnz = prune_to_exact_nnz(&mut w, 137);
+        assert_eq!(nnz, 137);
+        assert_eq!(w.iter().filter(|&&x| x != 0.0).count(), 137);
+    }
+
+    #[test]
+    fn random_prune_hits_budget() {
+        let mut rng = Rng::new(4);
+        let mut w = vec![1.0f32; 1000];
+        let nnz = prune_random(&mut w, 0.8, &mut rng);
+        assert_eq!(nnz, 200);
+        assert_eq!(w.iter().filter(|&&x| x != 0.0).count(), 200);
+    }
+}

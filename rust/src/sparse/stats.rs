@@ -1,0 +1,112 @@
+//! Sparsity-structure statistics: nnz distribution, row imbalance.
+//!
+//! Row imbalance drives two things the paper cares about: warp load
+//! imbalance on the GPU (irregular CSR rows) and, in our TPU adaptation,
+//! the ELL padding overhead (`ablation_sparsity` bench).
+
+use super::CsrMatrix;
+
+
+/// Aggregate sparsity statistics of a weight matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparsityStats {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub sparsity: f64,
+    pub min_row_nnz: usize,
+    pub max_row_nnz: usize,
+    pub mean_row_nnz: f64,
+    /// max / mean row population; 1.0 = perfectly balanced.
+    pub imbalance: f64,
+    pub csr_bytes: usize,
+    pub dense_bytes: usize,
+}
+
+impl SparsityStats {
+    pub fn of(m: &CsrMatrix) -> Self {
+        let row_nnz: Vec<usize> = (0..m.rows).map(|r| m.row_nnz(r)).collect();
+        let mean = if m.rows == 0 {
+            0.0
+        } else {
+            m.nnz() as f64 / m.rows as f64
+        };
+        let max = row_nnz.iter().copied().max().unwrap_or(0);
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            nnz: m.nnz(),
+            sparsity: m.sparsity(),
+            min_row_nnz: row_nnz.iter().copied().min().unwrap_or(0),
+            max_row_nnz: max,
+            mean_row_nnz: mean,
+            imbalance: if mean > 0.0 { max as f64 / mean } else { 1.0 },
+            csr_bytes: m.memory_bytes(),
+            dense_bytes: m.dense_bytes(),
+        }
+    }
+}
+
+/// Alias used by the ablation bench reporting.
+pub type RowImbalance = f64;
+
+/// Histogram of per-row nonzero counts with `buckets` equal-width bins
+/// over `[0, cols]`.
+pub fn row_nnz_histogram(m: &CsrMatrix, buckets: usize) -> Vec<usize> {
+    assert!(buckets > 0);
+    let mut hist = vec![0usize; buckets];
+    if m.cols == 0 {
+        return hist;
+    }
+    for r in 0..m.rows {
+        let nnz = m.row_nnz(r);
+        let b = (nnz * buckets / (m.cols + 1)).min(buckets - 1);
+        hist[b] += 1;
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune_magnitude;
+    use crate::util::Rng;
+
+    #[test]
+    fn stats_on_known_matrix() {
+        let dense = vec![
+            1., 0., 0., //
+            1., 1., 0., //
+            1., 1., 1.,
+        ];
+        let m = CsrMatrix::from_dense(3, 3, &dense);
+        let s = SparsityStats::of(&m);
+        assert_eq!(s.nnz, 6);
+        assert_eq!(s.min_row_nnz, 1);
+        assert_eq!(s.max_row_nnz, 3);
+        assert!((s.mean_row_nnz - 2.0).abs() < 1e-12);
+        assert!((s.imbalance - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn magnitude_pruned_matrices_are_roughly_balanced() {
+        // With i.i.d. weights, magnitude pruning spreads nonzeros evenly:
+        // imbalance should be modest (< 1.5 at 0.9 sparsity on wide rows).
+        let mut rng = Rng::new(77);
+        let mut w = rng.normal_vec(256 * 1152);
+        prune_magnitude(&mut w, 0.9);
+        let m = CsrMatrix::from_dense(256, 1152, &w);
+        let s = SparsityStats::of(&m);
+        assert!(s.imbalance < 1.5, "imbalance {}", s.imbalance);
+    }
+
+    #[test]
+    fn histogram_buckets_sum_to_rows() {
+        let mut rng = Rng::new(5);
+        let mut w = rng.normal_vec(64 * 100);
+        prune_magnitude(&mut w, 0.8);
+        let m = CsrMatrix::from_dense(64, 100, &w);
+        let h = row_nnz_histogram(&m, 10);
+        assert_eq!(h.iter().sum::<usize>(), 64);
+    }
+}

@@ -1,0 +1,168 @@
+//! Weight stretching (paper §3.1, after SkimCaffe [37]).
+//!
+//! The filter bank of one group is a sparse `M x (C*R*S)` matrix. Direct
+//! sparse convolution wants each nonzero's column id pre-translated into a
+//! flat offset into the *padded* input image, so the inner loop is just
+//! `out[h][w] += val * in[off + (h*stride)*Wp + w*stride]`:
+//!
+//! `colidx = (c, r, s)  ->  c*Hp*Wp + r*Wp + s`
+//!
+//! This is a one-time preprocessing step on the CSR structure; only
+//! `colidx` changes, no extra memory is consumed (paper: "weight
+//! stretching").
+
+use super::CsrMatrix;
+use crate::config::ConvShape;
+
+
+/// A weight-stretched sparse filter bank for one group of a CONV layer.
+///
+/// `csr.cols` is `C/g * Hp * Wp` — the padded per-image input size — and
+/// every stored column id is a valid offset into that space such that
+/// adding `(h*stride)*Wp + w*stride` lands on the input element under
+/// filter tap `(r, s)` for output pixel `(h, w)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StretchedFilter {
+    pub csr: CsrMatrix,
+    /// Padded input height `Hp`.
+    pub hp: usize,
+    /// Padded input width `Wp`.
+    pub wp: usize,
+    /// Channels seen by this group (`C/g`).
+    pub c_per_group: usize,
+}
+
+/// Stretch a CSR filter bank (`M/g x (C/g)*R*S`, canonical `(c, r, s)`
+/// column order) into padded-input offsets for `shape`.
+pub fn stretch_weights(csr: &CsrMatrix, shape: &ConvShape) -> StretchedFilter {
+    let (cg, r, s) = (shape.c_per_group(), shape.r, shape.s);
+    assert_eq!(csr.cols, cg * r * s, "filter bank has wrong column count");
+    let (hp, wp) = (shape.padded_h(), shape.padded_w());
+    let mut out = csr.clone();
+    for idx in out.colidx.iter_mut() {
+        let flat = *idx as usize;
+        let c = flat / (r * s);
+        let rr = (flat / s) % r;
+        let ss = flat % s;
+        *idx = (c * hp * wp + rr * wp + ss) as u32;
+    }
+    out.cols = cg * hp * wp;
+    StretchedFilter {
+        csr: out,
+        hp,
+        wp,
+        c_per_group: cg,
+    }
+}
+
+impl StretchedFilter {
+    /// Invert one stretched offset back to `(c, r, s)` — used by tests and
+    /// by the cache-simulator trace annotator.
+    pub fn unstretch(&self, off: usize) -> (usize, usize, usize) {
+        let c = off / (self.hp * self.wp);
+        let rem = off % (self.hp * self.wp);
+        (c, rem / self.wp, rem % self.wp)
+    }
+
+    /// Largest valid offset reachable by any output pixel: checks that
+    /// `off + (E-1)*stride*Wp + (F-1)*stride` stays within the padded
+    /// image for every stored nonzero.
+    pub fn validate_reach(&self, shape: &ConvShape) -> Result<(), String> {
+        let max_disp =
+            (shape.out_h() - 1) * shape.stride * self.wp + (shape.out_w() - 1) * shape.stride;
+        let limit = self.c_per_group * self.hp * self.wp;
+        for (_, off, _) in self.csr.iter() {
+            let (_, r, s) = self.unstretch(off);
+            if r >= shape.r || s >= shape.s {
+                return Err(format!("offset {off} decodes past filter taps"));
+            }
+            if off + max_disp >= limit {
+                return Err(format!("offset {off} can escape the padded image"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune_magnitude;
+    use crate::util::Rng;
+
+    fn filter_csr(shape: &ConvShape, sparsity: f32, seed: u64) -> CsrMatrix {
+        let mut rng = Rng::new(seed);
+        let mut w = rng.normal_vec(shape.m_per_group() * shape.c_per_group() * shape.r * shape.s);
+        if sparsity > 0.0 {
+            prune_magnitude(&mut w, sparsity);
+        }
+        CsrMatrix::from_dense(
+            shape.m_per_group(),
+            shape.c_per_group() * shape.r * shape.s,
+            &w,
+        )
+    }
+
+    #[test]
+    fn stretch_maps_crs_to_padded_offsets() {
+        // 2 channels of 4x4 input, 3x3 filter, pad 1 -> Hp = Wp = 6.
+        let shape = ConvShape::new(2, 4, 4, 4, 3, 3, 1, 1);
+        let csr = filter_csr(&shape, 0.5, 7);
+        let st = stretch_weights(&csr, &shape);
+        assert_eq!(st.hp, 6);
+        assert_eq!(st.wp, 6);
+        assert_eq!(st.csr.cols, 2 * 36);
+        // Check a specific mapping: original column (c=1, r=2, s=0) = 1*9+2*3+0 = 15
+        // must become 1*36 + 2*6 + 0 = 48.
+        for (j, &orig) in csr.colidx.iter().enumerate() {
+            if orig == 15 {
+                assert_eq!(st.csr.colidx[j], 48);
+            }
+        }
+    }
+
+    #[test]
+    fn unstretch_inverts() {
+        let shape = ConvShape::new(3, 8, 5, 7, 3, 3, 1, 1);
+        let csr = filter_csr(&shape, 0.7, 9);
+        let st = stretch_weights(&csr, &shape);
+        for (j, &orig) in csr.colidx.iter().enumerate() {
+            let (c, r, s) = st.unstretch(st.csr.colidx[j] as usize);
+            let flat = c * 9 + r * 3 + s;
+            assert_eq!(flat, orig as usize);
+        }
+    }
+
+    #[test]
+    fn reach_is_valid_for_strided_and_padded_layers() {
+        for shape in [
+            ConvShape::new(3, 4, 8, 8, 3, 3, 1, 1),
+            ConvShape::new(4, 4, 9, 9, 5, 5, 1, 2),
+            ConvShape::new(4, 8, 8, 8, 3, 3, 2, 1),
+            ConvShape::new(3, 2, 11, 11, 11, 11, 4, 0).scaled_spatial(1),
+        ] {
+            let csr = filter_csr(&shape, 0.6, 13);
+            let st = stretch_weights(&csr, &shape);
+            st.validate_reach(&shape).unwrap();
+        }
+    }
+
+    #[test]
+    fn values_and_structure_untouched() {
+        // Paper: stretching "only modifies the column indices".
+        let shape = ConvShape::new(2, 4, 6, 6, 3, 3, 1, 0);
+        let csr = filter_csr(&shape, 0.5, 21);
+        let st = stretch_weights(&csr, &shape);
+        assert_eq!(st.csr.values, csr.values);
+        assert_eq!(st.csr.rowptr, csr.rowptr);
+        assert_eq!(st.csr.nnz(), csr.nnz());
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_column_count_rejected() {
+        let shape = ConvShape::new(2, 4, 6, 6, 3, 3, 1, 0);
+        let bad = CsrMatrix::from_dense(4, 10, &vec![1.0; 40]);
+        stretch_weights(&bad, &shape);
+    }
+}

@@ -1,0 +1,12 @@
+//! NCHW tensor substrate.
+//!
+//! All native kernels and the PJRT runtime exchange activations as
+//! [`Tensor4`] values in NCHW layout (the layout the paper's CHW indexing
+//! function `f(c, y, x) = (c*H + y)*W + x` assumes, extended with a batch
+//! dimension).
+
+mod shape;
+mod tensor4;
+
+pub use shape::Dims4;
+pub use tensor4::Tensor4;

@@ -1,0 +1,97 @@
+//! 4-D shape arithmetic.
+
+
+
+/// Dimensions of a rank-4 NCHW tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Dims4 {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Dims4 {
+    pub const fn new(n: usize, c: usize, h: usize, w: usize) -> Self {
+        Self { n, c, h, w }
+    }
+
+    /// Total element count.
+    pub const fn len(&self) -> usize {
+        self.n * self.c * self.h * self.w
+    }
+
+    pub const fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat offset of `(n, c, h, w)` in row-major NCHW order — the paper's
+    /// layout function `f` with a batch axis.
+    #[inline(always)]
+    pub const fn index(&self, n: usize, c: usize, h: usize, w: usize) -> usize {
+        ((n * self.c + c) * self.h + h) * self.w + w
+    }
+
+    /// Per-image (CHW) element count.
+    pub const fn chw(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Per-channel (HW) element count.
+    pub const fn hw(&self) -> usize {
+        self.h * self.w
+    }
+
+    pub fn as_vec(&self) -> Vec<usize> {
+        vec![self.n, self.c, self.h, self.w]
+    }
+}
+
+impl std::fmt::Display for Dims4 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}x{}", self.n, self.c, self.h, self.w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_is_row_major() {
+        let d = Dims4::new(2, 3, 4, 5);
+        assert_eq!(d.index(0, 0, 0, 0), 0);
+        assert_eq!(d.index(0, 0, 0, 1), 1);
+        assert_eq!(d.index(0, 0, 1, 0), 5);
+        assert_eq!(d.index(0, 1, 0, 0), 20);
+        assert_eq!(d.index(1, 0, 0, 0), 60);
+        assert_eq!(d.index(1, 2, 3, 4), d.len() - 1);
+    }
+
+    #[test]
+    fn index_covers_all_offsets_exactly_once() {
+        let d = Dims4::new(2, 2, 3, 3);
+        let mut seen = vec![false; d.len()];
+        for n in 0..d.n {
+            for c in 0..d.c {
+                for h in 0..d.h {
+                    for w in 0..d.w {
+                        let i = d.index(n, c, h, w);
+                        assert!(!seen[i]);
+                        seen[i] = true;
+                    }
+                }
+            }
+        }
+        assert!(seen.into_iter().all(|b| b));
+    }
+
+    #[test]
+    fn helpers() {
+        let d = Dims4::new(2, 3, 4, 5);
+        assert_eq!(d.len(), 120);
+        assert_eq!(d.chw(), 60);
+        assert_eq!(d.hw(), 20);
+        assert_eq!(d.to_string(), "2x3x4x5");
+    }
+}

@@ -1,0 +1,195 @@
+//! Dense rank-4 NCHW tensor.
+
+use super::Dims4;
+use crate::util::Rng;
+
+/// A dense `f32` tensor in NCHW layout backed by a flat `Vec`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor4 {
+    dims: Dims4,
+    data: Vec<f32>,
+}
+
+impl Tensor4 {
+    /// All-zero tensor.
+    pub fn zeros(dims: Dims4) -> Self {
+        Self {
+            dims,
+            data: vec![0.0; dims.len()],
+        }
+    }
+
+    /// Wrap an existing flat buffer. Panics if the length mismatches.
+    pub fn from_vec(dims: Dims4, data: Vec<f32>) -> Self {
+        assert_eq!(
+            data.len(),
+            dims.len(),
+            "buffer length {} != dims {}",
+            data.len(),
+            dims
+        );
+        Self { dims, data }
+    }
+
+    /// Synthetic post-ReLU activations (see DESIGN.md §7 substitutions).
+    pub fn random_activations(dims: Dims4, rng: &mut Rng) -> Self {
+        Self {
+            dims,
+            data: rng.activation_vec(dims.len()),
+        }
+    }
+
+    /// Synthetic normal-initialised weights.
+    pub fn random_weights(dims: Dims4, rng: &mut Rng) -> Self {
+        Self {
+            dims,
+            data: rng.normal_vec(dims.len()),
+        }
+    }
+
+    pub fn dims(&self) -> Dims4 {
+        self.dims
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline(always)]
+    pub fn at(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        self.data[self.dims.index(n, c, h, w)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+        let i = self.dims.index(n, c, h, w);
+        self.data[i] = v;
+    }
+
+    #[inline(always)]
+    pub fn add(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+        let i = self.dims.index(n, c, h, w);
+        self.data[i] += v;
+    }
+
+    /// The CHW slice of image `n`.
+    pub fn image(&self, n: usize) -> &[f32] {
+        let chw = self.dims.chw();
+        &self.data[n * chw..(n + 1) * chw]
+    }
+
+    /// Zero-pad spatially by `pad` on every side — the paper's `pad_in`
+    /// kernel, on the host. Returns an `(H + 2p) x (W + 2p)` tensor.
+    pub fn pad_spatial(&self, pad: usize) -> Tensor4 {
+        if pad == 0 {
+            return self.clone();
+        }
+        let d = self.dims;
+        let out_dims = Dims4::new(d.n, d.c, d.h + 2 * pad, d.w + 2 * pad);
+        let mut out = Tensor4::zeros(out_dims);
+        for n in 0..d.n {
+            for c in 0..d.c {
+                for h in 0..d.h {
+                    let src = d.index(n, c, h, 0);
+                    let dst = out_dims.index(n, c, h + pad, pad);
+                    out.data[dst..dst + d.w].copy_from_slice(&self.data[src..src + d.w]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Max |a - b| between two tensors of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor4) -> f32 {
+        assert_eq!(self.dims, other.dims, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative-tolerance comparison suitable for accumulated f32 sums.
+    pub fn allclose(&self, other: &Tensor4, atol: f32, rtol: f32) -> bool {
+        if self.dims != other.dims {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs().max(a.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_set_get() {
+        let mut t = Tensor4::zeros(Dims4::new(1, 2, 3, 4));
+        assert_eq!(t.at(0, 1, 2, 3), 0.0);
+        t.set(0, 1, 2, 3, 5.0);
+        assert_eq!(t.at(0, 1, 2, 3), 5.0);
+        t.add(0, 1, 2, 3, 2.0);
+        assert_eq!(t.at(0, 1, 2, 3), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_length_checked() {
+        Tensor4::from_vec(Dims4::new(1, 1, 2, 2), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn pad_spatial_places_interior() {
+        let d = Dims4::new(1, 1, 2, 2);
+        let t = Tensor4::from_vec(d, vec![1.0, 2.0, 3.0, 4.0]);
+        let p = t.pad_spatial(1);
+        assert_eq!(p.dims(), Dims4::new(1, 1, 4, 4));
+        // border zero
+        assert_eq!(p.at(0, 0, 0, 0), 0.0);
+        assert_eq!(p.at(0, 0, 3, 3), 0.0);
+        // interior preserved
+        assert_eq!(p.at(0, 0, 1, 1), 1.0);
+        assert_eq!(p.at(0, 0, 1, 2), 2.0);
+        assert_eq!(p.at(0, 0, 2, 1), 3.0);
+        assert_eq!(p.at(0, 0, 2, 2), 4.0);
+        // total mass preserved
+        let sum: f32 = p.data().iter().sum();
+        assert_eq!(sum, 10.0);
+    }
+
+    #[test]
+    fn pad_zero_is_identity() {
+        let mut rng = Rng::new(1);
+        let t = Tensor4::random_activations(Dims4::new(2, 3, 5, 5), &mut rng);
+        assert_eq!(t.pad_spatial(0), t);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let d = Dims4::new(1, 1, 1, 2);
+        let a = Tensor4::from_vec(d, vec![1.0, 100.0]);
+        let b = Tensor4::from_vec(d, vec![1.0 + 1e-6, 100.0 + 1e-4]);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        let c = Tensor4::from_vec(d, vec![1.1, 100.0]);
+        assert!(!a.allclose(&c, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn image_slices() {
+        let d = Dims4::new(2, 1, 2, 2);
+        let t = Tensor4::from_vec(d, (0..8).map(|i| i as f32).collect());
+        assert_eq!(t.image(0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(t.image(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+}

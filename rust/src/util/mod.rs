@@ -1,0 +1,14 @@
+//! Small shared utilities: deterministic RNG, statistics, timing.
+//!
+//! We deliberately avoid a `rand` dependency — benchmark workloads must be
+//! reproducible bit-for-bit across runs, so a tiny explicit xorshift
+//! generator is preferable to a crate whose default seeding is entropic.
+
+pub mod json;
+mod rng;
+mod stats;
+mod timer;
+
+pub use rng::Rng;
+pub use stats::{geomean, mean, percentile, stddev};
+pub use timer::{ScopedTimer, Stopwatch};

@@ -1,0 +1,139 @@
+//! Wall-clock timing helpers for the benchmark harness and metrics.
+
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch accumulating named laps — used by the fig. 9
+/// execution-time-breakdown harness, where each CUDA-kernel analogue
+/// (`im2col`, `sgemm`, `csrmm`, `sconv`, `pad_in`) gets its own lap bucket.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    laps: Vec<(String, Duration)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and record the elapsed time under `name`. Returns `f`'s
+    /// output so the timed code stays inline.
+    pub fn lap<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.laps.push((name.to_string(), t0.elapsed()));
+        out
+    }
+
+    /// Record an externally measured duration under `name`.
+    pub fn record(&mut self, name: &str, d: Duration) {
+        self.laps.push((name.to_string(), d));
+    }
+
+    /// Total time recorded under `name` across all laps.
+    pub fn total(&self, name: &str) -> Duration {
+        self.laps
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .sum()
+    }
+
+    /// Sum over all laps.
+    pub fn grand_total(&self) -> Duration {
+        self.laps.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// Distinct lap names in first-appearance order.
+    pub fn names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for (n, _) in &self.laps {
+            if !names.contains(n) {
+                names.push(n.clone());
+            }
+        }
+        names
+    }
+
+    /// `(name, total, fraction-of-grand-total)` rows.
+    pub fn breakdown(&self) -> Vec<(String, Duration, f64)> {
+        let total = self.grand_total().as_secs_f64().max(1e-12);
+        self.names()
+            .into_iter()
+            .map(|n| {
+                let t = self.total(&n);
+                let frac = t.as_secs_f64() / total;
+                (n, t, frac)
+            })
+            .collect()
+    }
+
+    pub fn clear(&mut self) {
+        self.laps.clear();
+    }
+}
+
+/// RAII timer that reports its lifetime into a callback on drop.
+pub struct ScopedTimer<F: FnMut(Duration)> {
+    start: Instant,
+    sink: F,
+}
+
+impl<F: FnMut(Duration)> ScopedTimer<F> {
+    pub fn new(sink: F) -> Self {
+        Self {
+            start: Instant::now(),
+            sink,
+        }
+    }
+}
+
+impl<F: FnMut(Duration)> Drop for ScopedTimer<F> {
+    fn drop(&mut self) {
+        let d = self.start.elapsed();
+        (self.sink)(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate_by_name() {
+        let mut sw = Stopwatch::new();
+        sw.record("a", Duration::from_millis(10));
+        sw.record("b", Duration::from_millis(20));
+        sw.record("a", Duration::from_millis(5));
+        assert_eq!(sw.total("a"), Duration::from_millis(15));
+        assert_eq!(sw.total("b"), Duration::from_millis(20));
+        assert_eq!(sw.grand_total(), Duration::from_millis(35));
+        assert_eq!(sw.names(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let mut sw = Stopwatch::new();
+        sw.record("x", Duration::from_millis(30));
+        sw.record("y", Duration::from_millis(70));
+        let total: f64 = sw.breakdown().iter().map(|(_, _, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lap_returns_value() {
+        let mut sw = Stopwatch::new();
+        let v = sw.lap("work", || 42);
+        assert_eq!(v, 42);
+        assert!(sw.total("work") > Duration::ZERO || sw.total("work") == Duration::ZERO);
+        assert_eq!(sw.names(), vec!["work".to_string()]);
+    }
+
+    #[test]
+    fn scoped_timer_fires_on_drop() {
+        let mut got = None;
+        {
+            let _t = ScopedTimer::new(|d| got = Some(d));
+        }
+        assert!(got.is_some());
+    }
+}

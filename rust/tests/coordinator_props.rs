@@ -1,0 +1,311 @@
+//! Property-style tests on coordinator invariants (routing, batching,
+//! state) and an in-process serving round trip over the real artifact.
+//!
+//! The offline toolchain has no proptest; properties are exercised with
+//! seeded randomized sweeps over the deterministic `escoin::util::Rng`.
+
+use escoin::config::ConvShape;
+use escoin::conv::ConvWeights;
+use escoin::coordinator::{
+    Batcher, BatcherConfig, Method, Router, RouterConfig, ServerConfig, ServerHandle,
+};
+use escoin::sparse::{CsrMatrix, EllMatrix, SparsityStats};
+use escoin::tensor::Tensor4;
+use escoin::util::Rng;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+fn random_shape(rng: &mut Rng) -> ConvShape {
+    let r = [1, 3, 5][rng.below(3)];
+    let pad = if r == 1 { 0 } else { rng.below((r - 1) / 2 + 2) };
+    let stride = 1 + rng.below(2);
+    let h = r + rng.below(8) + 2;
+    let w = r + rng.below(8) + 2;
+    let mut s = ConvShape::new(
+        1 + rng.below(6),
+        1 + rng.below(8),
+        h,
+        w,
+        r,
+        r,
+        stride,
+        pad,
+    );
+    if rng.below(2) == 1 {
+        s = s.with_sparsity(0.4 + 0.5 * rng.next_f32());
+    }
+    s
+}
+
+#[test]
+fn property_router_choice_is_always_a_candidate() {
+    let mut rng = Rng::new(1);
+    let router = Router::new(RouterConfig::default());
+    for i in 0..300 {
+        let shape = random_shape(&mut rng);
+        let layer = format!("layer{}", i % 7);
+        let choice = router.choose(&layer, &shape);
+        assert!(
+            router.candidates(&shape).contains(&choice),
+            "{choice:?} not a candidate for {shape}"
+        );
+        // Feed a random observation to mutate state.
+        let lat = Duration::from_micros(rng.below(10_000) as u64 + 1);
+        router.observe(&layer, choice, lat);
+    }
+}
+
+#[test]
+fn property_router_converges_to_fastest_method() {
+    let mut rng = Rng::new(2);
+    for trial in 0..10 {
+        let router = Router::new(RouterConfig {
+            explore_every: 0,
+            ..Default::default()
+        });
+        let shape = ConvShape::new(8, 8, 10, 10, 3, 3, 1, 1).with_sparsity(0.8);
+        let methods = router.candidates(&shape);
+        let fastest = methods[rng.below(methods.len())];
+        for _ in 0..30 {
+            for &m in &methods {
+                let base = if m == fastest { 100 } else { 1000 + rng.below(500) as u64 };
+                router.observe("l", m, Duration::from_micros(base));
+            }
+        }
+        assert_eq!(router.choose("l", &shape), fastest, "trial {trial}");
+    }
+}
+
+#[test]
+fn property_batcher_never_exceeds_capacity_and_preserves_order() {
+    let mut rng = Rng::new(3);
+    for _ in 0..20 {
+        let n = 1 + rng.below(50);
+        let cap = 1 + rng.below(8);
+        let (tx, rx) = channel();
+        for i in 0..n {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = Batcher::new(
+            rx,
+            BatcherConfig {
+                batch_size: cap,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.items.len() <= cap);
+            assert!(!batch.items.is_empty());
+            seen.extend(batch.items);
+        }
+        assert_eq!(seen, (0..n).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn property_csr_ell_dense_roundtrip() {
+    let mut rng = Rng::new(4);
+    for _ in 0..50 {
+        let rows = 1 + rng.below(20);
+        let cols = 1 + rng.below(40);
+        let mut dense = rng.normal_vec(rows * cols);
+        // random sparsification
+        for v in dense.iter_mut() {
+            if rng.next_f32() < 0.7 {
+                *v = 0.0;
+            }
+        }
+        let csr = CsrMatrix::from_dense(rows, cols, &dense);
+        csr.validate().unwrap();
+        assert_eq!(csr.to_dense(), dense);
+        let ell = EllMatrix::from_csr(&csr, 1 + rng.below(8));
+        assert_eq!(ell.to_dense(), dense);
+        let stats = SparsityStats::of(&csr);
+        assert_eq!(stats.nnz, csr.nnz());
+        assert!(stats.sparsity >= 0.0 && stats.sparsity <= 1.0);
+    }
+}
+
+#[test]
+fn property_stretched_offsets_always_in_reach() {
+    let mut rng = Rng::new(5);
+    for i in 0..40 {
+        let shape = random_shape(&mut rng);
+        let mut wrng = Rng::new(100 + i);
+        let w = ConvWeights::synthetic(&shape, &mut wrng);
+        for bank in w.stretched_banks() {
+            bank.validate_reach(&shape).unwrap();
+        }
+    }
+}
+
+#[test]
+fn property_conv_methods_agree_on_random_shapes() {
+    // The three native methods are interchangeable on any valid layer.
+    use escoin::conv::{direct_dense, lowered_gemm, lowered_spmm, sconv};
+    use escoin::tensor::Dims4;
+    let mut rng = Rng::new(6);
+    for i in 0..15 {
+        let shape = random_shape(&mut rng);
+        let mut wrng = Rng::new(200 + i);
+        let x = Tensor4::random_activations(
+            Dims4::new(1 + (i as usize % 2), shape.c, shape.h, shape.w),
+            &mut wrng,
+        );
+        let w = ConvWeights::synthetic(&shape, &mut wrng);
+        let want = direct_dense(&shape, &x, &w);
+        let g = lowered_gemm(&shape, &x, &w);
+        let s = lowered_spmm(&shape, &x, &w.csr_banks());
+        let d = sconv(&shape, &x, &w.stretched_banks());
+        assert!(g.allclose(&want, 1e-3, 1e-4), "gemm {shape}");
+        assert!(s.allclose(&want, 1e-3, 1e-4), "spmm {shape}");
+        assert!(d.allclose(&want, 1e-3, 1e-4), "sconv {shape}");
+    }
+}
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn server_round_trip_all_requests_answered() {
+    let Some(dir) = artifact_dir() else { return };
+    let server = ServerHandle::start(ServerConfig {
+        artifact_dir: dir,
+        artifact: "minicnn_sconv".into(),
+        batcher: BatcherConfig {
+            batch_size: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        weight_seed: 7,
+    })
+    .expect("server start");
+    let elems = server.image_elems();
+    let classes = server.num_classes();
+    let mut rng = Rng::new(9);
+    let mut pending = Vec::new();
+    for _ in 0..17 {
+        let img = rng.activation_vec(elems);
+        pending.push(server.submit(img).unwrap());
+    }
+    for rx in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert_eq!(resp.logits.len(), classes);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.snapshot.responses, 17);
+    assert_eq!(stats.snapshot.errors, 0);
+    assert!(stats.snapshot.batches >= 5); // 17 images / batch 4
+    assert!(stats.snapshot.throughput_rps > 0.0);
+}
+
+#[test]
+fn server_identical_images_get_identical_logits_across_batches() {
+    let Some(dir) = artifact_dir() else { return };
+    let server = ServerHandle::start(ServerConfig {
+        artifact_dir: dir,
+        artifact: "minicnn_gemm".into(),
+        batcher: BatcherConfig {
+            batch_size: 4,
+            max_wait: Duration::from_millis(1),
+        },
+        weight_seed: 7,
+    })
+    .unwrap();
+    let mut rng = Rng::new(10);
+    let img = rng.activation_vec(server.image_elems());
+    let a = server.submit(img.clone()).unwrap().recv().unwrap();
+    let b = server.submit(img).unwrap().recv().unwrap();
+    // Batch padding must not leak into results: same image, same logits.
+    for (x, y) in a.logits.iter().zip(&b.logits) {
+        assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+    }
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn server_rejects_wrong_image_size() {
+    let Some(dir) = artifact_dir() else { return };
+    let server = ServerHandle::start(ServerConfig {
+        artifact_dir: dir,
+        artifact: "minicnn_sconv".into(),
+        batcher: BatcherConfig::default(),
+        weight_seed: 1,
+    })
+    .unwrap();
+    assert!(server.submit(vec![0.0; 7]).is_err());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn server_startup_fails_cleanly_on_unknown_artifact() {
+    let Some(dir) = artifact_dir() else { return };
+    let err = ServerHandle::start(ServerConfig {
+        artifact_dir: dir,
+        artifact: "nonexistent_model".into(),
+        batcher: BatcherConfig::default(),
+        weight_seed: 1,
+    });
+    assert!(err.is_err());
+}
+
+#[test]
+fn server_startup_fails_cleanly_on_layer_artifact() {
+    // A layer artifact is not servable as a model; the executor must
+    // report the error through the ready channel, not hang or panic.
+    let Some(dir) = artifact_dir() else { return };
+    let err = ServerHandle::start(ServerConfig {
+        artifact_dir: dir,
+        artifact: "alexnet_conv3_sconv".into(),
+        batcher: BatcherConfig::default(),
+        weight_seed: 1,
+    });
+    assert!(err.is_err());
+}
+
+#[test]
+fn property_ell_fixed_k_respects_manifest_contract() {
+    use escoin::sparse::EllMatrix;
+    let mut rng = Rng::new(11);
+    for _ in 0..30 {
+        let rows = 1 + rng.below(16);
+        let cols = 8 + rng.below(64);
+        let sparsity = 0.5 + 0.4 * rng.next_f32();
+        let mut dense = rng.normal_vec(rows * cols);
+        escoin::sparse::prune_magnitude_per_row(&mut dense, cols, sparsity);
+        let csr = CsrMatrix::from_dense(rows, cols, &dense);
+        let k = csr.max_row_nnz().max(1);
+        let ell = EllMatrix::from_csr_fixed_k(&csr, k + rng.below(8));
+        assert_eq!(ell.to_dense(), dense);
+    }
+}
+
+#[test]
+fn property_batcher_formation_time_respects_deadline() {
+    // A starved batcher must emit within ~max_wait of the first arrival.
+    let (tx, rx) = channel();
+    let b = Batcher::new(
+        rx,
+        BatcherConfig {
+            batch_size: 64,
+            max_wait: Duration::from_millis(10),
+        },
+    );
+    tx.send(1u32).unwrap();
+    let batch = b.next_batch().unwrap();
+    assert_eq!(batch.items.len(), 1);
+    assert!(
+        batch.formation_time < Duration::from_millis(100),
+        "{:?}",
+        batch.formation_time
+    );
+}

@@ -1,0 +1,149 @@
+//! Integration: AOT artifacts (Pallas -> HLO -> PJRT) vs the native Rust
+//! kernels on identical inputs — the cross-language correctness seal.
+//!
+//! Requires `make artifacts` to have produced `artifacts/`; tests skip
+//! (with a loud message) when the directory is absent so `cargo test`
+//! stays runnable on a fresh checkout.
+
+use escoin::config::ConvShape;
+use escoin::conv::{direct_dense, ConvWeights};
+use escoin::runtime::Engine;
+use escoin::tensor::{Dims4, Tensor4};
+use escoin::util::Rng;
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+fn engine() -> Option<Engine> {
+    artifact_dir().map(|d| Engine::new(d).expect("engine"))
+}
+
+fn case(shape: &ConvShape, batch: usize, seed: u64) -> (Tensor4, ConvWeights) {
+    let mut rng = Rng::new(seed);
+    let x = Tensor4::random_activations(Dims4::new(batch, shape.c, shape.h, shape.w), &mut rng);
+    let w = ConvWeights::synthetic(shape, &mut rng);
+    (x, w)
+}
+
+#[test]
+fn every_layer_artifact_matches_native_reference() {
+    let Some(engine) = engine() else { return };
+    let names: Vec<String> = engine
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "layer")
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(names.len() >= 15, "expected 5 layers x 3 methods");
+    for name in names {
+        let loaded = engine.load(&name).expect("load");
+        let shape = loaded.artifact.shape.clone().expect("layer shape");
+        let (x, w) = case(&shape, loaded.artifact.batch, 0xE5C0 + name.len() as u64);
+        let weight_lits = loaded.weight_literals(&w).expect("weights");
+        let got = loaded.run(&x, &weight_lits).expect("execute");
+        let want = direct_dense(&shape, &x, &w);
+        assert!(
+            got.allclose(&want, 1e-3, 1e-3),
+            "{name}: artifact disagrees with native reference (max diff {})",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn methods_agree_with_each_other_through_pjrt() {
+    let Some(engine) = engine() else { return };
+    let layer = "alexnet_conv3";
+    let arts = engine.manifest().for_layer(layer);
+    assert_eq!(arts.len(), 3, "three methods per layer");
+    let shape = arts[0].shape.clone().unwrap();
+    let batch = arts[0].batch;
+    let (x, w) = case(&shape, batch, 99);
+    let mut outs = Vec::new();
+    for a in arts {
+        let loaded = engine.load(&a.name).unwrap();
+        let lits = loaded.weight_literals(&w).unwrap();
+        outs.push((a.name.clone(), loaded.run(&x, &lits).unwrap()));
+    }
+    for pair in outs.windows(2) {
+        assert!(
+            pair[0].1.allclose(&pair[1].1, 1e-3, 1e-3),
+            "{} vs {} disagree",
+            pair[0].0,
+            pair[1].0
+        );
+    }
+}
+
+#[test]
+fn minicnn_model_artifacts_agree_across_methods() {
+    let Some(engine) = engine() else { return };
+    let arts: Vec<_> = engine
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "model")
+        .cloned()
+        .collect();
+    assert_eq!(arts.len(), 3);
+    let layers = arts[0].layers.clone();
+    assert_eq!(layers.len(), 3);
+    let mut rng = Rng::new(4242);
+    let l1 = &layers[0];
+    let x = Tensor4::random_activations(Dims4::new(arts[0].batch, l1.c, l1.h, l1.w), &mut rng);
+    let convs: Vec<ConvWeights> = layers
+        .iter()
+        .map(|l| ConvWeights::synthetic(l, &mut rng))
+        .collect();
+    let fc_w: Vec<f32> = rng.normal_vec(layers[2].m * 10).iter().map(|v| v * 0.1).collect();
+    let fc_b: Vec<f32> = rng.normal_vec(10).iter().map(|v| v * 0.01).collect();
+
+    let mut outs: Vec<(String, Vec<f32>)> = Vec::new();
+    for a in &arts {
+        let loaded = engine.load(&a.name).unwrap();
+        let mut lits = vec![escoin::runtime::tensor_to_literal(&x).unwrap()];
+        for wl in loaded.model_weight_literals(&convs, &fc_w, &fc_b).unwrap() {
+            lits.push(wl);
+        }
+        let logits = loaded.execute(&lits).unwrap();
+        assert_eq!(logits.len(), arts[0].batch * 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        outs.push((a.name.clone(), logits));
+    }
+    for pair in outs.windows(2) {
+        let max_diff = pair[0]
+            .1
+            .iter()
+            .zip(&pair[1].1)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_diff < 1e-2,
+            "{} vs {}: logits differ by {max_diff}",
+            pair[0].0,
+            pair[1].0
+        );
+    }
+}
+
+#[test]
+fn engine_caches_compiled_executables() {
+    let Some(engine) = engine() else { return };
+    let a = engine.load("alexnet_conv3_sconv").unwrap();
+    let b = engine.load("alexnet_conv3_sconv").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(engine) = engine() else { return };
+    assert!(engine.load("no_such_artifact").is_err());
+}
