@@ -24,7 +24,7 @@ fn main() {
     let opts = Fig8Opts {
         batch: if quick { 1 } else { 2 },
         spatial_scale: if quick { 2 } else { 1 },
-        threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        threads: escoin::util::default_threads(),
         bench: if quick {
             BenchOpts { warmup: 0, iters: 1 }
         } else {

@@ -1,30 +1,131 @@
+//! Perf baseline probe: plan-based execution vs the seed free-function
+//! path on representative layer shapes, emitted as machine-readable
+//! `BENCH_sconv.json` (per-shape ns/iter) so future PRs can diff against
+//! a recorded baseline.
+//!
+//! ```text
+//! cargo run --release --example perf_probe [--out PATH]
+//! ```
+//!
+//! Knobs: `ESCOIN_THREADS`, `ESCOIN_BENCH_WARMUP`, `ESCOIN_BENCH_ITERS`.
+
+use escoin::bench_harness::{bench_median, BenchOpts};
 use escoin::config::ConvShape;
-use escoin::conv::*;
+use escoin::conv::{
+    lowered_gemm_parallel, lowered_spmm_parallel, sconv_parallel, ConvWeights, LayerPlan, Method,
+    Workspace,
+};
 use escoin::tensor::{Dims4, Tensor4};
-use escoin::util::Rng;
-use std::time::Instant;
+use escoin::util::{default_threads, Rng};
+
+struct Row {
+    shape: &'static str,
+    method: &'static str,
+    free_ns: u128,
+    plan_ns: u128,
+}
 
 fn main() {
-    let threads = 8;
-    for (name, shape) in [
-        ("conv2 (5x5, 27x27, sp.85)", ConvShape::new(96, 256, 27, 27, 5, 5, 1, 2).with_groups(2).with_sparsity(0.85)),
-        ("conv3 (3x3, 13x13, sp.88)", ConvShape::new(256, 384, 13, 13, 3, 3, 1, 1).with_sparsity(0.88)),
-        ("conv3/2 (3x3, 6x6)", ConvShape::new(256, 384, 13, 13, 3, 3, 1, 1).with_sparsity(0.88).scaled_spatial(2)),
-    ] {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_sconv.json".to_string());
+    let threads = default_threads();
+    let bench = BenchOpts::from_env();
+    let batch = 2usize;
+
+    let shapes: [(&'static str, ConvShape); 3] = [
+        (
+            "alexnet_conv2_5x5_27x27_sp85",
+            ConvShape::new(96, 256, 27, 27, 5, 5, 1, 2)
+                .with_groups(2)
+                .with_sparsity(0.85),
+        ),
+        (
+            "alexnet_conv3_3x3_13x13_sp88",
+            ConvShape::new(256, 384, 13, 13, 3, 3, 1, 1).with_sparsity(0.88),
+        ),
+        (
+            "alexnet_conv3_scaled_3x3_6x6",
+            ConvShape::new(256, 384, 13, 13, 3, 3, 1, 1)
+                .with_sparsity(0.88)
+                .scaled_spatial(2),
+        ),
+    ];
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut ws = Workspace::new();
+    for (name, shape) in &shapes {
         let mut rng = Rng::new(1);
-        let x = Tensor4::random_activations(Dims4::new(2, shape.c, shape.h, shape.w), &mut rng);
-        let w = ConvWeights::synthetic(&shape, &mut rng);
-        let banks = w.csr_banks();
+        let x = Tensor4::random_activations(Dims4::new(batch, shape.c, shape.h, shape.w), &mut rng);
+        let w = ConvWeights::synthetic(shape, &mut rng);
+        let csr = w.csr_banks();
         let st = w.stretched_banks();
-        let t0 = Instant::now();
-        let _ = lowered_gemm_parallel(&shape, &x, &w, threads);
-        let g = t0.elapsed();
-        let t0 = Instant::now();
-        let _ = lowered_spmm_parallel(&shape, &x, &banks, threads);
-        let s = t0.elapsed();
-        let t0 = Instant::now();
-        let _ = sconv_parallel(&shape, &x, &st, threads);
-        let d = t0.elapsed();
-        println!("{name}: gemm {g:?} spmm {s:?} sconv {d:?}");
+
+        for (method, label) in [
+            (Method::LoweredGemm, "gemm"),
+            (Method::LoweredSpmm, "spmm"),
+            (Method::DirectSparse, "sconv"),
+        ] {
+            // Seed free-function path: re-pads and allocates per call.
+            let free = bench_median(bench, || match method {
+                Method::LoweredGemm => lowered_gemm_parallel(shape, &x, &w, threads),
+                Method::LoweredSpmm => lowered_spmm_parallel(shape, &x, &csr, threads),
+                _ => sconv_parallel(shape, &x, &st, threads),
+            });
+            // Plan path: operands compiled once, workspace + output reused.
+            let plan = LayerPlan::build(shape, &w, method, threads);
+            ws.ensure(plan.workspace_floats(batch));
+            let mut out = Tensor4::zeros(plan.out_dims(batch));
+            let planned = bench_median(bench, || {
+                plan.execute_into(batch, x.data(), &mut ws, out.data_mut(), None)
+            });
+            rows.push(Row {
+                shape: *name,
+                method: label,
+                free_ns: free.as_nanos(),
+                plan_ns: planned.as_nanos(),
+            });
+            println!(
+                "{name:<32} {label:<6} free {free:?}  plan {planned:?}  ({:.2}x)",
+                free.as_secs_f64() / planned.as_secs_f64().max(1e-12)
+            );
+        }
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"sconv\",\n  \"unit\": \"ns_per_iter\",\n");
+    json.push_str(&format!(
+        "  \"threads\": {threads},\n  \"batch\": {batch},\n  \"iters\": {},\n  \"rows\": [\n",
+        bench.iters
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"shape\": \"{}\", \"method\": \"{}\", \"free_ns\": {}, \"plan_ns\": {}}}{}\n",
+            r.shape,
+            r.method,
+            r.free_ns,
+            r.plan_ns,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &json).expect("write BENCH_sconv.json");
+    println!("wrote {out_path}");
+
+    // Report the headline comparison; the plan path skips the per-call
+    // pad/output allocation, so it is expected to win — warn loudly (but
+    // don't fail: wall-clock ratios are noisy on shared machines) when a
+    // regression shows up, and let future PRs diff BENCH_sconv.json.
+    let sconv_rows: Vec<&Row> = rows.iter().filter(|r| r.method == "sconv").collect();
+    let free: u128 = sconv_rows.iter().map(|r| r.free_ns).sum();
+    let plan: u128 = sconv_rows.iter().map(|r| r.plan_ns).sum();
+    println!(
+        "plan-based sconv total {plan} ns vs free-function {free} ns ({:.2}x)",
+        free as f64 / plan as f64
+    );
+    if plan > free {
+        eprintln!("WARNING: plan-based sconv slower than the seed free-function path");
     }
 }

@@ -1,71 +1,69 @@
-//! Quickstart: load one AOT conv-layer artifact, run all three methods on
-//! the same inputs through PJRT, check they agree, and show the native
-//! Escoin kernel on the full-size layer.
+//! Quickstart: compile one AlexNet layer into a `LayerPlan` per method,
+//! check the three contenders agree, then race them at the paper's full
+//! layer size through the plan executor (reused workspace, kernel-only
+//! timing).
 //!
 //! ```text
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! (The PJRT/AOT artifact path is behind the `pjrt` cargo feature; see
+//! `escoin infer`.)
 
 use escoin::config::ConvShape;
-use escoin::conv::{lowered_gemm_parallel, sconv_parallel, ConvWeights};
-use escoin::runtime::Engine;
+use escoin::conv::{ConvWeights, LayerPlan, Method, Workspace};
 use escoin::tensor::{Dims4, Tensor4};
-use escoin::util::Rng;
+use escoin::util::{default_threads, Rng};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
-    // --- Part 1: the AOT path (Pallas kernels -> HLO -> PJRT). ---
-    let engine = Engine::new("artifacts")?;
-    println!("PJRT platform: {}", engine.platform());
-    let layer = "alexnet_conv3";
-    println!("layer {layer}: three methods through the compiled artifacts");
+fn main() {
+    let threads = default_threads();
+
+    // --- Part 1: the three methods agree on a small layer. ---
+    let shape = ConvShape::new(16, 32, 14, 14, 3, 3, 1, 1).with_sparsity(0.8);
+    let mut rng = Rng::new(7);
+    let x = Tensor4::random_activations(Dims4::new(2, shape.c, shape.h, shape.w), &mut rng);
+    let w = ConvWeights::synthetic(&shape, &mut rng);
+    println!("layer {shape}: three methods through compiled plans");
     let mut outputs = Vec::new();
-    for method in ["gemm", "spmm", "sconv"] {
-        let loaded = engine.load(&format!("{layer}_{method}"))?;
-        let shape = loaded.artifact.shape.clone().unwrap();
-        let mut rng = Rng::new(7);
-        let x = Tensor4::random_activations(
-            Dims4::new(loaded.artifact.batch, shape.c, shape.h, shape.w),
-            &mut rng,
-        );
-        let w = ConvWeights::synthetic(&shape, &mut rng);
-        let lits = loaded.weight_literals(&w)?;
+    for method in [Method::LoweredGemm, Method::LoweredSpmm, Method::DirectSparse] {
+        let plan = LayerPlan::build(&shape, &w, method, threads);
         let t0 = Instant::now();
-        let y = loaded.run(&x, &lits)?;
+        let y = plan.run(&x);
         println!(
-            "  {method:>5}: out {} in {:?} (compile {:?})",
+            "  {:>13}: out {} in {:?} (workspace {} floats)",
+            method.name(),
             y.dims(),
             t0.elapsed(),
-            loaded.compile_time
+            plan.workspace_floats(2)
         );
         outputs.push(y);
     }
     for pair in outputs.windows(2) {
-        assert!(
-            pair[0].allclose(&pair[1], 1e-3, 1e-3),
-            "methods disagree!"
-        );
+        assert!(pair[0].allclose(&pair[1], 1e-3, 1e-3), "methods disagree!");
     }
     println!("  all three methods agree.");
 
-    // --- Part 2: the native kernel at the paper's full layer size. ---
+    // --- Part 2: the paper's full AlexNet conv3, kernel-only timing. ---
     let shape = ConvShape::new(256, 384, 13, 13, 3, 3, 1, 1).with_sparsity(0.88);
     let mut rng = Rng::new(8);
     let x = Tensor4::random_activations(Dims4::new(4, shape.c, shape.h, shape.w), &mut rng);
     let w = ConvWeights::synthetic(&shape, &mut rng);
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
-    let t0 = Instant::now();
-    let dense = lowered_gemm_parallel(&shape, &x, &w, threads);
-    let t_dense = t0.elapsed();
-    let banks = w.stretched_banks();
-    let t0 = Instant::now();
-    let sparse = sconv_parallel(&shape, &x, &banks, threads);
-    let t_sparse = t0.elapsed();
+    let mut ws = Workspace::new();
+    let mut time = |method: Method| {
+        let plan = LayerPlan::build(&shape, &w, method, threads);
+        ws.ensure(plan.workspace_floats(4));
+        let mut out = Tensor4::zeros(plan.out_dims(4));
+        let t0 = Instant::now();
+        plan.execute_into(4, x.data(), &mut ws, out.data_mut(), None);
+        (t0.elapsed(), out)
+    };
+    let (t_dense, dense) = time(Method::LoweredGemm);
+    let (t_sparse, sparse) = time(Method::DirectSparse);
     assert!(sparse.allclose(&dense, 1e-3, 1e-3));
     println!(
         "native AlexNet conv3 (sparsity 0.88, batch 4): lowering+GEMM {t_dense:?} vs \
          Escoin {t_sparse:?} ({:.2}x)",
         t_dense.as_secs_f64() / t_sparse.as_secs_f64()
     );
-    Ok(())
 }

@@ -1,35 +1,43 @@
 //! End-to-end serving driver (the DESIGN.md E2E validation): start the
-//! coordinator on a MiniCNN model artifact, fire a stream of single-image
+//! coordinator on a shared NetworkPlan, fire a stream of single-image
 //! requests through the dynamic batcher, and report latency/throughput.
 //!
 //! ```text
-//! make artifacts && cargo run --release --example serve_inference [requests] [artifact]
+//! cargo run --release --example serve_inference [requests] [network] [--threads N]
 //! ```
 //!
 //! Results are recorded in EXPERIMENTS.md §E2E.
 
-use escoin::coordinator::{BatcherConfig, ServerConfig, ServerHandle};
-use escoin::util::Rng;
+use escoin::coordinator::{BatcherConfig, RouterConfig, ServerConfig, ServerHandle};
+use escoin::util::{default_threads, Rng};
 use std::time::{Duration, Instant};
 
-fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let total: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(256);
-    let artifact = args
-        .get(2)
-        .cloned()
-        .unwrap_or_else(|| "minicnn_sconv".to_string());
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let threads = args
+        .iter()
+        .position(|a| a == "--threads")
+        .and_then(|i| {
+            let n = args.get(i + 1)?.parse::<usize>().ok()?;
+            args.drain(i..=i + 1);
+            Some(n)
+        })
+        .unwrap_or_else(default_threads);
+    let total: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(256);
+    let network = args.get(1).cloned().unwrap_or_else(|| "minicnn".to_string());
 
-    println!("starting server on {artifact} ...");
+    println!("starting server on {network} ({threads} threads) ...");
     let t0 = Instant::now();
     let server = ServerHandle::start(ServerConfig {
-        artifact_dir: "artifacts".into(),
-        artifact: artifact.clone(),
+        network: network.clone(),
         batcher: BatcherConfig {
-            batch_size: 4, // overridden by the artifact's static batch
+            batch_size: 4,
             max_wait: Duration::from_millis(2),
         },
         weight_seed: 42,
+        threads,
+        router: RouterConfig::default(),
+        ..Default::default()
     })?;
     println!(
         "server ready in {:?} (image elems {}, classes {})",
@@ -55,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     let p = |q: f64| latencies[((q * (total - 1) as f64) as usize).min(total - 1)];
 
     let m = server.metrics();
-    println!("--- E2E serving results ({artifact}) ---");
+    println!("--- E2E serving results ({network}) ---");
     println!("requests:       {total}");
     println!("wall time:      {wall:?}");
     println!("throughput:     {:.1} images/s", total as f64 / wall.as_secs_f64());
@@ -64,7 +72,8 @@ fn main() -> anyhow::Result<()> {
     println!("latency p99:    {:.2} ms", p(0.99));
     println!("batches:        {} (padded slots {})", m.batches, m.padded_slots);
     let stats = server.shutdown()?;
-    println!("model compile:  {:?}", stats.compile_time);
+    println!("plan build:     {:?}", stats.plan_build_time);
+    println!("replans:        {}", stats.replans);
     assert_eq!(stats.snapshot.errors, 0, "no batch may fail");
     Ok(())
 }

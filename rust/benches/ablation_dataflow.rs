@@ -13,7 +13,7 @@ use escoin::tensor::{Dims4, Tensor4};
 use escoin::util::Rng;
 
 fn main() {
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = escoin::util::default_threads();
     let bench = BenchOpts::from_env();
 
     // Part 1: cache routing (simulated).

@@ -19,7 +19,7 @@ fn main() {
         spatial_scale: env_usize("ESCOIN_BENCH_SCALE", 1),
         threads: env_usize(
             "ESCOIN_BENCH_THREADS",
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            escoin::util::default_threads(),
         ),
         bench: BenchOpts::from_env(),
     };

@@ -10,9 +10,9 @@
 
 use super::timing::{bench_median, BenchOpts};
 use crate::config::{ConvShape, Network};
-use crate::conv::{lowered_gemm_parallel, lowered_spmm_parallel, sconv_parallel, ConvWeights};
+use crate::conv::{ConvWeights, LayerPlan, Method, Workspace};
 use crate::tensor::{Dims4, Tensor4};
-use crate::util::{geomean, Rng};
+use crate::util::{default_threads, geomean, Rng};
 use std::time::Duration;
 
 /// One model's Fig 8 data point.
@@ -50,18 +50,24 @@ impl Default for Fig8Opts {
         Self {
             batch: 4,
             spatial_scale: 1,
-            threads: std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4),
+            threads: default_threads(),
             bench: BenchOpts::default(),
         }
     }
 }
 
-/// Time all sparse CONV layers of `net` under the three methods.
+/// The three contenders, in `totals` slot order.
+const APPROACHES: [Method; 3] = [Method::LoweredGemm, Method::LoweredSpmm, Method::DirectSparse];
+
+/// Time all sparse CONV layers of `net` under the three methods. Each
+/// `(layer, method)` is compiled into a [`LayerPlan`] once; the timed
+/// region is pure plan execution against a reused workspace — operand
+/// transforms and output allocation are off the clock, exactly like the
+/// paper's kernel-only timings.
 pub fn fig8_sparse_conv(net: &Network, opts: Fig8Opts) -> Fig8Row {
     let mut rng = Rng::new(0xF18);
     let mut totals = [Duration::ZERO; 3];
+    let mut ws = Workspace::new();
     for (idx, (_name, shape)) in net.sparse_conv_layers().into_iter().enumerate() {
         let shape: ConvShape = if opts.spatial_scale > 1 {
             shape.scaled_spatial(opts.spatial_scale)
@@ -74,18 +80,15 @@ pub fn fig8_sparse_conv(net: &Network, opts: Fig8Opts) -> Fig8Row {
         );
         let mut wrng = Rng::new(0xF18_000 + idx as u64);
         let w = ConvWeights::synthetic(&shape, &mut wrng);
-        let banks = w.csr_banks();
-        let stretched = w.stretched_banks();
 
-        totals[0] += bench_median(opts.bench, || {
-            lowered_gemm_parallel(&shape, &x, &w, opts.threads)
-        });
-        totals[1] += bench_median(opts.bench, || {
-            lowered_spmm_parallel(&shape, &x, &banks, opts.threads)
-        });
-        totals[2] += bench_median(opts.bench, || {
-            sconv_parallel(&shape, &x, &stretched, opts.threads)
-        });
+        for (slot, method) in APPROACHES.into_iter().enumerate() {
+            let plan = LayerPlan::build(&shape, &w, method, opts.threads);
+            ws.ensure(plan.workspace_floats(opts.batch));
+            let mut out = Tensor4::zeros(plan.out_dims(opts.batch));
+            totals[slot] += bench_median(opts.bench, || {
+                plan.execute_into(opts.batch, x.data(), &mut ws, out.data_mut(), None)
+            });
+        }
     }
     Fig8Row {
         model: net.name.clone(),

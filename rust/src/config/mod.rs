@@ -12,4 +12,4 @@ mod networks;
 
 pub use layer::{ConvShape, FcShape, LayerKind, PoolKind};
 pub use network::{Layer, Network, NetworkSummary};
-pub use networks::{alexnet, all_networks, googlenet, network_by_name, resnet50};
+pub use networks::{alexnet, all_networks, googlenet, minicnn, network_by_name, resnet50};

@@ -246,16 +246,43 @@ pub fn resnet50() -> Network {
 }
 
 /// All three evaluated networks in paper order.
+/// MiniCNN — the small 3-conv classifier the serving path defaults to
+/// (same role as the AOT `minicnn_*` model artifacts: fast enough that a
+/// request round-trip is dominated by batching, not compute). conv2 and
+/// conv3 are pruned so the router has a real sparse-vs-dense decision.
+pub fn minicnn() -> Network {
+    let layers = vec![
+        conv("conv1", ConvShape::new(3, 8, 16, 16, 3, 3, 1, 1)),
+        conv(
+            "conv2",
+            ConvShape::new(8, 16, 16, 16, 3, 3, 1, 1).with_sparsity(0.7),
+        ),
+        pool("pool1", PoolKind::Max, 16, 16, 16, 2, 2, 0),
+        conv(
+            "conv3",
+            ConvShape::new(16, 16, 8, 8, 3, 3, 1, 1).with_sparsity(0.8),
+        ),
+        fc("fc", 16 * 8 * 8, 10),
+    ];
+    Network {
+        name: "minicnn".into(),
+        layers,
+    }
+}
+
+/// The paper's three evaluated networks (Table 3 rows).
 pub fn all_networks() -> Vec<Network> {
     vec![alexnet(), googlenet(), resnet50()]
 }
 
-/// Case-insensitive lookup by the names used throughout the paper.
+/// Case-insensitive lookup by the names used throughout the paper, plus
+/// the serving-path `minicnn`.
 pub fn network_by_name(name: &str) -> Option<Network> {
     match name.to_ascii_lowercase().as_str() {
         "alexnet" => Some(alexnet()),
         "googlenet" => Some(googlenet()),
         "resnet" | "resnet50" | "resnet-50" => Some(resnet50()),
+        "minicnn" => Some(minicnn()),
         _ => None,
     }
 }

@@ -1,0 +1,704 @@
+//! Workspace arena + whole-network execution plans.
+//!
+//! cuDNN-style workspace discipline for the native kernels: a
+//! [`Workspace`] is a flat float arena that each [`super::ConvExecutor`]
+//! carves into its padded-input / lowered-matrix / scratch segments; it
+//! grows to the high-water mark on first use and never again. A
+//! [`WorkspaceArena`] extends that with ping-pong activation buffers
+//! sized for a whole network, so a [`NetworkPlan::run`] performs **zero
+//! steady-state allocation**: activations flow ping → pong → ping, every
+//! kernel writes into pre-sized slices, and two runs against one arena
+//! are byte-identical (no workspace contamination).
+//!
+//! [`NetworkPlan`] is the compiled form of a [`Network`]: per-CONV-layer
+//! [`LayerPlan`]s (built once, shared via `Arc`) plus native FC / pool /
+//! ReLU / LRN steps, walked in order. The scheduler, the serving
+//! executor, and the figure benches all run networks through it.
+
+use super::plan::{LayerPlan, Method};
+use crate::config::{ConvShape, FcShape, Layer, LayerKind, Network, PoolKind};
+use crate::conv::weights::ConvWeights;
+use crate::tensor::Dims4;
+use crate::util::{Rng, Stopwatch};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A flat float arena. Grows monotonically via [`Workspace::ensure`];
+/// executors split it into their per-call segments.
+#[derive(Default)]
+pub struct Workspace {
+    buf: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(floats: usize) -> Self {
+        Self {
+            buf: vec![0.0; floats],
+        }
+    }
+
+    /// Grow to at least `floats` (no-op once the high-water mark is hit).
+    pub fn ensure(&mut self, floats: usize) {
+        if self.buf.len() < floats {
+            self.buf.resize(floats, 0.0);
+        }
+    }
+
+    /// Current size in floats — stable across steady-state execution.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn buf_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+/// Time `f` under `name` when a stopwatch is attached, else just run it.
+fn lap<T>(sw: &mut Option<Stopwatch>, name: &str, f: impl FnOnce() -> T) -> T {
+    match sw {
+        Some(s) => s.lap(name, f),
+        None => f(),
+    }
+}
+
+/// Zero-pad `input` (NCHW, `batch * C * H * W`) spatially by `shape.pad`
+/// into `dst` (`batch * C * Hp * Wp`) — the paper's `pad_in` kernel,
+/// writing into a caller slice instead of a fresh tensor.
+pub(crate) fn pad_into(shape: &ConvShape, batch: usize, input: &[f32], dst: &mut [f32]) {
+    let (c, h, w, p) = (shape.c, shape.h, shape.w, shape.pad);
+    let (hp, wp) = (shape.padded_h(), shape.padded_w());
+    debug_assert_eq!(input.len(), batch * c * h * w);
+    debug_assert_eq!(dst.len(), batch * c * hp * wp);
+    dst.fill(0.0);
+    for n in 0..batch {
+        for ci in 0..c {
+            for hh in 0..h {
+                let src = ((n * c + ci) * h + hh) * w;
+                let d = ((n * c + ci) * hp + hh + p) * wp + p;
+                dst[d..d + w].copy_from_slice(&input[src..src + w]);
+            }
+        }
+    }
+}
+
+/// Preallocated buffers for running one [`NetworkPlan`]: the shared
+/// kernel workspace plus ping-pong activation buffers sized to the
+/// largest layer. Reused across runs; sized once by
+/// [`WorkspaceArena::for_plan`] (or lazily on first run).
+#[derive(Default)]
+pub struct WorkspaceArena {
+    ws: Workspace,
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+}
+
+impl WorkspaceArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Preallocate everything `plan` needs so `run` never allocates.
+    pub fn for_plan(plan: &NetworkPlan) -> Self {
+        let act = plan.max_activation_floats();
+        Self {
+            ws: Workspace::with_capacity(plan.workspace_floats()),
+            ping: vec![0.0; act],
+            pong: vec![0.0; act],
+        }
+    }
+
+    /// Total floats held — stable across steady-state runs (the
+    /// zero-allocation regression check).
+    pub fn total_floats(&self) -> usize {
+        self.ws.capacity() + self.ping.len() + self.pong.len()
+    }
+
+    /// The kernel workspace, for driving a [`LayerPlan`] directly.
+    pub fn workspace(&mut self) -> &mut Workspace {
+        &mut self.ws
+    }
+}
+
+/// How a step decides whether the previous step's output feeds it (branch
+/// layers in the inception-style tables get fresh synthetic inputs, same
+/// as the seed scheduler).
+enum MatchMode {
+    /// Full NCHW dims must match (conv, pool).
+    Exact,
+    /// Per-image element count must match (fc, relu, lrn).
+    Elems,
+}
+
+enum PlanOp {
+    Conv { plan: Arc<LayerPlan> },
+    Fc { fc: FcShape, w: Arc<Vec<f32>> },
+    Pool { kind: PoolKind, k: usize, stride: usize, pad: usize },
+    Relu,
+    Lrn,
+}
+
+struct PlanStep {
+    name: String,
+    op: PlanOp,
+    in_dims: Dims4,
+    out_dims: Dims4,
+    matching: MatchMode,
+}
+
+/// Weighted layer operands, supplied by the caller of
+/// [`NetworkPlan::from_parts`] (the scheduler passes its prebuilt /
+/// cached weights; [`NetworkPlan::build`] generates synthetic ones).
+pub enum WeightedOp {
+    Conv(Arc<LayerPlan>),
+    Fc(Arc<Vec<f32>>),
+}
+
+/// One executed layer, reported by [`NetworkPlan::run_timed`] and
+/// [`NetworkPlan::run_serving`].
+pub struct PlanLayerRun<'a> {
+    pub layer: &'a str,
+    pub method: Option<Method>,
+    pub total: Duration,
+    /// Sub-kernel laps (`pad_in`, `im2col`, `sgemm`, `csrmm`, `sconv`,
+    /// `winograd`, `relu`, `pool`, `lrn`, `fc`). `None` when the run asked
+    /// for layer totals only ([`NetworkPlan::run_serving`]) — per-kernel
+    /// laps force the executors onto their sequential-image path, which a
+    /// serving hot loop must not pay.
+    pub kernels: Option<&'a Stopwatch>,
+}
+
+/// A compiled whole-network execution plan for a fixed batch size.
+pub struct NetworkPlan {
+    pub network_name: String,
+    pub batch: usize,
+    steps: Vec<PlanStep>,
+    input_dims: Dims4,
+    output_dims: Dims4,
+    /// Seed for the synthetic inputs a run generates (first layer when no
+    /// external input is given, and branch layers whose declared shape
+    /// does not chain) — fixed at build so runs are deterministic.
+    input_seed: u64,
+}
+
+impl NetworkPlan {
+    /// Compile `network` with synthetic pruned weights (seeded like the
+    /// scheduler: one RNG walked in layer order). `pick` chooses the
+    /// method per *sparse* CONV layer; dense CONV layers run LoweredGemm,
+    /// matching the paper's baseline configuration.
+    pub fn build(
+        network: &Network,
+        batch: usize,
+        seed: u64,
+        threads: usize,
+        mut pick: impl FnMut(&str, &ConvShape) -> Method,
+    ) -> NetworkPlan {
+        let mut rng = Rng::new(seed);
+        Self::from_parts(network, batch, &mut |layer| match &layer.kind {
+            LayerKind::Conv(shape) => {
+                let w = Arc::new(ConvWeights::synthetic(shape, &mut rng));
+                let method = if shape.is_sparse() {
+                    pick(&layer.name, shape)
+                } else {
+                    Method::LoweredGemm
+                };
+                Some(WeightedOp::Conv(Arc::new(LayerPlan::build_shared(
+                    shape, w, method, threads,
+                ))))
+            }
+            LayerKind::Fc(fc) => Some(WeightedOp::Fc(Arc::new(rng.normal_vec(fc.weights())))),
+            _ => None,
+        })
+    }
+
+    /// Compile from caller-supplied weighted operands. `make` is called
+    /// once per CONV/FC layer, in network order (so a seeded RNG inside
+    /// it reproduces the scheduler's weight walk); other layer kinds are
+    /// planned natively.
+    pub fn from_parts(
+        network: &Network,
+        batch: usize,
+        make: &mut dyn FnMut(&Layer) -> Option<WeightedOp>,
+    ) -> NetworkPlan {
+        assert!(batch > 0, "batch must be positive");
+        assert!(!network.layers.is_empty(), "empty network");
+        let mut steps = Vec::with_capacity(network.layers.len());
+        for layer in &network.layers {
+            let step = match &layer.kind {
+                LayerKind::Conv(shape) => {
+                    let Some(WeightedOp::Conv(plan)) = make(layer) else {
+                        panic!("{}: conv layer needs a LayerPlan", layer.name);
+                    };
+                    assert_eq!(plan.shape(), shape, "{}: plan/layer shape", layer.name);
+                    PlanStep {
+                        name: layer.name.clone(),
+                        in_dims: Dims4::new(batch, shape.c, shape.h, shape.w),
+                        out_dims: plan.out_dims(batch),
+                        matching: MatchMode::Exact,
+                        op: PlanOp::Conv { plan },
+                    }
+                }
+                LayerKind::Fc(fc) => {
+                    let Some(WeightedOp::Fc(w)) = make(layer) else {
+                        panic!("{}: fc layer needs weights", layer.name);
+                    };
+                    assert_eq!(w.len(), fc.weights(), "{}: fc weight count", layer.name);
+                    PlanStep {
+                        name: layer.name.clone(),
+                        in_dims: Dims4::new(batch, fc.in_features, 1, 1),
+                        out_dims: Dims4::new(batch, fc.out_features, 1, 1),
+                        matching: MatchMode::Elems,
+                        op: PlanOp::Fc { fc: fc.clone(), w },
+                    }
+                }
+                LayerKind::Pool {
+                    kind,
+                    c,
+                    h,
+                    w,
+                    k,
+                    stride,
+                    pad,
+                } => {
+                    let oh = (h + 2 * pad - k) / stride + 1;
+                    let ow = (w + 2 * pad - k) / stride + 1;
+                    PlanStep {
+                        name: layer.name.clone(),
+                        in_dims: Dims4::new(batch, *c, *h, *w),
+                        out_dims: Dims4::new(batch, *c, oh, ow),
+                        matching: MatchMode::Exact,
+                        op: PlanOp::Pool {
+                            kind: *kind,
+                            k: *k,
+                            stride: *stride,
+                            pad: *pad,
+                        },
+                    }
+                }
+                LayerKind::Relu { elems } => PlanStep {
+                    name: layer.name.clone(),
+                    in_dims: Dims4::new(batch, *elems, 1, 1),
+                    out_dims: Dims4::new(batch, *elems, 1, 1),
+                    matching: MatchMode::Elems,
+                    op: PlanOp::Relu,
+                },
+                LayerKind::Lrn { elems } => PlanStep {
+                    name: layer.name.clone(),
+                    in_dims: Dims4::new(batch, *elems, 1, 1),
+                    out_dims: Dims4::new(batch, *elems, 1, 1),
+                    matching: MatchMode::Elems,
+                    op: PlanOp::Lrn,
+                },
+            };
+            steps.push(step);
+        }
+        let input_dims = steps[0].in_dims;
+        let output_dims = steps.last().unwrap().out_dims;
+        NetworkPlan {
+            network_name: network.name.clone(),
+            batch,
+            steps,
+            input_dims,
+            output_dims,
+            input_seed: 0xBA7C4 + batch as u64,
+        }
+    }
+
+    /// Dims of the tensor a run consumes (first layer's declared input).
+    pub fn input_dims(&self) -> Dims4 {
+        self.input_dims
+    }
+
+    /// Dims of the tensor a run produces (last layer's output).
+    pub fn output_dims(&self) -> Dims4 {
+        self.output_dims
+    }
+
+    /// Elements one request image must contain (`C*H*W` of the input).
+    pub fn image_elems(&self) -> usize {
+        self.input_dims.chw()
+    }
+
+    /// Kernel workspace high-water mark over all CONV steps.
+    pub fn workspace_floats(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| match &s.op {
+                PlanOp::Conv { plan } => plan.workspace_floats(self.batch),
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Largest activation buffer any step reads or writes.
+    pub fn max_activation_floats(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| s.in_dims.len().max(s.out_dims.len()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// `(layer name, method)` of every CONV step — what the serving
+    /// executor compares against fresh router choices when replanning.
+    pub fn conv_methods(&self) -> Vec<(String, Method)> {
+        self.steps
+            .iter()
+            .filter_map(|s| match &s.op {
+                PlanOp::Conv { plan } => Some((s.name.clone(), plan.method())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Run on synthetic activations (deterministic per plan). Returns the
+    /// final activation slice, resident in `arena`.
+    pub fn run<'a>(&self, arena: &'a mut WorkspaceArena) -> &'a [f32] {
+        self.run_inner(None, arena, None, false)
+    }
+
+    /// Run on a caller-provided input batch (`input_dims().len()` floats).
+    pub fn run_with_input<'a>(&self, input: &[f32], arena: &'a mut WorkspaceArena) -> &'a [f32] {
+        self.run_inner(Some(input), arena, None, false)
+    }
+
+    /// Run with full per-kernel timing (Fig 9 buckets), reporting each
+    /// layer to `observer`. Conv executors serialise images on this path
+    /// so laps do not interleave across threads — benchmarking only.
+    pub fn run_timed<'a>(
+        &self,
+        arena: &'a mut WorkspaceArena,
+        observer: &mut dyn FnMut(PlanLayerRun),
+    ) -> &'a [f32] {
+        self.run_inner(None, arena, Some(observer), true)
+    }
+
+    /// Serving-path run: external input, per-layer **totals** reported to
+    /// `observer` (for router EWMA feedback), kernels untimed so the
+    /// parallel execution paths stay engaged.
+    pub fn run_serving<'a>(
+        &self,
+        input: &[f32],
+        arena: &'a mut WorkspaceArena,
+        observer: &mut dyn FnMut(PlanLayerRun),
+    ) -> &'a [f32] {
+        self.run_inner(Some(input), arena, Some(observer), false)
+    }
+
+    fn run_inner<'a>(
+        &self,
+        input: Option<&[f32]>,
+        arena: &'a mut WorkspaceArena,
+        mut observer: Option<&mut dyn FnMut(PlanLayerRun)>,
+        kernel_laps: bool,
+    ) -> &'a [f32] {
+        if let Some(inp) = input {
+            assert_eq!(inp.len(), self.input_dims.len(), "input length");
+        }
+        let act = self.max_activation_floats();
+        if arena.ping.len() < act {
+            arena.ping.resize(act, 0.0);
+        }
+        if arena.pong.len() < act {
+            arena.pong.resize(act, 0.0);
+        }
+        arena.ws.ensure(self.workspace_floats());
+
+        let mut rng = Rng::new(self.input_seed);
+        let mut cur_is_ping = true;
+        let mut cur_dims: Option<Dims4> = None;
+        let mut first = true;
+
+        for step in &self.steps {
+            let timed = observer.is_some() && kernel_laps;
+            let mut sw = if timed { Some(Stopwatch::new()) } else { None };
+            let t0 = Instant::now();
+            let in_len = step.in_dims.len();
+            let out_len = step.out_dims.len();
+
+            // Feed the step: chain the previous output when its shape
+            // matches, otherwise synthesise a fresh input (branch layers),
+            // or copy the external input on the first step.
+            let matches = match cur_dims {
+                None => false,
+                Some(d) => match step.matching {
+                    MatchMode::Exact => d == step.in_dims,
+                    MatchMode::Elems => d.n == self.batch && d.chw() == step.in_dims.chw(),
+                },
+            };
+            if !matches {
+                let cur = if cur_is_ping {
+                    &mut arena.ping
+                } else {
+                    &mut arena.pong
+                };
+                if first && input.is_some() {
+                    cur[..in_len].copy_from_slice(input.unwrap());
+                } else {
+                    rng.fill_activations(&mut cur[..in_len]);
+                }
+                cur_dims = Some(step.in_dims);
+            }
+            first = false;
+
+            let mut method = None;
+            match &step.op {
+                PlanOp::Relu | PlanOp::Lrn => {
+                    // Elementwise, in place: no ping-pong swap, and the
+                    // (possibly non-flat) incoming dims are preserved.
+                    let cur = if cur_is_ping {
+                        &mut arena.ping
+                    } else {
+                        &mut arena.pong
+                    };
+                    let name = if matches!(step.op, PlanOp::Lrn) {
+                        "lrn"
+                    } else {
+                        "relu"
+                    };
+                    lap(&mut sw, name, || match &step.op {
+                        PlanOp::Lrn => {
+                            for v in &mut cur[..in_len] {
+                                // LRN modelled as a 5-op/element pass.
+                                let x2 = *v * *v;
+                                *v /= (1.0 + 1e-4 * x2).powf(0.75);
+                            }
+                        }
+                        _ => {
+                            for v in &mut cur[..in_len] {
+                                *v = v.max(0.0);
+                            }
+                        }
+                    });
+                }
+                _ => {
+                    let (src, dst, ws) = if cur_is_ping {
+                        (&mut arena.ping, &mut arena.pong, &mut arena.ws)
+                    } else {
+                        (&mut arena.pong, &mut arena.ping, &mut arena.ws)
+                    };
+                    let src = &src[..in_len];
+                    let dst = &mut dst[..out_len];
+                    match &step.op {
+                        PlanOp::Conv { plan } => {
+                            method = Some(plan.method());
+                            plan.execute_into(self.batch, src, ws, dst, sw.as_mut());
+                            // ReLU follows every conv in all three
+                            // networks (seed scheduler behaviour).
+                            lap(&mut sw, "relu", || {
+                                for v in dst.iter_mut() {
+                                    *v = v.max(0.0);
+                                }
+                            });
+                        }
+                        PlanOp::Fc { fc, w } => {
+                            lap(&mut sw, "fc", || fc_into(fc, w, self.batch, src, dst));
+                        }
+                        PlanOp::Pool {
+                            kind,
+                            k,
+                            stride,
+                            pad,
+                        } => {
+                            lap(&mut sw, "pool", || {
+                                pool_into(
+                                    *kind,
+                                    *k,
+                                    *stride,
+                                    *pad,
+                                    step.in_dims,
+                                    step.out_dims,
+                                    src,
+                                    dst,
+                                )
+                            });
+                        }
+                        _ => unreachable!(),
+                    }
+                    cur_is_ping = !cur_is_ping;
+                    cur_dims = Some(step.out_dims);
+                }
+            }
+
+            if let Some(obs) = observer.as_mut() {
+                obs(PlanLayerRun {
+                    layer: &step.name,
+                    method,
+                    total: t0.elapsed(),
+                    kernels: sw.as_ref(),
+                });
+            }
+        }
+
+        let cur = if cur_is_ping { &arena.ping } else { &arena.pong };
+        &cur[..self.output_dims.len()]
+    }
+}
+
+/// `out[n][o] = Σ_i x[n][i] * w[o][i]` — the seed scheduler's FC kernel,
+/// writing into a caller slice.
+fn fc_into(fc: &FcShape, w: &[f32], batch: usize, input: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(input.len(), batch * fc.in_features);
+    debug_assert_eq!(out.len(), batch * fc.out_features);
+    for img in 0..batch {
+        let xrow = &input[img * fc.in_features..(img + 1) * fc.in_features];
+        let orow = &mut out[img * fc.out_features..(img + 1) * fc.out_features];
+        for (o, oval) in orow.iter_mut().enumerate() {
+            let wrow = &w[o * fc.in_features..(o + 1) * fc.in_features];
+            *oval = xrow.iter().zip(wrow).map(|(a, b)| a * b).sum();
+        }
+    }
+}
+
+/// Max/avg pooling over NCHW slices — the seed scheduler's pool kernel.
+#[allow(clippy::too_many_arguments)]
+fn pool_into(
+    kind: PoolKind,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    in_dims: Dims4,
+    out_dims: Dims4,
+    input: &[f32],
+    out: &mut [f32],
+) {
+    let d = in_dims;
+    let (oh, ow) = (out_dims.h, out_dims.w);
+    for n in 0..d.n {
+        for c in 0..d.c {
+            for h in 0..oh {
+                for w in 0..ow {
+                    let mut acc: f32 = match kind {
+                        PoolKind::Max => f32::NEG_INFINITY,
+                        PoolKind::Avg => 0.0,
+                    };
+                    let mut count = 0;
+                    for dh in 0..k {
+                        for dw in 0..k {
+                            let hh = (h * stride + dh) as isize - pad as isize;
+                            let ww = (w * stride + dw) as isize - pad as isize;
+                            if hh >= 0 && ww >= 0 && (hh as usize) < d.h && (ww as usize) < d.w {
+                                let v = input[d.index(n, c, hh as usize, ww as usize)];
+                                match kind {
+                                    PoolKind::Max => acc = acc.max(v),
+                                    PoolKind::Avg => acc += v,
+                                }
+                                count += 1;
+                            }
+                        }
+                    }
+                    if kind == PoolKind::Avg && count > 0 {
+                        acc /= count as f32;
+                    }
+                    out[out_dims.index(n, c, h, w)] = acc;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::minicnn;
+
+    #[test]
+    fn network_plan_geometry() {
+        let net = minicnn();
+        let plan = NetworkPlan::build(&net, 2, 1, 2, |_, _| Method::DirectSparse);
+        assert_eq!(plan.input_dims(), Dims4::new(2, 3, 16, 16));
+        assert_eq!(plan.output_dims(), Dims4::new(2, 10, 1, 1));
+        assert_eq!(plan.image_elems(), 3 * 16 * 16);
+        assert!(plan.workspace_floats() > 0);
+        assert_eq!(plan.conv_methods().len(), 3);
+        // conv1 is dense -> forced LoweredGemm
+        assert_eq!(plan.conv_methods()[0].1, Method::LoweredGemm);
+        assert_eq!(plan.conv_methods()[1].1, Method::DirectSparse);
+    }
+
+    #[test]
+    fn run_produces_finite_logits_and_reuses_arena() {
+        let net = minicnn();
+        let plan = NetworkPlan::build(&net, 2, 3, 2, |_, _| Method::DirectSparse);
+        let mut arena = WorkspaceArena::for_plan(&plan);
+        let floats = arena.total_floats();
+        let out = plan.run(&mut arena).to_vec();
+        assert_eq!(out.len(), plan.output_dims().len());
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert_eq!(arena.total_floats(), floats, "arena grew during run");
+    }
+
+    #[test]
+    fn external_input_drives_the_first_layer() {
+        let net = minicnn();
+        let plan = NetworkPlan::build(&net, 1, 5, 1, |_, _| Method::LoweredGemm);
+        let mut arena = WorkspaceArena::for_plan(&plan);
+        let zeros = vec![0.0; plan.input_dims().len()];
+        let mut rng = Rng::new(77);
+        let mut img = vec![0.0; plan.input_dims().len()];
+        rng.fill_activations(&mut img);
+        let a = plan.run_with_input(&zeros, &mut arena).to_vec();
+        let b = plan.run_with_input(&img, &mut arena).to_vec();
+        let a2 = plan.run_with_input(&zeros, &mut arena).to_vec();
+        assert_eq!(a, a2, "same input must reproduce");
+        assert_ne!(a, b, "different inputs must differ");
+    }
+
+    #[test]
+    fn timed_run_reports_every_layer() {
+        let net = minicnn();
+        let plan = NetworkPlan::build(&net, 1, 9, 2, |_, _| Method::LoweredSpmm);
+        let mut arena = WorkspaceArena::for_plan(&plan);
+        let mut seen = Vec::new();
+        plan.run_timed(&mut arena, &mut |lr| {
+            seen.push((lr.layer.to_string(), lr.method, lr.kernels.unwrap().names()));
+        });
+        assert_eq!(seen.len(), net.layers.len());
+        // sparse conv under LoweredSpmm must show csrmm laps
+        let conv2 = seen.iter().find(|(n, _, _)| n == "conv2").unwrap();
+        assert_eq!(conv2.1, Some(Method::LoweredSpmm));
+        assert!(conv2.2.contains(&"csrmm".to_string()));
+        // fc layer has no method and an "fc" lap
+        let fc = seen.last().unwrap();
+        assert_eq!(fc.1, None);
+        assert!(fc.2.contains(&"fc".to_string()));
+    }
+
+    #[test]
+    fn serving_run_reports_totals_without_kernel_laps() {
+        let net = minicnn();
+        let plan = NetworkPlan::build(&net, 2, 13, 4, |_, _| Method::DirectSparse);
+        let mut arena = WorkspaceArena::for_plan(&plan);
+        let mut rng = Rng::new(17);
+        let mut img = vec![0.0; plan.input_dims().len()];
+        rng.fill_activations(&mut img);
+        let mut observed = 0;
+        let serving = plan
+            .run_serving(&img, &mut arena, &mut |lr| {
+                assert!(lr.kernels.is_none(), "serving path must not lap kernels");
+                observed += 1;
+            })
+            .to_vec();
+        assert_eq!(observed, net.layers.len());
+        // Same numerics as the plain input run.
+        let plain = plan.run_with_input(&img, &mut arena).to_vec();
+        assert_eq!(serving, plain);
+    }
+
+    #[test]
+    fn pad_into_matches_tensor_pad() {
+        use crate::tensor::Tensor4;
+        let shape = ConvShape::new(3, 4, 5, 6, 3, 3, 1, 2);
+        let mut rng = Rng::new(11);
+        let x = Tensor4::random_activations(Dims4::new(2, 3, 5, 6), &mut rng);
+        let want = x.pad_spatial(2);
+        let mut got = vec![f32::NAN; want.dims().len()];
+        pad_into(&shape, 2, x.data(), &mut got);
+        assert_eq!(got, want.data());
+    }
+}

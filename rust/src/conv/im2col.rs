@@ -15,19 +15,20 @@ use crate::tensor::{Dims4, Tensor4};
 /// Materialise the lowered matrix for image `n`, group `g` of `padded`
 /// (an already spatially padded input) into `out`, which must hold
 /// `(C/g)*R*S * E*F` floats. Row = `(c, r, s)`, column = `(h, w)`.
-pub fn im2col_group(
-    shape: &ConvShape,
-    padded: &Tensor4,
-    n: usize,
-    g: usize,
-    out: &mut [f32],
-) {
+pub fn im2col_group(shape: &ConvShape, padded: &Tensor4, n: usize, g: usize, out: &mut [f32]) {
+    debug_assert_eq!(padded.dims().h, shape.padded_h());
+    im2col_group_into(shape, padded.data(), n, g, out)
+}
+
+/// Slice-level `im2col_group`: `padded` is `batch * C * Hp * Wp` floats in
+/// NCHW order — what the plan executors feed from a reused workspace.
+pub fn im2col_group_into(shape: &ConvShape, padded: &[f32], n: usize, g: usize, out: &mut [f32]) {
     let (e, f) = (shape.out_h(), shape.out_w());
     let cg = shape.c_per_group();
     let ef = e * f;
     assert_eq!(out.len(), cg * shape.r * shape.s * ef);
-    let pd = padded.dims();
-    debug_assert_eq!(pd.h, shape.padded_h());
+    let (hp, wp) = (shape.padded_h(), shape.padded_w());
+    let index = |cin: usize, h: usize, w: usize| ((n * shape.c + cin) * hp + h) * wp + w;
 
     let mut row = 0;
     for c in 0..cg {
@@ -39,13 +40,11 @@ pub fn im2col_group(
                     let src_h = h * shape.stride + r;
                     if shape.stride == 1 {
                         // Contiguous copy of F elements — the common case.
-                        let base = pd.index(n, cin, src_h, s);
-                        dst[h * f..(h + 1) * f]
-                            .copy_from_slice(&padded.data()[base..base + f]);
+                        let base = index(cin, src_h, s);
+                        dst[h * f..(h + 1) * f].copy_from_slice(&padded[base..base + f]);
                     } else {
                         for w in 0..f {
-                            dst[h * f + w] =
-                                padded.at(n, cin, src_h, w * shape.stride + s);
+                            dst[h * f + w] = padded[index(cin, src_h, w * shape.stride + s)];
                         }
                     }
                 }

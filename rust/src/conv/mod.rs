@@ -1,8 +1,8 @@
-//! Native Rust convolution kernels.
+//! Native Rust convolution kernels and their execution-plan layer.
 //!
-//! These are the host-side counterparts of the three GPU methods the paper
-//! compares, plus the paper's Algorithm 1 reference and its §3.4
-//! future-work Winograd path:
+//! The raw kernels are the host-side counterparts of the three GPU
+//! methods the paper compares, plus the paper's Algorithm 1 reference and
+//! its §3.4 future-work Winograd path:
 //!
 //! * [`direct_dense`] — the 7-loop reference (paper Algorithm 1); the
 //!   correctness oracle for everything else.
@@ -12,23 +12,40 @@
 //!   weights (paper Algorithm 2 + §3.2 dataflow), sequential and parallel.
 //! * [`winograd_3x3`] — Winograd F(2x2, 3x3) for small filters (§3.4).
 //!
-//! They serve three roles: correctness cross-checks against the Pallas/XLA
-//! artifacts, fast full-scale baselines for the figure benches (the
-//! interpret-mode Pallas path cannot run batch-128 ImageNet layers), and
-//! the loop structures the cache simulator replays for Fig 10.
+//! On top of them sits the **execution-plan layer** (see `README.md` in
+//! this directory):
+//!
+//! * [`LayerPlan`] / [`ConvExecutor`] (`plan.rs`) — per-layer compiled
+//!   plans: operands pre-transformed once per `(shape, weights, method)`,
+//!   executed into caller-provided slices.
+//! * [`Workspace`] / [`WorkspaceArena`] / [`NetworkPlan`] (`executor.rs`)
+//!   — cuDNN-style scratch arenas and whole-network plans with zero
+//!   steady-state allocation.
+//!
+//! The free functions remain as thin allocating wrappers for one-shot
+//! use; the scheduler, server, and figure benches all dispatch through
+//! the plan layer.
 
 mod dense;
+mod executor;
 mod gemm;
 mod im2col;
+mod plan;
 mod sconv;
 mod spmm;
 mod weights;
 mod winograd;
 
 pub use dense::direct_dense;
+pub use executor::{NetworkPlan, PlanLayerRun, WeightedOp, Workspace, WorkspaceArena};
 pub use gemm::{gemm, gemm_blocked, gemm_parallel};
 pub use im2col::{
-    im2col_group, lowered_gemm, lowered_gemm_parallel, lowered_spmm, lowered_spmm_parallel,
+    im2col_group, im2col_group_into, lowered_gemm, lowered_gemm_parallel, lowered_spmm,
+    lowered_spmm_parallel,
+};
+pub use plan::{
+    shapes_under_test, ConvExecutor, DirectSparsePlan, LayerPlan, LoweredGemmPlan,
+    LoweredSpmmPlan, Method, WinogradPlan,
 };
 pub use sconv::{sconv, sconv_ell, sconv_parallel};
 pub use spmm::csrmm;

@@ -1,0 +1,702 @@
+//! Per-layer compiled execution plans.
+//!
+//! Escoin's core claim (paper §3.4, echoed by Park et al.'s per-layer
+//! performance model) is that direct sparse convolution wins only when the
+//! kernel is *orchestrated*: operands pre-transformed once, scratch memory
+//! sized once, and the method chosen per layer. A [`LayerPlan`] is that
+//! orchestration made first-class — it is built **once** per
+//! `(ConvShape, ConvWeights, Method)` and holds:
+//!
+//! * the pre-stretched / CSR / pre-Winograd-transformed operands,
+//! * the padded-input geometry, and
+//! * a sized workspace request ([`ConvExecutor::workspace_floats`]),
+//!
+//! so that executing it performs **no weight re-transformation and no
+//! steady-state allocation**: every kernel writes into caller-provided
+//! slices carved from a [`super::Workspace`].
+//!
+//! The four plan types ([`DirectSparsePlan`], [`LoweredGemmPlan`],
+//! [`LoweredSpmmPlan`], [`WinogradPlan`]) implement the [`ConvExecutor`]
+//! trait; the router, scheduler, server, and figure benches all dispatch
+//! through it — one execution path instead of four ad-hoc call sites.
+
+use super::executor::{pad_into, Workspace};
+use super::im2col::im2col_group_into;
+use super::sconv::{sconv_workers, worker_scratch_floats};
+use super::weights::ConvWeights;
+use super::winograd::{transform_filters, winograd_applicable, winograd_tiles_into};
+use super::{csrmm, gemm_blocked, gemm_parallel};
+use crate::config::ConvShape;
+use crate::sparse::{CsrMatrix, StretchedFilter};
+use crate::tensor::{Dims4, Tensor4};
+use crate::util::Stopwatch;
+use std::sync::Arc;
+
+/// Execution method for one CONV layer — the paper's three contenders
+/// plus the §3.4 Winograd extension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// im2col + dense GEMM (CUBLAS baseline).
+    LoweredGemm,
+    /// im2col + CSR SpMM (CUSPARSE baseline).
+    LoweredSpmm,
+    /// Direct sparse convolution (Escoin).
+    DirectSparse,
+    /// Winograd F(2x2, 3x3) for dense 3x3 stride-1 layers.
+    Winograd,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::LoweredGemm => "lowered-gemm",
+            Method::LoweredSpmm => "lowered-spmm",
+            Method::DirectSparse => "direct-sparse",
+            Method::Winograd => "winograd",
+        }
+    }
+
+    /// All methods, in the paper's presentation order.
+    pub const ALL: [Method; 4] = [
+        Method::LoweredGemm,
+        Method::LoweredSpmm,
+        Method::DirectSparse,
+        Method::Winograd,
+    ];
+}
+
+/// A compiled conv-layer executor: operands are pre-built, scratch is
+/// caller-provided, output is written into a caller slice.
+///
+/// `input` is `batch * C * H * W` activations (NCHW), `out` is
+/// `batch * M * E * F`. The workspace is grown on first use to
+/// [`ConvExecutor::workspace_floats`] and never again — repeated
+/// `execute_into` calls on the same workspace perform zero allocation.
+///
+/// `sw` optionally times the constituent kernels into the paper's Fig 9
+/// buckets (`pad_in`, `im2col`, `sgemm`, `csrmm`, `sconv`, `winograd`);
+/// the timed path runs images sequentially so laps do not interleave
+/// across threads.
+pub trait ConvExecutor: Send + Sync {
+    fn shape(&self) -> &ConvShape;
+    fn method(&self) -> Method;
+    /// Scratch floats needed to execute a batch of `batch` images.
+    fn workspace_floats(&self, batch: usize) -> usize;
+    fn execute_into(
+        &self,
+        batch: usize,
+        input: &[f32],
+        ws: &mut Workspace,
+        out: &mut [f32],
+        sw: Option<&mut Stopwatch>,
+    );
+}
+
+/// Time `f` under `name` when a stopwatch is attached, else just run it.
+fn lap<T>(sw: &mut Option<&mut Stopwatch>, name: &str, f: impl FnOnce() -> T) -> T {
+    match sw {
+        Some(s) => s.lap(name, f),
+        None => f(),
+    }
+}
+
+/// Padded-input floats needed for a batch (0 when the layer has no
+/// padding — the executors then read the input slice directly).
+fn pad_floats(shape: &ConvShape, batch: usize) -> usize {
+    if shape.pad > 0 {
+        batch * shape.c * shape.padded_h() * shape.padded_w()
+    } else {
+        0
+    }
+}
+
+/// Split the workspace into the padded-input segment and the rest, and
+/// materialise the padded input when the layer pads. Returns the padded
+/// view (the workspace segment, or the raw input when `pad == 0`) plus
+/// the remaining scratch.
+fn padded_view<'a>(
+    shape: &ConvShape,
+    batch: usize,
+    input: &'a [f32],
+    ws_buf: &'a mut [f32],
+    sw: &mut Option<&mut Stopwatch>,
+) -> (&'a [f32], &'a mut [f32]) {
+    let plen = pad_floats(shape, batch);
+    let (pad_buf, rest) = ws_buf.split_at_mut(plen);
+    if shape.pad > 0 {
+        lap(sw, "pad_in", || pad_into(shape, batch, input, pad_buf));
+        (pad_buf, rest)
+    } else {
+        (input, rest)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DirectSparse (Escoin)
+// ---------------------------------------------------------------------------
+
+/// Escoin direct sparse convolution plan: weight-stretched banks built
+/// once (paper §3.1), per-worker stride-1 scratch planes carved from the
+/// workspace.
+pub struct DirectSparsePlan {
+    shape: ConvShape,
+    banks: Vec<StretchedFilter>,
+    threads: usize,
+}
+
+impl DirectSparsePlan {
+    pub fn build(shape: &ConvShape, weights: &ConvWeights, threads: usize) -> Self {
+        assert_eq!(weights.shape, *shape, "weights/shape mismatch");
+        Self {
+            shape: shape.clone(),
+            banks: weights.stretched_banks(),
+            threads,
+        }
+    }
+
+    pub fn banks(&self) -> &[StretchedFilter] {
+        &self.banks
+    }
+
+    fn workers(&self, batch: usize) -> usize {
+        self.threads.max(1).min((batch * self.shape.m).max(1))
+    }
+
+}
+
+impl ConvExecutor for DirectSparsePlan {
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    fn method(&self) -> Method {
+        Method::DirectSparse
+    }
+
+    fn workspace_floats(&self, batch: usize) -> usize {
+        pad_floats(&self.shape, batch) + self.workers(batch) * worker_scratch_floats(&self.shape)
+    }
+
+    fn execute_into(
+        &self,
+        batch: usize,
+        input: &[f32],
+        ws: &mut Workspace,
+        out: &mut [f32],
+        mut sw: Option<&mut Stopwatch>,
+    ) {
+        let s = &self.shape;
+        debug_assert_eq!(input.len(), batch * s.c * s.h * s.w);
+        debug_assert_eq!(out.len(), batch * s.m * s.out_h() * s.out_w());
+        ws.ensure(self.workspace_floats(batch));
+        let workers = self.workers(batch);
+        let (padded, scratch) = padded_view(s, batch, input, ws.buf_mut(), &mut sw);
+        out.fill(0.0);
+        lap(&mut sw, "sconv", || {
+            sconv_workers(s, padded, batch, &self.banks, workers, out, scratch)
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LoweredGemm (CUBLAS proxy)
+// ---------------------------------------------------------------------------
+
+/// im2col + dense GEMM plan. Weights stay dense (the paper's CUBLAS
+/// configuration multiplies the pruned zeros) and are held behind an
+/// `Arc` so schedule caches, serving plans, and the caller's own copy
+/// share one buffer; per-worker lowered-matrix buffers are carved from
+/// the workspace.
+pub struct LoweredGemmPlan {
+    shape: ConvShape,
+    weights: Arc<ConvWeights>,
+    threads: usize,
+}
+
+impl LoweredGemmPlan {
+    pub fn build(shape: &ConvShape, weights: &ConvWeights, threads: usize) -> Self {
+        Self::build_shared(shape, Arc::new(weights.clone()), threads)
+    }
+
+    pub fn build_shared(shape: &ConvShape, weights: Arc<ConvWeights>, threads: usize) -> Self {
+        assert_eq!(weights.shape, *shape, "weights/shape mismatch");
+        Self {
+            shape: shape.clone(),
+            weights,
+            threads,
+        }
+    }
+
+    fn workers(&self, batch: usize) -> usize {
+        self.threads.max(1).min(batch.max(1))
+    }
+}
+
+impl ConvExecutor for LoweredGemmPlan {
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    fn method(&self) -> Method {
+        Method::LoweredGemm
+    }
+
+    fn workspace_floats(&self, batch: usize) -> usize {
+        let (k, ef) = self.shape.lowered_dims();
+        pad_floats(&self.shape, batch) + self.workers(batch) * k * ef
+    }
+
+    fn execute_into(
+        &self,
+        batch: usize,
+        input: &[f32],
+        ws: &mut Workspace,
+        out: &mut [f32],
+        mut sw: Option<&mut Stopwatch>,
+    ) {
+        let s = &self.shape;
+        let (k, ef) = s.lowered_dims();
+        let mg = s.m_per_group();
+        let per_image = s.m * ef;
+        debug_assert_eq!(out.len(), batch * per_image);
+        ws.ensure(self.workspace_floats(batch));
+        let workers = self.workers(batch);
+        let (padded, lowered_all) = padded_view(s, batch, input, ws.buf_mut(), &mut sw);
+        out.fill(0.0);
+
+        if sw.is_some() || workers == 1 {
+            // Sequential images (timed path keeps Fig 9 laps untangled);
+            // the GEMM itself is row-parallel.
+            let lowered = &mut lowered_all[..k * ef];
+            for n in 0..batch {
+                for g in 0..s.groups {
+                    lap(&mut sw, "im2col", || {
+                        im2col_group_into(s, padded, n, g, lowered)
+                    });
+                    let a = self.weights.group_matrix(g);
+                    let base = n * per_image;
+                    let c = &mut out[base + g * mg * ef..base + (g + 1) * mg * ef];
+                    lap(&mut sw, "sgemm", || {
+                        gemm_parallel(mg, k, ef, a, lowered, c, self.threads)
+                    });
+                }
+            }
+        } else {
+            // Image-parallel: disjoint output planes, one lowered buffer
+            // per worker, no synchronisation.
+            let images_per = batch.div_ceil(workers);
+            let weights = &self.weights;
+            std::thread::scope(|scope| {
+                for (t, (chunk, lowered)) in out
+                    .chunks_mut(images_per * per_image)
+                    .zip(lowered_all.chunks_mut(k * ef))
+                    .enumerate()
+                {
+                    scope.spawn(move || {
+                        let first = t * images_per;
+                        for (i, img_out) in chunk.chunks_mut(per_image).enumerate() {
+                            for g in 0..s.groups {
+                                im2col_group_into(s, padded, first + i, g, lowered);
+                                let a = weights.group_matrix(g);
+                                let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
+                                gemm_blocked(mg, k, ef, a, lowered, c);
+                            }
+                        }
+                    });
+                }
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LoweredSpmm (CUSPARSE proxy)
+// ---------------------------------------------------------------------------
+
+/// im2col + CSR×dense SpMM plan: canonical-column CSR banks built once.
+pub struct LoweredSpmmPlan {
+    shape: ConvShape,
+    banks: Vec<CsrMatrix>,
+    threads: usize,
+}
+
+impl LoweredSpmmPlan {
+    pub fn build(shape: &ConvShape, weights: &ConvWeights, threads: usize) -> Self {
+        assert_eq!(weights.shape, *shape, "weights/shape mismatch");
+        Self {
+            shape: shape.clone(),
+            banks: weights.csr_banks(),
+            threads,
+        }
+    }
+
+    fn workers(&self, batch: usize) -> usize {
+        self.threads.max(1).min(batch.max(1))
+    }
+}
+
+impl ConvExecutor for LoweredSpmmPlan {
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    fn method(&self) -> Method {
+        Method::LoweredSpmm
+    }
+
+    fn workspace_floats(&self, batch: usize) -> usize {
+        let (k, ef) = self.shape.lowered_dims();
+        pad_floats(&self.shape, batch) + self.workers(batch) * k * ef
+    }
+
+    fn execute_into(
+        &self,
+        batch: usize,
+        input: &[f32],
+        ws: &mut Workspace,
+        out: &mut [f32],
+        mut sw: Option<&mut Stopwatch>,
+    ) {
+        let s = &self.shape;
+        let (k, ef) = s.lowered_dims();
+        let mg = s.m_per_group();
+        let per_image = s.m * ef;
+        debug_assert_eq!(out.len(), batch * per_image);
+        ws.ensure(self.workspace_floats(batch));
+        let workers = self.workers(batch);
+        let (padded, lowered_all) = padded_view(s, batch, input, ws.buf_mut(), &mut sw);
+        out.fill(0.0);
+
+        if sw.is_some() || workers == 1 {
+            let lowered = &mut lowered_all[..k * ef];
+            for n in 0..batch {
+                for (g, bank) in self.banks.iter().enumerate() {
+                    lap(&mut sw, "im2col", || {
+                        im2col_group_into(s, padded, n, g, lowered)
+                    });
+                    let base = n * per_image;
+                    let c = &mut out[base + g * mg * ef..base + (g + 1) * mg * ef];
+                    lap(&mut sw, "csrmm", || csrmm(bank, ef, lowered, c));
+                }
+            }
+        } else {
+            let images_per = batch.div_ceil(workers);
+            let banks = &self.banks;
+            std::thread::scope(|scope| {
+                for (t, (chunk, lowered)) in out
+                    .chunks_mut(images_per * per_image)
+                    .zip(lowered_all.chunks_mut(k * ef))
+                    .enumerate()
+                {
+                    scope.spawn(move || {
+                        let first = t * images_per;
+                        for (i, img_out) in chunk.chunks_mut(per_image).enumerate() {
+                            for (g, bank) in banks.iter().enumerate() {
+                                im2col_group_into(s, padded, first + i, g, lowered);
+                                let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
+                                csrmm(bank, ef, lowered, c);
+                            }
+                        }
+                    });
+                }
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Winograd F(2x2, 3x3)
+// ---------------------------------------------------------------------------
+
+/// Winograd plan: `U = G g Gᵀ` filter transforms computed **once** at
+/// build time (the seed recomputed them on every call), per-tile
+/// accumulators carved from the workspace.
+pub struct WinogradPlan {
+    shape: ConvShape,
+    u: Vec<[f32; 16]>,
+}
+
+impl WinogradPlan {
+    pub fn build(shape: &ConvShape, weights: &ConvWeights) -> Self {
+        assert!(winograd_applicable(shape), "winograd needs 3x3/s1/g1");
+        assert_eq!(weights.shape, *shape, "weights/shape mismatch");
+        Self {
+            shape: shape.clone(),
+            u: transform_filters(shape, weights),
+        }
+    }
+}
+
+impl ConvExecutor for WinogradPlan {
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    fn method(&self) -> Method {
+        Method::Winograd
+    }
+
+    fn workspace_floats(&self, batch: usize) -> usize {
+        pad_floats(&self.shape, batch) + self.shape.m * 16
+    }
+
+    fn execute_into(
+        &self,
+        batch: usize,
+        input: &[f32],
+        ws: &mut Workspace,
+        out: &mut [f32],
+        mut sw: Option<&mut Stopwatch>,
+    ) {
+        let s = &self.shape;
+        debug_assert_eq!(out.len(), batch * s.m * s.out_h() * s.out_w());
+        ws.ensure(self.workspace_floats(batch));
+        let (padded, rest) = padded_view(s, batch, input, ws.buf_mut(), &mut sw);
+        let acc = &mut rest[..s.m * 16];
+        out.fill(0.0);
+        lap(&mut sw, "winograd", || {
+            winograd_tiles_into(s, padded, batch, &self.u, acc, out)
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LayerPlan
+// ---------------------------------------------------------------------------
+
+/// One CONV layer's compiled plan: shape + method + boxed executor.
+/// Build once, execute many times against a reusable [`Workspace`].
+pub struct LayerPlan {
+    exec: Box<dyn ConvExecutor>,
+}
+
+impl LayerPlan {
+    /// Compile a plan for `(shape, weights, method)`. Panics if the method
+    /// cannot run this shape (Winograd on non-3x3/s1/g1 layers).
+    pub fn build(
+        shape: &ConvShape,
+        weights: &ConvWeights,
+        method: Method,
+        threads: usize,
+    ) -> LayerPlan {
+        let exec: Box<dyn ConvExecutor> = match method {
+            Method::DirectSparse => Box::new(DirectSparsePlan::build(shape, weights, threads)),
+            Method::LoweredGemm => Box::new(LoweredGemmPlan::build(shape, weights, threads)),
+            Method::LoweredSpmm => Box::new(LoweredSpmmPlan::build(shape, weights, threads)),
+            Method::Winograd => Box::new(WinogradPlan::build(shape, weights)),
+        };
+        LayerPlan { exec }
+    }
+
+    /// Like [`LayerPlan::build`] but shares an existing weight buffer —
+    /// avoids duplicating the dense matrix into LoweredGemm plans when
+    /// the caller (schedule cache, serving plan) keeps weights alive
+    /// anyway. The sparse methods derive their operands either way.
+    pub fn build_shared(
+        shape: &ConvShape,
+        weights: Arc<ConvWeights>,
+        method: Method,
+        threads: usize,
+    ) -> LayerPlan {
+        match method {
+            Method::LoweredGemm => LayerPlan {
+                exec: Box::new(LoweredGemmPlan::build_shared(shape, weights, threads)),
+            },
+            _ => Self::build(shape, &weights, method, threads),
+        }
+    }
+
+    pub fn shape(&self) -> &ConvShape {
+        self.exec.shape()
+    }
+
+    pub fn method(&self) -> Method {
+        self.exec.method()
+    }
+
+    /// Output dims for a batch.
+    pub fn out_dims(&self, batch: usize) -> Dims4 {
+        let s = self.shape();
+        Dims4::new(batch, s.m, s.out_h(), s.out_w())
+    }
+
+    pub fn workspace_floats(&self, batch: usize) -> usize {
+        self.exec.workspace_floats(batch)
+    }
+
+    /// Slice-level execution — the single dispatch point every consumer
+    /// (scheduler, server, benches) goes through.
+    pub fn execute_into(
+        &self,
+        batch: usize,
+        input: &[f32],
+        ws: &mut Workspace,
+        out: &mut [f32],
+        sw: Option<&mut Stopwatch>,
+    ) {
+        let s = self.shape();
+        assert_eq!(input.len(), batch * s.c * s.h * s.w, "input len");
+        assert_eq!(out.len(), self.out_dims(batch).len(), "output len");
+        self.exec.execute_into(batch, input, ws, out, sw);
+    }
+
+    /// Tensor-level execution into a caller-provided output.
+    pub fn execute(&self, input: &Tensor4, ws: &mut Workspace, output: &mut Tensor4) {
+        let d = input.dims();
+        let s = self.shape();
+        assert_eq!((d.c, d.h, d.w), (s.c, s.h, s.w), "input dims");
+        assert_eq!(output.dims(), self.out_dims(d.n), "output dims");
+        let batch = d.n;
+        self.exec
+            .execute_into(batch, input.data(), ws, output.data_mut(), None);
+    }
+
+    /// Thin allocating wrapper (API-compatible with the seed free
+    /// functions): fresh workspace + output per call.
+    pub fn run(&self, input: &Tensor4) -> Tensor4 {
+        let mut ws = Workspace::new();
+        let mut out = Tensor4::zeros(self.out_dims(input.dims().n));
+        self.execute(input, &mut ws, &mut out);
+        out
+    }
+}
+
+impl ConvExecutor for LayerPlan {
+    fn shape(&self) -> &ConvShape {
+        self.exec.shape()
+    }
+
+    fn method(&self) -> Method {
+        self.exec.method()
+    }
+
+    fn workspace_floats(&self, batch: usize) -> usize {
+        self.exec.workspace_floats(batch)
+    }
+
+    fn execute_into(
+        &self,
+        batch: usize,
+        input: &[f32],
+        ws: &mut Workspace,
+        out: &mut [f32],
+        sw: Option<&mut Stopwatch>,
+    ) {
+        self.exec.execute_into(batch, input, ws, out, sw);
+    }
+}
+
+/// The canonical correctness grid: every structurally distinct layer
+/// class the paper's networks contain. Shared by the kernel unit tests,
+/// the cross-method plan property tests, and the perf probe.
+pub fn shapes_under_test() -> Vec<ConvShape> {
+    vec![
+        // 3x3 same-pad, the dominant sparse layer shape
+        ConvShape::new(3, 4, 6, 6, 3, 3, 1, 1).with_sparsity(0.7),
+        // 5x5 pad-2 (AlexNet conv2 / GoogLeNet 5x5 shape class)
+        ConvShape::new(2, 3, 9, 9, 5, 5, 1, 2).with_sparsity(0.8),
+        // strided (ResNet downsample 3x3 stride 2)
+        ConvShape::new(4, 4, 8, 8, 3, 3, 2, 1).with_sparsity(0.6),
+        // grouped (AlexNet conv4/conv5 class)
+        ConvShape::new(4, 6, 7, 7, 3, 3, 1, 1)
+            .with_groups(2)
+            .with_sparsity(0.5),
+        // 1x1 pointwise
+        ConvShape::new(8, 4, 5, 5, 1, 1, 1, 0).with_sparsity(0.6),
+        // valid padding, rectangular input
+        ConvShape::new(2, 2, 8, 6, 3, 3, 1, 0).with_sparsity(0.7),
+        // fully dense (sparsity 0 still must work)
+        ConvShape::new(3, 3, 5, 5, 3, 3, 1, 1),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct_dense;
+    use crate::util::Rng;
+
+    fn case(shape: &ConvShape, n: usize, seed: u64) -> (Tensor4, ConvWeights) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor4::random_activations(Dims4::new(n, shape.c, shape.h, shape.w), &mut rng);
+        let w = ConvWeights::synthetic(shape, &mut rng);
+        (x, w)
+    }
+
+    #[test]
+    fn every_plan_type_matches_direct_dense() {
+        for (i, shape) in shapes_under_test().into_iter().enumerate() {
+            let (x, w) = case(&shape, 2, 400 + i as u64);
+            let want = direct_dense(&shape, &x, &w);
+            for method in Method::ALL {
+                if method == Method::Winograd && !winograd_applicable(&shape) {
+                    continue;
+                }
+                let plan = LayerPlan::build(&shape, &w, method, 2);
+                let got = plan.run(&x);
+                assert!(
+                    got.allclose(&want, 1e-3, 1e-4),
+                    "{} under {}",
+                    shape,
+                    method.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dirty_workspace_does_not_contaminate_output() {
+        let shape = ConvShape::new(3, 4, 7, 7, 3, 3, 1, 1).with_sparsity(0.6);
+        let (x, w) = case(&shape, 2, 99);
+        for method in [Method::DirectSparse, Method::LoweredGemm, Method::LoweredSpmm] {
+            let plan = LayerPlan::build(&shape, &w, method, 3);
+            let mut ws = Workspace::new();
+            ws.ensure(plan.workspace_floats(2));
+            ws.buf_mut().fill(f32::NAN); // poison
+            // run twice on the same (poisoned, then used) workspace
+            let mut out = Tensor4::zeros(plan.out_dims(2));
+            let mut out2 = Tensor4::zeros(plan.out_dims(2));
+            plan.execute_into(2, x.data(), &mut ws, out2.data_mut(), None);
+            plan.execute_into(2, x.data(), &mut ws, out.data_mut(), None);
+            assert_eq!(out.data(), out2.data(), "{}", method.name());
+            assert!(out.data().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn workspace_grows_once_then_stays() {
+        let shape = ConvShape::new(4, 8, 9, 9, 3, 3, 1, 1).with_sparsity(0.7);
+        let (x, w) = case(&shape, 3, 17);
+        let plan = LayerPlan::build(&shape, &w, Method::DirectSparse, 4);
+        let mut ws = Workspace::new();
+        let mut out = Tensor4::zeros(plan.out_dims(3));
+        plan.execute_into(3, x.data(), &mut ws, out.data_mut(), None);
+        let cap = ws.capacity();
+        assert!(cap >= plan.workspace_floats(3));
+        for _ in 0..3 {
+            plan.execute_into(3, x.data(), &mut ws, out.data_mut(), None);
+        }
+        assert_eq!(ws.capacity(), cap, "steady-state workspace growth");
+    }
+
+    #[test]
+    fn timed_execution_fills_fig9_buckets() {
+        let shape = ConvShape::new(3, 4, 8, 8, 3, 3, 1, 1).with_sparsity(0.5);
+        let (x, w) = case(&shape, 2, 23);
+        let mut ws = Workspace::new();
+        let mut out = Tensor4::zeros(Dims4::new(2, 4, 8, 8));
+        let mut sw = Stopwatch::new();
+        let plan = LayerPlan::build(&shape, &w, Method::LoweredSpmm, 2);
+        plan.execute_into(2, x.data(), &mut ws, out.data_mut(), Some(&mut sw));
+        let names = sw.names();
+        assert!(names.contains(&"pad_in".to_string()));
+        assert!(names.contains(&"im2col".to_string()));
+        assert!(names.contains(&"csrmm".to_string()));
+
+        let mut sw = Stopwatch::new();
+        let plan = LayerPlan::build(&shape, &w, Method::DirectSparse, 2);
+        plan.execute_into(2, x.data(), &mut ws, out.data_mut(), Some(&mut sw));
+        assert!(sw.names().contains(&"sconv".to_string()));
+        assert!(!sw.names().contains(&"im2col".to_string()));
+    }
+}

@@ -13,10 +13,26 @@
 //! paper's coalesced warp mapping (Fig 6), and the auto-vectoriser turns
 //! it into packed FMAs. Partial sums accumulate in the output row held in
 //! cache/registers (the paper's register-resident partial sums).
+//!
+//! The workhorse is [`sconv_workers`], which writes into caller-provided
+//! output and scratch slices (the plan/executor path reuses them across
+//! calls); [`sconv`] and [`sconv_parallel`] are the thin allocating
+//! wrappers the seed API exposed.
 
 use crate::config::ConvShape;
 use crate::sparse::{EllMatrix, StretchedFilter};
 use crate::tensor::{Dims4, Tensor4};
+
+/// Scratch floats one worker needs: the stride-1 fast path accumulates
+/// into a `(E-1)*Wp + F` plane; the strided path needs none, but one
+/// float keeps per-worker chunking uniform.
+pub(crate) fn worker_scratch_floats(shape: &ConvShape) -> usize {
+    if shape.stride == 1 {
+        (shape.out_h() - 1) * shape.padded_w() + shape.out_w()
+    } else {
+        1
+    }
+}
 
 /// One output plane (`E x F`) for image `n`, group `g`, group-local filter
 /// `ml`, given the group's slice of the padded input.
@@ -33,6 +49,7 @@ fn sconv_plane(
     bank: &StretchedFilter,
     ml: usize,
     out_plane: &mut [f32],
+    scratch: &mut [f32],
 ) {
     let (e, f) = (shape.out_h(), shape.out_w());
     let wp = bank.wp;
@@ -50,7 +67,8 @@ fn sconv_plane(
         // in the Wp-F padding columns is never read back. This is what
         // keeps small-F layers (ResNet's 7x7/14x14 stages) vectorised.
         let span = (e - 1) * wp + f;
-        let mut scratch = vec![0.0f32; span];
+        debug_assert_eq!(scratch.len(), span);
+        scratch.fill(0.0);
         let mut j = 0;
         while j + 4 <= vals.len() {
             let (v0, v1, v2, v3) = (vals[j], vals[j + 1], vals[j + 2], vals[j + 3]);
@@ -115,35 +133,86 @@ fn sconv_plane(
     }
 }
 
-/// Direct sparse convolution, sequential. `banks` must come from
-/// [`ConvWeights::stretched_banks`] for the same `shape`.
-pub fn sconv(shape: &ConvShape, input: &Tensor4, banks: &[StretchedFilter]) -> Tensor4 {
-    let d = input.dims();
-    assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
+/// Direct sparse convolution over an already padded input slice
+/// (`batch * C * Hp * Wp` floats), writing `batch * M * E * F` into
+/// `out` — **zero allocation**; all scratch comes from the caller.
+///
+/// `workers` threads each own a disjoint contiguous range of `(n, m)`
+/// output planes plus a private `worker_scratch_floats` slice of
+/// `scratch` — no synchronisation, mirroring the paper's
+/// thread-block-per-output-channel partitioning. The strided path writes
+/// `+=` into `out`, so the caller must zero it first.
+pub(crate) fn sconv_workers(
+    shape: &ConvShape,
+    padded: &[f32],
+    batch: usize,
+    banks: &[StretchedFilter],
+    workers: usize,
+    out: &mut [f32],
+    scratch: &mut [f32],
+) {
     assert_eq!(banks.len(), shape.groups);
-    let padded = input.pad_spatial(shape.pad); // pad_in
     let (e, f) = (shape.out_h(), shape.out_w());
-    let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
-    let group_len = cg * shape.padded_h() * shape.padded_w();
-    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
     let ef = e * f;
+    let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
+    let (hp, wp) = (shape.padded_h(), shape.padded_w());
+    let group_len = cg * hp * wp;
+    let img_len = shape.c * hp * wp;
+    debug_assert_eq!(padded.len(), batch * img_len);
+    debug_assert_eq!(out.len(), batch * shape.m * ef);
+    let total_planes = batch * shape.m;
+    let span = if shape.stride == 1 { (e - 1) * wp + f } else { 0 };
+    let per_worker = worker_scratch_floats(shape);
+    let workers = workers.max(1).min(total_planes.max(1));
+    debug_assert!(scratch.len() >= workers * per_worker);
 
-    let out_data = out.data_mut();
-    for n in 0..d.n {
-        let img = padded.image(n);
-        for m in 0..shape.m {
+    if workers == 1 {
+        let scratch = &mut scratch[..span];
+        for plane_id in 0..total_planes {
+            let (n, m) = (plane_id / shape.m, plane_id % shape.m);
             let g = m / mg;
+            let img = &padded[n * img_len..(n + 1) * img_len];
             let in_group = &img[g * group_len..(g + 1) * group_len];
-            let plane = &mut out_data[(n * shape.m + m) * ef..(n * shape.m + m + 1) * ef];
-            sconv_plane(shape, in_group, &banks[g], m % mg, plane);
+            let plane = &mut out[plane_id * ef..(plane_id + 1) * ef];
+            sconv_plane(shape, in_group, &banks[g], m % mg, plane, scratch);
         }
+        return;
     }
-    out
+
+    let planes_per = total_planes.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (t, (chunk, scr)) in out
+            .chunks_mut(planes_per * ef)
+            .zip(scratch.chunks_mut(per_worker))
+            .enumerate()
+        {
+            scope.spawn(move || {
+                let first_plane = t * planes_per;
+                let scr = &mut scr[..span];
+                for (p, plane) in chunk.chunks_mut(ef).enumerate() {
+                    let plane_id = first_plane + p;
+                    let (n, m) = (plane_id / shape.m, plane_id % shape.m);
+                    let g = m / mg;
+                    let img = &padded[n * img_len..(n + 1) * img_len];
+                    let in_group = &img[g * group_len..(g + 1) * group_len];
+                    sconv_plane(shape, in_group, &banks[g], m % mg, plane, scr);
+                }
+            });
+        }
+    });
 }
 
-/// Direct sparse convolution, parallel over output planes. Each thread owns
-/// a disjoint contiguous range of `(n, m)` planes — no synchronisation,
-/// mirroring the paper's thread-block-per-output-channel partitioning.
+/// Direct sparse convolution, sequential. `banks` must come from
+/// [`ConvWeights::stretched_banks`] for the same `shape`. Thin allocating
+/// wrapper over [`sconv_workers`].
+///
+/// [`ConvWeights::stretched_banks`]: super::ConvWeights::stretched_banks
+pub fn sconv(shape: &ConvShape, input: &Tensor4, banks: &[StretchedFilter]) -> Tensor4 {
+    sconv_parallel(shape, input, banks, 1)
+}
+
+/// Direct sparse convolution, parallel over output planes. Thin
+/// allocating wrapper over [`sconv_workers`].
 pub fn sconv_parallel(
     shape: &ConvShape,
     input: &Tensor4,
@@ -152,36 +221,19 @@ pub fn sconv_parallel(
 ) -> Tensor4 {
     let d = input.dims();
     assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
-    assert_eq!(banks.len(), shape.groups);
-    let total_planes = d.n * shape.m;
-    let threads = threads.max(1).min(total_planes.max(1));
-    if threads == 1 {
-        return sconv(shape, input, banks);
-    }
     let padded = input.pad_spatial(shape.pad);
-    let (e, f) = (shape.out_h(), shape.out_w());
-    let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
-    let group_len = cg * shape.padded_h() * shape.padded_w();
-    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
-    let ef = e * f;
-    let planes_per = total_planes.div_ceil(threads);
-
-    let padded_ref = &padded;
-    std::thread::scope(|scope| {
-        for (t, chunk) in out.data_mut().chunks_mut(planes_per * ef).enumerate() {
-            scope.spawn(move || {
-                let first_plane = t * planes_per;
-                for (p, plane) in chunk.chunks_mut(ef).enumerate() {
-                    let plane_id = first_plane + p;
-                    let (n, m) = (plane_id / shape.m, plane_id % shape.m);
-                    let g = m / mg;
-                    let img = padded_ref.image(n);
-                    let in_group = &img[g * group_len..(g + 1) * group_len];
-                    sconv_plane(shape, in_group, &banks[g], m % mg, plane);
-                }
-            });
-        }
-    });
+    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, shape.out_h(), shape.out_w()));
+    let workers = threads.max(1).min((d.n * shape.m).max(1));
+    let mut scratch = vec![0.0f32; workers * worker_scratch_floats(shape)];
+    sconv_workers(
+        shape,
+        padded.data(),
+        d.n,
+        banks,
+        workers,
+        out.data_mut(),
+        &mut scratch,
+    );
     out
 }
 
@@ -236,7 +288,7 @@ pub fn sconv_ell(shape: &ConvShape, input: &Tensor4, banks: &[EllMatrix]) -> Ten
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::conv::{direct_dense, ConvWeights};
+    use crate::conv::{direct_dense, shapes_under_test, ConvWeights};
     use crate::util::Rng;
 
     fn random_case(shape: &ConvShape, n: usize, seed: u64) -> (Tensor4, ConvWeights) {
@@ -244,25 +296,6 @@ mod tests {
         let x = Tensor4::random_activations(Dims4::new(n, shape.c, shape.h, shape.w), &mut rng);
         let w = ConvWeights::synthetic(shape, &mut rng);
         (x, w)
-    }
-
-    fn shapes_under_test() -> Vec<ConvShape> {
-        vec![
-            // 3x3 same-pad, the dominant sparse layer shape
-            ConvShape::new(3, 4, 6, 6, 3, 3, 1, 1).with_sparsity(0.7),
-            // 5x5 pad-2 (AlexNet conv2 / GoogLeNet 5x5 shape class)
-            ConvShape::new(2, 3, 9, 9, 5, 5, 1, 2).with_sparsity(0.8),
-            // strided (ResNet downsample 3x3 stride 2)
-            ConvShape::new(4, 4, 8, 8, 3, 3, 2, 1).with_sparsity(0.6),
-            // grouped (AlexNet conv4/conv5 class)
-            ConvShape::new(4, 6, 7, 7, 3, 3, 1, 1).with_groups(2).with_sparsity(0.5),
-            // 1x1 pointwise
-            ConvShape::new(8, 4, 5, 5, 1, 1, 1, 0).with_sparsity(0.6),
-            // valid padding, rectangular input
-            ConvShape::new(2, 2, 8, 6, 3, 3, 1, 0).with_sparsity(0.7),
-            // fully dense (sparsity 0 still must work)
-            ConvShape::new(3, 3, 5, 5, 3, 3, 1, 1),
-        ]
     }
 
     #[test]

@@ -87,18 +87,11 @@ fn transform_output(m: &[f32; 16]) -> [f32; 4] {
     ]
 }
 
-/// Winograd F(2x2, 3x3) convolution for 3x3 stride-1 layers. Produces the
-/// same result as [`super::direct_dense`] up to f32 rounding.
-pub fn winograd_3x3(shape: &ConvShape, input: &Tensor4, weights: &ConvWeights) -> Tensor4 {
+/// Pre-transform every filter of a layer once: `U[m][c] = G g Gᵀ`. Built
+/// at plan-compile time by [`super::WinogradPlan`] so execution never
+/// re-derives it.
+pub(crate) fn transform_filters(shape: &ConvShape, weights: &ConvWeights) -> Vec<[f32; 16]> {
     assert!(winograd_applicable(shape), "winograd needs 3x3/s1/g1");
-    let d = input.dims();
-    assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
-    let padded = input.pad_spatial(shape.pad);
-    let pd = padded.dims();
-    let (e, f) = (shape.out_h(), shape.out_w());
-    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
-
-    // Pre-transform every filter once: U[m][c] = G g Gᵀ.
     let mut u = vec![[0.0f32; 16]; shape.m * shape.c];
     for m in 0..shape.m {
         for c in 0..shape.c {
@@ -111,44 +104,66 @@ pub fn winograd_3x3(shape: &ConvShape, input: &Tensor4, weights: &ConvWeights) -
             u[m * shape.c + c] = transform_filter(&g);
         }
     }
+    u
+}
+
+/// The tile loop over an already padded input slice (`batch * C * Hp * Wp`
+/// floats): gathers 4x4 tiles, multiplies against pre-transformed filters
+/// `u`, and writes 2x2 output tiles into `out` (`batch * M * E * F`).
+/// `acc` is the caller-provided `M * 16` accumulator scratch.
+pub(crate) fn winograd_tiles_into(
+    shape: &ConvShape,
+    padded: &[f32],
+    batch: usize,
+    u: &[[f32; 16]],
+    acc: &mut [f32],
+    out: &mut [f32],
+) {
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let ef = e * f;
+    let (hp, wp) = (shape.padded_h(), shape.padded_w());
+    debug_assert_eq!(u.len(), shape.m * shape.c);
+    debug_assert_eq!(acc.len(), shape.m * 16);
+    debug_assert_eq!(out.len(), batch * shape.m * ef);
 
     let tiles_h = e.div_ceil(2);
     let tiles_w = f.div_ceil(2);
-    for n in 0..d.n {
+    for n in 0..batch {
         for th in 0..tiles_h {
             for tw in 0..tiles_w {
                 // Gather the 4x4 input tile per channel (zero beyond edge),
                 // transform, and accumulate the elementwise products.
                 let h0 = th * 2;
                 let w0 = tw * 2;
-                // M[m] accumulators
-                let mut acc = vec![[0.0f32; 16]; shape.m];
+                acc.fill(0.0);
                 for c in 0..shape.c {
                     let mut dtile = [0.0f32; 16];
                     for i in 0..4 {
                         for j in 0..4 {
                             let (hh, ww) = (h0 + i, w0 + j);
-                            if hh < pd.h && ww < pd.w {
-                                dtile[i * 4 + j] = padded.at(n, c, hh, ww);
+                            if hh < hp && ww < wp {
+                                dtile[i * 4 + j] = padded[((n * shape.c + c) * hp + hh) * wp + ww];
                             }
                         }
                     }
                     let v = transform_input(&dtile);
                     for m in 0..shape.m {
                         let uf = &u[m * shape.c + c];
-                        let am = &mut acc[m];
+                        let am = &mut acc[m * 16..(m + 1) * 16];
                         for t in 0..16 {
                             am[t] += uf[t] * v[t];
                         }
                     }
                 }
                 for m in 0..shape.m {
-                    let y = transform_output(&acc[m]);
+                    let mut am = [0.0f32; 16];
+                    am.copy_from_slice(&acc[m * 16..(m + 1) * 16]);
+                    let y = transform_output(&am);
                     for i in 0..2 {
                         for j in 0..2 {
                             let (hh, ww) = (h0 + i, w0 + j);
                             if hh < e && ww < f {
-                                out.set(n, m, hh, ww, y[i * 2 + j]);
+                                out[(n * shape.m + m) * ef + hh * f + ww] = y[i * 2 + j];
                             }
                         }
                     }
@@ -156,6 +171,21 @@ pub fn winograd_3x3(shape: &ConvShape, input: &Tensor4, weights: &ConvWeights) -
             }
         }
     }
+}
+
+/// Winograd F(2x2, 3x3) convolution for 3x3 stride-1 layers. Produces the
+/// same result as [`super::direct_dense`] up to f32 rounding. Thin
+/// allocating wrapper over [`transform_filters`] + [`winograd_tiles_into`].
+pub fn winograd_3x3(shape: &ConvShape, input: &Tensor4, weights: &ConvWeights) -> Tensor4 {
+    assert!(winograd_applicable(shape), "winograd needs 3x3/s1/g1");
+    let d = input.dims();
+    assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
+    let padded = input.pad_spatial(shape.pad);
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
+    let u = transform_filters(shape, weights);
+    let mut acc = vec![0.0f32; shape.m * 16];
+    winograd_tiles_into(shape, padded.data(), d.n, &u, &mut acc, out.data_mut());
     out
 }
 

@@ -1,4 +1,4 @@
-//! L3 coordinator: the serving engine around the kernels.
+//! L3 coordinator: the serving engine around the execution-plan layer.
 //!
 //! The paper integrates Escoin into Caffe and times whole-network
 //! iterations; this crate grows that role into a deployable inference
@@ -6,13 +6,15 @@
 //!
 //! * [`router`] — adaptive kernel customization (paper §3.4): picks the
 //!   execution method per layer from its shape/sparsity, refined online
-//!   by measured latencies.
+//!   by measured plan latencies.
 //! * [`batcher`] — dynamic batcher: single-image requests are grouped
-//!   (and padded) to the artifact batch size under a latency deadline.
-//! * [`scheduler`] — whole-network layer pipeline with per-kernel timing
-//!   (drives the Fig 9/11 benches).
-//! * [`server`] — the request loop: worker threads pull batches, execute
-//!   the model artifact via PJRT, and fan responses back out.
+//!   (and padded) to the plan batch size under a latency deadline.
+//! * [`scheduler`] — whole-network pipeline over cached
+//!   [`crate::conv::LayerPlan`]s with per-kernel timing (drives the
+//!   Fig 9/11 benches).
+//! * [`server`] — the request loop: an executor thread owns a shared
+//!   [`crate::conv::NetworkPlan`] + workspace arena, pulls batches,
+//!   executes natively, and fans responses back out.
 //! * [`metrics`] — counters + latency histograms for the E2E example.
 
 mod batcher;
@@ -25,4 +27,6 @@ pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
 pub use router::{Method, Router, RouterConfig};
 pub use scheduler::{LayerTiming, NetworkSchedule, ScheduleReport};
-pub use server::{InferRequest, InferResponse, ServerConfig, ServerHandle, ServerStats};
+pub use server::{
+    InferRequest, InferResponse, ServerConfig, ServerError, ServerHandle, ServerStats,
+};

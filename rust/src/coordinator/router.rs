@@ -18,30 +18,9 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// Execution method for one CONV layer — the paper's three contenders
-/// plus the §3.4 Winograd extension.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Method {
-    /// im2col + dense GEMM (CUBLAS baseline).
-    LoweredGemm,
-    /// im2col + CSR SpMM (CUSPARSE baseline).
-    LoweredSpmm,
-    /// Direct sparse convolution (Escoin).
-    DirectSparse,
-    /// Winograd F(2x2, 3x3) for dense 3x3 stride-1 layers.
-    Winograd,
-}
-
-impl Method {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Method::LoweredGemm => "lowered-gemm",
-            Method::LoweredSpmm => "lowered-spmm",
-            Method::DirectSparse => "direct-sparse",
-            Method::Winograd => "winograd",
-        }
-    }
-}
+// `Method` lives with the plan layer (`conv::plan`) since plans are keyed
+// by it; re-exported here so coordinator callers keep their import path.
+pub use crate::conv::Method;
 
 /// Router tuning knobs.
 #[derive(Clone, Debug)]

@@ -1,23 +1,23 @@
-//! Whole-network layer pipeline over the native kernels, with per-kernel
-//! timing — the engine behind the Fig 9 breakdown and Fig 11 overall
-//! numbers.
+//! Whole-network layer pipeline over the execution-plan layer, with
+//! per-kernel timing — the engine behind the Fig 9 breakdown and Fig 11
+//! overall numbers.
 //!
-//! The schedule walks a [`Network`]'s layers in order; CONV layers run
-//! under a chosen [`Method`] with each sub-kernel (`pad_in`, `im2col`,
-//! `sgemm`, `csrmm`, `sconv`) timed into its own bucket, exactly the
-//! breakdown nvprof gave the paper. Non-CONV layers (ReLU/Pool/LRN/FC)
-//! run natively so the fig. 11 "whole iteration" time is honest.
+//! The schedule holds per-layer weights built once (seeded), compiles a
+//! [`NetworkPlan`] for each `(batch, method assignment)` it is asked to
+//! run — sharing cached [`LayerPlan`]s across runs so weight stretching /
+//! CSR conversion happens once per `(layer, method)` — and walks the plan
+//! with per-kernel stopwatches (`pad_in`, `im2col`, `sgemm`, `csrmm`,
+//! `sconv`), exactly the breakdown nvprof gave the paper. Non-CONV layers
+//! (ReLU/Pool/LRN/FC) run natively so the Fig 11 "whole iteration" time
+//! is honest.
 
-use super::router::Method;
-use crate::config::{ConvShape, FcShape, LayerKind, Network, PoolKind};
-use crate::conv::{
-    csrmm, gemm_parallel, im2col_group, sconv_parallel, winograd_3x3, ConvWeights,
-};
-use crate::sparse::{CsrMatrix, StretchedFilter};
-use crate::tensor::{Dims4, Tensor4};
-use crate::util::{Rng, Stopwatch};
+use super::router::{Method, Router};
+use crate::config::{ConvShape, LayerKind, Network};
+use crate::conv::{ConvWeights, LayerPlan, NetworkPlan, WeightedOp, WorkspaceArena};
+use crate::util::Rng;
 use std::collections::HashMap;
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Timing of one executed layer.
 #[derive(Clone, Debug)]
@@ -59,7 +59,7 @@ impl ScheduleReport {
 
     /// Sum per kernel bucket across layers (the Fig 9 breakdown).
     pub fn kernel_breakdown(&self) -> Vec<(String, Duration)> {
-        let mut sw = Stopwatch::new();
+        let mut sw = crate::util::Stopwatch::new();
         for l in &self.layers {
             for (k, d) in &l.kernels {
                 sw.record(k, *d);
@@ -72,15 +72,14 @@ impl ScheduleReport {
     }
 }
 
-/// Pre-built weights for every CONV/FC layer of a network, plus the
-/// executor that walks the layers.
+/// Pre-built weights for every CONV/FC layer of a network, plus a cache
+/// of compiled [`LayerPlan`]s, one per `(layer, method)` ever requested.
 pub struct NetworkSchedule {
     pub network: Network,
-    conv_weights: HashMap<String, ConvWeights>,
-    csr_banks: HashMap<String, Vec<CsrMatrix>>,
-    stretched: HashMap<String, Vec<StretchedFilter>>,
-    fc_weights: HashMap<String, Vec<f32>>,
+    conv_weights: HashMap<String, Arc<ConvWeights>>,
+    fc_weights: HashMap<String, Arc<Vec<f32>>>,
     threads: usize,
+    plans: Mutex<HashMap<(String, Method), Arc<LayerPlan>>>,
 }
 
 impl NetworkSchedule {
@@ -88,19 +87,15 @@ impl NetworkSchedule {
     pub fn build(network: Network, seed: u64, threads: usize) -> Self {
         let mut rng = Rng::new(seed);
         let mut conv_weights = HashMap::new();
-        let mut csr_banks = HashMap::new();
-        let mut stretched = HashMap::new();
         let mut fc_weights = HashMap::new();
         for layer in &network.layers {
             match &layer.kind {
                 LayerKind::Conv(shape) => {
-                    let w = ConvWeights::synthetic(shape, &mut rng);
-                    csr_banks.insert(layer.name.clone(), w.csr_banks());
-                    stretched.insert(layer.name.clone(), w.stretched_banks());
+                    let w = Arc::new(ConvWeights::synthetic(shape, &mut rng));
                     conv_weights.insert(layer.name.clone(), w);
                 }
                 LayerKind::Fc(fc) => {
-                    fc_weights.insert(layer.name.clone(), rng.normal_vec(fc.weights()));
+                    fc_weights.insert(layer.name.clone(), Arc::new(rng.normal_vec(fc.weights())));
                 }
                 _ => {}
             }
@@ -108,148 +103,55 @@ impl NetworkSchedule {
         Self {
             network,
             conv_weights,
-            csr_banks,
-            stretched,
             fc_weights,
             threads,
+            plans: Mutex::new(HashMap::new()),
         }
     }
 
     pub fn weights_for(&self, layer: &str) -> Option<&ConvWeights> {
-        self.conv_weights.get(layer)
+        self.conv_weights.get(layer).map(|w| w.as_ref())
     }
 
-    /// Run one CONV layer under `method`, timing sub-kernels into `sw`.
-    fn run_conv(
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The compiled plan for `(layer, method)`, built on first request.
+    pub fn plan_for(&self, name: &str, shape: &ConvShape, method: Method) -> Arc<LayerPlan> {
+        let mut cache = self.plans.lock().unwrap();
+        cache
+            .entry((name.to_string(), method))
+            .or_insert_with(|| {
+                Arc::new(LayerPlan::build_shared(
+                    shape,
+                    self.conv_weights[name].clone(),
+                    method,
+                    self.threads,
+                ))
+            })
+            .clone()
+    }
+
+    /// Compile a [`NetworkPlan`] for one batch size and method
+    /// assignment, reusing cached layer plans.
+    pub fn network_plan(
         &self,
-        name: &str,
-        shape: &ConvShape,
-        method: Method,
-        x: &Tensor4,
-        sw: &mut Stopwatch,
-    ) -> Tensor4 {
-        let w = &self.conv_weights[name];
-        match method {
-            Method::LoweredGemm => {
-                // im2col is timed inside lowered_gemm; to expose the split
-                // we run the two phases explicitly here.
-                let padded = sw.lap("pad_in", || x.pad_spatial(shape.pad));
-                let (k, ef) = shape.lowered_dims();
-                let mg = shape.m_per_group();
-                let d = x.dims();
-                let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, shape.out_h(), shape.out_w()));
-                let mut lowered = vec![0.0f32; k * ef];
-                for n in 0..d.n {
-                    for g in 0..shape.groups {
-                        sw.lap("im2col", || im2col_group(shape, &padded, n, g, &mut lowered));
-                        let a = w.group_matrix(g);
-                        let base = out.dims().index(n, g * mg, 0, 0);
-                        let c = &mut out.data_mut()[base..base + mg * ef];
-                        sw.lap("sgemm", || {
-                            gemm_parallel(mg, k, ef, a, &lowered, c, self.threads)
-                        });
-                    }
-                }
-                out
+        batch: usize,
+        mut pick: impl FnMut(&str, &ConvShape) -> Method,
+    ) -> NetworkPlan {
+        NetworkPlan::from_parts(&self.network, batch, &mut |layer| match &layer.kind {
+            LayerKind::Conv(shape) => {
+                let method = if shape.is_sparse() {
+                    pick(&layer.name, shape)
+                } else {
+                    Method::LoweredGemm
+                };
+                Some(WeightedOp::Conv(self.plan_for(&layer.name, shape, method)))
             }
-            Method::LoweredSpmm => {
-                let padded = sw.lap("pad_in", || x.pad_spatial(shape.pad));
-                let banks = &self.csr_banks[name];
-                let (k, ef) = shape.lowered_dims();
-                let mg = shape.m_per_group();
-                let d = x.dims();
-                let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, shape.out_h(), shape.out_w()));
-                let mut lowered = vec![0.0f32; k * ef];
-                for n in 0..d.n {
-                    for (g, bank) in banks.iter().enumerate() {
-                        sw.lap("im2col", || im2col_group(shape, &padded, n, g, &mut lowered));
-                        let base = out.dims().index(n, g * mg, 0, 0);
-                        let c = &mut out.data_mut()[base..base + mg * ef];
-                        sw.lap("csrmm", || csrmm(bank, ef, &lowered, c));
-                    }
-                }
-                out
-            }
-            Method::DirectSparse => {
-                // pad_in happens inside sconv; time it separately to match
-                // the paper's breakdown.
-                let banks = &self.stretched[name];
-                sw.lap("sconv", || sconv_parallel(shape, x, banks, self.threads))
-            }
-            Method::Winograd => sw.lap("winograd", || winograd_3x3(shape, x, w)),
-        }
-    }
-
-    fn run_fc(&self, name: &str, fc: &FcShape, x: &Tensor4, sw: &mut Stopwatch) -> Tensor4 {
-        let w = &self.fc_weights[name];
-        let n = x.dims().n;
-        let flat = x.dims().chw();
-        assert_eq!(flat, fc.in_features, "{name}: fc input mismatch");
-        let mut out = Tensor4::zeros(Dims4::new(n, fc.out_features, 1, 1));
-        sw.lap("fc", || {
-            // out[n][o] = sum_i x[n][i] * w[o][i]
-            for img in 0..n {
-                let xrow = x.image(img);
-                let orow = &mut out.data_mut()[img * fc.out_features..(img + 1) * fc.out_features];
-                for (o, oval) in orow.iter_mut().enumerate() {
-                    let wrow = &w[o * fc.in_features..(o + 1) * fc.in_features];
-                    *oval = xrow.iter().zip(wrow).map(|(a, b)| a * b).sum();
-                }
-            }
-        });
-        out
-    }
-
-    fn run_pool(
-        kind: PoolKind,
-        k: usize,
-        stride: usize,
-        pad: usize,
-        x: &Tensor4,
-        sw: &mut Stopwatch,
-    ) -> Tensor4 {
-        let d = x.dims();
-        let oh = (d.h + 2 * pad - k) / stride + 1;
-        let ow = (d.w + 2 * pad - k) / stride + 1;
-        let mut out = Tensor4::zeros(Dims4::new(d.n, d.c, oh, ow));
-        sw.lap("pool", || {
-            for n in 0..d.n {
-                for c in 0..d.c {
-                    for h in 0..oh {
-                        for w in 0..ow {
-                            let mut acc: f32 = match kind {
-                                PoolKind::Max => f32::NEG_INFINITY,
-                                PoolKind::Avg => 0.0,
-                            };
-                            let mut count = 0;
-                            for dh in 0..k {
-                                for dw in 0..k {
-                                    let hh = (h * stride + dh) as isize - pad as isize;
-                                    let ww = (w * stride + dw) as isize - pad as isize;
-                                    if hh >= 0
-                                        && ww >= 0
-                                        && (hh as usize) < d.h
-                                        && (ww as usize) < d.w
-                                    {
-                                        let v = x.at(n, c, hh as usize, ww as usize);
-                                        match kind {
-                                            PoolKind::Max => acc = acc.max(v),
-                                            PoolKind::Avg => acc += v,
-                                        }
-                                        count += 1;
-                                    }
-                                }
-                            }
-                            if kind == PoolKind::Avg && count > 0 {
-                                acc /= count as f32;
-                            }
-                            out.set(n, c, h, w, acc);
-                        }
-                    }
-                }
-            }
-        });
-        out
+            LayerKind::Fc(_) => Some(WeightedOp::Fc(self.fc_weights[&layer.name].clone())),
+            _ => None,
+        })
     }
 
     /// Execute the network once on a synthetic batch, choosing the method
@@ -260,92 +162,20 @@ impl NetworkSchedule {
     /// linear chain per branch layer with a fresh input of that layer's
     /// declared shape — timing-faithful, since conv cost depends only on
     /// shapes, while keeping the executor simple (DESIGN.md §7).
-    pub fn run(&self, batch: usize, mut pick: impl FnMut(&str, &ConvShape) -> Method) -> ScheduleReport {
-        let mut rng = Rng::new(0xBA7C4 + batch as u64);
-        let mut layers = Vec::new();
-        let mut current: Option<Tensor4> = None;
-
-        for layer in &self.network.layers {
-            let mut sw = Stopwatch::new();
-            let t0 = Instant::now();
-            let mut method = None;
-            match &layer.kind {
-                LayerKind::Conv(shape) => {
-                    // Branch layers (or the first layer) get a fresh input
-                    // tensor of the declared shape.
-                    let want = Dims4::new(batch, shape.c, shape.h, shape.w);
-                    let x = match current.take() {
-                        Some(t) if t.dims() == want => t,
-                        _ => Tensor4::random_activations(want, &mut rng),
-                    };
-                    let m = if shape.is_sparse() {
-                        pick(&layer.name, shape)
-                    } else {
-                        Method::LoweredGemm
-                    };
-                    method = Some(m);
-                    let y = self.run_conv(&layer.name, shape, m, &x, &mut sw);
-                    // ReLU follows every conv in all three networks.
-                    let mut y = y;
-                    sw.lap("relu", || {
-                        for v in y.data_mut() {
-                            *v = v.max(0.0);
-                        }
-                    });
-                    current = Some(y);
-                }
-                LayerKind::Fc(fc) => {
-                    let want_in = fc.in_features;
-                    let x = match current.take() {
-                        Some(t) if t.dims().chw() == want_in => t,
-                        _ => Tensor4::random_activations(
-                            Dims4::new(batch, want_in, 1, 1),
-                            &mut rng,
-                        ),
-                    };
-                    current = Some(self.run_fc(&layer.name, fc, &x, &mut sw));
-                }
-                LayerKind::Pool {
-                    kind,
-                    c,
-                    h,
-                    w,
-                    k,
-                    stride,
-                    pad,
-                } => {
-                    let want = Dims4::new(batch, *c, *h, *w);
-                    let x = match current.take() {
-                        Some(t) if t.dims() == want => t,
-                        _ => Tensor4::random_activations(want, &mut rng),
-                    };
-                    current = Some(Self::run_pool(*kind, *k, *stride, *pad, &x, &mut sw));
-                }
-                LayerKind::Relu { elems } | LayerKind::Lrn { elems } => {
-                    let name = if matches!(layer.kind, LayerKind::Lrn { .. }) {
-                        "lrn"
-                    } else {
-                        "relu"
-                    };
-                    let x = match current.take() {
-                        Some(t) if t.dims().chw() == *elems => t,
-                        _ => Tensor4::random_activations(Dims4::new(batch, *elems, 1, 1), &mut rng),
-                    };
-                    let mut y = x;
-                    sw.lap(name, || {
-                        // LRN modelled as a 5-op/element normalisation pass.
-                        for v in y.data_mut() {
-                            let x2 = *v * *v;
-                            *v /= (1.0 + 1e-4 * x2).powf(0.75);
-                        }
-                    });
-                    current = Some(y);
-                }
-            }
+    pub fn run(
+        &self,
+        batch: usize,
+        pick: impl FnMut(&str, &ConvShape) -> Method,
+    ) -> ScheduleReport {
+        let plan = self.network_plan(batch, pick);
+        let mut arena = WorkspaceArena::for_plan(&plan);
+        let mut layers = Vec::with_capacity(self.network.layers.len());
+        plan.run_timed(&mut arena, &mut |lr| {
+            let sw = lr.kernels.expect("run_timed laps kernels");
             layers.push(LayerTiming {
-                layer: layer.name.clone(),
-                method,
-                total: t0.elapsed(),
+                layer: lr.layer.to_string(),
+                method: lr.method,
+                total: lr.total,
                 kernels: sw
                     .names()
                     .into_iter()
@@ -355,19 +185,33 @@ impl NetworkSchedule {
                     })
                     .collect(),
             });
-        }
+        });
         ScheduleReport {
             network: self.network.name.clone(),
             batch,
             layers,
         }
     }
+
+    /// Router-driven run: methods come from [`Router::choose`] and every
+    /// measured layer latency is folded back via [`Router::observe`], so
+    /// repeated calls refine the per-layer choice online (paper §3.4).
+    pub fn run_routed(&self, batch: usize, router: &Router) -> ScheduleReport {
+        let report = self.run(batch, |name, shape| router.choose(name, shape));
+        for lt in &report.layers {
+            if let Some(m) = lt.method {
+                router.observe(&lt.layer, m, lt.total);
+            }
+        }
+        report
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{alexnet, Layer, Network};
+    use crate::config::{alexnet, ConvShape, FcShape, Layer, Network, PoolKind};
+    use crate::coordinator::RouterConfig;
 
     fn tiny_net() -> Network {
         Network {
@@ -457,5 +301,31 @@ mod tests {
             .kernels
             .iter()
             .any(|(k, _)| k == "winograd"));
+    }
+
+    #[test]
+    fn layer_plans_are_cached_across_runs() {
+        let sched = NetworkSchedule::build(tiny_net(), 6, 2);
+        let shape = ConvShape::new(4, 6, 8, 8, 3, 3, 1, 1).with_sparsity(0.8);
+        let a = sched.plan_for("c2", &shape, Method::DirectSparse);
+        sched.run(1, |_, _| Method::DirectSparse);
+        let b = sched.plan_for("c2", &shape, Method::DirectSparse);
+        assert!(Arc::ptr_eq(&a, &b), "plan rebuilt instead of cached");
+    }
+
+    #[test]
+    fn routed_run_feeds_the_router() {
+        let sched = NetworkSchedule::build(tiny_net(), 7, 2);
+        let router = Router::new(RouterConfig {
+            explore_every: 0,
+            ..Default::default()
+        });
+        let report = sched.run_routed(1, &router);
+        let sparse_layer = &report.layers[1];
+        let m = sparse_layer.method.expect("sparse conv routed");
+        assert!(
+            router.estimate(&sparse_layer.layer, m).is_some(),
+            "latency observation missing"
+        );
     }
 }

@@ -1,20 +1,44 @@
 //! The serving request loop (vLLM-router-style, scaled to this paper):
 //! clients submit single images; a dynamic batcher forms fixed-size
-//! batches; one executor thread owns the PJRT engine (xla handles are not
-//! `Send`, and the CPU client parallelises compute internally) and runs
-//! the AOT **model** artifact; responses fan back out through per-request
-//! channels.
+//! batches; one executor thread owns a shared [`NetworkPlan`] plus its
+//! [`WorkspaceArena`] and runs every batch through the plan layer —
+//! zero steady-state allocation on the hot path; responses fan back out
+//! through per-request channels.
+//!
+//! Method selection is the [`Router`]'s job: the plan is compiled from
+//! `Router::choose` per sparse CONV layer, every batch's per-layer
+//! latencies are folded back via `Router::observe`, and every
+//! `replan_every` batches the choices are re-evaluated — if the router
+//! has changed its mind, the executor recompiles the plan (weights are
+//! regenerated from the same seed, so results stay consistent). This is
+//! the paper's §3.4 adaptive kernel customization as a serving loop.
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
-use crate::conv::ConvWeights;
-use crate::runtime::Engine;
-use crate::tensor::{Dims4, Tensor4};
-use crate::util::Rng;
+use super::router::{Router, RouterConfig};
+use crate::config::{network_by_name, LayerKind, Network};
+use crate::conv::{Method, NetworkPlan, WorkspaceArena};
+use crate::util::default_threads;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Serving-layer error (the coordinator is dependency-free; no anyhow).
+#[derive(Debug)]
+pub struct ServerError(pub String);
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server: {}", self.0)
+    }
+}
+
+impl std::error::Error for ServerError {}
+
+fn err(msg: impl Into<String>) -> ServerError {
+    ServerError(msg.into())
+}
 
 /// One inference request: a single CHW image.
 pub struct InferRequest {
@@ -37,26 +61,48 @@ pub struct InferResponse {
 /// Server construction parameters.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Artifact directory (must contain manifest.json).
-    pub artifact_dir: std::path::PathBuf,
-    /// Model artifact name, e.g. `minicnn_sconv`.
-    pub artifact: String,
+    /// Network to serve (`config::network_by_name`): `minicnn` (default),
+    /// `alexnet`, `googlenet`, `resnet50`.
+    pub network: String,
     pub batcher: BatcherConfig,
     /// Seed for the synthetic model weights.
     pub weight_seed: u64,
+    /// Kernel worker threads (0 = `util::default_threads()`).
+    pub threads: usize,
+    /// Router knobs for per-layer method selection.
+    pub router: RouterConfig,
+    /// Re-evaluate router choices every N batches (0 = plan once).
+    pub replan_every: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            network: "minicnn".into(),
+            batcher: BatcherConfig::default(),
+            weight_seed: 42,
+            threads: 0,
+            router: RouterConfig::default(),
+            replan_every: 64,
+        }
+    }
 }
 
 /// Aggregated post-shutdown statistics.
 #[derive(Clone, Debug)]
 pub struct ServerStats {
     pub snapshot: MetricsSnapshot,
-    pub compile_time: Duration,
+    /// Wall time spent compiling the initial NetworkPlan (weight
+    /// generation + operand transforms + arena sizing).
+    pub plan_build_time: Duration,
+    /// Times the executor recompiled the plan after a router flip.
+    pub replans: u64,
 }
 
 /// Handle owned by clients: submit requests, then `shutdown` to join.
 pub struct ServerHandle {
     tx: Option<Sender<InferRequest>>,
-    executor: Option<std::thread::JoinHandle<anyhow::Result<Duration>>>,
+    executor: Option<std::thread::JoinHandle<Result<(Duration, u64), ServerError>>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     image_elems: usize,
@@ -64,20 +110,21 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Start the server: spawns the executor thread, which builds the
-    /// engine, compiles the artifact, and materialises model weights.
-    /// Blocks until the executor is ready to serve.
-    pub fn start(cfg: ServerConfig) -> anyhow::Result<Self> {
+    /// Start the server: spawns the executor thread, which compiles the
+    /// network plan and preallocates the workspace arena. Blocks until
+    /// the executor is ready to serve.
+    pub fn start(cfg: ServerConfig) -> Result<Self, ServerError> {
         let (tx, rx) = channel::<InferRequest>();
         let metrics = Arc::new(Metrics::new());
         let metrics_exec = metrics.clone();
-        let (ready_tx, ready_rx) = channel::<anyhow::Result<(usize, usize)>>();
+        let (ready_tx, ready_rx) = channel::<Result<(usize, usize), ServerError>>();
         let executor = std::thread::Builder::new()
             .name("escoin-executor".into())
-            .spawn(move || executor_loop(cfg, rx, metrics_exec, ready_tx))?;
+            .spawn(move || executor_loop(cfg, rx, metrics_exec, ready_tx))
+            .map_err(|e| err(format!("spawn failed: {e}")))?;
         let (image_elems, num_classes) = ready_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("executor died during startup"))??;
+            .map_err(|_| err("executor died during startup"))??;
         Ok(Self {
             tx: Some(tx),
             executor: Some(executor),
@@ -98,13 +145,14 @@ impl ServerHandle {
     }
 
     /// Submit one image; returns the response channel.
-    pub fn submit(&self, image: Vec<f32>) -> anyhow::Result<Receiver<InferResponse>> {
-        anyhow::ensure!(
-            image.len() == self.image_elems,
-            "image has {} elems, model wants {}",
-            image.len(),
-            self.image_elems
-        );
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<InferResponse>, ServerError> {
+        if image.len() != self.image_elems {
+            return Err(err(format!(
+                "image has {} elems, model wants {}",
+                image.len(),
+                self.image_elems
+            )));
+        }
         let (resp_tx, resp_rx) = channel();
         let req = InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -117,7 +165,7 @@ impl ServerHandle {
             .as_ref()
             .expect("server already shut down")
             .send(req)
-            .map_err(|_| anyhow::anyhow!("executor gone"))?;
+            .map_err(|_| err("executor gone"))?;
         Ok(resp_rx)
     }
 
@@ -126,119 +174,146 @@ impl ServerHandle {
     }
 
     /// Close the intake, drain, and join the executor.
-    pub fn shutdown(mut self) -> anyhow::Result<ServerStats> {
+    pub fn shutdown(mut self) -> Result<ServerStats, ServerError> {
         drop(self.tx.take());
-        let compile_time = self
+        let (plan_build_time, replans) = self
             .executor
             .take()
             .expect("double shutdown")
             .join()
-            .map_err(|_| anyhow::anyhow!("executor panicked"))??;
+            .map_err(|_| err("executor panicked"))??;
         Ok(ServerStats {
             snapshot: self.metrics.snapshot(),
-            compile_time,
+            plan_build_time,
+            replans,
         })
     }
 }
 
-/// Build the weight literal list for the model artifact once at startup.
-fn model_weight_literals(
-    loaded: &crate::runtime::LoadedArtifact,
-    seed: u64,
-) -> anyhow::Result<Vec<xla::Literal>> {
-    let art = &loaded.artifact;
-    anyhow::ensure!(art.kind == "model", "server needs a model artifact");
-    let mut rng = Rng::new(seed);
-    let layers = &art.layers;
-    anyhow::ensure!(layers.len() == 3, "minicnn has 3 conv layers");
-    let convs: Vec<ConvWeights> = layers
+/// The router's method assignment for every CONV layer — compared
+/// against the live plan to decide whether a replan is worthwhile, and
+/// then used verbatim to build the replacement plan (the router is asked
+/// exactly once per decision; `Router::choose` advances exploration
+/// state, so re-querying during the rebuild could bake in a different —
+/// possibly identical-to-old or one-off exploratory — assignment).
+fn desired_methods(net: &Network, router: &Router) -> Vec<(String, Method)> {
+    net.layers
         .iter()
-        .map(|l| ConvWeights::synthetic(l, &mut rng))
-        .collect();
-    let num_classes = *art.output.last().unwrap();
-    let fc_w: Vec<f32> = rng
-        .normal_vec(layers[2].m * num_classes)
-        .iter()
-        .map(|v| v * 0.1)
-        .collect();
-    let fc_b: Vec<f32> = rng.normal_vec(num_classes).iter().map(|v| v * 0.01).collect();
-    loaded.model_weight_literals(&convs, &fc_w, &fc_b)
+        .filter_map(|l| match &l.kind {
+            LayerKind::Conv(shape) => Some((
+                l.name.clone(),
+                if shape.is_sparse() {
+                    router.choose(&l.name, shape)
+                } else {
+                    Method::LoweredGemm
+                },
+            )),
+            _ => None,
+        })
+        .collect()
 }
 
 fn executor_loop(
     cfg: ServerConfig,
     rx: Receiver<InferRequest>,
     metrics: Arc<Metrics>,
-    ready: Sender<anyhow::Result<(usize, usize)>>,
-) -> anyhow::Result<Duration> {
-    // Engine construction happens on this thread: xla handles are !Send.
-    let startup = (|| -> anyhow::Result<_> {
-        let engine = Engine::new(&cfg.artifact_dir)?;
-        let loaded = engine.load(&cfg.artifact)?;
-        let weight_lits = model_weight_literals(&loaded, cfg.weight_seed)?;
-        Ok((engine, loaded, weight_lits))
+    ready: Sender<Result<(usize, usize), ServerError>>,
+) -> Result<(Duration, u64), ServerError> {
+    let startup = (|| -> Result<_, ServerError> {
+        let net = network_by_name(&cfg.network)
+            .ok_or_else(|| err(format!("unknown network {:?}", cfg.network)))?;
+        let threads = if cfg.threads > 0 {
+            cfg.threads
+        } else {
+            default_threads()
+        };
+        let router = Router::new(cfg.router.clone());
+        let batch_size = cfg.batcher.batch_size;
+        let t0 = Instant::now();
+        let assignment = desired_methods(&net, &router);
+        let plan = build_plan(&net, batch_size, cfg.weight_seed, threads, &assignment);
+        let arena = WorkspaceArena::for_plan(&plan);
+        Ok((net, router, threads, plan, arena, t0.elapsed()))
     })();
-    let (_engine, loaded, weight_lits) = match startup {
+    let (net, router, threads, mut plan, mut arena, build_time) = match startup {
         Ok(v) => v,
         Err(e) => {
-            let msg = format!("{e:#}");
+            let msg = e.0.clone();
             let _ = ready.send(Err(e));
-            anyhow::bail!("startup failed: {msg}");
+            return Err(err(format!("startup failed: {msg}")));
         }
     };
-    let art = &loaded.artifact;
-    let xs = &art.inputs[0].shape; // (B, C, H, W)
-    let (batch_size, c, h, w) = (xs[0], xs[1], xs[2], xs[3]);
-    let image_elems = c * h * w;
-    let num_classes = *art.output.last().unwrap();
+    let batch_size = plan.batch;
+    let image_elems = plan.image_elems();
+    let num_classes = plan.output_dims().chw();
     let _ = ready.send(Ok((image_elems, num_classes)));
 
-    let batcher = Batcher::new(
-        rx,
-        BatcherConfig {
-            batch_size,
-            ..cfg.batcher
-        },
-    );
+    let batcher = Batcher::new(rx, cfg.batcher.clone());
+    // Preallocated batch input; padded slots stay zero.
+    let mut input = vec![0.0f32; plan.input_dims().len()];
+    let mut nbatches = 0u64;
+    let mut replans = 0u64;
 
     while let Some(batch) = batcher.next_batch() {
         let t_exec = Instant::now();
-        // Assemble the batch tensor, padding unused slots with zeros.
-        let mut x = Tensor4::zeros(Dims4::new(batch_size, c, h, w));
+        input.fill(0.0);
         for (slot, req) in batch.items.iter().enumerate() {
             let dst = slot * image_elems;
-            x.data_mut()[dst..dst + image_elems].copy_from_slice(&req.image);
+            input[dst..dst + image_elems].copy_from_slice(&req.image);
         }
         metrics
             .padded_slots
             .fetch_add(batch.padding(batch_size) as u64, Ordering::Relaxed);
         metrics.batches.fetch_add(1, Ordering::Relaxed);
 
-        let mut lits = vec![crate::runtime::tensor_to_literal(&x)?];
-        for wl in &weight_lits {
-            lits.push(wl.clone());
-        }
-        match loaded.execute(&lits) {
-            Ok(flat) => {
-                metrics.batch_latency.record(t_exec.elapsed());
-                for (slot, req) in batch.items.into_iter().enumerate() {
-                    let logits =
-                        flat[slot * num_classes..(slot + 1) * num_classes].to_vec();
-                    let latency = req.submitted.elapsed();
-                    metrics.latency.record(latency);
-                    metrics.responses.fetch_add(1, Ordering::Relaxed);
-                    let _ = req.resp.send(InferResponse {
-                        id: req.id,
-                        logits,
-                        latency,
-                    });
+        {
+            // Serving run: per-layer totals feed the router's EWMA while
+            // the kernels keep their parallel (untimed) execution paths.
+            let logits = plan.run_serving(&input, &mut arena, &mut |lr| {
+                if let Some(m) = lr.method {
+                    router.observe(lr.layer, m, lr.total);
                 }
+            });
+            metrics.batch_latency.record(t_exec.elapsed());
+            for (slot, req) in batch.items.into_iter().enumerate() {
+                let out = logits[slot * num_classes..(slot + 1) * num_classes].to_vec();
+                let latency = req.submitted.elapsed();
+                metrics.latency.record(latency);
+                metrics.responses.fetch_add(1, Ordering::Relaxed);
+                let _ = req.resp.send(InferResponse {
+                    id: req.id,
+                    logits: out,
+                    latency,
+                });
             }
-            Err(e) => {
-                metrics.errors.fetch_add(1, Ordering::Relaxed);
-                eprintln!("executor: batch failed: {e:#}");
+        }
+
+        nbatches += 1;
+        if cfg.replan_every > 0 && nbatches % cfg.replan_every == 0 {
+            let want = desired_methods(&net, &router);
+            if want != plan.conv_methods() {
+                plan = build_plan(&net, batch_size, cfg.weight_seed, threads, &want);
+                arena = WorkspaceArena::for_plan(&plan);
+                replans += 1;
             }
         }
     }
-    Ok(loaded.compile_time)
+    Ok((build_time, replans))
+}
+
+/// Compile a plan from a frozen per-layer method assignment.
+fn build_plan(
+    net: &Network,
+    batch: usize,
+    seed: u64,
+    threads: usize,
+    assignment: &[(String, Method)],
+) -> NetworkPlan {
+    NetworkPlan::build(net, batch, seed, threads, |name, _| {
+        assignment
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, m)| *m)
+            .expect("assignment covers every conv layer")
+    })
 }

@@ -10,9 +10,34 @@
 //!   cuSPARSE) — AOT-lowered to HLO text.
 //! * **L2** (build time): JAX conv-layer/model builders in
 //!   `python/compile/model.py`.
-//! * **L3** (this crate): the serving coordinator, PJRT runtime, native
-//!   reference kernels, GPU memory-hierarchy simulator, and benchmark
-//!   harness that regenerates every table and figure in the paper.
+//! * **L3** (this crate): the serving coordinator, native reference
+//!   kernels, execution-plan layer, GPU memory-hierarchy simulator, and
+//!   benchmark harness that regenerates every table and figure in the
+//!   paper. The PJRT runtime that executes the AOT artifacts is gated
+//!   behind the `pjrt` cargo feature (it needs the `xla` bindings; the
+//!   default build is dependency-free).
+//!
+//! ## The execution-plan layer
+//!
+//! Everything that *runs* a convolution goes through `conv::plan` /
+//! `conv::executor` (see `src/conv/README.md` for the full lifecycle):
+//!
+//! ```text
+//! ConvShape + ConvWeights + Method ──build──▶ LayerPlan   (operands pre-transformed)
+//! Network  + seed + Router picks   ──build──▶ NetworkPlan (per-layer plans + geometry)
+//! NetworkPlan + WorkspaceArena     ──run────▶ activations (zero steady-state allocation)
+//! ```
+//!
+//! * [`conv::LayerPlan`] — one CONV layer compiled for a method; executes
+//!   into caller slices via the [`conv::ConvExecutor`] trait.
+//! * [`conv::Workspace`] / [`conv::WorkspaceArena`] — cuDNN-style scratch
+//!   arenas: sized once, reused forever.
+//! * [`conv::NetworkPlan`] — a whole network compiled for a batch size;
+//!   the scheduler ([`coordinator::NetworkSchedule`]), the serving loop
+//!   ([`coordinator::ServerHandle`]), and the fig8/fig9/fig11 bench
+//!   harnesses all execute through it.
+//! * [`coordinator::Router`] — picks the [`conv::Method`] per layer and
+//!   refines it online from measured plan latencies (paper §3.4).
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -20,6 +45,7 @@ pub mod bench_harness;
 pub mod config;
 pub mod conv;
 pub mod coordinator;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod simulator;
 pub mod sparse;

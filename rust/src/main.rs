@@ -2,37 +2,85 @@
 //! reproduction harness.
 //!
 //! Subcommands:
-//!   summary                       Table 2 + Table 3
-//!   prune <model> [sparsity]      sparsity statistics for a model's filters
-//!   infer [artifact]              one batched inference through PJRT
-//!   serve [n] [artifact]          E2E serving run (batcher + executor)
-//!   simulate [sparsity]           cache simulation of one layer
-//!   figures [--quick|--figN...]   regenerate the paper's tables/figures
+//!   summary [--threads N] [--timed]   Table 2 + Table 3 (+ routed run)
+//!   prune <model> [sparsity]          sparsity statistics for a model
+//!   infer [artifact]                  PJRT inference (needs `pjrt` feature)
+//!   serve [n] [network] [--threads N] E2E serving run (plan executor)
+//!   simulate [sparsity]               cache simulation of one layer
+//!   figures [--quick|--figN...]       regenerate the paper's figures
 //!
+//! Thread count precedence everywhere: `--threads` flag, then the
+//! `ESCOIN_THREADS` env var, then available parallelism.
 //! (The offline toolchain has no clap; parsing is by hand.)
 
 use escoin::bench_harness::{table2_platforms, table3_rows};
 use escoin::config::network_by_name;
 use escoin::conv::ConvWeights;
-use escoin::coordinator::{BatcherConfig, ServerConfig, ServerHandle};
-use escoin::runtime::Engine;
+use escoin::coordinator::{BatcherConfig, Router, RouterConfig, ServerConfig, ServerHandle};
 use escoin::sparse::SparsityStats;
-use escoin::tensor::{Dims4, Tensor4};
-use escoin::util::Rng;
+use escoin::util::{default_threads, Rng};
 use std::time::{Duration, Instant};
 
-fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    match args.first().map(|s| s.as_str()) {
+/// Pull `--threads N` out of the arg list; fall back to
+/// `ESCOIN_THREADS` / available parallelism via `default_threads`. The
+/// flag and its value are always consumed once the flag is seen, so a
+/// bad value cannot shift the positional arguments.
+fn take_threads(args: &mut Vec<String>) -> usize {
+    if let Some(i) = args.iter().position(|a| a == "--threads") {
+        let value = args.get(i + 1).cloned();
+        args.drain(i..(i + 2).min(args.len()));
+        match value.as_deref().map(str::parse::<usize>) {
+            Some(Ok(n)) if n > 0 => return n,
+            _ => eprintln!("--threads wants a positive integer; using default"),
+        }
+    }
+    default_threads()
+}
+
+fn take_flag(args: &mut Vec<String>, flag: &str) -> bool {
+    if let Some(i) = args.iter().position(|a| a == flag) {
+        args.remove(i);
+        true
+    } else {
+        false
+    }
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().cloned();
+    match cmd.as_deref() {
         Some("summary") => {
+            let mut rest: Vec<String> = args.drain(1..).collect();
+            let threads = take_threads(&mut rest);
+            let timed = take_flag(&mut rest, "--timed");
             print!("{}", table2_platforms().render());
             println!();
             print!("{}", table3_rows().render());
+            if timed {
+                // Quick router-driven whole-network pass (spatially scaled
+                // so it finishes in seconds) — per-network totals.
+                use escoin::config::{all_networks, LayerKind};
+                use escoin::coordinator::NetworkSchedule;
+                println!("\nrouted batch-1 iteration (spatial/4, {threads} threads):");
+                for mut net in all_networks() {
+                    for layer in &mut net.layers {
+                        if let LayerKind::Conv(c) = &mut layer.kind {
+                            *c = c.scaled_spatial(4);
+                        }
+                    }
+                    let sched = NetworkSchedule::build(net, 0x5CED, threads);
+                    let router = Router::new(RouterConfig::default());
+                    let report = sched.run_routed(1, &router);
+                    println!("  {:<12} {:?}", report.network, report.total());
+                }
+            }
         }
         Some("prune") => {
             let model = args.get(1).map(|s| s.as_str()).unwrap_or("alexnet");
-            let net = network_by_name(model)
-                .ok_or_else(|| anyhow::anyhow!("unknown model {model:?} (alexnet|googlenet|resnet)"))?;
+            let net = network_by_name(model).ok_or_else(|| {
+                format!("unknown model {model:?} (alexnet|googlenet|resnet|minicnn)")
+            })?;
             let mut rng = Rng::new(0xE5);
             println!("{}: per-layer pruned weight statistics", net.name);
             println!(
@@ -54,49 +102,63 @@ fn main() -> anyhow::Result<()> {
             }
         }
         Some("infer") => {
-            let artifact = args
-                .get(1)
-                .cloned()
-                .unwrap_or_else(|| "alexnet_conv3_sconv".to_string());
-            let engine = Engine::new("artifacts")?;
-            let loaded = engine.load(&artifact)?;
-            let shape = loaded
-                .artifact
-                .shape
-                .clone()
-                .ok_or_else(|| anyhow::anyhow!("`infer` wants a layer artifact"))?;
-            let mut rng = Rng::new(1);
-            let x = Tensor4::random_activations(
-                Dims4::new(loaded.artifact.batch, shape.c, shape.h, shape.w),
-                &mut rng,
-            );
-            let w = ConvWeights::synthetic(&shape, &mut rng);
-            let lits = loaded.weight_literals(&w)?;
-            let t0 = Instant::now();
-            let y = loaded.run(&x, &lits)?;
-            println!(
-                "{artifact}: in {} -> out {} in {:?} (compile {:?}) on {}",
-                x.dims(),
-                y.dims(),
-                t0.elapsed(),
-                loaded.compile_time,
-                engine.platform()
-            );
+            #[cfg(feature = "pjrt")]
+            {
+                use escoin::runtime::Engine;
+                use escoin::tensor::{Dims4, Tensor4};
+                let artifact = args
+                    .get(1)
+                    .cloned()
+                    .unwrap_or_else(|| "alexnet_conv3_sconv".to_string());
+                let engine = Engine::new("artifacts")?;
+                let loaded = engine.load(&artifact)?;
+                let shape = loaded
+                    .artifact
+                    .shape
+                    .clone()
+                    .ok_or_else(|| String::from("`infer` wants a layer artifact"))?;
+                let mut rng = Rng::new(1);
+                let x = Tensor4::random_activations(
+                    Dims4::new(loaded.artifact.batch, shape.c, shape.h, shape.w),
+                    &mut rng,
+                );
+                let w = ConvWeights::synthetic(&shape, &mut rng);
+                let lits = loaded.weight_literals(&w)?;
+                let t0 = Instant::now();
+                let y = loaded.run(&x, &lits)?;
+                println!(
+                    "{artifact}: in {} -> out {} in {:?} (compile {:?}) on {}",
+                    x.dims(),
+                    y.dims(),
+                    t0.elapsed(),
+                    loaded.compile_time,
+                    engine.platform()
+                );
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                eprintln!(
+                    "`infer` executes AOT artifacts through PJRT and needs the \
+                     `pjrt` cargo feature:\n  cargo run --features pjrt -- infer\n\
+                     (native serving needs no artifacts: `escoin serve`)"
+                );
+            }
         }
         Some("serve") => {
-            let n: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(64);
-            let artifact = args
-                .get(2)
-                .cloned()
-                .unwrap_or_else(|| "minicnn_sconv".to_string());
+            let mut rest: Vec<String> = args.drain(1..).collect();
+            let threads = take_threads(&mut rest);
+            let n: usize = rest.first().and_then(|v| v.parse().ok()).unwrap_or(64);
+            let network = rest.get(1).cloned().unwrap_or_else(|| "minicnn".to_string());
             let server = ServerHandle::start(ServerConfig {
-                artifact_dir: "artifacts".into(),
-                artifact,
+                network,
                 batcher: BatcherConfig {
                     batch_size: 4,
                     max_wait: Duration::from_millis(2),
                 },
                 weight_seed: 42,
+                threads,
+                router: RouterConfig::default(),
+                ..Default::default()
             })?;
             let mut rng = Rng::new(2);
             let elems = server.image_elems();
@@ -116,13 +178,21 @@ fn main() -> anyhow::Result<()> {
                 m.p99_latency,
                 m.batches
             );
-            server.shutdown()?;
+            let stats = server.shutdown()?;
+            println!(
+                "plan build {:?}, {} replans",
+                stats.plan_build_time, stats.replans
+            );
         }
         Some("simulate") | Some("figures") => {
             // Delegated to the examples to keep one implementation.
             eprintln!(
                 "use: cargo run --release --example {} -- {}",
-                if args[0] == "simulate" { "cache_sim" } else { "paper_figures" },
+                if args[0] == "simulate" {
+                    "cache_sim"
+                } else {
+                    "paper_figures"
+                },
                 args[1..].join(" ")
             );
         }

@@ -12,3 +12,18 @@ mod timer;
 pub use rng::Rng;
 pub use stats::{geomean, mean, percentile, stddev};
 pub use timer::{ScopedTimer, Stopwatch};
+
+/// Worker-thread count for the parallel kernels: the `ESCOIN_THREADS`
+/// env override when set (and positive), else the machine's available
+/// parallelism. CLI paths layer an explicit `--threads` flag on top.
+pub fn default_threads() -> usize {
+    std::env::var("ESCOIN_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+}

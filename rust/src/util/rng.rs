@@ -69,6 +69,22 @@ impl Rng {
         (0..n).map(|_| self.relu_activation()).collect()
     }
 
+    /// Fill an existing slice with normal weights (allocation-free; same
+    /// sequence as [`Rng::normal_vec`]).
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        for v in out {
+            *v = self.normal_f32();
+        }
+    }
+
+    /// Fill an existing slice with post-ReLU activations
+    /// (allocation-free; same sequence as [`Rng::activation_vec`]).
+    pub fn fill_activations(&mut self, out: &mut [f32]) {
+        for v in out {
+            *v = self.relu_activation();
+        }
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {

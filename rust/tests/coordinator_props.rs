@@ -1,5 +1,6 @@
 //! Property-style tests on coordinator invariants (routing, batching,
-//! state) and an in-process serving round trip over the real artifact.
+//! state) and an in-process serving round trip over the shared
+//! NetworkPlan executor.
 //!
 //! The offline toolchain has no proptest; properties are exercised with
 //! seeded randomized sweeps over the deterministic `escoin::util::Rng`.
@@ -7,7 +8,7 @@
 use escoin::config::ConvShape;
 use escoin::conv::ConvWeights;
 use escoin::coordinator::{
-    Batcher, BatcherConfig, Method, Router, RouterConfig, ServerConfig, ServerHandle,
+    Batcher, BatcherConfig, Router, RouterConfig, ServerConfig, ServerHandle,
 };
 use escoin::sparse::{CsrMatrix, EllMatrix, SparsityStats};
 use escoin::tensor::Tensor4;
@@ -165,29 +166,23 @@ fn property_conv_methods_agree_on_random_shapes() {
     }
 }
 
-fn artifact_dir() -> Option<std::path::PathBuf> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
-        None
+fn server_cfg(weight_seed: u64) -> ServerConfig {
+    ServerConfig {
+        network: "minicnn".into(),
+        batcher: BatcherConfig {
+            batch_size: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        weight_seed,
+        threads: 2,
+        router: RouterConfig::default(),
+        ..Default::default()
     }
 }
 
 #[test]
 fn server_round_trip_all_requests_answered() {
-    let Some(dir) = artifact_dir() else { return };
-    let server = ServerHandle::start(ServerConfig {
-        artifact_dir: dir,
-        artifact: "minicnn_sconv".into(),
-        batcher: BatcherConfig {
-            batch_size: 4,
-            max_wait: Duration::from_millis(2),
-        },
-        weight_seed: 7,
-    })
-    .expect("server start");
+    let server = ServerHandle::start(server_cfg(7)).expect("server start");
     let elems = server.image_elems();
     let classes = server.num_classes();
     let mut rng = Rng::new(9);
@@ -210,22 +205,13 @@ fn server_round_trip_all_requests_answered() {
 
 #[test]
 fn server_identical_images_get_identical_logits_across_batches() {
-    let Some(dir) = artifact_dir() else { return };
-    let server = ServerHandle::start(ServerConfig {
-        artifact_dir: dir,
-        artifact: "minicnn_gemm".into(),
-        batcher: BatcherConfig {
-            batch_size: 4,
-            max_wait: Duration::from_millis(1),
-        },
-        weight_seed: 7,
-    })
-    .unwrap();
+    let server = ServerHandle::start(server_cfg(7)).unwrap();
     let mut rng = Rng::new(10);
     let img = rng.activation_vec(server.image_elems());
     let a = server.submit(img.clone()).unwrap().recv().unwrap();
     let b = server.submit(img).unwrap().recv().unwrap();
-    // Batch padding must not leak into results: same image, same logits.
+    // Batch padding / workspace reuse must not leak into results: same
+    // image, same logits.
     for (x, y) in a.logits.iter().zip(&b.logits) {
         assert!((x - y).abs() < 1e-5, "{x} vs {y}");
     }
@@ -234,42 +220,61 @@ fn server_identical_images_get_identical_logits_across_batches() {
 
 #[test]
 fn server_rejects_wrong_image_size() {
-    let Some(dir) = artifact_dir() else { return };
-    let server = ServerHandle::start(ServerConfig {
-        artifact_dir: dir,
-        artifact: "minicnn_sconv".into(),
-        batcher: BatcherConfig::default(),
-        weight_seed: 1,
-    })
-    .unwrap();
+    let server = ServerHandle::start(server_cfg(1)).unwrap();
     assert!(server.submit(vec![0.0; 7]).is_err());
     server.shutdown().unwrap();
 }
 
 #[test]
-fn server_startup_fails_cleanly_on_unknown_artifact() {
-    let Some(dir) = artifact_dir() else { return };
+fn server_startup_fails_cleanly_on_unknown_network() {
     let err = ServerHandle::start(ServerConfig {
-        artifact_dir: dir,
-        artifact: "nonexistent_model".into(),
-        batcher: BatcherConfig::default(),
-        weight_seed: 1,
+        network: "nonexistent_model".into(),
+        ..Default::default()
     });
     assert!(err.is_err());
 }
 
 #[test]
-fn server_startup_fails_cleanly_on_layer_artifact() {
-    // A layer artifact is not servable as a model; the executor must
-    // report the error through the ready channel, not hang or panic.
-    let Some(dir) = artifact_dir() else { return };
-    let err = ServerHandle::start(ServerConfig {
-        artifact_dir: dir,
-        artifact: "alexnet_conv3_sconv".into(),
-        batcher: BatcherConfig::default(),
-        weight_seed: 1,
-    });
-    assert!(err.is_err());
+fn server_logits_depend_on_the_submitted_image() {
+    // The serving path must actually run the submitted pixels — a zero
+    // image and a random image must not produce identical logits.
+    let server = ServerHandle::start(server_cfg(21)).unwrap();
+    let zero = vec![0.0; server.image_elems()];
+    let mut rng = Rng::new(22);
+    let img = rng.activation_vec(server.image_elems());
+    let a = server.submit(zero).unwrap().recv().unwrap();
+    let b = server.submit(img).unwrap().recv().unwrap();
+    assert_ne!(a.logits, b.logits);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn server_replans_when_the_router_changes_its_mind() {
+    // Aggressive replanning on a tiny cadence: the server must keep
+    // answering correctly across plan recompiles (weights are
+    // re-derived from the seed, so logits for one image stay stable).
+    let mut cfg = server_cfg(13);
+    cfg.replan_every = 2;
+    cfg.router = RouterConfig {
+        explore_every: 3, // force method churn
+        ..Default::default()
+    };
+    let server = ServerHandle::start(cfg).unwrap();
+    let mut rng = Rng::new(14);
+    let img = rng.activation_vec(server.image_elems());
+    let first = server.submit(img.clone()).unwrap().recv().unwrap();
+    for _ in 0..20 {
+        let resp = server.submit(img.clone()).unwrap().recv().unwrap();
+        // Methods may differ across replans; results must agree to fp
+        // accumulation tolerance.
+        for (x, y) in resp.logits.iter().zip(&first.logits) {
+            assert!(
+                (x - y).abs() <= 1e-3 + 1e-3 * y.abs().max(x.abs()),
+                "{x} vs {y} after replan"
+            );
+        }
+    }
+    server.shutdown().unwrap();
 }
 
 #[test]

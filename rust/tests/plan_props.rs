@@ -1,0 +1,124 @@
+//! Property tests for the ExecutionPlan layer: every compiled plan must
+//! match the Algorithm-1 oracle over the canonical shape grid × all four
+//! methods, and whole-network plans must be deterministic and
+//! allocation-stable against a shared workspace arena.
+
+use escoin::config::{minicnn, ConvShape};
+use escoin::conv::{
+    direct_dense, shapes_under_test, winograd_applicable, ConvWeights, LayerPlan, Method,
+    NetworkPlan, Workspace, WorkspaceArena,
+};
+use escoin::tensor::{Dims4, Tensor4};
+use escoin::util::Rng;
+
+fn case(shape: &ConvShape, n: usize, seed: u64) -> (Tensor4, ConvWeights) {
+    let mut rng = Rng::new(seed);
+    let x = Tensor4::random_activations(Dims4::new(n, shape.c, shape.h, shape.w), &mut rng);
+    let w = ConvWeights::synthetic(shape, &mut rng);
+    (x, w)
+}
+
+/// Cross-method property: every `LayerPlan` output matches `direct_dense`
+/// over the `shapes_under_test()` grid × all four `Method`s (Winograd
+/// where applicable), at several thread counts and batch sizes.
+#[test]
+fn property_every_layer_plan_matches_direct_dense() {
+    for (i, shape) in shapes_under_test().into_iter().enumerate() {
+        for batch in [1, 3] {
+            let (x, w) = case(&shape, batch, 900 + i as u64);
+            let want = direct_dense(&shape, &x, &w);
+            for method in Method::ALL {
+                if method == Method::Winograd && !winograd_applicable(&shape) {
+                    continue;
+                }
+                for threads in [1, 2, 8] {
+                    let plan = LayerPlan::build(&shape, &w, method, threads);
+                    let got = plan.run(&x);
+                    assert!(
+                        got.allclose(&want, 1e-3, 1e-4),
+                        "{shape} under {} (t{threads}, b{batch})",
+                        method.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Plan execution against a shared, reused workspace must equal the
+/// fresh-workspace result bit for bit (no scratch contamination).
+#[test]
+fn property_shared_workspace_is_bit_stable() {
+    let mut ws = Workspace::new(); // shared across shapes AND methods
+    for (i, shape) in shapes_under_test().into_iter().enumerate() {
+        let (x, w) = case(&shape, 2, 1300 + i as u64);
+        for method in [Method::DirectSparse, Method::LoweredGemm, Method::LoweredSpmm] {
+            let plan = LayerPlan::build(&shape, &w, method, 3);
+            let fresh = plan.run(&x);
+            let mut out = Tensor4::zeros(plan.out_dims(2));
+            plan.execute_into(2, x.data(), &mut ws, out.data_mut(), None);
+            assert_eq!(
+                out.data(),
+                fresh.data(),
+                "{shape} under {}",
+                method.name()
+            );
+        }
+    }
+}
+
+/// Determinism: two `NetworkPlan::run` calls on one shared
+/// `WorkspaceArena` produce byte-identical outputs (catches
+/// workspace-reuse contamination), and the arena does not grow after the
+/// first run (zero steady-state allocation).
+#[test]
+fn network_plan_runs_on_shared_arena_are_byte_identical() {
+    let net = minicnn();
+    for method in [Method::DirectSparse, Method::LoweredSpmm, Method::LoweredGemm] {
+        let plan = NetworkPlan::build(&net, 3, 0xDE, 2, |_, _| method);
+        let mut arena = WorkspaceArena::for_plan(&plan);
+        let first = plan.run(&mut arena).to_vec();
+        let floats_after_first = arena.total_floats();
+        let second = plan.run(&mut arena).to_vec();
+        let first_bits: Vec<u32> = first.iter().map(|v| v.to_bits()).collect();
+        let second_bits: Vec<u32> = second.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(first_bits, second_bits, "{}", method.name());
+        assert_eq!(
+            arena.total_floats(),
+            floats_after_first,
+            "arena grew in steady state ({})",
+            method.name()
+        );
+    }
+}
+
+/// The same arena must be safely shareable across *different* plans
+/// (method switches on replan): outputs still match a fresh arena.
+#[test]
+fn arena_survives_method_switches() {
+    let net = minicnn();
+    let mut shared = WorkspaceArena::new();
+    let mut rng = Rng::new(42);
+    let gemm = NetworkPlan::build(&net, 2, 5, 2, |_, _| Method::LoweredGemm);
+    let sparse = NetworkPlan::build(&net, 2, 5, 2, |_, _| Method::DirectSparse);
+    let img = {
+        let mut v = vec![0.0; gemm.input_dims().len()];
+        rng.fill_activations(&mut v);
+        v
+    };
+    for plan in [&gemm, &sparse, &gemm, &sparse] {
+        let mut fresh = WorkspaceArena::for_plan(plan);
+        let want = plan.run_with_input(&img, &mut fresh).to_vec();
+        let got = plan.run_with_input(&img, &mut shared).to_vec();
+        assert_eq!(got, want);
+    }
+    // Both plans see the same weights (same seed), so their outputs agree
+    // numerically too.
+    let mut a = WorkspaceArena::for_plan(&gemm);
+    let mut b = WorkspaceArena::for_plan(&sparse);
+    let ya = gemm.run_with_input(&img, &mut a).to_vec();
+    let yb = sparse.run_with_input(&img, &mut b).to_vec();
+    for (x, y) in ya.iter().zip(&yb) {
+        assert!((x - y).abs() <= 1e-3 + 1e-3 * y.abs().max(x.abs()), "{x} vs {y}");
+    }
+}

@@ -1,9 +1,12 @@
 //! Integration: AOT artifacts (Pallas -> HLO -> PJRT) vs the native Rust
 //! kernels on identical inputs — the cross-language correctness seal.
 //!
-//! Requires `make artifacts` to have produced `artifacts/`; tests skip
-//! (with a loud message) when the directory is absent so `cargo test`
-//! stays runnable on a fresh checkout.
+//! Compiled only with the `pjrt` cargo feature (the PJRT engine needs the
+//! `xla` bindings, absent from the dependency-free default build), and
+//! additionally requires `make artifacts` to have produced `artifacts/`;
+//! tests skip (with a loud message) when the directory is absent so
+//! `cargo test --features pjrt` stays runnable on a fresh checkout.
+#![cfg(feature = "pjrt")]
 
 use escoin::config::ConvShape;
 use escoin::conv::{direct_dense, ConvWeights};
