@@ -3,6 +3,14 @@
 //! `BENCH_sconv.json` (per-shape ns/iter) so future PRs can diff against
 //! a recorded baseline.
 //!
+//! Two row families:
+//! * `gemm`/`spmm`/`sconv` — compiled plan on a **shared pool** vs the
+//!   seed free functions (which re-pad, allocate, and spawn an
+//!   ephemeral pool per call).
+//! * `sconv-pool` — the worker-pool headline: per-call thread spawning
+//!   (`free_ns`) vs the persistent shared pool (`plan_ns`) at batch 1
+//!   (the serving path that motivated the pool) and batch 8.
+//!
 //! ```text
 //! cargo run --release --example perf_probe [--out PATH]
 //! ```
@@ -16,11 +24,12 @@ use escoin::conv::{
     Workspace,
 };
 use escoin::tensor::{Dims4, Tensor4};
-use escoin::util::{default_threads, Rng};
+use escoin::util::{default_threads, Rng, WorkerPool};
 
 struct Row {
     shape: &'static str,
     method: &'static str,
+    batch: usize,
     free_ns: u128,
     plan_ns: u128,
 }
@@ -33,6 +42,7 @@ fn main() {
         .and_then(|i| args.get(i + 1).cloned())
         .unwrap_or_else(|| "BENCH_sconv.json".to_string());
     let threads = default_threads();
+    let pool = WorkerPool::new(threads);
     let bench = BenchOpts::from_env();
     let batch = 2usize;
 
@@ -69,28 +79,69 @@ fn main() {
             (Method::LoweredSpmm, "spmm"),
             (Method::DirectSparse, "sconv"),
         ] {
-            // Seed free-function path: re-pads and allocates per call.
+            // Seed free-function path: re-pads, allocates, and spawns
+            // an ephemeral pool per call.
             let free = bench_median(bench, || match method {
                 Method::LoweredGemm => lowered_gemm_parallel(shape, &x, &w, threads),
                 Method::LoweredSpmm => lowered_spmm_parallel(shape, &x, &csr, threads),
                 _ => sconv_parallel(shape, &x, &st, threads),
             });
-            // Plan path: operands compiled once, workspace + output reused.
-            let plan = LayerPlan::build(shape, &w, method, threads);
-            ws.ensure(plan.workspace_floats(batch));
+            // Plan path: operands compiled once, workspace + output
+            // reused, persistent shared pool.
+            let plan = LayerPlan::build(shape, &w, method);
+            ws.ensure(plan.workspace_floats(batch, pool.workers()));
             let mut out = Tensor4::zeros(plan.out_dims(batch));
             let planned = bench_median(bench, || {
-                plan.execute_into(batch, x.data(), &mut ws, out.data_mut(), None)
+                plan.execute_into(batch, x.data(), &pool, &mut ws, out.data_mut(), None)
             });
             rows.push(Row {
                 shape: *name,
                 method: label,
+                batch,
                 free_ns: free.as_nanos(),
                 plan_ns: planned.as_nanos(),
             });
             println!(
-                "{name:<32} {label:<6} free {free:?}  plan {planned:?}  ({:.2}x)",
+                "{name:<32} {label:<10} free {free:?}  plan {planned:?}  ({:.2}x)",
                 free.as_secs_f64() / planned.as_secs_f64().max(1e-12)
+            );
+        }
+    }
+
+    // Pool-vs-spawn headline: identical compiled plan, executed once per
+    // call on a fresh pool (per-call thread spawn, what the seed kernels
+    // did) vs on the persistent shared pool — batch 1 (serving) and 8.
+    {
+        let (name, shape) = &shapes[1];
+        let mut rng = Rng::new(2);
+        let w = ConvWeights::synthetic(shape, &mut rng);
+        let plan = LayerPlan::build(shape, &w, Method::DirectSparse);
+        for (b, label) in [(1usize, "b1"), (8usize, "b8")] {
+            let x =
+                Tensor4::random_activations(Dims4::new(b, shape.c, shape.h, shape.w), &mut rng);
+            ws.ensure(plan.workspace_floats(b, pool.workers()));
+            let mut out = Tensor4::zeros(plan.out_dims(b));
+            let spawn = bench_median(bench, || {
+                let fresh = WorkerPool::new(threads);
+                plan.execute_into(b, x.data(), &fresh, &mut ws, out.data_mut(), None)
+            });
+            let pooled = bench_median(bench, || {
+                plan.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+            });
+            rows.push(Row {
+                shape: *name,
+                method: if label == "b1" {
+                    "sconv-pool-b1"
+                } else {
+                    "sconv-pool-b8"
+                },
+                batch: b,
+                free_ns: spawn.as_nanos(),
+                plan_ns: pooled.as_nanos(),
+            });
+            println!(
+                "pool-vs-spawn batch {b}: spawn-per-call {spawn:?}  pool {pooled:?}  ({:.2}x)",
+                spawn.as_secs_f64() / pooled.as_secs_f64().max(1e-12)
             );
         }
     }
@@ -102,9 +153,11 @@ fn main() {
     ));
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
-            "    {{\"shape\": \"{}\", \"method\": \"{}\", \"free_ns\": {}, \"plan_ns\": {}}}{}\n",
+            "    {{\"shape\": \"{}\", \"method\": \"{}\", \"batch\": {}, \
+             \"free_ns\": {}, \"plan_ns\": {}}}{}\n",
             r.shape,
             r.method,
+            r.batch,
             r.free_ns,
             r.plan_ns,
             if i + 1 == rows.len() { "" } else { "," }
@@ -115,9 +168,10 @@ fn main() {
     println!("wrote {out_path}");
 
     // Report the headline comparison; the plan path skips the per-call
-    // pad/output allocation, so it is expected to win — warn loudly (but
-    // don't fail: wall-clock ratios are noisy on shared machines) when a
-    // regression shows up, and let future PRs diff BENCH_sconv.json.
+    // pad/output allocation and thread spawns, so it is expected to win
+    // — warn loudly (but don't fail: wall-clock ratios are noisy on
+    // shared machines) when a regression shows up, and let future PRs
+    // diff BENCH_sconv.json.
     let sconv_rows: Vec<&Row> = rows.iter().filter(|r| r.method == "sconv").collect();
     let free: u128 = sconv_rows.iter().map(|r| r.free_ns).sum();
     let plan: u128 = sconv_rows.iter().map(|r| r.plan_ns).sum();

@@ -13,11 +13,12 @@
 use escoin::config::ConvShape;
 use escoin::conv::{ConvWeights, LayerPlan, Method, Workspace};
 use escoin::tensor::{Dims4, Tensor4};
-use escoin::util::{default_threads, Rng};
+use escoin::util::{default_threads, Rng, WorkerPool};
 use std::time::Instant;
 
 fn main() {
-    let threads = default_threads();
+    // One worker pool for the whole run — every plan executes on it.
+    let pool = WorkerPool::new(default_threads());
 
     // --- Part 1: the three methods agree on a small layer. ---
     let shape = ConvShape::new(16, 32, 14, 14, 3, 3, 1, 1).with_sparsity(0.8);
@@ -27,15 +28,15 @@ fn main() {
     println!("layer {shape}: three methods through compiled plans");
     let mut outputs = Vec::new();
     for method in [Method::LoweredGemm, Method::LoweredSpmm, Method::DirectSparse] {
-        let plan = LayerPlan::build(&shape, &w, method, threads);
+        let plan = LayerPlan::build(&shape, &w, method);
         let t0 = Instant::now();
-        let y = plan.run(&x);
+        let y = plan.run(&x, &pool);
         println!(
             "  {:>13}: out {} in {:?} (workspace {} floats)",
             method.name(),
             y.dims(),
             t0.elapsed(),
-            plan.workspace_floats(2)
+            plan.workspace_floats(2, pool.workers())
         );
         outputs.push(y);
     }
@@ -51,11 +52,11 @@ fn main() {
     let w = ConvWeights::synthetic(&shape, &mut rng);
     let mut ws = Workspace::new();
     let mut time = |method: Method| {
-        let plan = LayerPlan::build(&shape, &w, method, threads);
-        ws.ensure(plan.workspace_floats(4));
+        let plan = LayerPlan::build(&shape, &w, method);
+        ws.ensure(plan.workspace_floats(4, pool.workers()));
         let mut out = Tensor4::zeros(plan.out_dims(4));
         let t0 = Instant::now();
-        plan.execute_into(4, x.data(), &mut ws, out.data_mut(), None);
+        plan.execute_into(4, x.data(), &pool, &mut ws, out.data_mut(), None);
         (t0.elapsed(), out)
     };
     let (t_dense, dense) = time(Method::LoweredGemm);

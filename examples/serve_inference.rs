@@ -14,15 +14,22 @@ use std::time::{Duration, Instant};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
-    let threads = args
-        .iter()
-        .position(|a| a == "--threads")
-        .and_then(|i| {
-            let n = args.get(i + 1)?.parse::<usize>().ok()?;
-            args.drain(i..=i + 1);
-            Some(n)
-        })
-        .unwrap_or_else(default_threads);
+    // Like main.rs's take_threads: the flag and its value are always
+    // consumed once seen, so a bad value cannot shift the positionals.
+    let threads = match args.iter().position(|a| a == "--threads") {
+        Some(i) => {
+            let value = args.get(i + 1).cloned();
+            args.drain(i..(i + 2).min(args.len()));
+            match value.as_deref().map(str::parse::<usize>) {
+                Some(Ok(n)) if n > 0 => n,
+                _ => {
+                    eprintln!("--threads wants a positive integer; using default");
+                    default_threads()
+                }
+            }
+        }
+        None => default_threads(),
+    };
     let total: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(256);
     let network = args.get(1).cloned().unwrap_or_else(|| "minicnn".to_string());
 
@@ -74,6 +81,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let stats = server.shutdown()?;
     println!("plan build:     {:?}", stats.plan_build_time);
     println!("replans:        {}", stats.replans);
+    let s = &stats.snapshot;
+    println!(
+        "pool:           {} workers, {} tiles ({} stolen), imbalance {:.2}",
+        s.pool_workers, s.pool_tiles, s.pool_steals, s.pool_imbalance
+    );
     assert_eq!(stats.snapshot.errors, 0, "no batch may fail");
     Ok(())
 }

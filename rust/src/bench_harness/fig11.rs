@@ -40,7 +40,11 @@ pub fn fig11_overall(net: &Network, opts: Fig8Opts) -> Fig11Row {
             }
         }
     }
-    let sched = NetworkSchedule::build(scaled.clone(), 0xF11, opts.threads);
+    let sched = NetworkSchedule::build(
+        scaled.clone(),
+        0xF11,
+        std::sync::Arc::new(crate::util::WorkerPool::new(opts.threads)),
+    );
 
     let run = |method: Method| {
         let report = sched.run(opts.batch, |_, _| method);

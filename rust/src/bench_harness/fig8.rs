@@ -12,7 +12,7 @@ use super::timing::{bench_median, BenchOpts};
 use crate::config::{ConvShape, Network};
 use crate::conv::{ConvWeights, LayerPlan, Method, Workspace};
 use crate::tensor::{Dims4, Tensor4};
-use crate::util::{default_threads, geomean, Rng};
+use crate::util::{default_threads, geomean, Rng, WorkerPool};
 use std::time::Duration;
 
 /// One model's Fig 8 data point.
@@ -68,6 +68,8 @@ pub fn fig8_sparse_conv(net: &Network, opts: Fig8Opts) -> Fig8Row {
     let mut rng = Rng::new(0xF18);
     let mut totals = [Duration::ZERO; 3];
     let mut ws = Workspace::new();
+    // One pool for the whole figure run — the timed region never spawns.
+    let pool = WorkerPool::new(opts.threads);
     for (idx, (_name, shape)) in net.sparse_conv_layers().into_iter().enumerate() {
         let shape: ConvShape = if opts.spatial_scale > 1 {
             shape.scaled_spatial(opts.spatial_scale)
@@ -82,11 +84,11 @@ pub fn fig8_sparse_conv(net: &Network, opts: Fig8Opts) -> Fig8Row {
         let w = ConvWeights::synthetic(&shape, &mut wrng);
 
         for (slot, method) in APPROACHES.into_iter().enumerate() {
-            let plan = LayerPlan::build(&shape, &w, method, opts.threads);
-            ws.ensure(plan.workspace_floats(opts.batch));
+            let plan = LayerPlan::build(&shape, &w, method);
+            ws.ensure(plan.workspace_floats(opts.batch, pool.workers()));
             let mut out = Tensor4::zeros(plan.out_dims(opts.batch));
             totals[slot] += bench_median(opts.bench, || {
-                plan.execute_into(opts.batch, x.data(), &mut ws, out.data_mut(), None)
+                plan.execute_into(opts.batch, x.data(), &pool, &mut ws, out.data_mut(), None)
             });
         }
     }

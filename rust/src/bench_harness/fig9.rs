@@ -46,7 +46,11 @@ pub fn fig9_breakdown(net: &Network, opts: Fig8Opts) -> Vec<Fig9Row> {
             }
         }
     }
-    let sched = NetworkSchedule::build(scaled.clone(), 0x919, opts.threads);
+    let sched = NetworkSchedule::build(
+        scaled.clone(),
+        0x919,
+        std::sync::Arc::new(crate::util::WorkerPool::new(opts.threads)),
+    );
     let sparse: std::collections::HashSet<String> = scaled
         .sparse_conv_layers()
         .into_iter()

@@ -19,7 +19,7 @@ use super::plan::{LayerPlan, Method};
 use crate::config::{ConvShape, FcShape, Layer, LayerKind, Network, PoolKind};
 use crate::conv::weights::ConvWeights;
 use crate::tensor::Dims4;
-use crate::util::{Rng, Stopwatch};
+use crate::util::{Rng, Stopwatch, WorkerPool};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -102,11 +102,12 @@ impl WorkspaceArena {
         Self::default()
     }
 
-    /// Preallocate everything `plan` needs so `run` never allocates.
-    pub fn for_plan(plan: &NetworkPlan) -> Self {
+    /// Preallocate everything `plan` needs (when executed through
+    /// `pool`) so `run` never allocates.
+    pub fn for_plan(plan: &NetworkPlan, pool: &WorkerPool) -> Self {
         let act = plan.max_activation_floats();
         Self {
-            ws: Workspace::with_capacity(plan.workspace_floats()),
+            ws: Workspace::with_capacity(plan.workspace_floats(pool.workers())),
             ping: vec![0.0; act],
             pong: vec![0.0; act],
         }
@@ -189,12 +190,12 @@ impl NetworkPlan {
     /// Compile `network` with synthetic pruned weights (seeded like the
     /// scheduler: one RNG walked in layer order). `pick` chooses the
     /// method per *sparse* CONV layer; dense CONV layers run LoweredGemm,
-    /// matching the paper's baseline configuration.
+    /// matching the paper's baseline configuration. Plans hold no thread
+    /// state — the pool is supplied at run time.
     pub fn build(
         network: &Network,
         batch: usize,
         seed: u64,
-        threads: usize,
         mut pick: impl FnMut(&str, &ConvShape) -> Method,
     ) -> NetworkPlan {
         let mut rng = Rng::new(seed);
@@ -207,7 +208,7 @@ impl NetworkPlan {
                     Method::LoweredGemm
                 };
                 Some(WeightedOp::Conv(Arc::new(LayerPlan::build_shared(
-                    shape, w, method, threads,
+                    shape, w, method,
                 ))))
             }
             LayerKind::Fc(fc) => Some(WeightedOp::Fc(Arc::new(rng.normal_vec(fc.weights())))),
@@ -323,12 +324,13 @@ impl NetworkPlan {
         self.input_dims.chw()
     }
 
-    /// Kernel workspace high-water mark over all CONV steps.
-    pub fn workspace_floats(&self) -> usize {
+    /// Kernel workspace high-water mark over all CONV steps, for a pool
+    /// of `workers` workers.
+    pub fn workspace_floats(&self, workers: usize) -> usize {
         self.steps
             .iter()
             .map(|s| match &s.op {
-                PlanOp::Conv { plan } => plan.workspace_floats(self.batch),
+                PlanOp::Conv { plan } => plan.workspace_floats(self.batch, workers),
                 _ => 0,
             })
             .max()
@@ -358,24 +360,30 @@ impl NetworkPlan {
 
     /// Run on synthetic activations (deterministic per plan). Returns the
     /// final activation slice, resident in `arena`.
-    pub fn run<'a>(&self, arena: &'a mut WorkspaceArena) -> &'a [f32] {
-        self.run_inner(None, arena, None, false)
+    pub fn run<'a>(&self, pool: &WorkerPool, arena: &'a mut WorkspaceArena) -> &'a [f32] {
+        self.run_inner(None, pool, arena, None, false)
     }
 
     /// Run on a caller-provided input batch (`input_dims().len()` floats).
-    pub fn run_with_input<'a>(&self, input: &[f32], arena: &'a mut WorkspaceArena) -> &'a [f32] {
-        self.run_inner(Some(input), arena, None, false)
+    pub fn run_with_input<'a>(
+        &self,
+        input: &[f32],
+        pool: &WorkerPool,
+        arena: &'a mut WorkspaceArena,
+    ) -> &'a [f32] {
+        self.run_inner(Some(input), pool, arena, None, false)
     }
 
     /// Run with full per-kernel timing (Fig 9 buckets), reporting each
     /// layer to `observer`. Conv executors serialise images on this path
-    /// so laps do not interleave across threads — benchmarking only.
+    /// so laps do not interleave across pool tiles — benchmarking only.
     pub fn run_timed<'a>(
         &self,
+        pool: &WorkerPool,
         arena: &'a mut WorkspaceArena,
         observer: &mut dyn FnMut(PlanLayerRun),
     ) -> &'a [f32] {
-        self.run_inner(None, arena, Some(observer), true)
+        self.run_inner(None, pool, arena, Some(observer), true)
     }
 
     /// Serving-path run: external input, per-layer **totals** reported to
@@ -384,15 +392,17 @@ impl NetworkPlan {
     pub fn run_serving<'a>(
         &self,
         input: &[f32],
+        pool: &WorkerPool,
         arena: &'a mut WorkspaceArena,
         observer: &mut dyn FnMut(PlanLayerRun),
     ) -> &'a [f32] {
-        self.run_inner(Some(input), arena, Some(observer), false)
+        self.run_inner(Some(input), pool, arena, Some(observer), false)
     }
 
     fn run_inner<'a>(
         &self,
         input: Option<&[f32]>,
+        pool: &WorkerPool,
         arena: &'a mut WorkspaceArena,
         mut observer: Option<&mut dyn FnMut(PlanLayerRun)>,
         kernel_laps: bool,
@@ -407,7 +417,7 @@ impl NetworkPlan {
         if arena.pong.len() < act {
             arena.pong.resize(act, 0.0);
         }
-        arena.ws.ensure(self.workspace_floats());
+        arena.ws.ensure(self.workspace_floats(pool.workers()));
 
         let mut rng = Rng::new(self.input_seed);
         let mut cur_is_ping = true;
@@ -487,7 +497,7 @@ impl NetworkPlan {
                     match &step.op {
                         PlanOp::Conv { plan } => {
                             method = Some(plan.method());
-                            plan.execute_into(self.batch, src, ws, dst, sw.as_mut());
+                            plan.execute_into(self.batch, src, pool, ws, dst, sw.as_mut());
                             // ReLU follows every conv in all three
                             // networks (seed scheduler behaviour).
                             lap(&mut sw, "relu", || {
@@ -610,11 +620,11 @@ mod tests {
     #[test]
     fn network_plan_geometry() {
         let net = minicnn();
-        let plan = NetworkPlan::build(&net, 2, 1, 2, |_, _| Method::DirectSparse);
+        let plan = NetworkPlan::build(&net, 2, 1, |_, _| Method::DirectSparse);
         assert_eq!(plan.input_dims(), Dims4::new(2, 3, 16, 16));
         assert_eq!(plan.output_dims(), Dims4::new(2, 10, 1, 1));
         assert_eq!(plan.image_elems(), 3 * 16 * 16);
-        assert!(plan.workspace_floats() > 0);
+        assert!(plan.workspace_floats(2) > 0);
         assert_eq!(plan.conv_methods().len(), 3);
         // conv1 is dense -> forced LoweredGemm
         assert_eq!(plan.conv_methods()[0].1, Method::LoweredGemm);
@@ -624,10 +634,11 @@ mod tests {
     #[test]
     fn run_produces_finite_logits_and_reuses_arena() {
         let net = minicnn();
-        let plan = NetworkPlan::build(&net, 2, 3, 2, |_, _| Method::DirectSparse);
-        let mut arena = WorkspaceArena::for_plan(&plan);
+        let pool = WorkerPool::new(2);
+        let plan = NetworkPlan::build(&net, 2, 3, |_, _| Method::DirectSparse);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
         let floats = arena.total_floats();
-        let out = plan.run(&mut arena).to_vec();
+        let out = plan.run(&pool, &mut arena).to_vec();
         assert_eq!(out.len(), plan.output_dims().len());
         assert!(out.iter().all(|v| v.is_finite()));
         assert_eq!(arena.total_floats(), floats, "arena grew during run");
@@ -636,15 +647,16 @@ mod tests {
     #[test]
     fn external_input_drives_the_first_layer() {
         let net = minicnn();
-        let plan = NetworkPlan::build(&net, 1, 5, 1, |_, _| Method::LoweredGemm);
-        let mut arena = WorkspaceArena::for_plan(&plan);
+        let pool = WorkerPool::new(1);
+        let plan = NetworkPlan::build(&net, 1, 5, |_, _| Method::LoweredGemm);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
         let zeros = vec![0.0; plan.input_dims().len()];
         let mut rng = Rng::new(77);
         let mut img = vec![0.0; plan.input_dims().len()];
         rng.fill_activations(&mut img);
-        let a = plan.run_with_input(&zeros, &mut arena).to_vec();
-        let b = plan.run_with_input(&img, &mut arena).to_vec();
-        let a2 = plan.run_with_input(&zeros, &mut arena).to_vec();
+        let a = plan.run_with_input(&zeros, &pool, &mut arena).to_vec();
+        let b = plan.run_with_input(&img, &pool, &mut arena).to_vec();
+        let a2 = plan.run_with_input(&zeros, &pool, &mut arena).to_vec();
         assert_eq!(a, a2, "same input must reproduce");
         assert_ne!(a, b, "different inputs must differ");
     }
@@ -652,10 +664,11 @@ mod tests {
     #[test]
     fn timed_run_reports_every_layer() {
         let net = minicnn();
-        let plan = NetworkPlan::build(&net, 1, 9, 2, |_, _| Method::LoweredSpmm);
-        let mut arena = WorkspaceArena::for_plan(&plan);
+        let pool = WorkerPool::new(2);
+        let plan = NetworkPlan::build(&net, 1, 9, |_, _| Method::LoweredSpmm);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
         let mut seen = Vec::new();
-        plan.run_timed(&mut arena, &mut |lr| {
+        plan.run_timed(&pool, &mut arena, &mut |lr| {
             seen.push((lr.layer.to_string(), lr.method, lr.kernels.unwrap().names()));
         });
         assert_eq!(seen.len(), net.layers.len());
@@ -672,21 +685,22 @@ mod tests {
     #[test]
     fn serving_run_reports_totals_without_kernel_laps() {
         let net = minicnn();
-        let plan = NetworkPlan::build(&net, 2, 13, 4, |_, _| Method::DirectSparse);
-        let mut arena = WorkspaceArena::for_plan(&plan);
+        let pool = WorkerPool::new(4);
+        let plan = NetworkPlan::build(&net, 2, 13, |_, _| Method::DirectSparse);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
         let mut rng = Rng::new(17);
         let mut img = vec![0.0; plan.input_dims().len()];
         rng.fill_activations(&mut img);
         let mut observed = 0;
         let serving = plan
-            .run_serving(&img, &mut arena, &mut |lr| {
+            .run_serving(&img, &pool, &mut arena, &mut |lr| {
                 assert!(lr.kernels.is_none(), "serving path must not lap kernels");
                 observed += 1;
             })
             .to_vec();
         assert_eq!(observed, net.layers.len());
         // Same numerics as the plain input run.
-        let plain = plan.run_with_input(&img, &mut arena).to_vec();
+        let plain = plan.run_with_input(&img, &pool, &mut arena).to_vec();
         assert_eq!(serving, plain);
     }
 

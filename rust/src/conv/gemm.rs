@@ -2,7 +2,10 @@
 //!
 //! `C (m x n) = A (m x k) * B (k x n)`, all row-major. Three variants:
 //! a naive loop (oracle), a cache-blocked single-thread kernel, and a
-//! thread-parallel blocked kernel used by the figure benches.
+//! pool-parallel blocked kernel used by the plan layer and the figure
+//! benches.
+
+use crate::util::{SharedSlice, WorkerPool};
 
 /// Naive i-k-j GEMM. The k-inner-of-j ordering keeps the innermost loop a
 /// contiguous AXPY over rows of B, which the auto-vectoriser handles.
@@ -45,8 +48,10 @@ pub fn gemm_blocked(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut 
     }
 }
 
-/// Thread-parallel blocked GEMM: rows of C are partitioned across
-/// `threads` OS threads (disjoint output, no synchronisation).
+/// Pool-parallel blocked GEMM: rows of C are decomposed into row tiles
+/// (a few per pool worker, so the dynamic queue can absorb scheduling
+/// jitter) with disjoint output — no synchronisation. Per-row numerics
+/// are identical to [`gemm_blocked`] for any pool size.
 pub fn gemm_parallel(
     m: usize,
     k: usize,
@@ -54,24 +59,25 @@ pub fn gemm_parallel(
     a: &[f32],
     b: &[f32],
     c: &mut [f32],
-    threads: usize,
+    pool: &WorkerPool,
 ) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
-    let threads = threads.max(1).min(m.max(1));
-    if threads == 1 || m < 4 {
+    if pool.workers() == 1 || m < 4 {
         return gemm_blocked(m, k, n, a, b, c);
     }
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (t, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
-            let i0 = t * rows_per;
-            scope.spawn(move || {
-                let rows = c_chunk.len() / n;
-                gemm_blocked(rows, k, n, &a[i0 * k..(i0 + rows) * k], b, c_chunk);
-            });
-        }
+    let tiles = (pool.workers() * 4).min(m);
+    let rows_per = m.div_ceil(tiles);
+    let ntiles = m.div_ceil(rows_per);
+    let c_sh = SharedSlice::new(c);
+    pool.run(ntiles, &|t, _worker| {
+        let i0 = t * rows_per;
+        let rows = rows_per.min(m - i0);
+        // SAFETY: row tiles partition 0..m, so output ranges are
+        // disjoint across tiles.
+        let c_chunk = unsafe { c_sh.slice_mut(i0 * n, rows * n) };
+        gemm_blocked(rows, k, n, &a[i0 * k..(i0 + rows) * k], b, c_chunk);
     });
 }
 
@@ -122,8 +128,9 @@ mod tests {
             let mut c2 = vec![0.0; m * n];
             gemm_blocked(m, k, n, &a, &b, &mut c2);
             assert!(close(&c2, &want), "blocked {m}x{k}x{n}");
+            let pool = WorkerPool::new(4);
             let mut c3 = vec![0.0; m * n];
-            gemm_parallel(m, k, n, &a, &b, &mut c3, 4);
+            gemm_parallel(m, k, n, &a, &b, &mut c3, &pool);
             assert!(close(&c3, &want), "parallel {m}x{k}x{n}");
         }
     }
@@ -139,14 +146,32 @@ mod tests {
     }
 
     #[test]
-    fn parallel_handles_more_threads_than_rows() {
+    fn parallel_handles_more_workers_than_rows() {
         let mut rng = Rng::new(7);
         let (m, k, n) = (3, 8, 5);
         let a = rng.normal_vec(m * k);
         let b = rng.normal_vec(k * n);
         let want = naive_oracle(m, k, n, &a, &b);
+        let pool = WorkerPool::new(64);
         let mut c = vec![0.0; m * n];
-        gemm_parallel(m, k, n, &a, &b, &mut c, 64);
+        gemm_parallel(m, k, n, &a, &b, &mut c, &pool);
         assert!(close(&c, &want));
+    }
+
+    #[test]
+    fn parallel_is_bitwise_identical_to_blocked() {
+        // The pool decomposition must not change per-row numerics.
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (33, 70, 18);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let mut seq = vec![0.0; m * n];
+        gemm_blocked(m, k, n, &a, &b, &mut seq);
+        for threads in [2, 5, 16] {
+            let pool = WorkerPool::new(threads);
+            let mut par = vec![0.0; m * n];
+            gemm_parallel(m, k, n, &a, &b, &mut par, &pool);
+            assert_eq!(seq, par, "t{threads}");
+        }
     }
 }

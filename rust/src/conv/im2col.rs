@@ -7,10 +7,11 @@
 //! * [`lowered_gemm`]   — dense weights × lowered matrix (CUBLAS proxy).
 //! * [`lowered_spmm`]   — CSR weights × lowered matrix (CUSPARSE proxy).
 
-use super::{csrmm, gemm_blocked, gemm_parallel, ConvWeights};
+use super::{csrmm, csrmm_pool, gemm_blocked, gemm_parallel, ConvWeights};
 use crate::config::ConvShape;
 use crate::sparse::CsrMatrix;
 use crate::tensor::{Dims4, Tensor4};
+use crate::util::{SharedSlice, WorkerPool};
 
 /// Materialise the lowered matrix for image `n`, group `g` of `padded`
 /// (an already spatially padded input) into `out`, which must hold
@@ -58,57 +59,29 @@ pub fn im2col_group_into(shape: &ConvShape, padded: &[f32], n: usize, g: usize, 
 /// Weights are used in their dense form (zeros included), mirroring the
 /// paper's CUBLAS configuration where pruned weights stay dense.
 pub fn lowered_gemm(shape: &ConvShape, input: &Tensor4, weights: &ConvWeights) -> Tensor4 {
-    lowered_gemm_with_threads(shape, input, weights, 1)
+    lowered_gemm_with_pool(shape, input, weights, &WorkerPool::new(1))
 }
 
-/// Thread-parallel CUBLAS proxy. For multi-image batches the images are
-/// partitioned across threads (each with a private lowered buffer); for
-/// single images the GEMM itself is threaded.
+/// Parallel CUBLAS proxy. Seed-compatible wrapper that spins up an
+/// **ephemeral** pool per call; steady-state callers should hold a
+/// [`WorkerPool`] and use [`lowered_gemm_with_pool`] or the plan layer.
 pub fn lowered_gemm_parallel(
     shape: &ConvShape,
     input: &Tensor4,
     weights: &ConvWeights,
     threads: usize,
 ) -> Tensor4 {
-    let d = input.dims();
-    let threads = threads.max(1);
-    if threads == 1 || d.n < 2 {
-        return lowered_gemm_with_threads(shape, input, weights, threads);
-    }
-    assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
-    let padded = input.pad_spatial(shape.pad);
-    let (e, f) = (shape.out_h(), shape.out_w());
-    let (k, ef) = shape.lowered_dims();
-    let mg = shape.m_per_group();
-    let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
-    let per_image = shape.m * ef;
-    let images_per = d.n.div_ceil(threads.min(d.n));
-    let padded_ref = &padded;
-    std::thread::scope(|scope| {
-        for (t, chunk) in out.data_mut().chunks_mut(images_per * per_image).enumerate() {
-            scope.spawn(move || {
-                let first = t * images_per;
-                let mut lowered = vec![0.0f32; k * ef];
-                for (i, img_out) in chunk.chunks_mut(per_image).enumerate() {
-                    let n = first + i;
-                    for g in 0..shape.groups {
-                        im2col_group(shape, padded_ref, n, g, &mut lowered);
-                        let a = weights.group_matrix(g);
-                        let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
-                        gemm_blocked(mg, k, ef, a, &lowered, c);
-                    }
-                }
-            });
-        }
-    });
-    out
+    lowered_gemm_with_pool(shape, input, weights, &WorkerPool::new(threads))
 }
 
-fn lowered_gemm_with_threads(
+/// CUBLAS proxy through a caller-owned pool. Multi-image batches are
+/// decomposed into per-image tiles (each pool worker owns a private
+/// lowered buffer); single images thread the GEMM itself.
+pub fn lowered_gemm_with_pool(
     shape: &ConvShape,
     input: &Tensor4,
     weights: &ConvWeights,
-    threads: usize,
+    pool: &WorkerPool,
 ) -> Tensor4 {
     let d = input.dims();
     assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
@@ -117,62 +90,96 @@ fn lowered_gemm_with_threads(
     let (k, ef) = shape.lowered_dims();
     let mg = shape.m_per_group();
     let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
-    let mut lowered = vec![0.0f32; k * ef];
+    let per_image = shape.m * ef;
 
-    for n in 0..d.n {
-        for g in 0..shape.groups {
-            im2col_group(shape, &padded, n, g, &mut lowered);
-            let a = weights.group_matrix(g);
-            let out_base = out.dims().index(n, g * mg, 0, 0);
-            let c = &mut out.data_mut()[out_base..out_base + mg * ef];
-            if threads > 1 {
-                gemm_parallel(mg, k, ef, a, &lowered, c, threads);
-            } else {
-                gemm_blocked(mg, k, ef, a, &lowered, c);
+    if pool.workers() == 1 || d.n < 2 {
+        let mut lowered = vec![0.0f32; k * ef];
+        for n in 0..d.n {
+            for g in 0..shape.groups {
+                im2col_group(shape, &padded, n, g, &mut lowered);
+                let a = weights.group_matrix(g);
+                let out_base = out.dims().index(n, g * mg, 0, 0);
+                let c = &mut out.data_mut()[out_base..out_base + mg * ef];
+                gemm_parallel(mg, k, ef, a, &lowered, c, pool);
             }
         }
+        return out;
     }
+
+    let mut lowered_all = vec![0.0f32; pool.workers() * k * ef];
+    let padded = padded.data();
+    let out_sh = SharedSlice::new(out.data_mut());
+    let low_sh = SharedSlice::new(&mut lowered_all);
+    pool.run(d.n, &|n, worker| {
+        // SAFETY: worker ids are unique among running tiles (private
+        // lowered buffer); image tiles own disjoint output planes.
+        let lowered = unsafe { low_sh.slice_mut(worker * k * ef, k * ef) };
+        let img_out = unsafe { out_sh.slice_mut(n * per_image, per_image) };
+        for g in 0..shape.groups {
+            im2col_group_into(shape, padded, n, g, lowered);
+            let a = weights.group_matrix(g);
+            let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
+            gemm_blocked(mg, k, ef, a, lowered, c);
+        }
+    });
     out
 }
 
-/// Thread-parallel CUSPARSE proxy: images are partitioned across threads,
-/// each with its own lowered-matrix buffer (disjoint output planes, no
-/// synchronisation).
+/// Parallel CUSPARSE proxy. Seed-compatible wrapper that spins up an
+/// **ephemeral** pool per call; see [`lowered_spmm_with_pool`].
 pub fn lowered_spmm_parallel(
     shape: &ConvShape,
     input: &Tensor4,
     banks: &[CsrMatrix],
     threads: usize,
 ) -> Tensor4 {
+    lowered_spmm_with_pool(shape, input, banks, &WorkerPool::new(threads))
+}
+
+/// CUSPARSE proxy through a caller-owned pool: multi-image batches tile
+/// per image (private lowered buffer per pool worker, disjoint output
+/// planes); single images thread the SpMM rows.
+pub fn lowered_spmm_with_pool(
+    shape: &ConvShape,
+    input: &Tensor4,
+    banks: &[CsrMatrix],
+    pool: &WorkerPool,
+) -> Tensor4 {
     let d = input.dims();
     assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
     assert_eq!(banks.len(), shape.groups);
-    let threads = threads.max(1).min(d.n.max(1));
-    if threads == 1 {
-        return lowered_spmm(shape, input, banks);
-    }
     let padded = input.pad_spatial(shape.pad);
     let (e, f) = (shape.out_h(), shape.out_w());
     let (k, ef) = shape.lowered_dims();
     let mg = shape.m_per_group();
     let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
     let per_image = shape.m * ef;
-    let images_per = d.n.div_ceil(threads);
-    let padded_ref = &padded;
-    std::thread::scope(|scope| {
-        for (t, chunk) in out.data_mut().chunks_mut(images_per * per_image).enumerate() {
-            scope.spawn(move || {
-                let first = t * images_per;
-                let mut lowered = vec![0.0f32; k * ef];
-                for (i, img_out) in chunk.chunks_mut(per_image).enumerate() {
-                    let n = first + i;
-                    for (g, bank) in banks.iter().enumerate() {
-                        im2col_group(shape, padded_ref, n, g, &mut lowered);
-                        let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
-                        csrmm(bank, ef, &lowered, c);
-                    }
-                }
-            });
+
+    if pool.workers() == 1 || d.n < 2 {
+        let mut lowered = vec![0.0f32; k * ef];
+        for n in 0..d.n {
+            for (g, bank) in banks.iter().enumerate() {
+                im2col_group(shape, &padded, n, g, &mut lowered);
+                let out_base = out.dims().index(n, g * mg, 0, 0);
+                let c = &mut out.data_mut()[out_base..out_base + mg * ef];
+                csrmm_pool(bank, ef, &lowered, c, pool);
+            }
+        }
+        return out;
+    }
+
+    let mut lowered_all = vec![0.0f32; pool.workers() * k * ef];
+    let padded = padded.data();
+    let out_sh = SharedSlice::new(out.data_mut());
+    let low_sh = SharedSlice::new(&mut lowered_all);
+    pool.run(d.n, &|n, worker| {
+        // SAFETY: see lowered_gemm_with_pool.
+        let lowered = unsafe { low_sh.slice_mut(worker * k * ef, k * ef) };
+        let img_out = unsafe { out_sh.slice_mut(n * per_image, per_image) };
+        for (g, bank) in banks.iter().enumerate() {
+            im2col_group_into(shape, padded, n, g, lowered);
+            let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
+            csrmm(bank, ef, lowered, c);
         }
     });
     out

@@ -22,9 +22,13 @@
 //!   — cuDNN-style scratch arenas and whole-network plans with zero
 //!   steady-state allocation.
 //!
-//! The free functions remain as thin allocating wrappers for one-shot
-//! use; the scheduler, server, and figure benches all dispatch through
-//! the plan layer.
+//! All parallel execution routes through the shared
+//! [`crate::util::WorkerPool`] (kernels decompose into tiles; no kernel
+//! spawns its own threads). The free functions remain as thin
+//! allocating wrappers for one-shot use — the `*_parallel` variants
+//! spin up an ephemeral pool per call, the `*_with_pool` variants take
+//! a caller-owned one; the scheduler, server, and figure benches all
+//! dispatch through the plan layer on one long-lived pool.
 
 mod dense;
 mod executor;
@@ -40,14 +44,14 @@ pub use dense::direct_dense;
 pub use executor::{NetworkPlan, PlanLayerRun, WeightedOp, Workspace, WorkspaceArena};
 pub use gemm::{gemm, gemm_blocked, gemm_parallel};
 pub use im2col::{
-    im2col_group, im2col_group_into, lowered_gemm, lowered_gemm_parallel, lowered_spmm,
-    lowered_spmm_parallel,
+    im2col_group, im2col_group_into, lowered_gemm, lowered_gemm_parallel,
+    lowered_gemm_with_pool, lowered_spmm, lowered_spmm_parallel, lowered_spmm_with_pool,
 };
 pub use plan::{
     shapes_under_test, ConvExecutor, DirectSparsePlan, LayerPlan, LoweredGemmPlan,
     LoweredSpmmPlan, Method, WinogradPlan,
 };
-pub use sconv::{sconv, sconv_ell, sconv_parallel};
-pub use spmm::csrmm;
+pub use sconv::{sconv, sconv_ell, sconv_parallel, sconv_with_pool};
+pub use spmm::{csrmm, csrmm_pool};
 pub use weights::ConvWeights;
 pub use winograd::{winograd_3x3, winograd_applicable};

@@ -22,14 +22,15 @@
 
 use super::executor::{pad_into, Workspace};
 use super::im2col::im2col_group_into;
-use super::sconv::{sconv_workers, worker_scratch_floats};
+use super::sconv::{nnz_channel_tiles, sconv_tiled, worker_scratch_floats};
 use super::weights::ConvWeights;
-use super::winograd::{transform_filters, winograd_applicable, winograd_tiles_into};
-use super::{csrmm, gemm_blocked, gemm_parallel};
+use super::winograd::{transform_filters, winograd_applicable, winograd_tiles_pool};
+use super::{csrmm, csrmm_pool, gemm_blocked, gemm_parallel};
 use crate::config::ConvShape;
 use crate::sparse::{CsrMatrix, StretchedFilter};
 use crate::tensor::{Dims4, Tensor4};
-use crate::util::Stopwatch;
+use crate::util::{SharedSlice, Stopwatch, WorkerPool};
+use std::ops::Range;
 use std::sync::Arc;
 
 /// Execution method for one CONV layer — the paper's three contenders
@@ -66,26 +67,33 @@ impl Method {
 }
 
 /// A compiled conv-layer executor: operands are pre-built, scratch is
-/// caller-provided, output is written into a caller slice.
+/// caller-provided, output is written into a caller slice, and all
+/// parallel execution routes through a caller-owned [`WorkerPool`] —
+/// plans hold **no thread state**, so one pool is shared across every
+/// layer, batch, and the server's whole lifetime with zero steady-state
+/// thread spawns.
 ///
 /// `input` is `batch * C * H * W` activations (NCHW), `out` is
 /// `batch * M * E * F`. The workspace is grown on first use to
-/// [`ConvExecutor::workspace_floats`] and never again — repeated
-/// `execute_into` calls on the same workspace perform zero allocation.
+/// [`ConvExecutor::workspace_floats`] (for the pool's worker count) and
+/// never again — repeated `execute_into` calls on the same workspace
+/// perform zero allocation.
 ///
 /// `sw` optionally times the constituent kernels into the paper's Fig 9
 /// buckets (`pad_in`, `im2col`, `sgemm`, `csrmm`, `sconv`, `winograd`);
 /// the timed path runs images sequentially so laps do not interleave
-/// across threads.
+/// across pool tiles.
 pub trait ConvExecutor: Send + Sync {
     fn shape(&self) -> &ConvShape;
     fn method(&self) -> Method;
-    /// Scratch floats needed to execute a batch of `batch` images.
-    fn workspace_floats(&self, batch: usize) -> usize;
+    /// Scratch floats needed to execute a batch of `batch` images when
+    /// up to `workers` pool workers may run concurrently.
+    fn workspace_floats(&self, batch: usize, workers: usize) -> usize;
     fn execute_into(
         &self,
         batch: usize,
         input: &[f32],
+        pool: &WorkerPool,
         ws: &mut Workspace,
         out: &mut [f32],
         sw: Option<&mut Stopwatch>,
@@ -136,21 +144,28 @@ fn padded_view<'a>(
 // ---------------------------------------------------------------------------
 
 /// Escoin direct sparse convolution plan: weight-stretched banks built
-/// once (paper §3.1), per-worker stride-1 scratch planes carved from the
-/// workspace.
+/// once (paper §3.1), output channels pre-packed into **nnz-weighted
+/// tiles** (each tile ~equal stored nonzeros, so each pool tile is
+/// ~equal FLOPs — skewed per-channel sparsity cannot idle workers the
+/// way equal-plane splitting does), per-worker stride-1 scratch planes
+/// carved from the workspace.
 pub struct DirectSparsePlan {
     shape: ConvShape,
     banks: Vec<StretchedFilter>,
-    threads: usize,
+    tiles: Vec<Range<usize>>,
+    tile_nnz: Vec<usize>,
 }
 
 impl DirectSparsePlan {
-    pub fn build(shape: &ConvShape, weights: &ConvWeights, threads: usize) -> Self {
+    pub fn build(shape: &ConvShape, weights: &ConvWeights) -> Self {
         assert_eq!(weights.shape, *shape, "weights/shape mismatch");
+        let banks = weights.stretched_banks();
+        let (tiles, tile_nnz) = nnz_channel_tiles(shape, &banks);
         Self {
             shape: shape.clone(),
-            banks: weights.stretched_banks(),
-            threads,
+            banks,
+            tiles,
+            tile_nnz,
         }
     }
 
@@ -158,10 +173,16 @@ impl DirectSparsePlan {
         &self.banks
     }
 
-    fn workers(&self, batch: usize) -> usize {
-        self.threads.max(1).min((batch * self.shape.m).max(1))
+    /// The nnz-weighted channel tiles (contiguous ranges partitioning
+    /// `0..M`) the pool schedules — exposed for the load-balance tests.
+    pub fn tiles(&self) -> &[Range<usize>] {
+        &self.tiles
     }
 
+    /// Stored nonzeros per tile (parallel to [`DirectSparsePlan::tiles`]).
+    pub fn tile_nnz(&self) -> &[usize] {
+        &self.tile_nnz
+    }
 }
 
 impl ConvExecutor for DirectSparsePlan {
@@ -173,14 +194,15 @@ impl ConvExecutor for DirectSparsePlan {
         Method::DirectSparse
     }
 
-    fn workspace_floats(&self, batch: usize) -> usize {
-        pad_floats(&self.shape, batch) + self.workers(batch) * worker_scratch_floats(&self.shape)
+    fn workspace_floats(&self, batch: usize, workers: usize) -> usize {
+        pad_floats(&self.shape, batch) + workers.max(1) * worker_scratch_floats(&self.shape)
     }
 
     fn execute_into(
         &self,
         batch: usize,
         input: &[f32],
+        pool: &WorkerPool,
         ws: &mut Workspace,
         out: &mut [f32],
         mut sw: Option<&mut Stopwatch>,
@@ -188,12 +210,11 @@ impl ConvExecutor for DirectSparsePlan {
         let s = &self.shape;
         debug_assert_eq!(input.len(), batch * s.c * s.h * s.w);
         debug_assert_eq!(out.len(), batch * s.m * s.out_h() * s.out_w());
-        ws.ensure(self.workspace_floats(batch));
-        let workers = self.workers(batch);
+        ws.ensure(self.workspace_floats(batch, pool.workers()));
         let (padded, scratch) = padded_view(s, batch, input, ws.buf_mut(), &mut sw);
         out.fill(0.0);
         lap(&mut sw, "sconv", || {
-            sconv_workers(s, padded, batch, &self.banks, workers, out, scratch)
+            sconv_tiled(s, padded, batch, &self.banks, &self.tiles, pool, out, scratch)
         });
     }
 }
@@ -210,25 +231,19 @@ impl ConvExecutor for DirectSparsePlan {
 pub struct LoweredGemmPlan {
     shape: ConvShape,
     weights: Arc<ConvWeights>,
-    threads: usize,
 }
 
 impl LoweredGemmPlan {
-    pub fn build(shape: &ConvShape, weights: &ConvWeights, threads: usize) -> Self {
-        Self::build_shared(shape, Arc::new(weights.clone()), threads)
+    pub fn build(shape: &ConvShape, weights: &ConvWeights) -> Self {
+        Self::build_shared(shape, Arc::new(weights.clone()))
     }
 
-    pub fn build_shared(shape: &ConvShape, weights: Arc<ConvWeights>, threads: usize) -> Self {
+    pub fn build_shared(shape: &ConvShape, weights: Arc<ConvWeights>) -> Self {
         assert_eq!(weights.shape, *shape, "weights/shape mismatch");
         Self {
             shape: shape.clone(),
             weights,
-            threads,
         }
-    }
-
-    fn workers(&self, batch: usize) -> usize {
-        self.threads.max(1).min(batch.max(1))
     }
 }
 
@@ -241,15 +256,16 @@ impl ConvExecutor for LoweredGemmPlan {
         Method::LoweredGemm
     }
 
-    fn workspace_floats(&self, batch: usize) -> usize {
+    fn workspace_floats(&self, batch: usize, workers: usize) -> usize {
         let (k, ef) = self.shape.lowered_dims();
-        pad_floats(&self.shape, batch) + self.workers(batch) * k * ef
+        pad_floats(&self.shape, batch) + workers.max(1) * k * ef
     }
 
     fn execute_into(
         &self,
         batch: usize,
         input: &[f32],
+        pool: &WorkerPool,
         ws: &mut Workspace,
         out: &mut [f32],
         mut sw: Option<&mut Stopwatch>,
@@ -259,14 +275,14 @@ impl ConvExecutor for LoweredGemmPlan {
         let mg = s.m_per_group();
         let per_image = s.m * ef;
         debug_assert_eq!(out.len(), batch * per_image);
-        ws.ensure(self.workspace_floats(batch));
-        let workers = self.workers(batch);
+        ws.ensure(self.workspace_floats(batch, pool.workers()));
         let (padded, lowered_all) = padded_view(s, batch, input, ws.buf_mut(), &mut sw);
         out.fill(0.0);
 
-        if sw.is_some() || workers == 1 {
-            // Sequential images (timed path keeps Fig 9 laps untangled);
-            // the GEMM itself is row-parallel.
+        if sw.is_some() || batch == 1 || pool.workers() == 1 {
+            // Sequential images (timed path keeps Fig 9 laps untangled;
+            // batch 1 has no image parallelism); the GEMM itself is
+            // row-parallel through the pool.
             let lowered = &mut lowered_all[..k * ef];
             for n in 0..batch {
                 for g in 0..s.groups {
@@ -277,32 +293,26 @@ impl ConvExecutor for LoweredGemmPlan {
                     let base = n * per_image;
                     let c = &mut out[base + g * mg * ef..base + (g + 1) * mg * ef];
                     lap(&mut sw, "sgemm", || {
-                        gemm_parallel(mg, k, ef, a, lowered, c, self.threads)
+                        gemm_parallel(mg, k, ef, a, lowered, c, pool)
                     });
                 }
             }
         } else {
-            // Image-parallel: disjoint output planes, one lowered buffer
-            // per worker, no synchronisation.
-            let images_per = batch.div_ceil(workers);
+            // Image-parallel pool tiles: disjoint output planes, one
+            // lowered buffer per pool worker, no synchronisation.
             let weights = &self.weights;
-            std::thread::scope(|scope| {
-                for (t, (chunk, lowered)) in out
-                    .chunks_mut(images_per * per_image)
-                    .zip(lowered_all.chunks_mut(k * ef))
-                    .enumerate()
-                {
-                    scope.spawn(move || {
-                        let first = t * images_per;
-                        for (i, img_out) in chunk.chunks_mut(per_image).enumerate() {
-                            for g in 0..s.groups {
-                                im2col_group_into(s, padded, first + i, g, lowered);
-                                let a = weights.group_matrix(g);
-                                let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
-                                gemm_blocked(mg, k, ef, a, lowered, c);
-                            }
-                        }
-                    });
+            let out_sh = SharedSlice::new(out);
+            let low_sh = SharedSlice::new(lowered_all);
+            pool.run(batch, &|n, worker| {
+                // SAFETY: worker ids are unique among running tiles;
+                // image tiles own disjoint output planes.
+                let lowered = unsafe { low_sh.slice_mut(worker * k * ef, k * ef) };
+                let img_out = unsafe { out_sh.slice_mut(n * per_image, per_image) };
+                for g in 0..s.groups {
+                    im2col_group_into(s, padded, n, g, lowered);
+                    let a = weights.group_matrix(g);
+                    let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
+                    gemm_blocked(mg, k, ef, a, lowered, c);
                 }
             });
         }
@@ -317,21 +327,15 @@ impl ConvExecutor for LoweredGemmPlan {
 pub struct LoweredSpmmPlan {
     shape: ConvShape,
     banks: Vec<CsrMatrix>,
-    threads: usize,
 }
 
 impl LoweredSpmmPlan {
-    pub fn build(shape: &ConvShape, weights: &ConvWeights, threads: usize) -> Self {
+    pub fn build(shape: &ConvShape, weights: &ConvWeights) -> Self {
         assert_eq!(weights.shape, *shape, "weights/shape mismatch");
         Self {
             shape: shape.clone(),
             banks: weights.csr_banks(),
-            threads,
         }
-    }
-
-    fn workers(&self, batch: usize) -> usize {
-        self.threads.max(1).min(batch.max(1))
     }
 }
 
@@ -344,15 +348,16 @@ impl ConvExecutor for LoweredSpmmPlan {
         Method::LoweredSpmm
     }
 
-    fn workspace_floats(&self, batch: usize) -> usize {
+    fn workspace_floats(&self, batch: usize, workers: usize) -> usize {
         let (k, ef) = self.shape.lowered_dims();
-        pad_floats(&self.shape, batch) + self.workers(batch) * k * ef
+        pad_floats(&self.shape, batch) + workers.max(1) * k * ef
     }
 
     fn execute_into(
         &self,
         batch: usize,
         input: &[f32],
+        pool: &WorkerPool,
         ws: &mut Workspace,
         out: &mut [f32],
         mut sw: Option<&mut Stopwatch>,
@@ -362,12 +367,13 @@ impl ConvExecutor for LoweredSpmmPlan {
         let mg = s.m_per_group();
         let per_image = s.m * ef;
         debug_assert_eq!(out.len(), batch * per_image);
-        ws.ensure(self.workspace_floats(batch));
-        let workers = self.workers(batch);
+        ws.ensure(self.workspace_floats(batch, pool.workers()));
         let (padded, lowered_all) = padded_view(s, batch, input, ws.buf_mut(), &mut sw);
         out.fill(0.0);
 
-        if sw.is_some() || workers == 1 {
+        if sw.is_some() || batch == 1 || pool.workers() == 1 {
+            // Sequential images; batch 1 threads the SpMM rows instead
+            // (timed path keeps csrmm sequential so laps stay honest).
             let lowered = &mut lowered_all[..k * ef];
             for n in 0..batch {
                 for (g, bank) in self.banks.iter().enumerate() {
@@ -376,28 +382,25 @@ impl ConvExecutor for LoweredSpmmPlan {
                     });
                     let base = n * per_image;
                     let c = &mut out[base + g * mg * ef..base + (g + 1) * mg * ef];
-                    lap(&mut sw, "csrmm", || csrmm(bank, ef, lowered, c));
+                    match &mut sw {
+                        Some(t) => t.lap("csrmm", || csrmm(bank, ef, lowered, c)),
+                        None => csrmm_pool(bank, ef, lowered, c, pool),
+                    }
                 }
             }
         } else {
-            let images_per = batch.div_ceil(workers);
+            // Image-parallel pool tiles, one lowered buffer per worker.
             let banks = &self.banks;
-            std::thread::scope(|scope| {
-                for (t, (chunk, lowered)) in out
-                    .chunks_mut(images_per * per_image)
-                    .zip(lowered_all.chunks_mut(k * ef))
-                    .enumerate()
-                {
-                    scope.spawn(move || {
-                        let first = t * images_per;
-                        for (i, img_out) in chunk.chunks_mut(per_image).enumerate() {
-                            for (g, bank) in banks.iter().enumerate() {
-                                im2col_group_into(s, padded, first + i, g, lowered);
-                                let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
-                                csrmm(bank, ef, lowered, c);
-                            }
-                        }
-                    });
+            let out_sh = SharedSlice::new(out);
+            let low_sh = SharedSlice::new(lowered_all);
+            pool.run(batch, &|n, worker| {
+                // SAFETY: see LoweredGemmPlan::execute_into.
+                let lowered = unsafe { low_sh.slice_mut(worker * k * ef, k * ef) };
+                let img_out = unsafe { out_sh.slice_mut(n * per_image, per_image) };
+                for (g, bank) in banks.iter().enumerate() {
+                    im2col_group_into(s, padded, n, g, lowered);
+                    let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
+                    csrmm(bank, ef, lowered, c);
                 }
             });
         }
@@ -409,8 +412,10 @@ impl ConvExecutor for LoweredSpmmPlan {
 // ---------------------------------------------------------------------------
 
 /// Winograd plan: `U = G g Gᵀ` filter transforms computed **once** at
-/// build time (the seed recomputed them on every call), per-tile
-/// accumulators carved from the workspace.
+/// build time (the seed recomputed them on every call), per-worker
+/// tile accumulators carved from the workspace. Execution is
+/// pool-parallel over `(image, tile row)` tiles — the seed ran this
+/// path single-threaded.
 pub struct WinogradPlan {
     shape: ConvShape,
     u: Vec<[f32; 16]>,
@@ -436,26 +441,27 @@ impl ConvExecutor for WinogradPlan {
         Method::Winograd
     }
 
-    fn workspace_floats(&self, batch: usize) -> usize {
-        pad_floats(&self.shape, batch) + self.shape.m * 16
+    fn workspace_floats(&self, batch: usize, workers: usize) -> usize {
+        pad_floats(&self.shape, batch) + workers.max(1) * self.shape.m * 16
     }
 
     fn execute_into(
         &self,
         batch: usize,
         input: &[f32],
+        pool: &WorkerPool,
         ws: &mut Workspace,
         out: &mut [f32],
         mut sw: Option<&mut Stopwatch>,
     ) {
         let s = &self.shape;
         debug_assert_eq!(out.len(), batch * s.m * s.out_h() * s.out_w());
-        ws.ensure(self.workspace_floats(batch));
+        ws.ensure(self.workspace_floats(batch, pool.workers()));
         let (padded, rest) = padded_view(s, batch, input, ws.buf_mut(), &mut sw);
-        let acc = &mut rest[..s.m * 16];
+        let acc_all = &mut rest[..pool.workers() * s.m * 16];
         out.fill(0.0);
         lap(&mut sw, "winograd", || {
-            winograd_tiles_into(s, padded, batch, &self.u, acc, out)
+            winograd_tiles_pool(s, padded, batch, &self.u, acc_all, out, pool)
         });
     }
 }
@@ -465,7 +471,9 @@ impl ConvExecutor for WinogradPlan {
 // ---------------------------------------------------------------------------
 
 /// One CONV layer's compiled plan: shape + method + boxed executor.
-/// Build once, execute many times against a reusable [`Workspace`].
+/// Build once, execute many times against a reusable [`Workspace`] and
+/// a caller-owned [`WorkerPool`] — the plan itself holds no thread
+/// state.
 pub struct LayerPlan {
     exec: Box<dyn ConvExecutor>,
 }
@@ -473,16 +481,11 @@ pub struct LayerPlan {
 impl LayerPlan {
     /// Compile a plan for `(shape, weights, method)`. Panics if the method
     /// cannot run this shape (Winograd on non-3x3/s1/g1 layers).
-    pub fn build(
-        shape: &ConvShape,
-        weights: &ConvWeights,
-        method: Method,
-        threads: usize,
-    ) -> LayerPlan {
+    pub fn build(shape: &ConvShape, weights: &ConvWeights, method: Method) -> LayerPlan {
         let exec: Box<dyn ConvExecutor> = match method {
-            Method::DirectSparse => Box::new(DirectSparsePlan::build(shape, weights, threads)),
-            Method::LoweredGemm => Box::new(LoweredGemmPlan::build(shape, weights, threads)),
-            Method::LoweredSpmm => Box::new(LoweredSpmmPlan::build(shape, weights, threads)),
+            Method::DirectSparse => Box::new(DirectSparsePlan::build(shape, weights)),
+            Method::LoweredGemm => Box::new(LoweredGemmPlan::build(shape, weights)),
+            Method::LoweredSpmm => Box::new(LoweredSpmmPlan::build(shape, weights)),
             Method::Winograd => Box::new(WinogradPlan::build(shape, weights)),
         };
         LayerPlan { exec }
@@ -492,17 +495,12 @@ impl LayerPlan {
     /// avoids duplicating the dense matrix into LoweredGemm plans when
     /// the caller (schedule cache, serving plan) keeps weights alive
     /// anyway. The sparse methods derive their operands either way.
-    pub fn build_shared(
-        shape: &ConvShape,
-        weights: Arc<ConvWeights>,
-        method: Method,
-        threads: usize,
-    ) -> LayerPlan {
+    pub fn build_shared(shape: &ConvShape, weights: Arc<ConvWeights>, method: Method) -> LayerPlan {
         match method {
             Method::LoweredGemm => LayerPlan {
-                exec: Box::new(LoweredGemmPlan::build_shared(shape, weights, threads)),
+                exec: Box::new(LoweredGemmPlan::build_shared(shape, weights)),
             },
-            _ => Self::build(shape, &weights, method, threads),
+            _ => Self::build(shape, &weights, method),
         }
     }
 
@@ -520,8 +518,8 @@ impl LayerPlan {
         Dims4::new(batch, s.m, s.out_h(), s.out_w())
     }
 
-    pub fn workspace_floats(&self, batch: usize) -> usize {
-        self.exec.workspace_floats(batch)
+    pub fn workspace_floats(&self, batch: usize, workers: usize) -> usize {
+        self.exec.workspace_floats(batch, workers)
     }
 
     /// Slice-level execution — the single dispatch point every consumer
@@ -530,6 +528,7 @@ impl LayerPlan {
         &self,
         batch: usize,
         input: &[f32],
+        pool: &WorkerPool,
         ws: &mut Workspace,
         out: &mut [f32],
         sw: Option<&mut Stopwatch>,
@@ -537,26 +536,33 @@ impl LayerPlan {
         let s = self.shape();
         assert_eq!(input.len(), batch * s.c * s.h * s.w, "input len");
         assert_eq!(out.len(), self.out_dims(batch).len(), "output len");
-        self.exec.execute_into(batch, input, ws, out, sw);
+        self.exec.execute_into(batch, input, pool, ws, out, sw);
     }
 
     /// Tensor-level execution into a caller-provided output.
-    pub fn execute(&self, input: &Tensor4, ws: &mut Workspace, output: &mut Tensor4) {
+    pub fn execute(
+        &self,
+        input: &Tensor4,
+        pool: &WorkerPool,
+        ws: &mut Workspace,
+        output: &mut Tensor4,
+    ) {
         let d = input.dims();
         let s = self.shape();
         assert_eq!((d.c, d.h, d.w), (s.c, s.h, s.w), "input dims");
         assert_eq!(output.dims(), self.out_dims(d.n), "output dims");
         let batch = d.n;
         self.exec
-            .execute_into(batch, input.data(), ws, output.data_mut(), None);
+            .execute_into(batch, input.data(), pool, ws, output.data_mut(), None);
     }
 
     /// Thin allocating wrapper (API-compatible with the seed free
-    /// functions): fresh workspace + output per call.
-    pub fn run(&self, input: &Tensor4) -> Tensor4 {
+    /// functions): fresh workspace + output per call; parallelism from
+    /// the caller's pool.
+    pub fn run(&self, input: &Tensor4, pool: &WorkerPool) -> Tensor4 {
         let mut ws = Workspace::new();
         let mut out = Tensor4::zeros(self.out_dims(input.dims().n));
-        self.execute(input, &mut ws, &mut out);
+        self.execute(input, pool, &mut ws, &mut out);
         out
     }
 }
@@ -570,19 +576,20 @@ impl ConvExecutor for LayerPlan {
         self.exec.method()
     }
 
-    fn workspace_floats(&self, batch: usize) -> usize {
-        self.exec.workspace_floats(batch)
+    fn workspace_floats(&self, batch: usize, workers: usize) -> usize {
+        self.exec.workspace_floats(batch, workers)
     }
 
     fn execute_into(
         &self,
         batch: usize,
         input: &[f32],
+        pool: &WorkerPool,
         ws: &mut Workspace,
         out: &mut [f32],
         sw: Option<&mut Stopwatch>,
     ) {
-        self.exec.execute_into(batch, input, ws, out, sw);
+        self.exec.execute_into(batch, input, pool, ws, out, sw);
     }
 }
 
@@ -625,6 +632,7 @@ mod tests {
 
     #[test]
     fn every_plan_type_matches_direct_dense() {
+        let pool = WorkerPool::new(2);
         for (i, shape) in shapes_under_test().into_iter().enumerate() {
             let (x, w) = case(&shape, 2, 400 + i as u64);
             let want = direct_dense(&shape, &x, &w);
@@ -632,8 +640,8 @@ mod tests {
                 if method == Method::Winograd && !winograd_applicable(&shape) {
                     continue;
                 }
-                let plan = LayerPlan::build(&shape, &w, method, 2);
-                let got = plan.run(&x);
+                let plan = LayerPlan::build(&shape, &w, method);
+                let got = plan.run(&x, &pool);
                 assert!(
                     got.allclose(&want, 1e-3, 1e-4),
                     "{} under {}",
@@ -648,16 +656,17 @@ mod tests {
     fn dirty_workspace_does_not_contaminate_output() {
         let shape = ConvShape::new(3, 4, 7, 7, 3, 3, 1, 1).with_sparsity(0.6);
         let (x, w) = case(&shape, 2, 99);
+        let pool = WorkerPool::new(3);
         for method in [Method::DirectSparse, Method::LoweredGemm, Method::LoweredSpmm] {
-            let plan = LayerPlan::build(&shape, &w, method, 3);
+            let plan = LayerPlan::build(&shape, &w, method);
             let mut ws = Workspace::new();
-            ws.ensure(plan.workspace_floats(2));
+            ws.ensure(plan.workspace_floats(2, pool.workers()));
             ws.buf_mut().fill(f32::NAN); // poison
             // run twice on the same (poisoned, then used) workspace
             let mut out = Tensor4::zeros(plan.out_dims(2));
             let mut out2 = Tensor4::zeros(plan.out_dims(2));
-            plan.execute_into(2, x.data(), &mut ws, out2.data_mut(), None);
-            plan.execute_into(2, x.data(), &mut ws, out.data_mut(), None);
+            plan.execute_into(2, x.data(), &pool, &mut ws, out2.data_mut(), None);
+            plan.execute_into(2, x.data(), &pool, &mut ws, out.data_mut(), None);
             assert_eq!(out.data(), out2.data(), "{}", method.name());
             assert!(out.data().iter().all(|v| v.is_finite()));
         }
@@ -667,14 +676,15 @@ mod tests {
     fn workspace_grows_once_then_stays() {
         let shape = ConvShape::new(4, 8, 9, 9, 3, 3, 1, 1).with_sparsity(0.7);
         let (x, w) = case(&shape, 3, 17);
-        let plan = LayerPlan::build(&shape, &w, Method::DirectSparse, 4);
+        let pool = WorkerPool::new(4);
+        let plan = LayerPlan::build(&shape, &w, Method::DirectSparse);
         let mut ws = Workspace::new();
         let mut out = Tensor4::zeros(plan.out_dims(3));
-        plan.execute_into(3, x.data(), &mut ws, out.data_mut(), None);
+        plan.execute_into(3, x.data(), &pool, &mut ws, out.data_mut(), None);
         let cap = ws.capacity();
-        assert!(cap >= plan.workspace_floats(3));
+        assert!(cap >= plan.workspace_floats(3, pool.workers()));
         for _ in 0..3 {
-            plan.execute_into(3, x.data(), &mut ws, out.data_mut(), None);
+            plan.execute_into(3, x.data(), &pool, &mut ws, out.data_mut(), None);
         }
         assert_eq!(ws.capacity(), cap, "steady-state workspace growth");
     }
@@ -683,20 +693,55 @@ mod tests {
     fn timed_execution_fills_fig9_buckets() {
         let shape = ConvShape::new(3, 4, 8, 8, 3, 3, 1, 1).with_sparsity(0.5);
         let (x, w) = case(&shape, 2, 23);
+        let pool = WorkerPool::new(2);
         let mut ws = Workspace::new();
         let mut out = Tensor4::zeros(Dims4::new(2, 4, 8, 8));
         let mut sw = Stopwatch::new();
-        let plan = LayerPlan::build(&shape, &w, Method::LoweredSpmm, 2);
-        plan.execute_into(2, x.data(), &mut ws, out.data_mut(), Some(&mut sw));
+        let plan = LayerPlan::build(&shape, &w, Method::LoweredSpmm);
+        plan.execute_into(2, x.data(), &pool, &mut ws, out.data_mut(), Some(&mut sw));
         let names = sw.names();
         assert!(names.contains(&"pad_in".to_string()));
         assert!(names.contains(&"im2col".to_string()));
         assert!(names.contains(&"csrmm".to_string()));
 
         let mut sw = Stopwatch::new();
-        let plan = LayerPlan::build(&shape, &w, Method::DirectSparse, 2);
-        plan.execute_into(2, x.data(), &mut ws, out.data_mut(), Some(&mut sw));
+        let plan = LayerPlan::build(&shape, &w, Method::DirectSparse);
+        plan.execute_into(2, x.data(), &pool, &mut ws, out.data_mut(), Some(&mut sw));
         assert!(sw.names().contains(&"sconv".to_string()));
         assert!(!sw.names().contains(&"im2col".to_string()));
+    }
+
+    #[test]
+    fn direct_sparse_tiles_are_nnz_weighted() {
+        // 95%-sparse channels around one fully dense channel: the dense
+        // channel must become its own tile instead of inflating a
+        // multi-channel one, so no tile carries more work than the
+        // single-channel floor.
+        let shape = ConvShape::new(8, 16, 8, 8, 3, 3, 1, 1);
+        let per_ch = 8 * 9;
+        let mut dense = vec![0.0f32; shape.weights()];
+        for m in 0..16 {
+            for i in 0..per_ch {
+                // Channel 5 fully dense; every other channel keeps
+                // exactly 4 of its 72 weights (≈94.4% sparse).
+                if m == 5 || i % 18 == 0 {
+                    dense[m * per_ch + i] = 0.5 + (i % 7) as f32;
+                }
+            }
+        }
+        let w = ConvWeights::from_dense(&shape, dense);
+        let plan = DirectSparsePlan::build(&shape, &w);
+        let tiles = plan.tiles();
+        let nnz = plan.tile_nnz();
+        let max_channel_nnz = per_ch; // the dense channel
+        for (t, &weight) in tiles.iter().zip(nnz) {
+            assert!(
+                t.len() == 1 || weight <= 2 * max_channel_nnz.max(1),
+                "tile {t:?} weight {weight} exceeds the per-channel floor"
+            );
+        }
+        // The dense channel sits alone in its tile.
+        let dense_tile = tiles.iter().position(|t| t.contains(&5)).unwrap();
+        assert_eq!(tiles[dense_tile].len(), 1, "dense channel must not drag neighbours");
     }
 }

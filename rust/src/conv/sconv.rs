@@ -14,14 +14,21 @@
 //! it into packed FMAs. Partial sums accumulate in the output row held in
 //! cache/registers (the paper's register-resident partial sums).
 //!
-//! The workhorse is [`sconv_workers`], which writes into caller-provided
+//! The workhorse is [`sconv_tiled`], which writes into caller-provided
 //! output and scratch slices (the plan/executor path reuses them across
-//! calls); [`sconv`] and [`sconv_parallel`] are the thin allocating
-//! wrappers the seed API exposed.
+//! calls) and executes through a shared [`WorkerPool`]: output planes
+//! are grouped into **nnz-weighted channel tiles** ([`nnz_channel_tiles`])
+//! so every tile carries ~equal FLOPs even when per-channel sparsity is
+//! skewed — the load-imbalance failure mode that idles equal-plane
+//! splits. [`sconv`] and [`sconv_parallel`] are the thin allocating
+//! wrappers the seed API exposed (the latter now spins up an ephemeral
+//! pool per call; the plan layer shares one pool instead).
 
 use crate::config::ConvShape;
 use crate::sparse::{EllMatrix, StretchedFilter};
 use crate::tensor::{Dims4, Tensor4};
+use crate::util::{SharedSlice, WorkerPool};
+use std::ops::Range;
 
 /// Scratch floats one worker needs: the stride-1 fast path accumulates
 /// into a `(E-1)*Wp + F` plane; the strided path needs none, but one
@@ -133,21 +140,76 @@ fn sconv_plane(
     }
 }
 
+/// Pack output channels into contiguous tiles of ~equal stored-nonzero
+/// count — the unit of work the pool schedules. Equal-*plane* splitting
+/// assigns every channel the same weight, so one dense channel among
+/// highly sparse ones turns into a straggler; weighting by nnz (the
+/// per-row populations of the stretched CSR banks) makes each tile cost
+/// ~the same FLOPs instead. Granularity is fixed by the weights alone
+/// (never by the pool size), so outputs are reproducible across
+/// `ESCOIN_THREADS` settings and any pool up to `TARGET_TILES` workers
+/// has spare tiles to steal.
+///
+/// Returns `(channel ranges, per-tile nnz)`; ranges partition `0..M`
+/// and never split a channel. A channel whose nnz alone reaches the
+/// per-tile target always forms its **own** tile (the open tile is
+/// closed first), so a dense channel never drags neighbours and
+/// multi-channel tiles stay below `2 * target` nnz — a single dense
+/// channel is the only way a tile exceeds the target floor.
+pub(crate) fn nnz_channel_tiles(
+    shape: &ConvShape,
+    banks: &[StretchedFilter],
+) -> (Vec<Range<usize>>, Vec<usize>) {
+    const TARGET_TILES: usize = 48;
+    assert_eq!(banks.len(), shape.groups);
+    let mg = shape.m_per_group();
+    let nnz_of = |m: usize| banks[m / mg].csr.row_nnz(m % mg);
+    let total: usize = (0..shape.m).map(nnz_of).sum();
+    let target = (total / TARGET_TILES).max(1);
+    let mut tiles = Vec::new();
+    let mut weights = Vec::new();
+    let mut start = 0;
+    let mut acc = 0;
+    for m in 0..shape.m {
+        let w = nnz_of(m);
+        if start < m && w >= target {
+            // Heavy channel: close the open tile so it sits alone.
+            tiles.push(start..m);
+            weights.push(acc);
+            start = m;
+            acc = 0;
+        }
+        acc += w;
+        if acc >= target || m + 1 == shape.m {
+            tiles.push(start..m + 1);
+            weights.push(acc);
+            start = m + 1;
+            acc = 0;
+        }
+    }
+    (tiles, weights)
+}
+
 /// Direct sparse convolution over an already padded input slice
 /// (`batch * C * Hp * Wp` floats), writing `batch * M * E * F` into
 /// `out` — **zero allocation**; all scratch comes from the caller.
 ///
-/// `workers` threads each own a disjoint contiguous range of `(n, m)`
-/// output planes plus a private `worker_scratch_floats` slice of
-/// `scratch` — no synchronisation, mirroring the paper's
-/// thread-block-per-output-channel partitioning. The strided path writes
-/// `+=` into `out`, so the caller must zero it first.
-pub(crate) fn sconv_workers(
+/// Work is decomposed into `batch * tiles.len()` pool tiles, one per
+/// (image, channel range); `tiles` must partition `0..M` (normally
+/// [`nnz_channel_tiles`]). Each pool worker owns a private
+/// `worker_scratch_floats` slice of `scratch` (so `scratch` must hold
+/// at least `pool.workers()` of them); output planes are disjoint per
+/// tile — no synchronisation, mirroring the paper's
+/// thread-block-per-output-channel partitioning. The strided path
+/// writes `+=` into `out`, so the caller must zero it first.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sconv_tiled(
     shape: &ConvShape,
     padded: &[f32],
     batch: usize,
     banks: &[StretchedFilter],
-    workers: usize,
+    tiles: &[Range<usize>],
+    pool: &WorkerPool,
     out: &mut [f32],
     scratch: &mut [f32],
 ) {
@@ -160,77 +222,78 @@ pub(crate) fn sconv_workers(
     let img_len = shape.c * hp * wp;
     debug_assert_eq!(padded.len(), batch * img_len);
     debug_assert_eq!(out.len(), batch * shape.m * ef);
-    let total_planes = batch * shape.m;
     let span = if shape.stride == 1 { (e - 1) * wp + f } else { 0 };
     let per_worker = worker_scratch_floats(shape);
-    let workers = workers.max(1).min(total_planes.max(1));
-    debug_assert!(scratch.len() >= workers * per_worker);
-
-    if workers == 1 {
-        let scratch = &mut scratch[..span];
-        for plane_id in 0..total_planes {
-            let (n, m) = (plane_id / shape.m, plane_id % shape.m);
-            let g = m / mg;
-            let img = &padded[n * img_len..(n + 1) * img_len];
-            let in_group = &img[g * group_len..(g + 1) * group_len];
-            let plane = &mut out[plane_id * ef..(plane_id + 1) * ef];
-            sconv_plane(shape, in_group, &banks[g], m % mg, plane, scratch);
-        }
+    assert!(scratch.len() >= pool.workers() * per_worker);
+    let n_ct = tiles.len();
+    if n_ct == 0 || batch == 0 {
         return;
     }
 
-    let planes_per = total_planes.div_ceil(workers);
-    std::thread::scope(|scope| {
-        for (t, (chunk, scr)) in out
-            .chunks_mut(planes_per * ef)
-            .zip(scratch.chunks_mut(per_worker))
-            .enumerate()
-        {
-            scope.spawn(move || {
-                let first_plane = t * planes_per;
-                let scr = &mut scr[..span];
-                for (p, plane) in chunk.chunks_mut(ef).enumerate() {
-                    let plane_id = first_plane + p;
-                    let (n, m) = (plane_id / shape.m, plane_id % shape.m);
-                    let g = m / mg;
-                    let img = &padded[n * img_len..(n + 1) * img_len];
-                    let in_group = &img[g * group_len..(g + 1) * group_len];
-                    sconv_plane(shape, in_group, &banks[g], m % mg, plane, scr);
-                }
-            });
+    let out_sh = SharedSlice::new(out);
+    let scr_sh = SharedSlice::new(scratch);
+    pool.run(batch * n_ct, &|tile, worker| {
+        let (n, ct) = (tile / n_ct, tile % n_ct);
+        // SAFETY: worker ids are unique among concurrently running
+        // tiles, so per-worker scratch views never alias.
+        let scr = unsafe { scr_sh.slice_mut(worker * per_worker, per_worker) };
+        let scr = &mut scr[..span];
+        let img = &padded[n * img_len..(n + 1) * img_len];
+        for m in tiles[ct].clone() {
+            let g = m / mg;
+            let in_group = &img[g * group_len..(g + 1) * group_len];
+            // SAFETY: `tiles` partitions 0..M, so (n, m) planes are
+            // disjoint across tiles.
+            let plane = unsafe { out_sh.slice_mut((n * shape.m + m) * ef, ef) };
+            sconv_plane(shape, in_group, &banks[g], m % mg, plane, scr);
         }
     });
 }
 
 /// Direct sparse convolution, sequential. `banks` must come from
 /// [`ConvWeights::stretched_banks`] for the same `shape`. Thin allocating
-/// wrapper over [`sconv_workers`].
+/// wrapper over [`sconv_tiled`].
 ///
 /// [`ConvWeights::stretched_banks`]: super::ConvWeights::stretched_banks
 pub fn sconv(shape: &ConvShape, input: &Tensor4, banks: &[StretchedFilter]) -> Tensor4 {
-    sconv_parallel(shape, input, banks, 1)
+    sconv_with_pool(shape, input, banks, &WorkerPool::new(1))
 }
 
-/// Direct sparse convolution, parallel over output planes. Thin
-/// allocating wrapper over [`sconv_workers`].
+/// Direct sparse convolution, parallel over nnz-weighted plane tiles.
+/// Seed-compatible wrapper that spins up an **ephemeral** pool per call
+/// (thread-spawn latency included — what `perf_probe`'s pool-vs-spawn
+/// rows measure); steady-state callers should hold a [`WorkerPool`] and
+/// use [`sconv_with_pool`] or the plan layer.
 pub fn sconv_parallel(
     shape: &ConvShape,
     input: &Tensor4,
     banks: &[StretchedFilter],
     threads: usize,
 ) -> Tensor4 {
+    sconv_with_pool(shape, input, banks, &WorkerPool::new(threads))
+}
+
+/// Direct sparse convolution through a caller-owned pool. Thin
+/// allocating wrapper over [`sconv_tiled`].
+pub fn sconv_with_pool(
+    shape: &ConvShape,
+    input: &Tensor4,
+    banks: &[StretchedFilter],
+    pool: &WorkerPool,
+) -> Tensor4 {
     let d = input.dims();
     assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
     let padded = input.pad_spatial(shape.pad);
     let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, shape.out_h(), shape.out_w()));
-    let workers = threads.max(1).min((d.n * shape.m).max(1));
-    let mut scratch = vec![0.0f32; workers * worker_scratch_floats(shape)];
-    sconv_workers(
+    let mut scratch = vec![0.0f32; pool.workers() * worker_scratch_floats(shape)];
+    let (tiles, _) = nnz_channel_tiles(shape, banks);
+    sconv_tiled(
         shape,
         padded.data(),
         d.n,
         banks,
-        workers,
+        &tiles,
+        pool,
         out.data_mut(),
         &mut scratch,
     );
@@ -357,6 +420,26 @@ mod tests {
             for wd in 0..4 {
                 assert!((y.at(0, 0, h, wd) - 2.5 * x.at(0, 0, h, wd)).abs() < 1e-6);
             }
+        }
+    }
+
+    #[test]
+    fn nnz_tiles_partition_all_channels() {
+        for (i, shape) in shapes_under_test().into_iter().enumerate() {
+            let mut rng = Rng::new(500 + i as u64);
+            let w = ConvWeights::synthetic(&shape, &mut rng);
+            let banks = w.stretched_banks();
+            let (tiles, nnz) = nnz_channel_tiles(&shape, &banks);
+            assert_eq!(tiles.len(), nnz.len());
+            let mut next = 0;
+            for t in &tiles {
+                assert_eq!(t.start, next, "gap in tiles for {shape}");
+                assert!(t.end > t.start);
+                next = t.end;
+            }
+            assert_eq!(next, shape.m, "tiles must cover 0..M for {shape}");
+            let total: usize = banks.iter().map(|b| b.csr.nnz()).sum();
+            assert_eq!(nnz.iter().sum::<usize>(), total, "nnz conserved for {shape}");
         }
     }
 

@@ -2,6 +2,20 @@
 //! stand-in for the sparse lowering baseline.
 
 use crate::sparse::CsrMatrix;
+use crate::util::{SharedSlice, WorkerPool};
+
+/// One output row of the csrmm product: `crow += A[i,:] * B`.
+#[inline]
+fn csrmm_row(a: &CsrMatrix, n: usize, b: &[f32], i: usize, crow: &mut [f32]) {
+    for j in a.row_range(i) {
+        let val = a.values[j];
+        let col = a.colidx[j] as usize;
+        let brow = &b[col * n..(col + 1) * n];
+        for (cj, bj) in crow.iter_mut().zip(brow) {
+            *cj += val * bj;
+        }
+    }
+}
 
 /// `C (rows x n) += A_csr (rows x cols) * B (cols x n)`, row-major.
 ///
@@ -13,16 +27,33 @@ pub fn csrmm(a: &CsrMatrix, n: usize, b: &[f32], c: &mut [f32]) {
     assert_eq!(b.len(), a.cols * n);
     assert_eq!(c.len(), a.rows * n);
     for i in 0..a.rows {
-        let crow = &mut c[i * n..(i + 1) * n];
-        for j in a.row_range(i) {
-            let val = a.values[j];
-            let col = a.colidx[j] as usize;
-            let brow = &b[col * n..(col + 1) * n];
-            for (cj, bj) in crow.iter_mut().zip(brow) {
-                *cj += val * bj;
-            }
-        }
+        csrmm_row(a, n, b, i, &mut c[i * n..(i + 1) * n]);
     }
+}
+
+/// Pool-parallel [`csrmm`]: CSR rows are decomposed into row tiles with
+/// disjoint output rows. Per-row numerics are identical to the
+/// sequential kernel for any pool size.
+pub fn csrmm_pool(a: &CsrMatrix, n: usize, b: &[f32], c: &mut [f32], pool: &WorkerPool) {
+    assert_eq!(b.len(), a.cols * n);
+    assert_eq!(c.len(), a.rows * n);
+    if pool.workers() == 1 || a.rows < 2 {
+        return csrmm(a, n, b, c);
+    }
+    let tiles = (pool.workers() * 4).min(a.rows);
+    let rows_per = a.rows.div_ceil(tiles);
+    let ntiles = a.rows.div_ceil(rows_per);
+    let c_sh = SharedSlice::new(c);
+    pool.run(ntiles, &|t, _worker| {
+        let i0 = t * rows_per;
+        let i1 = (i0 + rows_per).min(a.rows);
+        for i in i0..i1 {
+            // SAFETY: row tiles partition 0..rows — output rows are
+            // disjoint across tiles.
+            let crow = unsafe { c_sh.slice_mut(i * n, n) };
+            csrmm_row(a, n, b, i, crow);
+        }
+    });
 }
 
 #[cfg(test)]
@@ -56,6 +87,24 @@ mod tests {
         let mut c = vec![1.0, 2.0];
         csrmm(&csr, 2, &[10.0, 20.0], &mut c);
         assert_eq!(c, vec![31.0, 62.0]);
+    }
+
+    #[test]
+    fn pool_variant_is_bitwise_identical() {
+        let mut rng = Rng::new(33);
+        let (m, k, n) = (17, 24, 9);
+        let mut a = rng.normal_vec(m * k);
+        prune_magnitude(&mut a, 0.7);
+        let csr = CsrMatrix::from_dense(m, k, &a);
+        let b = rng.normal_vec(k * n);
+        let mut seq = vec![0.0; m * n];
+        csrmm(&csr, n, &b, &mut seq);
+        for threads in [1, 3, 8] {
+            let pool = crate::util::WorkerPool::new(threads);
+            let mut par = vec![0.0; m * n];
+            csrmm_pool(&csr, n, &b, &mut par, &pool);
+            assert_eq!(seq, par, "t{threads}");
+        }
     }
 
     #[test]

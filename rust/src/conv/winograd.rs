@@ -14,6 +14,7 @@
 use super::weights::ConvWeights;
 use crate::config::ConvShape;
 use crate::tensor::{Dims4, Tensor4};
+use crate::util::{SharedSlice, WorkerPool};
 
 /// Whether this layer can use the Winograd path (3x3, stride 1, ungrouped
 /// kernels are what F(2x2,3x3) covers; grouped layers would just loop).
@@ -107,10 +108,78 @@ pub(crate) fn transform_filters(shape: &ConvShape, weights: &ConvWeights) -> Vec
     u
 }
 
-/// The tile loop over an already padded input slice (`batch * C * Hp * Wp`
-/// floats): gathers 4x4 tiles, multiplies against pre-transformed filters
-/// `u`, and writes 2x2 output tiles into `out` (`batch * M * E * F`).
-/// `acc` is the caller-provided `M * 16` accumulator scratch.
+/// One row of 2x2 output tiles (tile row `th`) for image `n`: gathers
+/// 4x4 input tiles per channel, multiplies against the pre-transformed
+/// filters `u`, and writes the 2x2 output tiles through `out` (a
+/// [`SharedSlice`] over the whole `batch * M * E * F` output). Writes
+/// touch only output rows `2*th` and `2*th + 1` of image `n`'s planes,
+/// so `(n, th)` tiles are disjoint — the unit of pool parallelism.
+/// `acc` is one `M * 16` accumulator scratch.
+fn winograd_row_into(
+    shape: &ConvShape,
+    padded: &[f32],
+    n: usize,
+    th: usize,
+    u: &[[f32; 16]],
+    acc: &mut [f32],
+    out: &SharedSlice<'_>,
+) {
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let ef = e * f;
+    let (hp, wp) = (shape.padded_h(), shape.padded_w());
+    debug_assert_eq!(u.len(), shape.m * shape.c);
+    debug_assert_eq!(acc.len(), shape.m * 16);
+    let tiles_w = f.div_ceil(2);
+    let h0 = th * 2;
+    for tw in 0..tiles_w {
+        // Gather the 4x4 input tile per channel (zero beyond edge),
+        // transform, and accumulate the elementwise products.
+        let w0 = tw * 2;
+        acc.fill(0.0);
+        for c in 0..shape.c {
+            let mut dtile = [0.0f32; 16];
+            for i in 0..4 {
+                for j in 0..4 {
+                    let (hh, ww) = (h0 + i, w0 + j);
+                    if hh < hp && ww < wp {
+                        dtile[i * 4 + j] = padded[((n * shape.c + c) * hp + hh) * wp + ww];
+                    }
+                }
+            }
+            let v = transform_input(&dtile);
+            for m in 0..shape.m {
+                let uf = &u[m * shape.c + c];
+                let am = &mut acc[m * 16..(m + 1) * 16];
+                for t in 0..16 {
+                    am[t] += uf[t] * v[t];
+                }
+            }
+        }
+        for m in 0..shape.m {
+            let mut am = [0.0f32; 16];
+            am.copy_from_slice(&acc[m * 16..(m + 1) * 16]);
+            let y = transform_output(&am);
+            for i in 0..2 {
+                let hh = h0 + i;
+                if hh >= e {
+                    continue;
+                }
+                let cols = (f - w0).min(2);
+                // SAFETY: (n, th) tiles write disjoint output rows.
+                let row = unsafe { out.slice_mut((n * shape.m + m) * ef + hh * f + w0, cols) };
+                for (j, r) in row.iter_mut().enumerate() {
+                    *r = y[i * 2 + j];
+                }
+            }
+        }
+    }
+}
+
+/// Sequential tile loop over an already padded input slice
+/// (`batch * C * Hp * Wp` floats), writing `batch * M * E * F` into
+/// `out`. `acc` is the caller-provided `M * 16` accumulator scratch.
+/// Reference path for the seed wrapper; the plan layer uses
+/// [`winograd_tiles_pool`], which produces bit-identical output.
 pub(crate) fn winograd_tiles_into(
     shape: &ConvShape,
     padded: &[f32],
@@ -119,58 +188,40 @@ pub(crate) fn winograd_tiles_into(
     acc: &mut [f32],
     out: &mut [f32],
 ) {
-    let (e, f) = (shape.out_h(), shape.out_w());
-    let ef = e * f;
-    let (hp, wp) = (shape.padded_h(), shape.padded_w());
-    debug_assert_eq!(u.len(), shape.m * shape.c);
-    debug_assert_eq!(acc.len(), shape.m * 16);
-    debug_assert_eq!(out.len(), batch * shape.m * ef);
-
-    let tiles_h = e.div_ceil(2);
-    let tiles_w = f.div_ceil(2);
+    debug_assert_eq!(out.len(), batch * shape.m * shape.out_h() * shape.out_w());
+    let tiles_h = shape.out_h().div_ceil(2);
+    let out_sh = SharedSlice::new(out);
     for n in 0..batch {
         for th in 0..tiles_h {
-            for tw in 0..tiles_w {
-                // Gather the 4x4 input tile per channel (zero beyond edge),
-                // transform, and accumulate the elementwise products.
-                let h0 = th * 2;
-                let w0 = tw * 2;
-                acc.fill(0.0);
-                for c in 0..shape.c {
-                    let mut dtile = [0.0f32; 16];
-                    for i in 0..4 {
-                        for j in 0..4 {
-                            let (hh, ww) = (h0 + i, w0 + j);
-                            if hh < hp && ww < wp {
-                                dtile[i * 4 + j] = padded[((n * shape.c + c) * hp + hh) * wp + ww];
-                            }
-                        }
-                    }
-                    let v = transform_input(&dtile);
-                    for m in 0..shape.m {
-                        let uf = &u[m * shape.c + c];
-                        let am = &mut acc[m * 16..(m + 1) * 16];
-                        for t in 0..16 {
-                            am[t] += uf[t] * v[t];
-                        }
-                    }
-                }
-                for m in 0..shape.m {
-                    let mut am = [0.0f32; 16];
-                    am.copy_from_slice(&acc[m * 16..(m + 1) * 16]);
-                    let y = transform_output(&am);
-                    for i in 0..2 {
-                        for j in 0..2 {
-                            let (hh, ww) = (h0 + i, w0 + j);
-                            if hh < e && ww < f {
-                                out[(n * shape.m + m) * ef + hh * f + ww] = y[i * 2 + j];
-                            }
-                        }
-                    }
-                }
-            }
+            winograd_row_into(shape, padded, n, th, u, acc, &out_sh);
         }
     }
+}
+
+/// Pool-parallel tile loop: `(image, tile row)` pairs form the tile
+/// space; each pool worker owns a private `M * 16` accumulator slice of
+/// `acc_all` (which must hold `pool.workers()` of them).
+pub(crate) fn winograd_tiles_pool(
+    shape: &ConvShape,
+    padded: &[f32],
+    batch: usize,
+    u: &[[f32; 16]],
+    acc_all: &mut [f32],
+    out: &mut [f32],
+    pool: &WorkerPool,
+) {
+    let per = shape.m * 16;
+    debug_assert_eq!(out.len(), batch * shape.m * shape.out_h() * shape.out_w());
+    assert!(acc_all.len() >= pool.workers() * per);
+    let tiles_h = shape.out_h().div_ceil(2);
+    let out_sh = SharedSlice::new(out);
+    let acc_sh = SharedSlice::new(acc_all);
+    pool.run(batch * tiles_h, &|t, worker| {
+        let (n, th) = (t / tiles_h, t % tiles_h);
+        // SAFETY: worker ids are unique among running tiles.
+        let acc = unsafe { acc_sh.slice_mut(worker * per, per) };
+        winograd_row_into(shape, padded, n, th, u, acc, &out_sh);
+    });
 }
 
 /// Winograd F(2x2, 3x3) convolution for 3x3 stride-1 layers. Produces the
@@ -237,6 +288,29 @@ mod tests {
         let want = direct_dense(&shape, &x, &w);
         let got = winograd_3x3(&shape, &x, &w);
         assert!(got.allclose(&want, 1e-3, 1e-4));
+    }
+
+    #[test]
+    fn pooled_tiles_are_bitwise_identical_to_sequential() {
+        // Odd output size exercises partial tile rows at every worker
+        // count; the pool decomposition must not change any numerics.
+        let shape = ConvShape::new(3, 5, 9, 9, 3, 3, 1, 1);
+        let mut rng = Rng::new(31);
+        let x = Tensor4::random_activations(Dims4::new(2, 3, 9, 9), &mut rng);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let padded = x.pad_spatial(shape.pad);
+        let u = transform_filters(&shape, &w);
+        let out_len = 2 * shape.m * shape.out_h() * shape.out_w();
+        let mut seq = vec![0.0f32; out_len];
+        let mut acc = vec![0.0f32; shape.m * 16];
+        winograd_tiles_into(&shape, padded.data(), 2, &u, &mut acc, &mut seq);
+        for threads in [1, 2, 4, 9] {
+            let pool = WorkerPool::new(threads);
+            let mut par = vec![0.0f32; out_len];
+            let mut acc_all = vec![0.0f32; pool.workers() * shape.m * 16];
+            winograd_tiles_pool(&shape, padded.data(), 2, &u, &mut acc_all, &mut par, &pool);
+            assert_eq!(seq, par, "t{threads}");
+        }
     }
 
     #[test]

@@ -76,7 +76,10 @@ impl LatencyHistogram {
     }
 }
 
-/// Aggregate serving metrics.
+/// Aggregate serving metrics. The `pool_*` gauges mirror the executor's
+/// [`crate::util::WorkerPool`] telemetry (published once per batch):
+/// cumulative tiles executed, tiles stolen across the static share
+/// boundary, and the per-worker imbalance ratio in milli-units.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
@@ -84,6 +87,11 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
     pub errors: AtomicU64,
+    pub pool_workers: AtomicU64,
+    pub pool_tiles: AtomicU64,
+    pub pool_steals: AtomicU64,
+    /// `WorkerPool` imbalance ratio × 1000 (1000 = perfectly balanced).
+    pub pool_imbalance_milli: AtomicU64,
     pub latency: LatencyHistogram,
     pub batch_latency: LatencyHistogram,
     started: Mutex<Option<std::time::Instant>>,
@@ -97,6 +105,11 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub padded_slots: u64,
     pub errors: u64,
+    pub pool_workers: u64,
+    pub pool_tiles: u64,
+    pub pool_steals: u64,
+    /// Max-over-mean per-worker tile share; 1.0 is perfectly balanced.
+    pub pool_imbalance: f64,
     pub mean_latency: Duration,
     pub p50_latency: Duration,
     pub p99_latency: Duration,
@@ -125,6 +138,10 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            pool_workers: self.pool_workers.load(Ordering::Relaxed),
+            pool_tiles: self.pool_tiles.load(Ordering::Relaxed),
+            pool_steals: self.pool_steals.load(Ordering::Relaxed),
+            pool_imbalance: self.pool_imbalance_milli.load(Ordering::Relaxed) as f64 / 1000.0,
             mean_latency: self.latency.mean(),
             p50_latency: self.latency.percentile(50.0),
             p99_latency: self.latency.percentile(99.0),
@@ -171,6 +188,20 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.responses, 10);
         assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn pool_gauges_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.pool_workers.store(4, Ordering::Relaxed);
+        m.pool_tiles.store(100, Ordering::Relaxed);
+        m.pool_steals.store(7, Ordering::Relaxed);
+        m.pool_imbalance_milli.store(1250, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.pool_workers, 4);
+        assert_eq!(s.pool_tiles, 100);
+        assert_eq!(s.pool_steals, 7);
+        assert!((s.pool_imbalance - 1.25).abs() < 1e-9);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 use super::router::{Method, Router};
 use crate::config::{ConvShape, LayerKind, Network};
 use crate::conv::{ConvWeights, LayerPlan, NetworkPlan, WeightedOp, WorkspaceArena};
-use crate::util::Rng;
+use crate::util::{Rng, WorkerPool};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -74,17 +74,20 @@ impl ScheduleReport {
 
 /// Pre-built weights for every CONV/FC layer of a network, plus a cache
 /// of compiled [`LayerPlan`]s, one per `(layer, method)` ever requested.
+/// Owns the shared [`WorkerPool`] every run executes on — one pool per
+/// schedule lifetime, zero steady-state thread spawns.
 pub struct NetworkSchedule {
     pub network: Network,
     conv_weights: HashMap<String, Arc<ConvWeights>>,
     fc_weights: HashMap<String, Arc<Vec<f32>>>,
-    threads: usize,
+    pool: Arc<WorkerPool>,
     plans: Mutex<HashMap<(String, Method), Arc<LayerPlan>>>,
 }
 
 impl NetworkSchedule {
-    /// Materialise synthetic pruned weights for every layer (seeded).
-    pub fn build(network: Network, seed: u64, threads: usize) -> Self {
+    /// Materialise synthetic pruned weights for every layer (seeded);
+    /// all runs share `pool`.
+    pub fn build(network: Network, seed: u64, pool: Arc<WorkerPool>) -> Self {
         let mut rng = Rng::new(seed);
         let mut conv_weights = HashMap::new();
         let mut fc_weights = HashMap::new();
@@ -104,7 +107,7 @@ impl NetworkSchedule {
             network,
             conv_weights,
             fc_weights,
-            threads,
+            pool,
             plans: Mutex::new(HashMap::new()),
         }
     }
@@ -113,8 +116,9 @@ impl NetworkSchedule {
         self.conv_weights.get(layer).map(|w| w.as_ref())
     }
 
-    pub fn threads(&self) -> usize {
-        self.threads
+    /// The shared worker pool all runs execute on.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 
     /// The compiled plan for `(layer, method)`, built on first request.
@@ -127,7 +131,6 @@ impl NetworkSchedule {
                     shape,
                     self.conv_weights[name].clone(),
                     method,
-                    self.threads,
                 ))
             })
             .clone()
@@ -168,9 +171,9 @@ impl NetworkSchedule {
         pick: impl FnMut(&str, &ConvShape) -> Method,
     ) -> ScheduleReport {
         let plan = self.network_plan(batch, pick);
-        let mut arena = WorkspaceArena::for_plan(&plan);
+        let mut arena = WorkspaceArena::for_plan(&plan, &self.pool);
         let mut layers = Vec::with_capacity(self.network.layers.len());
-        plan.run_timed(&mut arena, &mut |lr| {
+        plan.run_timed(&self.pool, &mut arena, &mut |lr| {
             let sw = lr.kernels.expect("run_timed laps kernels");
             layers.push(LayerTiming {
                 layer: lr.layer.to_string(),
@@ -241,7 +244,7 @@ mod tests {
 
     #[test]
     fn runs_end_to_end_and_times_every_layer() {
-        let sched = NetworkSchedule::build(tiny_net(), 1, 2);
+        let sched = NetworkSchedule::build(tiny_net(), 1, Arc::new(WorkerPool::new(2)));
         let report = sched.run(2, |_, _| Method::DirectSparse);
         assert_eq!(report.layers.len(), 4);
         assert!(report.total() > Duration::ZERO);
@@ -253,7 +256,7 @@ mod tests {
 
     #[test]
     fn breakdown_buckets_match_methods() {
-        let sched = NetworkSchedule::build(tiny_net(), 2, 2);
+        let sched = NetworkSchedule::build(tiny_net(), 2, Arc::new(WorkerPool::new(2)));
         let gemm_report = sched.run(1, |_, _| Method::LoweredGemm);
         let names: Vec<String> = gemm_report
             .kernel_breakdown()
@@ -276,7 +279,7 @@ mod tests {
     #[test]
     fn sparse_conv_total_counts_only_sparse_layers() {
         let net = tiny_net();
-        let sched = NetworkSchedule::build(net.clone(), 3, 2);
+        let sched = NetworkSchedule::build(net.clone(), 3, Arc::new(WorkerPool::new(2)));
         let report = sched.run(1, |_, _| Method::DirectSparse);
         let sparse = report.sparse_conv_total(&net);
         assert!(sparse > Duration::ZERO);
@@ -288,14 +291,14 @@ mod tests {
         // Shape-consistency through the real AlexNet table (truncated run
         // at small batch to keep the test fast).
         let net = alexnet();
-        let sched = NetworkSchedule::build(net, 4, 4);
+        let sched = NetworkSchedule::build(net, 4, Arc::new(WorkerPool::new(4)));
         let report = sched.run(1, |_, _| Method::DirectSparse);
         assert_eq!(report.layers.len(), 13);
     }
 
     #[test]
     fn winograd_method_runs_on_applicable_layer() {
-        let sched = NetworkSchedule::build(tiny_net(), 5, 1);
+        let sched = NetworkSchedule::build(tiny_net(), 5, Arc::new(WorkerPool::new(1)));
         let report = sched.run(1, |_, _| Method::Winograd);
         assert!(report.layers[1]
             .kernels
@@ -305,7 +308,7 @@ mod tests {
 
     #[test]
     fn layer_plans_are_cached_across_runs() {
-        let sched = NetworkSchedule::build(tiny_net(), 6, 2);
+        let sched = NetworkSchedule::build(tiny_net(), 6, Arc::new(WorkerPool::new(2)));
         let shape = ConvShape::new(4, 6, 8, 8, 3, 3, 1, 1).with_sparsity(0.8);
         let a = sched.plan_for("c2", &shape, Method::DirectSparse);
         sched.run(1, |_, _| Method::DirectSparse);
@@ -315,7 +318,7 @@ mod tests {
 
     #[test]
     fn routed_run_feeds_the_router() {
-        let sched = NetworkSchedule::build(tiny_net(), 7, 2);
+        let sched = NetworkSchedule::build(tiny_net(), 7, Arc::new(WorkerPool::new(2)));
         let router = Router::new(RouterConfig {
             explore_every: 0,
             ..Default::default()

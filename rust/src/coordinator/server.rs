@@ -18,7 +18,7 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::{Router, RouterConfig};
 use crate::config::{network_by_name, LayerKind, Network};
 use crate::conv::{Method, NetworkPlan, WorkspaceArena};
-use crate::util::default_threads;
+use crate::util::{default_threads, WorkerPool};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -67,7 +67,9 @@ pub struct ServerConfig {
     pub batcher: BatcherConfig,
     /// Seed for the synthetic model weights.
     pub weight_seed: u64,
-    /// Kernel worker threads (0 = `util::default_threads()`).
+    /// Worker-pool size (0 = `util::default_threads()`). The executor
+    /// constructs exactly one [`WorkerPool`] of this size for its
+    /// lifetime — no per-batch or per-layer thread spawns.
     pub threads: usize,
     /// Router knobs for per-layer method selection.
     pub router: RouterConfig,
@@ -227,15 +229,18 @@ fn executor_loop(
         } else {
             default_threads()
         };
+        // The one pool this server ever constructs: shared across all
+        // layers, batches, and replans for the executor's lifetime.
+        let pool = WorkerPool::new(threads);
         let router = Router::new(cfg.router.clone());
         let batch_size = cfg.batcher.batch_size;
         let t0 = Instant::now();
         let assignment = desired_methods(&net, &router);
-        let plan = build_plan(&net, batch_size, cfg.weight_seed, threads, &assignment);
-        let arena = WorkspaceArena::for_plan(&plan);
-        Ok((net, router, threads, plan, arena, t0.elapsed()))
+        let plan = build_plan(&net, batch_size, cfg.weight_seed, &assignment);
+        let arena = WorkspaceArena::for_plan(&plan, &pool);
+        Ok((net, router, pool, plan, arena, t0.elapsed()))
     })();
-    let (net, router, threads, mut plan, mut arena, build_time) = match startup {
+    let (net, router, pool, mut plan, mut arena, build_time) = match startup {
         Ok(v) => v,
         Err(e) => {
             let msg = e.0.clone();
@@ -269,7 +274,7 @@ fn executor_loop(
         {
             // Serving run: per-layer totals feed the router's EWMA while
             // the kernels keep their parallel (untimed) execution paths.
-            let logits = plan.run_serving(&input, &mut arena, &mut |lr| {
+            let logits = plan.run_serving(&input, &pool, &mut arena, &mut |lr| {
                 if let Some(m) = lr.method {
                     router.observe(lr.layer, m, lr.total);
                 }
@@ -288,12 +293,26 @@ fn executor_loop(
             }
         }
 
+        // Publish pool telemetry: cumulative tiles/steals and the
+        // per-worker imbalance ratio (1.0 = perfectly balanced).
+        let ps = pool.stats();
+        metrics.pool_workers.store(ps.workers as u64, Ordering::Relaxed);
+        metrics
+            .pool_tiles
+            .store(ps.total_tiles(), Ordering::Relaxed);
+        metrics
+            .pool_steals
+            .store(ps.total_steals(), Ordering::Relaxed);
+        metrics
+            .pool_imbalance_milli
+            .store((ps.imbalance() * 1000.0) as u64, Ordering::Relaxed);
+
         nbatches += 1;
         if cfg.replan_every > 0 && nbatches % cfg.replan_every == 0 {
             let want = desired_methods(&net, &router);
             if want != plan.conv_methods() {
-                plan = build_plan(&net, batch_size, cfg.weight_seed, threads, &want);
-                arena = WorkspaceArena::for_plan(&plan);
+                plan = build_plan(&net, batch_size, cfg.weight_seed, &want);
+                arena = WorkspaceArena::for_plan(&plan, &pool);
                 replans += 1;
             }
         }
@@ -306,10 +325,9 @@ fn build_plan(
     net: &Network,
     batch: usize,
     seed: u64,
-    threads: usize,
     assignment: &[(String, Method)],
 ) -> NetworkPlan {
-    NetworkPlan::build(net, batch, seed, threads, |name, _| {
+    NetworkPlan::build(net, batch, seed, |name, _| {
         assignment
             .iter()
             .find(|(n, _)| n == name)

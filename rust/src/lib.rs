@@ -25,11 +25,16 @@
 //! ```text
 //! ConvShape + ConvWeights + Method ──build──▶ LayerPlan   (operands pre-transformed)
 //! Network  + seed + Router picks   ──build──▶ NetworkPlan (per-layer plans + geometry)
-//! NetworkPlan + WorkspaceArena     ──run────▶ activations (zero steady-state allocation)
+//! NetworkPlan + WorkerPool + Arena ──run────▶ activations (zero steady-state
+//!                                             allocation, zero thread spawns)
 //! ```
 //!
 //! * [`conv::LayerPlan`] — one CONV layer compiled for a method; executes
 //!   into caller slices via the [`conv::ConvExecutor`] trait.
+//! * [`util::WorkerPool`] — the persistent worker-pool runtime: parked
+//!   workers, a dynamic (work-stealing) tile queue, and per-worker
+//!   telemetry; every parallel kernel decomposes into tiles on it, and
+//!   direct-sparse tiles are nnz-weighted for load balance.
 //! * [`conv::Workspace`] / [`conv::WorkspaceArena`] — cuDNN-style scratch
 //!   arenas: sized once, reused forever.
 //! * [`conv::NetworkPlan`] — a whole network compiled for a batch size;

@@ -18,7 +18,8 @@ use escoin::config::network_by_name;
 use escoin::conv::ConvWeights;
 use escoin::coordinator::{BatcherConfig, Router, RouterConfig, ServerConfig, ServerHandle};
 use escoin::sparse::SparsityStats;
-use escoin::util::{default_threads, Rng};
+use escoin::util::{default_threads, Rng, WorkerPool};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Pull `--threads N` out of the arg list; fall back to
@@ -59,9 +60,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             print!("{}", table3_rows().render());
             if timed {
                 // Quick router-driven whole-network pass (spatially scaled
-                // so it finishes in seconds) — per-network totals.
+                // so it finishes in seconds) — per-network totals, one
+                // shared worker pool across all networks.
                 use escoin::config::{all_networks, LayerKind};
                 use escoin::coordinator::NetworkSchedule;
+                let pool = Arc::new(WorkerPool::new(threads));
                 println!("\nrouted batch-1 iteration (spatial/4, {threads} threads):");
                 for mut net in all_networks() {
                     for layer in &mut net.layers {
@@ -69,11 +72,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                             *c = c.scaled_spatial(4);
                         }
                     }
-                    let sched = NetworkSchedule::build(net, 0x5CED, threads);
+                    let sched = NetworkSchedule::build(net, 0x5CED, pool.clone());
                     let router = Router::new(RouterConfig::default());
                     let report = sched.run_routed(1, &router);
                     println!("  {:<12} {:?}", report.network, report.total());
                 }
+                let ps = pool.stats();
+                println!(
+                    "pool: {} workers, {} jobs, {} tiles ({} stolen), imbalance {:.2}",
+                    ps.workers,
+                    ps.jobs,
+                    ps.total_tiles(),
+                    ps.total_steals(),
+                    ps.imbalance()
+                );
             }
         }
         Some("prune") => {
@@ -182,6 +194,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             println!(
                 "plan build {:?}, {} replans",
                 stats.plan_build_time, stats.replans
+            );
+            let s = &stats.snapshot;
+            println!(
+                "pool: {} workers, {} tiles ({} stolen), imbalance {:.2}",
+                s.pool_workers, s.pool_tiles, s.pool_steals, s.pool_imbalance
             );
         }
         Some("simulate") | Some("figures") => {

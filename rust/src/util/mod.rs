@@ -1,14 +1,18 @@
-//! Small shared utilities: deterministic RNG, statistics, timing.
+//! Small shared utilities: deterministic RNG, statistics, timing, and
+//! the persistent [`WorkerPool`] runtime every parallel kernel executes
+//! on.
 //!
 //! We deliberately avoid a `rand` dependency — benchmark workloads must be
 //! reproducible bit-for-bit across runs, so a tiny explicit xorshift
 //! generator is preferable to a crate whose default seeding is entropic.
 
 pub mod json;
+mod pool;
 mod rng;
 mod stats;
 mod timer;
 
+pub use pool::{PoolStats, SharedSlice, WorkerPool};
 pub use rng::Rng;
 pub use stats::{geomean, mean, percentile, stddev};
 pub use timer::{ScopedTimer, Stopwatch};

@@ -1,0 +1,462 @@
+//! Persistent worker-pool runtime for the parallel kernels.
+//!
+//! The seed kernels spawned fresh OS threads inside every call
+//! (`std::thread::scope` in `sconv`, `im2col`, `gemm`), so a batch-1
+//! serving path paid thread-spawn latency per layer. A [`WorkerPool`] is
+//! created **once** (by the server for its lifetime, by the CLI per
+//! invocation, by benches per run) and holds parked worker threads;
+//! kernels decompose into *tiles* executed through [`WorkerPool::run`]
+//! over a shared dynamic tile queue.
+//!
+//! Scheduling is self-balancing: tiles are claimed from an atomic
+//! counter, so a worker that finishes its nominal share early keeps
+//! pulling tiles that a static partition would have assigned elsewhere
+//! (recorded as *steals*). Combined with nnz-weighted tile construction
+//! (see `conv::DirectSparsePlan`), this is the CPU analogue of the
+//! load-balanced partitioning the paper's GPU kernel gets from its
+//! block scheduler — skewed per-channel sparsity no longer idles lanes.
+//!
+//! Determinism: each output element's arithmetic must not depend on how
+//! tiles are cut or scheduled. The in-tree kernels guarantee this in
+//! one of two ways — the decomposition is fixed by the plan alone
+//! (sconv's nnz tiles, winograd's tile rows), or the per-element math
+//! is decomposition-independent (gemm/csrmm compute whole output rows
+//! inside one tile, so their pool-size-derived tile *counts* are
+//! harmless). Either way tiles write disjoint output ranges, so results
+//! are byte-identical for any pool size, including 1 — a property CI
+//! pins; kernels that add cross-row blocking must preserve it.
+//!
+//! Tasks must not call back into `run` on the same pool (the tile
+//! closure runs on pool workers; nested submission would deadlock the
+//! submit lock). The kernels all decompose into a single flat tile
+//! space, so this never arises in-tree.
+
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A tile task: `f(tile_index, worker_id)`. `worker_id` is stable for
+/// the duration of one closure call and unique among concurrently
+/// running tiles — index per-worker scratch with it.
+type Task<'a> = &'a (dyn Fn(usize, usize) + Sync);
+
+/// The job currently broadcast to the workers. The `'static` task
+/// reference is a lifetime-erased view of the caller's closure; it is
+/// only ever dereferenced while [`WorkerPool::run`] is blocked waiting
+/// for the job to drain, and is cleared before `run` returns.
+struct JobSlot {
+    epoch: u64,
+    task: Option<&'static (dyn Fn(usize, usize) + Sync)>,
+    num_tiles: usize,
+    /// Static block-partition share (`ceil(num_tiles / workers)`) used
+    /// only for steal accounting: executing a tile outside your own
+    /// block means the dynamic queue rebalanced work.
+    share: usize,
+    shutdown: bool,
+}
+
+#[derive(Default)]
+struct WorkerCounters {
+    tiles: AtomicU64,
+    steals: AtomicU64,
+}
+
+struct Shared {
+    workers: usize,
+    slot: Mutex<JobSlot>,
+    start: Condvar,
+    /// Spawned workers still executing the current job.
+    active: Mutex<usize>,
+    done: Condvar,
+    next_tile: AtomicUsize,
+    counters: Vec<WorkerCounters>,
+    /// Tiles run on the inline path (1-worker pool or single-tile job)
+    /// — kept out of the per-worker counters so the imbalance ratio
+    /// reflects only genuinely distributed jobs.
+    inline_tiles: AtomicU64,
+    jobs: AtomicU64,
+    panicked: AtomicBool,
+}
+
+impl Shared {
+    /// Drain the tile queue as `worker`, then fold counters in.
+    fn drain(
+        &self,
+        task: &(dyn Fn(usize, usize) + Sync),
+        num_tiles: usize,
+        share: usize,
+        worker: usize,
+    ) {
+        let mut tiles = 0u64;
+        let mut steals = 0u64;
+        loop {
+            let t = self.next_tile.fetch_add(1, Ordering::Relaxed);
+            if t >= num_tiles {
+                break;
+            }
+            task(t, worker);
+            tiles += 1;
+            if t / share != worker {
+                steals += 1;
+            }
+        }
+        if tiles > 0 {
+            self.counters[worker].tiles.fetch_add(tiles, Ordering::Relaxed);
+            self.counters[worker]
+                .steals
+                .fetch_add(steals, Ordering::Relaxed);
+        }
+    }
+}
+
+fn worker_loop(shared: std::sync::Arc<Shared>, worker: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (task, num_tiles, share) = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch != seen {
+                    if let Some(task) = slot.task {
+                        seen = slot.epoch;
+                        break (task, slot.num_tiles, slot.share);
+                    }
+                }
+                slot = shared.start.wait(slot).unwrap();
+            }
+        };
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            shared.drain(task, num_tiles, share, worker);
+        }));
+        if res.is_err() {
+            shared.panicked.store(true, Ordering::Relaxed);
+        }
+        let mut active = shared.active.lock().unwrap();
+        *active -= 1;
+        if *active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Point-in-time pool telemetry (cumulative since pool creation).
+#[derive(Clone, Debug)]
+pub struct PoolStats {
+    pub workers: usize,
+    /// `run` invocations.
+    pub jobs: u64,
+    /// Tiles executed by distributed jobs, per worker id.
+    pub tiles: Vec<u64>,
+    /// Tiles run inline (1-worker pool or single-tile job) — excluded
+    /// from the per-worker vector so [`PoolStats::imbalance`] measures
+    /// only jobs that actually distributed work.
+    pub inline_tiles: u64,
+    /// Tiles executed outside the worker's static block share — the
+    /// dynamic queue rebalancing work that equal splitting would have
+    /// left unbalanced.
+    pub steals: Vec<u64>,
+}
+
+impl PoolStats {
+    pub fn total_tiles(&self) -> u64 {
+        self.inline_tiles + self.tiles.iter().sum::<u64>()
+    }
+
+    pub fn total_steals(&self) -> u64 {
+        self.steals.iter().sum()
+    }
+
+    /// Max per-worker tile count over the mean, across distributed
+    /// jobs — 1.0 is perfectly balanced; inline jobs are excluded.
+    pub fn imbalance(&self) -> f64 {
+        let distributed: u64 = self.tiles.iter().sum();
+        if distributed == 0 || self.workers == 0 {
+            return 1.0;
+        }
+        let mean = distributed as f64 / self.workers as f64;
+        let max = *self.tiles.iter().max().unwrap() as f64;
+        max / mean
+    }
+}
+
+/// A pool of parked worker threads executing tile jobs. See the module
+/// docs for the execution model; construction spawns `threads - 1` OS
+/// threads (the submitting thread always participates as worker 0), so
+/// `WorkerPool::new(1)` is a zero-thread inline executor.
+pub struct WorkerPool {
+    shared: std::sync::Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serialises concurrent `run` calls from different threads.
+    submit: Mutex<()>,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> Self {
+        let workers = threads.max(1);
+        let shared = std::sync::Arc::new(Shared {
+            workers,
+            slot: Mutex::new(JobSlot {
+                epoch: 0,
+                task: None,
+                num_tiles: 0,
+                share: 1,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            active: Mutex::new(0),
+            done: Condvar::new(),
+            next_tile: AtomicUsize::new(0),
+            counters: (0..workers).map(|_| WorkerCounters::default()).collect(),
+            inline_tiles: AtomicU64::new(0),
+            jobs: AtomicU64::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        let handles = (1..workers)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("escoin-worker-{w}"))
+                    .spawn(move || worker_loop(shared, w))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self {
+            shared,
+            handles,
+            submit: Mutex::new(()),
+        }
+    }
+
+    /// Worker count (including the submitting thread). Kernels size
+    /// per-worker scratch with this.
+    pub fn workers(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// Execute `task` for every tile index in `0..num_tiles` across the
+    /// pool, blocking until all tiles are done. The submitting thread
+    /// participates as worker 0; tiles are claimed dynamically.
+    pub fn run(&self, num_tiles: usize, task: Task<'_>) {
+        if num_tiles == 0 {
+            return;
+        }
+        let sh = &self.shared;
+        sh.jobs.fetch_add(1, Ordering::Relaxed);
+        if self.handles.is_empty() || num_tiles == 1 {
+            // Inline path: nothing to distribute (or no one to share
+            // with) — run every tile on the calling thread. Still
+            // serialised by the submit lock so worker id 0 is unique
+            // across concurrent `run` calls from different threads
+            // (kernels key shared scratch by worker id); the guard is
+            // released before re-raising a task panic so it never
+            // poisons the pool.
+            let guard = self.submit.lock().unwrap();
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                for t in 0..num_tiles {
+                    task(t, 0);
+                }
+            }));
+            sh.inline_tiles
+                .fetch_add(num_tiles as u64, Ordering::Relaxed);
+            drop(guard);
+            if let Err(payload) = res {
+                std::panic::resume_unwind(payload);
+            }
+            return;
+        }
+
+        let job_guard = self.submit.lock().unwrap();
+        let share = num_tiles.div_ceil(sh.workers);
+        sh.next_tile.store(0, Ordering::SeqCst);
+        *sh.active.lock().unwrap() = self.handles.len();
+        {
+            let mut slot = sh.slot.lock().unwrap();
+            slot.epoch = slot.epoch.wrapping_add(1);
+            // SAFETY: the borrow outlives the job — `run` does not
+            // return (even on panic, see below) until every worker has
+            // drained and the slot is cleared.
+            let erased: &'static (dyn Fn(usize, usize) + Sync) =
+                unsafe { std::mem::transmute(task) };
+            slot.task = Some(erased);
+            slot.num_tiles = num_tiles;
+            slot.share = share;
+            sh.start.notify_all();
+        }
+
+        let main_res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sh.drain(task, num_tiles, share, 0);
+        }));
+
+        let mut active = sh.active.lock().unwrap();
+        while *active > 0 {
+            active = sh.done.wait(active).unwrap();
+        }
+        drop(active);
+        sh.slot.lock().unwrap().task = None;
+
+        // Release the submit lock *before* re-raising so a caller that
+        // catches the panic can keep using the pool (the workers are
+        // healthy — only the task closure failed).
+        let worker_panicked = sh.panicked.swap(false, Ordering::Relaxed);
+        drop(job_guard);
+        if let Err(payload) = main_res {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("worker pool task panicked");
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let sh = &self.shared;
+        PoolStats {
+            workers: sh.workers,
+            jobs: sh.jobs.load(Ordering::Relaxed),
+            inline_tiles: sh.inline_tiles.load(Ordering::Relaxed),
+            tiles: sh
+                .counters
+                .iter()
+                .map(|c| c.tiles.load(Ordering::Relaxed))
+                .collect(),
+            steals: sh
+                .counters
+                .iter()
+                .map(|c| c.steals.load(Ordering::Relaxed))
+                .collect(),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Shared mutable base pointer for pool tiles that write provably
+/// disjoint ranges of one output slice. Rust cannot express "these
+/// dynamically claimed tiles never overlap" through `chunks_mut`, so
+/// the kernels assert disjointness structurally (tiles partition the
+/// output index space; scratch is indexed by unique worker id) and
+/// carve views through this wrapper.
+pub struct SharedSlice<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _marker: PhantomData<&'a mut [f32]>,
+}
+
+unsafe impl Send for SharedSlice<'_> {}
+unsafe impl Sync for SharedSlice<'_> {}
+
+impl<'a> SharedSlice<'a> {
+    pub fn new(slice: &'a mut [f32]) -> Self {
+        Self {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Carve `start..start + len` as a mutable view.
+    ///
+    /// # Safety
+    /// Ranges handed out to concurrently running tiles must be
+    /// disjoint, and the parent slice must not be accessed through any
+    /// other path while views are live.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [f32] {
+        debug_assert!(start + len <= self.len, "SharedSlice range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_tile_exactly_once() {
+        for threads in [1, 2, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            for num_tiles in [0, 1, 3, 17, 100] {
+                let hits: Vec<AtomicU64> = (0..num_tiles).map(|_| AtomicU64::new(0)).collect();
+                pool.run(num_tiles, &|t, _w| {
+                    hits[t].fetch_add(1, Ordering::Relaxed);
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                    "t{threads} n{num_tiles}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn worker_ids_are_in_range_and_scratch_disjoint() {
+        let pool = WorkerPool::new(4);
+        let mut scratch = vec![0.0f32; 4];
+        let s = SharedSlice::new(&mut scratch);
+        pool.run(64, &|_t, w| {
+            assert!(w < 4);
+            let mine = unsafe { s.slice_mut(w, 1) };
+            mine[0] += 1.0;
+        });
+        assert_eq!(scratch.iter().sum::<f32>(), 64.0);
+    }
+
+    #[test]
+    fn pool_is_reusable_and_counts_jobs() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicU64::new(0);
+        for _ in 0..10 {
+            pool.run(7, &|t, _| {
+                total.fetch_add(t as u64, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 10 * (0..7).sum::<usize>() as u64);
+        let stats = pool.stats();
+        assert_eq!(stats.jobs, 10);
+        assert_eq!(stats.total_tiles(), 70);
+        assert_eq!(stats.tiles.len(), 3);
+    }
+
+    #[test]
+    fn single_thread_pool_spawns_nothing_and_still_counts() {
+        let pool = WorkerPool::new(1);
+        pool.run(5, &|_, w| assert_eq!(w, 0));
+        let stats = pool.stats();
+        assert_eq!(stats.workers, 1);
+        assert_eq!(stats.total_tiles(), 5);
+        assert_eq!(stats.total_steals(), 0);
+        assert!((stats.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_writes_compose_a_full_output() {
+        // The kernels' usage pattern: tiles write disjoint output
+        // ranges through a SharedSlice.
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0.0f32; 128];
+        let sh = SharedSlice::new(&mut out);
+        pool.run(32, &|t, _w| {
+            let chunk = unsafe { sh.slice_mut(t * 4, 4) };
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (t * 4 + i) as f32;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+}

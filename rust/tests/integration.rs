@@ -9,7 +9,8 @@ use escoin::conv::{
 };
 use escoin::coordinator::{Method, NetworkSchedule, Router, RouterConfig};
 use escoin::tensor::{Dims4, Tensor4};
-use escoin::util::Rng;
+use escoin::util::{Rng, WorkerPool};
+use std::sync::Arc;
 
 /// Every sparse CONV layer of every network, scaled down, run through all
 /// applicable methods and cross-checked — the whole-repo correctness net.
@@ -67,7 +68,7 @@ fn router_drives_scheduler_end_to_end() {
             *c = c.scaled_spatial(4);
         }
     }
-    let sched = NetworkSchedule::build(scaled, 7, 2);
+    let sched = NetworkSchedule::build(scaled, 7, Arc::new(WorkerPool::new(2)));
     let router = Router::new(RouterConfig::default());
     for _ in 0..3 {
         let report = sched.run(1, |layer, shape| router.choose(layer, shape));

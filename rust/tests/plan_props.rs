@@ -1,7 +1,9 @@
 //! Property tests for the ExecutionPlan layer: every compiled plan must
 //! match the Algorithm-1 oracle over the canonical shape grid × all four
-//! methods, and whole-network plans must be deterministic and
-//! allocation-stable against a shared workspace arena.
+//! methods (executed through worker pools of several sizes), whole-network
+//! plans must be deterministic and allocation-stable against a shared
+//! workspace arena, and pool runs must be byte-identical to
+//! single-thread runs.
 
 use escoin::config::{minicnn, ConvShape};
 use escoin::conv::{
@@ -9,7 +11,7 @@ use escoin::conv::{
     NetworkPlan, Workspace, WorkspaceArena,
 };
 use escoin::tensor::{Dims4, Tensor4};
-use escoin::util::Rng;
+use escoin::util::{Rng, WorkerPool};
 
 fn case(shape: &ConvShape, n: usize, seed: u64) -> (Tensor4, ConvWeights) {
     let mut rng = Rng::new(seed);
@@ -19,10 +21,12 @@ fn case(shape: &ConvShape, n: usize, seed: u64) -> (Tensor4, ConvWeights) {
 }
 
 /// Cross-method property: every `LayerPlan` output matches `direct_dense`
-/// over the `shapes_under_test()` grid × all four `Method`s (Winograd
-/// where applicable), at several thread counts and batch sizes.
+/// over the `shapes_under_test()` grid × all four `Method`s (Winograd —
+/// now pool-parallel — where applicable), at several pool sizes and
+/// batch sizes.
 #[test]
 fn property_every_layer_plan_matches_direct_dense() {
+    let pools: Vec<WorkerPool> = [1, 2, 8].into_iter().map(WorkerPool::new).collect();
     for (i, shape) in shapes_under_test().into_iter().enumerate() {
         for batch in [1, 3] {
             let (x, w) = case(&shape, batch, 900 + i as u64);
@@ -31,15 +35,47 @@ fn property_every_layer_plan_matches_direct_dense() {
                 if method == Method::Winograd && !winograd_applicable(&shape) {
                     continue;
                 }
-                for threads in [1, 2, 8] {
-                    let plan = LayerPlan::build(&shape, &w, method, threads);
-                    let got = plan.run(&x);
+                let plan = LayerPlan::build(&shape, &w, method);
+                for pool in &pools {
+                    let got = plan.run(&x, pool);
                     assert!(
                         got.allclose(&want, 1e-3, 1e-4),
-                        "{shape} under {} (t{threads}, b{batch})",
-                        method.name()
+                        "{shape} under {} (t{}, b{batch})",
+                        method.name(),
+                        pool.workers()
                     );
                 }
+            }
+        }
+    }
+}
+
+/// Pool-size invariance: for every method (including the newly
+/// parallelised Winograd path), executing one compiled plan through
+/// pools of different sizes produces **byte-identical** output — tile
+/// decomposition is fixed by the plan, never by the worker count.
+#[test]
+fn property_plan_output_is_byte_identical_across_pool_sizes() {
+    let single = WorkerPool::new(1);
+    for (i, shape) in shapes_under_test().into_iter().enumerate() {
+        let (x, w) = case(&shape, 3, 2100 + i as u64);
+        for method in Method::ALL {
+            if method == Method::Winograd && !winograd_applicable(&shape) {
+                continue;
+            }
+            let plan = LayerPlan::build(&shape, &w, method);
+            let reference = plan.run(&x, &single);
+            let ref_bits: Vec<u32> = reference.data().iter().map(|v| v.to_bits()).collect();
+            for threads in [2, 4, 16] {
+                let pool = WorkerPool::new(threads);
+                let got = plan.run(&x, &pool);
+                let got_bits: Vec<u32> = got.data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    ref_bits,
+                    got_bits,
+                    "{shape} under {} t{threads} diverged from single-thread",
+                    method.name()
+                );
             }
         }
     }
@@ -49,14 +85,15 @@ fn property_every_layer_plan_matches_direct_dense() {
 /// fresh-workspace result bit for bit (no scratch contamination).
 #[test]
 fn property_shared_workspace_is_bit_stable() {
+    let pool = WorkerPool::new(3);
     let mut ws = Workspace::new(); // shared across shapes AND methods
     for (i, shape) in shapes_under_test().into_iter().enumerate() {
         let (x, w) = case(&shape, 2, 1300 + i as u64);
         for method in [Method::DirectSparse, Method::LoweredGemm, Method::LoweredSpmm] {
-            let plan = LayerPlan::build(&shape, &w, method, 3);
-            let fresh = plan.run(&x);
+            let plan = LayerPlan::build(&shape, &w, method);
+            let fresh = plan.run(&x, &pool);
             let mut out = Tensor4::zeros(plan.out_dims(2));
-            plan.execute_into(2, x.data(), &mut ws, out.data_mut(), None);
+            plan.execute_into(2, x.data(), &pool, &mut ws, out.data_mut(), None);
             assert_eq!(
                 out.data(),
                 fresh.data(),
@@ -69,17 +106,20 @@ fn property_shared_workspace_is_bit_stable() {
 
 /// Determinism: two `NetworkPlan::run` calls on one shared
 /// `WorkspaceArena` produce byte-identical outputs (catches
-/// workspace-reuse contamination), and the arena does not grow after the
-/// first run (zero steady-state allocation).
+/// workspace-reuse contamination), the arena does not grow after the
+/// first run (zero steady-state allocation), and a single-thread pool
+/// reproduces the multi-worker bytes on the same arena.
 #[test]
 fn network_plan_runs_on_shared_arena_are_byte_identical() {
     let net = minicnn();
+    let pool = WorkerPool::new(2);
+    let single = WorkerPool::new(1);
     for method in [Method::DirectSparse, Method::LoweredSpmm, Method::LoweredGemm] {
-        let plan = NetworkPlan::build(&net, 3, 0xDE, 2, |_, _| method);
-        let mut arena = WorkspaceArena::for_plan(&plan);
-        let first = plan.run(&mut arena).to_vec();
+        let plan = NetworkPlan::build(&net, 3, 0xDE, |_, _| method);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+        let first = plan.run(&pool, &mut arena).to_vec();
         let floats_after_first = arena.total_floats();
-        let second = plan.run(&mut arena).to_vec();
+        let second = plan.run(&pool, &mut arena).to_vec();
         let first_bits: Vec<u32> = first.iter().map(|v| v.to_bits()).collect();
         let second_bits: Vec<u32> = second.iter().map(|v| v.to_bits()).collect();
         assert_eq!(first_bits, second_bits, "{}", method.name());
@@ -87,6 +127,15 @@ fn network_plan_runs_on_shared_arena_are_byte_identical() {
             arena.total_floats(),
             floats_after_first,
             "arena grew in steady state ({})",
+            method.name()
+        );
+        // Same arena, single-thread pool: still the same bytes.
+        let serial = plan.run(&single, &mut arena).to_vec();
+        let serial_bits: Vec<u32> = serial.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(
+            first_bits,
+            serial_bits,
+            "single-thread run diverged ({})",
             method.name()
         );
     }
@@ -97,27 +146,28 @@ fn network_plan_runs_on_shared_arena_are_byte_identical() {
 #[test]
 fn arena_survives_method_switches() {
     let net = minicnn();
+    let pool = WorkerPool::new(2);
     let mut shared = WorkspaceArena::new();
     let mut rng = Rng::new(42);
-    let gemm = NetworkPlan::build(&net, 2, 5, 2, |_, _| Method::LoweredGemm);
-    let sparse = NetworkPlan::build(&net, 2, 5, 2, |_, _| Method::DirectSparse);
+    let gemm = NetworkPlan::build(&net, 2, 5, |_, _| Method::LoweredGemm);
+    let sparse = NetworkPlan::build(&net, 2, 5, |_, _| Method::DirectSparse);
     let img = {
         let mut v = vec![0.0; gemm.input_dims().len()];
         rng.fill_activations(&mut v);
         v
     };
     for plan in [&gemm, &sparse, &gemm, &sparse] {
-        let mut fresh = WorkspaceArena::for_plan(plan);
-        let want = plan.run_with_input(&img, &mut fresh).to_vec();
-        let got = plan.run_with_input(&img, &mut shared).to_vec();
+        let mut fresh = WorkspaceArena::for_plan(plan, &pool);
+        let want = plan.run_with_input(&img, &pool, &mut fresh).to_vec();
+        let got = plan.run_with_input(&img, &pool, &mut shared).to_vec();
         assert_eq!(got, want);
     }
     // Both plans see the same weights (same seed), so their outputs agree
     // numerically too.
-    let mut a = WorkspaceArena::for_plan(&gemm);
-    let mut b = WorkspaceArena::for_plan(&sparse);
-    let ya = gemm.run_with_input(&img, &mut a).to_vec();
-    let yb = sparse.run_with_input(&img, &mut b).to_vec();
+    let mut a = WorkspaceArena::for_plan(&gemm, &pool);
+    let mut b = WorkspaceArena::for_plan(&sparse, &pool);
+    let ya = gemm.run_with_input(&img, &pool, &mut a).to_vec();
+    let yb = sparse.run_with_input(&img, &pool, &mut b).to_vec();
     for (x, y) in ya.iter().zip(&yb) {
         assert!((x - y).abs() <= 1e-3 + 1e-3 * y.abs().max(x.abs()), "{x} vs {y}");
     }

@@ -1,0 +1,141 @@
+//! Worker-pool runtime properties: tile accounting, telemetry, and the
+//! load-balance claim behind nnz-weighted tiling — one dense output
+//! channel among 95%-sparse channels must not turn into a straggler the
+//! way it does under the seed's equal-plane splitting.
+
+use escoin::config::ConvShape;
+use escoin::conv::{direct_dense, ConvWeights, DirectSparsePlan, LayerPlan, Method};
+use escoin::tensor::{Dims4, Tensor4};
+use escoin::util::{Rng, WorkerPool};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[test]
+fn pool_executes_all_tiles_and_accounts_them() {
+    for threads in [1, 2, 4] {
+        let pool = WorkerPool::new(threads);
+        let sum = AtomicU64::new(0);
+        for job in 0..5u64 {
+            pool.run(13, &|t, w| {
+                assert!(w < pool.workers());
+                sum.fetch_add(job + t as u64, Ordering::Relaxed);
+            });
+        }
+        let expect: u64 = (0..5u64).map(|j| 13 * j + (0..13).sum::<u64>()).sum();
+        assert_eq!(sum.load(Ordering::Relaxed), expect, "t{threads}");
+        let stats = pool.stats();
+        assert_eq!(stats.jobs, 5);
+        assert_eq!(stats.total_tiles(), 65);
+        assert_eq!(
+            stats.total_tiles(),
+            stats.inline_tiles + stats.tiles.iter().sum::<u64>(),
+            "inline + per-worker tiles must sum to the total"
+        );
+    }
+}
+
+/// Weights with one fully dense output channel among 95%-sparse ones —
+/// the skew that motivated nnz-weighted tiling.
+fn skewed_weights(shape: &ConvShape, dense_channel: usize) -> ConvWeights {
+    let per_ch = shape.c_per_group() * shape.r * shape.s;
+    let mut dense = vec![0.0f32; shape.weights()];
+    for m in 0..shape.m {
+        for i in 0..per_ch {
+            // Sparse channels keep 1 in 20 weights (95% sparse).
+            if m == dense_channel || i % 20 == 0 {
+                dense[m * per_ch + i] = 0.25 + ((m * 31 + i * 7) % 13) as f32 * 0.1;
+            }
+        }
+    }
+    ConvWeights::from_dense(shape, dense)
+}
+
+/// Simulate scheduling `weights`-sized tiles onto `workers` lanes the
+/// way the dynamic queue does (each next tile goes to the least-loaded
+/// lane) and return max-lane-load / mean-lane-load.
+fn schedule_imbalance(weights: &[usize], workers: usize) -> f64 {
+    let mut load = vec![0usize; workers];
+    for &w in weights {
+        let min = load
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| **l)
+            .map(|(i, _)| i)
+            .unwrap();
+        load[min] += w;
+    }
+    let total: usize = load.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / workers as f64;
+    *load.iter().max().unwrap() as f64 / mean
+}
+
+/// The ISSUE's stress property: with one dense channel among 95%-sparse
+/// channels, equal-plane splitting leaves one worker with a multiple of
+/// the mean FLOPs, while the plan's nnz-weighted tiles schedule to
+/// near-equal per-worker work. Asserted on tile nnz weights — not
+/// wall-clock.
+#[test]
+fn nnz_weighted_tiling_beats_equal_plane_splitting_on_skewed_sparsity() {
+    // 64 channels over 16 input channels of 3x3 taps = 144 weights per
+    // channel; channel 11 fully dense, the rest ~95% sparse.
+    let shape = ConvShape::new(16, 64, 10, 10, 3, 3, 1, 1);
+    let w = skewed_weights(&shape, 11);
+    let plan = DirectSparsePlan::build(&shape, &w);
+    let tiles = plan.tiles();
+    let tile_nnz = plan.tile_nnz();
+    let workers = 4;
+
+    // Enough tiles for the dynamic queue to rebalance around.
+    assert!(tiles.len() > workers, "only {} tiles", tiles.len());
+
+    // Equal-plane splitting: contiguous chunks of M/workers channels.
+    let per_ch: Vec<usize> = {
+        let banks = plan.banks();
+        let mg = shape.m_per_group();
+        (0..shape.m)
+            .map(|m| banks[m / mg].csr.row_nnz(m % mg))
+            .collect()
+    };
+    let chunk = shape.m.div_ceil(workers);
+    let equal_plane: Vec<usize> = per_ch.chunks(chunk).map(|c| c.iter().sum()).collect();
+    let equal_imbalance = schedule_imbalance(&equal_plane, workers);
+
+    let weighted_imbalance = schedule_imbalance(tile_nnz, workers);
+
+    assert!(
+        equal_imbalance > 1.5,
+        "skew did not unbalance equal-plane splitting ({equal_imbalance:.2})"
+    );
+    assert!(
+        weighted_imbalance < 1.25,
+        "nnz-weighted tiles still unbalanced ({weighted_imbalance:.2})"
+    );
+    assert!(
+        weighted_imbalance < equal_imbalance,
+        "weighted {weighted_imbalance:.2} vs equal-plane {equal_imbalance:.2}"
+    );
+}
+
+/// The skewed layer must also *compute* correctly through the pool at
+/// several worker counts, byte-identical to the single-thread run.
+#[test]
+fn skewed_layer_is_correct_and_deterministic_through_the_pool() {
+    let shape = ConvShape::new(16, 64, 10, 10, 3, 3, 1, 1);
+    let w = skewed_weights(&shape, 11);
+    let mut rng = Rng::new(3);
+    let x = Tensor4::random_activations(Dims4::new(2, 16, 10, 10), &mut rng);
+    let want = direct_dense(&shape, &x, &w);
+    let plan = LayerPlan::build(&shape, &w, Method::DirectSparse);
+    let reference = plan.run(&x, &WorkerPool::new(1));
+    assert!(reference.allclose(&want, 1e-3, 1e-4));
+    for threads in [2, 4, 16] {
+        let pool = WorkerPool::new(threads);
+        let got = plan.run(&x, &pool);
+        assert_eq!(got.data(), reference.data(), "t{threads}");
+        // Multi-worker jobs ran, and every tile is accounted for.
+        let stats = pool.stats();
+        assert!(stats.total_tiles() > 0);
+    }
+}
