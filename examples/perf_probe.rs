@@ -3,13 +3,23 @@
 //! `BENCH_sconv.json` (per-shape ns/iter) so future PRs can diff against
 //! a recorded baseline.
 //!
-//! Two row families:
+//! Four row families:
 //! * `gemm`/`spmm`/`sconv` — compiled plan on a **shared pool** vs the
 //!   seed free functions (which re-pad, allocate, and spawn an
 //!   ephemeral pool per call).
 //! * `sconv-pool` — the worker-pool headline: per-call thread spawning
 //!   (`free_ns`) vs the persistent shared pool (`plan_ns`) at batch 1
 //!   (the serving path that motivated the pool) and batch 8.
+//! * `serve-pipeline-b1`/`b8` — end-to-end serving ns/request on a
+//!   paced request stream: sequential executor (`free_ns`,
+//!   `pipeline_depth = 1`) vs the two-slot pipeline (`plan_ns`,
+//!   `pipeline_depth = 2`) that overlaps batch N+1's head layers and
+//!   batch formation with batch N's tail layers.
+//! * `replan-full-vs-incremental` — ns per server replan: rebuilding
+//!   every layer from scratch (`free_ns`, weights regenerated +
+//!   re-transformed, what `build_plan` used to do) vs an incremental
+//!   replan through the shared `PlanCache` (`plan_ns`, only the flipped
+//!   layer compiles).
 //!
 //! ```text
 //! cargo run --release --example perf_probe [--out PATH]
@@ -18,13 +28,15 @@
 //! Knobs: `ESCOIN_THREADS`, `ESCOIN_BENCH_WARMUP`, `ESCOIN_BENCH_ITERS`.
 
 use escoin::bench_harness::{bench_median, BenchOpts};
-use escoin::config::ConvShape;
+use escoin::config::{alexnet, ConvShape};
 use escoin::conv::{
     lowered_gemm_parallel, lowered_spmm_parallel, sconv_parallel, ConvWeights, LayerPlan, Method,
-    Workspace,
+    NetworkPlan, PlanCache, Workspace,
 };
+use escoin::coordinator::{BatcherConfig, RouterConfig, ServerConfig, ServerHandle};
 use escoin::tensor::{Dims4, Tensor4};
 use escoin::util::{default_threads, Rng, WorkerPool};
+use std::time::{Duration, Instant};
 
 struct Row {
     shape: &'static str,
@@ -146,6 +158,80 @@ fn main() {
         }
     }
 
+    // Serving-pipeline headline: ns/request over a paced open-loop
+    // stream, sequential executor vs the two-slot pipeline. Pacing
+    // (rather than blasting the queue full) is what exposes the win:
+    // the pipeline overlaps batch formation and the next batch's head
+    // layers with the current batch's tail layers.
+    for (batch, label) in [(1usize, "serve-pipeline-b1"), (8usize, "serve-pipeline-b8")] {
+        let requests = 64usize;
+        let pace = Duration::from_micros(150);
+        let wall = |depth: usize| -> Duration {
+            let mut runs: Vec<Duration> = (0..3)
+                .map(|run| serve_wall(depth, batch, threads, requests, pace, run as u64))
+                .collect();
+            runs.sort();
+            runs[1]
+        };
+        let sequential = wall(1);
+        let pipelined = wall(2);
+        rows.push(Row {
+            shape: "minicnn_paced_64req",
+            method: label,
+            batch,
+            free_ns: (sequential.as_nanos() / requests as u128).max(1),
+            plan_ns: (pipelined.as_nanos() / requests as u128).max(1),
+        });
+        println!(
+            "{label}: sequential {sequential:?}  pipelined {pipelined:?} for {requests} reqs ({:.2}x)",
+            sequential.as_secs_f64() / pipelined.as_secs_f64().max(1e-12)
+        );
+    }
+
+    // Replan cost: the old executor rebuilt every layer (weights
+    // regenerated, operands re-stretched / re-CSR'd) on any router
+    // flip; the PlanCache rebuilds only the flipped layer.
+    {
+        let net = alexnet();
+        let serve_batch = 4usize;
+        let full = bench_median(bench, || {
+            NetworkPlan::build(&net, serve_batch, 42, |_, _| Method::DirectSparse)
+        });
+        let cache = PlanCache::build(&net, 42);
+        // Prime both assignments so the loop below measures the
+        // steady-state incremental replan (assemble + one cached flip).
+        let _ = cache.network_plan(&net, serve_batch, |_, _| Method::DirectSparse);
+        let _ = cache.network_plan(&net, serve_batch, |n, _| {
+            if n == "conv3" {
+                Method::LoweredSpmm
+            } else {
+                Method::DirectSparse
+            }
+        });
+        let mut flip = false;
+        let incremental = bench_median(bench, || {
+            flip = !flip;
+            cache.network_plan(&net, serve_batch, |n, _| {
+                if flip && n == "conv3" {
+                    Method::LoweredSpmm
+                } else {
+                    Method::DirectSparse
+                }
+            })
+        });
+        rows.push(Row {
+            shape: "alexnet_b4",
+            method: "replan-full-vs-incremental",
+            batch: serve_batch,
+            free_ns: full.as_nanos(),
+            plan_ns: incremental.as_nanos(),
+        });
+        println!(
+            "replan alexnet b{serve_batch}: full rebuild {full:?}  incremental {incremental:?} ({:.1}x)",
+            full.as_secs_f64() / incremental.as_secs_f64().max(1e-12)
+        );
+    }
+
     let mut json = String::from("{\n  \"bench\": \"sconv\",\n  \"unit\": \"ns_per_iter\",\n");
     json.push_str(&format!(
         "  \"threads\": {threads},\n  \"batch\": {batch},\n  \"iters\": {},\n  \"rows\": [\n",
@@ -182,4 +268,48 @@ fn main() {
     if plan > free {
         eprintln!("WARNING: plan-based sconv slower than the seed free-function path");
     }
+}
+
+/// Wall time to serve `requests` paced submissions (one every `pace`)
+/// through a minicnn server at the given pipeline depth — replans and
+/// exploration disabled so both depths execute the identical plan.
+fn serve_wall(
+    depth: usize,
+    batch: usize,
+    threads: usize,
+    requests: usize,
+    pace: Duration,
+    seed: u64,
+) -> Duration {
+    let server = ServerHandle::start(ServerConfig {
+        network: "minicnn".into(),
+        batcher: BatcherConfig {
+            batch_size: batch,
+            max_wait: Duration::from_millis(1),
+        },
+        weight_seed: 42,
+        threads,
+        router: RouterConfig {
+            explore_every: 0,
+            ..Default::default()
+        },
+        replan_every: 0,
+        pipeline_depth: depth,
+    })
+    .expect("server start");
+    let mut rng = Rng::new(100 + seed);
+    let elems = server.image_elems();
+    let images: Vec<Vec<f32>> = (0..requests).map(|_| rng.activation_vec(elems)).collect();
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for img in images {
+        pending.push(server.submit(img).expect("submit"));
+        std::thread::sleep(pace);
+    }
+    for rx in pending {
+        rx.recv().expect("response");
+    }
+    let wall = t0.elapsed();
+    server.shutdown().expect("shutdown");
+    wall
 }

@@ -79,9 +79,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("latency p99:    {:.2} ms", p(0.99));
     println!("batches:        {} (padded slots {})", m.batches, m.padded_slots);
     let stats = server.shutdown()?;
-    println!("plan build:     {:?}", stats.plan_build_time);
-    println!("replans:        {}", stats.replans);
     let s = &stats.snapshot;
+    println!("plan build:     {:?}", stats.plan_build_time);
+    println!(
+        "replans:        {} ({} layer plans rebuilt, {:?} spent rebuilding)",
+        stats.replans, s.replan_layers_rebuilt, s.replan_build_time
+    );
     println!(
         "pool:           {} workers, {} tiles ({} stolen), imbalance {:.2}",
         s.pool_workers, s.pool_tiles, s.pool_steals, s.pool_imbalance

@@ -11,10 +11,15 @@ use crate::util::Rng;
 /// One model's Fig 10 data point.
 #[derive(Clone, Debug)]
 pub struct Fig10Row {
+    /// Network name.
     pub model: String,
+    /// csrmm read-only (texture) cache hit rate.
     pub csrmm_ro: f64,
+    /// csrmm L2 hit rate.
     pub csrmm_l2: f64,
+    /// sconv read-only (texture) cache hit rate.
     pub sconv_ro: f64,
+    /// sconv L2 hit rate.
     pub sconv_l2: f64,
 }
 

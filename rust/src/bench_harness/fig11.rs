@@ -11,9 +11,13 @@ use std::time::Duration;
 /// One model's Fig 11 data point.
 #[derive(Clone, Debug)]
 pub struct Fig11Row {
+    /// Network name.
     pub model: String,
+    /// Whole-iteration time under im2col + dense GEMM (CUBLAS proxy).
     pub cublas: Duration,
+    /// Whole-iteration time under im2col + CSR SpMM (CUSPARSE proxy).
     pub cusparse: Duration,
+    /// Whole-iteration time under direct sparse convolution (Escoin).
     pub escoin: Duration,
     /// Fraction of CUBLAS time spent in sparse CONV layers — the paper's
     /// §4.4 explanation of why whole-network speedups dilute.
@@ -21,10 +25,12 @@ pub struct Fig11Row {
 }
 
 impl Fig11Row {
+    /// Whole-network speedup of CUSPARSE lowering over CUBLAS.
     pub fn speedup_cusparse(&self) -> f64 {
         self.cublas.as_secs_f64() / self.cusparse.as_secs_f64()
     }
 
+    /// Whole-network speedup of Escoin over CUBLAS.
     pub fn speedup_escoin(&self) -> f64 {
         self.cublas.as_secs_f64() / self.escoin.as_secs_f64()
     }

@@ -18,18 +18,24 @@ use std::time::Duration;
 /// One model's Fig 8 data point.
 #[derive(Clone, Debug)]
 pub struct Fig8Row {
+    /// Network name.
     pub model: String,
+    /// Sparse-CONV time under im2col + dense GEMM (CUBLAS proxy).
     pub cublas: Duration,
+    /// Sparse-CONV time under im2col + CSR SpMM (CUSPARSE proxy).
     pub cusparse: Duration,
+    /// Sparse-CONV time under direct sparse convolution (Escoin).
     pub escoin: Duration,
 }
 
 impl Fig8Row {
-    /// Speedups normalised to CUBLAS (the paper's presentation).
+    /// Speedup of CUSPARSE lowering, normalised to CUBLAS (the paper's
+    /// presentation).
     pub fn speedup_cusparse(&self) -> f64 {
         self.cublas.as_secs_f64() / self.cusparse.as_secs_f64()
     }
 
+    /// Speedup of Escoin, normalised to CUBLAS.
     pub fn speedup_escoin(&self) -> f64 {
         self.cublas.as_secs_f64() / self.escoin.as_secs_f64()
     }
@@ -38,10 +44,13 @@ impl Fig8Row {
 /// Workload knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct Fig8Opts {
+    /// Images per timed execution.
     pub batch: usize,
     /// Divide spatial dims by this factor (1 = paper-native).
     pub spatial_scale: usize,
+    /// Worker-pool size.
     pub threads: usize,
+    /// Warmup/iteration policy.
     pub bench: BenchOpts,
 }
 

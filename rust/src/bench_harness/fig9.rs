@@ -12,17 +12,21 @@ use std::time::Duration;
 /// One (model, approach) breakdown.
 #[derive(Clone, Debug)]
 pub struct Fig9Row {
+    /// Network name.
     pub model: String,
+    /// Approach label (`cublas`, `cusparse`, `escoin`).
     pub approach: &'static str,
     /// kernel name -> total time over all sparse CONV layers.
     pub kernels: HashMap<String, Duration>,
 }
 
 impl Fig9Row {
+    /// Sum over every kernel bucket.
     pub fn total(&self) -> Duration {
         self.kernels.values().sum()
     }
 
+    /// One kernel's share of the total (0.0 when absent).
     pub fn fraction(&self, kernel: &str) -> f64 {
         let total = self.total().as_secs_f64().max(1e-12);
         self.kernels

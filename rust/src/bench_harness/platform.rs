@@ -7,8 +7,11 @@ use super::report::Table;
 /// Description of the machine running the benches.
 #[derive(Clone, Debug)]
 pub struct Testbed {
+    /// CPU model string from /proc/cpuinfo.
     pub cpu_model: String,
+    /// Logical core count.
     pub logical_cores: usize,
+    /// Execution backend label (native kernels vs PJRT).
     pub backend: String,
 }
 

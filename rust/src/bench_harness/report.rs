@@ -3,12 +3,16 @@
 /// A simple column-aligned table.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// Caption printed above the table.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (each sized to the header count).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with a title and headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -17,6 +21,7 @@ impl Table {
         }
     }
 
+    /// Append one row; panics on column-count mismatch.
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells);

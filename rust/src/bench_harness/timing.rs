@@ -10,7 +10,9 @@ use std::time::{Duration, Instant};
 /// Repetition policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchOpts {
+    /// Untimed warmup runs before measurement.
     pub warmup: usize,
+    /// Timed runs the median is taken over.
     pub iters: usize,
 }
 

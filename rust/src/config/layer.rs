@@ -57,12 +57,14 @@ impl ConvShape {
         }
     }
 
+    /// Builder: set the filter group count (must divide C and M).
     pub fn with_groups(mut self, groups: usize) -> Self {
         assert!(groups > 0 && self.c % groups == 0 && self.m % groups == 0);
         self.groups = groups;
         self
     }
 
+    /// Builder: mark the layer as pruned to `sparsity` (in `[0, 1)`).
     pub fn with_sparsity(mut self, sparsity: f32) -> Self {
         assert!((0.0..1.0).contains(&sparsity));
         self.sparsity = sparsity;
@@ -157,11 +159,14 @@ impl std::fmt::Display for ConvShape {
 /// as a GEMM in the fig. 11 whole-network runs).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct FcShape {
+    /// Input feature count.
     pub in_features: usize,
+    /// Output feature count.
     pub out_features: usize,
 }
 
 impl FcShape {
+    /// An `in_features -> out_features` dense layer.
     pub fn new(in_features: usize, out_features: usize) -> Self {
         Self {
             in_features,
@@ -169,10 +174,12 @@ impl FcShape {
         }
     }
 
+    /// Dense weight count (`in * out`).
     pub fn weights(&self) -> usize {
         self.in_features * self.out_features
     }
 
+    /// Multiply-accumulate count for a batch of `n` images.
     pub fn macs(&self, n: usize) -> usize {
         n * self.weights()
     }
@@ -181,24 +188,35 @@ impl FcShape {
 /// Pooling flavour (only affects the modelled cost of non-CONV layers).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PoolKind {
+    /// Max pooling.
     Max,
+    /// Average pooling (count includes only in-bounds taps).
     Avg,
 }
 
 /// One network layer, as enumerated by the network tables.
 #[derive(Clone, Debug, PartialEq)]
 pub enum LayerKind {
+    /// A convolution layer (the paper's subject).
     Conv(ConvShape),
+    /// A fully-connected layer.
     Fc(FcShape),
     /// Pooling over `c` channels of `h x w` with a `k x k` window, stride
     /// `stride`, padding `pad`.
     Pool {
+        /// Max or average.
         kind: PoolKind,
+        /// Input channels.
         c: usize,
+        /// Input height.
         h: usize,
+        /// Input width.
         w: usize,
+        /// Window size (square).
         k: usize,
+        /// Window stride.
         stride: usize,
+        /// Zero padding on every spatial side.
         pad: usize,
     },
     /// Elementwise ReLU over `elems` activations.
@@ -219,6 +237,7 @@ impl LayerKind {
         }
     }
 
+    /// Weight count (0 for weight-less layer kinds).
     pub fn weights(&self) -> usize {
         match self {
             LayerKind::Conv(c) => c.weights(),
@@ -227,6 +246,7 @@ impl LayerKind {
         }
     }
 
+    /// The CONV shape, when this layer is a convolution.
     pub fn as_conv(&self) -> Option<&ConvShape> {
         match self {
             LayerKind::Conv(c) => Some(c),

@@ -6,11 +6,14 @@ use super::layer::LayerKind;
 /// One named layer of a network.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Layer {
+    /// Layer name as the paper's tables spell it (e.g. `conv2`).
     pub name: String,
+    /// The layer's kind and geometry.
     pub kind: LayerKind,
 }
 
 impl Layer {
+    /// A named layer.
     pub fn new(name: impl Into<String>, kind: LayerKind) -> Self {
         Self {
             name: name.into(),
@@ -22,15 +25,20 @@ impl Layer {
 /// A full network: ordered layers, as enumerated in `networks.rs`.
 #[derive(Clone, Debug)]
 pub struct Network {
+    /// Network name (`alexnet`, `googlenet`, `resnet50`, `minicnn`).
     pub name: String,
+    /// Layers in execution order.
     pub layers: Vec<Layer>,
 }
 
 /// The row this network contributes to the paper's Table 3.
 #[derive(Clone, Debug, PartialEq)]
 pub struct NetworkSummary {
+    /// Network name.
     pub name: String,
+    /// Total CONV layer count.
     pub conv_layers: usize,
+    /// CONV layers the paper counts as pruned/sparse.
     pub sparse_conv_layers: usize,
     /// Total weights (Conv + FC), matching the paper's "Weights" column.
     pub weights: usize,
@@ -78,6 +86,7 @@ impl Network {
         conv as f64 / total.max(1) as f64
     }
 
+    /// The CONV shape of the layer called `name`, if it exists.
     pub fn find_conv(&self, name: &str) -> Option<&super::ConvShape> {
         self.layers
             .iter()

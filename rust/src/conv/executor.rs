@@ -14,13 +14,27 @@
 //! [`LayerPlan`]s (built once, shared via `Arc`) plus native FC / pool /
 //! ReLU / LRN steps, walked in order. The scheduler, the serving
 //! executor, and the figure benches all run networks through it.
+//!
+//! Two pieces make the serving pipeline possible (see
+//! `ARCHITECTURE.md`):
+//!
+//! * [`PlanCursor`] — a resumable walk over a plan's steps: the serving
+//!   executor interleaves `step` calls from two in-flight batches so
+//!   batch N+1's head layers run between batch N's tail layers on the
+//!   shared pool, instead of strictly one batch at a time.
+//! * [`PlanCache`] — the per-`(layer, method)` compiled-plan cache
+//!   shared by the scheduler and the server: weights are materialised
+//!   once per network, and a router flip recompiles only the flipped
+//!   layer instead of regenerating and re-transforming every operand.
 
 use super::plan::{LayerPlan, Method};
 use crate::config::{ConvShape, FcShape, Layer, LayerKind, Network, PoolKind};
 use crate::conv::weights::ConvWeights;
 use crate::tensor::Dims4;
 use crate::util::{Rng, Stopwatch, WorkerPool};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// A flat float arena. Grows monotonically via [`Workspace::ensure`];
@@ -31,10 +45,12 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// An empty arena (grows on first [`Workspace::ensure`]).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// An arena pre-sized to `floats`.
     pub fn with_capacity(floats: usize) -> Self {
         Self {
             buf: vec![0.0; floats],
@@ -53,6 +69,7 @@ impl Workspace {
         self.buf.len()
     }
 
+    /// The whole arena as a mutable slice for executors to carve.
     pub fn buf_mut(&mut self) -> &mut [f32] {
         &mut self.buf
     }
@@ -98,6 +115,7 @@ pub struct WorkspaceArena {
 }
 
 impl WorkspaceArena {
+    /// An empty arena, sized lazily on first run.
     pub fn new() -> Self {
         Self::default()
     }
@@ -155,15 +173,20 @@ struct PlanStep {
 /// [`NetworkPlan::from_parts`] (the scheduler passes its prebuilt /
 /// cached weights; [`NetworkPlan::build`] generates synthetic ones).
 pub enum WeightedOp {
+    /// A compiled CONV-layer plan (operands pre-transformed).
     Conv(Arc<LayerPlan>),
+    /// Dense FC weights, `out_features * in_features` row-major.
     Fc(Arc<Vec<f32>>),
 }
 
 /// One executed layer, reported by [`NetworkPlan::run_timed`] and
 /// [`NetworkPlan::run_serving`].
 pub struct PlanLayerRun<'a> {
+    /// Layer name.
     pub layer: &'a str,
+    /// Execution method (CONV layers only).
     pub method: Option<Method>,
+    /// Total layer wall time.
     pub total: Duration,
     /// Sub-kernel laps (`pad_in`, `im2col`, `sgemm`, `csrmm`, `sconv`,
     /// `winograd`, `relu`, `pool`, `lrn`, `fc`). `None` when the run asked
@@ -175,7 +198,9 @@ pub struct PlanLayerRun<'a> {
 
 /// A compiled whole-network execution plan for a fixed batch size.
 pub struct NetworkPlan {
+    /// Name of the network this plan compiles.
     pub network_name: String,
+    /// The fixed batch size the plan executes.
     pub batch: usize,
     steps: Vec<PlanStep>,
     input_dims: Dims4,
@@ -407,9 +432,50 @@ impl NetworkPlan {
         mut observer: Option<&mut dyn FnMut(PlanLayerRun)>,
         kernel_laps: bool,
     ) -> &'a [f32] {
-        if let Some(inp) = input {
-            assert_eq!(inp.len(), self.input_dims.len(), "input length");
-        }
+        let mut cursor = self.begin_run(input, pool, arena);
+        while self.step(
+            &mut cursor,
+            pool,
+            arena,
+            observer.as_mut().map(|o| &mut **o),
+            kernel_laps,
+        ) {}
+        self.finish(&cursor, arena)
+    }
+
+    /// Number of layer steps a full run executes (every layer kind, not
+    /// just CONV).
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// The shared per-CONV-layer plans, in layer order — exposed so the
+    /// incremental-replan tests can assert `Arc` identity (an untouched
+    /// layer must keep its pointer across a replan).
+    pub fn conv_plans(&self) -> Vec<(String, Arc<LayerPlan>)> {
+        self.steps
+            .iter()
+            .filter_map(|s| match &s.op {
+                PlanOp::Conv { plan } => Some((s.name.clone(), plan.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Start a resumable walk over this plan's steps: size `arena`,
+    /// stage the external input (when given) into the ping buffer, and
+    /// return the cursor positioned before the first layer.
+    ///
+    /// Drive it with [`NetworkPlan::step`] until it returns `false`,
+    /// then read the logits with [`NetworkPlan::finish`] — exactly what
+    /// [`NetworkPlan::run_serving`] does in a loop, and what the serving
+    /// executor's two-slot pipeline interleaves across batches.
+    pub fn begin_run(
+        &self,
+        input: Option<&[f32]>,
+        pool: &WorkerPool,
+        arena: &mut WorkspaceArena,
+    ) -> PlanCursor {
         let act = self.max_activation_floats();
         if arena.ping.len() < act {
             arena.ping.resize(act, 0.0);
@@ -419,134 +485,299 @@ impl NetworkPlan {
         }
         arena.ws.ensure(self.workspace_floats(pool.workers()));
 
-        let mut rng = Rng::new(self.input_seed);
-        let mut cur_is_ping = true;
-        let mut cur_dims: Option<Dims4> = None;
-        let mut first = true;
+        let mut cur_dims = None;
+        if let Some(inp) = input {
+            assert_eq!(inp.len(), self.input_dims.len(), "input length");
+            let in_len = self.steps[0].in_dims.len();
+            arena.ping[..in_len].copy_from_slice(inp);
+            cur_dims = Some(self.steps[0].in_dims);
+        }
+        PlanCursor {
+            step_idx: 0,
+            num_steps: self.steps.len(),
+            cur_is_ping: true,
+            cur_dims,
+            rng: Rng::new(self.input_seed),
+        }
+    }
 
-        for step in &self.steps {
-            let timed = observer.is_some() && kernel_laps;
-            let mut sw = if timed { Some(Stopwatch::new()) } else { None };
-            let t0 = Instant::now();
-            let in_len = step.in_dims.len();
-            let out_len = step.out_dims.len();
+    /// Execute the cursor's next layer step. Returns `false` (without
+    /// touching the arena) once every step has run. The cursor must
+    /// have been created by [`NetworkPlan::begin_run`] on this plan,
+    /// and `arena` must be the same arena throughout the walk.
+    pub fn step(
+        &self,
+        cursor: &mut PlanCursor,
+        pool: &WorkerPool,
+        arena: &mut WorkspaceArena,
+        mut observer: Option<&mut dyn FnMut(PlanLayerRun)>,
+        kernel_laps: bool,
+    ) -> bool {
+        let Some(step) = self.steps.get(cursor.step_idx) else {
+            return false;
+        };
+        let timed = observer.is_some() && kernel_laps;
+        let mut sw = if timed { Some(Stopwatch::new()) } else { None };
+        let t0 = Instant::now();
+        let in_len = step.in_dims.len();
+        let out_len = step.out_dims.len();
 
-            // Feed the step: chain the previous output when its shape
-            // matches, otherwise synthesise a fresh input (branch layers),
-            // or copy the external input on the first step.
-            let matches = match cur_dims {
-                None => false,
-                Some(d) => match step.matching {
-                    MatchMode::Exact => d == step.in_dims,
-                    MatchMode::Elems => d.n == self.batch && d.chw() == step.in_dims.chw(),
-                },
+        // Feed the step: chain the previous output when its shape
+        // matches, otherwise synthesise a fresh input (branch layers;
+        // an external input was staged by `begin_run`).
+        let matches = match cursor.cur_dims {
+            None => false,
+            Some(d) => match step.matching {
+                MatchMode::Exact => d == step.in_dims,
+                MatchMode::Elems => d.n == self.batch && d.chw() == step.in_dims.chw(),
+            },
+        };
+        if !matches {
+            let cur = if cursor.cur_is_ping {
+                &mut arena.ping
+            } else {
+                &mut arena.pong
             };
-            if !matches {
-                let cur = if cur_is_ping {
+            cursor.rng.fill_activations(&mut cur[..in_len]);
+            cursor.cur_dims = Some(step.in_dims);
+        }
+
+        let mut method = None;
+        match &step.op {
+            PlanOp::Relu | PlanOp::Lrn => {
+                // Elementwise, in place: no ping-pong swap, and the
+                // (possibly non-flat) incoming dims are preserved.
+                let cur = if cursor.cur_is_ping {
                     &mut arena.ping
                 } else {
                     &mut arena.pong
                 };
-                if first && input.is_some() {
-                    cur[..in_len].copy_from_slice(input.unwrap());
+                let name = if matches!(step.op, PlanOp::Lrn) {
+                    "lrn"
                 } else {
-                    rng.fill_activations(&mut cur[..in_len]);
-                }
-                cur_dims = Some(step.in_dims);
-            }
-            first = false;
-
-            let mut method = None;
-            match &step.op {
-                PlanOp::Relu | PlanOp::Lrn => {
-                    // Elementwise, in place: no ping-pong swap, and the
-                    // (possibly non-flat) incoming dims are preserved.
-                    let cur = if cur_is_ping {
-                        &mut arena.ping
-                    } else {
-                        &mut arena.pong
-                    };
-                    let name = if matches!(step.op, PlanOp::Lrn) {
-                        "lrn"
-                    } else {
-                        "relu"
-                    };
-                    lap(&mut sw, name, || match &step.op {
-                        PlanOp::Lrn => {
-                            for v in &mut cur[..in_len] {
-                                // LRN modelled as a 5-op/element pass.
-                                let x2 = *v * *v;
-                                *v /= (1.0 + 1e-4 * x2).powf(0.75);
-                            }
+                    "relu"
+                };
+                lap(&mut sw, name, || match &step.op {
+                    PlanOp::Lrn => {
+                        for v in &mut cur[..in_len] {
+                            // LRN modelled as a 5-op/element pass.
+                            let x2 = *v * *v;
+                            *v /= (1.0 + 1e-4 * x2).powf(0.75);
                         }
-                        _ => {
-                            for v in &mut cur[..in_len] {
+                    }
+                    _ => {
+                        for v in &mut cur[..in_len] {
+                            *v = v.max(0.0);
+                        }
+                    }
+                });
+            }
+            _ => {
+                let (src, dst, ws) = if cursor.cur_is_ping {
+                    (&mut arena.ping, &mut arena.pong, &mut arena.ws)
+                } else {
+                    (&mut arena.pong, &mut arena.ping, &mut arena.ws)
+                };
+                let src = &src[..in_len];
+                let dst = &mut dst[..out_len];
+                match &step.op {
+                    PlanOp::Conv { plan } => {
+                        method = Some(plan.method());
+                        plan.execute_into(self.batch, src, pool, ws, dst, sw.as_mut());
+                        // ReLU follows every conv in all three
+                        // networks (seed scheduler behaviour).
+                        lap(&mut sw, "relu", || {
+                            for v in dst.iter_mut() {
                                 *v = v.max(0.0);
                             }
-                        }
-                    });
-                }
-                _ => {
-                    let (src, dst, ws) = if cur_is_ping {
-                        (&mut arena.ping, &mut arena.pong, &mut arena.ws)
-                    } else {
-                        (&mut arena.pong, &mut arena.ping, &mut arena.ws)
-                    };
-                    let src = &src[..in_len];
-                    let dst = &mut dst[..out_len];
-                    match &step.op {
-                        PlanOp::Conv { plan } => {
-                            method = Some(plan.method());
-                            plan.execute_into(self.batch, src, pool, ws, dst, sw.as_mut());
-                            // ReLU follows every conv in all three
-                            // networks (seed scheduler behaviour).
-                            lap(&mut sw, "relu", || {
-                                for v in dst.iter_mut() {
-                                    *v = v.max(0.0);
-                                }
-                            });
-                        }
-                        PlanOp::Fc { fc, w } => {
-                            lap(&mut sw, "fc", || fc_into(fc, w, self.batch, src, dst));
-                        }
-                        PlanOp::Pool {
-                            kind,
-                            k,
-                            stride,
-                            pad,
-                        } => {
-                            lap(&mut sw, "pool", || {
-                                pool_into(
-                                    *kind,
-                                    *k,
-                                    *stride,
-                                    *pad,
-                                    step.in_dims,
-                                    step.out_dims,
-                                    src,
-                                    dst,
-                                )
-                            });
-                        }
-                        _ => unreachable!(),
+                        });
                     }
-                    cur_is_ping = !cur_is_ping;
-                    cur_dims = Some(step.out_dims);
+                    PlanOp::Fc { fc, w } => {
+                        lap(&mut sw, "fc", || fc_into(fc, w, self.batch, src, dst));
+                    }
+                    PlanOp::Pool {
+                        kind,
+                        k,
+                        stride,
+                        pad,
+                    } => {
+                        lap(&mut sw, "pool", || {
+                            pool_into(
+                                *kind,
+                                *k,
+                                *stride,
+                                *pad,
+                                step.in_dims,
+                                step.out_dims,
+                                src,
+                                dst,
+                            )
+                        });
+                    }
+                    _ => unreachable!(),
                 }
-            }
-
-            if let Some(obs) = observer.as_mut() {
-                obs(PlanLayerRun {
-                    layer: &step.name,
-                    method,
-                    total: t0.elapsed(),
-                    kernels: sw.as_ref(),
-                });
+                cursor.cur_is_ping = !cursor.cur_is_ping;
+                cursor.cur_dims = Some(step.out_dims);
             }
         }
 
-        let cur = if cur_is_ping { &arena.ping } else { &arena.pong };
+        if let Some(obs) = observer.as_mut() {
+            obs(PlanLayerRun {
+                layer: &step.name,
+                method,
+                total: t0.elapsed(),
+                kernels: sw.as_ref(),
+            });
+        }
+        cursor.step_idx += 1;
+        true
+    }
+
+    /// The final activation slice of a completed walk, resident in
+    /// `arena`. Panics (debug) if the cursor has steps left.
+    pub fn finish<'a>(&self, cursor: &PlanCursor, arena: &'a WorkspaceArena) -> &'a [f32] {
+        debug_assert!(cursor.is_done(), "finish() before the walk completed");
+        let cur = if cursor.cur_is_ping {
+            &arena.ping
+        } else {
+            &arena.pong
+        };
         &cur[..self.output_dims.len()]
+    }
+}
+
+/// Resumable position inside one [`NetworkPlan`] walk (see
+/// [`NetworkPlan::begin_run`]): which step runs next, which activation
+/// buffer currently holds the live tensor, and the synthetic-input RNG
+/// mid-stream. Holding the walk state *outside* the plan is what lets
+/// the serving executor keep two batches in flight on one shared plan,
+/// each with its own cursor + arena.
+pub struct PlanCursor {
+    step_idx: usize,
+    num_steps: usize,
+    cur_is_ping: bool,
+    cur_dims: Option<Dims4>,
+    rng: Rng,
+}
+
+impl PlanCursor {
+    /// Layer steps already executed.
+    pub fn steps_done(&self) -> usize {
+        self.step_idx
+    }
+
+    /// Whether every layer step has run (the walk may be
+    /// [`NetworkPlan::finish`]ed).
+    pub fn is_done(&self) -> bool {
+        self.step_idx >= self.num_steps
+    }
+}
+
+/// Shared compiled-plan cache for one network's weights: materialises
+/// synthetic weights once (seeded, walked in layer order — the same
+/// stream [`NetworkPlan::build`] consumes, so logits are unchanged),
+/// then hands out one [`Arc<LayerPlan>`] per `(layer, method)` ever
+/// requested.
+///
+/// Both the scheduler ([`crate::coordinator::NetworkSchedule`]) and the
+/// serving executor replan through this cache, which is what makes a
+/// replan *incremental*: a router flip on one layer compiles exactly
+/// one new `LayerPlan` (or zero, if that `(layer, method)` was used
+/// before) — every other layer keeps its `Arc` pointer, and no weight
+/// is regenerated or re-stretched. [`PlanCache::layer_builds`] counts
+/// compilations so callers can report how many layers a replan rebuilt.
+pub struct PlanCache {
+    conv_weights: HashMap<String, Arc<ConvWeights>>,
+    fc_weights: HashMap<String, Arc<Vec<f32>>>,
+    plans: Mutex<HashMap<(String, Method), Arc<LayerPlan>>>,
+    layer_builds: AtomicU64,
+}
+
+impl PlanCache {
+    /// Materialise synthetic pruned weights for every CONV/FC layer of
+    /// `network` (one RNG walked in layer order, like the seed
+    /// scheduler), with an empty plan cache.
+    pub fn build(network: &Network, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut conv_weights = HashMap::new();
+        let mut fc_weights = HashMap::new();
+        for layer in &network.layers {
+            match &layer.kind {
+                LayerKind::Conv(shape) => {
+                    let w = Arc::new(ConvWeights::synthetic(shape, &mut rng));
+                    conv_weights.insert(layer.name.clone(), w);
+                }
+                LayerKind::Fc(fc) => {
+                    fc_weights.insert(layer.name.clone(), Arc::new(rng.normal_vec(fc.weights())));
+                }
+                _ => {}
+            }
+        }
+        Self {
+            conv_weights,
+            fc_weights,
+            plans: Mutex::new(HashMap::new()),
+            layer_builds: AtomicU64::new(0),
+        }
+    }
+
+    /// The materialised weights for a CONV layer, if it exists.
+    pub fn conv_weights(&self, layer: &str) -> Option<&Arc<ConvWeights>> {
+        self.conv_weights.get(layer)
+    }
+
+    /// The materialised weights for an FC layer, if it exists.
+    pub fn fc_weights(&self, layer: &str) -> Option<&Arc<Vec<f32>>> {
+        self.fc_weights.get(layer)
+    }
+
+    /// The compiled plan for `(layer, method)`, built (and counted) on
+    /// first request, shared by `Arc` thereafter. Panics if `name` is
+    /// not a CONV layer of the cached network.
+    pub fn plan_for(&self, name: &str, shape: &ConvShape, method: Method) -> Arc<LayerPlan> {
+        let mut cache = self.plans.lock().unwrap();
+        cache
+            .entry((name.to_string(), method))
+            .or_insert_with(|| {
+                self.layer_builds.fetch_add(1, Ordering::Relaxed);
+                Arc::new(LayerPlan::build_shared(
+                    shape,
+                    self.conv_weights[name].clone(),
+                    method,
+                ))
+            })
+            .clone()
+    }
+
+    /// Cumulative `LayerPlan` compilations (cache misses). Diff this
+    /// across a replan to count how many layers were actually rebuilt.
+    pub fn layer_builds(&self) -> u64 {
+        self.layer_builds.load(Ordering::Relaxed)
+    }
+
+    /// Compile a [`NetworkPlan`] for one batch size and method
+    /// assignment, reusing cached layer plans. `pick` chooses the
+    /// method per *sparse* CONV layer; dense CONV layers run
+    /// LoweredGemm, matching the paper's baseline configuration.
+    /// `network` must be the network this cache was built from.
+    pub fn network_plan(
+        &self,
+        network: &Network,
+        batch: usize,
+        mut pick: impl FnMut(&str, &ConvShape) -> Method,
+    ) -> NetworkPlan {
+        NetworkPlan::from_parts(network, batch, &mut |layer| match &layer.kind {
+            LayerKind::Conv(shape) => {
+                let method = if shape.is_sparse() {
+                    pick(&layer.name, shape)
+                } else {
+                    Method::LoweredGemm
+                };
+                Some(WeightedOp::Conv(self.plan_for(&layer.name, shape, method)))
+            }
+            LayerKind::Fc(_) => Some(WeightedOp::Fc(self.fc_weights[&layer.name].clone())),
+            _ => None,
+        })
     }
 }
 
@@ -702,6 +933,95 @@ mod tests {
         // Same numerics as the plain input run.
         let plain = plan.run_with_input(&img, &pool, &mut arena).to_vec();
         assert_eq!(serving, plain);
+    }
+
+    #[test]
+    fn interleaved_cursor_walks_match_whole_runs() {
+        // Two cursors stepped alternately over one shared plan — the
+        // serving pipeline's access pattern — must produce exactly the
+        // logits of two standalone runs.
+        let net = minicnn();
+        let pool = WorkerPool::new(3);
+        let plan = NetworkPlan::build(&net, 2, 21, |_, _| Method::DirectSparse);
+        let mut rng = Rng::new(31);
+        let mut img_a = vec![0.0; plan.input_dims().len()];
+        let mut img_b = vec![0.0; plan.input_dims().len()];
+        rng.fill_activations(&mut img_a);
+        rng.fill_activations(&mut img_b);
+
+        let mut ref_arena = WorkspaceArena::for_plan(&plan, &pool);
+        let want_a = plan.run_with_input(&img_a, &pool, &mut ref_arena).to_vec();
+        let want_b = plan.run_with_input(&img_b, &pool, &mut ref_arena).to_vec();
+
+        let mut arena_a = WorkspaceArena::for_plan(&plan, &pool);
+        let mut arena_b = WorkspaceArena::for_plan(&plan, &pool);
+        let mut cur_a = plan.begin_run(Some(&img_a), &pool, &mut arena_a);
+        let mut cur_b = plan.begin_run(Some(&img_b), &pool, &mut arena_b);
+        let mut steps = 0;
+        loop {
+            let a = plan.step(&mut cur_a, &pool, &mut arena_a, None, false);
+            let b = plan.step(&mut cur_b, &pool, &mut arena_b, None, false);
+            if a || b {
+                steps += 1;
+            } else {
+                break;
+            }
+        }
+        assert_eq!(steps, plan.num_steps());
+        assert!(cur_a.is_done() && cur_b.is_done());
+        assert_eq!(plan.finish(&cur_a, &arena_a), &want_a[..]);
+        assert_eq!(plan.finish(&cur_b, &arena_b), &want_b[..]);
+    }
+
+    #[test]
+    fn plan_cache_rebuilds_only_flipped_layers() {
+        let net = minicnn();
+        let cache = PlanCache::build(&net, 7);
+        let plan_a = cache.network_plan(&net, 2, |_, _| Method::DirectSparse);
+        let builds_after_first = cache.layer_builds();
+        assert_eq!(builds_after_first, 3, "one build per conv layer");
+
+        // Flip one layer's method: exactly one new LayerPlan.
+        let plan_b = cache.network_plan(&net, 2, |name, _| {
+            if name == "conv3" {
+                Method::LoweredSpmm
+            } else {
+                Method::DirectSparse
+            }
+        });
+        assert_eq!(cache.layer_builds() - builds_after_first, 1);
+        let a = plan_a.conv_plans();
+        let b = plan_b.conv_plans();
+        for ((na, pa), (nb, pb)) in a.iter().zip(b.iter()) {
+            assert_eq!(na, nb);
+            if na == "conv3" {
+                assert!(!Arc::ptr_eq(pa, pb), "flipped layer must be rebuilt");
+            } else {
+                assert!(Arc::ptr_eq(pa, pb), "{na} must keep its cached plan");
+            }
+        }
+
+        // Flipping back costs nothing — the (layer, method) was seen.
+        let _plan_c = cache.network_plan(&net, 2, |_, _| Method::DirectSparse);
+        assert_eq!(cache.layer_builds() - builds_after_first, 1);
+    }
+
+    #[test]
+    fn plan_cache_weights_match_network_plan_build() {
+        // The cache's RNG walk must reproduce NetworkPlan::build's
+        // weight stream: same seed, same logits.
+        let net = minicnn();
+        let pool = WorkerPool::new(2);
+        let built = NetworkPlan::build(&net, 1, 42, |_, _| Method::DirectSparse);
+        let cache = PlanCache::build(&net, 42);
+        let cached = cache.network_plan(&net, 1, |_, _| Method::DirectSparse);
+        let mut rng = Rng::new(5);
+        let mut img = vec![0.0; built.input_dims().len()];
+        rng.fill_activations(&mut img);
+        let mut arena = WorkspaceArena::for_plan(&built, &pool);
+        let a = built.run_with_input(&img, &pool, &mut arena).to_vec();
+        let b = cached.run_with_input(&img, &pool, &mut arena).to_vec();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -41,7 +41,9 @@ mod weights;
 mod winograd;
 
 pub use dense::direct_dense;
-pub use executor::{NetworkPlan, PlanLayerRun, WeightedOp, Workspace, WorkspaceArena};
+pub use executor::{
+    NetworkPlan, PlanCache, PlanCursor, PlanLayerRun, WeightedOp, Workspace, WorkspaceArena,
+};
 pub use gemm::{gemm, gemm_blocked, gemm_parallel};
 pub use im2col::{
     im2col_group, im2col_group_into, lowered_gemm, lowered_gemm_parallel,

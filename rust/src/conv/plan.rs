@@ -48,6 +48,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Stable lowercase label (used in reports and JSON rows).
     pub fn name(&self) -> &'static str {
         match self {
             Method::LoweredGemm => "lowered-gemm",
@@ -84,11 +85,16 @@ impl Method {
 /// the timed path runs images sequentially so laps do not interleave
 /// across pool tiles.
 pub trait ConvExecutor: Send + Sync {
+    /// The layer geometry this executor was compiled for.
     fn shape(&self) -> &ConvShape;
+    /// The execution method this executor implements.
     fn method(&self) -> Method;
     /// Scratch floats needed to execute a batch of `batch` images when
     /// up to `workers` pool workers may run concurrently.
     fn workspace_floats(&self, batch: usize, workers: usize) -> usize;
+    /// Execute the layer: read `input`, write `out`, carve scratch from
+    /// `ws`, parallelise via `pool`, optionally lapping kernels into
+    /// `sw` (see the trait docs for the slice contracts).
     fn execute_into(
         &self,
         batch: usize,
@@ -157,6 +163,7 @@ pub struct DirectSparsePlan {
 }
 
 impl DirectSparsePlan {
+    /// Stretch the weights (§3.1) and pack nnz-weighted channel tiles.
     pub fn build(shape: &ConvShape, weights: &ConvWeights) -> Self {
         assert_eq!(weights.shape, *shape, "weights/shape mismatch");
         let banks = weights.stretched_banks();
@@ -169,6 +176,7 @@ impl DirectSparsePlan {
         }
     }
 
+    /// The pre-stretched filter banks, one per group.
     pub fn banks(&self) -> &[StretchedFilter] {
         &self.banks
     }
@@ -234,10 +242,12 @@ pub struct LoweredGemmPlan {
 }
 
 impl LoweredGemmPlan {
+    /// Compile, cloning the weights into a private `Arc`.
     pub fn build(shape: &ConvShape, weights: &ConvWeights) -> Self {
         Self::build_shared(shape, Arc::new(weights.clone()))
     }
 
+    /// Compile around an existing shared weight buffer (no clone).
     pub fn build_shared(shape: &ConvShape, weights: Arc<ConvWeights>) -> Self {
         assert_eq!(weights.shape, *shape, "weights/shape mismatch");
         Self {
@@ -330,6 +340,7 @@ pub struct LoweredSpmmPlan {
 }
 
 impl LoweredSpmmPlan {
+    /// Convert the weights to canonical-column CSR banks once.
     pub fn build(shape: &ConvShape, weights: &ConvWeights) -> Self {
         assert_eq!(weights.shape, *shape, "weights/shape mismatch");
         Self {
@@ -422,6 +433,8 @@ pub struct WinogradPlan {
 }
 
 impl WinogradPlan {
+    /// Transform every filter to `U = G g Gᵀ` once at build time.
+    /// Panics unless the shape is 3x3 / stride 1 / 1 group.
     pub fn build(shape: &ConvShape, weights: &ConvWeights) -> Self {
         assert!(winograd_applicable(shape), "winograd needs 3x3/s1/g1");
         assert_eq!(weights.shape, *shape, "weights/shape mismatch");
@@ -504,10 +517,12 @@ impl LayerPlan {
         }
     }
 
+    /// The layer geometry this plan was compiled for.
     pub fn shape(&self) -> &ConvShape {
         self.exec.shape()
     }
 
+    /// The execution method this plan was compiled for.
     pub fn method(&self) -> Method {
         self.exec.method()
     }
@@ -518,6 +533,8 @@ impl LayerPlan {
         Dims4::new(batch, s.m, s.out_h(), s.out_w())
     }
 
+    /// Scratch floats needed for `(batch, workers)` — see
+    /// [`ConvExecutor::workspace_floats`].
     pub fn workspace_floats(&self, batch: usize, workers: usize) -> usize {
         self.exec.workspace_floats(batch, workers)
     }

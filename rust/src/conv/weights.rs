@@ -11,6 +11,7 @@ use crate::util::Rng;
 /// representation the kernels need.
 #[derive(Clone, Debug)]
 pub struct ConvWeights {
+    /// The layer geometry these weights belong to.
     pub shape: ConvShape,
     /// `M * (C/g) * R * S` dense weights; pruned entries are exact zeros.
     pub dense: Vec<f32>,
@@ -113,6 +114,7 @@ impl ConvWeights {
         zeros as f64 / self.dense.len().max(1) as f64
     }
 
+    /// Stored nonzeros in the dense buffer.
     pub fn nnz(&self) -> usize {
         self.dense.iter().filter(|&&w| w != 0.0).count()
     }

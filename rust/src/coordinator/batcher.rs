@@ -6,8 +6,22 @@
 //! `batch_size` items within `max_wait` of the first item's arrival; the
 //! executor pads short batches with zero images (the padded rows are
 //! discarded on the way out).
+//!
+//! Two intake surfaces feed the serving pipeline:
+//!
+//! * [`Batcher::next_batch`] blocks until a batch can be emitted — the
+//!   executor's idle path.
+//! * [`Batcher::poll_batch`] never blocks: it drains whatever is
+//!   already queued and emits only a *ready* batch (full, past its
+//!   deadline, or final after close). The pipelined executor calls it
+//!   between layer steps, so batch N+1 forms — and starts its head
+//!   layers — while batch N's tail layers are still executing, instead
+//!   of the pool idling through the batching window.
+//!
+//! A partially formed batch is carried across calls (the pending buffer
+//! below), so mixing the two surfaces never reorders or drops requests.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -31,6 +45,7 @@ impl Default for BatcherConfig {
 /// One formed batch.
 #[derive(Debug)]
 pub struct Batch<T> {
+    /// The batched requests, in arrival order.
     pub items: Vec<T>,
     /// Time the first item waited in the batcher.
     pub formation_time: Duration,
@@ -43,41 +58,109 @@ impl<T> Batch<T> {
     }
 }
 
-/// Pulls items from a channel and forms batches.
+/// Pulls items from a channel and forms batches. Holds the partially
+/// formed batch across calls so blocking and non-blocking intake can be
+/// mixed freely.
 pub struct Batcher<T> {
     rx: Receiver<T>,
     cfg: BatcherConfig,
+    /// Items received but not yet emitted as a batch.
+    pending: Vec<T>,
+    /// Arrival time of `pending[0]` — the deadline anchor.
+    first_at: Option<Instant>,
+    /// The sender side is gone; emit what remains, then `None` forever.
+    closed: bool,
 }
 
 impl<T> Batcher<T> {
+    /// Wrap the request channel with a batching policy.
     pub fn new(rx: Receiver<T>, cfg: BatcherConfig) -> Self {
         assert!(cfg.batch_size > 0);
-        Self { rx, cfg }
+        Self {
+            rx,
+            cfg,
+            pending: Vec::new(),
+            first_at: None,
+            closed: false,
+        }
+    }
+
+    fn stash(&mut self, item: T) {
+        if self.pending.is_empty() {
+            self.first_at = Some(Instant::now());
+        }
+        self.pending.push(item);
+    }
+
+    fn emit(&mut self) -> Option<Batch<T>> {
+        let formation_time = self
+            .first_at
+            .take()
+            .map(|t| t.elapsed())
+            .unwrap_or_default();
+        Some(Batch {
+            items: std::mem::take(&mut self.pending),
+            formation_time,
+        })
     }
 
     /// Block until a batch can be emitted. Returns `None` once the input
     /// channel is closed and drained.
-    pub fn next_batch(&self) -> Option<Batch<T>> {
-        // Block for the first item.
-        let first = self.rx.recv().ok()?;
-        let t0 = Instant::now();
-        let mut items = vec![first];
-        let deadline = t0 + self.cfg.max_wait;
-        while items.len() < self.cfg.batch_size {
+    pub fn next_batch(&mut self) -> Option<Batch<T>> {
+        if self.pending.is_empty() {
+            if self.closed {
+                return None;
+            }
+            // Block for the first item.
+            match self.rx.recv() {
+                Ok(item) => self.stash(item),
+                Err(_) => {
+                    self.closed = true;
+                    return None;
+                }
+            }
+        }
+        let deadline = self.first_at.expect("pending implies first_at") + self.cfg.max_wait;
+        while self.pending.len() < self.cfg.batch_size && !self.closed {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match self.rx.recv_timeout(deadline - now) {
-                Ok(item) => items.push(item),
+                Ok(item) => self.pending.push(item),
                 Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Disconnected) => self.closed = true,
             }
         }
-        Some(Batch {
-            items,
-            formation_time: t0.elapsed(),
-        })
+        self.emit()
+    }
+
+    /// Non-blocking intake: drain whatever is queued right now and emit
+    /// a batch only if one is *ready* — full, past the deadline of its
+    /// first item, or final because the channel closed. Returns `None`
+    /// when nothing is ready yet (call again later, or fall back to
+    /// [`Batcher::next_batch`] when there is nothing else to do).
+    pub fn poll_batch(&mut self) -> Option<Batch<T>> {
+        while self.pending.len() < self.cfg.batch_size && !self.closed {
+            match self.rx.try_recv() {
+                Ok(item) => self.stash(item),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => self.closed = true,
+            }
+        }
+        if self.pending.is_empty() {
+            return None;
+        }
+        let ready = self.pending.len() >= self.cfg.batch_size
+            || self.closed
+            || self
+                .first_at
+                .is_some_and(|t| t.elapsed() >= self.cfg.max_wait);
+        if ready {
+            self.emit()
+        } else {
+            None
+        }
     }
 }
 
@@ -99,7 +182,7 @@ mod tests {
         for i in 0..10 {
             tx.send(i).unwrap();
         }
-        let b = Batcher::new(rx, cfg(4, 50));
+        let mut b = Batcher::new(rx, cfg(4, 50));
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.items, vec![0, 1, 2, 3]);
         let batch = b.next_batch().unwrap();
@@ -110,7 +193,7 @@ mod tests {
     fn short_batch_on_timeout() {
         let (tx, rx) = channel();
         tx.send(1).unwrap();
-        let b = Batcher::new(rx, cfg(8, 5));
+        let mut b = Batcher::new(rx, cfg(8, 5));
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.items, vec![1]);
         assert_eq!(batch.padding(8), 7);
@@ -121,7 +204,7 @@ mod tests {
         let (tx, rx) = channel::<u32>();
         tx.send(7).unwrap();
         drop(tx);
-        let b = Batcher::new(rx, cfg(4, 5));
+        let mut b = Batcher::new(rx, cfg(4, 5));
         assert_eq!(b.next_batch().unwrap().items, vec![7]);
         assert!(b.next_batch().is_none());
     }
@@ -133,7 +216,7 @@ mod tests {
             tx.send(i).unwrap();
         }
         drop(tx);
-        let b = Batcher::new(rx, cfg(3, 5));
+        let mut b = Batcher::new(rx, cfg(3, 5));
         let mut seen = Vec::new();
         while let Some(batch) = b.next_batch() {
             seen.extend(batch.items);
@@ -144,7 +227,7 @@ mod tests {
     #[test]
     fn producer_thread_fills_batch_before_deadline() {
         let (tx, rx) = channel();
-        let b = Batcher::new(rx, cfg(3, 250));
+        let mut b = Batcher::new(rx, cfg(3, 250));
         let sender = std::thread::spawn(move || {
             for i in 0..3 {
                 tx.send(i).unwrap();
@@ -154,5 +237,60 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.items.len(), 3);
         sender.join().unwrap();
+    }
+
+    #[test]
+    fn poll_emits_only_ready_batches() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(rx, cfg(4, 200));
+        // Nothing queued: no batch, no block.
+        assert!(b.poll_batch().is_none());
+        // One item, deadline far away: held back.
+        tx.send(1).unwrap();
+        assert!(b.poll_batch().is_none());
+        // Filling to batch size makes it ready immediately.
+        for i in 2..=4 {
+            tx.send(i).unwrap();
+        }
+        let batch = b.poll_batch().unwrap();
+        assert_eq!(batch.items, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn poll_emits_after_deadline_and_on_close() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(rx, cfg(4, 1));
+        tx.send(9).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        // Past the deadline: the short batch must be released.
+        let batch = loop {
+            if let Some(batch) = b.poll_batch() {
+                break batch;
+            }
+        };
+        assert_eq!(batch.items, vec![9]);
+        // Closed channel: the leftover is emitted without waiting.
+        tx.send(10).unwrap();
+        drop(tx);
+        let batch = b.poll_batch().unwrap();
+        assert_eq!(batch.items, vec![10]);
+        assert!(b.poll_batch().is_none());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn poll_then_next_preserves_pending_items_and_order() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(rx, cfg(4, 300));
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        // Not ready (short of batch size, young deadline) — but the
+        // items must be carried into the blocking path, not dropped.
+        assert!(b.poll_batch().is_none());
+        for i in 3..=4 {
+            tx.send(i).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items, vec![1, 2, 3, 4]);
     }
 }

@@ -23,6 +23,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Self {
             buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
@@ -39,6 +40,7 @@ impl LatencyHistogram {
         (((ns / BASE_NS) as f64).log2().floor() as usize).min(NUM_BUCKETS - 1)
     }
 
+    /// Record one observation.
     pub fn record(&self, d: Duration) {
         self.buckets[Self::bucket_of(d)].fetch_add(1, Ordering::Relaxed);
         self.sum_ns
@@ -46,10 +48,12 @@ impl LatencyHistogram {
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Observations recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean of all observations (zero when empty).
     pub fn mean(&self) -> Duration {
         let c = self.count();
         if c == 0 {
@@ -79,20 +83,40 @@ impl LatencyHistogram {
 /// Aggregate serving metrics. The `pool_*` gauges mirror the executor's
 /// [`crate::util::WorkerPool`] telemetry (published once per batch):
 /// cumulative tiles executed, tiles stolen across the static share
-/// boundary, and the per-worker imbalance ratio in milli-units.
+/// boundary, and the per-worker imbalance ratio in milli-units. The
+/// `replan_*` counters track incremental replans: how many happened,
+/// the wall time spent rebuilding, and how many layer plans were
+/// actually recompiled (a single-method router flip should rebuild
+/// exactly one — or zero, when the `(layer, method)` pair was cached).
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Requests accepted by [`crate::coordinator::ServerHandle::submit`].
     pub requests: AtomicU64,
+    /// Responses sent back to clients.
     pub responses: AtomicU64,
+    /// Batches executed by the serving loop.
     pub batches: AtomicU64,
+    /// Zero-padded slots across all short batches.
     pub padded_slots: AtomicU64,
+    /// Failed requests (reserved; the native path currently cannot fail).
     pub errors: AtomicU64,
+    /// Worker count of the executor's pool.
     pub pool_workers: AtomicU64,
+    /// Cumulative tiles executed on the pool.
     pub pool_tiles: AtomicU64,
+    /// Cumulative tiles claimed across the static share boundary.
     pub pool_steals: AtomicU64,
     /// `WorkerPool` imbalance ratio × 1000 (1000 = perfectly balanced).
     pub pool_imbalance_milli: AtomicU64,
+    /// Times the executor swapped in a recompiled plan.
+    pub replans: AtomicU64,
+    /// Cumulative nanoseconds spent rebuilding plans after router flips.
+    pub replan_build_ns: AtomicU64,
+    /// Cumulative layer plans compiled by replans (cache misses only).
+    pub replan_layers_rebuilt: AtomicU64,
+    /// End-to-end request latency histogram.
     pub latency: LatencyHistogram,
+    /// Per-batch execution latency histogram.
     pub batch_latency: LatencyHistogram,
     started: Mutex<Option<std::time::Instant>>,
 }
@@ -100,29 +124,50 @@ pub struct Metrics {
 /// Point-in-time view for reporting.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
+    /// Requests accepted.
     pub requests: u64,
+    /// Responses delivered.
     pub responses: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Zero-padded slots across all short batches.
     pub padded_slots: u64,
+    /// Failed requests.
     pub errors: u64,
+    /// Worker count of the executor's pool.
     pub pool_workers: u64,
+    /// Cumulative tiles executed on the pool.
     pub pool_tiles: u64,
+    /// Cumulative tiles stolen across the static share boundary.
     pub pool_steals: u64,
     /// Max-over-mean per-worker tile share; 1.0 is perfectly balanced.
     pub pool_imbalance: f64,
+    /// Times the executor swapped in a recompiled plan.
+    pub replans: u64,
+    /// Total wall time spent rebuilding plans after router flips.
+    pub replan_build_time: Duration,
+    /// Layer plans recompiled by replans (0 when every flip hit the
+    /// plan cache; a single fresh flip costs exactly 1).
+    pub replan_layers_rebuilt: u64,
+    /// Mean end-to-end request latency.
     pub mean_latency: Duration,
+    /// Median end-to-end request latency (histogram upper bound).
     pub p50_latency: Duration,
+    /// 99th-percentile end-to-end request latency.
     pub p99_latency: Duration,
+    /// Responses per second since server start.
     pub throughput_rps: f64,
 }
 
 impl Metrics {
+    /// Fresh metrics with the throughput clock started now.
     pub fn new() -> Self {
         let m = Self::default();
         *m.started.lock().unwrap() = Some(std::time::Instant::now());
         m
     }
 
+    /// Capture a point-in-time snapshot of every gauge.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let elapsed = self
             .started
@@ -142,6 +187,9 @@ impl Metrics {
             pool_tiles: self.pool_tiles.load(Ordering::Relaxed),
             pool_steals: self.pool_steals.load(Ordering::Relaxed),
             pool_imbalance: self.pool_imbalance_milli.load(Ordering::Relaxed) as f64 / 1000.0,
+            replans: self.replans.load(Ordering::Relaxed),
+            replan_build_time: Duration::from_nanos(self.replan_build_ns.load(Ordering::Relaxed)),
+            replan_layers_rebuilt: self.replan_layers_rebuilt.load(Ordering::Relaxed),
             mean_latency: self.latency.mean(),
             p50_latency: self.latency.percentile(50.0),
             p99_latency: self.latency.percentile(99.0),
@@ -202,6 +250,18 @@ mod tests {
         assert_eq!(s.pool_tiles, 100);
         assert_eq!(s.pool_steals, 7);
         assert!((s.pool_imbalance - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replan_gauges_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.replans.store(3, Ordering::Relaxed);
+        m.replan_build_ns.store(2_500_000, Ordering::Relaxed);
+        m.replan_layers_rebuilt.store(4, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.replans, 3);
+        assert_eq!(s.replan_build_time, Duration::from_nanos(2_500_000));
+        assert_eq!(s.replan_layers_rebuilt, 4);
     }
 
     #[test]

@@ -8,20 +8,27 @@
 //!   execution method per layer from its shape/sparsity, refined online
 //!   by measured plan latencies.
 //! * [`batcher`] — dynamic batcher: single-image requests are grouped
-//!   (and padded) to the plan batch size under a latency deadline.
-//! * [`scheduler`] — whole-network pipeline over cached
-//!   [`crate::conv::LayerPlan`]s with per-kernel timing (drives the
+//!   (and padded) to the plan batch size under a latency deadline, with
+//!   blocking and non-blocking (pipeline) intake surfaces.
+//! * [`scheduler`] — whole-network pipeline over a shared
+//!   [`crate::conv::PlanCache`] with per-kernel timing (drives the
 //!   Fig 9/11 benches).
-//! * [`server`] — the request loop: an executor thread owns a shared
-//!   [`crate::conv::NetworkPlan`] + workspace arena, pulls batches,
-//!   executes natively, and fans responses back out.
-//! * [`metrics`] — counters + latency histograms for the E2E example.
+//! * [`server`] — the request loop: an executor thread keeps up to two
+//!   batches in flight on a shared [`crate::conv::NetworkPlan`]
+//!   (per-slot workspace arenas), interleaves their layer steps on one
+//!   worker pool, replans incrementally through the plan cache, and
+//!   fans responses back out.
+//! * [`metrics`] — counters + latency histograms (incl. pool and replan
+//!   gauges) for the E2E example.
+//!
+//! `README.md` in this directory documents the
+//! batcher → executor → router loop and every `ServerConfig` knob.
 
-mod batcher;
-mod metrics;
-mod router;
-mod scheduler;
-mod server;
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod server;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};

@@ -61,6 +61,7 @@ struct RouterState {
 }
 
 impl Router {
+    /// A router with no latency observations yet.
     pub fn new(cfg: RouterConfig) -> Self {
         Self {
             cfg,

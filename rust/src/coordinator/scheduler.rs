@@ -12,18 +12,20 @@
 //! is honest.
 
 use super::router::{Method, Router};
-use crate::config::{ConvShape, LayerKind, Network};
-use crate::conv::{ConvWeights, LayerPlan, NetworkPlan, WeightedOp, WorkspaceArena};
-use crate::util::{Rng, WorkerPool};
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use crate::config::{ConvShape, Network};
+use crate::conv::{ConvWeights, LayerPlan, NetworkPlan, PlanCache, WorkspaceArena};
+use crate::util::WorkerPool;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Timing of one executed layer.
 #[derive(Clone, Debug)]
 pub struct LayerTiming {
+    /// Layer name.
     pub layer: String,
+    /// Execution method (CONV layers only).
     pub method: Option<Method>,
+    /// Total layer wall time.
     pub total: Duration,
     /// (kernel name, time) pairs: `pad_in`, `im2col`, `sgemm`, `csrmm`,
     /// `sconv`, `winograd`, `relu`, `pool`, `lrn`, `fc`.
@@ -33,12 +35,16 @@ pub struct LayerTiming {
 /// Result of one whole-network run.
 #[derive(Clone, Debug)]
 pub struct ScheduleReport {
+    /// Network name.
     pub network: String,
+    /// Batch size the run executed.
     pub batch: usize,
+    /// Per-layer timings in execution order.
     pub layers: Vec<LayerTiming>,
 }
 
 impl ScheduleReport {
+    /// Whole-iteration time (sum over layers).
     pub fn total(&self) -> Duration {
         self.layers.iter().map(|l| l.total).sum()
     }
@@ -72,48 +78,34 @@ impl ScheduleReport {
     }
 }
 
-/// Pre-built weights for every CONV/FC layer of a network, plus a cache
-/// of compiled [`LayerPlan`]s, one per `(layer, method)` ever requested.
-/// Owns the shared [`WorkerPool`] every run executes on — one pool per
-/// schedule lifetime, zero steady-state thread spawns.
+/// Pre-built weights for every CONV/FC layer of a network — held in a
+/// shared [`PlanCache`] of compiled [`LayerPlan`]s, one per
+/// `(layer, method)` ever requested (the same cache type the serving
+/// executor replans through). Owns the shared [`WorkerPool`] every run
+/// executes on — one pool per schedule lifetime, zero steady-state
+/// thread spawns.
 pub struct NetworkSchedule {
+    /// The network this schedule compiles and runs.
     pub network: Network,
-    conv_weights: HashMap<String, Arc<ConvWeights>>,
-    fc_weights: HashMap<String, Arc<Vec<f32>>>,
+    cache: PlanCache,
     pool: Arc<WorkerPool>,
-    plans: Mutex<HashMap<(String, Method), Arc<LayerPlan>>>,
 }
 
 impl NetworkSchedule {
     /// Materialise synthetic pruned weights for every layer (seeded);
     /// all runs share `pool`.
     pub fn build(network: Network, seed: u64, pool: Arc<WorkerPool>) -> Self {
-        let mut rng = Rng::new(seed);
-        let mut conv_weights = HashMap::new();
-        let mut fc_weights = HashMap::new();
-        for layer in &network.layers {
-            match &layer.kind {
-                LayerKind::Conv(shape) => {
-                    let w = Arc::new(ConvWeights::synthetic(shape, &mut rng));
-                    conv_weights.insert(layer.name.clone(), w);
-                }
-                LayerKind::Fc(fc) => {
-                    fc_weights.insert(layer.name.clone(), Arc::new(rng.normal_vec(fc.weights())));
-                }
-                _ => {}
-            }
-        }
+        let cache = PlanCache::build(&network, seed);
         Self {
             network,
-            conv_weights,
-            fc_weights,
+            cache,
             pool,
-            plans: Mutex::new(HashMap::new()),
         }
     }
 
+    /// The materialised weights for a CONV layer, if it exists.
     pub fn weights_for(&self, layer: &str) -> Option<&ConvWeights> {
-        self.conv_weights.get(layer).map(|w| w.as_ref())
+        self.cache.conv_weights(layer).map(|w| w.as_ref())
     }
 
     /// The shared worker pool all runs execute on.
@@ -121,19 +113,15 @@ impl NetworkSchedule {
         &self.pool
     }
 
+    /// The underlying weight + plan cache (shared with replan metrics /
+    /// tests that count [`PlanCache::layer_builds`]).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
     /// The compiled plan for `(layer, method)`, built on first request.
     pub fn plan_for(&self, name: &str, shape: &ConvShape, method: Method) -> Arc<LayerPlan> {
-        let mut cache = self.plans.lock().unwrap();
-        cache
-            .entry((name.to_string(), method))
-            .or_insert_with(|| {
-                Arc::new(LayerPlan::build_shared(
-                    shape,
-                    self.conv_weights[name].clone(),
-                    method,
-                ))
-            })
-            .clone()
+        self.cache.plan_for(name, shape, method)
     }
 
     /// Compile a [`NetworkPlan`] for one batch size and method
@@ -141,20 +129,9 @@ impl NetworkSchedule {
     pub fn network_plan(
         &self,
         batch: usize,
-        mut pick: impl FnMut(&str, &ConvShape) -> Method,
+        pick: impl FnMut(&str, &ConvShape) -> Method,
     ) -> NetworkPlan {
-        NetworkPlan::from_parts(&self.network, batch, &mut |layer| match &layer.kind {
-            LayerKind::Conv(shape) => {
-                let method = if shape.is_sparse() {
-                    pick(&layer.name, shape)
-                } else {
-                    Method::LoweredGemm
-                };
-                Some(WeightedOp::Conv(self.plan_for(&layer.name, shape, method)))
-            }
-            LayerKind::Fc(_) => Some(WeightedOp::Fc(self.fc_weights[&layer.name].clone())),
-            _ => None,
-        })
+        self.cache.network_plan(&self.network, batch, pick)
     }
 
     /// Execute the network once on a synthetic batch, choosing the method
@@ -213,7 +190,7 @@ impl NetworkSchedule {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{alexnet, ConvShape, FcShape, Layer, Network, PoolKind};
+    use crate::config::{alexnet, ConvShape, FcShape, Layer, LayerKind, Network, PoolKind};
     use crate::coordinator::RouterConfig;
 
     fn tiny_net() -> Network {

@@ -1,24 +1,46 @@
 //! The serving request loop (vLLM-router-style, scaled to this paper):
 //! clients submit single images; a dynamic batcher forms fixed-size
-//! batches; one executor thread owns a shared [`NetworkPlan`] plus its
-//! [`WorkspaceArena`] and runs every batch through the plan layer —
-//! zero steady-state allocation on the hot path; responses fan back out
-//! through per-request channels.
+//! batches; one executor thread owns a shared [`NetworkPlan`] plus per
+//! pipeline-slot [`WorkspaceArena`]s and drives every batch through the
+//! plan layer — zero steady-state allocation on the hot path; responses
+//! fan back out through per-request channels.
+//!
+//! ## The two-slot pipeline
+//!
+//! The executor keeps up to [`ServerConfig::pipeline_depth`] batches in
+//! flight, each as a `(plan, cursor, arena)` slot, and advances every
+//! slot one layer per loop turn (oldest first). Batch N+1's **head**
+//! layers therefore execute between batch N's **tail** layers on the
+//! one shared [`WorkerPool`], and the non-blocking
+//! [`super::batcher::Batcher::poll_batch`] intake runs between steps —
+//! the pool no longer idles through the batching window, and a new
+//! batch is mid-network by the time its predecessor retires. Each slot
+//! owns its arena, so results are byte-identical to sequential serving
+//! (`pipeline_depth = 1`); see `tests/serve_pipeline.rs`.
+//!
+//! ## Incremental replans
 //!
 //! Method selection is the [`Router`]'s job: the plan is compiled from
 //! `Router::choose` per sparse CONV layer, every batch's per-layer
 //! latencies are folded back via `Router::observe`, and every
-//! `replan_every` batches the choices are re-evaluated — if the router
-//! has changed its mind, the executor recompiles the plan (weights are
-//! regenerated from the same seed, so results stay consistent). This is
-//! the paper's §3.4 adaptive kernel customization as a serving loop.
+//! `replan_every` batches the choices are re-evaluated. When the router
+//! has changed its mind, the executor rebuilds the plan **through the
+//! shared [`PlanCache`]**: weights were materialised once at startup,
+//! and only the flipped layer's plan is compiled (none, if that
+//! `(layer, method)` pair was ever used before) — every untouched layer
+//! keeps its `Arc<LayerPlan>`. Replan build time and layers-rebuilt
+//! counts are published through [`super::metrics::Metrics`]. This is
+//! the paper's §3.4 adaptive kernel customization as a serving loop. A
+//! batch already in flight finishes on the plan it started with; the
+//! new plan applies from the next batch on.
 
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::{Router, RouterConfig};
 use crate::config::{network_by_name, LayerKind, Network};
-use crate::conv::{Method, NetworkPlan, WorkspaceArena};
+use crate::conv::{Method, NetworkPlan, PlanCache, PlanCursor, WorkspaceArena};
 use crate::util::{default_threads, WorkerPool};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -42,28 +64,35 @@ fn err(msg: impl Into<String>) -> ServerError {
 
 /// One inference request: a single CHW image.
 pub struct InferRequest {
+    /// Monotonic request id assigned at submit time.
     pub id: u64,
     /// C*H*W activations.
     pub image: Vec<f32>,
+    /// When the client submitted (end-to-end latency anchor).
     pub submitted: Instant,
+    /// Channel the response is sent back on.
     pub resp: Sender<InferResponse>,
 }
 
 /// The reply: class logits for the image.
 #[derive(Clone, Debug)]
 pub struct InferResponse {
+    /// The request's id.
     pub id: u64,
+    /// Class logits for the submitted image.
     pub logits: Vec<f32>,
     /// End-to-end latency (submit -> response ready).
     pub latency: Duration,
 }
 
-/// Server construction parameters.
+/// Server construction parameters. See `coordinator/README.md` for
+/// tuning guidance on every knob.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Network to serve (`config::network_by_name`): `minicnn` (default),
     /// `alexnet`, `googlenet`, `resnet50`.
     pub network: String,
+    /// Batching policy: target batch size and formation deadline.
     pub batcher: BatcherConfig,
     /// Seed for the synthetic model weights.
     pub weight_seed: u64,
@@ -75,6 +104,12 @@ pub struct ServerConfig {
     pub router: RouterConfig,
     /// Re-evaluate router choices every N batches (0 = plan once).
     pub replan_every: u64,
+    /// Batches kept in flight by the executor (clamped to at least 1).
+    /// 1 = strict sequential serving; 2 (default) = two-slot pipeline:
+    /// batch N+1's head layers overlap batch N's tail layers and batch
+    /// formation. Each slot owns a workspace arena, so memory scales
+    /// linearly with depth.
+    pub pipeline_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -86,6 +121,7 @@ impl Default for ServerConfig {
             threads: 0,
             router: RouterConfig::default(),
             replan_every: 64,
+            pipeline_depth: 2,
         }
     }
 }
@@ -93,11 +129,13 @@ impl Default for ServerConfig {
 /// Aggregated post-shutdown statistics.
 #[derive(Clone, Debug)]
 pub struct ServerStats {
+    /// Final metrics snapshot (includes the `replan_*` counters).
     pub snapshot: MetricsSnapshot,
     /// Wall time spent compiling the initial NetworkPlan (weight
     /// generation + operand transforms + arena sizing).
     pub plan_build_time: Duration,
-    /// Times the executor recompiled the plan after a router flip.
+    /// Times the executor swapped in a recompiled plan after a router
+    /// flip.
     pub replans: u64,
 }
 
@@ -113,7 +151,7 @@ pub struct ServerHandle {
 
 impl ServerHandle {
     /// Start the server: spawns the executor thread, which compiles the
-    /// network plan and preallocates the workspace arena. Blocks until
+    /// network plan and preallocates the workspace arenas. Blocks until
     /// the executor is ready to serve.
     pub fn start(cfg: ServerConfig) -> Result<Self, ServerError> {
         let (tx, rx) = channel::<InferRequest>();
@@ -142,6 +180,7 @@ impl ServerHandle {
         self.image_elems
     }
 
+    /// Logit count of one response.
     pub fn num_classes(&self) -> usize {
         self.num_classes
     }
@@ -171,6 +210,7 @@ impl ServerHandle {
         Ok(resp_rx)
     }
 
+    /// A point-in-time metrics snapshot.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
@@ -215,12 +255,25 @@ fn desired_methods(net: &Network, router: &Router) -> Vec<(String, Method)> {
         .collect()
 }
 
+/// One in-flight batch: the plan it started on (kept across replans —
+/// a successor batch may already run a newer plan), its walk cursor,
+/// and the slot-owned arena + staging buffer it computes in.
+struct Slot {
+    batch: Batch<InferRequest>,
+    plan: Arc<NetworkPlan>,
+    cursor: PlanCursor,
+    arena: WorkspaceArena,
+    input: Vec<f32>,
+    exec_started: Instant,
+}
+
 fn executor_loop(
     cfg: ServerConfig,
     rx: Receiver<InferRequest>,
     metrics: Arc<Metrics>,
     ready: Sender<Result<(usize, usize), ServerError>>,
 ) -> Result<(Duration, u64), ServerError> {
+    let depth = cfg.pipeline_depth.max(1);
     let startup = (|| -> Result<_, ServerError> {
         let net = network_by_name(&cfg.network)
             .ok_or_else(|| err(format!("unknown network {:?}", cfg.network)))?;
@@ -230,17 +283,29 @@ fn executor_loop(
             default_threads()
         };
         // The one pool this server ever constructs: shared across all
-        // layers, batches, and replans for the executor's lifetime.
+        // layers, batches, slots, and replans for the executor's
+        // lifetime.
         let pool = WorkerPool::new(threads);
         let router = Router::new(cfg.router.clone());
         let batch_size = cfg.batcher.batch_size;
         let t0 = Instant::now();
+        // Weights are materialised exactly once, into the cache every
+        // replan reuses.
+        let cache = PlanCache::build(&net, cfg.weight_seed);
         let assignment = desired_methods(&net, &router);
-        let plan = build_plan(&net, batch_size, cfg.weight_seed, &assignment);
-        let arena = WorkspaceArena::for_plan(&plan, &pool);
-        Ok((net, router, pool, plan, arena, t0.elapsed()))
+        let plan = Arc::new(build_plan(&cache, &net, batch_size, &assignment));
+        // One arena + input staging buffer per pipeline slot.
+        let spare: Vec<(WorkspaceArena, Vec<f32>)> = (0..depth)
+            .map(|_| {
+                (
+                    WorkspaceArena::for_plan(&plan, &pool),
+                    vec![0.0f32; plan.input_dims().len()],
+                )
+            })
+            .collect();
+        Ok((net, router, pool, cache, plan, spare, t0.elapsed()))
     })();
-    let (net, router, pool, mut plan, mut arena, build_time) = match startup {
+    let (net, router, pool, cache, mut plan, mut spare, build_time) = match startup {
         Ok(v) => v,
         Err(e) => {
             let msg = e.0.clone();
@@ -253,14 +318,20 @@ fn executor_loop(
     let num_classes = plan.output_dims().chw();
     let _ = ready.send(Ok((image_elems, num_classes)));
 
-    let batcher = Batcher::new(rx, cfg.batcher.clone());
-    // Preallocated batch input; padded slots stay zero.
-    let mut input = vec![0.0f32; plan.input_dims().len()];
+    let mut batcher = Batcher::new(rx, cfg.batcher.clone());
+    let mut slots: VecDeque<Slot> = VecDeque::new();
+    let mut open = true;
     let mut nbatches = 0u64;
     let mut replans = 0u64;
 
-    while let Some(batch) = batcher.next_batch() {
-        let t_exec = Instant::now();
+    // Stage a formed batch into a free slot: copy the images into the
+    // slot's staging buffer (padded tail slots stay zero) and position
+    // the plan cursor before the first layer.
+    let start_slot = |batch: Batch<InferRequest>,
+                          plan: &Arc<NetworkPlan>,
+                          spare: &mut Vec<(WorkspaceArena, Vec<f32>)>,
+                          slots: &mut VecDeque<Slot>| {
+        let (mut arena, mut input) = spare.pop().expect("slot arena available");
         input.fill(0.0);
         for (slot, req) in batch.items.iter().enumerate() {
             let dst = slot * image_elems;
@@ -270,64 +341,125 @@ fn executor_loop(
             .padded_slots
             .fetch_add(batch.padding(batch_size) as u64, Ordering::Relaxed);
         metrics.batches.fetch_add(1, Ordering::Relaxed);
+        let cursor = plan.begin_run(Some(&input), &pool, &mut arena);
+        slots.push_back(Slot {
+            batch,
+            plan: plan.clone(),
+            cursor,
+            arena,
+            input,
+            exec_started: Instant::now(),
+        });
+    };
 
-        {
-            // Serving run: per-layer totals feed the router's EWMA while
-            // the kernels keep their parallel (untimed) execution paths.
-            let logits = plan.run_serving(&input, &pool, &mut arena, &mut |lr| {
-                if let Some(m) = lr.method {
-                    router.observe(lr.layer, m, lr.total);
+    loop {
+        // Intake. Idle: block for the next batch. Busy with spare
+        // capacity: take whatever the batcher has ready, without
+        // blocking — this is how batch N+1 enters the pipeline while
+        // batch N is mid-network.
+        if slots.is_empty() {
+            if !open {
+                break;
+            }
+            match batcher.next_batch() {
+                Some(b) => start_slot(b, &plan, &mut spare, &mut slots),
+                None => {
+                    open = false;
+                    continue;
                 }
-            });
-            metrics.batch_latency.record(t_exec.elapsed());
-            for (slot, req) in batch.items.into_iter().enumerate() {
-                let out = logits[slot * num_classes..(slot + 1) * num_classes].to_vec();
-                let latency = req.submitted.elapsed();
-                metrics.latency.record(latency);
-                metrics.responses.fetch_add(1, Ordering::Relaxed);
-                let _ = req.resp.send(InferResponse {
-                    id: req.id,
-                    logits: out,
-                    latency,
-                });
+            }
+        } else if open && slots.len() < depth {
+            if let Some(b) = batcher.poll_batch() {
+                start_slot(b, &plan, &mut spare, &mut slots);
             }
         }
 
-        // Publish pool telemetry: cumulative tiles/steals and the
-        // per-worker imbalance ratio (1.0 = perfectly balanced).
-        let ps = pool.stats();
-        metrics.pool_workers.store(ps.workers as u64, Ordering::Relaxed);
-        metrics
-            .pool_tiles
-            .store(ps.total_tiles(), Ordering::Relaxed);
-        metrics
-            .pool_steals
-            .store(ps.total_steals(), Ordering::Relaxed);
-        metrics
-            .pool_imbalance_milli
-            .store((ps.imbalance() * 1000.0) as u64, Ordering::Relaxed);
+        // Advance every in-flight batch one layer, oldest first: the
+        // old batch's tail layers and the new batch's head layers
+        // interleave on the shared pool.
+        for slot in slots.iter_mut() {
+            let slot_plan = slot.plan.clone();
+            slot_plan.step(
+                &mut slot.cursor,
+                &pool,
+                &mut slot.arena,
+                Some(&mut |lr| {
+                    // Per-layer totals feed the router's EWMA while the
+                    // kernels keep their parallel (untimed) paths.
+                    if let Some(m) = lr.method {
+                        router.observe(lr.layer, m, lr.total);
+                    }
+                }),
+                false,
+            );
+        }
 
-        nbatches += 1;
-        if cfg.replan_every > 0 && nbatches % cfg.replan_every == 0 {
-            let want = desired_methods(&net, &router);
-            if want != plan.conv_methods() {
-                plan = build_plan(&net, batch_size, cfg.weight_seed, &want);
-                arena = WorkspaceArena::for_plan(&plan, &pool);
-                replans += 1;
+        // Retire the oldest batch once every layer has run.
+        if slots.front().is_some_and(|s| s.cursor.is_done()) {
+            let slot = slots.pop_front().unwrap();
+            metrics.batch_latency.record(slot.exec_started.elapsed());
+            {
+                let logits = slot.plan.finish(&slot.cursor, &slot.arena);
+                for (i, req) in slot.batch.items.into_iter().enumerate() {
+                    let out = logits[i * num_classes..(i + 1) * num_classes].to_vec();
+                    let latency = req.submitted.elapsed();
+                    metrics.latency.record(latency);
+                    metrics.responses.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.resp.send(InferResponse {
+                        id: req.id,
+                        logits: out,
+                        latency,
+                    });
+                }
+            }
+            spare.push((slot.arena, slot.input));
+
+            // Publish pool telemetry: cumulative tiles/steals and the
+            // per-worker imbalance ratio (1.0 = perfectly balanced).
+            let ps = pool.stats();
+            metrics.pool_workers.store(ps.workers as u64, Ordering::Relaxed);
+            metrics.pool_tiles.store(ps.total_tiles(), Ordering::Relaxed);
+            metrics
+                .pool_steals
+                .store(ps.total_steals(), Ordering::Relaxed);
+            metrics
+                .pool_imbalance_milli
+                .store((ps.imbalance() * 1000.0) as u64, Ordering::Relaxed);
+
+            nbatches += 1;
+            if cfg.replan_every > 0 && nbatches % cfg.replan_every == 0 {
+                let want = desired_methods(&net, &router);
+                if want != plan.conv_methods() {
+                    // Incremental rebuild: only flipped layers compile;
+                    // a still-stepping slot keeps its old plan alive
+                    // through its own Arc.
+                    let t0 = Instant::now();
+                    let builds_before = cache.layer_builds();
+                    plan = Arc::new(build_plan(&cache, &net, batch_size, &want));
+                    metrics
+                        .replan_build_ns
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    metrics
+                        .replan_layers_rebuilt
+                        .fetch_add(cache.layer_builds() - builds_before, Ordering::Relaxed);
+                    metrics.replans.fetch_add(1, Ordering::Relaxed);
+                    replans += 1;
+                }
             }
         }
     }
     Ok((build_time, replans))
 }
 
-/// Compile a plan from a frozen per-layer method assignment.
+/// Compile a plan from a frozen per-layer method assignment through the
+/// shared cache (untouched layers reuse their `Arc<LayerPlan>`s).
 fn build_plan(
+    cache: &PlanCache,
     net: &Network,
     batch: usize,
-    seed: u64,
     assignment: &[(String, Method)],
 ) -> NetworkPlan {
-    NetworkPlan::build(net, batch, seed, |name, _| {
+    cache.network_plan(net, batch, |name, _| {
         assignment
             .iter()
             .find(|(n, _)| n == name)

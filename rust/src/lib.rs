@@ -41,10 +41,20 @@
 //!   the scheduler ([`coordinator::NetworkSchedule`]), the serving loop
 //!   ([`coordinator::ServerHandle`]), and the fig8/fig9/fig11 bench
 //!   harnesses all execute through it.
+//! * [`conv::PlanCache`] — the shared per-`(layer, method)` compiled-plan
+//!   cache: the scheduler and the server both replan through it, so a
+//!   router flip recompiles only the flipped layer.
 //! * [`coordinator::Router`] — picks the [`conv::Method`] per layer and
 //!   refines it online from measured plan latencies (paper §3.4).
+//! * [`coordinator::ServerHandle`] — the serving loop: a dynamic batcher
+//!   feeds a pipelined executor that keeps two batches in flight on the
+//!   shared pool (see `src/coordinator/README.md`).
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index.
+//! **`ARCHITECTURE.md`** at the repository root is the map: paper
+//! section → module, the plan/arena/pool lifecycles, and the data-flow
+//! diagram of the serving pipeline.
+
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod config;

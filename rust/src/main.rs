@@ -2,12 +2,15 @@
 //! reproduction harness.
 //!
 //! Subcommands:
-//!   summary [--threads N] [--timed]   Table 2 + Table 3 (+ routed run)
-//!   prune <model> [sparsity]          sparsity statistics for a model
-//!   infer [artifact]                  PJRT inference (needs `pjrt` feature)
-//!   serve [n] [network] [--threads N] E2E serving run (plan executor)
-//!   simulate [sparsity]               cache simulation of one layer
-//!   figures [--quick|--figN...]       regenerate the paper's figures
+//!
+//! ```text
+//! summary [--threads N] [--timed]   Table 2 + Table 3 (+ routed run)
+//! prune <model> [sparsity]          sparsity statistics for a model
+//! infer [artifact]                  PJRT inference (needs `pjrt` feature)
+//! serve [n] [network] [--threads N] E2E serving run (plan executor)
+//! simulate [sparsity]               cache simulation of one layer
+//! figures [--quick|--figN...]       regenerate the paper's figures
+//! ```
 //!
 //! Thread count precedence everywhere: `--threads` flag, then the
 //! `ESCOIN_THREADS` env var, then available parallelism.
@@ -191,11 +194,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 m.batches
             );
             let stats = server.shutdown()?;
-            println!(
-                "plan build {:?}, {} replans",
-                stats.plan_build_time, stats.replans
-            );
             let s = &stats.snapshot;
+            println!(
+                "plan build {:?}, {} replans ({} layer plans rebuilt, {:?} rebuilding)",
+                stats.plan_build_time, stats.replans, s.replan_layers_rebuilt, s.replan_build_time
+            );
             println!(
                 "pool: {} workers, {} tiles ({} stolen), imbalance {:.2}",
                 s.pool_workers, s.pool_tiles, s.pool_steals, s.pool_imbalance

@@ -3,12 +3,16 @@
 /// Geometry of one cache level.
 #[derive(Clone, Copy, Debug)]
 pub struct CacheConfig {
+    /// Total capacity in bytes.
     pub size_bytes: usize,
+    /// Line (transaction) size in bytes; must be a power of two.
     pub line_bytes: usize,
+    /// Associativity.
     pub ways: usize,
 }
 
 impl CacheConfig {
+    /// Set count implied by size / (line * ways).
     pub fn sets(&self) -> usize {
         self.size_bytes / (self.line_bytes * self.ways)
     }
@@ -17,15 +21,19 @@ impl CacheConfig {
 /// Hit/miss counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Line-granular hits.
     pub hits: u64,
+    /// Line-granular misses (fills).
     pub misses: u64,
 }
 
 impl CacheStats {
+    /// Total accesses.
     pub fn accesses(&self) -> u64 {
         self.hits + self.misses
     }
 
+    /// `hits / accesses` (0.0 when idle).
     pub fn hit_rate(&self) -> f64 {
         if self.accesses() == 0 {
             return 0.0;
@@ -45,6 +53,7 @@ pub struct Cache {
 }
 
 impl Cache {
+    /// An empty cache with the given geometry.
     pub fn new(cfg: CacheConfig) -> Self {
         assert!(cfg.line_bytes.is_power_of_two());
         assert!(cfg.sets() > 0, "cache too small for its ways/line");
@@ -55,6 +64,7 @@ impl Cache {
         }
     }
 
+    /// The cache's geometry.
     pub fn config(&self) -> CacheConfig {
         self.cfg
     }
@@ -79,14 +89,17 @@ impl Cache {
         }
     }
 
+    /// Cumulative hit/miss counters.
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
 
+    /// Zero the counters, keeping cache contents.
     pub fn reset_stats(&mut self) {
         self.stats = CacheStats::default();
     }
 
+    /// Invalidate every line, keeping the counters.
     pub fn flush(&mut self) {
         for set in &mut self.sets {
             set.clear();

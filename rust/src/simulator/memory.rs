@@ -45,7 +45,9 @@ pub const NUM_SM: usize = 4;
 /// Per-run report.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MemoryReport {
+    /// Read-only (texture) cache counters, summed over SMs.
     pub ro: CacheStats,
+    /// Shared L2 counters.
     pub l2: CacheStats,
     /// Bytes fetched from DRAM (L2 miss fills + write allocates).
     pub dram_bytes: u64,
@@ -54,9 +56,11 @@ pub struct MemoryReport {
 }
 
 impl MemoryReport {
+    /// Read-only cache hit rate (the paper's texture hit rate).
     pub fn ro_hit_rate(&self) -> f64 {
         self.ro.hit_rate()
     }
+    /// L2 hit rate.
     pub fn l2_hit_rate(&self) -> f64 {
         self.l2.hit_rate()
     }
@@ -77,6 +81,7 @@ impl Default for MemoryHierarchy {
 }
 
 impl MemoryHierarchy {
+    /// A hierarchy of [`NUM_SM`] read-only caches over one L2.
     pub fn new(ro_cfg: CacheConfig, l2_cfg: CacheConfig) -> Self {
         Self {
             ro: (0..NUM_SM).map(|_| Cache::new(ro_cfg)).collect(),
@@ -86,6 +91,7 @@ impl MemoryHierarchy {
         }
     }
 
+    /// The P100 geometry from [`P100_GEOMETRY`] (Table 2 platform).
     pub fn p100() -> Self {
         Self::new(P100_GEOMETRY.0, P100_GEOMETRY.1)
     }
@@ -135,6 +141,7 @@ impl MemoryHierarchy {
         }
     }
 
+    /// Snapshot the counters into a per-run report.
     pub fn report(&self) -> MemoryReport {
         let mut ro = CacheStats::default();
         for c in &self.ro {

@@ -33,6 +33,7 @@ const DENSEW_BASE: u64 = 0x5000_0000;
 
 /// A named, replayable kernel trace.
 pub struct KernelTrace {
+    /// Kernel name (`sconv`, `csrmm`, ...).
     pub name: &'static str,
     /// Total scalar loads/stores walked (pre-coalescing) — a cost proxy.
     pub scalar_accesses: u64,

@@ -6,10 +6,15 @@
 /// A CSR matrix of `f32` values.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CsrMatrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// The nnz stored values, row-major.
     pub values: Vec<f32>,
+    /// Column id of each stored value.
     pub colidx: Vec<u32>,
+    /// Row start offsets into `values`/`colidx` (`rows + 1` entries).
     pub rowptr: Vec<u32>,
 }
 

@@ -12,7 +12,9 @@ use super::CsrMatrix;
 /// An ELLPACK matrix: `rows x k` slots stored row-major.
 #[derive(Clone, Debug, PartialEq)]
 pub struct EllMatrix {
+    /// Row count.
     pub rows: usize,
+    /// Logical column count (of the dense equivalent).
     pub cols: usize,
     /// Slots per row (`Kmax`, possibly rounded up for alignment).
     pub k: usize,

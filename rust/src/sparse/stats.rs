@@ -10,20 +10,30 @@ use super::CsrMatrix;
 /// Aggregate sparsity statistics of a weight matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SparsityStats {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Stored nonzeros.
     pub nnz: usize,
+    /// `1 - nnz / (rows * cols)`.
     pub sparsity: f64,
+    /// Smallest per-row nonzero count.
     pub min_row_nnz: usize,
+    /// Largest per-row nonzero count (the ELL `Kmax`).
     pub max_row_nnz: usize,
+    /// Mean per-row nonzero count.
     pub mean_row_nnz: f64,
     /// max / mean row population; 1.0 = perfectly balanced.
     pub imbalance: f64,
+    /// CSR storage footprint (values + colidx + rowptr).
     pub csr_bytes: usize,
+    /// Dense storage footprint for comparison.
     pub dense_bytes: usize,
 }
 
 impl SparsityStats {
+    /// Compute the statistics of one CSR matrix.
     pub fn of(m: &CsrMatrix) -> Self {
         let row_nnz: Vec<usize> = (0..m.rows).map(|r| m.row_nnz(r)).collect();
         let mean = if m.rows == 0 {

@@ -23,6 +23,7 @@ use crate::config::ConvShape;
 /// filter tap `(r, s)` for output pixel `(h, w)`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StretchedFilter {
+    /// The bank with stretched (padded-input-offset) column ids.
     pub csr: CsrMatrix,
     /// Padded input height `Hp`.
     pub hp: usize,

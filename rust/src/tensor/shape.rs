@@ -5,13 +5,18 @@
 /// Dimensions of a rank-4 NCHW tensor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Dims4 {
+    /// Batch size (N).
     pub n: usize,
+    /// Channels (C).
     pub c: usize,
+    /// Spatial height (H).
     pub h: usize,
+    /// Spatial width (W).
     pub w: usize,
 }
 
 impl Dims4 {
+    /// `N x C x H x W` dimensions.
     pub const fn new(n: usize, c: usize, h: usize, w: usize) -> Self {
         Self { n, c, h, w }
     }
@@ -21,6 +26,7 @@ impl Dims4 {
         self.n * self.c * self.h * self.w
     }
 
+    /// Whether any axis is zero-length.
     pub const fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -42,6 +48,7 @@ impl Dims4 {
         self.h * self.w
     }
 
+    /// The dims as a `[n, c, h, w]` vector (for shape manifests).
     pub fn as_vec(&self) -> Vec<usize> {
         vec![self.n, self.c, self.h, self.w]
     }

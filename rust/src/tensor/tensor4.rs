@@ -47,33 +47,40 @@ impl Tensor4 {
         }
     }
 
+    /// The tensor's dimensions.
     pub fn dims(&self) -> Dims4 {
         self.dims
     }
 
+    /// The flat row-major NCHW buffer.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable view of the flat buffer.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume into the flat buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
 
+    /// Element at `(n, c, h, w)`.
     #[inline(always)]
     pub fn at(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
         self.data[self.dims.index(n, c, h, w)]
     }
 
+    /// Store `v` at `(n, c, h, w)`.
     #[inline(always)]
     pub fn set(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
         let i = self.dims.index(n, c, h, w);
         self.data[i] = v;
     }
 
+    /// Accumulate `v` into `(n, c, h, w)`.
     #[inline(always)]
     pub fn add(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
         let i = self.dims.index(n, c, h, w);

@@ -11,11 +11,17 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as `f64`).
     Num(f64),
+    /// A string (escapes resolved).
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, keys sorted.
     Obj(BTreeMap<String, Json>),
 }
 
@@ -35,6 +41,7 @@ impl Json {
         Ok(v)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -42,6 +49,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -49,6 +57,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
@@ -56,6 +65,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -63,6 +73,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -85,7 +96,9 @@ impl Json {
 /// Parse error with byte offset.
 #[derive(Clone, Debug, PartialEq)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub pos: usize,
+    /// What the parser expected or found.
     pub msg: String,
 }
 

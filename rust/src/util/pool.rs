@@ -8,6 +8,30 @@
 //! kernels decompose into *tiles* executed through [`WorkerPool::run`]
 //! over a shared dynamic tile queue.
 //!
+//! ## Jobs, tickets, and the completion handshake
+//!
+//! Work is submitted as *jobs* — `(num_tiles, task)` pairs pushed onto a
+//! FIFO job queue. A job is **complete when its tiles-completed counter
+//! reaches `num_tiles`**, not when every worker has woken and drained
+//! (the old full-quorum protocol): a 2-tile job on a 16-core host
+//! finishes as soon as its two tiles finish, without paying 15 worker
+//! wake-ups and park-downs. Submission wakes only as many workers as
+//! there are tiles to claim.
+//!
+//! Two submission surfaces exist:
+//!
+//! * [`WorkerPool::run`] — the blocking path every in-tree kernel uses:
+//!   submit, help drain tiles on the calling thread (as worker 0), block
+//!   until the handshake fires.
+//! * [`WorkerPool::submit`] / [`WorkerPool::submit_after`] — the
+//!   asynchronous, dependency-aware path: returns a [`JobTicket`]
+//!   immediately; multiple jobs coexist on the queue and workers drain
+//!   them FIFO. `submit_after` chains a job behind another ticket — its
+//!   tiles are not claimed until the dependency's handshake fires. This
+//!   is the structural hook for overlapping independent branch layers
+//!   (inception tables) and is what the serving pipeline's two in-flight
+//!   batches ride on.
+//!
 //! Scheduling is self-balancing: tiles are claimed from an atomic
 //! counter, so a worker that finishes its nominal share early keeps
 //! pulling tiles that a static partition would have assigned elsewhere
@@ -28,32 +52,73 @@
 //!
 //! Tasks must not call back into `run` on the same pool (the tile
 //! closure runs on pool workers; nested submission would deadlock the
-//! submit lock). The kernels all decompose into a single flat tile
-//! space, so this never arises in-tree.
+//! run lock). The kernels all decompose into a single flat tile space,
+//! so this never arises in-tree.
+//!
+//! Worker ids are unique among concurrently running tiles **of the same
+//! job**. Concurrent jobs (async submissions, or `run` + `submit` from
+//! different threads) may observe the same worker id on different jobs
+//! at the same time — per-worker scratch must therefore be owned per
+//! job (each kernel invocation carves scratch from its own workspace,
+//! so this holds structurally in-tree).
 
+use std::collections::VecDeque;
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 /// A tile task: `f(tile_index, worker_id)`. `worker_id` is stable for
 /// the duration of one closure call and unique among concurrently
-/// running tiles — index per-worker scratch with it.
+/// running tiles of the same job — index per-worker scratch with it.
 type Task<'a> = &'a (dyn Fn(usize, usize) + Sync);
 
-/// The job currently broadcast to the workers. The `'static` task
-/// reference is a lifetime-erased view of the caller's closure; it is
-/// only ever dereferenced while [`WorkerPool::run`] is blocked waiting
-/// for the job to drain, and is cleared before `run` returns.
-struct JobSlot {
-    epoch: u64,
-    task: Option<&'static (dyn Fn(usize, usize) + Sync)>,
+/// One queued tile job. The `'static` task reference is a
+/// lifetime-erased view of the submitter's closure; it is only ever
+/// dereferenced while the job is incomplete, and the [`JobTicket`]
+/// contract guarantees the closure outlives completion.
+struct Job {
+    task: &'static (dyn Fn(usize, usize) + Sync),
     num_tiles: usize,
     /// Static block-partition share (`ceil(num_tiles / workers)`) used
     /// only for steal accounting: executing a tile outside your own
     /// block means the dynamic queue rebalanced work.
     share: usize,
-    shutdown: bool,
+    /// Next unclaimed tile (claims may overshoot `num_tiles`; the first
+    /// overshooting claimant delists the job from the queue).
+    next_tile: AtomicUsize,
+    /// Tiles fully executed — the completion handshake: the job is done
+    /// when this reaches `num_tiles`, regardless of how many workers
+    /// ever woke for it.
+    completed: AtomicUsize,
+    /// First panic payload raised by a tile, re-thrown at the waiter.
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// Dependency: tiles of this job may not run until `dep` completes.
+    dep: Option<Arc<Job>>,
+    /// Completion flag + condvar the ticket waiter blocks on.
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    fn is_complete(&self) -> bool {
+        self.completed.load(Ordering::Acquire) >= self.num_tiles
+    }
+
+    /// Whether a worker may claim tiles right now: unclaimed tiles
+    /// remain and the dependency (if any) has completed.
+    fn runnable(&self) -> bool {
+        self.next_tile.load(Ordering::Relaxed) < self.num_tiles
+            && self.dep.as_ref().is_none_or(|d| d.is_complete())
+    }
+
+    /// Block until the completion handshake fires.
+    fn wait_done(&self) {
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            done = self.done_cv.wait(done).unwrap();
+        }
+    }
 }
 
 #[derive(Default)]
@@ -62,43 +127,56 @@ struct WorkerCounters {
     steals: AtomicU64,
 }
 
+/// The job queue: FIFO order doubles as priority, so an older batch's
+/// layer jobs drain before a pipelined successor's.
+struct Queue {
+    jobs: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
 struct Shared {
     workers: usize,
-    slot: Mutex<JobSlot>,
+    queue: Mutex<Queue>,
     start: Condvar,
-    /// Spawned workers still executing the current job.
-    active: Mutex<usize>,
-    done: Condvar,
-    next_tile: AtomicUsize,
     counters: Vec<WorkerCounters>,
     /// Tiles run on the inline path (1-worker pool or single-tile job)
     /// — kept out of the per-worker counters so the imbalance ratio
     /// reflects only genuinely distributed jobs.
     inline_tiles: AtomicU64,
     jobs: AtomicU64,
-    panicked: AtomicBool,
 }
 
 impl Shared {
-    /// Drain the tile queue as `worker`, then fold counters in.
-    fn drain(
-        &self,
-        task: &(dyn Fn(usize, usize) + Sync),
-        num_tiles: usize,
-        share: usize,
-        worker: usize,
-    ) {
+    /// Claim and execute `job`'s unclaimed tiles as `worker`, folding
+    /// telemetry in. The worker that claims past the end delists the
+    /// job; the worker that completes the final tile performs the
+    /// completion handshake.
+    fn drain(&self, job: &Arc<Job>, worker: usize) {
         let mut tiles = 0u64;
         let mut steals = 0u64;
         loop {
-            let t = self.next_tile.fetch_add(1, Ordering::Relaxed);
-            if t >= num_tiles {
+            let t = job.next_tile.fetch_add(1, Ordering::Relaxed);
+            if t >= job.num_tiles {
+                self.delist(job);
                 break;
             }
-            task(t, worker);
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                (job.task)(t, worker)
+            }));
+            if let Err(payload) = res {
+                let mut slot = job.panic_payload.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
             tiles += 1;
-            if t / share != worker {
+            if t / job.share != worker {
                 steals += 1;
+            }
+            // A panicked tile still counts as completed — the waiter
+            // re-raises the payload, but must not hang on the handshake.
+            if job.completed.fetch_add(1, Ordering::AcqRel) + 1 == job.num_tiles {
+                self.finish(job);
             }
         }
         if tiles > 0 {
@@ -108,45 +186,57 @@ impl Shared {
                 .fetch_add(steals, Ordering::Relaxed);
         }
     }
+
+    /// Remove a fully claimed job from the queue (idempotent).
+    fn delist(&self, job: &Arc<Job>) {
+        let mut q = self.queue.lock().unwrap();
+        if let Some(pos) = q.jobs.iter().position(|j| Arc::ptr_eq(j, job)) {
+            q.jobs.remove(pos);
+        }
+    }
+
+    /// Completion handshake: wake the ticket waiter, then wake workers
+    /// in case a queued job was blocked on this one as a dependency.
+    fn finish(&self, job: &Job) {
+        {
+            let mut done = job.done.lock().unwrap();
+            *done = true;
+        }
+        job.done_cv.notify_all();
+        // Take the queue lock before notifying so a worker between its
+        // runnable check and its wait cannot miss the wakeup.
+        let q = self.queue.lock().unwrap();
+        if !q.jobs.is_empty() {
+            self.start.notify_all();
+        }
+        drop(q);
+    }
 }
 
-fn worker_loop(shared: std::sync::Arc<Shared>, worker: usize) {
-    let mut seen = 0u64;
+fn worker_loop(shared: Arc<Shared>, worker: usize) {
     loop {
-        let (task, num_tiles, share) = {
-            let mut slot = shared.slot.lock().unwrap();
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
             loop {
-                if slot.shutdown {
+                if q.shutdown {
                     return;
                 }
-                if slot.epoch != seen {
-                    if let Some(task) = slot.task {
-                        seen = slot.epoch;
-                        break (task, slot.num_tiles, slot.share);
-                    }
+                if let Some(j) = q.jobs.iter().find(|j| j.runnable()).cloned() {
+                    break j;
                 }
-                slot = shared.start.wait(slot).unwrap();
+                q = shared.start.wait(q).unwrap();
             }
         };
-        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            shared.drain(task, num_tiles, share, worker);
-        }));
-        if res.is_err() {
-            shared.panicked.store(true, Ordering::Relaxed);
-        }
-        let mut active = shared.active.lock().unwrap();
-        *active -= 1;
-        if *active == 0 {
-            shared.done.notify_all();
-        }
+        shared.drain(&job, worker);
     }
 }
 
 /// Point-in-time pool telemetry (cumulative since pool creation).
 #[derive(Clone, Debug)]
 pub struct PoolStats {
+    /// Worker count, including the submitting thread (worker 0).
     pub workers: usize,
-    /// `run` invocations.
+    /// Jobs submitted (`run` invocations plus async `submit`s).
     pub jobs: u64,
     /// Tiles executed by distributed jobs, per worker id.
     pub tiles: Vec<u64>,
@@ -161,10 +251,13 @@ pub struct PoolStats {
 }
 
 impl PoolStats {
+    /// All tiles ever executed, inline and distributed.
     pub fn total_tiles(&self) -> u64 {
         self.inline_tiles + self.tiles.iter().sum::<u64>()
     }
 
+    /// Tiles claimed across the static share boundary, summed over
+    /// workers.
     pub fn total_steals(&self) -> u64 {
         self.steals.iter().sum()
     }
@@ -187,32 +280,99 @@ impl PoolStats {
 /// threads (the submitting thread always participates as worker 0), so
 /// `WorkerPool::new(1)` is a zero-thread inline executor.
 pub struct WorkerPool {
-    shared: std::sync::Arc<Shared>,
+    shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
-    /// Serialises concurrent `run` calls from different threads.
-    submit: Mutex<()>,
+    /// Serialises concurrent `run` calls from different threads (worker
+    /// id 0 — the helping caller — must be unique per job).
+    run_lock: Mutex<()>,
+}
+
+/// Handle to an asynchronously submitted job (see [`WorkerPool::submit`]).
+///
+/// The ticket is the job's lifeline: dropping it blocks until the job
+/// completes (helping to drain unclaimed tiles on the calling thread),
+/// so the borrowed task closure can never dangle on a live worker.
+/// Prefer [`JobTicket::wait`], which additionally re-raises the first
+/// panic any tile produced.
+#[must_use = "a JobTicket blocks on drop; wait() it where you want the barrier"]
+pub struct JobTicket<'a> {
+    pool: &'a WorkerPool,
+    job: Arc<Job>,
+    waited: bool,
+    _marker: PhantomData<&'a ()>,
+}
+
+impl JobTicket<'_> {
+    /// Whether every tile of the job has finished executing.
+    pub fn is_complete(&self) -> bool {
+        self.job.is_complete()
+    }
+
+    /// Block until the job completes, helping to execute unclaimed
+    /// tiles (dependencies first) on the calling thread as worker 0.
+    /// Re-raises the first panic any tile produced.
+    pub fn wait(mut self) {
+        self.join(true);
+        let payload = self.job.panic_payload.lock().unwrap().take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Drain the dependency chain deepest-first, then the job itself,
+    /// blocking on each handshake — so waiting on a 1-thread pool still
+    /// makes progress. Never panics; idempotent.
+    ///
+    /// `take_lock` serialises the helping drains through the pool's run
+    /// lock so two threads waiting tickets whose chains share a job can
+    /// never both execute that job's tiles as worker 0 (kernels key
+    /// per-worker scratch by id). [`WorkerPool::run`] passes `false`
+    /// because it already holds the lock.
+    fn join(&mut self, take_lock: bool) {
+        if self.waited {
+            return;
+        }
+        self.waited = true;
+        let mut chain = vec![self.job.clone()];
+        while let Some(d) = chain.last().unwrap().dep.clone() {
+            chain.push(d);
+        }
+        for job in chain.iter().rev() {
+            {
+                let _guard = take_lock.then(|| self.pool.run_lock.lock().unwrap());
+                self.pool.shared.drain(job, 0);
+            }
+            job.wait_done();
+        }
+    }
+}
+
+impl Drop for JobTicket<'_> {
+    fn drop(&mut self) {
+        self.join(true);
+        if !std::thread::panicking() {
+            if let Some(p) = self.job.panic_payload.lock().unwrap().take() {
+                std::panic::resume_unwind(p);
+            }
+        }
+    }
 }
 
 impl WorkerPool {
+    /// Build a pool that runs jobs across `threads` workers (clamped to
+    /// at least 1); spawns `threads - 1` OS threads.
     pub fn new(threads: usize) -> Self {
         let workers = threads.max(1);
-        let shared = std::sync::Arc::new(Shared {
+        let shared = Arc::new(Shared {
             workers,
-            slot: Mutex::new(JobSlot {
-                epoch: 0,
-                task: None,
-                num_tiles: 0,
-                share: 1,
+            queue: Mutex::new(Queue {
+                jobs: VecDeque::new(),
                 shutdown: false,
             }),
             start: Condvar::new(),
-            active: Mutex::new(0),
-            done: Condvar::new(),
-            next_tile: AtomicUsize::new(0),
             counters: (0..workers).map(|_| WorkerCounters::default()).collect(),
             inline_tiles: AtomicU64::new(0),
             jobs: AtomicU64::new(0),
-            panicked: AtomicBool::new(false),
         });
         let handles = (1..workers)
             .map(|w| {
@@ -226,7 +386,7 @@ impl WorkerPool {
         Self {
             shared,
             handles,
-            submit: Mutex::new(()),
+            run_lock: Mutex::new(()),
         }
     }
 
@@ -238,22 +398,24 @@ impl WorkerPool {
 
     /// Execute `task` for every tile index in `0..num_tiles` across the
     /// pool, blocking until all tiles are done. The submitting thread
-    /// participates as worker 0; tiles are claimed dynamically.
+    /// participates as worker 0; tiles are claimed dynamically, and the
+    /// return fires on the tiles-completed handshake — idle workers are
+    /// neither woken nor waited for.
     pub fn run(&self, num_tiles: usize, task: Task<'_>) {
         if num_tiles == 0 {
             return;
         }
         let sh = &self.shared;
-        sh.jobs.fetch_add(1, Ordering::Relaxed);
         if self.handles.is_empty() || num_tiles == 1 {
             // Inline path: nothing to distribute (or no one to share
             // with) — run every tile on the calling thread. Still
-            // serialised by the submit lock so worker id 0 is unique
+            // serialised by the run lock so worker id 0 is unique
             // across concurrent `run` calls from different threads
             // (kernels key shared scratch by worker id); the guard is
             // released before re-raising a task panic so it never
             // poisons the pool.
-            let guard = self.submit.lock().unwrap();
+            sh.jobs.fetch_add(1, Ordering::Relaxed);
+            let guard = self.run_lock.lock().unwrap();
             let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 for t in 0..num_tiles {
                     task(t, 0);
@@ -268,48 +430,99 @@ impl WorkerPool {
             return;
         }
 
-        let job_guard = self.submit.lock().unwrap();
-        let share = num_tiles.div_ceil(sh.workers);
-        sh.next_tile.store(0, Ordering::SeqCst);
-        *sh.active.lock().unwrap() = self.handles.len();
-        {
-            let mut slot = sh.slot.lock().unwrap();
-            slot.epoch = slot.epoch.wrapping_add(1);
-            // SAFETY: the borrow outlives the job — `run` does not
-            // return (even on panic, see below) until every worker has
-            // drained and the slot is cleared.
-            let erased: &'static (dyn Fn(usize, usize) + Sync) =
-                unsafe { std::mem::transmute(task) };
-            slot.task = Some(erased);
-            slot.num_tiles = num_tiles;
-            slot.share = share;
-            sh.start.notify_all();
-        }
-
-        let main_res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            sh.drain(task, num_tiles, share, 0);
-        }));
-
-        let mut active = sh.active.lock().unwrap();
-        while *active > 0 {
-            active = sh.done.wait(active).unwrap();
-        }
-        drop(active);
-        sh.slot.lock().unwrap().task = None;
-
-        // Release the submit lock *before* re-raising so a caller that
+        let guard = self.run_lock.lock().unwrap();
+        // SAFETY: the ticket is joined before `run` returns, so the
+        // erased task reference never outlives this call.
+        let mut ticket = unsafe { self.submit_inner(num_tiles, task, None) };
+        ticket.join(false);
+        let payload = ticket.job.panic_payload.lock().unwrap().take();
+        drop(ticket); // join already ran; drop is a no-op
+        // Release the run lock *before* re-raising so a caller that
         // catches the panic can keep using the pool (the workers are
         // healthy — only the task closure failed).
-        let worker_panicked = sh.panicked.swap(false, Ordering::Relaxed);
-        drop(job_guard);
-        if let Err(payload) = main_res {
-            std::panic::resume_unwind(payload);
-        }
-        if worker_panicked {
-            panic!("worker pool task panicked");
+        drop(guard);
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
         }
     }
 
+    /// Enqueue a job without blocking and return its [`JobTicket`].
+    /// Wakes at most `min(num_tiles, spawned workers)` workers — a
+    /// 2-tile job on a many-core host no longer pays a full-pool
+    /// wake/park round trip.
+    ///
+    /// # Safety
+    ///
+    /// The returned ticket must be waited or dropped (both block until
+    /// completion) before `task`'s referent is invalidated — in
+    /// particular the ticket must not be leaked via `mem::forget`,
+    /// which would let workers run a dangling closure.
+    pub unsafe fn submit<'a>(&'a self, num_tiles: usize, task: Task<'a>) -> JobTicket<'a> {
+        self.submit_inner(num_tiles, task, None)
+    }
+
+    /// Like [`WorkerPool::submit`], but the job's tiles are not claimed
+    /// until `dep`'s completion handshake fires — the dependency-aware
+    /// form used to chain layer steps without blocking the submitter.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`WorkerPool::submit`].
+    pub unsafe fn submit_after<'a>(
+        &'a self,
+        num_tiles: usize,
+        task: Task<'a>,
+        dep: &JobTicket<'a>,
+    ) -> JobTicket<'a> {
+        self.submit_inner(num_tiles, task, Some(dep.job.clone()))
+    }
+
+    /// # Safety
+    ///
+    /// See [`WorkerPool::submit`]: the caller guarantees the ticket is
+    /// joined before the task reference dies.
+    unsafe fn submit_inner<'a>(
+        &'a self,
+        num_tiles: usize,
+        task: Task<'a>,
+        dep: Option<Arc<Job>>,
+    ) -> JobTicket<'a> {
+        let sh = &self.shared;
+        sh.jobs.fetch_add(1, Ordering::Relaxed);
+        // SAFETY: per the function contract the closure outlives the
+        // job; the reference is never dereferenced after completion.
+        let erased: &'static (dyn Fn(usize, usize) + Sync) = std::mem::transmute(task);
+        let job = Arc::new(Job {
+            task: erased,
+            num_tiles,
+            share: num_tiles.div_ceil(sh.workers).max(1),
+            next_tile: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            panic_payload: Mutex::new(None),
+            dep,
+            done: Mutex::new(num_tiles == 0),
+            done_cv: Condvar::new(),
+        });
+        if num_tiles > 0 {
+            {
+                let mut q = sh.queue.lock().unwrap();
+                q.jobs.push_back(job.clone());
+            }
+            // Sub-quorum wakeup: never rouse more workers than there
+            // are tiles to claim.
+            for _ in 0..num_tiles.min(self.handles.len()) {
+                sh.start.notify_one();
+            }
+        }
+        JobTicket {
+            pool: self,
+            job,
+            waited: false,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Snapshot the cumulative telemetry counters.
     pub fn stats(&self) -> PoolStats {
         let sh = &self.shared;
         PoolStats {
@@ -333,10 +546,10 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut slot = self.shared.slot.lock().unwrap();
-            slot.shutdown = true;
-            self.shared.start.notify_all();
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
         }
+        self.shared.start.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -359,6 +572,7 @@ unsafe impl Send for SharedSlice<'_> {}
 unsafe impl Sync for SharedSlice<'_> {}
 
 impl<'a> SharedSlice<'a> {
+    /// Wrap `slice` for carving disjoint tile views.
     pub fn new(slice: &'a mut [f32]) -> Self {
         Self {
             ptr: slice.as_mut_ptr(),
@@ -383,7 +597,7 @@ impl<'a> SharedSlice<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicBool, AtomicU64};
 
     #[test]
     fn runs_every_tile_exactly_once() {
@@ -457,6 +671,92 @@ mod tests {
         });
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn async_submit_completes_on_wait() {
+        for threads in [1, 4] {
+            let pool = WorkerPool::new(threads);
+            let hits: Vec<AtomicU64> = (0..23).map(|_| AtomicU64::new(0)).collect();
+            let task = |t: usize, _w: usize| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            };
+            let ticket = unsafe { pool.submit(23, &task) };
+            ticket.wait();
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "t{threads}");
+        }
+    }
+
+    #[test]
+    fn dropping_a_ticket_blocks_until_the_job_completes() {
+        let pool = WorkerPool::new(4);
+        let count = AtomicU64::new(0);
+        {
+            let task = |_t: usize, _w: usize| {
+                count.fetch_add(1, Ordering::Relaxed);
+            };
+            let _ticket = unsafe { pool.submit(50, &task) };
+            // ticket dropped here; must block until every tile ran
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn concurrent_jobs_share_the_queue() {
+        let pool = WorkerPool::new(4);
+        let a = AtomicU64::new(0);
+        let b = AtomicU64::new(0);
+        let task_a = |_t: usize, _w: usize| {
+            a.fetch_add(1, Ordering::Relaxed);
+        };
+        let task_b = |_t: usize, _w: usize| {
+            b.fetch_add(1, Ordering::Relaxed);
+        };
+        let ta = unsafe { pool.submit(31, &task_a) };
+        let tb = unsafe { pool.submit(17, &task_b) };
+        tb.wait();
+        ta.wait();
+        assert_eq!(a.load(Ordering::Relaxed), 31);
+        assert_eq!(b.load(Ordering::Relaxed), 17);
+    }
+
+    #[test]
+    fn dependent_job_runs_only_after_its_dependency_completes() {
+        for threads in [1, 2, 8] {
+            let pool = WorkerPool::new(threads);
+            let dep_done = AtomicU64::new(0);
+            let order_ok = AtomicBool::new(true);
+            let task_a = |_t: usize, _w: usize| {
+                // Make the dependency observable (and slow enough that
+                // an eager dependent would race ahead of it).
+                std::thread::yield_now();
+                dep_done.fetch_add(1, Ordering::SeqCst);
+            };
+            let task_b = |_t: usize, _w: usize| {
+                if dep_done.load(Ordering::SeqCst) != 16 {
+                    order_ok.store(false, Ordering::SeqCst);
+                }
+            };
+            let ta = unsafe { pool.submit(16, &task_a) };
+            let tb = unsafe { pool.submit_after(16, &task_b, &ta) };
+            tb.wait();
+            ta.wait();
+            assert!(order_ok.load(Ordering::SeqCst), "t{threads}");
+        }
+    }
+
+    #[test]
+    fn sub_quorum_jobs_complete_without_full_pool_participation() {
+        // 2 tiles on an 8-worker pool: the handshake must fire as soon
+        // as both tiles finish, not once all 7 spawned workers cycled.
+        let pool = WorkerPool::new(8);
+        for _ in 0..50 {
+            let count = AtomicU64::new(0);
+            pool.run(2, &|_t, _w| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), 2);
         }
     }
 }

@@ -11,6 +11,7 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// An empty stopwatch.
     pub fn new() -> Self {
         Self::default()
     }
@@ -67,6 +68,7 @@ impl Stopwatch {
             .collect()
     }
 
+    /// Discard every recorded lap.
     pub fn clear(&mut self) {
         self.laps.clear();
     }
@@ -79,6 +81,7 @@ pub struct ScopedTimer<F: FnMut(Duration)> {
 }
 
 impl<F: FnMut(Duration)> ScopedTimer<F> {
+    /// Start timing; `sink` receives the elapsed time on drop.
     pub fn new(sink: F) -> Self {
         Self {
             start: Instant::now(),

@@ -88,7 +88,7 @@ fn property_batcher_never_exceeds_capacity_and_preserves_order() {
             tx.send(i).unwrap();
         }
         drop(tx);
-        let b = Batcher::new(
+        let mut b = Batcher::new(
             rx,
             BatcherConfig {
                 batch_size: cap,
@@ -298,7 +298,7 @@ fn property_ell_fixed_k_respects_manifest_contract() {
 fn property_batcher_formation_time_respects_deadline() {
     // A starved batcher must emit within ~max_wait of the first arrival.
     let (tx, rx) = channel();
-    let b = Batcher::new(
+    let mut b = Batcher::new(
         rx,
         BatcherConfig {
             batch_size: 64,

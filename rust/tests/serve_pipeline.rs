@@ -1,0 +1,194 @@
+//! The ISSUE's acceptance properties for the pipelined serving executor
+//! and incremental replans:
+//!
+//! * pipelined (`pipeline_depth = 2`) and sequential (`= 1`) serving
+//!   produce **byte-identical** logits for the same request stream
+//!   under a fixed plan;
+//! * an incremental replan reuses the `Arc<LayerPlan>` pointers of
+//!   untouched layers and compiles exactly one plan for a single
+//!   router flip (pointer-equality + build-count asserted).
+
+use escoin::config::minicnn;
+use escoin::conv::{Method, PlanCache};
+use escoin::coordinator::{BatcherConfig, RouterConfig, ServerConfig, ServerHandle};
+use escoin::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A server config with replans and router exploration disabled, so the
+/// per-layer methods — and therefore the exact floating-point program —
+/// are identical regardless of pipelining.
+fn fixed_plan_cfg(pipeline_depth: usize, batch_size: usize) -> ServerConfig {
+    ServerConfig {
+        network: "minicnn".into(),
+        batcher: BatcherConfig {
+            batch_size,
+            max_wait: Duration::from_millis(2),
+        },
+        weight_seed: 77,
+        threads: 3,
+        router: RouterConfig {
+            explore_every: 0,
+            ..Default::default()
+        },
+        replan_every: 0,
+        pipeline_depth,
+    }
+}
+
+/// Serve `images` through a server and return the logits in submission
+/// order.
+fn serve_stream(cfg: ServerConfig, images: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let server = ServerHandle::start(cfg).expect("server start");
+    let pending: Vec<_> = images
+        .iter()
+        .map(|img| server.submit(img.clone()).expect("submit"))
+        .collect();
+    let logits: Vec<Vec<f32>> = pending
+        .into_iter()
+        .map(|rx| {
+            rx.recv_timeout(Duration::from_secs(120))
+                .expect("response")
+                .logits
+        })
+        .collect();
+    server.shutdown().expect("shutdown");
+    logits
+}
+
+#[test]
+fn pipelined_serving_is_byte_identical_to_sequential() {
+    // minicnn's input layer is 3x16x16.
+    let image_elems = 3 * 16 * 16;
+    let mut rng = Rng::new(1234);
+    let images: Vec<Vec<f32>> = (0..23).map(|_| rng.activation_vec(image_elems)).collect();
+
+    let sequential = serve_stream(fixed_plan_cfg(1, 4), &images);
+    let pipelined = serve_stream(fixed_plan_cfg(2, 4), &images);
+
+    assert_eq!(sequential.len(), pipelined.len());
+    for (i, (a, b)) in sequential.iter().zip(&pipelined).enumerate() {
+        assert_eq!(a, b, "request {i}: pipelined logits diverged");
+    }
+}
+
+#[test]
+fn pipelined_serving_is_byte_identical_at_batch_one() {
+    // Batch 1 is the latency-sensitive path the sub-quorum handshake
+    // targets; pin its numerics too.
+    let mut rng = Rng::new(4321);
+    let images: Vec<Vec<f32>> = (0..9).map(|_| rng.activation_vec(3 * 16 * 16)).collect();
+    let sequential = serve_stream(fixed_plan_cfg(1, 1), &images);
+    let pipelined = serve_stream(fixed_plan_cfg(2, 1), &images);
+    assert_eq!(sequential, pipelined);
+}
+
+#[test]
+fn deeper_pipeline_depths_are_supported_and_correct() {
+    // Depths beyond 2 are allowed (each slot gets an arena); answers
+    // must stay correct and complete.
+    let mut rng = Rng::new(99);
+    let images: Vec<Vec<f32>> = (0..13).map(|_| rng.activation_vec(3 * 16 * 16)).collect();
+    let want = serve_stream(fixed_plan_cfg(1, 4), &images);
+    let got = serve_stream(fixed_plan_cfg(4, 4), &images);
+    assert_eq!(want, got);
+}
+
+#[test]
+fn incremental_replan_reuses_untouched_layer_plans() {
+    let net = minicnn();
+    let cache = PlanCache::build(&net, 42);
+    let base = cache.network_plan(&net, 4, |_, _| Method::DirectSparse);
+    let builds = cache.layer_builds();
+
+    // Flip exactly one layer's method — the replanned network must
+    // compile exactly one LayerPlan and keep every other Arc.
+    let flipped = cache.network_plan(&net, 4, |name, _| {
+        if name == "conv2" {
+            Method::LoweredGemm
+        } else {
+            Method::DirectSparse
+        }
+    });
+    assert_eq!(
+        cache.layer_builds() - builds,
+        1,
+        "a single flip must rebuild exactly one layer plan"
+    );
+
+    let a = base.conv_plans();
+    let b = flipped.conv_plans();
+    assert_eq!(a.len(), b.len());
+    for ((name_a, plan_a), (name_b, plan_b)) in a.iter().zip(b.iter()) {
+        assert_eq!(name_a, name_b);
+        if name_a == "conv2" {
+            assert!(
+                !Arc::ptr_eq(plan_a, plan_b),
+                "the flipped layer must get a fresh plan"
+            );
+            assert_eq!(plan_b.method(), Method::LoweredGemm);
+        } else {
+            assert!(
+                Arc::ptr_eq(plan_a, plan_b),
+                "{name_a} was not flipped and must keep its cached Arc"
+            );
+        }
+    }
+
+    // Flipping back is free: the (layer, method) pair is cached.
+    let back = cache.network_plan(&net, 4, |_, _| Method::DirectSparse);
+    assert_eq!(cache.layer_builds() - builds, 1, "flip-back must be a cache hit");
+    for ((_, plan_a), (_, plan_c)) in a.iter().zip(back.conv_plans().iter()) {
+        assert!(Arc::ptr_eq(plan_a, plan_c));
+    }
+}
+
+#[test]
+fn server_replans_incrementally_under_router_churn() {
+    // Force method churn with aggressive exploration and a tiny replan
+    // cadence; the replan metrics must show that rebuilds stayed
+    // incremental (bounded by the distinct (layer, method) pairs, far
+    // below layers-per-replan), and answers must stay within fp
+    // tolerance across plan swaps.
+    let cfg = ServerConfig {
+        network: "minicnn".into(),
+        batcher: BatcherConfig {
+            batch_size: 2,
+            max_wait: Duration::from_millis(1),
+        },
+        weight_seed: 13,
+        threads: 2,
+        router: RouterConfig {
+            explore_every: 3,
+            ..Default::default()
+        },
+        replan_every: 2,
+        pipeline_depth: 2,
+    };
+    let server = ServerHandle::start(cfg).unwrap();
+    let mut rng = Rng::new(14);
+    let img = rng.activation_vec(server.image_elems());
+    let first = server.submit(img.clone()).unwrap().recv().unwrap();
+    for _ in 0..30 {
+        let resp = server.submit(img.clone()).unwrap().recv().unwrap();
+        for (x, y) in resp.logits.iter().zip(&first.logits) {
+            assert!(
+                (x - y).abs() <= 1e-3 + 1e-3 * y.abs().max(x.abs()),
+                "{x} vs {y} after replan"
+            );
+        }
+    }
+    let stats = server.shutdown().unwrap();
+    let s = &stats.snapshot;
+    assert_eq!(s.replans, stats.replans);
+    if s.replans > 0 {
+        // minicnn has 2 sparse conv layers and 3 usable methods, plus
+        // the initial 3 builds — incremental replans can never compile
+        // more than the distinct-(layer, method) universe.
+        assert!(
+            s.replan_layers_rebuilt <= 2 * 3,
+            "replans rebuilt {} layer plans — not incremental",
+            s.replan_layers_rebuilt
+        );
+    }
+}
