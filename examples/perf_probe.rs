@@ -20,6 +20,13 @@
 //!   re-transformed, what `build_plan` used to do) vs an incremental
 //!   replan through the shared `PlanCache` (`plan_ns`, only the flipped
 //!   layer compiles).
+//! * `googlenet-dag-b1`/`b8` — whole-network GoogLeNet iteration:
+//!   sequential topological walk (`free_ns`) vs the asynchronous DAG
+//!   walk (`plan_ns`) that overlaps each inception module's four
+//!   branch chains as dependency-chained pool jobs. Batch 1 is the
+//!   latency case branch overlap targets (per-layer tile counts are
+//!   smallest there); these rows are the heaviest in the probe —
+//!   trim `ESCOIN_BENCH_ITERS` when iterating.
 //!
 //! ```text
 //! cargo run --release --example perf_probe [--out PATH]
@@ -28,10 +35,10 @@
 //! Knobs: `ESCOIN_THREADS`, `ESCOIN_BENCH_WARMUP`, `ESCOIN_BENCH_ITERS`.
 
 use escoin::bench_harness::{bench_median, BenchOpts};
-use escoin::config::{alexnet, ConvShape};
+use escoin::config::{alexnet, googlenet, ConvShape};
 use escoin::conv::{
     lowered_gemm_parallel, lowered_spmm_parallel, sconv_parallel, ConvWeights, LayerPlan, Method,
-    NetworkPlan, PlanCache, Workspace,
+    NetworkPlan, PlanCache, Workspace, WorkspaceArena,
 };
 use escoin::coordinator::{BatcherConfig, RouterConfig, ServerConfig, ServerHandle};
 use escoin::tensor::{Dims4, Tensor4};
@@ -188,6 +195,35 @@ fn main() {
         );
     }
 
+    // DAG-vs-sequential walk on GoogLeNet: the async branch-overlap
+    // executor against the sequential topological walk, same compiled
+    // plan, same shared pool — what the inception modules' 4-way
+    // branch/merge graph buys end to end.
+    {
+        let net = googlenet();
+        for (b, label) in [(1usize, "googlenet-dag-b1"), (8usize, "googlenet-dag-b8")] {
+            let plan = NetworkPlan::build(&net, b, 42, |_, _| Method::DirectSparse);
+            let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+            let sequential = bench_median(bench, || {
+                plan.run(&pool, &mut arena);
+            });
+            let dag = bench_median(bench, || {
+                plan.run_async(None, &pool, &mut arena);
+            });
+            rows.push(Row {
+                shape: "googlenet",
+                method: label,
+                batch: b,
+                free_ns: sequential.as_nanos(),
+                plan_ns: dag.as_nanos(),
+            });
+            println!(
+                "{label}: sequential-walk {sequential:?}  dag-walk {dag:?} ({:.2}x)",
+                sequential.as_secs_f64() / dag.as_secs_f64().max(1e-12)
+            );
+        }
+    }
+
     // Replan cost: the old executor rebuilt every layer (weights
     // regenerated, operands re-stretched / re-CSR'd) on any router
     // flip; the PlanCache rebuilds only the flipped layer.
@@ -295,6 +331,7 @@ fn serve_wall(
         },
         replan_every: 0,
         pipeline_depth: depth,
+        strict_replan: false,
     })
     .expect("server start");
     let mut rng = Rng::new(100 + seed);

@@ -40,6 +40,9 @@ impl Fig11Row {
 pub fn fig11_overall(net: &Network, opts: Fig8Opts) -> Fig11Row {
     let mut scaled = net.clone();
     if opts.spatial_scale > 1 {
+        // See fig9: scaled conv shapes no longer chain exactly, so a
+        // DAG network (GoogLeNet) must run as the seed-style chain.
+        scaled = scaled.into_chain();
         for layer in &mut scaled.layers {
             if let crate::config::LayerKind::Conv(c) = &mut layer.kind {
                 *c = c.scaled_spatial(opts.spatial_scale);

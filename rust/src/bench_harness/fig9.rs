@@ -44,6 +44,10 @@ const TRACKED: [&str; 5] = ["im2col", "sgemm", "csrmm", "sconv", "pad_in"];
 pub fn fig9_breakdown(net: &Network, opts: Fig8Opts) -> Vec<Fig9Row> {
     let mut scaled = net.clone();
     if opts.spatial_scale > 1 {
+        // Scaling conv layers alone breaks the exact shape chaining a
+        // DAG plan (GoogLeNet) validates — fall back to the seed-style
+        // chain, whose per-layer timings only depend on shapes.
+        scaled = scaled.into_chain();
         for layer in &mut scaled.layers {
             if let crate::config::LayerKind::Conv(c) = &mut layer.kind {
                 *c = c.scaled_spatial(opts.spatial_scale);

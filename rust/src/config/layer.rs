@@ -194,6 +194,30 @@ pub enum PoolKind {
     Avg,
 }
 
+/// Pooled output extent along one spatial axis: `(size + 2p - k)/s + 1`
+/// with floor (PyTorch-style) or ceil (Caffe-style) division. Caffe's
+/// ceil mode additionally refuses to start a window entirely inside the
+/// padding, clamping the count back by one when `(o-1)*s >= size + p`
+/// — GoogLeNet's published geometry (112→56→28→14→7 through its 3x3/s2
+/// pools) only works out under ceil mode, which is why the DAG-form
+/// `googlenet()` table uses it.
+pub fn pool_out_dim(size: usize, k: usize, stride: usize, pad: usize, ceil: bool) -> usize {
+    assert!(
+        size + 2 * pad >= k,
+        "pool window {k} exceeds padded input ({size} + 2*{pad})"
+    );
+    let span = size + 2 * pad - k;
+    let mut o = if ceil {
+        span.div_ceil(stride) + 1
+    } else {
+        span / stride + 1
+    };
+    if ceil && pad > 0 && (o - 1) * stride >= size + pad {
+        o -= 1;
+    }
+    o
+}
+
 /// One network layer, as enumerated by the network tables.
 #[derive(Clone, Debug, PartialEq)]
 pub enum LayerKind {
@@ -218,6 +242,23 @@ pub enum LayerKind {
         stride: usize,
         /// Zero padding on every spatial side.
         pad: usize,
+        /// Ceil-mode output extents (Caffe semantics; see
+        /// [`pool_out_dim`]). The GoogLeNet table needs this; every
+        /// other network pools with exact (floor == ceil) geometry.
+        ceil: bool,
+    },
+    /// Channel-wise concatenation of this layer's declared dataflow
+    /// inputs (`Layer::inputs`), producing `c` channels of `h x w` —
+    /// the merge point of an inception module. The inputs' channel
+    /// counts must sum to `c` and their spatial dims must all be
+    /// `h x w`; `config::Network::validate_graph` checks this.
+    Concat {
+        /// Output channels (sum over inputs).
+        c: usize,
+        /// Spatial height (shared by every input).
+        h: usize,
+        /// Spatial width (shared by every input).
+        w: usize,
     },
     /// Elementwise ReLU over `elems` activations.
     Relu { elems: usize },
@@ -233,7 +274,10 @@ impl LayerKind {
         match self {
             LayerKind::Conv(c) => c.macs(n),
             LayerKind::Fc(f) => f.macs(n),
-            LayerKind::Pool { .. } | LayerKind::Relu { .. } | LayerKind::Lrn { .. } => 0,
+            LayerKind::Pool { .. }
+            | LayerKind::Concat { .. }
+            | LayerKind::Relu { .. }
+            | LayerKind::Lrn { .. } => 0,
         }
     }
 
@@ -315,6 +359,32 @@ mod tests {
         assert_eq!(s.w, 5);
         let s2 = c.scaled_spatial(2);
         assert_eq!(s2.h, 5);
+    }
+
+    #[test]
+    fn pool_out_dim_floor_vs_ceil() {
+        // GoogLeNet's 3x3/s2 pool chain needs ceil mode: 112→56→28→14→7.
+        for (h, want) in [(112, 56), (56, 28), (28, 14), (14, 7)] {
+            assert_eq!(pool_out_dim(h, 3, 2, 0, true), want);
+            assert_eq!(pool_out_dim(h, 3, 2, 0, false), want - 1);
+        }
+        // Exact divisions agree in both modes (the AlexNet pools).
+        assert_eq!(pool_out_dim(55, 3, 2, 0, false), 27);
+        assert_eq!(pool_out_dim(55, 3, 2, 0, true), 27);
+        // ResNet's padded stem pool floors: (112 + 2 - 3)/2 + 1 = 56.
+        assert_eq!(pool_out_dim(112, 3, 2, 1, false), 56);
+        // The in-module 3x3/s1/p1 inception pool preserves dims.
+        assert_eq!(pool_out_dim(28, 3, 1, 1, true), 28);
+        // Ceil clamp: never start a window entirely inside the padding.
+        assert_eq!(pool_out_dim(3, 2, 2, 1, true), 2);
+    }
+
+    #[test]
+    fn concat_is_weightless_and_mac_free() {
+        let k = LayerKind::Concat { c: 256, h: 28, w: 28 };
+        assert_eq!(k.weights(), 0);
+        assert_eq!(k.macs(8), 0);
+        assert!(k.as_conv().is_none());
     }
 
     #[test]

@@ -10,6 +10,8 @@ mod layer;
 mod network;
 mod networks;
 
-pub use layer::{ConvShape, FcShape, LayerKind, PoolKind};
+pub use layer::{pool_out_dim, ConvShape, FcShape, LayerKind, PoolKind};
 pub use network::{Layer, Network, NetworkSummary};
-pub use networks::{alexnet, all_networks, googlenet, minicnn, network_by_name, resnet50};
+pub use networks::{
+    alexnet, all_networks, googlenet, minicnn, miniception, network_by_name, resnet50,
+};

@@ -10,15 +10,37 @@ pub struct Layer {
     pub name: String,
     /// The layer's kind and geometry.
     pub kind: LayerKind,
+    /// Explicit dataflow inputs: names of **earlier** layers whose
+    /// outputs feed this one. Empty means the implicit chain — the
+    /// layer consumes the previous layer's output (or the network
+    /// input, for the first layer), exactly the seed behaviour. A
+    /// network with any non-empty `inputs` is a *graph network*
+    /// (branch/merge DAG): `googlenet()`'s inception modules declare
+    /// their four branches and concat joins this way, which is what the
+    /// DAG executor (`conv::NetworkPlan::run_async`) overlaps.
+    pub inputs: Vec<String>,
 }
 
 impl Layer {
-    /// A named layer.
+    /// A named layer on the implicit chain (no explicit inputs).
     pub fn new(name: impl Into<String>, kind: LayerKind) -> Self {
         Self {
             name: name.into(),
             kind,
+            inputs: Vec::new(),
         }
+    }
+
+    /// Builder: declare this layer's dataflow inputs (names of earlier
+    /// layers). A [`LayerKind::Concat`] layer lists its branch tails in
+    /// channel order; every other kind takes at most one input.
+    pub fn with_inputs<I, S>(mut self, inputs: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.inputs = inputs.into_iter().map(Into::into).collect();
+        self
     }
 }
 
@@ -92,5 +114,80 @@ impl Network {
             .iter()
             .find(|l| l.name == name)
             .and_then(|l| l.kind.as_conv())
+    }
+
+    /// Whether any layer declares explicit dataflow inputs — i.e. the
+    /// network is a branch/merge graph rather than a pure chain. Graph
+    /// networks compile to DAG-capable `conv::NetworkPlan`s (real
+    /// branch dataflow + async overlap); chain networks keep the seed's
+    /// ping-pong walk.
+    pub fn has_explicit_graph(&self) -> bool {
+        self.layers.iter().any(|l| !l.inputs.is_empty())
+    }
+
+    /// Strip the explicit dataflow graph: drop [`LayerKind::Concat`]
+    /// merge layers (weight- and MAC-free) and clear every `inputs`
+    /// list, leaving the seed-style chain in which a layer whose shape
+    /// does not match its predecessor runs on a fresh synthetic input.
+    /// The figure benches use this when *spatially scaling* a network
+    /// for quick runs — scaling conv layers alone breaks the exact
+    /// shape chaining a DAG plan validates, while the chain walk's
+    /// per-layer timings stay faithful (conv cost depends only on
+    /// shapes).
+    pub fn into_chain(mut self) -> Network {
+        self.layers
+            .retain(|l| !matches!(l.kind, LayerKind::Concat { .. }));
+        for l in &mut self.layers {
+            l.inputs.clear();
+        }
+        self
+    }
+
+    /// Validate the dataflow graph: layer names unique, every declared
+    /// input names an **earlier** layer (so list order is a topological
+    /// order), concats list at least two inputs, every other kind at
+    /// most one, and only the first layer is a source. Chain networks
+    /// (no explicit inputs) are trivially valid.
+    pub fn validate_graph(&self) -> Result<(), String> {
+        let mut seen: std::collections::HashSet<&str> = std::collections::HashSet::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            if !seen.insert(layer.name.as_str()) {
+                return Err(format!("duplicate layer name {:?}", layer.name));
+            }
+            for input in &layer.inputs {
+                if input == &layer.name {
+                    return Err(format!("{:?} feeds itself", layer.name));
+                }
+                if !self.layers[..i].iter().any(|l| &l.name == input) {
+                    return Err(format!(
+                        "{:?} reads {:?}, which is not an earlier layer",
+                        layer.name, input
+                    ));
+                }
+            }
+            match &layer.kind {
+                LayerKind::Concat { .. } => {
+                    if layer.inputs.len() < 2 {
+                        return Err(format!(
+                            "concat {:?} needs at least two inputs",
+                            layer.name
+                        ));
+                    }
+                }
+                _ => {
+                    // An empty list is the implicit chain to the
+                    // previous layer — always legal, even inside a
+                    // graph network (the stem).
+                    if layer.inputs.len() > 1 {
+                        return Err(format!(
+                            "{:?} declares {} inputs; only concat layers merge",
+                            layer.name,
+                            layer.inputs.len()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 }

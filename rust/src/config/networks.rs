@@ -34,6 +34,27 @@ fn pool(name: &str, kind: PoolKind, c: usize, h: usize, w: usize, k: usize, stri
             k,
             stride,
             pad,
+            ceil: false,
+        },
+    )
+}
+
+/// Ceil-mode (Caffe-semantics) pooling — GoogLeNet's published
+/// 112→56→28→14→7 pool chain only closes under ceil division (see
+/// [`super::layer::pool_out_dim`]).
+#[allow(clippy::too_many_arguments)]
+fn pool_ceil(name: &str, kind: PoolKind, c: usize, h: usize, w: usize, k: usize, stride: usize, pad: usize) -> Layer {
+    Layer::new(
+        name,
+        LayerKind::Pool {
+            kind,
+            c,
+            h,
+            w,
+            k,
+            stride,
+            pad,
+            ceil: true,
         },
     )
 }
@@ -84,10 +105,14 @@ pub fn alexnet() -> Network {
     }
 }
 
-/// One GoogLeNet inception module: six CONV layers
-/// (1x1, 3x3-reduce, 3x3, 5x5-reduce, 5x5, pool-proj). The 3x3 and 5x5
-/// branches are the pruned layers (2 sparse CONVs per module; 9 modules +
-/// conv2 = 19 sparse CONV layers, matching Table 3).
+/// One GoogLeNet inception module as a **4-way branch/merge graph**:
+/// six CONV layers (1x1, 3x3-reduce, 3x3, 5x5-reduce, 5x5, pool-proj)
+/// plus the branch max-pool and the channel concat, all with explicit
+/// dataflow inputs. `input` is the name of the module's feeding layer;
+/// the returned name is the module's `…/output` concat, which the next
+/// module (or stage pool) consumes. The 3x3 and 5x5 branches are the
+/// pruned layers (2 sparse CONVs per module; 9 modules + conv2 = 19
+/// sparse CONV layers, matching Table 3).
 #[allow(clippy::too_many_arguments)]
 fn inception(
     layers: &mut Vec<Layer>,
@@ -102,38 +127,72 @@ fn inception(
     pool_proj: usize,
     sp3: f32,
     sp5: f32,
-) {
-    layers.push(conv(
-        &format!("{name}/1x1"),
-        ConvShape::new(in_c, n1x1, hw, hw, 1, 1, 1, 0),
-    ));
-    layers.push(conv(
-        &format!("{name}/3x3_reduce"),
-        ConvShape::new(in_c, n3x3r, hw, hw, 1, 1, 1, 0),
-    ));
-    layers.push(conv(
-        &format!("{name}/3x3"),
-        ConvShape::new(n3x3r, n3x3, hw, hw, 3, 3, 1, 1).with_sparsity(sp3),
-    ));
-    layers.push(conv(
-        &format!("{name}/5x5_reduce"),
-        ConvShape::new(in_c, n5x5r, hw, hw, 1, 1, 1, 0),
-    ));
-    layers.push(conv(
-        &format!("{name}/5x5"),
-        ConvShape::new(n5x5r, n5x5, hw, hw, 5, 5, 1, 2).with_sparsity(sp5),
-    ));
-    layers.push(conv(
-        &format!("{name}/pool_proj"),
-        ConvShape::new(in_c, pool_proj, hw, hw, 1, 1, 1, 0),
-    ));
+    input: &str,
+) -> String {
+    let l = |suffix: &str| format!("{name}/{suffix}");
+    // Branch 1: 1x1.
+    layers.push(
+        conv(&l("1x1"), ConvShape::new(in_c, n1x1, hw, hw, 1, 1, 1, 0)).with_inputs([input]),
+    );
+    // Branch 2: 1x1 reduce -> 3x3 (pruned).
+    layers.push(
+        conv(&l("3x3_reduce"), ConvShape::new(in_c, n3x3r, hw, hw, 1, 1, 1, 0))
+            .with_inputs([input]),
+    );
+    layers.push(
+        conv(
+            &l("3x3"),
+            ConvShape::new(n3x3r, n3x3, hw, hw, 3, 3, 1, 1).with_sparsity(sp3),
+        )
+        .with_inputs([l("3x3_reduce")]),
+    );
+    // Branch 3: 1x1 reduce -> 5x5 (pruned).
+    layers.push(
+        conv(&l("5x5_reduce"), ConvShape::new(in_c, n5x5r, hw, hw, 1, 1, 1, 0))
+            .with_inputs([input]),
+    );
+    layers.push(
+        conv(
+            &l("5x5"),
+            ConvShape::new(n5x5r, n5x5, hw, hw, 5, 5, 1, 2).with_sparsity(sp5),
+        )
+        .with_inputs([l("5x5_reduce")]),
+    );
+    // Branch 4: 3x3/s1 max pool -> 1x1 projection.
+    layers.push(
+        pool_ceil(&l("pool"), PoolKind::Max, in_c, hw, hw, 3, 1, 1).with_inputs([input]),
+    );
+    layers.push(
+        conv(&l("pool_proj"), ConvShape::new(in_c, pool_proj, hw, hw, 1, 1, 1, 0))
+            .with_inputs([l("pool")]),
+    );
+    // Merge: channel concat in branch order.
+    let out_c = n1x1 + n3x3 + n5x5 + pool_proj;
+    layers.push(
+        Layer::new(l("output"), LayerKind::Concat { c: out_c, h: hw, w: hw }).with_inputs([
+            l("1x1"),
+            l("3x3"),
+            l("5x5"),
+            l("pool_proj"),
+        ]),
+    );
+    l("output")
 }
 
 /// GoogLeNet / Inception v1. 57 CONV layers, 19 of them pruned.
+///
+/// Unlike the chain networks, this table is a real **branch/merge
+/// dataflow graph**: each inception module's four branches declare
+/// their inputs explicitly and join in a [`LayerKind::Concat`], and the
+/// stage pools run in Caffe ceil mode so the published geometry
+/// (224→112→56→28→14→7) chains exactly. `Network::validate_graph`
+/// accepts it, and `conv::NetworkPlan` compiles it into a DAG whose
+/// independent branches the async executor overlaps
+/// (`NetworkPlan::run_async`).
 pub fn googlenet() -> Network {
     let mut layers = vec![
         conv("conv1/7x7_s2", ConvShape::new(3, 64, 224, 224, 7, 7, 2, 3)),
-        pool("pool1/3x3_s2", PoolKind::Max, 64, 112, 112, 3, 2, 0),
+        pool_ceil("pool1/3x3_s2", PoolKind::Max, 64, 112, 112, 3, 2, 0),
         lrn("pool1/norm1", 64 * 56 * 56),
         conv("conv2/3x3_reduce", ConvShape::new(64, 64, 56, 56, 1, 1, 1, 0)),
         conv(
@@ -141,21 +200,21 @@ pub fn googlenet() -> Network {
             ConvShape::new(64, 192, 56, 56, 3, 3, 1, 1).with_sparsity(0.72),
         ),
         lrn("conv2/norm2", 192 * 56 * 56),
-        pool("pool2/3x3_s2", PoolKind::Max, 192, 56, 56, 3, 2, 0),
+        pool_ceil("pool2/3x3_s2", PoolKind::Max, 192, 56, 56, 3, 2, 0),
     ];
-    // (name, in_c, 1x1, 3x3r, 3x3, 5x5r, 5x5, pool_proj, sp3x3, sp5x5)
-    inception(&mut layers, "inception_3a", 28, 192, 64, 96, 128, 16, 32, 32, 0.70, 0.75);
-    inception(&mut layers, "inception_3b", 28, 256, 128, 128, 192, 32, 96, 64, 0.72, 0.78);
-    layers.push(pool("pool3/3x3_s2", PoolKind::Max, 480, 28, 28, 3, 2, 0));
-    inception(&mut layers, "inception_4a", 14, 480, 192, 96, 208, 16, 48, 64, 0.75, 0.80);
-    inception(&mut layers, "inception_4b", 14, 512, 160, 112, 224, 24, 64, 64, 0.76, 0.80);
-    inception(&mut layers, "inception_4c", 14, 512, 128, 128, 256, 24, 64, 64, 0.78, 0.82);
-    inception(&mut layers, "inception_4d", 14, 512, 112, 144, 288, 32, 64, 64, 0.78, 0.82);
-    inception(&mut layers, "inception_4e", 14, 528, 256, 160, 320, 32, 128, 128, 0.80, 0.84);
-    layers.push(pool("pool4/3x3_s2", PoolKind::Max, 832, 14, 14, 3, 2, 0));
-    inception(&mut layers, "inception_5a", 7, 832, 256, 160, 320, 32, 128, 128, 0.82, 0.85);
-    inception(&mut layers, "inception_5b", 7, 832, 384, 192, 384, 48, 128, 128, 0.82, 0.85);
-    layers.push(pool("pool5/7x7_s1", PoolKind::Avg, 1024, 7, 7, 7, 1, 0));
+    // (name, hw, in_c, 1x1, 3x3r, 3x3, 5x5r, 5x5, pool_proj, sp3x3, sp5x5, input)
+    let m = inception(&mut layers, "inception_3a", 28, 192, 64, 96, 128, 16, 32, 32, 0.70, 0.75, "pool2/3x3_s2");
+    let m = inception(&mut layers, "inception_3b", 28, 256, 128, 128, 192, 32, 96, 64, 0.72, 0.78, &m);
+    layers.push(pool_ceil("pool3/3x3_s2", PoolKind::Max, 480, 28, 28, 3, 2, 0).with_inputs([m]));
+    let m = inception(&mut layers, "inception_4a", 14, 480, 192, 96, 208, 16, 48, 64, 0.75, 0.80, "pool3/3x3_s2");
+    let m = inception(&mut layers, "inception_4b", 14, 512, 160, 112, 224, 24, 64, 64, 0.76, 0.80, &m);
+    let m = inception(&mut layers, "inception_4c", 14, 512, 128, 128, 256, 24, 64, 64, 0.78, 0.82, &m);
+    let m = inception(&mut layers, "inception_4d", 14, 512, 112, 144, 288, 32, 64, 64, 0.78, 0.82, &m);
+    let m = inception(&mut layers, "inception_4e", 14, 528, 256, 160, 320, 32, 128, 128, 0.80, 0.84, &m);
+    layers.push(pool_ceil("pool4/3x3_s2", PoolKind::Max, 832, 14, 14, 3, 2, 0).with_inputs([m]));
+    let m = inception(&mut layers, "inception_5a", 7, 832, 256, 160, 320, 32, 128, 128, 0.82, 0.85, "pool4/3x3_s2");
+    let m = inception(&mut layers, "inception_5b", 7, 832, 384, 192, 384, 48, 128, 128, 0.82, 0.85, &m);
+    layers.push(pool_ceil("pool5/7x7_s1", PoolKind::Avg, 1024, 7, 7, 7, 1, 0).with_inputs([m]));
     layers.push(fc("loss3/classifier", 1024, 1000));
     Network {
         name: "GoogLeNet".to_string(),
@@ -245,6 +304,28 @@ pub fn resnet50() -> Network {
     }
 }
 
+/// MiniCeption — a minicnn-sized **inception-structured** network: a
+/// stem conv, two 4-way branch/merge modules (declared as a real
+/// dataflow graph, like [`googlenet`]), a pool, and a classifier head.
+/// Small enough that the DAG-vs-sequential byte-identity properties can
+/// be pinned across several pool sizes in debug-mode tests, and served
+/// end-to-end to prove branch overlap composes with the serving
+/// pipeline — where `googlenet()` itself would dominate the suite's
+/// runtime. The 3x3 and 5x5 branch convs are pruned so the router has
+/// real sparse-vs-dense decisions inside the branches.
+pub fn miniception() -> Network {
+    let mut layers = vec![conv("stem", ConvShape::new(3, 8, 8, 8, 3, 3, 1, 1))];
+    // (name, hw, in_c, 1x1, 3x3r, 3x3, 5x5r, 5x5, pool_proj, sp3x3, sp5x5, input)
+    let m = inception(&mut layers, "mix_a", 8, 8, 4, 4, 8, 2, 4, 4, 0.6, 0.7, "stem");
+    let m = inception(&mut layers, "mix_b", 8, 20, 6, 6, 10, 2, 4, 4, 0.65, 0.7, &m);
+    layers.push(pool("pool", PoolKind::Max, 24, 8, 8, 2, 2, 0).with_inputs([m]));
+    layers.push(fc("fc", 24 * 4 * 4, 10));
+    Network {
+        name: "miniception".into(),
+        layers,
+    }
+}
+
 /// All three evaluated networks in paper order.
 /// MiniCNN — the small 3-conv classifier the serving path defaults to
 /// (same role as the AOT `minicnn_*` model artifacts: fast enough that a
@@ -276,13 +357,15 @@ pub fn all_networks() -> Vec<Network> {
 }
 
 /// Case-insensitive lookup by the names used throughout the paper, plus
-/// the serving-path `minicnn`.
+/// the serving-path `minicnn` and the inception-structured test network
+/// `miniception`.
 pub fn network_by_name(name: &str) -> Option<Network> {
     match name.to_ascii_lowercase().as_str() {
         "alexnet" => Some(alexnet()),
         "googlenet" => Some(googlenet()),
         "resnet" | "resnet50" | "resnet-50" => Some(resnet50()),
         "minicnn" => Some(minicnn()),
+        "miniception" => Some(miniception()),
         _ => None,
     }
 }
@@ -400,6 +483,124 @@ mod tests {
     fn lookup_by_name() {
         assert!(network_by_name("AlexNet").is_some());
         assert!(network_by_name("resnet-50").is_some());
+        assert!(network_by_name("MiniCeption").is_some());
         assert!(network_by_name("vgg").is_none());
+    }
+
+    #[test]
+    fn googlenet_is_a_valid_branch_merge_graph() {
+        let net = googlenet();
+        assert!(net.has_explicit_graph());
+        net.validate_graph().expect("googlenet graph");
+        // Every inception module merges exactly its four branch tails.
+        for module in [
+            "inception_3a", "inception_3b", "inception_4a", "inception_4b",
+            "inception_4c", "inception_4d", "inception_4e", "inception_5a",
+            "inception_5b",
+        ] {
+            let concat = net
+                .layers
+                .iter()
+                .find(|l| l.name == format!("{module}/output"))
+                .expect("module concat");
+            assert_eq!(concat.inputs.len(), 4, "{module}");
+            let LayerKind::Concat { c, .. } = &concat.kind else {
+                panic!("{module}/output is not a concat");
+            };
+            let sum: usize = concat
+                .inputs
+                .iter()
+                .map(|n| net.find_conv(n).expect("branch tail is a conv").m)
+                .sum();
+            assert_eq!(sum, *c, "{module} channel sum");
+        }
+        // The chain networks stay pure chains.
+        assert!(!alexnet().has_explicit_graph());
+        assert!(!resnet50().has_explicit_graph());
+        assert!(!minicnn().has_explicit_graph());
+    }
+
+    #[test]
+    fn googlenet_pools_chain_under_ceil_mode() {
+        // The published stage geometry must chain exactly: each ceil
+        // pool halves the spatial extent the next module declares.
+        use super::super::layer::pool_out_dim;
+        let net = googlenet();
+        for (name, in_hw, out_hw) in [
+            ("pool1/3x3_s2", 112, 56),
+            ("pool2/3x3_s2", 56, 28),
+            ("pool3/3x3_s2", 28, 14),
+            ("pool4/3x3_s2", 14, 7),
+        ] {
+            let layer = net.layers.iter().find(|l| l.name == name).unwrap();
+            let LayerKind::Pool { h, k, stride, pad, ceil, .. } = &layer.kind else {
+                panic!("{name} is not a pool");
+            };
+            assert_eq!(*h, in_hw, "{name}");
+            assert!(*ceil, "{name} must pool in ceil mode");
+            assert_eq!(pool_out_dim(*h, *k, *stride, *pad, *ceil), out_hw, "{name}");
+        }
+    }
+
+    #[test]
+    fn miniception_is_a_valid_graph_with_consistent_concats() {
+        let net = miniception();
+        assert!(net.has_explicit_graph());
+        net.validate_graph().expect("miniception graph");
+        // mix_a: 4 + 8 + 4 + 4 = 20 channels feed mix_b.
+        let a1 = net.find_conv("mix_a/1x1").unwrap().m;
+        let a3 = net.find_conv("mix_a/3x3").unwrap().m;
+        let a5 = net.find_conv("mix_a/5x5").unwrap().m;
+        let ap = net.find_conv("mix_a/pool_proj").unwrap().m;
+        assert_eq!(a1 + a3 + a5 + ap, 20);
+        assert_eq!(net.find_conv("mix_b/1x1").unwrap().c, 20);
+        // Its sparse branches give the router real decisions.
+        assert!(!net.sparse_conv_layers().is_empty());
+    }
+
+    #[test]
+    fn into_chain_strips_the_graph_but_keeps_table3_counts() {
+        let chain = googlenet().into_chain();
+        assert!(!chain.has_explicit_graph());
+        assert!(chain
+            .layers
+            .iter()
+            .all(|l| !matches!(l.kind, LayerKind::Concat { .. })));
+        // Table 3 counts survive (concats are weight- and MAC-free).
+        let s = chain.summary();
+        assert_eq!(s.conv_layers, 57);
+        assert_eq!(s.sparse_conv_layers, 19);
+    }
+
+    #[test]
+    fn graph_validation_rejects_malformed_graphs() {
+        // Forward reference.
+        let net = Network {
+            name: "bad".into(),
+            layers: vec![
+                conv("a", ConvShape::new(3, 4, 8, 8, 3, 3, 1, 1)).with_inputs(["b"]),
+                conv("b", ConvShape::new(4, 4, 8, 8, 3, 3, 1, 1)),
+            ],
+        };
+        assert!(net.validate_graph().is_err());
+        // Concat with a single input.
+        let net = Network {
+            name: "bad2".into(),
+            layers: vec![
+                conv("a", ConvShape::new(3, 4, 8, 8, 3, 3, 1, 1)),
+                Layer::new("cat", LayerKind::Concat { c: 4, h: 8, w: 8 }).with_inputs(["a"]),
+            ],
+        };
+        assert!(net.validate_graph().is_err());
+        // Multi-input non-concat.
+        let net = Network {
+            name: "bad3".into(),
+            layers: vec![
+                conv("a", ConvShape::new(3, 4, 8, 8, 3, 3, 1, 1)),
+                conv("b", ConvShape::new(3, 4, 8, 8, 3, 3, 1, 1)),
+                conv("c", ConvShape::new(4, 4, 8, 8, 3, 3, 1, 1)).with_inputs(["a", "b"]),
+            ],
+        };
+        assert!(net.validate_graph().is_err());
     }
 }

@@ -26,13 +26,35 @@
 //!   shared by the scheduler and the server: weights are materialised
 //!   once per network, and a router flip recompiles only the flipped
 //!   layer instead of regenerating and re-transforming every operand.
+//!
+//! ## DAG plans (branch/merge networks)
+//!
+//! A network whose layers declare explicit dataflow inputs
+//! (`config::Network::has_explicit_graph`, e.g. `googlenet()`'s
+//! inception modules) compiles to a **DAG plan**: steps carry
+//! dependency edges, activations live in liveness-assigned *slots*
+//! instead of the two ping-pong buffers, a concat step writes its
+//! inputs' channel ranges, and each step gets a workspace interval that
+//! never overlaps a step it can run concurrently with. Such a plan has
+//! two walks that produce **byte-identical** logits:
+//!
+//! * the **sequential walk** — the ordinary [`PlanCursor`] step loop,
+//!   which executes the topological list order one layer at a time
+//!   (this is also the timed/Fig-9 path); and
+//! * the **async walk** ([`NetworkPlan::run_async`], resumable via
+//!   [`NetworkPlan::begin_run_async`] / [`AsyncCursor`]) — every step
+//!   becomes one or more owned pool jobs chained behind its producers
+//!   (`util::WorkerPool::submit_owned`), so the four branches of an
+//!   inception module overlap on the shared pool while the concat job
+//!   waits on all of them.
 
-use super::plan::{LayerPlan, Method};
-use crate::config::{ConvShape, FcShape, Layer, LayerKind, Network, PoolKind};
+use super::plan::{ConvExecutor, LayerPlan, Method};
+use crate::config::{pool_out_dim, ConvShape, FcShape, Layer, LayerKind, Network, PoolKind};
 use crate::conv::weights::ConvWeights;
 use crate::tensor::Dims4;
-use crate::util::{Rng, Stopwatch, WorkerPool};
+use crate::util::{JobHandle, Rng, SharedSlice, Stopwatch, WorkerPool};
 use std::collections::HashMap;
+use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -83,35 +105,73 @@ fn lap<T>(sw: &mut Option<Stopwatch>, name: &str, f: impl FnOnce() -> T) -> T {
     }
 }
 
-/// Zero-pad `input` (NCHW, `batch * C * H * W`) spatially by `shape.pad`
-/// into `dst` (`batch * C * Hp * Wp`) — the paper's `pad_in` kernel,
-/// writing into a caller slice instead of a fresh tensor.
-pub(crate) fn pad_into(shape: &ConvShape, batch: usize, input: &[f32], dst: &mut [f32]) {
+/// Elementwise ReLU over one activation block — the ONE body shared by
+/// the chain walk, the sequential DAG walk, and the async per-image
+/// jobs, so every walk runs identical arithmetic by construction.
+fn relu_in_place(xs: &mut [f32]) {
+    for v in xs {
+        *v = v.max(0.0);
+    }
+}
+
+/// LRN modelled as a 5-op/element pass — shared like [`relu_in_place`].
+fn lrn_in_place(xs: &mut [f32]) {
+    for v in xs {
+        let x2 = *v * *v;
+        *v /= (1.0 + 1e-4 * x2).powf(0.75);
+    }
+}
+
+/// Zero-pad ONE image (`C * H * W` floats) spatially by `shape.pad`
+/// into its `C * Hp * Wp` destination — the per-image unit the async
+/// pad jobs tile over. [`pad_into`] is this looped over a batch, so the
+/// two produce byte-identical padded buffers.
+pub(crate) fn pad_image_into(shape: &ConvShape, img: &[f32], dst: &mut [f32]) {
     let (c, h, w, p) = (shape.c, shape.h, shape.w, shape.pad);
     let (hp, wp) = (shape.padded_h(), shape.padded_w());
-    debug_assert_eq!(input.len(), batch * c * h * w);
-    debug_assert_eq!(dst.len(), batch * c * hp * wp);
+    debug_assert_eq!(img.len(), c * h * w);
+    debug_assert_eq!(dst.len(), c * hp * wp);
     dst.fill(0.0);
-    for n in 0..batch {
-        for ci in 0..c {
-            for hh in 0..h {
-                let src = ((n * c + ci) * h + hh) * w;
-                let d = ((n * c + ci) * hp + hh + p) * wp + p;
-                dst[d..d + w].copy_from_slice(&input[src..src + w]);
-            }
+    for ci in 0..c {
+        for hh in 0..h {
+            let src = (ci * h + hh) * w;
+            let d = (ci * hp + hh + p) * wp + p;
+            dst[d..d + w].copy_from_slice(&img[src..src + w]);
         }
     }
 }
 
+/// Zero-pad `input` (NCHW, `batch * C * H * W`) spatially by `shape.pad`
+/// into `dst` (`batch * C * Hp * Wp`) — the paper's `pad_in` kernel,
+/// writing into a caller slice instead of a fresh tensor.
+pub(crate) fn pad_into(shape: &ConvShape, batch: usize, input: &[f32], dst: &mut [f32]) {
+    let chw = shape.c * shape.h * shape.w;
+    let padded_chw = shape.c * shape.padded_h() * shape.padded_w();
+    debug_assert_eq!(input.len(), batch * chw);
+    debug_assert_eq!(dst.len(), batch * padded_chw);
+    for n in 0..batch {
+        pad_image_into(
+            shape,
+            &input[n * chw..(n + 1) * chw],
+            &mut dst[n * padded_chw..(n + 1) * padded_chw],
+        );
+    }
+}
+
 /// Preallocated buffers for running one [`NetworkPlan`]: the shared
-/// kernel workspace plus ping-pong activation buffers sized to the
-/// largest layer. Reused across runs; sized once by
+/// kernel workspace plus activation buffers — ping-pong for chain
+/// plans, liveness-assigned **slots** for DAG plans (branch outputs
+/// must stay live until their concat consumes them, so two buffers
+/// cannot cover an inception module). Reused across runs; sized once by
 /// [`WorkspaceArena::for_plan`] (or lazily on first run).
 #[derive(Default)]
 pub struct WorkspaceArena {
     ws: Workspace,
     ping: Vec<f32>,
     pong: Vec<f32>,
+    /// DAG-plan activation slots (`NetworkPlan::slot_sizes`); empty for
+    /// chain plans. Slot 0 stages the external input.
+    slots: Vec<Vec<f32>>,
 }
 
 impl WorkspaceArena {
@@ -123,18 +183,18 @@ impl WorkspaceArena {
     /// Preallocate everything `plan` needs (when executed through
     /// `pool`) so `run` never allocates.
     pub fn for_plan(plan: &NetworkPlan, pool: &WorkerPool) -> Self {
-        let act = plan.max_activation_floats();
-        Self {
-            ws: Workspace::with_capacity(plan.workspace_floats(pool.workers())),
-            ping: vec![0.0; act],
-            pong: vec![0.0; act],
-        }
+        let mut arena = Self::default();
+        plan.size_arena(pool, &mut arena);
+        arena
     }
 
     /// Total floats held — stable across steady-state runs (the
     /// zero-allocation regression check).
     pub fn total_floats(&self) -> usize {
-        self.ws.capacity() + self.ping.len() + self.pong.len()
+        self.ws.capacity()
+            + self.ping.len()
+            + self.pong.len()
+            + self.slots.iter().map(Vec::len).sum::<usize>()
     }
 
     /// The kernel workspace, for driving a [`LayerPlan`] directly.
@@ -159,6 +219,10 @@ enum PlanOp {
     Pool { kind: PoolKind, k: usize, stride: usize, pad: usize },
     Relu,
     Lrn,
+    /// Channel concat (DAG plans only): `parts[i]` is input `i`'s
+    /// per-image float count (`c_i * H * W`); inputs are copied into
+    /// consecutive channel ranges in declaration order.
+    Concat { parts: Vec<usize> },
 }
 
 struct PlanStep {
@@ -167,6 +231,34 @@ struct PlanStep {
     in_dims: Dims4,
     out_dims: Dims4,
     matching: MatchMode,
+    /// Dataflow producers (step indices; always earlier steps). Empty
+    /// for the source step. Chain plans leave this empty — their walk
+    /// is the implicit previous-step chain.
+    deps: Vec<usize>,
+    /// Activation slot each dep's output lives in, parallel to `deps`
+    /// (DAG plans; the source step reads the input staging slot 0).
+    in_slots: Vec<usize>,
+    /// Activation slot this step writes (DAG plans).
+    out_slot: usize,
+}
+
+/// Per-step bitset words: whether step `j` is a (transitive) dataflow
+/// descendant of step `i` — `reach[i]` has bit `j` set iff `i ⇝ j`
+/// (including `i` itself). Two steps with neither direction set can run
+/// **concurrently** under the async walk, which is exactly what the
+/// slot and workspace assignments must respect.
+fn bit_get(words: &[u64], i: usize) -> bool {
+    (words[i / 64] >> (i % 64)) & 1 == 1
+}
+
+fn bit_set(words: &mut [u64], i: usize) {
+    words[i / 64] |= 1 << (i % 64);
+}
+
+fn or_into(dst: &mut [u64], src: &[u64]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d |= s;
+    }
 }
 
 /// Weighted layer operands, supplied by the caller of
@@ -209,6 +301,15 @@ pub struct NetworkPlan {
     /// external input is given, and branch layers whose declared shape
     /// does not chain) — fixed at build so runs are deterministic.
     input_seed: u64,
+    /// Whether this is a DAG plan (the network declared explicit
+    /// dataflow inputs): steps flow through slots instead of ping-pong,
+    /// and the async walk is available.
+    graph: bool,
+    /// Activation slot sizes in floats (DAG plans; slot 0 stages the
+    /// external input).
+    slot_sizes: Vec<usize>,
+    /// Per-step descendant bitsets (DAG plans) — see [`bit_get`].
+    reach: Vec<Vec<u64>>,
 }
 
 impl NetworkPlan {
@@ -245,6 +346,13 @@ impl NetworkPlan {
     /// once per CONV/FC layer, in network order (so a seeded RNG inside
     /// it reproduces the scheduler's weight walk); other layer kinds are
     /// planned natively.
+    ///
+    /// Networks with explicit dataflow inputs
+    /// (`Network::has_explicit_graph`) compile to **DAG plans**: layer
+    /// graphs are validated, real branch dataflow replaces the chain
+    /// walk's synthetic branch inputs, activations are assigned to
+    /// liveness-tracked slots, and the async walk
+    /// ([`NetworkPlan::run_async`]) becomes available.
     pub fn from_parts(
         network: &Network,
         batch: usize,
@@ -252,34 +360,59 @@ impl NetworkPlan {
     ) -> NetworkPlan {
         assert!(batch > 0, "batch must be positive");
         assert!(!network.layers.is_empty(), "empty network");
-        let mut steps = Vec::with_capacity(network.layers.len());
-        for layer in &network.layers {
-            let step = match &layer.kind {
+        let graph = network.has_explicit_graph();
+        if graph {
+            if let Err(e) = network.validate_graph() {
+                panic!("{}: invalid layer graph: {e}", network.name);
+            }
+        }
+
+        // Pass 1: per-layer ops, geometry, and dependency edges. In
+        // graph mode every step after the first has at least one dep
+        // (explicit inputs, else the implicit chain to the previous
+        // layer), and producer/consumer shapes are validated instead of
+        // falling back to synthetic inputs.
+        let mut name_to_idx: HashMap<&str, usize> = HashMap::new();
+        let mut steps: Vec<PlanStep> = Vec::with_capacity(network.layers.len());
+        for (i, layer) in network.layers.iter().enumerate() {
+            let deps: Vec<usize> = if !layer.inputs.is_empty() {
+                layer
+                    .inputs
+                    .iter()
+                    .map(|n| *name_to_idx.get(n.as_str()).expect("validated input name"))
+                    .collect()
+            } else if graph && i > 0 {
+                vec![i - 1]
+            } else {
+                Vec::new()
+            };
+            let producer_dims: Vec<Dims4> = deps.iter().map(|&d| steps[d].out_dims).collect();
+
+            let (op, mut in_dims, mut out_dims, matching) = match &layer.kind {
                 LayerKind::Conv(shape) => {
                     let Some(WeightedOp::Conv(plan)) = make(layer) else {
                         panic!("{}: conv layer needs a LayerPlan", layer.name);
                     };
                     assert_eq!(plan.shape(), shape, "{}: plan/layer shape", layer.name);
-                    PlanStep {
-                        name: layer.name.clone(),
-                        in_dims: Dims4::new(batch, shape.c, shape.h, shape.w),
-                        out_dims: plan.out_dims(batch),
-                        matching: MatchMode::Exact,
-                        op: PlanOp::Conv { plan },
-                    }
+                    let out = plan.out_dims(batch);
+                    (
+                        PlanOp::Conv { plan },
+                        Dims4::new(batch, shape.c, shape.h, shape.w),
+                        out,
+                        MatchMode::Exact,
+                    )
                 }
                 LayerKind::Fc(fc) => {
                     let Some(WeightedOp::Fc(w)) = make(layer) else {
                         panic!("{}: fc layer needs weights", layer.name);
                     };
                     assert_eq!(w.len(), fc.weights(), "{}: fc weight count", layer.name);
-                    PlanStep {
-                        name: layer.name.clone(),
-                        in_dims: Dims4::new(batch, fc.in_features, 1, 1),
-                        out_dims: Dims4::new(batch, fc.out_features, 1, 1),
-                        matching: MatchMode::Elems,
-                        op: PlanOp::Fc { fc: fc.clone(), w },
-                    }
+                    (
+                        PlanOp::Fc { fc: fc.clone(), w },
+                        Dims4::new(batch, fc.in_features, 1, 1),
+                        Dims4::new(batch, fc.out_features, 1, 1),
+                        MatchMode::Elems,
+                    )
                 }
                 LayerKind::Pool {
                     kind,
@@ -289,39 +422,162 @@ impl NetworkPlan {
                     k,
                     stride,
                     pad,
+                    ceil,
                 } => {
-                    let oh = (h + 2 * pad - k) / stride + 1;
-                    let ow = (w + 2 * pad - k) / stride + 1;
-                    PlanStep {
-                        name: layer.name.clone(),
-                        in_dims: Dims4::new(batch, *c, *h, *w),
-                        out_dims: Dims4::new(batch, *c, oh, ow),
-                        matching: MatchMode::Exact,
-                        op: PlanOp::Pool {
+                    let oh = pool_out_dim(*h, *k, *stride, *pad, *ceil);
+                    let ow = pool_out_dim(*w, *k, *stride, *pad, *ceil);
+                    (
+                        PlanOp::Pool {
                             kind: *kind,
                             k: *k,
                             stride: *stride,
                             pad: *pad,
                         },
+                        Dims4::new(batch, *c, *h, *w),
+                        Dims4::new(batch, *c, oh, ow),
+                        MatchMode::Exact,
+                    )
+                }
+                LayerKind::Concat { c, h, w } => {
+                    assert!(
+                        graph && producer_dims.len() >= 2,
+                        "{}: concat needs a layer graph with >= 2 inputs",
+                        layer.name
+                    );
+                    let sum_c: usize = producer_dims.iter().map(|d| d.c).sum();
+                    assert_eq!(sum_c, *c, "{}: concat channel sum", layer.name);
+                    for d in &producer_dims {
+                        assert_eq!(
+                            (d.n, d.h, d.w),
+                            (batch, *h, *w),
+                            "{}: concat input dims",
+                            layer.name
+                        );
+                    }
+                    let parts: Vec<usize> = producer_dims.iter().map(|d| d.chw()).collect();
+                    let dims = Dims4::new(batch, *c, *h, *w);
+                    (PlanOp::Concat { parts }, dims, dims, MatchMode::Exact)
+                }
+                LayerKind::Relu { elems } => (
+                    PlanOp::Relu,
+                    Dims4::new(batch, *elems, 1, 1),
+                    Dims4::new(batch, *elems, 1, 1),
+                    MatchMode::Elems,
+                ),
+                LayerKind::Lrn { elems } => (
+                    PlanOp::Lrn,
+                    Dims4::new(batch, *elems, 1, 1),
+                    Dims4::new(batch, *elems, 1, 1),
+                    MatchMode::Elems,
+                ),
+            };
+
+            // Graph mode: real dataflow means shapes must chain —
+            // validate against the producer instead of synthesising.
+            if graph && !matches!(op, PlanOp::Concat { .. }) {
+                if let Some(d) = producer_dims.first() {
+                    match matching {
+                        MatchMode::Exact => assert_eq!(
+                            *d, in_dims,
+                            "{}: producer/consumer dims",
+                            layer.name
+                        ),
+                        MatchMode::Elems => {
+                            assert_eq!(d.n, batch, "{}: producer batch", layer.name);
+                            assert_eq!(
+                                d.chw(),
+                                in_dims.chw(),
+                                "{}: producer/consumer elems",
+                                layer.name
+                            );
+                            // Elementwise steps preserve the producer's
+                            // (possibly non-flat) shape.
+                            if matches!(op, PlanOp::Relu | PlanOp::Lrn) {
+                                in_dims = *d;
+                                out_dims = *d;
+                            }
+                        }
                     }
                 }
-                LayerKind::Relu { elems } => PlanStep {
-                    name: layer.name.clone(),
-                    in_dims: Dims4::new(batch, *elems, 1, 1),
-                    out_dims: Dims4::new(batch, *elems, 1, 1),
-                    matching: MatchMode::Elems,
-                    op: PlanOp::Relu,
-                },
-                LayerKind::Lrn { elems } => PlanStep {
-                    name: layer.name.clone(),
-                    in_dims: Dims4::new(batch, *elems, 1, 1),
-                    out_dims: Dims4::new(batch, *elems, 1, 1),
-                    matching: MatchMode::Elems,
-                    op: PlanOp::Lrn,
-                },
-            };
-            steps.push(step);
+            }
+
+            name_to_idx.insert(layer.name.as_str(), i);
+            steps.push(PlanStep {
+                name: layer.name.clone(),
+                op,
+                in_dims,
+                out_dims,
+                matching,
+                deps,
+                in_slots: Vec::new(),
+                out_slot: 0,
+            });
         }
+
+        // Pass 2 (DAG plans): descendant bitsets, then activation-slot
+        // assignment. A slot may be reused by step `i` only when every
+        // consumer of the slot's previous value is a (transitive)
+        // ancestor of `i` — so under ANY schedule that respects the
+        // dependency edges (the async walk included), the old value is
+        // fully consumed before `i` overwrites it. Slot 0 is reserved
+        // for the external-input staging and never reused.
+        let (slot_sizes, reach) = if graph {
+            let n = steps.len();
+            let nw = n.div_ceil(64);
+            let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+            for (i, s) in steps.iter().enumerate() {
+                for &d in &s.deps {
+                    succ[d].push(i);
+                }
+            }
+            let mut reach = vec![vec![0u64; nw]; n];
+            for i in (0..n).rev() {
+                bit_set(&mut reach[i], i);
+                let (head, tail) = reach.split_at_mut(i + 1);
+                for &s in &succ[i] {
+                    or_into(&mut head[i], &tail[s - i - 1]);
+                }
+            }
+            let mut slot_sizes: Vec<usize> = vec![steps[0].in_dims.len()];
+            let mut slot_producer: Vec<usize> = vec![usize::MAX];
+            for i in 0..n {
+                let in_slots: Vec<usize> = if steps[i].deps.is_empty() {
+                    vec![0]
+                } else {
+                    steps[i].deps.iter().map(|&d| steps[d].out_slot).collect()
+                };
+                let mut chosen = None;
+                for s in 1..slot_sizes.len() {
+                    if in_slots.contains(&s) {
+                        continue; // never write over an input in flight
+                    }
+                    let p = slot_producer[s];
+                    // Reuse is safe only when every consumer of the
+                    // slot's current value is a dependency ancestor of
+                    // step i. A value no one consumes (e.g. the
+                    // network output) is never reclaimable.
+                    let safe =
+                        !succ[p].is_empty() && succ[p].iter().all(|&c| bit_get(&reach[c], i));
+                    if safe {
+                        chosen = Some(s);
+                        break;
+                    }
+                }
+                let s = chosen.unwrap_or_else(|| {
+                    slot_sizes.push(0);
+                    slot_producer.push(usize::MAX);
+                    slot_sizes.len() - 1
+                });
+                slot_producer[s] = i;
+                slot_sizes[s] = slot_sizes[s].max(steps[i].out_dims.len());
+                steps[i].in_slots = in_slots;
+                steps[i].out_slot = s;
+            }
+            (slot_sizes, reach)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+
         let input_dims = steps[0].in_dims;
         let output_dims = steps.last().unwrap().out_dims;
         NetworkPlan {
@@ -331,6 +587,9 @@ impl NetworkPlan {
             input_dims,
             output_dims,
             input_seed: 0xBA7C4 + batch as u64,
+            graph,
+            slot_sizes,
+            reach,
         }
     }
 
@@ -349,9 +608,16 @@ impl NetworkPlan {
         self.input_dims.chw()
     }
 
-    /// Kernel workspace high-water mark over all CONV steps, for a pool
-    /// of `workers` workers.
+    /// Kernel workspace floats for a pool of `workers` workers. Chain
+    /// plans need the high-water mark over all CONV steps (one layer
+    /// runs at a time); DAG plans need the async layout total — steps
+    /// that may run **concurrently** get disjoint workspace intervals
+    /// (the "per-branch workspace slices"), steps that are dependency-
+    /// ordered share them.
     pub fn workspace_floats(&self, workers: usize) -> usize {
+        if self.graph {
+            return self.ws_layout(workers).1;
+        }
         self.steps
             .iter()
             .map(|s| match &s.op {
@@ -360,6 +626,85 @@ impl NetworkPlan {
             })
             .max()
             .unwrap_or(0)
+    }
+
+    /// Whether this plan supports the asynchronous DAG walk
+    /// ([`NetworkPlan::run_async`]): true exactly for plans compiled
+    /// from a network with explicit dataflow inputs. Chain plans (and
+    /// the timed Fig-9 path, which needs per-kernel laps) use the
+    /// sequential walk.
+    pub fn supports_async(&self) -> bool {
+        self.graph
+    }
+
+    /// Workspace interval per step plus the total floats, for `workers`
+    /// pool workers (DAG plans). Greedy interval assignment in
+    /// topological order: a step's interval must avoid the interval of
+    /// every earlier step it is *not* dependency-ordered with (those
+    /// can run concurrently under the async walk); ordered steps freely
+    /// share offsets, so a pure chain degenerates to the high-water
+    /// mark. Recomputed per pool size because per-worker scratch scales
+    /// the per-step need; the result is deterministic for a given
+    /// (plan, workers).
+    fn ws_layout(&self, workers: usize) -> (Vec<Range<usize>>, usize) {
+        let n = self.steps.len();
+        let mut ranges: Vec<Range<usize>> = vec![0..0; n];
+        let mut total = 0;
+        for i in 0..n {
+            let need = match &self.steps[i].op {
+                PlanOp::Conv { plan } => plan.workspace_floats(self.batch, workers),
+                _ => 0,
+            };
+            if need == 0 {
+                continue;
+            }
+            let mut busy: Vec<(usize, usize)> = Vec::new();
+            for (j, r) in ranges.iter().enumerate().take(i) {
+                // j < i in topological order, so "i descends from j"
+                // is the only possible ordering; anything else is
+                // concurrent and must not share workspace.
+                if r.end > r.start && !bit_get(&self.reach[j], i) {
+                    busy.push((r.start, r.end));
+                }
+            }
+            busy.sort_unstable();
+            let mut off = 0;
+            for (s, e) in busy {
+                if off + need <= s {
+                    break;
+                }
+                off = off.max(e);
+            }
+            ranges[i] = off..off + need;
+            total = total.max(off + need);
+        }
+        (ranges, total)
+    }
+
+    /// Size `arena` for this plan on `pool`: ping-pong buffers for
+    /// chain plans, activation slots for DAG plans, and the kernel
+    /// workspace either way. Idempotent; called by
+    /// [`WorkspaceArena::for_plan`] and lazily by the run entry points.
+    fn size_arena(&self, pool: &WorkerPool, arena: &mut WorkspaceArena) {
+        if self.graph {
+            if arena.slots.len() < self.slot_sizes.len() {
+                arena.slots.resize_with(self.slot_sizes.len(), Vec::new);
+            }
+            for (buf, &need) in arena.slots.iter_mut().zip(&self.slot_sizes) {
+                if buf.len() < need {
+                    buf.resize(need, 0.0);
+                }
+            }
+        } else {
+            let act = self.max_activation_floats();
+            if arena.ping.len() < act {
+                arena.ping.resize(act, 0.0);
+            }
+            if arena.pong.len() < act {
+                arena.pong.resize(act, 0.0);
+            }
+        }
+        arena.ws.ensure(self.workspace_floats(pool.workers()));
     }
 
     /// Largest activation buffer any step reads or writes.
@@ -476,17 +821,15 @@ impl NetworkPlan {
         pool: &WorkerPool,
         arena: &mut WorkspaceArena,
     ) -> PlanCursor {
-        let act = self.max_activation_floats();
-        if arena.ping.len() < act {
-            arena.ping.resize(act, 0.0);
-        }
-        if arena.pong.len() < act {
-            arena.pong.resize(act, 0.0);
-        }
-        arena.ws.ensure(self.workspace_floats(pool.workers()));
-
+        self.size_arena(pool, arena);
         let mut cur_dims = None;
-        if let Some(inp) = input {
+        if self.graph {
+            // DAG plans stage into slot 0 up front — external input or
+            // the seeded synthetic batch — exactly like the async walk
+            // (`begin_run_async`), so the two walks consume identical
+            // bytes.
+            self.stage_input(input, arena);
+        } else if let Some(inp) = input {
             assert_eq!(inp.len(), self.input_dims.len(), "input length");
             let in_len = self.steps[0].in_dims.len();
             arena.ping[..in_len].copy_from_slice(inp);
@@ -498,6 +841,22 @@ impl NetworkPlan {
             cur_is_ping: true,
             cur_dims,
             rng: Rng::new(self.input_seed),
+        }
+    }
+
+    /// Stage the run input into a DAG plan's slot 0: the external batch
+    /// when given, else the deterministic synthetic batch seeded by
+    /// `input_seed` (the same stream both walks consume).
+    fn stage_input(&self, input: Option<&[f32]>, arena: &mut WorkspaceArena) {
+        let in_len = self.steps[0].in_dims.len();
+        match input {
+            Some(inp) => {
+                assert_eq!(inp.len(), self.input_dims.len(), "input length");
+                arena.slots[0][..in_len].copy_from_slice(inp);
+            }
+            None => {
+                Rng::new(self.input_seed).fill_activations(&mut arena.slots[0][..in_len]);
+            }
         }
     }
 
@@ -513,6 +872,9 @@ impl NetworkPlan {
         mut observer: Option<&mut dyn FnMut(PlanLayerRun)>,
         kernel_laps: bool,
     ) -> bool {
+        if self.graph {
+            return self.step_graph(cursor, pool, arena, observer, kernel_laps);
+        }
         let Some(step) = self.steps.get(cursor.step_idx) else {
             return false;
         };
@@ -558,18 +920,8 @@ impl NetworkPlan {
                     "relu"
                 };
                 lap(&mut sw, name, || match &step.op {
-                    PlanOp::Lrn => {
-                        for v in &mut cur[..in_len] {
-                            // LRN modelled as a 5-op/element pass.
-                            let x2 = *v * *v;
-                            *v /= (1.0 + 1e-4 * x2).powf(0.75);
-                        }
-                    }
-                    _ => {
-                        for v in &mut cur[..in_len] {
-                            *v = v.max(0.0);
-                        }
-                    }
+                    PlanOp::Lrn => lrn_in_place(&mut cur[..in_len]),
+                    _ => relu_in_place(&mut cur[..in_len]),
                 });
             }
             _ => {
@@ -586,11 +938,7 @@ impl NetworkPlan {
                         plan.execute_into(self.batch, src, pool, ws, dst, sw.as_mut());
                         // ReLU follows every conv in all three
                         // networks (seed scheduler behaviour).
-                        lap(&mut sw, "relu", || {
-                            for v in dst.iter_mut() {
-                                *v = v.max(0.0);
-                            }
-                        });
+                        lap(&mut sw, "relu", || relu_in_place(dst));
                     }
                     PlanOp::Fc { fc, w } => {
                         lap(&mut sw, "fc", || fc_into(fc, w, self.batch, src, dst));
@@ -633,16 +981,434 @@ impl NetworkPlan {
         true
     }
 
+    /// Sequential walk of one DAG-plan step: real branch dataflow
+    /// through the activation slots, in topological (list) order. This
+    /// is the reference the async walk is byte-compared against, and
+    /// the path timed runs take (per-kernel laps need one layer at a
+    /// time).
+    fn step_graph(
+        &self,
+        cursor: &mut PlanCursor,
+        pool: &WorkerPool,
+        arena: &mut WorkspaceArena,
+        mut observer: Option<&mut dyn FnMut(PlanLayerRun)>,
+        kernel_laps: bool,
+    ) -> bool {
+        let Some(step) = self.steps.get(cursor.step_idx) else {
+            return false;
+        };
+        let timed = observer.is_some() && kernel_laps;
+        let mut sw = if timed { Some(Stopwatch::new()) } else { None };
+        let t0 = Instant::now();
+        let out_len = step.out_dims.len();
+
+        let WorkspaceArena { ws, slots, .. } = arena;
+        // Disjoint slot views: a step never writes one of its input
+        // slots (plan invariant, enforced at slot assignment), so one
+        // mutable view plus N shared views cannot alias.
+        let base: *mut Vec<f32> = slots.as_mut_ptr();
+        let out: &mut [f32] = unsafe { &mut (*base.add(step.out_slot))[..out_len] };
+        let in_lens: Vec<usize> = if step.deps.is_empty() {
+            vec![step.in_dims.len()]
+        } else {
+            step.deps
+                .iter()
+                .map(|&d| self.steps[d].out_dims.len())
+                .collect()
+        };
+        let ins: Vec<&[f32]> = step
+            .in_slots
+            .iter()
+            .zip(&in_lens)
+            .map(|(&s, &l)| unsafe { &(*base.add(s))[..l] })
+            .collect();
+
+        let mut method = None;
+        match &step.op {
+            PlanOp::Conv { plan } => {
+                method = Some(plan.method());
+                plan.execute_into(self.batch, ins[0], pool, ws, out, sw.as_mut());
+                // ReLU follows every conv (seed scheduler behaviour).
+                lap(&mut sw, "relu", || relu_in_place(out));
+            }
+            PlanOp::Fc { fc, w } => {
+                lap(&mut sw, "fc", || fc_into(fc, w, self.batch, ins[0], out));
+            }
+            PlanOp::Pool {
+                kind,
+                k,
+                stride,
+                pad,
+            } => {
+                lap(&mut sw, "pool", || {
+                    pool_into(
+                        *kind,
+                        *k,
+                        *stride,
+                        *pad,
+                        step.in_dims,
+                        step.out_dims,
+                        ins[0],
+                        out,
+                    )
+                });
+            }
+            PlanOp::Relu => {
+                lap(&mut sw, "relu", || {
+                    out.copy_from_slice(ins[0]);
+                    relu_in_place(out);
+                });
+            }
+            PlanOp::Lrn => {
+                lap(&mut sw, "lrn", || {
+                    out.copy_from_slice(ins[0]);
+                    lrn_in_place(out);
+                });
+            }
+            PlanOp::Concat { parts } => {
+                lap(&mut sw, "concat", || {
+                    concat_images(self.batch, step.out_dims.chw(), parts, &ins, out)
+                });
+            }
+        }
+
+        if let Some(obs) = observer.as_mut() {
+            obs(PlanLayerRun {
+                layer: &step.name,
+                method,
+                total: t0.elapsed(),
+                kernels: sw.as_ref(),
+            });
+        }
+        cursor.step_idx += 1;
+        true
+    }
+
     /// The final activation slice of a completed walk, resident in
     /// `arena`. Panics (debug) if the cursor has steps left.
     pub fn finish<'a>(&self, cursor: &PlanCursor, arena: &'a WorkspaceArena) -> &'a [f32] {
         debug_assert!(cursor.is_done(), "finish() before the walk completed");
+        if self.graph {
+            let last = self.steps.last().unwrap();
+            return &arena.slots[last.out_slot][..self.output_dims.len()];
+        }
         let cur = if cursor.cur_is_ping {
             &arena.ping
         } else {
             &arena.pong
         };
         &cur[..self.output_dims.len()]
+    }
+}
+
+impl NetworkPlan {
+    /// Run the **asynchronous DAG walk** to completion and return the
+    /// logits: every step is submitted as owned, dependency-chained
+    /// pool jobs, so independent branches (an inception module's four
+    /// chains) overlap on the shared pool. Byte-identical to the
+    /// sequential walk at every pool size (`tests/plan_props.rs` pins
+    /// this on `googlenet()` and `miniception()`). Panics unless
+    /// [`NetworkPlan::supports_async`].
+    ///
+    /// Safe wrapper over [`NetworkPlan::begin_run_async`]: the arena is
+    /// exclusively borrowed for the whole walk and the cursor is driven
+    /// to completion before returning.
+    pub fn run_async<'a>(
+        &self,
+        input: Option<&[f32]>,
+        pool: &WorkerPool,
+        arena: &'a mut WorkspaceArena,
+    ) -> &'a [f32] {
+        // SAFETY: `arena` is exclusively borrowed for this call, and
+        // the cursor is fully stepped (all jobs joined) before either
+        // borrow ends.
+        let mut cursor = unsafe { self.begin_run_async(input, pool, arena) };
+        while self.step_async(&mut cursor) {}
+        self.finish_async(&cursor, arena)
+    }
+
+    /// Begin the asynchronous DAG walk: size the arena, stage the
+    /// input into slot 0, and submit **every step** as owned pool jobs
+    /// chained behind their producers ([`WorkerPool::submit_owned`]).
+    /// A padding conv step becomes a `pad → kernel → relu` chain
+    /// (pad/relu tile per image, the kernel per
+    /// [`ConvExecutor::async_tiles`]); pool / fc / relu / lrn steps are
+    /// one per-image-tiled job; a concat is one job tiling `(image,
+    /// input)` pairs, each copying its branch's channel range — the
+    /// [`crate::util::SharedSlice`] disjoint-write pattern. The pool's
+    /// dependency-aware FIFO queue then schedules the topological
+    /// frontier: independent branch chains overlap, the concat waits on
+    /// all four branch tails, and an older batch's jobs drain before a
+    /// pipelined successor's.
+    ///
+    /// Drive the returned [`AsyncCursor`] with
+    /// [`NetworkPlan::step_async`] until it returns `false`, then read
+    /// the logits with [`NetworkPlan::finish_async`].
+    ///
+    /// # Safety
+    ///
+    /// The submitted jobs hold lifetime-erased views into `arena`'s
+    /// slots and workspace. Until the returned cursor is fully stepped
+    /// or dropped (both block on every in-flight job), the caller must
+    /// guarantee that:
+    ///
+    /// * `arena` stays alive and is not dropped, resized, or run
+    ///   against by any other cursor or `run*` call — declare the
+    ///   cursor **after** the arena (or store it before the arena in a
+    ///   struct), so drop order joins the jobs before the buffers go;
+    /// * the cursor is not leaked (`mem::forget`), which would let
+    ///   pool workers touch freed memory after the arena drops.
+    ///
+    /// [`NetworkPlan::run_async`] wraps this contract safely; the
+    /// serving executor upholds it by storing each pipeline slot's
+    /// cursor alongside the slot-owned arena.
+    pub unsafe fn begin_run_async(
+        &self,
+        input: Option<&[f32]>,
+        pool: &WorkerPool,
+        arena: &mut WorkspaceArena,
+    ) -> AsyncCursor {
+        assert!(self.graph, "begin_run_async needs a DAG plan (see supports_async)");
+        self.size_arena(pool, arena);
+        self.stage_input(input, arena);
+        let (ws_ranges, _) = self.ws_layout(pool.workers());
+        let ws_base = arena.ws.buf_mut().as_mut_ptr();
+        // SAFETY (all `from_raw` below): validity and exclusivity of
+        // these views until job completion is the caller's contract;
+        // disjointness across concurrent jobs is the plan's slot and
+        // workspace assignment.
+        let slot_views: Vec<SharedSlice<'static>> = arena
+            .slots
+            .iter_mut()
+            .map(|v| unsafe { SharedSlice::from_raw(v.as_mut_ptr(), v.len()) })
+            .collect();
+
+        let batch = self.batch;
+        let mut jobs: Vec<Vec<JobHandle>> = Vec::with_capacity(self.steps.len());
+        for (i, step) in self.steps.iter().enumerate() {
+            let out_sh = slot_views[step.out_slot];
+            let out_chw = step.out_dims.chw();
+            let in_lens: Vec<usize> = if step.deps.is_empty() {
+                vec![step.in_dims.len()]
+            } else {
+                step.deps
+                    .iter()
+                    .map(|&d| self.steps[d].out_dims.len())
+                    .collect()
+            };
+            let in_shs: Vec<SharedSlice<'static>> =
+                step.in_slots.iter().map(|&s| slot_views[s]).collect();
+            let dep_handles: Vec<&JobHandle> = step
+                .deps
+                .iter()
+                .map(|&d| jobs[d].last().expect("dep step has jobs"))
+                .collect();
+
+            let mut step_jobs: Vec<JobHandle> = Vec::new();
+            match &step.op {
+                PlanOp::Conv { plan } => {
+                    let shape = plan.shape().clone();
+                    let ws_range = ws_ranges[i].clone();
+                    let padded_chw = shape.c * shape.padded_h() * shape.padded_w();
+                    let plen = if shape.pad > 0 { batch * padded_chw } else { 0 };
+                    debug_assert!(ws_range.len() >= plen);
+                    let ws_sh = unsafe {
+                        SharedSlice::from_raw(ws_base.add(ws_range.start), ws_range.len())
+                    };
+                    let scratch_sh = unsafe {
+                        SharedSlice::from_raw(
+                            ws_base.add(ws_range.start + plen),
+                            ws_range.len() - plen,
+                        )
+                    };
+                    let in_sh = in_shs[0];
+                    let in_len = in_lens[0];
+                    let chw = step.in_dims.chw();
+
+                    let pad_job = if shape.pad > 0 {
+                        let shape = shape.clone();
+                        let task = Box::new(move |n: usize, _worker: usize| {
+                            // SAFETY: per-image ranges are disjoint per
+                            // tile; the producer completed before this
+                            // job became runnable.
+                            let img = unsafe { in_sh.slice_ref(n * chw, chw) };
+                            let dst = unsafe { ws_sh.slice_mut(n * padded_chw, padded_chw) };
+                            pad_image_into(&shape, img, dst);
+                        });
+                        Some(pool.submit_owned(batch, task, &dep_handles))
+                    } else {
+                        None
+                    };
+
+                    let kernel_deps: Vec<&JobHandle> = match &pad_job {
+                        Some(p) => vec![p],
+                        None => dep_handles.clone(),
+                    };
+                    let kplan = plan.clone();
+                    let tiles = plan.async_tiles(batch);
+                    let task = Box::new(move |t: usize, worker: usize| {
+                        // SAFETY: reads are of completed producers (pad
+                        // or input); scratch/out disjointness is the
+                        // async-tile contract of the plan.
+                        let padded: &[f32] = unsafe {
+                            if plen > 0 {
+                                ws_sh.slice_ref(0, plen)
+                            } else {
+                                in_sh.slice_ref(0, in_len)
+                            }
+                        };
+                        unsafe {
+                            kplan.run_async_tile(t, worker, batch, padded, &scratch_sh, &out_sh)
+                        };
+                    });
+                    let kernel_job = pool.submit_owned(tiles, task, &kernel_deps);
+
+                    // ReLU follows every conv (seed scheduler
+                    // behaviour), fused as a per-image job behind the
+                    // kernel so the step's terminal handle covers it.
+                    let task = Box::new(move |n: usize, _worker: usize| {
+                        // SAFETY: per-image output ranges are disjoint.
+                        let img = unsafe { out_sh.slice_mut(n * out_chw, out_chw) };
+                        relu_in_place(img);
+                    });
+                    let relu_job = pool.submit_owned(batch, task, &[&kernel_job]);
+                    if let Some(p) = pad_job {
+                        step_jobs.push(p);
+                    }
+                    step_jobs.push(kernel_job);
+                    step_jobs.push(relu_job);
+                }
+                PlanOp::Fc { fc, w } => {
+                    let fc = fc.clone();
+                    let weights = w.clone();
+                    let (in_f, out_f) = (fc.in_features, fc.out_features);
+                    let in_sh = in_shs[0];
+                    let task = Box::new(move |n: usize, _worker: usize| {
+                        // SAFETY: per-image rows are disjoint.
+                        let xrow = unsafe { in_sh.slice_ref(n * in_f, in_f) };
+                        let orow = unsafe { out_sh.slice_mut(n * out_f, out_f) };
+                        fc_image_into(&fc, &weights, xrow, orow);
+                    });
+                    step_jobs.push(pool.submit_owned(batch, task, &dep_handles));
+                }
+                PlanOp::Pool {
+                    kind,
+                    k,
+                    stride,
+                    pad,
+                } => {
+                    let (kind, k, stride, pad) = (*kind, *k, *stride, *pad);
+                    let (in_dims, out_dims) = (step.in_dims, step.out_dims);
+                    let in_sh = in_shs[0];
+                    let in_len = in_lens[0];
+                    let task = Box::new(move |n: usize, _worker: usize| {
+                        // SAFETY: the whole input is read-only here;
+                        // per-image output blocks are disjoint.
+                        let src = unsafe { in_sh.slice_ref(0, in_len) };
+                        let out_img = unsafe { out_sh.slice_mut(n * out_chw, out_chw) };
+                        pool_image_into(kind, k, stride, pad, in_dims, out_dims, n, src, out_img);
+                    });
+                    step_jobs.push(pool.submit_owned(batch, task, &dep_handles));
+                }
+                PlanOp::Relu | PlanOp::Lrn => {
+                    let lrn = matches!(step.op, PlanOp::Lrn);
+                    let chw = step.in_dims.chw();
+                    let in_sh = in_shs[0];
+                    let task = Box::new(move |n: usize, _worker: usize| {
+                        // SAFETY: per-image ranges are disjoint; the
+                        // input producer completed first.
+                        let src = unsafe { in_sh.slice_ref(n * chw, chw) };
+                        let dst = unsafe { out_sh.slice_mut(n * chw, chw) };
+                        dst.copy_from_slice(src);
+                        if lrn {
+                            lrn_in_place(dst);
+                        } else {
+                            relu_in_place(dst);
+                        }
+                    });
+                    step_jobs.push(pool.submit_owned(batch, task, &dep_handles));
+                }
+                PlanOp::Concat { parts } => {
+                    let parts = parts.clone();
+                    let mut offs = Vec::with_capacity(parts.len());
+                    let mut off = 0;
+                    for &len in &parts {
+                        offs.push(off);
+                        off += len;
+                    }
+                    let np = parts.len();
+                    let srcs = in_shs.clone();
+                    let task = Box::new(move |t: usize, _worker: usize| {
+                        let (n, p) = (t / np, t % np);
+                        let len = parts[p];
+                        // SAFETY: (image, input) copy ranges partition
+                        // the output; branch tails completed first.
+                        let src = unsafe { srcs[p].slice_ref(n * len, len) };
+                        let dst = unsafe { out_sh.slice_mut(n * out_chw + offs[p], len) };
+                        dst.copy_from_slice(src);
+                    });
+                    step_jobs.push(pool.submit_owned(batch * np, task, &dep_handles));
+                }
+            }
+            drop(dep_handles);
+            jobs.push(step_jobs);
+        }
+        AsyncCursor { jobs, retired: 0 }
+    }
+
+    /// Retire the next step of an async walk, blocking until that
+    /// step's jobs complete (helping to drain unclaimed tiles on the
+    /// calling thread — so a 1-worker pool degenerates to the
+    /// sequential walk). Steps retire in topological order; every
+    /// *later* step's jobs keep executing on the pool meanwhile, which
+    /// is where branch overlap (and, in the serving pipeline, batch
+    /// overlap) comes from. Returns `false` once every step retired.
+    pub fn step_async(&self, cursor: &mut AsyncCursor) -> bool {
+        if cursor.retired >= cursor.jobs.len() {
+            return false;
+        }
+        for h in cursor.jobs[cursor.retired].drain(..) {
+            h.wait();
+        }
+        cursor.retired += 1;
+        true
+    }
+
+    /// The logits of a completed async walk, resident in `arena` (the
+    /// arena the walk was begun with). Panics if steps remain.
+    pub fn finish_async<'a>(&self, cursor: &AsyncCursor, arena: &'a WorkspaceArena) -> &'a [f32] {
+        assert!(cursor.is_done(), "finish_async() before the walk completed");
+        let last = self.steps.last().unwrap();
+        &arena.slots[last.out_slot][..self.output_dims.len()]
+    }
+}
+
+/// Resumable state of one **asynchronous DAG walk** (see
+/// [`NetworkPlan::begin_run_async`]): every step's owned job handles,
+/// retired in topological order by [`NetworkPlan::step_async`].
+///
+/// Dropping the cursor blocks until every remaining job completes
+/// (each [`crate::util::JobHandle`] blocks on drop), so in-flight jobs
+/// can never outlive the walk — but the *memory* they reference is the
+/// arena's, which is why `begin_run_async`'s safety contract requires
+/// the cursor to be dropped before the arena.
+pub struct AsyncCursor {
+    /// Per-step job handles (pad/kernel/relu chains for convs, one job
+    /// otherwise), drained as steps retire.
+    jobs: Vec<Vec<JobHandle>>,
+    retired: usize,
+}
+
+impl AsyncCursor {
+    /// Steps fully retired so far (their jobs completed and joined).
+    pub fn steps_done(&self) -> usize {
+        self.retired
+    }
+
+    /// Whether every step has retired (the walk may be
+    /// [`NetworkPlan::finish_async`]ed).
+    pub fn is_done(&self) -> bool {
+        self.retired >= self.jobs.len()
     }
 }
 
@@ -781,22 +1547,83 @@ impl PlanCache {
     }
 }
 
+/// `orow[o] = Σ_i xrow[i] * w[o][i]` — one image of the FC kernel; the
+/// per-image unit the async FC jobs tile over.
+fn fc_image_into(fc: &FcShape, w: &[f32], xrow: &[f32], orow: &mut [f32]) {
+    debug_assert_eq!(xrow.len(), fc.in_features);
+    debug_assert_eq!(orow.len(), fc.out_features);
+    for (o, oval) in orow.iter_mut().enumerate() {
+        let wrow = &w[o * fc.in_features..(o + 1) * fc.in_features];
+        *oval = xrow.iter().zip(wrow).map(|(a, b)| a * b).sum();
+    }
+}
+
 /// `out[n][o] = Σ_i x[n][i] * w[o][i]` — the seed scheduler's FC kernel,
-/// writing into a caller slice.
+/// writing into a caller slice. [`fc_image_into`] looped over a batch.
 fn fc_into(fc: &FcShape, w: &[f32], batch: usize, input: &[f32], out: &mut [f32]) {
     debug_assert_eq!(input.len(), batch * fc.in_features);
     debug_assert_eq!(out.len(), batch * fc.out_features);
     for img in 0..batch {
-        let xrow = &input[img * fc.in_features..(img + 1) * fc.in_features];
-        let orow = &mut out[img * fc.out_features..(img + 1) * fc.out_features];
-        for (o, oval) in orow.iter_mut().enumerate() {
-            let wrow = &w[o * fc.in_features..(o + 1) * fc.in_features];
-            *oval = xrow.iter().zip(wrow).map(|(a, b)| a * b).sum();
+        fc_image_into(
+            fc,
+            w,
+            &input[img * fc.in_features..(img + 1) * fc.in_features],
+            &mut out[img * fc.out_features..(img + 1) * fc.out_features],
+        );
+    }
+}
+
+/// Max/avg pooling of ONE image: reads image `n` of the full NCHW
+/// `input`, writes that image's `C * OH * OW` output block — the
+/// per-image unit the async pool jobs tile over.
+#[allow(clippy::too_many_arguments)]
+fn pool_image_into(
+    kind: PoolKind,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    in_dims: Dims4,
+    out_dims: Dims4,
+    n: usize,
+    input: &[f32],
+    out_img: &mut [f32],
+) {
+    let d = in_dims;
+    let (oh, ow) = (out_dims.h, out_dims.w);
+    debug_assert_eq!(out_img.len(), out_dims.chw());
+    for c in 0..d.c {
+        for h in 0..oh {
+            for w in 0..ow {
+                let mut acc: f32 = match kind {
+                    PoolKind::Max => f32::NEG_INFINITY,
+                    PoolKind::Avg => 0.0,
+                };
+                let mut count = 0;
+                for dh in 0..k {
+                    for dw in 0..k {
+                        let hh = (h * stride + dh) as isize - pad as isize;
+                        let ww = (w * stride + dw) as isize - pad as isize;
+                        if hh >= 0 && ww >= 0 && (hh as usize) < d.h && (ww as usize) < d.w {
+                            let v = input[d.index(n, c, hh as usize, ww as usize)];
+                            match kind {
+                                PoolKind::Max => acc = acc.max(v),
+                                PoolKind::Avg => acc += v,
+                            }
+                            count += 1;
+                        }
+                    }
+                }
+                if kind == PoolKind::Avg && count > 0 {
+                    acc /= count as f32;
+                }
+                out_img[(c * oh + h) * ow + w] = acc;
+            }
         }
     }
 }
 
 /// Max/avg pooling over NCHW slices — the seed scheduler's pool kernel.
+/// [`pool_image_into`] looped over the batch.
 #[allow(clippy::too_many_arguments)]
 fn pool_into(
     kind: PoolKind,
@@ -808,39 +1635,37 @@ fn pool_into(
     input: &[f32],
     out: &mut [f32],
 ) {
-    let d = in_dims;
-    let (oh, ow) = (out_dims.h, out_dims.w);
-    for n in 0..d.n {
-        for c in 0..d.c {
-            for h in 0..oh {
-                for w in 0..ow {
-                    let mut acc: f32 = match kind {
-                        PoolKind::Max => f32::NEG_INFINITY,
-                        PoolKind::Avg => 0.0,
-                    };
-                    let mut count = 0;
-                    for dh in 0..k {
-                        for dw in 0..k {
-                            let hh = (h * stride + dh) as isize - pad as isize;
-                            let ww = (w * stride + dw) as isize - pad as isize;
-                            if hh >= 0 && ww >= 0 && (hh as usize) < d.h && (ww as usize) < d.w {
-                                let v = input[d.index(n, c, hh as usize, ww as usize)];
-                                match kind {
-                                    PoolKind::Max => acc = acc.max(v),
-                                    PoolKind::Avg => acc += v,
-                                }
-                                count += 1;
-                            }
-                        }
-                    }
-                    if kind == PoolKind::Avg && count > 0 {
-                        acc /= count as f32;
-                    }
-                    out[out_dims.index(n, c, h, w)] = acc;
-                }
-            }
-        }
+    let out_chw = out_dims.chw();
+    for n in 0..in_dims.n {
+        pool_image_into(
+            kind,
+            k,
+            stride,
+            pad,
+            in_dims,
+            out_dims,
+            n,
+            input,
+            &mut out[n * out_chw..(n + 1) * out_chw],
+        );
     }
+}
+
+/// NCHW channel concat: input `i`'s per-image block (`parts[i]` floats)
+/// lands at cumulative channel offset inside each output image.
+/// Sequential form; the async concat job tiles over `(image, input)`
+/// pairs performing the identical copies.
+fn concat_images(batch: usize, out_chw: usize, parts: &[usize], ins: &[&[f32]], out: &mut [f32]) {
+    debug_assert_eq!(ins.len(), parts.len());
+    let mut off = 0;
+    for (src, &len) in ins.iter().zip(parts) {
+        for n in 0..batch {
+            out[n * out_chw + off..n * out_chw + off + len]
+                .copy_from_slice(&src[n * len..(n + 1) * len]);
+        }
+        off += len;
+    }
+    debug_assert_eq!(off, out_chw);
 }
 
 #[cfg(test)]
@@ -1022,6 +1847,74 @@ mod tests {
         let a = built.run_with_input(&img, &pool, &mut arena).to_vec();
         let b = cached.run_with_input(&img, &pool, &mut arena).to_vec();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn graph_plan_flows_real_branch_dataflow() {
+        use crate::config::miniception;
+        let net = miniception();
+        let pool = WorkerPool::new(2);
+        let plan = NetworkPlan::build(&net, 2, 11, |_, _| Method::DirectSparse);
+        assert!(plan.supports_async());
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+        let mut rng = Rng::new(3);
+        let mut img = vec![0.0; plan.input_dims().len()];
+        rng.fill_activations(&mut img);
+        let a = plan.run_with_input(&img, &pool, &mut arena).to_vec();
+        assert_eq!(a.len(), plan.output_dims().len());
+        assert!(a.iter().all(|v| v.is_finite()));
+        // Real dataflow: the input reaches the logits through the
+        // branches (the chain walk used to synthesise branch inputs).
+        let zeros = vec![0.0; plan.input_dims().len()];
+        let b = plan.run_with_input(&zeros, &pool, &mut arena).to_vec();
+        assert_ne!(a, b, "input must reach the logits");
+        let a2 = plan.run_with_input(&img, &pool, &mut arena).to_vec();
+        assert_eq!(a, a2, "graph walk must be deterministic");
+    }
+
+    #[test]
+    fn async_walk_matches_sequential_walk_bytes() {
+        use crate::config::miniception;
+        let net = miniception();
+        let pool = WorkerPool::new(4);
+        let plan = NetworkPlan::build(&net, 2, 19, |_, _| Method::DirectSparse);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+        let mut rng = Rng::new(7);
+        let mut img = vec![0.0; plan.input_dims().len()];
+        rng.fill_activations(&mut img);
+        let want = plan.run_with_input(&img, &pool, &mut arena).to_vec();
+        let got = plan.run_async(Some(&img), &pool, &mut arena).to_vec();
+        let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(wb, gb, "async walk diverged from sequential walk");
+        // Synthetic-input runs consume the same staged stream too.
+        let want = plan.run(&pool, &mut arena).to_vec();
+        let got = plan.run_async(None, &pool, &mut arena).to_vec();
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn async_walk_is_allocation_stable_and_resumable() {
+        use crate::config::miniception;
+        let net = miniception();
+        let pool = WorkerPool::new(3);
+        let plan = NetworkPlan::build(&net, 1, 23, |_, _| Method::LoweredSpmm);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+        let first = plan.run_async(None, &pool, &mut arena).to_vec();
+        let floats = arena.total_floats();
+        // Resumable form: step the cursor by hand.
+        // SAFETY: the cursor is fully stepped below, before the arena
+        // is touched again.
+        let mut cursor = unsafe { plan.begin_run_async(None, &pool, &mut arena) };
+        let mut steps = 0;
+        while plan.step_async(&mut cursor) {
+            steps += 1;
+        }
+        assert_eq!(steps, plan.num_steps());
+        assert!(cursor.is_done());
+        let second = plan.finish_async(&cursor, &arena).to_vec();
+        assert_eq!(first, second);
+        assert_eq!(arena.total_floats(), floats, "async steady state grew");
     }
 
     #[test]

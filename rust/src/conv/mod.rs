@@ -20,7 +20,11 @@
 //!   executed into caller-provided slices.
 //! * [`Workspace`] / [`WorkspaceArena`] / [`NetworkPlan`] (`executor.rs`)
 //!   — cuDNN-style scratch arenas and whole-network plans with zero
-//!   steady-state allocation.
+//!   steady-state allocation. Branch/merge networks (GoogLeNet's
+//!   inception modules) compile to **DAG plans** with an asynchronous
+//!   walk ([`NetworkPlan::run_async`] / [`AsyncCursor`]) that overlaps
+//!   independent branches on the shared pool, byte-identical to the
+//!   sequential walk.
 //!
 //! All parallel execution routes through the shared
 //! [`crate::util::WorkerPool`] (kernels decompose into tiles; no kernel
@@ -42,7 +46,8 @@ mod winograd;
 
 pub use dense::direct_dense;
 pub use executor::{
-    NetworkPlan, PlanCache, PlanCursor, PlanLayerRun, WeightedOp, Workspace, WorkspaceArena,
+    AsyncCursor, NetworkPlan, PlanCache, PlanCursor, PlanLayerRun, WeightedOp, Workspace,
+    WorkspaceArena,
 };
 pub use gemm::{gemm, gemm_blocked, gemm_parallel};
 pub use im2col::{

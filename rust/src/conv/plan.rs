@@ -22,9 +22,11 @@
 
 use super::executor::{pad_into, Workspace};
 use super::im2col::im2col_group_into;
-use super::sconv::{nnz_channel_tiles, sconv_tiled, worker_scratch_floats};
+use super::sconv::{nnz_channel_tiles, sconv_tile, sconv_tiled, worker_scratch_floats};
 use super::weights::ConvWeights;
-use super::winograd::{transform_filters, winograd_applicable, winograd_tiles_pool};
+use super::winograd::{
+    transform_filters, winograd_applicable, winograd_tile, winograd_tiles_pool,
+};
 use super::{csrmm, csrmm_pool, gemm_blocked, gemm_parallel};
 use crate::config::ConvShape;
 use crate::sparse::{CsrMatrix, StretchedFilter};
@@ -103,6 +105,45 @@ pub trait ConvExecutor: Send + Sync {
         ws: &mut Workspace,
         out: &mut [f32],
         sw: Option<&mut Stopwatch>,
+    );
+
+    /// Number of tiles the **asynchronous (DAG) execution path**
+    /// decomposes one batch of this layer into. Fixed by the plan and
+    /// the batch alone — never by the worker count — so async outputs
+    /// are byte-identical across pool sizes, like the blocking path.
+    ///
+    /// The DAG executor (`conv::NetworkPlan::begin_run_async`) submits
+    /// one pool job with this many tiles per conv layer (chained behind
+    /// the layer's pad job and its dataflow dependencies) and drives
+    /// each tile through [`ConvExecutor::run_async_tile`].
+    fn async_tiles(&self, batch: usize) -> usize;
+
+    /// Execute async tile `tile` (of [`ConvExecutor::async_tiles`]) as
+    /// `worker`. `padded` is the spatially padded input when the layer
+    /// pads (`shape().pad > 0`), else the raw input batch; `scratch`
+    /// spans this layer's private workspace scratch segment (at least
+    /// [`ConvExecutor::workspace_floats`] minus the padded-input floats,
+    /// i.e. the per-worker region), and `out` spans the layer's full
+    /// `batch * M * E * F` output. Every tile fully owns the output
+    /// range it writes (tiles never accumulate into each other's
+    /// elements), and the per-element arithmetic is identical to the
+    /// blocking path — which is what makes the DAG walk byte-identical
+    /// to the sequential walk.
+    ///
+    /// # Safety
+    ///
+    /// `worker` must be unique among concurrently running tiles of the
+    /// same job; `scratch` must hold the per-worker scratch for every
+    /// worker id the pool can produce; `out`/`scratch` must not be
+    /// accessed through any other path while the job runs.
+    unsafe fn run_async_tile(
+        &self,
+        tile: usize,
+        worker: usize,
+        batch: usize,
+        padded: &[f32],
+        scratch: &SharedSlice<'_>,
+        out: &SharedSlice<'_>,
     );
 }
 
@@ -225,6 +266,24 @@ impl ConvExecutor for DirectSparsePlan {
             sconv_tiled(s, padded, batch, &self.banks, &self.tiles, pool, out, scratch)
         });
     }
+
+    fn async_tiles(&self, batch: usize) -> usize {
+        batch * self.tiles.len()
+    }
+
+    unsafe fn run_async_tile(
+        &self,
+        tile: usize,
+        worker: usize,
+        _batch: usize,
+        padded: &[f32],
+        scratch: &SharedSlice<'_>,
+        out: &SharedSlice<'_>,
+    ) {
+        // SAFETY: forwarded caller contract; `self.tiles` partitions
+        // 0..M, so tile output planes are disjoint.
+        unsafe { sconv_tile(&self.shape, padded, &self.banks, &self.tiles, tile, worker, out, scratch) }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -253,6 +312,39 @@ impl LoweredGemmPlan {
         Self {
             shape: shape.clone(),
             weights,
+        }
+    }
+
+    /// One per-image tile: zero the image's output planes, im2col each
+    /// group into the worker's lowered buffer, multiply with the dense
+    /// GEMM. Shared by the blocking image-parallel path and the async
+    /// DAG jobs, so both run identical per-element arithmetic.
+    ///
+    /// # Safety
+    ///
+    /// See [`ConvExecutor::run_async_tile`].
+    unsafe fn image_tile(
+        &self,
+        n: usize,
+        worker: usize,
+        padded: &[f32],
+        low_sh: &SharedSlice<'_>,
+        out_sh: &SharedSlice<'_>,
+    ) {
+        let s = &self.shape;
+        let (k, ef) = s.lowered_dims();
+        let mg = s.m_per_group();
+        let per_image = s.m * ef;
+        // SAFETY: worker ids are unique among running tiles; image
+        // tiles own disjoint output planes.
+        let lowered = unsafe { low_sh.slice_mut(worker * k * ef, k * ef) };
+        let img_out = unsafe { out_sh.slice_mut(n * per_image, per_image) };
+        img_out.fill(0.0);
+        for g in 0..s.groups {
+            im2col_group_into(s, padded, n, g, lowered);
+            let a = self.weights.group_matrix(g);
+            let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
+            gemm_blocked(mg, k, ef, a, lowered, c);
         }
     }
 }
@@ -310,22 +402,31 @@ impl ConvExecutor for LoweredGemmPlan {
         } else {
             // Image-parallel pool tiles: disjoint output planes, one
             // lowered buffer per pool worker, no synchronisation.
-            let weights = &self.weights;
             let out_sh = SharedSlice::new(out);
             let low_sh = SharedSlice::new(lowered_all);
             pool.run(batch, &|n, worker| {
                 // SAFETY: worker ids are unique among running tiles;
                 // image tiles own disjoint output planes.
-                let lowered = unsafe { low_sh.slice_mut(worker * k * ef, k * ef) };
-                let img_out = unsafe { out_sh.slice_mut(n * per_image, per_image) };
-                for g in 0..s.groups {
-                    im2col_group_into(s, padded, n, g, lowered);
-                    let a = weights.group_matrix(g);
-                    let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
-                    gemm_blocked(mg, k, ef, a, lowered, c);
-                }
+                unsafe { self.image_tile(n, worker, padded, &low_sh, &out_sh) }
             });
         }
+    }
+
+    fn async_tiles(&self, batch: usize) -> usize {
+        batch
+    }
+
+    unsafe fn run_async_tile(
+        &self,
+        tile: usize,
+        worker: usize,
+        _batch: usize,
+        padded: &[f32],
+        scratch: &SharedSlice<'_>,
+        out: &SharedSlice<'_>,
+    ) {
+        // SAFETY: forwarded caller contract.
+        unsafe { self.image_tile(tile, worker, padded, scratch, out) }
     }
 }
 
@@ -346,6 +447,38 @@ impl LoweredSpmmPlan {
         Self {
             shape: shape.clone(),
             banks: weights.csr_banks(),
+        }
+    }
+
+    /// One per-image tile: zero the image's output planes, im2col each
+    /// group into the worker's lowered buffer, multiply with the CSR
+    /// SpMM. Shared by the blocking image-parallel path and the async
+    /// DAG jobs.
+    ///
+    /// # Safety
+    ///
+    /// See [`ConvExecutor::run_async_tile`].
+    unsafe fn image_tile(
+        &self,
+        n: usize,
+        worker: usize,
+        padded: &[f32],
+        low_sh: &SharedSlice<'_>,
+        out_sh: &SharedSlice<'_>,
+    ) {
+        let s = &self.shape;
+        let (k, ef) = s.lowered_dims();
+        let mg = s.m_per_group();
+        let per_image = s.m * ef;
+        // SAFETY: worker ids are unique among running tiles; image
+        // tiles own disjoint output planes.
+        let lowered = unsafe { low_sh.slice_mut(worker * k * ef, k * ef) };
+        let img_out = unsafe { out_sh.slice_mut(n * per_image, per_image) };
+        img_out.fill(0.0);
+        for (g, bank) in self.banks.iter().enumerate() {
+            im2col_group_into(s, padded, n, g, lowered);
+            let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
+            csrmm(bank, ef, lowered, c);
         }
     }
 }
@@ -401,20 +534,30 @@ impl ConvExecutor for LoweredSpmmPlan {
             }
         } else {
             // Image-parallel pool tiles, one lowered buffer per worker.
-            let banks = &self.banks;
             let out_sh = SharedSlice::new(out);
             let low_sh = SharedSlice::new(lowered_all);
             pool.run(batch, &|n, worker| {
                 // SAFETY: see LoweredGemmPlan::execute_into.
-                let lowered = unsafe { low_sh.slice_mut(worker * k * ef, k * ef) };
-                let img_out = unsafe { out_sh.slice_mut(n * per_image, per_image) };
-                for (g, bank) in banks.iter().enumerate() {
-                    im2col_group_into(s, padded, n, g, lowered);
-                    let c = &mut img_out[g * mg * ef..(g + 1) * mg * ef];
-                    csrmm(bank, ef, lowered, c);
-                }
+                unsafe { self.image_tile(n, worker, padded, &low_sh, &out_sh) }
             });
         }
+    }
+
+    fn async_tiles(&self, batch: usize) -> usize {
+        batch
+    }
+
+    unsafe fn run_async_tile(
+        &self,
+        tile: usize,
+        worker: usize,
+        _batch: usize,
+        padded: &[f32],
+        scratch: &SharedSlice<'_>,
+        out: &SharedSlice<'_>,
+    ) {
+        // SAFETY: forwarded caller contract.
+        unsafe { self.image_tile(tile, worker, padded, scratch, out) }
     }
 }
 
@@ -476,6 +619,25 @@ impl ConvExecutor for WinogradPlan {
         lap(&mut sw, "winograd", || {
             winograd_tiles_pool(s, padded, batch, &self.u, acc_all, out, pool)
         });
+    }
+
+    fn async_tiles(&self, batch: usize) -> usize {
+        batch * self.shape.out_h().div_ceil(2)
+    }
+
+    unsafe fn run_async_tile(
+        &self,
+        tile: usize,
+        worker: usize,
+        _batch: usize,
+        padded: &[f32],
+        scratch: &SharedSlice<'_>,
+        out: &SharedSlice<'_>,
+    ) {
+        // SAFETY: forwarded caller contract; (image, tile-row) tiles
+        // write disjoint output rows and every output element is
+        // overwritten by exactly one tile.
+        unsafe { winograd_tile(&self.shape, padded, &self.u, tile, worker, scratch, out) }
     }
 }
 
@@ -608,6 +770,23 @@ impl ConvExecutor for LayerPlan {
     ) {
         self.exec.execute_into(batch, input, pool, ws, out, sw);
     }
+
+    fn async_tiles(&self, batch: usize) -> usize {
+        self.exec.async_tiles(batch)
+    }
+
+    unsafe fn run_async_tile(
+        &self,
+        tile: usize,
+        worker: usize,
+        batch: usize,
+        padded: &[f32],
+        scratch: &SharedSlice<'_>,
+        out: &SharedSlice<'_>,
+    ) {
+        // SAFETY: forwarded caller contract.
+        unsafe { self.exec.run_async_tile(tile, worker, batch, padded, scratch, out) }
+    }
 }
 
 /// The canonical correctness grid: every structurally distinct layer
@@ -726,6 +905,54 @@ mod tests {
         plan.execute_into(2, x.data(), &pool, &mut ws, out.data_mut(), Some(&mut sw));
         assert!(sw.names().contains(&"sconv".to_string()));
         assert!(!sw.names().contains(&"im2col".to_string()));
+    }
+
+    #[test]
+    fn async_tile_decomposition_reproduces_execute_into_bytes() {
+        // Drive every method's async tile body by hand (single worker,
+        // plan-fixed tile order) and compare bit-for-bit against the
+        // blocking execute_into path — the per-layer half of the
+        // DAG-walk ≡ sequential-walk property.
+        let pool = WorkerPool::new(3);
+        for (i, shape) in shapes_under_test().into_iter().enumerate() {
+            let (x, w) = case(&shape, 2, 700 + i as u64);
+            for method in Method::ALL {
+                if method == Method::Winograd && !winograd_applicable(&shape) {
+                    continue;
+                }
+                let plan = LayerPlan::build(&shape, &w, method);
+                let mut ws = Workspace::new();
+                let mut want = Tensor4::zeros(plan.out_dims(2));
+                plan.execute_into(2, x.data(), &pool, &mut ws, want.data_mut(), None);
+
+                let plen = if shape.pad > 0 {
+                    2 * shape.c * shape.padded_h() * shape.padded_w()
+                } else {
+                    0
+                };
+                let mut padded_buf = vec![0.0f32; plen];
+                let padded: &[f32] = if shape.pad > 0 {
+                    pad_into(&shape, 2, x.data(), &mut padded_buf);
+                    &padded_buf
+                } else {
+                    x.data()
+                };
+                let scratch_len = plan.workspace_floats(2, 1) - plen;
+                let mut scratch = vec![0.0f32; scratch_len];
+                let mut got = vec![f32::NAN; want.data().len()];
+                {
+                    let out_sh = SharedSlice::new(&mut got);
+                    let scr_sh = SharedSlice::new(&mut scratch);
+                    for t in 0..plan.async_tiles(2) {
+                        // SAFETY: one worker, exclusive buffers.
+                        unsafe { plan.run_async_tile(t, 0, 2, padded, &scr_sh, &out_sh) };
+                    }
+                }
+                let wb: Vec<u32> = want.data().iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(wb, gb, "{shape} under {}", method.name());
+            }
+        }
     }
 
     #[test]

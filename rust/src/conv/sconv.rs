@@ -214,15 +214,10 @@ pub(crate) fn sconv_tiled(
     scratch: &mut [f32],
 ) {
     assert_eq!(banks.len(), shape.groups);
-    let (e, f) = (shape.out_h(), shape.out_w());
-    let ef = e * f;
-    let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
-    let (hp, wp) = (shape.padded_h(), shape.padded_w());
-    let group_len = cg * hp * wp;
-    let img_len = shape.c * hp * wp;
+    let ef = shape.out_h() * shape.out_w();
+    let img_len = shape.c * shape.padded_h() * shape.padded_w();
     debug_assert_eq!(padded.len(), batch * img_len);
     debug_assert_eq!(out.len(), batch * shape.m * ef);
-    let span = if shape.stride == 1 { (e - 1) * wp + f } else { 0 };
     let per_worker = worker_scratch_floats(shape);
     assert!(scratch.len() >= pool.workers() * per_worker);
     let n_ct = tiles.len();
@@ -233,21 +228,66 @@ pub(crate) fn sconv_tiled(
     let out_sh = SharedSlice::new(out);
     let scr_sh = SharedSlice::new(scratch);
     pool.run(batch * n_ct, &|tile, worker| {
-        let (n, ct) = (tile / n_ct, tile % n_ct);
         // SAFETY: worker ids are unique among concurrently running
-        // tiles, so per-worker scratch views never alias.
-        let scr = unsafe { scr_sh.slice_mut(worker * per_worker, per_worker) };
-        let scr = &mut scr[..span];
-        let img = &padded[n * img_len..(n + 1) * img_len];
-        for m in tiles[ct].clone() {
-            let g = m / mg;
-            let in_group = &img[g * group_len..(g + 1) * group_len];
-            // SAFETY: `tiles` partitions 0..M, so (n, m) planes are
-            // disjoint across tiles.
-            let plane = unsafe { out_sh.slice_mut((n * shape.m + m) * ef, ef) };
-            sconv_plane(shape, in_group, &banks[g], m % mg, plane, scr);
-        }
+        // tiles of this job, and `tiles` partitions 0..M — see
+        // `sconv_tile`.
+        unsafe { sconv_tile(shape, padded, banks, tiles, tile, worker, &out_sh, &scr_sh) }
     });
+}
+
+/// Execute one `(image, channel-tile)` unit of the direct sparse
+/// convolution: tile index `tile` decomposes as `(n, ct) = (tile /
+/// tiles.len(), tile % tiles.len())`; the worker's private scratch
+/// plane is carved from `scr_sh` by `worker` id, and the tile's output
+/// planes are written through `out_sh`. This is the one tile body
+/// shared by the blocking [`sconv_tiled`] path and the DAG executor's
+/// async conv jobs, so both produce **byte-identical** planes by
+/// construction.
+///
+/// # Safety
+///
+/// `worker` must be unique among concurrently running tiles of the same
+/// job, `scr_sh` must hold at least `workers * worker_scratch_floats`
+/// floats, `tiles` must partition `0..M` (so `(n, m)` output planes are
+/// disjoint across tiles), and `out_sh` must span the full
+/// `batch * M * E * F` output.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn sconv_tile(
+    shape: &ConvShape,
+    padded: &[f32],
+    banks: &[StretchedFilter],
+    tiles: &[Range<usize>],
+    tile: usize,
+    worker: usize,
+    out_sh: &SharedSlice<'_>,
+    scr_sh: &SharedSlice<'_>,
+) {
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let ef = e * f;
+    let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
+    let (hp, wp) = (shape.padded_h(), shape.padded_w());
+    let group_len = cg * hp * wp;
+    let img_len = shape.c * hp * wp;
+    let span = if shape.stride == 1 { (e - 1) * wp + f } else { 0 };
+    let per_worker = worker_scratch_floats(shape);
+    let n_ct = tiles.len();
+    let (n, ct) = (tile / n_ct, tile % n_ct);
+    // SAFETY (both carves): per the function contract, worker ids are
+    // unique among running tiles and channel tiles partition 0..M.
+    let scr = unsafe { scr_sh.slice_mut(worker * per_worker, per_worker) };
+    let scr = &mut scr[..span];
+    let img = &padded[n * img_len..(n + 1) * img_len];
+    for m in tiles[ct].clone() {
+        let g = m / mg;
+        let in_group = &img[g * group_len..(g + 1) * group_len];
+        let plane = unsafe { out_sh.slice_mut((n * shape.m + m) * ef, ef) };
+        // Each tile zeroes its own planes (the strided path accumulates
+        // with `+=`), so the tile body is self-contained for the async
+        // path; on the blocking path this re-zeroes an already-zeroed
+        // plane — byte-identical either way.
+        plane.fill(0.0);
+        sconv_plane(shape, in_group, &banks[g], m % mg, plane, scr);
+    }
 }
 
 /// Direct sparse convolution, sequential. `banks` must come from

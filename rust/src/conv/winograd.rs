@@ -217,11 +217,41 @@ pub(crate) fn winograd_tiles_pool(
     let out_sh = SharedSlice::new(out);
     let acc_sh = SharedSlice::new(acc_all);
     pool.run(batch * tiles_h, &|t, worker| {
-        let (n, th) = (t / tiles_h, t % tiles_h);
-        // SAFETY: worker ids are unique among running tiles.
-        let acc = unsafe { acc_sh.slice_mut(worker * per, per) };
-        winograd_row_into(shape, padded, n, th, u, acc, &out_sh);
+        // SAFETY: worker ids are unique among concurrently running
+        // tiles of this job — see `winograd_tile`.
+        unsafe { winograd_tile(shape, padded, u, t, worker, &acc_sh, &out_sh) }
     });
+}
+
+/// Execute one `(image, tile-row)` unit of the Winograd kernel: tile
+/// index `t` decomposes as `(n, th) = (t / tiles_h, t % tiles_h)`; the
+/// worker's private `M * 16` accumulator is carved from `acc_sh` by
+/// `worker` id. The one tile body shared by the blocking
+/// [`winograd_tiles_pool`] path and the DAG executor's async jobs —
+/// byte-identical output by construction.
+///
+/// # Safety
+///
+/// `worker` must be unique among concurrently running tiles of the same
+/// job, `acc_sh` must hold at least `workers * M * 16` floats, and
+/// `out_sh` must span the full `batch * M * E * F` output (the `(n,
+/// th)` tiles write disjoint output rows).
+pub(crate) unsafe fn winograd_tile(
+    shape: &ConvShape,
+    padded: &[f32],
+    u: &[[f32; 16]],
+    t: usize,
+    worker: usize,
+    acc_sh: &SharedSlice<'_>,
+    out_sh: &SharedSlice<'_>,
+) {
+    let per = shape.m * 16;
+    let tiles_h = shape.out_h().div_ceil(2);
+    let (n, th) = (t / tiles_h, t % tiles_h);
+    // SAFETY: per the function contract, worker ids are unique among
+    // running tiles.
+    let acc = unsafe { acc_sh.slice_mut(worker * per, per) };
+    winograd_row_into(shape, padded, n, th, u, acc, out_sh);
 }
 
 /// Winograd F(2x2, 3x3) convolution for 3x3 stride-1 layers. Produces the

@@ -138,10 +138,13 @@ impl NetworkSchedule {
     /// for every sparse CONV layer via `pick` (dense CONV layers always
     /// run LoweredGemm, like the paper's baseline configuration).
     ///
-    /// NOTE: layer graphs with branches (inception) are executed as a
-    /// linear chain per branch layer with a fresh input of that layer's
-    /// declared shape — timing-faithful, since conv cost depends only on
-    /// shapes, while keeping the executor simple (DESIGN.md §7).
+    /// NOTE: branch/merge networks (GoogLeNet's inception graph) run
+    /// their **sequential DAG walk** here — real branch dataflow in
+    /// topological order, one layer at a time, so the per-kernel
+    /// stopwatches stay honest. Networks without an explicit graph
+    /// (the seed behaviour) chain layers, synthesising a fresh input
+    /// whenever a declared shape does not chain. For overlapped branch
+    /// execution use [`NetworkSchedule::run_async`].
     pub fn run(
         &self,
         batch: usize,
@@ -171,6 +174,32 @@ impl NetworkSchedule {
             batch,
             layers,
         }
+    }
+
+    /// Execute the network once through the **asynchronous DAG walk**
+    /// (`conv::NetworkPlan::run_async`): every layer becomes
+    /// dependency-chained jobs on the shared pool, so independent
+    /// branch chains of an inception module overlap. Returns the
+    /// logits and the whole-network wall time (the async walk cannot
+    /// lap per-kernel buckets — use [`NetworkSchedule::run`] for Fig 9
+    /// timings). Networks without an explicit layer graph fall back to
+    /// the sequential walk, which produces the identical bytes a DAG
+    /// network's async walk does — `tests/plan_props.rs` pins that
+    /// equivalence on `googlenet()`.
+    pub fn run_async(
+        &self,
+        batch: usize,
+        pick: impl FnMut(&str, &ConvShape) -> Method,
+    ) -> (Vec<f32>, Duration) {
+        let plan = self.network_plan(batch, pick);
+        let mut arena = WorkspaceArena::for_plan(&plan, &self.pool);
+        let t0 = std::time::Instant::now();
+        let logits = if plan.supports_async() {
+            plan.run_async(None, &self.pool, &mut arena).to_vec()
+        } else {
+            plan.run(&self.pool, &mut arena).to_vec()
+        };
+        (logits, t0.elapsed())
     }
 
     /// Router-driven run: methods come from [`Router::choose`] and every
@@ -212,6 +241,7 @@ mod tests {
                         k: 2,
                         stride: 2,
                         pad: 0,
+                        ceil: false,
                     },
                 ),
                 Layer::new("fc", LayerKind::Fc(FcShape::new(6 * 4 * 4, 10))),
@@ -291,6 +321,18 @@ mod tests {
         sched.run(1, |_, _| Method::DirectSparse);
         let b = sched.plan_for("c2", &shape, Method::DirectSparse);
         assert!(Arc::ptr_eq(&a, &b), "plan rebuilt instead of cached");
+    }
+
+    #[test]
+    fn run_async_matches_the_sequential_plan_walk() {
+        use crate::config::miniception;
+        let sched = NetworkSchedule::build(miniception(), 8, Arc::new(WorkerPool::new(3)));
+        let (logits, wall) = sched.run_async(2, |_, _| Method::DirectSparse);
+        let plan = sched.network_plan(2, |_, _| Method::DirectSparse);
+        let mut arena = WorkspaceArena::for_plan(&plan, sched.pool());
+        let want = plan.run(sched.pool(), &mut arena).to_vec();
+        assert_eq!(logits, want, "DAG walk diverged from sequential walk");
+        assert!(wall > Duration::ZERO);
     }
 
     #[test]

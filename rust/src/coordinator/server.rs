@@ -32,13 +32,27 @@
 //! counts are published through [`super::metrics::Metrics`]. This is
 //! the paper's §3.4 adaptive kernel customization as a serving loop. A
 //! batch already in flight finishes on the plan it started with; the
-//! new plan applies from the next batch on.
+//! new plan applies from the next batch on — unless
+//! [`ServerConfig::strict_replan`] is set, in which case the executor
+//! drains every in-flight slot first so concurrently served responses
+//! never mix method assignments.
+//!
+//! ## DAG serving (branch overlap)
+//!
+//! When the served network is a branch/merge graph (`googlenet`,
+//! `miniception`), each slot drives the plan's **asynchronous DAG
+//! walk** instead of the sequential cursor: every layer is submitted as
+//! dependency-chained jobs on the shared pool, so the four branches of
+//! an inception module overlap *within* a batch while the two-slot
+//! pipeline still overlaps batches — both forms of slack fill the same
+//! `WorkerPool`. The async walk reports no per-layer latencies, so the
+//! router serves such networks on its static heuristic.
 
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::{Router, RouterConfig};
 use crate::config::{network_by_name, LayerKind, Network};
-use crate::conv::{Method, NetworkPlan, PlanCache, PlanCursor, WorkspaceArena};
+use crate::conv::{AsyncCursor, Method, NetworkPlan, PlanCache, PlanCursor, WorkspaceArena};
 use crate::util::{default_threads, WorkerPool};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -110,6 +124,14 @@ pub struct ServerConfig {
     /// formation. Each slot owns a workspace arena, so memory scales
     /// linearly with depth.
     pub pipeline_depth: usize,
+    /// Drain every in-flight pipeline slot **before** applying a
+    /// replan. Off (default), a slot started before a replan finishes
+    /// on its old plan — correct, but a response stream read across
+    /// the swap can observe answers computed by two different method
+    /// assignments. On, the executor runs the pipeline dry first, so
+    /// no two concurrently in-flight batches ever mix methods — at the
+    /// cost of one pipeline bubble per replan.
+    pub strict_replan: bool,
 }
 
 impl Default for ServerConfig {
@@ -122,6 +144,7 @@ impl Default for ServerConfig {
             router: RouterConfig::default(),
             replan_every: 64,
             pipeline_depth: 2,
+            strict_replan: false,
         }
     }
 }
@@ -255,16 +278,106 @@ fn desired_methods(net: &Network, router: &Router) -> Vec<(String, Method)> {
         .collect()
 }
 
+/// Walk state of one slot: the sequential cursor for chain plans, the
+/// asynchronous DAG cursor for branch/merge plans (GoogLeNet-style
+/// graphs), whose in-flight jobs overlap the module branches on the
+/// shared pool.
+enum SlotCursor {
+    Seq(PlanCursor),
+    Dag(AsyncCursor),
+}
+
 /// One in-flight batch: the plan it started on (kept across replans —
 /// a successor batch may already run a newer plan), its walk cursor,
 /// and the slot-owned arena + staging buffer it computes in.
+///
+/// Field order is load-bearing: `cursor` is declared **before**
+/// `arena`, so when a slot drops, a DAG cursor joins its in-flight pool
+/// jobs before the arena buffers those jobs reference are freed — the
+/// `NetworkPlan::begin_run_async` safety contract.
 struct Slot {
     batch: Batch<InferRequest>,
     plan: Arc<NetworkPlan>,
-    cursor: PlanCursor,
+    cursor: SlotCursor,
     arena: WorkspaceArena,
     input: Vec<f32>,
     exec_started: Instant,
+}
+
+/// Advance a slot one step: one layer of the sequential walk (feeding
+/// per-layer totals to the router), or one retired DAG step (later
+/// steps keep executing on the pool meanwhile — the async walk reports
+/// no per-layer latencies, so DAG serving leaves the router's EWMA at
+/// its static heuristic).
+fn advance_slot(slot: &mut Slot, pool: &WorkerPool, router: &Router) {
+    let plan = slot.plan.clone();
+    match &mut slot.cursor {
+        SlotCursor::Seq(cur) => {
+            plan.step(
+                cur,
+                pool,
+                &mut slot.arena,
+                Some(&mut |lr| {
+                    if let Some(m) = lr.method {
+                        router.observe(lr.layer, m, lr.total);
+                    }
+                }),
+                false,
+            );
+        }
+        SlotCursor::Dag(cur) => {
+            plan.step_async(cur);
+        }
+    }
+}
+
+/// Whether every layer step of the slot's walk has run.
+fn slot_done(slot: &Slot) -> bool {
+    match &slot.cursor {
+        SlotCursor::Seq(c) => c.is_done(),
+        SlotCursor::Dag(c) => c.is_done(),
+    }
+}
+
+/// Retire a finished slot: record latencies, fan the logits back out to
+/// the per-request channels, publish the pool gauges, and return the
+/// slot's arena + staging buffer to the spare list.
+fn retire_slot(
+    slot: Slot,
+    num_classes: usize,
+    metrics: &Metrics,
+    pool: &WorkerPool,
+    spare: &mut Vec<(WorkspaceArena, Vec<f32>)>,
+) {
+    metrics.batch_latency.record(slot.exec_started.elapsed());
+    {
+        let logits = match &slot.cursor {
+            SlotCursor::Seq(c) => slot.plan.finish(c, &slot.arena),
+            SlotCursor::Dag(c) => slot.plan.finish_async(c, &slot.arena),
+        };
+        for (i, req) in slot.batch.items.into_iter().enumerate() {
+            let out = logits[i * num_classes..(i + 1) * num_classes].to_vec();
+            let latency = req.submitted.elapsed();
+            metrics.latency.record(latency);
+            metrics.responses.fetch_add(1, Ordering::Relaxed);
+            let _ = req.resp.send(InferResponse {
+                id: req.id,
+                logits: out,
+                latency,
+            });
+        }
+    }
+    spare.push((slot.arena, slot.input));
+
+    // Publish pool telemetry: cumulative tiles/steals and the
+    // per-worker imbalance ratio (1.0 = perfectly balanced).
+    let ps = pool.stats();
+    metrics.pool_workers.store(ps.workers as u64, Ordering::Relaxed);
+    metrics.pool_tiles.store(ps.total_tiles(), Ordering::Relaxed);
+    metrics.pool_steals.store(ps.total_steals(), Ordering::Relaxed);
+    metrics
+        .pool_imbalance_milli
+        .store((ps.imbalance() * 1000.0) as u64, Ordering::Relaxed);
 }
 
 fn executor_loop(
@@ -326,7 +439,10 @@ fn executor_loop(
 
     // Stage a formed batch into a free slot: copy the images into the
     // slot's staging buffer (padded tail slots stay zero) and position
-    // the plan cursor before the first layer.
+    // the plan cursor before the first layer. Branch/merge plans
+    // (GoogLeNet) start the asynchronous DAG walk, so the module
+    // branches of this batch overlap as dependency-chained jobs on the
+    // shared pool; chain plans keep the sequential cursor.
     let start_slot = |batch: Batch<InferRequest>,
                           plan: &Arc<NetworkPlan>,
                           spare: &mut Vec<(WorkspaceArena, Vec<f32>)>,
@@ -341,7 +457,16 @@ fn executor_loop(
             .padded_slots
             .fetch_add(batch.padding(batch_size) as u64, Ordering::Relaxed);
         metrics.batches.fetch_add(1, Ordering::Relaxed);
-        let cursor = plan.begin_run(Some(&input), &pool, &mut arena);
+        let cursor = if plan.supports_async() {
+            // SAFETY: the cursor is stored in the Slot *before* the
+            // arena (drop order joins jobs first), the slot's arena is
+            // never touched by another cursor while in flight, and
+            // retirement fully steps the cursor before the arena is
+            // recycled into `spare`.
+            SlotCursor::Dag(unsafe { plan.begin_run_async(Some(&input), &pool, &mut arena) })
+        } else {
+            SlotCursor::Seq(plan.begin_run(Some(&input), &pool, &mut arena))
+        };
         slots.push_back(Slot {
             batch,
             plan: plan.clone(),
@@ -374,62 +499,37 @@ fn executor_loop(
             }
         }
 
-        // Advance every in-flight batch one layer, oldest first: the
+        // Advance every in-flight batch one step, oldest first: the
         // old batch's tail layers and the new batch's head layers
-        // interleave on the shared pool.
+        // interleave on the shared pool (and, for DAG plans, each
+        // batch's own branches additionally overlap as async jobs).
         for slot in slots.iter_mut() {
-            let slot_plan = slot.plan.clone();
-            slot_plan.step(
-                &mut slot.cursor,
-                &pool,
-                &mut slot.arena,
-                Some(&mut |lr| {
-                    // Per-layer totals feed the router's EWMA while the
-                    // kernels keep their parallel (untimed) paths.
-                    if let Some(m) = lr.method {
-                        router.observe(lr.layer, m, lr.total);
-                    }
-                }),
-                false,
-            );
+            advance_slot(slot, &pool, &router);
         }
 
         // Retire the oldest batch once every layer has run.
-        if slots.front().is_some_and(|s| s.cursor.is_done()) {
+        if slots.front().is_some_and(slot_done) {
             let slot = slots.pop_front().unwrap();
-            metrics.batch_latency.record(slot.exec_started.elapsed());
-            {
-                let logits = slot.plan.finish(&slot.cursor, &slot.arena);
-                for (i, req) in slot.batch.items.into_iter().enumerate() {
-                    let out = logits[i * num_classes..(i + 1) * num_classes].to_vec();
-                    let latency = req.submitted.elapsed();
-                    metrics.latency.record(latency);
-                    metrics.responses.fetch_add(1, Ordering::Relaxed);
-                    let _ = req.resp.send(InferResponse {
-                        id: req.id,
-                        logits: out,
-                        latency,
-                    });
-                }
-            }
-            spare.push((slot.arena, slot.input));
-
-            // Publish pool telemetry: cumulative tiles/steals and the
-            // per-worker imbalance ratio (1.0 = perfectly balanced).
-            let ps = pool.stats();
-            metrics.pool_workers.store(ps.workers as u64, Ordering::Relaxed);
-            metrics.pool_tiles.store(ps.total_tiles(), Ordering::Relaxed);
-            metrics
-                .pool_steals
-                .store(ps.total_steals(), Ordering::Relaxed);
-            metrics
-                .pool_imbalance_milli
-                .store((ps.imbalance() * 1000.0) as u64, Ordering::Relaxed);
+            retire_slot(slot, num_classes, &metrics, &pool, &mut spare);
 
             nbatches += 1;
             if cfg.replan_every > 0 && nbatches % cfg.replan_every == 0 {
                 let want = desired_methods(&net, &router);
                 if want != plan.conv_methods() {
+                    if cfg.strict_replan {
+                        // Run the pipeline dry on the old plan before
+                        // the new one exists: no two concurrently
+                        // in-flight batches — and therefore no two
+                        // interleaved responses — ever mix method
+                        // assignments.
+                        while let Some(mut slot) = slots.pop_front() {
+                            while !slot_done(&slot) {
+                                advance_slot(&mut slot, &pool, &router);
+                            }
+                            retire_slot(slot, num_classes, &metrics, &pool, &mut spare);
+                            nbatches += 1;
+                        }
+                    }
                     // Incremental rebuild: only flipped layers compile;
                     // a still-stepping slot keeps its old plan alive
                     // through its own Arc.

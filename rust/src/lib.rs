@@ -40,7 +40,10 @@
 //! * [`conv::NetworkPlan`] — a whole network compiled for a batch size;
 //!   the scheduler ([`coordinator::NetworkSchedule`]), the serving loop
 //!   ([`coordinator::ServerHandle`]), and the fig8/fig9/fig11 bench
-//!   harnesses all execute through it.
+//!   harnesses all execute through it. Branch/merge networks
+//!   (GoogLeNet's inception graph) compile to DAG plans with an
+//!   asynchronous branch-overlap walk ([`conv::NetworkPlan::run_async`])
+//!   that is byte-identical to the sequential walk.
 //! * [`conv::PlanCache`] — the shared per-`(layer, method)` compiled-plan
 //!   cache: the scheduler and the server both replan through it, so a
 //!   router flip recompiles only the flipped layer.

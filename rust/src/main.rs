@@ -69,7 +69,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 use escoin::coordinator::NetworkSchedule;
                 let pool = Arc::new(WorkerPool::new(threads));
                 println!("\nrouted batch-1 iteration (spatial/4, {threads} threads):");
-                for mut net in all_networks() {
+                for net in all_networks() {
+                    // Spatially scaled quick pass: scaled conv shapes
+                    // no longer chain exactly, so graph networks
+                    // (GoogLeNet) run as the seed-style chain.
+                    let mut net = net.into_chain();
                     for layer in &mut net.layers {
                         if let LayerKind::Conv(c) = &mut layer.kind {
                             *c = c.scaled_spatial(4);

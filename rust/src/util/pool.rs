@@ -18,19 +18,25 @@
 //! wake-ups and park-downs. Submission wakes only as many workers as
 //! there are tiles to claim.
 //!
-//! Two submission surfaces exist:
+//! Three submission surfaces exist:
 //!
 //! * [`WorkerPool::run`] — the blocking path every in-tree kernel uses:
 //!   submit, help drain tiles on the calling thread (as worker 0), block
 //!   until the handshake fires.
 //! * [`WorkerPool::submit`] / [`WorkerPool::submit_after`] — the
-//!   asynchronous, dependency-aware path: returns a [`JobTicket`]
-//!   immediately; multiple jobs coexist on the queue and workers drain
-//!   them FIFO. `submit_after` chains a job behind another ticket — its
-//!   tiles are not claimed until the dependency's handshake fires. This
-//!   is the structural hook for overlapping independent branch layers
-//!   (inception tables) and is what the serving pipeline's two in-flight
-//!   batches ride on.
+//!   asynchronous, dependency-aware path over a **borrowed** closure:
+//!   returns a [`JobTicket`] immediately; multiple jobs coexist on the
+//!   queue and workers drain them FIFO. `submit_after` chains a job
+//!   behind another ticket — its tiles are not claimed until the
+//!   dependency's handshake fires. See the doc examples on those
+//!   methods for a correct two-job chain.
+//! * [`WorkerPool::submit_owned`] — the asynchronous path over an
+//!   **owned** boxed closure with any number of dependencies, returning
+//!   a lifetime-free [`JobHandle`]. This is what the DAG network
+//!   executor (`conv::NetworkPlan::begin_run_async`) submits: every
+//!   layer of an inception module becomes a chain of owned jobs, and
+//!   the four branch chains overlap on the one pool while the concat
+//!   job waits on all of them.
 //!
 //! Scheduling is self-balancing: tiles are claimed from an atomic
 //! counter, so a worker that finishes its nominal share early keeps
@@ -73,12 +79,30 @@ use std::thread::JoinHandle;
 /// running tiles of the same job — index per-worker scratch with it.
 type Task<'a> = &'a (dyn Fn(usize, usize) + Sync);
 
-/// One queued tile job. The `'static` task reference is a
-/// lifetime-erased view of the submitter's closure; it is only ever
-/// dereferenced while the job is incomplete, and the [`JobTicket`]
-/// contract guarantees the closure outlives completion.
+/// How a job holds its closure: a lifetime-erased borrow (the
+/// [`JobTicket`] surfaces, whose contract keeps the referent alive) or
+/// an owned box (the [`JobHandle`] surface, no lifetime to police).
+enum TaskRef {
+    Borrowed(&'static (dyn Fn(usize, usize) + Sync)),
+    Owned(Box<dyn Fn(usize, usize) + Send + Sync>),
+}
+
+impl TaskRef {
+    #[inline]
+    fn call(&self, tile: usize, worker: usize) {
+        match self {
+            TaskRef::Borrowed(f) => f(tile, worker),
+            TaskRef::Owned(f) => f(tile, worker),
+        }
+    }
+}
+
+/// One queued tile job. A borrowed task reference is a lifetime-erased
+/// view of the submitter's closure; it is only ever dereferenced while
+/// the job is incomplete, and the [`JobTicket`] contract guarantees the
+/// closure outlives completion. Owned tasks carry no such contract.
 struct Job {
-    task: &'static (dyn Fn(usize, usize) + Sync),
+    task: TaskRef,
     num_tiles: usize,
     /// Static block-partition share (`ceil(num_tiles / workers)`) used
     /// only for steal accounting: executing a tile outside your own
@@ -93,8 +117,9 @@ struct Job {
     completed: AtomicUsize,
     /// First panic payload raised by a tile, re-thrown at the waiter.
     panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
-    /// Dependency: tiles of this job may not run until `dep` completes.
-    dep: Option<Arc<Job>>,
+    /// Dependencies: tiles of this job may not run until every listed
+    /// job completes.
+    deps: Vec<Arc<Job>>,
     /// Completion flag + condvar the ticket waiter blocks on.
     done: Mutex<bool>,
     done_cv: Condvar,
@@ -106,10 +131,10 @@ impl Job {
     }
 
     /// Whether a worker may claim tiles right now: unclaimed tiles
-    /// remain and the dependency (if any) has completed.
+    /// remain and every dependency has completed.
     fn runnable(&self) -> bool {
         self.next_tile.load(Ordering::Relaxed) < self.num_tiles
-            && self.dep.as_ref().is_none_or(|d| d.is_complete())
+            && self.deps.iter().all(|d| d.is_complete())
     }
 
     /// Block until the completion handshake fires.
@@ -138,6 +163,10 @@ struct Shared {
     workers: usize,
     queue: Mutex<Queue>,
     start: Condvar,
+    /// Serialises helping drains from submitting threads (worker id 0 —
+    /// the helping caller — must be unique among concurrently running
+    /// jobs' helpers, because kernels key per-worker scratch by id).
+    run_lock: Mutex<()>,
     counters: Vec<WorkerCounters>,
     /// Tiles run on the inline path (1-worker pool or single-tile job)
     /// — kept out of the per-worker counters so the imbalance ratio
@@ -161,7 +190,7 @@ impl Shared {
                 break;
             }
             let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                (job.task)(t, worker)
+                job.task.call(t, worker)
             }));
             if let Err(payload) = res {
                 let mut slot = job.panic_payload.lock().unwrap();
@@ -210,6 +239,51 @@ impl Shared {
             self.start.notify_all();
         }
         drop(q);
+    }
+}
+
+/// Help-drain `root` and its (transitive) dependency DAG on the calling
+/// thread as worker 0, blocking on each job's completion handshake in
+/// dependency (postorder) order — so waiting on a 1-thread pool still
+/// makes progress, and a dependent job is never drained before its
+/// prerequisites completed. Visits each job once even when the DAG
+/// shares dependencies (diamonds). Never panics; safe to call on
+/// already-complete jobs (the drain claims past the end and returns).
+///
+/// `take_lock` serialises the helping drains through the pool's run
+/// lock so two threads waiting handles whose DAGs share a job can never
+/// both execute that job's tiles as worker 0 (kernels key per-worker
+/// scratch by id). [`WorkerPool::run`] passes `false` because it
+/// already holds the lock.
+fn help_drain_tree(shared: &Shared, root: &Arc<Job>, take_lock: bool) {
+    fn visit(job: &Arc<Job>, visited: &mut Vec<*const Job>, order: &mut Vec<Arc<Job>>) {
+        let p = Arc::as_ptr(job);
+        if visited.contains(&p) {
+            return;
+        }
+        visited.push(p);
+        // A complete job's dependencies completed before it ran —
+        // pruning here keeps repeated waits over a long retired chain
+        // (the DAG executor's steady state) O(1) instead of re-walking
+        // and re-locking the whole ancestor DAG every time.
+        if !job.is_complete() {
+            for d in &job.deps {
+                visit(d, visited, order);
+            }
+        }
+        order.push(job.clone());
+    }
+    let mut order = Vec::new();
+    visit(root, &mut Vec::new(), &mut order);
+    for job in &order {
+        // Skip the drain (run lock + queue delist scan) for jobs that
+        // completed since the visit — the handshake may still be a
+        // beat behind the counter, so always block on it.
+        if !job.is_complete() {
+            let _guard = take_lock.then(|| shared.run_lock.lock().unwrap());
+            shared.drain(job, 0);
+        }
+        job.wait_done();
     }
 }
 
@@ -282,9 +356,6 @@ impl PoolStats {
 pub struct WorkerPool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
-    /// Serialises concurrent `run` calls from different threads (worker
-    /// id 0 — the helping caller — must be unique per job).
-    run_lock: Mutex<()>,
 }
 
 /// Handle to an asynchronously submitted job (see [`WorkerPool::submit`]).
@@ -294,6 +365,23 @@ pub struct WorkerPool {
 /// so the borrowed task closure can never dangle on a live worker.
 /// Prefer [`JobTicket::wait`], which additionally re-raises the first
 /// panic any tile produced.
+///
+/// # Lifetime rules
+///
+/// A ticket borrows both the pool and (through the erased task
+/// reference) the submitted closure and everything it captures, so:
+///
+/// * the ticket must be waited or dropped **before** the closure or
+///   any data it borrows goes out of scope — declare tickets *after*
+///   the data they consume, so scope-exit drop order (reverse
+///   declaration) joins the job first;
+/// * the ticket must never be leaked (`mem::forget`), which would let
+///   workers run a dangling closure after the stack frame unwinds;
+/// * waiting a *dependent* ticket first is always fine —
+///   [`JobTicket::wait`] help-drains the dependency chain in
+///   dependency order before the job itself, so `tb.wait(); ta.wait()`
+///   on a `submit_after(.., &ta)` pair cannot deadlock (see the
+///   [`WorkerPool::submit_after`] example).
 #[must_use = "a JobTicket blocks on drop; wait() it where you want the barrier"]
 pub struct JobTicket<'a> {
     pool: &'a WorkerPool,
@@ -319,37 +407,91 @@ impl JobTicket<'_> {
         }
     }
 
-    /// Drain the dependency chain deepest-first, then the job itself,
+    /// Drain the dependency DAG deepest-first, then the job itself,
     /// blocking on each handshake — so waiting on a 1-thread pool still
-    /// makes progress. Never panics; idempotent.
-    ///
-    /// `take_lock` serialises the helping drains through the pool's run
-    /// lock so two threads waiting tickets whose chains share a job can
-    /// never both execute that job's tiles as worker 0 (kernels key
-    /// per-worker scratch by id). [`WorkerPool::run`] passes `false`
-    /// because it already holds the lock.
+    /// makes progress. Never panics; idempotent. See [`help_drain_tree`]
+    /// for the `take_lock` contract.
     fn join(&mut self, take_lock: bool) {
         if self.waited {
             return;
         }
         self.waited = true;
-        let mut chain = vec![self.job.clone()];
-        while let Some(d) = chain.last().unwrap().dep.clone() {
-            chain.push(d);
-        }
-        for job in chain.iter().rev() {
-            {
-                let _guard = take_lock.then(|| self.pool.run_lock.lock().unwrap());
-                self.pool.shared.drain(job, 0);
-            }
-            job.wait_done();
-        }
+        help_drain_tree(&self.pool.shared, &self.job, take_lock);
     }
 }
 
 impl Drop for JobTicket<'_> {
     fn drop(&mut self) {
         self.join(true);
+        if !std::thread::panicking() {
+            if let Some(p) = self.job.panic_payload.lock().unwrap().take() {
+                std::panic::resume_unwind(p);
+            }
+        }
+    }
+}
+
+/// Handle to an **owned** asynchronously submitted job (see
+/// [`WorkerPool::submit_owned`]). Unlike [`JobTicket`] it borrows
+/// nothing: the closure is boxed into the job, so the handle is
+/// `'static` and can be stored in long-lived cursors and moved across
+/// stack frames freely — which is what lets `conv::NetworkPlan`'s DAG
+/// walk keep a whole inception module's jobs in flight at once.
+///
+/// # Lifetime rules
+///
+/// * Dropping the handle blocks until the job (and its dependency DAG)
+///   completes, helping to drain unclaimed tiles on the calling thread
+///   as worker 0. Prefer [`JobHandle::wait`], which additionally
+///   re-raises the first panic any tile produced.
+/// * The handle may outlive the [`WorkerPool`] that issued it: after
+///   the pool shuts down, waiting simply executes the remaining tiles
+///   inline on the waiting thread.
+/// * A handle used as a dependency (via [`WorkerPool::submit_owned`])
+///   only *orders* the jobs; the dependent job holds its own reference
+///   to the prerequisite, so the prerequisite handle may be waited or
+///   dropped in any order relative to its dependents.
+/// * The boxed closure must be `'static`: it owns (or safely wraps)
+///   everything it touches. Callers that smuggle raw pointers into the
+///   box (the DAG executor does) carry the proof obligation that the
+///   pointees outlive the handle — keep such handles next to the
+///   buffers they reference, declared *after* them.
+#[must_use = "a JobHandle blocks on drop; wait() it where you want the barrier"]
+pub struct JobHandle {
+    shared: Arc<Shared>,
+    job: Arc<Job>,
+    waited: bool,
+}
+
+impl JobHandle {
+    /// Whether every tile of the job has finished executing.
+    pub fn is_complete(&self) -> bool {
+        self.job.is_complete()
+    }
+
+    /// Block until the job completes, helping to execute unclaimed
+    /// tiles (dependencies first) on the calling thread as worker 0.
+    /// Re-raises the first panic any tile of the job produced.
+    pub fn wait(mut self) {
+        self.join();
+        let payload = self.job.panic_payload.lock().unwrap().take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    fn join(&mut self) {
+        if self.waited {
+            return;
+        }
+        self.waited = true;
+        help_drain_tree(&self.shared, &self.job, true);
+    }
+}
+
+impl Drop for JobHandle {
+    fn drop(&mut self) {
+        self.join();
         if !std::thread::panicking() {
             if let Some(p) = self.job.panic_payload.lock().unwrap().take() {
                 std::panic::resume_unwind(p);
@@ -370,6 +512,7 @@ impl WorkerPool {
                 shutdown: false,
             }),
             start: Condvar::new(),
+            run_lock: Mutex::new(()),
             counters: (0..workers).map(|_| WorkerCounters::default()).collect(),
             inline_tiles: AtomicU64::new(0),
             jobs: AtomicU64::new(0),
@@ -383,11 +526,7 @@ impl WorkerPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        Self {
-            shared,
-            handles,
-            run_lock: Mutex::new(()),
-        }
+        Self { shared, handles }
     }
 
     /// Worker count (including the submitting thread). Kernels size
@@ -415,7 +554,7 @@ impl WorkerPool {
             // released before re-raising a task panic so it never
             // poisons the pool.
             sh.jobs.fetch_add(1, Ordering::Relaxed);
-            let guard = self.run_lock.lock().unwrap();
+            let guard = sh.run_lock.lock().unwrap();
             let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 for t in 0..num_tiles {
                     task(t, 0);
@@ -430,10 +569,10 @@ impl WorkerPool {
             return;
         }
 
-        let guard = self.run_lock.lock().unwrap();
+        let guard = sh.run_lock.lock().unwrap();
         // SAFETY: the ticket is joined before `run` returns, so the
         // erased task reference never outlives this call.
-        let mut ticket = unsafe { self.submit_inner(num_tiles, task, None) };
+        let mut ticket = unsafe { self.submit_inner(num_tiles, task, Vec::new()) };
         ticket.join(false);
         let payload = ticket.job.panic_payload.lock().unwrap().take();
         drop(ticket); // join already ran; drop is a no-op
@@ -454,11 +593,36 @@ impl WorkerPool {
     /// # Safety
     ///
     /// The returned ticket must be waited or dropped (both block until
-    /// completion) before `task`'s referent is invalidated — in
-    /// particular the ticket must not be leaked via `mem::forget`,
-    /// which would let workers run a dangling closure.
+    /// completion) before `task`'s referent — the closure *and*
+    /// everything it borrows — is invalidated. In particular the ticket
+    /// must not be leaked via `mem::forget`, which would let workers
+    /// run a dangling closure. See [`JobTicket`] for the full lifetime
+    /// rules. For a submission surface with no such obligation, use
+    /// [`WorkerPool::submit_owned`].
+    ///
+    /// # Examples
+    ///
+    /// An async job whose ticket is waited before the closure (and the
+    /// accumulator it borrows) goes out of scope:
+    ///
+    /// ```
+    /// use escoin::util::WorkerPool;
+    /// use std::sync::atomic::{AtomicUsize, Ordering};
+    ///
+    /// let pool = WorkerPool::new(4);
+    /// let hits = AtomicUsize::new(0);
+    /// let task = |_tile: usize, _worker: usize| {
+    ///     hits.fetch_add(1, Ordering::SeqCst);
+    /// };
+    /// // SAFETY: the ticket is waited below, before `task` and `hits`
+    /// // leave scope — no worker can observe a dangling closure.
+    /// let ticket = unsafe { pool.submit(8, &task) };
+    /// // ... other work overlaps here ...
+    /// ticket.wait();
+    /// assert_eq!(hits.load(Ordering::SeqCst), 8);
+    /// ```
     pub unsafe fn submit<'a>(&'a self, num_tiles: usize, task: Task<'a>) -> JobTicket<'a> {
-        self.submit_inner(num_tiles, task, None)
+        self.submit_inner(num_tiles, task, Vec::new())
     }
 
     /// Like [`WorkerPool::submit`], but the job's tiles are not claimed
@@ -467,14 +631,43 @@ impl WorkerPool {
     ///
     /// # Safety
     ///
-    /// Same contract as [`WorkerPool::submit`].
+    /// Same contract as [`WorkerPool::submit`], for **both** tickets:
+    /// each must be waited or dropped before its closure dies.
+    ///
+    /// # Examples
+    ///
+    /// A correct two-job dependency chain. The dependent job observes
+    /// every effect of its prerequisite, and waiting the *dependent*
+    /// ticket first is fine — `wait` help-drains the chain in
+    /// dependency order:
+    ///
+    /// ```
+    /// use escoin::util::WorkerPool;
+    /// use std::sync::atomic::{AtomicUsize, Ordering};
+    ///
+    /// let pool = WorkerPool::new(4);
+    /// let produced = AtomicUsize::new(0);
+    /// let produce = |_tile: usize, _worker: usize| {
+    ///     produced.fetch_add(1, Ordering::SeqCst);
+    /// };
+    /// let consume = |_tile: usize, _worker: usize| {
+    ///     // Runs only after `produce`'s handshake: all 8 tiles done.
+    ///     assert_eq!(produced.load(Ordering::SeqCst), 8);
+    /// };
+    /// // SAFETY: both tickets are waited below, before the closures
+    /// // (and `produced`) go out of scope.
+    /// let ta = unsafe { pool.submit(8, &produce) };
+    /// let tb = unsafe { pool.submit_after(2, &consume, &ta) };
+    /// tb.wait(); // drains `produce` first, then `consume`
+    /// ta.wait(); // already complete: returns immediately
+    /// ```
     pub unsafe fn submit_after<'a>(
         &'a self,
         num_tiles: usize,
         task: Task<'a>,
         dep: &JobTicket<'a>,
     ) -> JobTicket<'a> {
-        self.submit_inner(num_tiles, task, Some(dep.job.clone()))
+        self.submit_inner(num_tiles, task, vec![dep.job.clone()])
     }
 
     /// # Safety
@@ -485,21 +678,70 @@ impl WorkerPool {
         &'a self,
         num_tiles: usize,
         task: Task<'a>,
-        dep: Option<Arc<Job>>,
+        deps: Vec<Arc<Job>>,
     ) -> JobTicket<'a> {
-        let sh = &self.shared;
-        sh.jobs.fetch_add(1, Ordering::Relaxed);
         // SAFETY: per the function contract the closure outlives the
         // job; the reference is never dereferenced after completion.
         let erased: &'static (dyn Fn(usize, usize) + Sync) = std::mem::transmute(task);
+        let job = self.enqueue(num_tiles, TaskRef::Borrowed(erased), deps);
+        JobTicket {
+            pool: self,
+            job,
+            waited: false,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Enqueue an **owned** job — the closure is boxed into the job, so
+    /// the returned [`JobHandle`] is `'static` and carries no safety
+    /// obligation at this layer — behind any number of prerequisite
+    /// jobs. Tiles are not claimed until every dependency's completion
+    /// handshake has fired; an empty `deps` slice makes the job
+    /// immediately runnable. Wakes at most `min(num_tiles, spawned
+    /// workers)` workers, and none while a dependency is still pending
+    /// (the dependency's completion re-notifies the pool).
+    ///
+    /// This is the submission surface of the DAG network executor:
+    /// every inception-branch layer becomes one or more owned jobs
+    /// chained behind its producers, and the concat job lists all four
+    /// branch tails as `deps`.
+    ///
+    /// Dependencies must come from the same pool (checked in debug
+    /// builds). A zero-tile job completes immediately, without waiting
+    /// for its dependencies.
+    pub fn submit_owned(
+        &self,
+        num_tiles: usize,
+        task: Box<dyn Fn(usize, usize) + Send + Sync>,
+        deps: &[&JobHandle],
+    ) -> JobHandle {
+        for d in deps {
+            debug_assert!(
+                Arc::ptr_eq(&self.shared, &d.shared),
+                "submit_owned: dependency from a different pool"
+            );
+        }
+        let deps: Vec<Arc<Job>> = deps.iter().map(|d| d.job.clone()).collect();
+        let job = self.enqueue(num_tiles, TaskRef::Owned(task), deps);
+        JobHandle {
+            shared: self.shared.clone(),
+            job,
+            waited: false,
+        }
+    }
+
+    /// Shared queue-insertion path for borrowed and owned jobs.
+    fn enqueue(&self, num_tiles: usize, task: TaskRef, deps: Vec<Arc<Job>>) -> Arc<Job> {
+        let sh = &self.shared;
+        sh.jobs.fetch_add(1, Ordering::Relaxed);
         let job = Arc::new(Job {
-            task: erased,
+            task,
             num_tiles,
             share: num_tiles.div_ceil(sh.workers).max(1),
             next_tile: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
             panic_payload: Mutex::new(None),
-            dep,
+            deps,
             done: Mutex::new(num_tiles == 0),
             done_cv: Condvar::new(),
         });
@@ -509,17 +751,18 @@ impl WorkerPool {
                 q.jobs.push_back(job.clone());
             }
             // Sub-quorum wakeup: never rouse more workers than there
-            // are tiles to claim.
-            for _ in 0..num_tiles.min(self.handles.len()) {
-                sh.start.notify_one();
+            // are tiles to claim, and none for a job that cannot run
+            // yet — its last dependency's handshake notifies instead.
+            // (Checked *after* the push: a dependency completing
+            // between the push and this check notifies on a non-empty
+            // queue, so the wakeup cannot be lost either way.)
+            if job.deps.iter().all(|d| d.is_complete()) {
+                for _ in 0..num_tiles.min(self.handles.len()) {
+                    sh.start.notify_one();
+                }
             }
         }
-        JobTicket {
-            pool: self,
-            job,
-            waited: false,
-            _marker: PhantomData,
-        }
+        job
     }
 
     /// Snapshot the cumulative telemetry counters.
@@ -571,6 +814,14 @@ pub struct SharedSlice<'a> {
 unsafe impl Send for SharedSlice<'_> {}
 unsafe impl Sync for SharedSlice<'_> {}
 
+impl Clone for SharedSlice<'_> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl Copy for SharedSlice<'_> {}
+
 impl<'a> SharedSlice<'a> {
     /// Wrap `slice` for carving disjoint tile views.
     pub fn new(slice: &'a mut [f32]) -> Self {
@@ -579,6 +830,35 @@ impl<'a> SharedSlice<'a> {
             len: slice.len(),
             _marker: PhantomData,
         }
+    }
+
+    /// Wrap a raw pointer range for carving disjoint tile views — the
+    /// lifetime-erased constructor the DAG executor's owned job
+    /// closures use (a boxed `'static` closure cannot hold a borrowed
+    /// `SharedSlice`).
+    ///
+    /// # Safety
+    /// `ptr..ptr + len` must stay valid, and unaliased per the
+    /// [`SharedSlice::slice_mut`] contract, for as long as views are
+    /// carved from the returned wrapper — the DAG executor guarantees
+    /// this by keeping its job handles (which block on drop) next to
+    /// the arena that owns the memory.
+    pub unsafe fn from_raw(ptr: *mut f32, len: usize) -> SharedSlice<'static> {
+        SharedSlice {
+            ptr,
+            len,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Total floats spanned by the wrapper.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the wrapper spans no floats.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
     }
 
     /// Carve `start..start + len` as a mutable view.
@@ -591,6 +871,19 @@ impl<'a> SharedSlice<'a> {
     pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [f32] {
         debug_assert!(start + len <= self.len, "SharedSlice range out of bounds");
         std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+
+    /// Carve `start..start + len` as a shared read-only view — how
+    /// concurrent branch jobs all read the one buffer their producer
+    /// wrote.
+    ///
+    /// # Safety
+    /// No live mutable view (from [`SharedSlice::slice_mut`] or any
+    /// other path) may overlap the range while the returned reference
+    /// is alive.
+    pub unsafe fn slice_ref(&self, start: usize, len: usize) -> &[f32] {
+        debug_assert!(start + len <= self.len, "SharedSlice range out of bounds");
+        std::slice::from_raw_parts(self.ptr.add(start), len)
     }
 }
 
@@ -744,6 +1037,112 @@ mod tests {
             ta.wait();
             assert!(order_ok.load(Ordering::SeqCst), "t{threads}");
         }
+    }
+
+    #[test]
+    fn owned_submit_completes_on_wait_and_on_drop() {
+        for threads in [1, 4] {
+            let pool = WorkerPool::new(threads);
+            let hits = Arc::new(AtomicU64::new(0));
+            let h = {
+                let hits = hits.clone();
+                pool.submit_owned(
+                    13,
+                    Box::new(move |_t, _w| {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    }),
+                    &[],
+                )
+            };
+            h.wait();
+            assert_eq!(hits.load(Ordering::Relaxed), 13, "t{threads}");
+
+            let hits2 = Arc::new(AtomicU64::new(0));
+            {
+                let hits2 = hits2.clone();
+                let _h = pool.submit_owned(
+                    7,
+                    Box::new(move |_t, _w| {
+                        hits2.fetch_add(1, Ordering::Relaxed);
+                    }),
+                    &[],
+                );
+                // dropped here; must block until every tile ran
+            }
+            assert_eq!(hits2.load(Ordering::Relaxed), 7, "t{threads}");
+        }
+    }
+
+    #[test]
+    fn owned_multi_dep_job_waits_for_every_prerequisite() {
+        // A join job behind two independent producers — the inception
+        // concat pattern — must observe both producers complete, on a
+        // 1-thread (pure help-drain) pool and on contended pools.
+        for threads in [1, 2, 8] {
+            let pool = WorkerPool::new(threads);
+            let a = Arc::new(AtomicU64::new(0));
+            let b = Arc::new(AtomicU64::new(0));
+            let ok = Arc::new(AtomicBool::new(true));
+            let ha = {
+                let a = a.clone();
+                pool.submit_owned(
+                    9,
+                    Box::new(move |_t, _w| {
+                        std::thread::yield_now();
+                        a.fetch_add(1, Ordering::SeqCst);
+                    }),
+                    &[],
+                )
+            };
+            let hb = {
+                let b = b.clone();
+                pool.submit_owned(
+                    5,
+                    Box::new(move |_t, _w| {
+                        b.fetch_add(1, Ordering::SeqCst);
+                    }),
+                    &[],
+                )
+            };
+            let hj = {
+                let (a, b, ok) = (a.clone(), b.clone(), ok.clone());
+                pool.submit_owned(
+                    3,
+                    Box::new(move |_t, _w| {
+                        if a.load(Ordering::SeqCst) != 9 || b.load(Ordering::SeqCst) != 5 {
+                            ok.store(false, Ordering::SeqCst);
+                        }
+                    }),
+                    &[&ha, &hb],
+                )
+            };
+            hj.wait();
+            assert!(ok.load(Ordering::SeqCst), "t{threads}");
+            assert!(ha.is_complete() && hb.is_complete());
+            ha.wait();
+            hb.wait();
+        }
+    }
+
+    #[test]
+    fn owned_chain_makes_progress_via_help_drain_alone() {
+        // Zero spawned workers: only the waiter's help-drain can run
+        // the chain. A three-deep chain must still complete, in order.
+        let pool = WorkerPool::new(1);
+        let trace = Arc::new(Mutex::new(Vec::new()));
+        let mk = |tag: u32, trace: &Arc<Mutex<Vec<u32>>>| {
+            let trace = trace.clone();
+            Box::new(move |_t: usize, _w: usize| {
+                trace.lock().unwrap().push(tag);
+            })
+        };
+        let h1 = pool.submit_owned(2, mk(1, &trace), &[]);
+        let h2 = pool.submit_owned(2, mk(2, &trace), &[&h1]);
+        let h3 = pool.submit_owned(2, mk(3, &trace), &[&h2]);
+        h3.wait();
+        assert_eq!(*trace.lock().unwrap(), vec![1, 1, 2, 2, 3, 3]);
+        h1.wait();
+        h2.wait();
     }
 
     #[test]

@@ -5,13 +5,17 @@
 //! workspace arena, and pool runs must be byte-identical to
 //! single-thread runs.
 
-use escoin::config::{minicnn, ConvShape};
+use escoin::config::{googlenet, miniception, minicnn, ConvShape};
 use escoin::conv::{
     direct_dense, shapes_under_test, winograd_applicable, ConvWeights, LayerPlan, Method,
     NetworkPlan, Workspace, WorkspaceArena,
 };
 use escoin::tensor::{Dims4, Tensor4};
 use escoin::util::{Rng, WorkerPool};
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
 
 fn case(shape: &ConvShape, n: usize, seed: u64) -> (Tensor4, ConvWeights) {
     let mut rng = Rng::new(seed);
@@ -137,6 +141,57 @@ fn network_plan_runs_on_shared_arena_are_byte_identical() {
             serial_bits,
             "single-thread run diverged ({})",
             method.name()
+        );
+    }
+}
+
+/// DAG-vs-sequential equivalence on the small inception graph, swept
+/// wide: external and synthetic inputs, batch 2, pool sizes 1/4/8 —
+/// the asynchronous branch-overlap walk must reproduce the sequential
+/// topological walk **byte for byte**.
+#[test]
+fn miniception_dag_walk_is_byte_identical_to_sequential_across_pools() {
+    let net = miniception();
+    let plan = NetworkPlan::build(&net, 2, 0x5EED, |_, _| Method::DirectSparse);
+    assert!(plan.supports_async());
+    let single = WorkerPool::new(1);
+    let mut arena = WorkspaceArena::for_plan(&plan, &single);
+    let mut rng = Rng::new(4);
+    let mut img = vec![0.0; plan.input_dims().len()];
+    rng.fill_activations(&mut img);
+    let seq_ext = bits(plan.run_with_input(&img, &single, &mut arena));
+    let seq_syn = bits(plan.run(&single, &mut arena));
+    for threads in [1, 4, 8] {
+        let pool = WorkerPool::new(threads);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+        let got_ext = bits(plan.run_async(Some(&img), &pool, &mut arena));
+        assert_eq!(seq_ext, got_ext, "external input diverged at t{threads}");
+        let got_syn = bits(plan.run_async(None, &pool, &mut arena));
+        assert_eq!(seq_syn, got_syn, "synthetic input diverged at t{threads}");
+    }
+}
+
+/// The acceptance property on the real workload: `googlenet()`'s
+/// inception modules execute as a branch/merge DAG whose async walk is
+/// byte-identical to the sequential walk at pool sizes 1, 4, and 8.
+/// One batch-1 sequential reference, three async runs — the full
+/// network each time, so this is the suite's heaviest test.
+#[test]
+fn googlenet_dag_walk_matches_sequential_walk_at_pools_1_4_8() {
+    let net = googlenet();
+    let plan = NetworkPlan::build(&net, 1, 0x6006, |_, _| Method::DirectSparse);
+    assert!(plan.supports_async(), "googlenet must compile to a DAG plan");
+    let ref_pool = WorkerPool::new(4);
+    let mut arena = WorkspaceArena::for_plan(&plan, &ref_pool);
+    let sequential = bits(plan.run(&ref_pool, &mut arena));
+    drop(arena);
+    for threads in [1, 4, 8] {
+        let pool = WorkerPool::new(threads);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+        let dag = bits(plan.run_async(None, &pool, &mut arena));
+        assert_eq!(
+            sequential, dag,
+            "googlenet DAG walk diverged from the sequential walk at t{threads}"
         );
     }
 }

@@ -1,17 +1,21 @@
-//! The ISSUE's acceptance properties for the pipelined serving executor
-//! and incremental replans:
+//! The ISSUE's acceptance properties for the pipelined serving executor,
+//! incremental replans, and DAG (branch-overlap) serving:
 //!
 //! * pipelined (`pipeline_depth = 2`) and sequential (`= 1`) serving
 //!   produce **byte-identical** logits for the same request stream
-//!   under a fixed plan;
+//!   under a fixed plan — for the chain network (`minicnn`) *and* for
+//!   an inception-structured graph network (`miniception`), whose
+//!   slots run the asynchronous DAG walk;
 //! * an incremental replan reuses the `Arc<LayerPlan>` pointers of
 //!   untouched layers and compiles exactly one plan for a single
-//!   router flip (pointer-equality + build-count asserted).
+//!   router flip (pointer-equality + build-count asserted);
+//! * `strict_replan` drains the pipeline before applying a replan and
+//!   keeps answering every request.
 
-use escoin::config::minicnn;
-use escoin::conv::{Method, PlanCache};
+use escoin::config::{miniception, minicnn};
+use escoin::conv::{Method, PlanCache, WorkspaceArena};
 use escoin::coordinator::{BatcherConfig, RouterConfig, ServerConfig, ServerHandle};
-use escoin::util::Rng;
+use escoin::util::{Rng, WorkerPool};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -19,8 +23,12 @@ use std::time::Duration;
 /// per-layer methods — and therefore the exact floating-point program —
 /// are identical regardless of pipelining.
 fn fixed_plan_cfg(pipeline_depth: usize, batch_size: usize) -> ServerConfig {
+    fixed_plan_cfg_for("minicnn", pipeline_depth, batch_size)
+}
+
+fn fixed_plan_cfg_for(network: &str, pipeline_depth: usize, batch_size: usize) -> ServerConfig {
     ServerConfig {
-        network: "minicnn".into(),
+        network: network.into(),
         batcher: BatcherConfig {
             batch_size,
             max_wait: Duration::from_millis(2),
@@ -33,6 +41,7 @@ fn fixed_plan_cfg(pipeline_depth: usize, batch_size: usize) -> ServerConfig {
         },
         replan_every: 0,
         pipeline_depth,
+        strict_replan: false,
     }
 }
 
@@ -92,6 +101,81 @@ fn deeper_pipeline_depths_are_supported_and_correct() {
     let want = serve_stream(fixed_plan_cfg(1, 4), &images);
     let got = serve_stream(fixed_plan_cfg(4, 4), &images);
     assert_eq!(want, got);
+}
+
+#[test]
+fn dag_branch_overlap_composes_with_the_two_slot_pipeline() {
+    // Serve an inception-structured graph network: each slot drives the
+    // asynchronous DAG walk (branch jobs overlapping on the pool), and
+    // the two-slot pipeline overlaps batches on top. Both compositions
+    // must be byte-identical to sequential serving of the same stream,
+    // and to the plan-level walk itself.
+    let net = miniception();
+    assert!(net.has_explicit_graph());
+    let image_elems = 3 * 8 * 8; // miniception stem input
+    let mut rng = Rng::new(2024);
+    let images: Vec<Vec<f32>> = (0..19).map(|_| rng.activation_vec(image_elems)).collect();
+
+    let sequential = serve_stream(fixed_plan_cfg_for("miniception", 1, 4), &images);
+    let pipelined = serve_stream(fixed_plan_cfg_for("miniception", 2, 4), &images);
+    assert_eq!(sequential.len(), pipelined.len());
+    for (i, (a, b)) in sequential.iter().zip(&pipelined).enumerate() {
+        assert_eq!(a, b, "request {i}: DAG + pipeline serving diverged");
+    }
+
+    // Oracle: at batch 1 with exploration off, the served logits must
+    // equal the plan's own DAG walk under the default (heuristic)
+    // method assignment — DirectSparse for these high-sparsity branch
+    // convs, LoweredGemm for dense layers, which is what the plan
+    // builder picks below.
+    let b1 = serve_stream(fixed_plan_cfg_for("miniception", 2, 1), &images[..3]);
+    let cache = PlanCache::build(&net, 77);
+    let plan = cache.network_plan(&net, 1, |_, _| Method::DirectSparse);
+    let pool = WorkerPool::new(3);
+    let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+    for (img, served) in images[..3].iter().zip(&b1) {
+        let want = plan.run_async(Some(img), &pool, &mut arena).to_vec();
+        assert_eq!(served, &want, "served logits diverged from the DAG walk");
+    }
+}
+
+#[test]
+fn strict_replan_drains_the_pipeline_and_answers_everything() {
+    // strict_replan = true with aggressive router churn: every request
+    // must still be answered, answers stay within fp tolerance across
+    // plan swaps, and replans still happen incrementally.
+    let cfg = ServerConfig {
+        network: "minicnn".into(),
+        batcher: BatcherConfig {
+            batch_size: 2,
+            max_wait: Duration::from_millis(1),
+        },
+        weight_seed: 13,
+        threads: 2,
+        router: RouterConfig {
+            explore_every: 3,
+            ..Default::default()
+        },
+        replan_every: 2,
+        pipeline_depth: 2,
+        strict_replan: true,
+    };
+    let server = ServerHandle::start(cfg).unwrap();
+    let mut rng = Rng::new(15);
+    let img = rng.activation_vec(server.image_elems());
+    let first = server.submit(img.clone()).unwrap().recv().unwrap();
+    for _ in 0..30 {
+        let resp = server.submit(img.clone()).unwrap().recv().unwrap();
+        for (x, y) in resp.logits.iter().zip(&first.logits) {
+            assert!(
+                (x - y).abs() <= 1e-3 + 1e-3 * y.abs().max(x.abs()),
+                "{x} vs {y} after strict replan"
+            );
+        }
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.snapshot.responses, 31);
+    assert_eq!(stats.snapshot.errors, 0);
 }
 
 #[test]
@@ -164,6 +248,7 @@ fn server_replans_incrementally_under_router_churn() {
         },
         replan_every: 2,
         pipeline_depth: 2,
+        strict_replan: false,
     };
     let server = ServerHandle::start(cfg).unwrap();
     let mut rng = Rng::new(14);
