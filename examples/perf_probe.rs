@@ -27,6 +27,19 @@
 //!   latency case branch overlap targets (per-layer tile counts are
 //!   smallest there); these rows are the heaviest in the probe —
 //!   trim `ESCOIN_BENCH_ITERS` when iterating.
+//! * `sconv-blocked-b1`/`b8` — the cache-blocked multi-channel
+//!   microkernel (`plan_ns`, default `TilePolicy`: register blocks of
+//!   `mr` output channels over L1-sized row blocks, input loaded once
+//!   per block and reused `mr`x) vs the unblocked per-channel kernel
+//!   (`free_ns`, `TilePolicy::unblocked()`) on the large-input AlexNet
+//!   conv2 class — the layer whose input group falls out of cache
+//!   between channels without blocking.
+//! * `retile-adaptive` — a deliberately coarse tiling (`free_ns`,
+//!   one channel tile per image at batch `threads + 1`, so a lane must
+//!   run two whole-image tiles — straggler-bound by construction) vs
+//!   the tiling the telemetry feedback loop (`TilePolicy::adjusted`,
+//!   driven by measured per-job imbalance) refines it into
+//!   (`plan_ns`).
 //!
 //! ```text
 //! cargo run --release --example perf_probe [--out PATH]
@@ -38,7 +51,7 @@ use escoin::bench_harness::{bench_median, BenchOpts};
 use escoin::config::{alexnet, googlenet, ConvShape};
 use escoin::conv::{
     lowered_gemm_parallel, lowered_spmm_parallel, sconv_parallel, ConvWeights, LayerPlan, Method,
-    NetworkPlan, PlanCache, Workspace, WorkspaceArena,
+    NetworkPlan, PlanCache, TilePolicy, Workspace, WorkspaceArena,
 };
 use escoin::coordinator::{BatcherConfig, RouterConfig, ServerConfig, ServerHandle};
 use escoin::tensor::{Dims4, Tensor4};
@@ -163,6 +176,113 @@ fn main() {
                 spawn.as_secs_f64() / pooled.as_secs_f64().max(1e-12)
             );
         }
+    }
+
+    // Blocked-microkernel headline: the cache-blocked multi-channel
+    // kernel vs the unblocked per-channel kernel (byte-identical
+    // outputs — the policies only change how the work is cut), on the
+    // large-input conv2 class where the input group falls out of cache
+    // between channels without blocking. Batch 1 (serving) and 8.
+    {
+        let (name, shape) = &shapes[0];
+        let mut rng = Rng::new(3);
+        let w = ConvWeights::synthetic(shape, &mut rng);
+        let unblocked = LayerPlan::build_with_policy(
+            shape,
+            &w,
+            Method::DirectSparse,
+            TilePolicy::unblocked(),
+        );
+        let blocked = LayerPlan::build(shape, &w, Method::DirectSparse); // default policy
+        for (b, label) in [(1usize, "sconv-blocked-b1"), (8usize, "sconv-blocked-b8")] {
+            let x =
+                Tensor4::random_activations(Dims4::new(b, shape.c, shape.h, shape.w), &mut rng);
+            ws.ensure(
+                unblocked
+                    .workspace_floats(b, pool.workers())
+                    .max(blocked.workspace_floats(b, pool.workers())),
+            );
+            let mut out = Tensor4::zeros(blocked.out_dims(b));
+            let per_channel = bench_median(bench, || {
+                unblocked.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+            });
+            let multi_channel = bench_median(bench, || {
+                blocked.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+            });
+            rows.push(Row {
+                shape: *name,
+                method: label,
+                batch: b,
+                free_ns: per_channel.as_nanos(),
+                plan_ns: multi_channel.as_nanos(),
+            });
+            println!(
+                "{label}: per-channel {per_channel:?}  blocked {multi_channel:?}  ({:.2}x)",
+                per_channel.as_secs_f64() / multi_channel.as_secs_f64().max(1e-12)
+            );
+        }
+    }
+
+    // Adaptive-retile headline: a deliberately coarse tiling vs the
+    // tiling the measured-imbalance feedback loop refines it into —
+    // the serving executor runs exactly this adjustment at its replan
+    // checkpoints. The coarse start is ONE channel tile per image
+    // (`target_tiles = 1`, per-image parallelism only) at a batch of
+    // `threads + 1`, so some lane must run two whole-image tiles while
+    // the rest idle — a measured per-job imbalance of at least
+    // 2 / ((threads+1)/threads), comfortably above the refine
+    // threshold, guaranteeing the loop fires.
+    {
+        let shape = ConvShape::new(16, 64, 64, 64, 3, 3, 1, 1).with_sparsity(0.9);
+        let mut rng = Rng::new(4);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let b = threads + 1;
+        let x = Tensor4::random_activations(Dims4::new(b, shape.c, shape.h, shape.w), &mut rng);
+        let coarse_policy = TilePolicy {
+            target_tiles: 1,
+            ..TilePolicy::default()
+        };
+        let coarse = LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, coarse_policy);
+        ws.ensure(coarse.workspace_floats(b, pool.workers()));
+        let mut out = Tensor4::zeros(coarse.out_dims(b));
+
+        // Drive the real feedback loop: run on the coarse tiling,
+        // measure per-job imbalance, adjust until the signal settles.
+        let mut policy = coarse_policy;
+        let mut anchor = pool.stats();
+        for _ in 0..8 {
+            let plan = LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, policy);
+            for _ in 0..4 {
+                plan.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None);
+            }
+            let now = pool.stats();
+            let signal = now.interval_tiling_signal(&anchor);
+            anchor = now;
+            match signal.and_then(|(i, s)| policy.adjusted(i, s)) {
+                Some(next) => policy = next,
+                None => break,
+            }
+        }
+        let adapted = LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, policy);
+        let coarse_t = bench_median(bench, || {
+            coarse.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+        });
+        let adapted_t = bench_median(bench, || {
+            adapted.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+        });
+        rows.push(Row {
+            shape: "coarse_conv_64x64_sp90",
+            method: "retile-adaptive",
+            batch: b,
+            free_ns: coarse_t.as_nanos(),
+            plan_ns: adapted_t.as_nanos(),
+        });
+        println!(
+            "retile-adaptive: coarse({} tiles) {coarse_t:?}  adapted({} tiles) {adapted_t:?}  ({:.2}x)",
+            coarse_policy.target_tiles,
+            policy.target_tiles,
+            coarse_t.as_secs_f64() / adapted_t.as_secs_f64().max(1e-12)
+        );
     }
 
     // Serving-pipeline headline: ns/request over a paced open-loop
@@ -332,6 +452,7 @@ fn serve_wall(
         replan_every: 0,
         pipeline_depth: depth,
         strict_replan: false,
+        adaptive_tiling: false,
     })
     .expect("server start");
     let mut rng = Rng::new(100 + seed);

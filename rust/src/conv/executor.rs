@@ -49,6 +49,7 @@
 //!   waits on all of them.
 
 use super::plan::{ConvExecutor, LayerPlan, Method};
+use super::sconv::TilePolicy;
 use crate::config::{pool_out_dim, ConvShape, FcShape, Layer, LayerKind, Network, PoolKind};
 use crate::conv::weights::ConvWeights;
 use crate::tensor::Dims4;
@@ -756,6 +757,19 @@ impl NetworkPlan {
         self.run_inner(None, pool, arena, Some(observer), true)
     }
 
+    /// Run on synthetic activations with per-layer **totals** reported
+    /// to `observer` (no kernel laps — the parallel paths stay
+    /// engaged): the routed fallback for chain networks that have no
+    /// async walk to time.
+    pub fn run_observed<'a>(
+        &self,
+        pool: &WorkerPool,
+        arena: &'a mut WorkspaceArena,
+        observer: &mut dyn FnMut(PlanLayerRun),
+    ) -> &'a [f32] {
+        self.run_inner(None, pool, arena, Some(observer), false)
+    }
+
     /// Serving-path run: external input, per-layer **totals** reported to
     /// `observer` (for router EWMA feedback), kernels untimed so the
     /// parallel execution paths stay engaged.
@@ -1127,6 +1141,24 @@ impl NetworkPlan {
         self.finish_async(&cursor, arena)
     }
 
+    /// [`NetworkPlan::run_async`] with approximate per-layer latencies
+    /// reported to `observer` (see [`NetworkPlan::step_async_timed`])
+    /// — what lets the router's EWMA refine on DAG networks without
+    /// giving up branch overlap.
+    pub fn run_async_timed<'a>(
+        &self,
+        input: Option<&[f32]>,
+        pool: &WorkerPool,
+        arena: &'a mut WorkspaceArena,
+        observer: &mut dyn FnMut(PlanLayerRun),
+    ) -> &'a [f32] {
+        // SAFETY: as in `run_async` — exclusive arena borrow, cursor
+        // fully stepped before either borrow ends.
+        let mut cursor = unsafe { self.begin_run_async(input, pool, arena) };
+        while self.step_async_timed(&mut cursor, Some(observer)) {}
+        self.finish_async(&cursor, arena)
+    }
+
     /// Begin the asynchronous DAG walk: size the arena, stage the
     /// input into slot 0, and submit **every step** as owned pool jobs
     /// chained behind their producers ([`WorkerPool::submit_owned`]).
@@ -1171,6 +1203,7 @@ impl NetworkPlan {
         assert!(self.graph, "begin_run_async needs a DAG plan (see supports_async)");
         self.size_arena(pool, arena);
         self.stage_input(input, arena);
+        let started = Instant::now();
         let (ws_ranges, _) = self.ws_layout(pool.workers());
         let ws_base = arena.ws.buf_mut().as_mut_ptr();
         // SAFETY (all `from_raw` below): validity and exclusivity of
@@ -1353,7 +1386,13 @@ impl NetworkPlan {
             drop(dep_handles);
             jobs.push(step_jobs);
         }
-        AsyncCursor { jobs, retired: 0 }
+        let finished = vec![None; jobs.len()];
+        AsyncCursor {
+            jobs,
+            retired: 0,
+            started,
+            finished,
+        }
     }
 
     /// Retire the next step of an async walk, blocking until that
@@ -1364,11 +1403,55 @@ impl NetworkPlan {
     /// is where branch overlap (and, in the serving pipeline, batch
     /// overlap) comes from. Returns `false` once every step retired.
     pub fn step_async(&self, cursor: &mut AsyncCursor) -> bool {
+        self.step_async_timed(cursor, None)
+    }
+
+    /// [`NetworkPlan::step_async`] with an **approximate per-layer
+    /// latency** reported to `observer`: overlapping jobs report no
+    /// exact per-layer wall time, but every pool job records its
+    /// completion timestamp at the handshake
+    /// ([`crate::util::JobHandle::wait_timed`]), so the step's latency
+    /// is reconstructed as *terminal-job completion minus the latest
+    /// producer completion* (walk start for source steps). The signal
+    /// includes queue wait — an upper bound, not a kernel lap — but it
+    /// tracks relative per-layer cost well enough to keep the router's
+    /// EWMA refining on DAG networks, which the async walk previously
+    /// left frozen. `kernels` is always `None` (the async walk cannot
+    /// lap sub-kernels).
+    pub fn step_async_timed(
+        &self,
+        cursor: &mut AsyncCursor,
+        mut observer: Option<&mut dyn FnMut(PlanLayerRun)>,
+    ) -> bool {
         if cursor.retired >= cursor.jobs.len() {
             return false;
         }
-        for h in cursor.jobs[cursor.retired].drain(..) {
-            h.wait();
+        let i = cursor.retired;
+        let mut done_at = cursor.started;
+        for h in cursor.jobs[i].drain(..) {
+            done_at = done_at.max(h.wait_timed());
+        }
+        cursor.finished[i] = Some(done_at);
+        if let Some(obs) = observer.as_mut() {
+            let step = &self.steps[i];
+            // Producers retired earlier (deps are topologically
+            // before), so their completion stamps are recorded.
+            let started_at = step
+                .deps
+                .iter()
+                .filter_map(|&d| cursor.finished[d])
+                .max()
+                .unwrap_or(cursor.started);
+            let method = match &step.op {
+                PlanOp::Conv { plan } => Some(plan.method()),
+                _ => None,
+            };
+            obs(PlanLayerRun {
+                layer: &step.name,
+                method,
+                total: done_at.saturating_duration_since(started_at),
+                kernels: None,
+            });
         }
         cursor.retired += 1;
         true
@@ -1397,6 +1480,12 @@ pub struct AsyncCursor {
     /// otherwise), drained as steps retire.
     jobs: Vec<Vec<JobHandle>>,
     retired: usize,
+    /// When the walk's jobs were submitted — the latency anchor for
+    /// source steps in the approximate per-layer reconstruction.
+    started: Instant,
+    /// Per-step terminal-job completion stamps, recorded as steps
+    /// retire (see [`NetworkPlan::step_async_timed`]).
+    finished: Vec<Option<Instant>>,
 }
 
 impl AsyncCursor {
@@ -1456,6 +1545,11 @@ pub struct PlanCache {
     conv_weights: HashMap<String, Arc<ConvWeights>>,
     fc_weights: HashMap<String, Arc<Vec<f32>>>,
     plans: Mutex<HashMap<(String, Method), Arc<LayerPlan>>>,
+    /// Per-layer DirectSparse tile policy (default when absent). A
+    /// policy change invalidates the layer's cached DirectSparse plan,
+    /// so a telemetry-driven *retile* rebuilds exactly the affected
+    /// plans through the same incremental path as a method flip.
+    tile_policies: Mutex<HashMap<String, TilePolicy>>,
     layer_builds: AtomicU64,
 }
 
@@ -1483,6 +1577,7 @@ impl PlanCache {
             conv_weights,
             fc_weights,
             plans: Mutex::new(HashMap::new()),
+            tile_policies: Mutex::new(HashMap::new()),
             layer_builds: AtomicU64::new(0),
         }
     }
@@ -1498,21 +1593,118 @@ impl PlanCache {
     }
 
     /// The compiled plan for `(layer, method)`, built (and counted) on
-    /// first request, shared by `Arc` thereafter. Panics if `name` is
-    /// not a CONV layer of the cached network.
+    /// first request under the layer's current [`TilePolicy`], shared
+    /// by `Arc` thereafter. Panics if `name` is not a CONV layer of the
+    /// cached network.
     pub fn plan_for(&self, name: &str, shape: &ConvShape, method: Method) -> Arc<LayerPlan> {
+        // Take the plans lock while still holding the policy lock (the
+        // same policies -> plans order `set_tile_policy` uses): a
+        // concurrent retile either lands entirely before this build
+        // (we see its policy) or blocks until after the insert (its
+        // invalidation removes what we built) — never a stale-policy
+        // plan surviving a lost invalidation.
+        let policies = self.tile_policies.lock().unwrap();
+        let policy = policies.get(name).copied().unwrap_or_default();
         let mut cache = self.plans.lock().unwrap();
+        drop(policies);
         cache
             .entry((name.to_string(), method))
             .or_insert_with(|| {
                 self.layer_builds.fetch_add(1, Ordering::Relaxed);
-                Arc::new(LayerPlan::build_shared(
+                Arc::new(LayerPlan::build_shared_with_policy(
                     shape,
                     self.conv_weights[name].clone(),
                     method,
+                    policy,
                 ))
             })
             .clone()
+    }
+
+    /// The current DirectSparse [`TilePolicy`] for a layer (the default
+    /// until a retile changed it).
+    pub fn tile_policy(&self, layer: &str) -> TilePolicy {
+        self.tile_policies
+            .lock()
+            .unwrap()
+            .get(layer)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Set a layer's DirectSparse [`TilePolicy`]. When the policy
+    /// actually changes, the layer's cached DirectSparse plan is
+    /// dropped so the next [`PlanCache::network_plan`] rebuilds exactly
+    /// that plan (counted by [`PlanCache::layer_builds`]); plans
+    /// already held by in-flight runs keep their own `Arc`s, so a
+    /// retile is as safe as a method flip. Returns whether anything
+    /// changed.
+    pub fn set_tile_policy(&self, layer: &str, policy: TilePolicy) -> bool {
+        let mut policies = self.tile_policies.lock().unwrap();
+        if policies.get(layer).copied().unwrap_or_default() == policy {
+            return false;
+        }
+        policies.insert(layer.to_string(), policy);
+        self.plans
+            .lock()
+            .unwrap()
+            .remove(&(layer.to_string(), Method::DirectSparse));
+        true
+    }
+
+    /// One step of the telemetry feedback loop over **every** CONV
+    /// layer: fold the measured mean per-job imbalance and steal rate
+    /// ([`crate::util::PoolStats::interval_job_imbalance`] /
+    /// [`crate::util::PoolStats::interval_steal_rate`]) into each
+    /// layer's [`TilePolicy`] via [`TilePolicy::adjusted`] — finer
+    /// tiles when jobs finish unbalanced, coarser when steals are rare.
+    /// Returns the number of layers whose policy changed (their cached
+    /// DirectSparse plans are invalidated; the caller should replan).
+    pub fn adapt_tile_policies(&self, mean_job_imbalance: f64, steal_rate: f64) -> usize {
+        let layers: Vec<String> = self.conv_weights.keys().cloned().collect();
+        let names: Vec<&str> = layers.iter().map(String::as_str).collect();
+        self.adapt_tile_policies_for(&names, mean_job_imbalance, steal_rate)
+    }
+
+    /// [`PlanCache::adapt_tile_policies`] restricted to `layers` — the
+    /// serving executor passes only the layers its live assignment
+    /// actually routes to DirectSparse, so a telemetry blip can never
+    /// force a replan (or, under `strict_replan`, a pipeline drain) by
+    /// retiling plans nothing executes.
+    pub fn adapt_tile_policies_for(
+        &self,
+        layers: &[&str],
+        mean_job_imbalance: f64,
+        steal_rate: f64,
+    ) -> usize {
+        let mut changed = 0;
+        for layer in layers {
+            let current = self.tile_policy(layer);
+            if let Some(next) = current.adjusted(mean_job_imbalance, steal_rate) {
+                if self.set_tile_policy(layer, next) {
+                    changed += 1;
+                }
+            }
+        }
+        changed
+    }
+
+    /// The largest `target_tiles` over **every** CONV layer's policy,
+    /// counting layers still at the implicit default — the gauge the
+    /// serving metrics publish after a retile.
+    pub fn current_tile_target(&self) -> usize {
+        let policies = self.tile_policies.lock().unwrap();
+        self.conv_weights
+            .keys()
+            .map(|l| {
+                policies
+                    .get(l)
+                    .copied()
+                    .unwrap_or_default()
+                    .target_tiles
+            })
+            .max()
+            .unwrap_or_else(|| TilePolicy::default().target_tiles)
     }
 
     /// Cumulative `LayerPlan` compilations (cache misses). Diff this
@@ -1915,6 +2107,84 @@ mod tests {
         let second = plan.finish_async(&cursor, &arena).to_vec();
         assert_eq!(first, second);
         assert_eq!(arena.total_floats(), floats, "async steady state grew");
+    }
+
+    #[test]
+    fn plan_cache_retile_rebuilds_only_direct_sparse_plans() {
+        let net = minicnn();
+        let cache = PlanCache::build(&net, 7);
+        let plan_a = cache.network_plan(&net, 2, |_, _| Method::DirectSparse);
+        let builds = cache.layer_builds();
+
+        // Refine every layer's tiling: same method assignment, but the
+        // DirectSparse plans must be rebuilt with the new geometry...
+        let imbalanced = TilePolicy::REFINE_IMBALANCE + 1.0;
+        let changed = cache.adapt_tile_policies(imbalanced, 0.5);
+        assert!(changed > 0, "policies must refine under imbalance");
+        assert!(cache.current_tile_target() > TilePolicy::default().target_tiles);
+        let plan_b = cache.network_plan(&net, 2, |_, _| Method::DirectSparse);
+        let sparse_layers = plan_a
+            .conv_plans()
+            .iter()
+            .filter(|(_, p)| p.method() == Method::DirectSparse)
+            .count();
+        assert_eq!(
+            cache.layer_builds() - builds,
+            sparse_layers as u64,
+            "a retile must rebuild exactly the DirectSparse plans"
+        );
+        for ((na, pa), (nb, pb)) in plan_a.conv_plans().iter().zip(plan_b.conv_plans().iter()) {
+            assert_eq!(na, nb);
+            if pa.method() == Method::DirectSparse {
+                assert!(!Arc::ptr_eq(pa, pb), "{na} must carry the new tiling");
+                assert_eq!(
+                    pb.tile_policy().unwrap().target_tiles,
+                    TilePolicy::default().target_tiles * 2
+                );
+            } else {
+                assert!(Arc::ptr_eq(pa, pb), "{na} (dense) must keep its plan");
+            }
+        }
+
+        // ...and the retiled plan computes the identical logits: tile
+        // geometry never changes results.
+        let pool = WorkerPool::new(2);
+        let mut rng = Rng::new(9);
+        let mut img = vec![0.0; plan_a.input_dims().len()];
+        rng.fill_activations(&mut img);
+        let mut arena = WorkspaceArena::for_plan(&plan_a, &pool);
+        let a = plan_a.run_with_input(&img, &pool, &mut arena).to_vec();
+        let b = plan_b.run_with_input(&img, &pool, &mut arena).to_vec();
+        assert_eq!(a, b, "retile changed the logits");
+
+        // A no-op set is free.
+        let p = cache.tile_policy("conv2");
+        assert!(!cache.set_tile_policy("conv2", p));
+    }
+
+    #[test]
+    fn timed_async_walk_reports_approximate_layer_latencies() {
+        use crate::config::miniception;
+        let net = miniception();
+        let pool = WorkerPool::new(3);
+        let plan = NetworkPlan::build(&net, 2, 31, |_, _| Method::DirectSparse);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+        let mut seen: Vec<(String, Option<Method>)> = Vec::new();
+        let logits = plan
+            .run_async_timed(None, &pool, &mut arena, &mut |lr| {
+                assert!(lr.kernels.is_none(), "async walk cannot lap kernels");
+                seen.push((lr.layer.to_string(), lr.method));
+            })
+            .to_vec();
+        assert_eq!(seen.len(), plan.num_steps());
+        assert!(
+            seen.iter().any(|(_, m)| m.is_some()),
+            "conv steps must report their method"
+        );
+        // Identical bytes to the untimed async walk (observation is
+        // read-only).
+        let want = plan.run_async(None, &pool, &mut arena).to_vec();
+        assert_eq!(logits, want);
     }
 
     #[test]

@@ -58,7 +58,9 @@ pub use plan::{
     shapes_under_test, ConvExecutor, DirectSparsePlan, LayerPlan, LoweredGemmPlan,
     LoweredSpmmPlan, Method, WinogradPlan,
 };
-pub use sconv::{sconv, sconv_ell, sconv_parallel, sconv_with_pool};
+pub use sconv::{
+    sconv, sconv_ell, sconv_ell_with_pool, sconv_parallel, sconv_with_pool, TilePolicy,
+};
 pub use spmm::{csrmm, csrmm_pool};
 pub use weights::ConvWeights;
 pub use winograd::{winograd_3x3, winograd_applicable};

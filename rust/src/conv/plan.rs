@@ -22,7 +22,7 @@
 
 use super::executor::{pad_into, Workspace};
 use super::im2col::im2col_group_into;
-use super::sconv::{nnz_channel_tiles, sconv_tile, sconv_tiled, worker_scratch_floats};
+use super::sconv::{nnz_channel_tiles, sconv_tile, sconv_tiled, worker_scratch_floats, TilePolicy};
 use super::weights::ConvWeights;
 use super::winograd::{
     transform_filters, winograd_applicable, winograd_tile, winograd_tiles_pool,
@@ -106,6 +106,14 @@ pub trait ConvExecutor: Send + Sync {
         out: &mut [f32],
         sw: Option<&mut Stopwatch>,
     );
+
+    /// The [`TilePolicy`] the executor was compiled with, when the
+    /// method has tile/block geometry knobs (DirectSparse); `None`
+    /// otherwise. Geometry never affects results — this is exposed so
+    /// the adaptive-tiling loop and tests can inspect the live plan.
+    fn tile_policy(&self) -> Option<TilePolicy> {
+        None
+    }
 
     /// Number of tiles the **asynchronous (DAG) execution path**
     /// decomposes one batch of this layer into. Fixed by the plan and
@@ -195,23 +203,37 @@ fn padded_view<'a>(
 /// tiles** (each tile ~equal stored nonzeros, so each pool tile is
 /// ~equal FLOPs — skewed per-channel sparsity cannot idle workers the
 /// way equal-plane splitting does), per-worker stride-1 scratch planes
-/// carved from the workspace.
+/// carved from the workspace. The tile count and the microkernel's
+/// cache-block geometry come from an explicit [`TilePolicy`], fixed at
+/// build time (tile geometry is baked into the plan so in-flight runs
+/// — including captured async tile counts — can never observe a
+/// mid-run change; a *retile* builds a new plan, exactly like a method
+/// flip).
 pub struct DirectSparsePlan {
     shape: ConvShape,
     banks: Vec<StretchedFilter>,
+    policy: TilePolicy,
     tiles: Vec<Range<usize>>,
     tile_nnz: Vec<usize>,
 }
 
 impl DirectSparsePlan {
-    /// Stretch the weights (§3.1) and pack nnz-weighted channel tiles.
+    /// Stretch the weights (§3.1) and pack nnz-weighted channel tiles
+    /// under the default [`TilePolicy`].
     pub fn build(shape: &ConvShape, weights: &ConvWeights) -> Self {
+        Self::build_with_policy(shape, weights, TilePolicy::default())
+    }
+
+    /// Stretch the weights and pack channel tiles under an explicit
+    /// [`TilePolicy`] — the adaptive-tiling rebuild path.
+    pub fn build_with_policy(shape: &ConvShape, weights: &ConvWeights, policy: TilePolicy) -> Self {
         assert_eq!(weights.shape, *shape, "weights/shape mismatch");
         let banks = weights.stretched_banks();
-        let (tiles, tile_nnz) = nnz_channel_tiles(shape, &banks);
+        let (tiles, tile_nnz) = nnz_channel_tiles(shape, &banks, policy.target_tiles);
         Self {
             shape: shape.clone(),
             banks,
+            policy,
             tiles,
             tile_nnz,
         }
@@ -220,6 +242,11 @@ impl DirectSparsePlan {
     /// The pre-stretched filter banks, one per group.
     pub fn banks(&self) -> &[StretchedFilter] {
         &self.banks
+    }
+
+    /// The tile-count / cache-block geometry this plan was built with.
+    pub fn policy(&self) -> TilePolicy {
+        self.policy
     }
 
     /// The nnz-weighted channel tiles (contiguous ranges partitioning
@@ -243,8 +270,13 @@ impl ConvExecutor for DirectSparsePlan {
         Method::DirectSparse
     }
 
+    fn tile_policy(&self) -> Option<TilePolicy> {
+        Some(self.policy)
+    }
+
     fn workspace_floats(&self, batch: usize, workers: usize) -> usize {
-        pad_floats(&self.shape, batch) + workers.max(1) * worker_scratch_floats(&self.shape)
+        pad_floats(&self.shape, batch)
+            + workers.max(1) * worker_scratch_floats(&self.shape, &self.policy)
     }
 
     fn execute_into(
@@ -263,7 +295,17 @@ impl ConvExecutor for DirectSparsePlan {
         let (padded, scratch) = padded_view(s, batch, input, ws.buf_mut(), &mut sw);
         out.fill(0.0);
         lap(&mut sw, "sconv", || {
-            sconv_tiled(s, padded, batch, &self.banks, &self.tiles, pool, out, scratch)
+            sconv_tiled(
+                s,
+                padded,
+                batch,
+                &self.banks,
+                &self.tiles,
+                &self.policy,
+                pool,
+                out,
+                scratch,
+            )
         });
     }
 
@@ -282,7 +324,19 @@ impl ConvExecutor for DirectSparsePlan {
     ) {
         // SAFETY: forwarded caller contract; `self.tiles` partitions
         // 0..M, so tile output planes are disjoint.
-        unsafe { sconv_tile(&self.shape, padded, &self.banks, &self.tiles, tile, worker, out, scratch) }
+        unsafe {
+            sconv_tile(
+                &self.shape,
+                padded,
+                &self.banks,
+                &self.tiles,
+                &self.policy,
+                tile,
+                worker,
+                out,
+                scratch,
+            )
+        }
     }
 }
 
@@ -656,9 +710,26 @@ pub struct LayerPlan {
 impl LayerPlan {
     /// Compile a plan for `(shape, weights, method)`. Panics if the method
     /// cannot run this shape (Winograd on non-3x3/s1/g1 layers).
+    /// DirectSparse plans get the default [`TilePolicy`] — use
+    /// [`LayerPlan::build_with_policy`] for an explicit geometry.
     pub fn build(shape: &ConvShape, weights: &ConvWeights, method: Method) -> LayerPlan {
+        Self::build_with_policy(shape, weights, method, TilePolicy::default())
+    }
+
+    /// Compile a plan with an explicit [`TilePolicy`] for the
+    /// DirectSparse tile/block geometry (ignored by the other methods,
+    /// whose decomposition has no policy knobs). Geometry never changes
+    /// results — only how the work is cut.
+    pub fn build_with_policy(
+        shape: &ConvShape,
+        weights: &ConvWeights,
+        method: Method,
+        policy: TilePolicy,
+    ) -> LayerPlan {
         let exec: Box<dyn ConvExecutor> = match method {
-            Method::DirectSparse => Box::new(DirectSparsePlan::build(shape, weights)),
+            Method::DirectSparse => {
+                Box::new(DirectSparsePlan::build_with_policy(shape, weights, policy))
+            }
             Method::LoweredGemm => Box::new(LoweredGemmPlan::build(shape, weights)),
             Method::LoweredSpmm => Box::new(LoweredSpmmPlan::build(shape, weights)),
             Method::Winograd => Box::new(WinogradPlan::build(shape, weights)),
@@ -671,12 +742,30 @@ impl LayerPlan {
     /// the caller (schedule cache, serving plan) keeps weights alive
     /// anyway. The sparse methods derive their operands either way.
     pub fn build_shared(shape: &ConvShape, weights: Arc<ConvWeights>, method: Method) -> LayerPlan {
+        Self::build_shared_with_policy(shape, weights, method, TilePolicy::default())
+    }
+
+    /// [`LayerPlan::build_shared`] with an explicit [`TilePolicy`] —
+    /// what the plan cache uses so a telemetry-driven retile flows
+    /// through the same incremental-rebuild path as a method flip.
+    pub fn build_shared_with_policy(
+        shape: &ConvShape,
+        weights: Arc<ConvWeights>,
+        method: Method,
+        policy: TilePolicy,
+    ) -> LayerPlan {
         match method {
             Method::LoweredGemm => LayerPlan {
                 exec: Box::new(LoweredGemmPlan::build_shared(shape, weights)),
             },
-            _ => Self::build(shape, &weights, method),
+            _ => Self::build_with_policy(shape, &weights, method, policy),
         }
+    }
+
+    /// The [`TilePolicy`] baked into this plan (DirectSparse only;
+    /// `None` for methods without policy knobs).
+    pub fn tile_policy(&self) -> Option<TilePolicy> {
+        self.exec.tile_policy()
     }
 
     /// The layer geometry this plan was compiled for.
@@ -753,6 +842,10 @@ impl ConvExecutor for LayerPlan {
 
     fn method(&self) -> Method {
         self.exec.method()
+    }
+
+    fn tile_policy(&self) -> Option<TilePolicy> {
+        self.exec.tile_policy()
     }
 
     fn workspace_floats(&self, batch: usize, workers: usize) -> usize {

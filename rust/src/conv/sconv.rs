@@ -23,6 +23,25 @@
 //! splits. [`sconv`] and [`sconv_parallel`] are the thin allocating
 //! wrappers the seed API exposed (the latter now spins up an ephemeral
 //! pool per call; the plan layer shares one pool instead).
+//!
+//! ## Locality: the cache-blocked multi-channel microkernel
+//!
+//! The paper's GPU kernel stages an input tile once in shared memory
+//! and reuses it across every output channel of the thread block (§3.2)
+//! — the *locality* half of its orchestration. The CPU analogue here is
+//! [`sconv_planes_blocked`]: a register block of `Mr` output channels
+//! that share one input group is processed together, and the stride-1
+//! scratch span is cut into L1-sized row blocks. For each input row
+//! block, the nonzeros of **all `Mr` channels** are applied before the
+//! block advances, so each input float is loaded from memory once per
+//! block pass and reused ~`Mr` times from cache — instead of once per
+//! output channel, which on large early layers (the `(E-1)*Wp + F`
+//! span times `C/g * Hp * Wp` input group) falls out of cache between
+//! channels and leaves the kernel bandwidth-bound. Per output element
+//! the arithmetic sequence is **identical** to the per-channel kernel
+//! (same nonzero order, same 4-wide grouping), so the blocked kernel
+//! is byte-identical to [`sconv_plane`] by construction — block
+//! geometry ([`TilePolicy`]) can never change results.
 
 use crate::config::ConvShape;
 use crate::sparse::{EllMatrix, StretchedFilter};
@@ -30,12 +49,102 @@ use crate::tensor::{Dims4, Tensor4};
 use crate::util::{SharedSlice, WorkerPool};
 use std::ops::Range;
 
-/// Scratch floats one worker needs: the stride-1 fast path accumulates
-/// into a `(E-1)*Wp + F` plane; the strided path needs none, but one
+/// Geometry of the direct-sparse execution: how many channel tiles the
+/// pool schedules, and the cache-block shape of the microkernel. Held
+/// per [`super::DirectSparsePlan`] (replacing the old hardcoded
+/// 48-tile target) and adjusted online from measured pool telemetry by
+/// [`TilePolicy::adjusted`].
+///
+/// **Blocking never changes results**: per output element the blocked
+/// microkernel performs the identical float operations in the identical
+/// order for every `mr` / `block_floats` choice, so outputs are
+/// byte-identical across policies (pinned by `tests/plan_props.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TilePolicy {
+    /// Target number of nnz-weighted channel tiles per image
+    /// ([`nnz_channel_tiles`]); more tiles = finer load balancing,
+    /// fewer tiles = less scheduling overhead.
+    pub target_tiles: usize,
+    /// Output channels per register block of the stride-1 microkernel —
+    /// the input reuse factor: each input row block is loaded once and
+    /// reused by the nonzeros of `mr` channels while cache-resident.
+    pub mr: usize,
+    /// Stride-1 scratch row-block length in floats (the L1 blocking
+    /// unit). `usize::MAX` disables blocking (one pass over the whole
+    /// span per channel — the PR-2 kernel shape).
+    pub block_floats: usize,
+}
+
+impl Default for TilePolicy {
+    fn default() -> Self {
+        Self {
+            target_tiles: 48,
+            mr: 4,
+            block_floats: 1024,
+        }
+    }
+}
+
+impl TilePolicy {
+    /// Finest tile target the adaptive loop will refine to.
+    pub const MAX_TILES: usize = 512;
+    /// Coarsest tile target the adaptive loop will coarsen to.
+    pub const MIN_TILES: usize = 16;
+    /// Mean per-job imbalance above which tiles are split finer.
+    pub const REFINE_IMBALANCE: f64 = 1.25;
+    /// Mean per-job imbalance below which (with rare steals) tiles may
+    /// coarsen.
+    pub const COARSEN_IMBALANCE: f64 = 1.05;
+    /// Steal rate (steals per distributed tile) below which the queue
+    /// is considered quiescent enough to coarsen.
+    pub const COARSEN_STEAL_RATE: f64 = 0.02;
+
+    /// The unblocked policy: one channel at a time over the whole
+    /// scratch span — exactly the PR-2 per-channel kernel. Used as the
+    /// baseline of the `sconv-blocked-*` bench rows.
+    pub fn unblocked() -> Self {
+        Self {
+            target_tiles: 48,
+            mr: 1,
+            block_floats: usize::MAX,
+        }
+    }
+
+    /// One step of the telemetry feedback loop: given the mean per-job
+    /// imbalance and steal rate measured over a replan interval
+    /// ([`crate::util::PoolStats::interval_job_imbalance`] /
+    /// [`crate::util::PoolStats::interval_steal_rate`]), return the
+    /// refined policy — finer tiles when jobs finished unbalanced,
+    /// coarser tiles when the queue barely rebalances (steals rare and
+    /// jobs already even) — or `None` when the current granularity is
+    /// already right.
+    pub fn adjusted(&self, mean_job_imbalance: f64, steal_rate: f64) -> Option<TilePolicy> {
+        if mean_job_imbalance > Self::REFINE_IMBALANCE && self.target_tiles < Self::MAX_TILES {
+            return Some(Self {
+                target_tiles: (self.target_tiles * 2).min(Self::MAX_TILES),
+                ..*self
+            });
+        }
+        if mean_job_imbalance < Self::COARSEN_IMBALANCE
+            && steal_rate < Self::COARSEN_STEAL_RATE
+            && self.target_tiles > Self::MIN_TILES
+        {
+            return Some(Self {
+                target_tiles: (self.target_tiles / 2).max(Self::MIN_TILES),
+                ..*self
+            });
+        }
+        None
+    }
+}
+
+/// Scratch floats one worker needs under `policy`: the stride-1 fast
+/// path accumulates a register block of `mr` channels into `mr`
+/// `(E-1)*Wp + F` planes at once; the strided path needs none, but one
 /// float keeps per-worker chunking uniform.
-pub(crate) fn worker_scratch_floats(shape: &ConvShape) -> usize {
+pub(crate) fn worker_scratch_floats(shape: &ConvShape, policy: &TilePolicy) -> usize {
     if shape.stride == 1 {
-        (shape.out_h() - 1) * shape.padded_w() + shape.out_w()
+        policy.mr.max(1) * ((shape.out_h() - 1) * shape.padded_w() + shape.out_w())
     } else {
         1
     }
@@ -140,15 +249,78 @@ fn sconv_plane(
     }
 }
 
+/// The cache-blocked multi-channel stride-1 microkernel: accumulate a
+/// register block of `mls` consecutive group-local channels
+/// (`ml0..ml0 + mls`) into `mls` scratch planes of `span` floats each,
+/// visiting the span in row blocks of `block` floats and applying the
+/// nonzeros of **every** channel in the register block before the block
+/// advances — so the input floats a block touches are loaded once and
+/// reused by all `mls` channels while cache-resident.
+///
+/// Per scratch element the accumulation order is identical to
+/// [`sconv_plane`]'s stride-1 path: nonzeros in CSR order, grouped four
+/// at a time with the same fused expression — restricting each pass to
+/// a block window reorders *which elements* are touched when, never the
+/// operation sequence *per element*. Byte-identical by construction.
+///
+/// `scratch` must hold `mls * span` floats; it is zeroed here (the
+/// per-channel kernel zeroes its plane the same way).
+fn sconv_planes_blocked(
+    span: usize,
+    bank: &StretchedFilter,
+    ml0: usize,
+    mls: usize,
+    in_group: &[f32],
+    scratch: &mut [f32],
+    block: usize,
+) {
+    debug_assert_eq!(scratch.len(), mls * span);
+    scratch.fill(0.0);
+    let block = block.max(1);
+    let mut b0 = 0;
+    while b0 < span {
+        let b1 = (b0 + block).min(span);
+        for i in 0..mls {
+            let range = bank.csr.row_range(ml0 + i);
+            let vals = &bank.csr.values[range.clone()];
+            let offs = &bank.csr.colidx[range];
+            let scr = &mut scratch[i * span + b0..i * span + b1];
+            let mut j = 0;
+            while j + 4 <= vals.len() {
+                let (v0, v1, v2, v3) = (vals[j], vals[j + 1], vals[j + 2], vals[j + 3]);
+                let i0 = &in_group[offs[j] as usize + b0..offs[j] as usize + b1];
+                let i1 = &in_group[offs[j + 1] as usize + b0..offs[j + 1] as usize + b1];
+                let i2 = &in_group[offs[j + 2] as usize + b0..offs[j + 2] as usize + b1];
+                let i3 = &in_group[offs[j + 3] as usize + b0..offs[j + 3] as usize + b1];
+                for (idx, s) in scr.iter_mut().enumerate() {
+                    *s += v0 * i0[idx] + v1 * i1[idx] + v2 * i2[idx] + v3 * i3[idx];
+                }
+                j += 4;
+            }
+            while j < vals.len() {
+                let val = vals[j];
+                let src = &in_group[offs[j] as usize + b0..offs[j] as usize + b1];
+                for (s, i) in scr.iter_mut().zip(src) {
+                    *s += val * i;
+                }
+                j += 1;
+            }
+        }
+        b0 = b1;
+    }
+}
+
 /// Pack output channels into contiguous tiles of ~equal stored-nonzero
 /// count — the unit of work the pool schedules. Equal-*plane* splitting
 /// assigns every channel the same weight, so one dense channel among
 /// highly sparse ones turns into a straggler; weighting by nnz (the
 /// per-row populations of the stretched CSR banks) makes each tile cost
-/// ~the same FLOPs instead. Granularity is fixed by the weights alone
-/// (never by the pool size), so outputs are reproducible across
-/// `ESCOIN_THREADS` settings and any pool up to `TARGET_TILES` workers
-/// has spare tiles to steal.
+/// ~the same FLOPs instead. Granularity is fixed by the weights and
+/// the policy's `target_tiles` alone (never by the pool size), so
+/// outputs are reproducible across `ESCOIN_THREADS` settings and any
+/// pool up to `target_tiles` workers has spare tiles to steal; the
+/// target itself is adapted online from pool telemetry (see
+/// [`TilePolicy::adjusted`]).
 ///
 /// Returns `(channel ranges, per-tile nnz)`; ranges partition `0..M`
 /// and never split a channel. A channel whose nnz alone reaches the
@@ -159,19 +331,32 @@ fn sconv_plane(
 pub(crate) fn nnz_channel_tiles(
     shape: &ConvShape,
     banks: &[StretchedFilter],
+    target_tiles: usize,
 ) -> (Vec<Range<usize>>, Vec<usize>) {
-    const TARGET_TILES: usize = 48;
     assert_eq!(banks.len(), shape.groups);
     let mg = shape.m_per_group();
-    let nnz_of = |m: usize| banks[m / mg].csr.row_nnz(m % mg);
-    let total: usize = (0..shape.m).map(nnz_of).sum();
-    let target = (total / TARGET_TILES).max(1);
+    weighted_channel_tiles(shape.m, target_tiles, |m| {
+        banks[m / mg].csr.row_nnz(m % mg)
+    })
+}
+
+/// The greedy weighted channel packer behind [`nnz_channel_tiles`] (CSR
+/// nnz weights) and the ELL kernel's slot-weighted tiles: contiguous
+/// ranges partitioning `0..m_total`, each accumulating ~`total_weight /
+/// target_tiles`, heavy channels isolated into their own tile.
+fn weighted_channel_tiles(
+    m_total: usize,
+    target_tiles: usize,
+    weight_of: impl Fn(usize) -> usize,
+) -> (Vec<Range<usize>>, Vec<usize>) {
+    let total: usize = (0..m_total).map(&weight_of).sum();
+    let target = (total / target_tiles.max(1)).max(1);
     let mut tiles = Vec::new();
     let mut weights = Vec::new();
     let mut start = 0;
     let mut acc = 0;
-    for m in 0..shape.m {
-        let w = nnz_of(m);
+    for m in 0..m_total {
+        let w = weight_of(m);
         if start < m && w >= target {
             // Heavy channel: close the open tile so it sits alone.
             tiles.push(start..m);
@@ -180,7 +365,7 @@ pub(crate) fn nnz_channel_tiles(
             acc = 0;
         }
         acc += w;
-        if acc >= target || m + 1 == shape.m {
+        if acc >= target || m + 1 == m_total {
             tiles.push(start..m + 1);
             weights.push(acc);
             start = m + 1;
@@ -198,10 +383,11 @@ pub(crate) fn nnz_channel_tiles(
 /// (image, channel range); `tiles` must partition `0..M` (normally
 /// [`nnz_channel_tiles`]). Each pool worker owns a private
 /// `worker_scratch_floats` slice of `scratch` (so `scratch` must hold
-/// at least `pool.workers()` of them); output planes are disjoint per
-/// tile — no synchronisation, mirroring the paper's
-/// thread-block-per-output-channel partitioning. The strided path
-/// writes `+=` into `out`, so the caller must zero it first.
+/// at least `pool.workers()` of them, sized for the same `policy`);
+/// output planes are disjoint per tile — no synchronisation, mirroring
+/// the paper's thread-block-per-output-channel partitioning. The
+/// strided path writes `+=` into `out`, so the caller must zero it
+/// first.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn sconv_tiled(
     shape: &ConvShape,
@@ -209,6 +395,7 @@ pub(crate) fn sconv_tiled(
     batch: usize,
     banks: &[StretchedFilter],
     tiles: &[Range<usize>],
+    policy: &TilePolicy,
     pool: &WorkerPool,
     out: &mut [f32],
     scratch: &mut [f32],
@@ -218,7 +405,7 @@ pub(crate) fn sconv_tiled(
     let img_len = shape.c * shape.padded_h() * shape.padded_w();
     debug_assert_eq!(padded.len(), batch * img_len);
     debug_assert_eq!(out.len(), batch * shape.m * ef);
-    let per_worker = worker_scratch_floats(shape);
+    let per_worker = worker_scratch_floats(shape, policy);
     assert!(scratch.len() >= pool.workers() * per_worker);
     let n_ct = tiles.len();
     if n_ct == 0 || batch == 0 {
@@ -231,32 +418,41 @@ pub(crate) fn sconv_tiled(
         // SAFETY: worker ids are unique among concurrently running
         // tiles of this job, and `tiles` partitions 0..M — see
         // `sconv_tile`.
-        unsafe { sconv_tile(shape, padded, banks, tiles, tile, worker, &out_sh, &scr_sh) }
+        unsafe { sconv_tile(shape, padded, banks, tiles, policy, tile, worker, &out_sh, &scr_sh) }
     });
 }
 
 /// Execute one `(image, channel-tile)` unit of the direct sparse
 /// convolution: tile index `tile` decomposes as `(n, ct) = (tile /
 /// tiles.len(), tile % tiles.len())`; the worker's private scratch
-/// plane is carved from `scr_sh` by `worker` id, and the tile's output
-/// planes are written through `out_sh`. This is the one tile body
-/// shared by the blocking [`sconv_tiled`] path and the DAG executor's
-/// async conv jobs, so both produce **byte-identical** planes by
-/// construction.
+/// planes are carved from `scr_sh` by `worker` id, and the tile's
+/// output planes are written through `out_sh`. This is the one tile
+/// body shared by the blocking [`sconv_tiled`] path and the DAG
+/// executor's async conv jobs, so both produce **byte-identical**
+/// planes by construction.
+///
+/// Stride-1 channels run through the cache-blocked multi-channel
+/// microkernel ([`sconv_planes_blocked`]): the tile's channels are cut
+/// into register blocks of up to `policy.mr` channels (never crossing a
+/// group boundary — channels of different groups read different input),
+/// each accumulated jointly over `policy.block_floats`-sized row
+/// blocks. Strided layers keep the per-channel gather kernel
+/// ([`sconv_plane`]).
 ///
 /// # Safety
 ///
 /// `worker` must be unique among concurrently running tiles of the same
 /// job, `scr_sh` must hold at least `workers * worker_scratch_floats`
-/// floats, `tiles` must partition `0..M` (so `(n, m)` output planes are
-/// disjoint across tiles), and `out_sh` must span the full
-/// `batch * M * E * F` output.
+/// floats (sized for the same `policy`), `tiles` must partition `0..M`
+/// (so `(n, m)` output planes are disjoint across tiles), and `out_sh`
+/// must span the full `batch * M * E * F` output.
 #[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn sconv_tile(
     shape: &ConvShape,
     padded: &[f32],
     banks: &[StretchedFilter],
     tiles: &[Range<usize>],
+    policy: &TilePolicy,
     tile: usize,
     worker: usize,
     out_sh: &SharedSlice<'_>,
@@ -269,24 +465,59 @@ pub(crate) unsafe fn sconv_tile(
     let group_len = cg * hp * wp;
     let img_len = shape.c * hp * wp;
     let span = if shape.stride == 1 { (e - 1) * wp + f } else { 0 };
-    let per_worker = worker_scratch_floats(shape);
+    let per_worker = worker_scratch_floats(shape, policy);
     let n_ct = tiles.len();
     let (n, ct) = (tile / n_ct, tile % n_ct);
-    // SAFETY (both carves): per the function contract, worker ids are
-    // unique among running tiles and channel tiles partition 0..M.
+    // SAFETY (all carves below): per the function contract, worker ids
+    // are unique among running tiles and channel tiles partition 0..M.
     let scr = unsafe { scr_sh.slice_mut(worker * per_worker, per_worker) };
-    let scr = &mut scr[..span];
     let img = &padded[n * img_len..(n + 1) * img_len];
-    for m in tiles[ct].clone() {
-        let g = m / mg;
-        let in_group = &img[g * group_len..(g + 1) * group_len];
-        let plane = unsafe { out_sh.slice_mut((n * shape.m + m) * ef, ef) };
-        // Each tile zeroes its own planes (the strided path accumulates
-        // with `+=`), so the tile body is self-contained for the async
-        // path; on the blocking path this re-zeroes an already-zeroed
-        // plane — byte-identical either way.
-        plane.fill(0.0);
-        sconv_plane(shape, in_group, &banks[g], m % mg, plane, scr);
+
+    if shape.stride == 1 {
+        let mr = policy.mr.max(1);
+        let mut m = tiles[ct].start;
+        while m < tiles[ct].end {
+            let g = m / mg;
+            // Register block: up to `mr` channels, clipped to the tile
+            // and to the group boundary (a new group reads different
+            // input planes).
+            let mls = mr.min(tiles[ct].end - m).min((g + 1) * mg - m);
+            let in_group = &img[g * group_len..(g + 1) * group_len];
+            let scr_block = &mut scr[..mls * span];
+            sconv_planes_blocked(
+                span,
+                &banks[g],
+                m % mg,
+                mls,
+                in_group,
+                scr_block,
+                policy.block_floats,
+            );
+            // Extract each channel's E x F window from its scratch
+            // plane — the same copy the per-channel kernel performs, so
+            // every output byte is overwritten (no pre-zero needed).
+            for i in 0..mls {
+                let plane = unsafe { out_sh.slice_mut((n * shape.m + m + i) * ef, ef) };
+                let plane_scr = &scr_block[i * span..(i + 1) * span];
+                for h in 0..e {
+                    plane[h * f..(h + 1) * f].copy_from_slice(&plane_scr[h * wp..h * wp + f]);
+                }
+            }
+            m += mls;
+        }
+    } else {
+        for m in tiles[ct].clone() {
+            let g = m / mg;
+            let in_group = &img[g * group_len..(g + 1) * group_len];
+            let plane = unsafe { out_sh.slice_mut((n * shape.m + m) * ef, ef) };
+            // Each tile zeroes its own planes (the strided path
+            // accumulates with `+=`), so the tile body is
+            // self-contained for the async path; on the blocking path
+            // this re-zeroes an already-zeroed plane — byte-identical
+            // either way.
+            plane.fill(0.0);
+            sconv_plane(shape, in_group, &banks[g], m % mg, plane, &mut scr[..span]);
+        }
     }
 }
 
@@ -325,14 +556,16 @@ pub fn sconv_with_pool(
     assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
     let padded = input.pad_spatial(shape.pad);
     let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, shape.out_h(), shape.out_w()));
-    let mut scratch = vec![0.0f32; pool.workers() * worker_scratch_floats(shape)];
-    let (tiles, _) = nnz_channel_tiles(shape, banks);
+    let policy = TilePolicy::default();
+    let mut scratch = vec![0.0f32; pool.workers() * worker_scratch_floats(shape, &policy)];
+    let (tiles, _) = nnz_channel_tiles(shape, banks, policy.target_tiles);
     sconv_tiled(
         shape,
         padded.data(),
         d.n,
         banks,
         &tiles,
+        &policy,
         pool,
         out.data_mut(),
         &mut scratch,
@@ -340,51 +573,97 @@ pub fn sconv_with_pool(
     out
 }
 
-/// ELLPACK variant — the exact loop structure the Pallas kernel runs
-/// (static `k` slots per row, zero-padded). Used to validate the TPU
-/// adaptation and to measure the padding overhead natively.
+/// One ELLPACK output plane — the exact loop structure the Pallas
+/// kernel runs (static `k` slots per row, zero-padded). The per-plane
+/// unit [`sconv_ell_with_pool`]'s tiles execute; self-contained (zeroes
+/// the plane first), so results are byte-identical for any tiling.
+fn sconv_ell_plane(
+    shape: &ConvShape,
+    in_group: &[f32],
+    bank: &EllMatrix,
+    ml: usize,
+    plane: &mut [f32],
+) {
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let wp = shape.padded_w();
+    let stride = shape.stride;
+    plane.fill(0.0);
+    // Static trip count over k slots, exactly like the Pallas grid.
+    for slot in 0..bank.k {
+        let val = bank.values[ml * bank.k + slot];
+        let off = bank.colidx[ml * bank.k + slot] as usize;
+        for h in 0..e {
+            let src = off + h * stride * wp;
+            let out_row = &mut plane[h * f..(h + 1) * f];
+            if stride == 1 {
+                let input_row = &in_group[src..src + f];
+                for (o, i) in out_row.iter_mut().zip(input_row) {
+                    *o += val * i;
+                }
+            } else {
+                for (w, o) in out_row.iter_mut().enumerate() {
+                    *o += val * in_group[src + w * stride];
+                }
+            }
+        }
+    }
+}
+
+/// ELLPACK variant of the direct sparse convolution. Used to validate
+/// the TPU adaptation and to measure the padding overhead natively.
+/// Sequential wrapper over [`sconv_ell_with_pool`] (1-worker pool).
 pub fn sconv_ell(shape: &ConvShape, input: &Tensor4, banks: &[EllMatrix]) -> Tensor4 {
+    sconv_ell_with_pool(shape, input, banks, &WorkerPool::new(1))
+}
+
+/// ELLPACK direct sparse convolution through a caller-owned
+/// [`WorkerPool`] — the same `(image, channel tile)` decomposition the
+/// CSR kernel uses, so the ELL bench rows measure the format (slot
+/// padding), not a sequential-loop handicap. Channel tiles are
+/// slot-weighted (every row of a group carries exactly `k` slots, so
+/// slots are the ELL cost model the way nnz is the CSR one); each
+/// `(n, m)` plane is computed wholly inside one tile, making the output
+/// byte-identical across pool sizes and tilings.
+pub fn sconv_ell_with_pool(
+    shape: &ConvShape,
+    input: &Tensor4,
+    banks: &[EllMatrix],
+    pool: &WorkerPool,
+) -> Tensor4 {
     let d = input.dims();
     assert_eq!((d.c, d.h, d.w), (shape.c, shape.h, shape.w));
     assert_eq!(banks.len(), shape.groups);
     let padded = input.pad_spatial(shape.pad);
     let (e, f) = (shape.out_h(), shape.out_w());
     let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
-    let (wp, group_len) = (shape.padded_w(), cg * shape.padded_h() * shape.padded_w());
+    let group_len = cg * shape.padded_h() * shape.padded_w();
+    let img_len = shape.c * shape.padded_h() * shape.padded_w();
     let mut out = Tensor4::zeros(Dims4::new(d.n, shape.m, e, f));
     let ef = e * f;
-    let stride = shape.stride;
-
-    let out_data = out.data_mut();
-    for n in 0..d.n {
-        let img = padded.image(n);
-        for m in 0..shape.m {
-            let g = m / mg;
-            let bank = &banks[g];
-            let in_group = &img[g * group_len..(g + 1) * group_len];
-            let plane = &mut out_data[(n * shape.m + m) * ef..(n * shape.m + m + 1) * ef];
-            let ml = m % mg;
-            // Static trip count over k slots, exactly like the Pallas grid.
-            for slot in 0..bank.k {
-                let val = bank.values[ml * bank.k + slot];
-                let off = bank.colidx[ml * bank.k + slot] as usize;
-                for h in 0..e {
-                    let src = off + h * stride * wp;
-                    let out_row = &mut plane[h * f..(h + 1) * f];
-                    if stride == 1 {
-                        let input_row = &in_group[src..src + f];
-                        for (o, i) in out_row.iter_mut().zip(input_row) {
-                            *o += val * i;
-                        }
-                    } else {
-                        for (w, o) in out_row.iter_mut().enumerate() {
-                            *o += val * in_group[src + w * stride];
-                        }
-                    }
-                }
-            }
-        }
+    if d.n == 0 || shape.m == 0 {
+        return out;
     }
+
+    // Slot-weighted channel tiles (the greedy nnz packer with the ELL
+    // slot count as the per-channel weight).
+    let slots_of = |m: usize| banks[m / mg].k;
+    let (tiles, _) = weighted_channel_tiles(shape.m, TilePolicy::default().target_tiles, slots_of);
+    let n_ct = tiles.len();
+
+    let padded_data = padded.data();
+    let out_sh = SharedSlice::new(out.data_mut());
+    pool.run(d.n * n_ct, &|tile, _worker| {
+        let (n, ct) = (tile / n_ct, tile % n_ct);
+        let img = &padded_data[n * img_len..(n + 1) * img_len];
+        for m in tiles[ct].clone() {
+            let g = m / mg;
+            let in_group = &img[g * group_len..(g + 1) * group_len];
+            // SAFETY: channel tiles partition 0..M, so `(n, m)` output
+            // planes are disjoint across concurrently running tiles.
+            let plane = unsafe { out_sh.slice_mut((n * shape.m + m) * ef, ef) };
+            sconv_ell_plane(shape, in_group, &banks[g], m % mg, plane);
+        }
+    });
     out
 }
 
@@ -469,17 +748,143 @@ mod tests {
             let mut rng = Rng::new(500 + i as u64);
             let w = ConvWeights::synthetic(&shape, &mut rng);
             let banks = w.stretched_banks();
-            let (tiles, nnz) = nnz_channel_tiles(&shape, &banks);
-            assert_eq!(tiles.len(), nnz.len());
-            let mut next = 0;
-            for t in &tiles {
-                assert_eq!(t.start, next, "gap in tiles for {shape}");
-                assert!(t.end > t.start);
-                next = t.end;
+            for target in [1, 3, 48, 512] {
+                let (tiles, nnz) = nnz_channel_tiles(&shape, &banks, target);
+                assert_eq!(tiles.len(), nnz.len());
+                let mut next = 0;
+                for t in &tiles {
+                    assert_eq!(t.start, next, "gap in tiles for {shape} target {target}");
+                    assert!(t.end > t.start);
+                    next = t.end;
+                }
+                assert_eq!(next, shape.m, "tiles must cover 0..M for {shape}");
+                let total: usize = banks.iter().map(|b| b.csr.nnz()).sum();
+                assert_eq!(
+                    nnz.iter().sum::<usize>(),
+                    total,
+                    "nnz conserved for {shape} target {target}"
+                );
             }
-            assert_eq!(next, shape.m, "tiles must cover 0..M for {shape}");
-            let total: usize = banks.iter().map(|b| b.csr.nnz()).sum();
-            assert_eq!(nnz.iter().sum::<usize>(), total, "nnz conserved for {shape}");
+        }
+    }
+
+    /// The acceptance property at its root: the blocked multi-channel
+    /// microkernel must reproduce the per-channel [`sconv_plane`]
+    /// oracle **byte for byte** on every stride-1 shape of the grid,
+    /// across register-block widths and row-block lengths (including
+    /// degenerate ones that straddle row boundaries).
+    #[test]
+    fn blocked_microkernel_is_byte_identical_to_sconv_plane() {
+        let policies = [
+            (1usize, usize::MAX),
+            (1, 7),
+            (2, 64),
+            (3, 33),
+            (4, 1024),
+            (8, 5),
+        ];
+        for (i, shape) in shapes_under_test().into_iter().enumerate() {
+            if shape.stride != 1 {
+                continue; // strided layers keep the per-channel kernel
+            }
+            let (x, w) = random_case(&shape, 1, 4400 + i as u64);
+            let banks = w.stretched_banks();
+            let padded = x.pad_spatial(shape.pad);
+            let (e, f) = (shape.out_h(), shape.out_w());
+            let (ef, wp) = (e * f, shape.padded_w());
+            let span = (e - 1) * wp + f;
+            let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
+            let group_len = cg * shape.padded_h() * wp;
+            let img = padded.image(0);
+
+            // Oracle: the per-channel kernel, one plane at a time.
+            let mut want = vec![0.0f32; shape.m * ef];
+            let mut scr = vec![0.0f32; span];
+            for m in 0..shape.m {
+                let g = m / mg;
+                let in_group = &img[g * group_len..(g + 1) * group_len];
+                sconv_plane(
+                    &shape,
+                    in_group,
+                    &banks[g],
+                    m % mg,
+                    &mut want[m * ef..(m + 1) * ef],
+                    &mut scr,
+                );
+            }
+
+            for (mr, block) in policies {
+                let mut got = vec![f32::NAN; shape.m * ef];
+                let mut scratch = vec![0.0f32; mr * span];
+                let mut m = 0;
+                while m < shape.m {
+                    let g = m / mg;
+                    let mls = mr.min(shape.m - m).min((g + 1) * mg - m);
+                    let in_group = &img[g * group_len..(g + 1) * group_len];
+                    let scr_block = &mut scratch[..mls * span];
+                    sconv_planes_blocked(span, &banks[g], m % mg, mls, in_group, scr_block, block);
+                    for i in 0..mls {
+                        let plane = &mut got[(m + i) * ef..(m + i + 1) * ef];
+                        let plane_scr = &scr_block[i * span..(i + 1) * span];
+                        for h in 0..e {
+                            plane[h * f..(h + 1) * f]
+                                .copy_from_slice(&plane_scr[h * wp..h * wp + f]);
+                        }
+                    }
+                    m += mls;
+                }
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(wb, gb, "{shape} mr{mr} block{block}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_policy_adjusts_toward_the_imbalance_signal() {
+        let p = TilePolicy::default();
+        // High imbalance: refine (more tiles), geometry untouched.
+        let finer = p.adjusted(1.8, 0.5).expect("must refine");
+        assert_eq!(finer.target_tiles, p.target_tiles * 2);
+        assert_eq!((finer.mr, finer.block_floats), (p.mr, p.block_floats));
+        // Balanced with rare steals: coarsen.
+        let coarser = p.adjusted(1.0, 0.0).expect("must coarsen");
+        assert_eq!(coarser.target_tiles, p.target_tiles / 2);
+        // In the comfort band: no change.
+        assert!(p.adjusted(1.15, 0.3).is_none());
+        // Balanced but steal-heavy: the queue is still rebalancing —
+        // keep the granularity.
+        assert!(p.adjusted(1.0, 0.4).is_none());
+        // The loop is clamped at both ends.
+        let mut at_max = p;
+        while let Some(n) = at_max.adjusted(2.0, 0.5) {
+            at_max = n;
+        }
+        assert_eq!(at_max.target_tiles, TilePolicy::MAX_TILES);
+        let mut at_min = p;
+        while let Some(n) = at_min.adjusted(1.0, 0.0) {
+            at_min = n;
+        }
+        assert_eq!(at_min.target_tiles, TilePolicy::MIN_TILES);
+    }
+
+    #[test]
+    fn sconv_ell_pool_is_byte_identical_to_sequential() {
+        for (i, shape) in shapes_under_test().into_iter().enumerate() {
+            let (x, w) = random_case(&shape, 2, 4600 + i as u64);
+            for align in [1, 8] {
+                let banks = w.ell_banks(align);
+                let reference = sconv_ell(&shape, &x, &banks);
+                for threads in [2, 4, 8] {
+                    let pool = WorkerPool::new(threads);
+                    let got = sconv_ell_with_pool(&shape, &x, &banks, &pool);
+                    assert_eq!(
+                        reference.data(),
+                        got.data(),
+                        "{shape} align{align} t{threads}"
+                    );
+                }
+            }
         }
     }
 

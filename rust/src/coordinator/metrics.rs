@@ -88,6 +88,9 @@ impl LatencyHistogram {
 /// the wall time spent rebuilding, and how many layer plans were
 /// actually recompiled (a single-method router flip should rebuild
 /// exactly one — or zero, when the `(layer, method)` pair was cached).
+/// The `retiles` / `tile_target` / `pool_job_imbalance_milli` gauges
+/// track the adaptive-tiling feedback loop: measured per-job imbalance
+/// folded back into the DirectSparse `TilePolicy` at replan time.
 #[derive(Debug, Default)]
 pub struct Metrics {
     /// Requests accepted by [`crate::coordinator::ServerHandle::submit`].
@@ -108,6 +111,16 @@ pub struct Metrics {
     pub pool_steals: AtomicU64,
     /// `WorkerPool` imbalance ratio × 1000 (1000 = perfectly balanced).
     pub pool_imbalance_milli: AtomicU64,
+    /// Tile-weighted mean per-job imbalance × 1000 over the last
+    /// adaptive-tiling interval (the signal `TilePolicy::adjusted`
+    /// consumed).
+    pub pool_job_imbalance_milli: AtomicU64,
+    /// Times the adaptive-tiling loop changed tile policies (each
+    /// event may retile several layers).
+    pub retiles: AtomicU64,
+    /// Current DirectSparse tile target (max over layers) after the
+    /// last retile; 0 until adaptive tiling first adjusts.
+    pub tile_target: AtomicU64,
     /// Times the executor swapped in a recompiled plan.
     pub replans: AtomicU64,
     /// Cumulative nanoseconds spent rebuilding plans after router flips.
@@ -142,6 +155,14 @@ pub struct MetricsSnapshot {
     pub pool_steals: u64,
     /// Max-over-mean per-worker tile share; 1.0 is perfectly balanced.
     pub pool_imbalance: f64,
+    /// Tile-weighted mean per-job imbalance over the last
+    /// adaptive-tiling interval.
+    pub pool_job_imbalance: f64,
+    /// Adaptive-tiling events (tile policies changed then replanned).
+    pub retiles: u64,
+    /// Current DirectSparse tile target after the last retile (0 until
+    /// adaptive tiling first adjusts).
+    pub tile_target: u64,
     /// Times the executor swapped in a recompiled plan.
     pub replans: u64,
     /// Total wall time spent rebuilding plans after router flips.
@@ -187,6 +208,10 @@ impl Metrics {
             pool_tiles: self.pool_tiles.load(Ordering::Relaxed),
             pool_steals: self.pool_steals.load(Ordering::Relaxed),
             pool_imbalance: self.pool_imbalance_milli.load(Ordering::Relaxed) as f64 / 1000.0,
+            pool_job_imbalance: self.pool_job_imbalance_milli.load(Ordering::Relaxed) as f64
+                / 1000.0,
+            retiles: self.retiles.load(Ordering::Relaxed),
+            tile_target: self.tile_target.load(Ordering::Relaxed),
             replans: self.replans.load(Ordering::Relaxed),
             replan_build_time: Duration::from_nanos(self.replan_build_ns.load(Ordering::Relaxed)),
             replan_layers_rebuilt: self.replan_layers_rebuilt.load(Ordering::Relaxed),
@@ -250,6 +275,18 @@ mod tests {
         assert_eq!(s.pool_tiles, 100);
         assert_eq!(s.pool_steals, 7);
         assert!((s.pool_imbalance - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn retile_gauges_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.retiles.store(2, Ordering::Relaxed);
+        m.tile_target.store(96, Ordering::Relaxed);
+        m.pool_job_imbalance_milli.store(1430, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.retiles, 2);
+        assert_eq!(s.tile_target, 96);
+        assert!((s.pool_job_imbalance - 1.43).abs() < 1e-9);
     }
 
     #[test]

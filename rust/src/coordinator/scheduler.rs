@@ -14,8 +14,8 @@
 use super::router::{Method, Router};
 use crate::config::{ConvShape, Network};
 use crate::conv::{ConvWeights, LayerPlan, NetworkPlan, PlanCache, WorkspaceArena};
-use crate::util::WorkerPool;
-use std::sync::Arc;
+use crate::util::{PoolStats, WorkerPool};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Timing of one executed layer.
@@ -89,6 +89,9 @@ pub struct NetworkSchedule {
     pub network: Network,
     cache: PlanCache,
     pool: Arc<WorkerPool>,
+    /// Pool-telemetry anchor of the adaptive-tiling interval (snapshot
+    /// taken at the last [`NetworkSchedule::adapt_tiling`] call).
+    tile_stats: Mutex<PoolStats>,
 }
 
 impl NetworkSchedule {
@@ -96,10 +99,12 @@ impl NetworkSchedule {
     /// all runs share `pool`.
     pub fn build(network: Network, seed: u64, pool: Arc<WorkerPool>) -> Self {
         let cache = PlanCache::build(&network, seed);
+        let tile_stats = Mutex::new(pool.stats());
         Self {
             network,
             cache,
             pool,
+            tile_stats,
         }
     }
 
@@ -213,6 +218,56 @@ impl NetworkSchedule {
             }
         }
         report
+    }
+
+    /// Router-driven **asynchronous DAG** run: methods come from
+    /// [`Router::choose`], branches overlap as dependency-chained pool
+    /// jobs, and the router is fed the *approximate* per-layer
+    /// latencies rebuilt from job-completion timestamps
+    /// (`conv::NetworkPlan::run_async_timed`) — so the EWMA refines on
+    /// graph networks (GoogLeNet, miniception) that the blocking
+    /// [`NetworkSchedule::run_routed`] would serialise. Networks
+    /// without an explicit layer graph fall back to the sequential
+    /// walk, observing exact per-layer totals. Returns the logits and
+    /// whole-network wall time.
+    pub fn run_async_routed(&self, batch: usize, router: &Router) -> (Vec<f32>, Duration) {
+        let plan = self.network_plan(batch, |name, shape| router.choose(name, shape));
+        let mut arena = WorkspaceArena::for_plan(&plan, &self.pool);
+        let mut observe = |lr: crate::conv::PlanLayerRun| {
+            if let Some(m) = lr.method {
+                router.observe(lr.layer, m, lr.total);
+            }
+        };
+        let t0 = std::time::Instant::now();
+        let logits = if plan.supports_async() {
+            plan.run_async_timed(None, &self.pool, &mut arena, &mut observe)
+                .to_vec()
+        } else {
+            plan.run_observed(&self.pool, &mut arena, &mut observe)
+                .to_vec()
+        };
+        (logits, t0.elapsed())
+    }
+
+    /// One step of the telemetry feedback loop (the ROADMAP's
+    /// steal-rate-driven tile sizing): measure the pool's mean per-job
+    /// imbalance and steal rate since the last call and fold them into
+    /// the cached DirectSparse tile policies
+    /// (`conv::PlanCache::adapt_tile_policies`) — subsequent
+    /// [`NetworkSchedule::run`]s compile against the refined
+    /// granularity. Returns the number of layers retiled (0 when the
+    /// interval ran no distributed jobs or the granularity is already
+    /// right).
+    pub fn adapt_tiling(&self) -> usize {
+        let now = self.pool.stats();
+        let mut anchor = self.tile_stats.lock().unwrap();
+        let signal = now.interval_tiling_signal(&anchor);
+        *anchor = now;
+        drop(anchor);
+        match signal {
+            Some((imbalance, steal_rate)) => self.cache.adapt_tile_policies(imbalance, steal_rate),
+            None => 0,
+        }
     }
 }
 
@@ -333,6 +388,53 @@ mod tests {
         let want = plan.run(sched.pool(), &mut arena).to_vec();
         assert_eq!(logits, want, "DAG walk diverged from sequential walk");
         assert!(wall > Duration::ZERO);
+    }
+
+    #[test]
+    fn routed_async_run_refines_the_router_on_graph_networks() {
+        use crate::config::miniception;
+        // The ROADMAP gap this closes: DAG serving used to leave the
+        // router's EWMA frozen. The timed async walk must deposit a
+        // latency estimate for every sparse conv of the inception graph.
+        let net = miniception();
+        let sparse: Vec<String> = net
+            .sparse_conv_layers()
+            .iter()
+            .map(|(n, _)| n.to_string())
+            .collect();
+        assert!(!sparse.is_empty());
+        let sched = NetworkSchedule::build(net, 9, Arc::new(WorkerPool::new(3)));
+        let router = Router::new(RouterConfig {
+            explore_every: 0,
+            ..Default::default()
+        });
+        let (logits, wall) = sched.run_async_routed(2, &router);
+        assert!(wall > Duration::ZERO);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        for layer in &sparse {
+            assert!(
+                router.estimate(layer, Method::DirectSparse).is_some(),
+                "{layer} EWMA must refine from the async walk"
+            );
+        }
+        // The observations are approximations of real job spans, so
+        // they must be positive for layers that did real work.
+        let est = router
+            .estimate(&sparse[0], Method::DirectSparse)
+            .unwrap();
+        assert!(est > Duration::ZERO);
+    }
+
+    #[test]
+    fn adapt_tiling_consumes_the_interval_once() {
+        let sched = NetworkSchedule::build(tiny_net(), 3, Arc::new(WorkerPool::new(4)));
+        // No distributed jobs yet: nothing to adapt.
+        assert_eq!(sched.adapt_tiling(), 0);
+        sched.run(2, |_, _| Method::DirectSparse);
+        // Whatever the measured balance, the call must not panic and a
+        // second immediate call sees an empty interval again.
+        let _ = sched.adapt_tiling();
+        assert_eq!(sched.adapt_tiling(), 0, "interval anchor must advance");
     }
 
     #[test]

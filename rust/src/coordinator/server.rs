@@ -45,8 +45,21 @@
 //! dependency-chained jobs on the shared pool, so the four branches of
 //! an inception module overlap *within* a batch while the two-slot
 //! pipeline still overlaps batches — both forms of slack fill the same
-//! `WorkerPool`. The async walk reports no per-layer latencies, so the
-//! router serves such networks on its static heuristic.
+//! `WorkerPool`. The async walk cannot lap kernels, but it rebuilds
+//! **approximate per-layer latencies** from the pool's job-completion
+//! timestamps (`NetworkPlan::step_async_timed`) and feeds them to the
+//! router, so the EWMA refines on graph networks too.
+//!
+//! ## Adaptive tiling
+//!
+//! At every replan checkpoint the executor also closes the paper's
+//! locality/balance feedback loop ([`ServerConfig::adaptive_tiling`]):
+//! the pool's mean per-job imbalance and steal rate over the interval
+//! are folded into each layer's `conv::TilePolicy`
+//! (`PlanCache::adapt_tile_policies`) — finer channel tiles when jobs
+//! finish unbalanced, coarser when the queue barely rebalances — and
+//! retiled layers rebuild through the shared cache exactly like a
+//! method flip. Tile geometry never changes logits.
 
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
@@ -132,6 +145,15 @@ pub struct ServerConfig {
     /// no two concurrently in-flight batches ever mix methods — at the
     /// cost of one pipeline bubble per replan.
     pub strict_replan: bool,
+    /// Feed measured pool telemetry back into the DirectSparse tile
+    /// granularity at every replan checkpoint (on by default): the mean
+    /// per-job imbalance and steal rate over the interval adjust each
+    /// layer's `conv::TilePolicy` (finer tiles when jobs finish
+    /// unbalanced, coarser when steals are rare), and changed layers
+    /// rebuild through the plan cache exactly like a method flip.
+    /// Geometry never changes logits — turn this off only to pin the
+    /// tile layout (benchmarks comparing fixed configurations do).
+    pub adaptive_tiling: bool,
 }
 
 impl Default for ServerConfig {
@@ -145,6 +167,7 @@ impl Default for ServerConfig {
             replan_every: 64,
             pipeline_depth: 2,
             strict_replan: false,
+            adaptive_tiling: true,
         }
     }
 }
@@ -306,27 +329,24 @@ struct Slot {
 
 /// Advance a slot one step: one layer of the sequential walk (feeding
 /// per-layer totals to the router), or one retired DAG step (later
-/// steps keep executing on the pool meanwhile — the async walk reports
-/// no per-layer latencies, so DAG serving leaves the router's EWMA at
-/// its static heuristic).
+/// steps keep executing on the pool meanwhile). The DAG walk feeds the
+/// router **approximate** per-layer latencies rebuilt from job
+/// completion timestamps (`NetworkPlan::step_async_timed`), so the
+/// EWMA refines on graph networks too instead of staying frozen at the
+/// static heuristic.
 fn advance_slot(slot: &mut Slot, pool: &WorkerPool, router: &Router) {
     let plan = slot.plan.clone();
+    let mut observe = |lr: crate::conv::PlanLayerRun| {
+        if let Some(m) = lr.method {
+            router.observe(lr.layer, m, lr.total);
+        }
+    };
     match &mut slot.cursor {
         SlotCursor::Seq(cur) => {
-            plan.step(
-                cur,
-                pool,
-                &mut slot.arena,
-                Some(&mut |lr| {
-                    if let Some(m) = lr.method {
-                        router.observe(lr.layer, m, lr.total);
-                    }
-                }),
-                false,
-            );
+            plan.step(cur, pool, &mut slot.arena, Some(&mut observe), false);
         }
         SlotCursor::Dag(cur) => {
-            plan.step_async(cur);
+            plan.step_async_timed(cur, Some(&mut observe));
         }
     }
 }
@@ -436,6 +456,9 @@ fn executor_loop(
     let mut open = true;
     let mut nbatches = 0u64;
     let mut replans = 0u64;
+    // Telemetry anchor for the adaptive-tiling interval: per-job
+    // imbalance and steal rate are measured between replan checkpoints.
+    let mut tile_stats = pool.stats();
 
     // Stage a formed batch into a free slot: copy the images into the
     // slot's staging buffer (padded tail slots stay zero) and position
@@ -515,7 +538,37 @@ fn executor_loop(
             nbatches += 1;
             if cfg.replan_every > 0 && nbatches % cfg.replan_every == 0 {
                 let want = desired_methods(&net, &router);
-                if want != plan.conv_methods() {
+                // Adaptive tiling: fold the interval's measured per-job
+                // imbalance and steal rate back into the tile policies
+                // of the layers the assignment routes to DirectSparse —
+                // a retile of a plan nothing executes must not force a
+                // replan. Changed layers' cached plans are invalidated,
+                // so a retile rides the same incremental rebuild below
+                // that a method flip does.
+                let mut retiled = 0usize;
+                if cfg.adaptive_tiling {
+                    let now = pool.stats();
+                    if let Some((imbalance, steal_rate)) = now.interval_tiling_signal(&tile_stats)
+                    {
+                        metrics
+                            .pool_job_imbalance_milli
+                            .store((imbalance * 1000.0) as u64, Ordering::Relaxed);
+                        let sparse_live: Vec<&str> = want
+                            .iter()
+                            .filter(|(_, m)| *m == Method::DirectSparse)
+                            .map(|(n, _)| n.as_str())
+                            .collect();
+                        retiled = cache.adapt_tile_policies_for(&sparse_live, imbalance, steal_rate);
+                        if retiled > 0 {
+                            metrics.retiles.fetch_add(1, Ordering::Relaxed);
+                            metrics
+                                .tile_target
+                                .store(cache.current_tile_target() as u64, Ordering::Relaxed);
+                        }
+                    }
+                    tile_stats = now;
+                }
+                if retiled > 0 || want != plan.conv_methods() {
                     if cfg.strict_replan {
                         // Run the pipeline dry on the old plan before
                         // the new one exists: no two concurrently

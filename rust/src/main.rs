@@ -86,12 +86,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 }
                 let ps = pool.stats();
                 println!(
-                    "pool: {} workers, {} jobs, {} tiles ({} stolen), imbalance {:.2}",
+                    "pool: {} workers, {} jobs, {} tiles ({} stolen), imbalance {:.2}, \
+                     per-job imbalance {:.2} / occupancy {:.2}",
                     ps.workers,
                     ps.jobs,
                     ps.total_tiles(),
                     ps.total_steals(),
-                    ps.imbalance()
+                    ps.imbalance(),
+                    ps.mean_job_imbalance(),
+                    ps.mean_job_occupancy()
                 );
             }
         }
@@ -206,6 +209,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             println!(
                 "pool: {} workers, {} tiles ({} stolen), imbalance {:.2}",
                 s.pool_workers, s.pool_tiles, s.pool_steals, s.pool_imbalance
+            );
+            println!(
+                "adaptive tiling: {} retiles (tile target {}, last interval per-job imbalance {:.2})",
+                s.retiles,
+                if s.tile_target == 0 {
+                    "default".to_string()
+                } else {
+                    s.tile_target.to_string()
+                },
+                s.pool_job_imbalance
             );
         }
         Some("simulate") | Some("figures") => {

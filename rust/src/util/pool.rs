@@ -46,6 +46,17 @@
 //! load-balanced partitioning the paper's GPU kernel gets from its
 //! block scheduler — skewed per-channel sparsity no longer idles lanes.
 //!
+//! Every queued job additionally records **per-job telemetry** at its
+//! completion handshake: how unevenly its tiles landed on workers
+//! ([`PoolStats::mean_job_imbalance`]), what fraction of eligible
+//! workers participated ([`PoolStats::mean_job_occupancy`]), and a
+//! completion timestamp ([`JobHandle::completed_at`]). The interval
+//! forms ([`PoolStats::interval_job_imbalance`] /
+//! [`PoolStats::interval_steal_rate`]) are the feedback signal the
+//! adaptive tiling loop (`conv::TilePolicy::adjusted`) consumes, and
+//! the timestamps are how the DAG executor rebuilds approximate
+//! per-layer latencies from overlapping jobs.
+//!
 //! Determinism: each output element's arithmetic must not depend on how
 //! tiles are cut or scheduled. The in-tree kernels guarantee this in
 //! one of two ways — the decomposition is fixed by the plan alone
@@ -73,6 +84,7 @@ use std::marker::PhantomData;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// A tile task: `f(tile_index, worker_id)`. `worker_id` is stable for
 /// the duration of one closure call and unique among concurrently
@@ -115,13 +127,21 @@ struct Job {
     /// when this reaches `num_tiles`, regardless of how many workers
     /// ever woke for it.
     completed: AtomicUsize,
+    /// Tiles executed per worker id, for the per-job imbalance /
+    /// occupancy telemetry folded into the pool at completion. Each
+    /// worker's increments are sequenced before its `completed`
+    /// `AcqRel` bump, so the finisher (which observes the final
+    /// `completed` value) reads every participant's count.
+    worker_tiles: Vec<AtomicU64>,
     /// First panic payload raised by a tile, re-thrown at the waiter.
     panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
     /// Dependencies: tiles of this job may not run until every listed
     /// job completes.
     deps: Vec<Arc<Job>>,
-    /// Completion flag + condvar the ticket waiter blocks on.
-    done: Mutex<bool>,
+    /// Completion timestamp (`None` while running) + condvar the ticket
+    /// waiter blocks on. The timestamp is what the DAG executor's
+    /// approximate per-layer latency reconstruction reads.
+    done: Mutex<Option<Instant>>,
     done_cv: Condvar,
 }
 
@@ -137,12 +157,21 @@ impl Job {
             && self.deps.iter().all(|d| d.is_complete())
     }
 
-    /// Block until the completion handshake fires.
-    fn wait_done(&self) {
+    /// Block until the completion handshake fires; returns the
+    /// completion timestamp.
+    fn wait_done(&self) -> Instant {
         let mut done = self.done.lock().unwrap();
-        while !*done {
+        loop {
+            if let Some(at) = *done {
+                return at;
+            }
             done = self.done_cv.wait(done).unwrap();
         }
+    }
+
+    /// The completion timestamp, if the handshake has fired.
+    fn completed_at(&self) -> Option<Instant> {
+        *self.done.lock().unwrap()
     }
 }
 
@@ -173,6 +202,33 @@ struct Shared {
     /// reflects only genuinely distributed jobs.
     inline_tiles: AtomicU64,
     jobs: AtomicU64,
+    /// Per-job completion telemetry, folded in at each handshake. One
+    /// mutex (uncontended: locked once per job completion and per
+    /// `stats` snapshot) keeps the numerator/denominator pairs
+    /// consistent — separate atomics would let a snapshot taken
+    /// mid-fold divide an imbalance sum missing a job by a tile count
+    /// that includes it.
+    job_telemetry: Mutex<JobTelemetry>,
+}
+
+/// Cumulative per-job completion telemetry (see [`Shared::finish`] for
+/// the eligible-lane and tile-weighting rules).
+#[derive(Clone, Copy, Default)]
+struct JobTelemetry {
+    /// Queued (distributed) jobs whose completion handshake has fired.
+    jobs: u64,
+    /// Sum of `num_tiles` over completed jobs — the denominator of the
+    /// tile-weighted means.
+    tiles: u64,
+    /// Sum over completed jobs of that job's max-over-mean per-lane
+    /// tile share, in milli-units (1000 = perfectly balanced),
+    /// **weighted by the job's tile count** so a large kernel job
+    /// dominates the signal over the many tiny per-image jobs (relu,
+    /// pad, concat) the DAG executor also queues.
+    imbalance_milli: u64,
+    /// Sum over completed jobs of participants / eligible lanes,
+    /// milli-units, tile-weighted like `imbalance_milli`.
+    occupancy_milli: u64,
 }
 
 impl Shared {
@@ -202,6 +258,7 @@ impl Shared {
             if t / job.share != worker {
                 steals += 1;
             }
+            job.worker_tiles[worker].fetch_add(1, Ordering::Relaxed);
             // A panicked tile still counts as completed — the waiter
             // re-raises the payload, but must not hang on the handshake.
             if job.completed.fetch_add(1, Ordering::AcqRel) + 1 == job.num_tiles {
@@ -224,12 +281,54 @@ impl Shared {
         }
     }
 
-    /// Completion handshake: wake the ticket waiter, then wake workers
-    /// in case a queued job was blocked on this one as a dependency.
+    /// Completion handshake: stamp the completion time, fold the job's
+    /// per-worker tile split into the cumulative per-job telemetry,
+    /// wake the ticket waiter, then wake workers in case a queued job
+    /// was blocked on this one as a dependency.
     fn finish(&self, job: &Job) {
+        // Per-job telemetry: how evenly the dynamic queue spread this
+        // job's tiles over the lanes eligible to claim them. Every
+        // participant's `worker_tiles` increment happened-before the
+        // final `completed` AcqRel bump the finisher observed.
+        let mut max = 0u64;
+        let mut active = 0usize;
+        for c in &job.worker_tiles {
+            let t = c.load(Ordering::Relaxed);
+            max = max.max(t);
+            active += (t > 0) as usize;
+        }
+        // Spawned workers are dedicated lanes — one sitting idle while
+        // others ran multiple tiles IS the coarse-tiling signal. The
+        // submitting lane (worker 0) is not: it only drains while a
+        // waiter blocks, and is legitimately absent when the caller is
+        // off staging the next batch (the serving pipeline's steady
+        // state). Counting it unconditionally would bake in a
+        // workers/(workers-1) imbalance floor no tile granularity can
+        // remove, permanently saturating the refine signal — so it is
+        // eligible only when it actually claimed a tile.
+        let lanes = if job.worker_tiles[0].load(Ordering::Relaxed) > 0 {
+            self.workers
+        } else {
+            self.workers.saturating_sub(1).max(1)
+        };
+        let eligible = lanes.min(job.num_tiles).max(1);
+        let mean = job.num_tiles as f64 / eligible as f64;
+        let imbalance = max as f64 / mean;
+        let occupancy = active as f64 / eligible as f64;
+        // Tile-weighted sums: a 96-tile conv job must outweigh the
+        // 2-tile relu/pad jobs that surround it, or the adaptive-tiling
+        // signal would be dominated by jobs tiling cannot affect.
+        let weight = job.num_tiles as u64;
+        {
+            let mut t = self.job_telemetry.lock().unwrap();
+            t.jobs += 1;
+            t.tiles += weight;
+            t.imbalance_milli += (imbalance * 1000.0) as u64 * weight;
+            t.occupancy_milli += (occupancy * 1000.0) as u64 * weight;
+        }
         {
             let mut done = job.done.lock().unwrap();
-            *done = true;
+            *done = Some(Instant::now());
         }
         job.done_cv.notify_all();
         // Take the queue lock before notifying so a worker between its
@@ -322,6 +421,22 @@ pub struct PoolStats {
     /// dynamic queue rebalancing work that equal splitting would have
     /// left unbalanced.
     pub steals: Vec<u64>,
+    /// Queued (distributed) jobs whose completion handshake has fired.
+    /// Inline jobs (1-worker pool or single-tile `run`) are excluded,
+    /// like [`PoolStats::inline_tiles`].
+    pub jobs_completed: u64,
+    /// Sum of `num_tiles` over completed jobs — the weight denominator
+    /// of the per-job telemetry means.
+    pub job_tiles_completed: u64,
+    /// Sum over completed jobs of the per-job max-over-mean worker tile
+    /// share, milli-units, **weighted by each job's tile count** —
+    /// divide by [`PoolStats::job_tiles_completed`] for the mean (see
+    /// [`PoolStats::mean_job_imbalance`]).
+    pub job_imbalance_milli_sum: u64,
+    /// Sum over completed jobs of participants / eligible workers,
+    /// milli-units, tile-weighted like
+    /// [`PoolStats::job_imbalance_milli_sum`].
+    pub job_occupancy_milli_sum: u64,
 }
 
 impl PoolStats {
@@ -346,6 +461,81 @@ impl PoolStats {
         let mean = distributed as f64 / self.workers as f64;
         let max = *self.tiles.iter().max().unwrap() as f64;
         max / mean
+    }
+
+    /// Tile-weighted mean **per-job** imbalance (max worker tile count
+    /// over the mean per-eligible-lane share, per job, averaged over
+    /// completed jobs with each job weighted by its tile count) — 1.0
+    /// is perfectly balanced. Weighting by tiles keeps the many tiny
+    /// per-image jobs the DAG executor queues (relu/pad/concat, a few
+    /// tiles each) from drowning out the large kernel jobs whose
+    /// balance tiling actually controls; the submitting lane counts as
+    /// eligible only when it claimed tiles (it may legitimately be off
+    /// staging the next batch). Unlike [`PoolStats::imbalance`] the
+    /// per-job form cannot be washed out by many balanced jobs hiding
+    /// one skewed one.
+    pub fn mean_job_imbalance(&self) -> f64 {
+        if self.job_tiles_completed == 0 {
+            return 1.0;
+        }
+        self.job_imbalance_milli_sum as f64 / self.job_tiles_completed as f64 / 1000.0
+    }
+
+    /// Tile-weighted mean per-job occupancy (participating workers over
+    /// eligible workers) — 1.0 means every worker that could claim a
+    /// tile did.
+    pub fn mean_job_occupancy(&self) -> f64 {
+        if self.job_tiles_completed == 0 {
+            return 1.0;
+        }
+        self.job_occupancy_milli_sum as f64 / self.job_tiles_completed as f64 / 1000.0
+    }
+
+    /// Tile-weighted mean per-job imbalance over the jobs completed
+    /// since `earlier` (an older snapshot of the same pool). `None`
+    /// when no job completed in the interval — the adaptive-tiling
+    /// signal.
+    pub fn interval_job_imbalance(&self, earlier: &PoolStats) -> Option<f64> {
+        let tiles = self
+            .job_tiles_completed
+            .checked_sub(earlier.job_tiles_completed)?;
+        if tiles == 0 {
+            return None;
+        }
+        let sum = self
+            .job_imbalance_milli_sum
+            .checked_sub(earlier.job_imbalance_milli_sum)?;
+        Some(sum as f64 / tiles as f64 / 1000.0)
+    }
+
+    /// The adaptive-tiling interval signal in one call: the
+    /// tile-weighted mean per-job imbalance plus the steal rate over
+    /// the jobs completed since `earlier`; `None` when no job
+    /// completed. When the imbalance is measurable but the per-worker
+    /// steal counters have not flushed yet (they land a beat after the
+    /// completion handshake), the steal rate reports as **1.0** —
+    /// unknown must never read as "queue quiescent" and trigger a
+    /// coarsen (refining never consults the rate). Every consumer of
+    /// `TilePolicy::adjusted` should go through this helper rather
+    /// than pairing the two interval calls by hand.
+    pub fn interval_tiling_signal(&self, earlier: &PoolStats) -> Option<(f64, f64)> {
+        let imbalance = self.interval_job_imbalance(earlier)?;
+        Some((imbalance, self.interval_steal_rate(earlier).unwrap_or(1.0)))
+    }
+
+    /// Steals per distributed tile over the interval since `earlier`.
+    /// `None` when no distributed tile ran in the interval.
+    pub fn interval_steal_rate(&self, earlier: &PoolStats) -> Option<f64> {
+        let tiles = self
+            .tiles
+            .iter()
+            .sum::<u64>()
+            .checked_sub(earlier.tiles.iter().sum::<u64>())?;
+        if tiles == 0 {
+            return None;
+        }
+        let steals = self.total_steals().checked_sub(earlier.total_steals())?;
+        Some(steals as f64 / tiles as f64)
     }
 }
 
@@ -394,6 +584,12 @@ impl JobTicket<'_> {
     /// Whether every tile of the job has finished executing.
     pub fn is_complete(&self) -> bool {
         self.job.is_complete()
+    }
+
+    /// When the job's completion handshake fired (`None` while tiles
+    /// are still running).
+    pub fn completed_at(&self) -> Option<Instant> {
+        self.job.completed_at()
     }
 
     /// Block until the job completes, helping to execute unclaimed
@@ -469,15 +665,33 @@ impl JobHandle {
         self.job.is_complete()
     }
 
+    /// When the job's completion handshake fired (`None` while tiles
+    /// are still running).
+    pub fn completed_at(&self) -> Option<Instant> {
+        self.job.completed_at()
+    }
+
     /// Block until the job completes, helping to execute unclaimed
     /// tiles (dependencies first) on the calling thread as worker 0.
     /// Re-raises the first panic any tile of the job produced.
-    pub fn wait(mut self) {
+    pub fn wait(self) {
+        self.wait_timed();
+    }
+
+    /// Like [`JobHandle::wait`], but returns the job's completion
+    /// timestamp — what the DAG executor uses to rebuild approximate
+    /// per-layer latencies from overlapping jobs.
+    pub fn wait_timed(mut self) -> Instant {
         self.join();
+        let at = self
+            .job
+            .completed_at()
+            .expect("joined job has a completion timestamp");
         let payload = self.job.panic_payload.lock().unwrap().take();
         if let Some(p) = payload {
             std::panic::resume_unwind(p);
         }
+        at
     }
 
     fn join(&mut self) {
@@ -516,6 +730,7 @@ impl WorkerPool {
             counters: (0..workers).map(|_| WorkerCounters::default()).collect(),
             inline_tiles: AtomicU64::new(0),
             jobs: AtomicU64::new(0),
+            job_telemetry: Mutex::new(JobTelemetry::default()),
         });
         let handles = (1..workers)
             .map(|w| {
@@ -740,9 +955,10 @@ impl WorkerPool {
             share: num_tiles.div_ceil(sh.workers).max(1),
             next_tile: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
+            worker_tiles: (0..sh.workers).map(|_| AtomicU64::new(0)).collect(),
             panic_payload: Mutex::new(None),
             deps,
-            done: Mutex::new(num_tiles == 0),
+            done: Mutex::new((num_tiles == 0).then(Instant::now)),
             done_cv: Condvar::new(),
         });
         if num_tiles > 0 {
@@ -768,6 +984,7 @@ impl WorkerPool {
     /// Snapshot the cumulative telemetry counters.
     pub fn stats(&self) -> PoolStats {
         let sh = &self.shared;
+        let jt = *sh.job_telemetry.lock().unwrap();
         PoolStats {
             workers: sh.workers,
             jobs: sh.jobs.load(Ordering::Relaxed),
@@ -782,6 +999,10 @@ impl WorkerPool {
                 .iter()
                 .map(|c| c.steals.load(Ordering::Relaxed))
                 .collect(),
+            jobs_completed: jt.jobs,
+            job_tiles_completed: jt.tiles,
+            job_imbalance_milli_sum: jt.imbalance_milli,
+            job_occupancy_milli_sum: jt.occupancy_milli,
         }
     }
 }
@@ -1143,6 +1364,92 @@ mod tests {
         assert_eq!(*trace.lock().unwrap(), vec![1, 1, 2, 2, 3, 3]);
         h1.wait();
         h2.wait();
+    }
+
+    #[test]
+    fn per_job_telemetry_counts_completed_jobs() {
+        let pool = WorkerPool::new(3);
+        for _ in 0..4 {
+            pool.run(9, &|_t, _w| {});
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.jobs_completed, 4);
+        // Every job's imbalance and occupancy are at least recorded
+        // and within sane bounds: imbalance >= 1 - eps (milli
+        // truncation), occupancy in (0, 1].
+        assert!(stats.mean_job_imbalance() >= 0.999, "{}", stats.mean_job_imbalance());
+        assert!(stats.mean_job_imbalance() <= stats.workers as f64);
+        let occ = stats.mean_job_occupancy();
+        assert!(occ > 0.0 && occ <= 1.0, "{occ}");
+    }
+
+    #[test]
+    fn inline_jobs_are_excluded_from_job_telemetry() {
+        // A 1-worker pool runs everything inline: no queued job ever
+        // completes, so the per-job telemetry must stay empty and the
+        // means must fall back to their balanced defaults.
+        let pool = WorkerPool::new(1);
+        pool.run(8, &|_t, _w| {});
+        let stats = pool.stats();
+        assert_eq!(stats.jobs_completed, 0);
+        assert_eq!(stats.mean_job_imbalance(), 1.0);
+        assert_eq!(stats.mean_job_occupancy(), 1.0);
+    }
+
+    #[test]
+    fn interval_telemetry_diffs_snapshots() {
+        let pool = WorkerPool::new(2);
+        pool.run(6, &|_t, _w| {});
+        let before = pool.stats();
+        assert!(
+            before.interval_job_imbalance(&before).is_none(),
+            "empty interval must yield no signal"
+        );
+        pool.run(6, &|_t, _w| {});
+        pool.run(6, &|_t, _w| {});
+        let after = pool.stats();
+        let imb = after.interval_job_imbalance(&before).expect("2 jobs ran");
+        assert!(imb >= 0.999 && imb <= after.workers as f64, "{imb}");
+        assert_eq!(after.jobs_completed - before.jobs_completed, 2);
+        let rate = after.interval_steal_rate(&before);
+        if let Some(r) = rate {
+            assert!((0.0..=1.0).contains(&r), "{r}");
+        }
+        let (sig_imb, sig_rate) = after
+            .interval_tiling_signal(&before)
+            .expect("jobs completed in the interval");
+        assert_eq!(sig_imb, imb);
+        assert!((0.0..=1.0).contains(&sig_rate), "{sig_rate}");
+    }
+
+    #[test]
+    fn completion_timestamps_respect_dependency_order() {
+        // 1-worker pool: the waiter's help-drain executes the chain in
+        // dependency order on this thread, so h1's handshake (and its
+        // stamp) deterministically precedes h2's.
+        let pool = WorkerPool::new(1);
+        let h1 = pool.submit_owned(4, Box::new(|_t, _w| {}), &[]);
+        let h2 = pool.submit_owned(4, Box::new(|_t, _w| {}), &[&h1]);
+        let t2 = h2.wait_timed();
+        let t1 = h1
+            .completed_at()
+            .expect("dependency completed during the help-drain");
+        assert!(t1 <= t2, "dependency must complete no later than dependent");
+        h1.wait();
+    }
+
+    #[test]
+    fn ticket_exposes_completion_timestamp() {
+        let pool = WorkerPool::new(2);
+        let task = |_t: usize, _w: usize| {};
+        let ticket = unsafe { pool.submit(5, &task) };
+        // The stamp is published by the completion handshake; poll it
+        // directly (is_complete can race a beat ahead of the stamp).
+        while ticket.completed_at().is_none() {
+            std::thread::yield_now();
+        }
+        assert!(ticket.is_complete());
+        ticket.wait();
     }
 
     #[test]

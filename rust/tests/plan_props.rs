@@ -8,7 +8,7 @@
 use escoin::config::{googlenet, miniception, minicnn, ConvShape};
 use escoin::conv::{
     direct_dense, shapes_under_test, winograd_applicable, ConvWeights, LayerPlan, Method,
-    NetworkPlan, Workspace, WorkspaceArena,
+    NetworkPlan, TilePolicy, Workspace, WorkspaceArena,
 };
 use escoin::tensor::{Dims4, Tensor4};
 use escoin::util::{Rng, WorkerPool};
@@ -81,6 +81,108 @@ fn property_plan_output_is_byte_identical_across_pool_sizes() {
                     method.name()
                 );
             }
+        }
+    }
+}
+
+/// The tentpole acceptance grid: the cache-blocked multi-channel
+/// microkernel must be **byte-identical** to the unblocked per-channel
+/// kernel (the PR-2 oracle, `TilePolicy::unblocked()`) on every shape
+/// of the canonical grid, across pool sizes 1/4/8 and a spread of
+/// `TilePolicy` settings — tile count, register-block width, and row
+/// block length are pure geometry and must never touch a result bit.
+#[test]
+fn property_blocked_microkernel_is_byte_identical_across_policies_and_pools() {
+    let policies = [
+        TilePolicy::default(),
+        TilePolicy {
+            target_tiles: 3,
+            mr: 2,
+            block_floats: 64,
+        },
+        TilePolicy {
+            target_tiles: 7,
+            mr: 8,
+            block_floats: 33,
+        },
+        TilePolicy {
+            target_tiles: 512,
+            mr: 3,
+            block_floats: 1,
+        },
+    ];
+    let pools: Vec<WorkerPool> = [1, 4, 8].into_iter().map(WorkerPool::new).collect();
+    for (i, shape) in shapes_under_test().into_iter().enumerate() {
+        let (x, w) = case(&shape, 3, 3100 + i as u64);
+        // Oracle: the unblocked per-channel kernel (mr = 1, one pass
+        // over the whole span — the exact PR-2 `sconv_plane` loop),
+        // single worker.
+        let oracle_plan =
+            LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, TilePolicy::unblocked());
+        let oracle = bits(oracle_plan.run(&x, &pools[0]).data());
+        for policy in policies {
+            let plan = LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, policy);
+            assert_eq!(plan.tile_policy(), Some(policy));
+            for pool in &pools {
+                let got = bits(plan.run(&x, pool).data());
+                assert_eq!(
+                    oracle,
+                    got,
+                    "{shape} diverged from the per-channel oracle under {policy:?} t{}",
+                    pool.workers()
+                );
+            }
+        }
+    }
+}
+
+/// The blocked microkernel through the **async tile body** (the DAG
+/// executor's path): driving `run_async_tile` by hand under non-default
+/// policies must still reproduce the blocking `execute_into` bytes.
+#[test]
+fn property_async_tile_body_honours_tile_policies() {
+    use escoin::conv::ConvExecutor;
+    use escoin::util::SharedSlice;
+    let pool = WorkerPool::new(3);
+    let policies = [
+        TilePolicy::unblocked(),
+        TilePolicy {
+            target_tiles: 5,
+            mr: 3,
+            block_floats: 48,
+        },
+    ];
+    for (i, shape) in shapes_under_test().into_iter().enumerate() {
+        let (x, w) = case(&shape, 2, 3600 + i as u64);
+        for policy in policies {
+            let plan = LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, policy);
+            let mut ws = Workspace::new();
+            let mut want = Tensor4::zeros(plan.out_dims(2));
+            plan.execute_into(2, x.data(), &pool, &mut ws, want.data_mut(), None);
+
+            let padded = x.pad_spatial(shape.pad);
+            let padded: &[f32] = if shape.pad > 0 { padded.data() } else { x.data() };
+            let plen = if shape.pad > 0 {
+                2 * shape.c * shape.padded_h() * shape.padded_w()
+            } else {
+                0
+            };
+            let scratch_len = plan.workspace_floats(2, 1) - plen;
+            let mut scratch = vec![0.0f32; scratch_len];
+            let mut got = vec![f32::NAN; want.data().len()];
+            {
+                let out_sh = SharedSlice::new(&mut got);
+                let scr_sh = SharedSlice::new(&mut scratch);
+                for t in 0..plan.async_tiles(2) {
+                    // SAFETY: one worker, exclusive buffers.
+                    unsafe { plan.run_async_tile(t, 0, 2, padded, &scr_sh, &out_sh) };
+                }
+            }
+            assert_eq!(
+                bits(want.data()),
+                bits(&got),
+                "{shape} async tiles diverged under {policy:?}"
+            );
         }
     }
 }

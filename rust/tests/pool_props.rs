@@ -4,7 +4,7 @@
 //! way it does under the seed's equal-plane splitting.
 
 use escoin::config::ConvShape;
-use escoin::conv::{direct_dense, ConvWeights, DirectSparsePlan, LayerPlan, Method};
+use escoin::conv::{direct_dense, ConvWeights, DirectSparsePlan, LayerPlan, Method, TilePolicy};
 use escoin::tensor::{Dims4, Tensor4};
 use escoin::util::{Rng, WorkerPool};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -116,6 +116,113 @@ fn nnz_weighted_tiling_beats_equal_plane_splitting_on_skewed_sparsity() {
         weighted_imbalance < equal_imbalance,
         "weighted {weighted_imbalance:.2} vs equal-plane {equal_imbalance:.2}"
     );
+}
+
+/// The ISSUE's feedback-loop property: start a skewed-sparsity layer on
+/// deliberately **coarse** tiles, measure the pool's real per-job
+/// imbalance telemetry, feed it through `TilePolicy::adjusted` (the
+/// exact signal path the serving executor's replan uses), and verify
+/// the retiled plan schedules measurably more evenly — on the real pool
+/// *and* under the deterministic least-loaded schedule model.
+#[test]
+fn adaptive_retiling_from_telemetry_reduces_measured_imbalance() {
+    // Skewed layer sized so every tile carries enough FLOPs for all
+    // workers to wake and participate (span ~ 64*66 floats).
+    let shape = ConvShape::new(16, 64, 64, 64, 3, 3, 1, 1);
+    let w = skewed_weights(&shape, 11);
+    let workers = 5;
+    let batch = 2;
+    let pool = WorkerPool::new(workers);
+    let mut rng = Rng::new(17);
+    let x = Tensor4::random_activations(Dims4::new(batch, 16, 64, 64), &mut rng);
+
+    // Coarse start: ~3 nnz-balanced channel tiles -> 6 pool tiles per
+    // job. The telemetry counts the submitting lane as eligible only
+    // when it claimed tiles, so the per-job floor must hold for BOTH
+    // lane counts: 6 tiles over 5 lanes floors at ceil(6/5)/(6/5) =
+    // 1.67, over the 4 spawned lanes at ceil(6/4)/(6/4) = 1.33 — either
+    // way above the 1.25 refine threshold, so the premise cannot race
+    // away.
+    let mut policy = TilePolicy {
+        target_tiles: 3,
+        ..TilePolicy::default()
+    };
+    let coarse_plan = LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, policy);
+    let reference = coarse_plan.run(&x, &pool);
+    // Deterministic 4-lane schedule model (independent of pool races):
+    // the coarse split leaves the schedule lopsided.
+    const SIM_LANES: usize = 4;
+    {
+        let sparse = DirectSparsePlan::build_with_policy(&shape, &w, policy);
+        assert_eq!(
+            sparse.tiles().len(),
+            3,
+            "premise: coarse policy must cut ~3 channel tiles"
+        );
+        assert!(
+            schedule_imbalance(sparse.tile_nnz(), SIM_LANES) > 1.25,
+            "premise: coarse tiles must schedule unevenly"
+        );
+    }
+
+    let runs_per_round = 8;
+    let mut measured: Vec<f64> = Vec::new();
+    let mut anchor = pool.stats();
+    for _round in 0..8 {
+        let plan = LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, policy);
+        for _ in 0..runs_per_round {
+            let out = plan.run(&x, &pool);
+            // Tile geometry must never change the bytes.
+            assert_eq!(out.data(), reference.data(), "retile changed results");
+        }
+        let now = pool.stats();
+        let (imbalance, steal_rate) = now
+            .interval_tiling_signal(&anchor)
+            .expect("distributed jobs ran");
+        anchor = now;
+        measured.push(imbalance);
+        match policy.adjusted(imbalance, steal_rate) {
+            Some(next) => policy = next,
+            None => break,
+        }
+    }
+
+    let first = measured[0];
+    let last = *measured.last().unwrap();
+    assert!(
+        first > TilePolicy::REFINE_IMBALANCE,
+        "coarse tiling must measure imbalanced (got {first:.2})"
+    );
+    assert!(
+        policy.target_tiles > 3,
+        "telemetry must have refined the tile target (still {})",
+        policy.target_tiles
+    );
+    assert!(
+        last < first,
+        "refined tiling must measure more balanced ({last:.2} vs {first:.2})"
+    );
+
+    // The refined granularity also wins under the deterministic
+    // least-loaded schedule model (no scheduling races involved) —
+    // asserted at the default 48-tile target the loop refines toward,
+    // so the bound does not depend on which round the loop stopped at.
+    let fine = DirectSparsePlan::build_with_policy(&shape, &w, TilePolicy::default());
+    let coarse = DirectSparsePlan::build_with_policy(
+        &shape,
+        &w,
+        TilePolicy {
+            target_tiles: 3,
+            ..TilePolicy::default()
+        },
+    );
+    let fine_sim = schedule_imbalance(fine.tile_nnz(), SIM_LANES);
+    let coarse_sim = schedule_imbalance(coarse.tile_nnz(), SIM_LANES);
+    assert!(
+        fine_sim < 1.25,
+        "refined tiles still schedule unevenly ({fine_sim:.2})"
+    );
+    assert!(fine_sim < coarse_sim, "{fine_sim:.2} vs {coarse_sim:.2}");
 }
 
 /// The skewed layer must also *compute* correctly through the pool at

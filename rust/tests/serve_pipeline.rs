@@ -42,6 +42,7 @@ fn fixed_plan_cfg_for(network: &str, pipeline_depth: usize, batch_size: usize) -
         replan_every: 0,
         pipeline_depth,
         strict_replan: false,
+        adaptive_tiling: false,
     }
 }
 
@@ -159,6 +160,7 @@ fn strict_replan_drains_the_pipeline_and_answers_everything() {
         replan_every: 2,
         pipeline_depth: 2,
         strict_replan: true,
+        adaptive_tiling: false,
     };
     let server = ServerHandle::start(cfg).unwrap();
     let mut rng = Rng::new(15);
@@ -249,6 +251,7 @@ fn server_replans_incrementally_under_router_churn() {
         replan_every: 2,
         pipeline_depth: 2,
         strict_replan: false,
+        adaptive_tiling: false,
     };
     let server = ServerHandle::start(cfg).unwrap();
     let mut rng = Rng::new(14);
@@ -276,4 +279,23 @@ fn server_replans_incrementally_under_router_churn() {
             s.replan_layers_rebuilt
         );
     }
+}
+
+#[test]
+fn adaptive_tiling_serving_is_byte_identical_to_pinned_tiling() {
+    // Tile geometry is pure work-cutting: a server that retiles from
+    // live telemetry at every replan checkpoint must answer with
+    // exactly the bytes of a server whose tiling is pinned. Router
+    // exploration is off so the method assignment cannot drift between
+    // the two runs.
+    let adaptive = |on: bool| ServerConfig {
+        replan_every: 1,
+        adaptive_tiling: on,
+        ..fixed_plan_cfg(2, 2)
+    };
+    let mut rng = Rng::new(777);
+    let images: Vec<Vec<f32>> = (0..17).map(|_| rng.activation_vec(3 * 16 * 16)).collect();
+    let pinned = serve_stream(adaptive(false), &images);
+    let retiled = serve_stream(adaptive(true), &images);
+    assert_eq!(pinned, retiled, "a retile changed served logits");
 }
