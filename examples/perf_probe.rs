@@ -28,12 +28,24 @@
 //!   smallest there); these rows are the heaviest in the probe —
 //!   trim `ESCOIN_BENCH_ITERS` when iterating.
 //! * `sconv-blocked-b1`/`b8` — the cache-blocked multi-channel
-//!   microkernel (`plan_ns`, default `TilePolicy`: register blocks of
-//!   `mr` output channels over L1-sized row blocks, input loaded once
-//!   per block and reused `mr`x) vs the unblocked per-channel kernel
-//!   (`free_ns`, `TilePolicy::unblocked()`) on the large-input AlexNet
-//!   conv2 class — the layer whose input group falls out of cache
-//!   between channels without blocking.
+//!   microkernel (`plan_ns`, register blocks of `mr` output channels
+//!   over L1-sized row blocks, input loaded once per block and reused
+//!   `mr`x) vs the unblocked per-channel kernel (`free_ns`,
+//!   `TilePolicy::unblocked()`) on the large-input AlexNet conv2
+//!   class — the layer whose input group falls out of cache between
+//!   channels without blocking.
+//! * `sconv-simd-b1`/`b8` — the `SIMD_LANES`-wide vectorized
+//!   microkernel (`plan_ns`, `TilePolicy::lanes = SIMD_LANES`: each
+//!   nonzero broadcast across a lane strip of contiguous output
+//!   pixels, `mr x LANES` MACs per resident input block) vs the scalar
+//!   blocked kernel (`free_ns`, `lanes = 1`), same shape as the
+//!   blocked rows. Policies name their lane width explicitly, so
+//!   these rows appear with or without `--features simd`.
+//! * `sconv-balanced-b1` — the vectorized kernel over the
+//!   bank-balanced sliced-ELL layout (`plan_ns`,
+//!   `SparseLayout::Balanced`: rows of each `mr`-channel bank padded
+//!   to equal slot counts — one static trip count per register block)
+//!   vs the same vector kernel walking raw CSR rows (`free_ns`).
 //! * `retile-adaptive` — a deliberately coarse tiling (`free_ns`,
 //!   one channel tile per image at batch `threads + 1`, so a lane must
 //!   run two whole-image tiles — straggler-bound by construction) vs
@@ -51,7 +63,7 @@ use escoin::bench_harness::{bench_median, BenchOpts};
 use escoin::config::{alexnet, googlenet, ConvShape};
 use escoin::conv::{
     lowered_gemm_parallel, lowered_spmm_parallel, sconv_parallel, ConvWeights, LayerPlan, Method,
-    NetworkPlan, PlanCache, TilePolicy, Workspace, WorkspaceArena,
+    NetworkPlan, PlanCache, SparseLayout, TilePolicy, Workspace, WorkspaceArena, SIMD_LANES,
 };
 use escoin::coordinator::{BatcherConfig, RouterConfig, ServerConfig, ServerHandle};
 use escoin::tensor::{Dims4, Tensor4};
@@ -193,7 +205,19 @@ fn main() {
             Method::DirectSparse,
             TilePolicy::unblocked(),
         );
-        let blocked = LayerPlan::build(shape, &w, Method::DirectSparse); // default policy
+        // Pinned to the scalar blocked kernel (the simd feature flips the
+        // *default* lanes): these rows compare how the same float ops are
+        // cut, so they must stay byte-identical and lane-free either way.
+        let blocked = LayerPlan::build_with_policy(
+            shape,
+            &w,
+            Method::DirectSparse,
+            TilePolicy {
+                lanes: 1,
+                layout: SparseLayout::Csr,
+                ..TilePolicy::default()
+            },
+        );
         for (b, label) in [(1usize, "sconv-blocked-b1"), (8usize, "sconv-blocked-b8")] {
             let x =
                 Tensor4::random_activations(Dims4::new(b, shape.c, shape.h, shape.w), &mut rng);
@@ -219,6 +243,92 @@ fn main() {
             println!(
                 "{label}: per-channel {per_channel:?}  blocked {multi_channel:?}  ({:.2}x)",
                 per_channel.as_secs_f64() / multi_channel.as_secs_f64().max(1e-12)
+            );
+        }
+    }
+
+    // Vectorized-microkernel headline: the lane-strip kernel vs the
+    // scalar blocked kernel (ULP-equivalent outputs — the lane order
+    // reassociates the scalar 4-wide grouping), and the bank-balanced
+    // layout vs raw CSR under the same vector kernel (byte-identical
+    // outputs — padding slots are arithmetic no-ops). Same conv2-class
+    // shape as the blocked rows; explicit lane counts so the rows emit
+    // identically with and without `--features simd`.
+    {
+        let (name, shape) = &shapes[0];
+        let mut rng = Rng::new(5);
+        let w = ConvWeights::synthetic(shape, &mut rng);
+        let scalar_policy = TilePolicy {
+            lanes: 1,
+            layout: SparseLayout::Csr,
+            ..TilePolicy::default()
+        };
+        let simd_policy = TilePolicy {
+            lanes: SIMD_LANES,
+            layout: SparseLayout::Csr,
+            ..TilePolicy::default()
+        };
+        let balanced_policy = TilePolicy {
+            lanes: SIMD_LANES,
+            layout: SparseLayout::Balanced,
+            ..TilePolicy::default()
+        };
+        let scalar = LayerPlan::build_with_policy(shape, &w, Method::DirectSparse, scalar_policy);
+        let simd = LayerPlan::build_with_policy(shape, &w, Method::DirectSparse, simd_policy);
+        let balanced =
+            LayerPlan::build_with_policy(shape, &w, Method::DirectSparse, balanced_policy);
+        for (b, label) in [(1usize, "sconv-simd-b1"), (8usize, "sconv-simd-b8")] {
+            let x =
+                Tensor4::random_activations(Dims4::new(b, shape.c, shape.h, shape.w), &mut rng);
+            ws.ensure(
+                scalar
+                    .workspace_floats(b, pool.workers())
+                    .max(simd.workspace_floats(b, pool.workers())),
+            );
+            let mut out = Tensor4::zeros(simd.out_dims(b));
+            let scalar_t = bench_median(bench, || {
+                scalar.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+            });
+            let simd_t = bench_median(bench, || {
+                simd.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+            });
+            rows.push(Row {
+                shape: *name,
+                method: label,
+                batch: b,
+                free_ns: scalar_t.as_nanos(),
+                plan_ns: simd_t.as_nanos(),
+            });
+            println!(
+                "{label}: scalar {scalar_t:?}  simd({SIMD_LANES} lanes) {simd_t:?}  ({:.2}x)",
+                scalar_t.as_secs_f64() / simd_t.as_secs_f64().max(1e-12)
+            );
+        }
+        {
+            let b = 1usize;
+            let x =
+                Tensor4::random_activations(Dims4::new(b, shape.c, shape.h, shape.w), &mut rng);
+            ws.ensure(
+                simd.workspace_floats(b, pool.workers())
+                    .max(balanced.workspace_floats(b, pool.workers())),
+            );
+            let mut out = Tensor4::zeros(balanced.out_dims(b));
+            let csr_t = bench_median(bench, || {
+                simd.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+            });
+            let bal_t = bench_median(bench, || {
+                balanced.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+            });
+            rows.push(Row {
+                shape: *name,
+                method: "sconv-balanced-b1",
+                batch: b,
+                free_ns: csr_t.as_nanos(),
+                plan_ns: bal_t.as_nanos(),
+            });
+            println!(
+                "sconv-balanced-b1: simd-csr {csr_t:?}  simd-balanced {bal_t:?}  ({:.2}x)",
+                csr_t.as_secs_f64() / bal_t.as_secs_f64().max(1e-12)
             );
         }
     }
@@ -256,7 +366,10 @@ fn main() {
                 plan.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None);
             }
             let now = pool.stats();
-            let signal = now.interval_tiling_signal(&anchor);
+            // Kernel-origin signal: execute_into runs blocking kernel
+            // jobs, and reading the kernel lane mirrors what the
+            // scheduler/server consume since jobs gained origins.
+            let signal = now.interval_kernel_tiling_signal(&anchor);
             anchor = now;
             match signal.and_then(|(i, s)| policy.adjusted(i, s)) {
                 Some(next) => policy = next,

@@ -53,7 +53,7 @@ use super::sconv::TilePolicy;
 use crate::config::{pool_out_dim, ConvShape, FcShape, Layer, LayerKind, Network, PoolKind};
 use crate::conv::weights::ConvWeights;
 use crate::tensor::Dims4;
-use crate::util::{JobHandle, Rng, SharedSlice, Stopwatch, WorkerPool};
+use crate::util::{JobHandle, JobOrigin, Rng, SharedSlice, Stopwatch, WorkerPool};
 use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -1268,7 +1268,7 @@ impl NetworkPlan {
                             let dst = unsafe { ws_sh.slice_mut(n * padded_chw, padded_chw) };
                             pad_image_into(&shape, img, dst);
                         });
-                        Some(pool.submit_owned(batch, task, &dep_handles))
+                        Some(pool.submit_owned(batch, task, JobOrigin::Dag, &dep_handles))
                     } else {
                         None
                     };
@@ -1294,7 +1294,8 @@ impl NetworkPlan {
                             kplan.run_async_tile(t, worker, batch, padded, &scratch_sh, &out_sh)
                         };
                     });
-                    let kernel_job = pool.submit_owned(tiles, task, &kernel_deps);
+                    let kernel_job =
+                        pool.submit_owned(tiles, task, JobOrigin::Kernel, &kernel_deps);
 
                     // ReLU follows every conv (seed scheduler
                     // behaviour), fused as a per-image job behind the
@@ -1304,7 +1305,7 @@ impl NetworkPlan {
                         let img = unsafe { out_sh.slice_mut(n * out_chw, out_chw) };
                         relu_in_place(img);
                     });
-                    let relu_job = pool.submit_owned(batch, task, &[&kernel_job]);
+                    let relu_job = pool.submit_owned(batch, task, JobOrigin::Dag, &[&kernel_job]);
                     if let Some(p) = pad_job {
                         step_jobs.push(p);
                     }
@@ -1322,7 +1323,7 @@ impl NetworkPlan {
                         let orow = unsafe { out_sh.slice_mut(n * out_f, out_f) };
                         fc_image_into(&fc, &weights, xrow, orow);
                     });
-                    step_jobs.push(pool.submit_owned(batch, task, &dep_handles));
+                    step_jobs.push(pool.submit_owned(batch, task, JobOrigin::Dag, &dep_handles));
                 }
                 PlanOp::Pool {
                     kind,
@@ -1341,7 +1342,7 @@ impl NetworkPlan {
                         let out_img = unsafe { out_sh.slice_mut(n * out_chw, out_chw) };
                         pool_image_into(kind, k, stride, pad, in_dims, out_dims, n, src, out_img);
                     });
-                    step_jobs.push(pool.submit_owned(batch, task, &dep_handles));
+                    step_jobs.push(pool.submit_owned(batch, task, JobOrigin::Dag, &dep_handles));
                 }
                 PlanOp::Relu | PlanOp::Lrn => {
                     let lrn = matches!(step.op, PlanOp::Lrn);
@@ -1359,7 +1360,7 @@ impl NetworkPlan {
                             relu_in_place(dst);
                         }
                     });
-                    step_jobs.push(pool.submit_owned(batch, task, &dep_handles));
+                    step_jobs.push(pool.submit_owned(batch, task, JobOrigin::Dag, &dep_handles));
                 }
                 PlanOp::Concat { parts } => {
                     let parts = parts.clone();
@@ -1380,7 +1381,7 @@ impl NetworkPlan {
                         let dst = unsafe { out_sh.slice_mut(n * out_chw + offs[p], len) };
                         dst.copy_from_slice(src);
                     });
-                    step_jobs.push(pool.submit_owned(batch * np, task, &dep_handles));
+                    step_jobs.push(pool.submit_owned(batch * np, task, JobOrigin::Dag, &dep_handles));
                 }
             }
             drop(dep_handles);

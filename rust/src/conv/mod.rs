@@ -40,6 +40,7 @@ mod gemm;
 mod im2col;
 mod plan;
 mod sconv;
+mod simd;
 mod spmm;
 mod weights;
 mod winograd;
@@ -59,7 +60,8 @@ pub use plan::{
     LoweredSpmmPlan, Method, WinogradPlan,
 };
 pub use sconv::{
-    sconv, sconv_ell, sconv_ell_with_pool, sconv_parallel, sconv_with_pool, TilePolicy,
+    sconv, sconv_ell, sconv_ell_with_pool, sconv_parallel, sconv_with_pool, SparseLayout,
+    TilePolicy, SIMD_LANES,
 };
 pub use spmm::{csrmm, csrmm_pool};
 pub use weights::ConvWeights;

@@ -22,14 +22,16 @@
 
 use super::executor::{pad_into, Workspace};
 use super::im2col::im2col_group_into;
-use super::sconv::{nnz_channel_tiles, sconv_tile, sconv_tiled, worker_scratch_floats, TilePolicy};
+use super::sconv::{
+    nnz_channel_tiles, sconv_tile, sconv_tiled, worker_scratch_floats, SparseLayout, TilePolicy,
+};
 use super::weights::ConvWeights;
 use super::winograd::{
     transform_filters, winograd_applicable, winograd_tile, winograd_tiles_pool,
 };
 use super::{csrmm, csrmm_pool, gemm_blocked, gemm_parallel};
 use crate::config::ConvShape;
-use crate::sparse::{CsrMatrix, StretchedFilter};
+use crate::sparse::{BalancedCsr, CsrMatrix, StretchedFilter};
 use crate::tensor::{Dims4, Tensor4};
 use crate::util::{SharedSlice, Stopwatch, WorkerPool};
 use std::ops::Range;
@@ -212,6 +214,10 @@ fn padded_view<'a>(
 pub struct DirectSparsePlan {
     shape: ConvShape,
     banks: Vec<StretchedFilter>,
+    /// Bank-balanced re-packing of `banks` (one per group), baked at
+    /// build time when the policy selects [`SparseLayout::Balanced`] —
+    /// consumed by the vectorized microkernel (`policy.lanes > 1`).
+    balanced: Option<Vec<BalancedCsr>>,
     policy: TilePolicy,
     tiles: Vec<Range<usize>>,
     tile_nnz: Vec<usize>,
@@ -225,14 +231,27 @@ impl DirectSparsePlan {
     }
 
     /// Stretch the weights and pack channel tiles under an explicit
-    /// [`TilePolicy`] — the adaptive-tiling rebuild path.
+    /// [`TilePolicy`] — the adaptive-tiling rebuild path. When the
+    /// policy asks for [`SparseLayout::Balanced`] (stride-1 layers
+    /// only; the strided gather kernel has no vector path), the
+    /// stretched banks are additionally re-packed into per-`mr`-bank
+    /// balanced slot rows here, once, so the serving loop's retiles
+    /// and method flips pay the packing cost at plan build — never on
+    /// the execute path.
     pub fn build_with_policy(shape: &ConvShape, weights: &ConvWeights, policy: TilePolicy) -> Self {
         assert_eq!(weights.shape, *shape, "weights/shape mismatch");
         let banks = weights.stretched_banks();
         let (tiles, tile_nnz) = nnz_channel_tiles(shape, &banks, policy.target_tiles);
+        let balanced = (policy.layout == SparseLayout::Balanced && shape.stride == 1).then(|| {
+            banks
+                .iter()
+                .map(|b| BalancedCsr::from_csr(&b.csr, policy.mr.max(1)))
+                .collect()
+        });
         Self {
             shape: shape.clone(),
             banks,
+            balanced,
             policy,
             tiles,
             tile_nnz,
@@ -242,6 +261,12 @@ impl DirectSparsePlan {
     /// The pre-stretched filter banks, one per group.
     pub fn banks(&self) -> &[StretchedFilter] {
         &self.banks
+    }
+
+    /// The bank-balanced banks, when the policy baked them
+    /// ([`SparseLayout::Balanced`], stride 1).
+    pub fn balanced(&self) -> Option<&[BalancedCsr]> {
+        self.balanced.as_deref()
     }
 
     /// The tile-count / cache-block geometry this plan was built with.
@@ -300,6 +325,7 @@ impl ConvExecutor for DirectSparsePlan {
                 padded,
                 batch,
                 &self.banks,
+                self.balanced.as_deref(),
                 &self.tiles,
                 &self.policy,
                 pool,
@@ -329,6 +355,7 @@ impl ConvExecutor for DirectSparsePlan {
                 &self.shape,
                 padded,
                 &self.banks,
+                self.balanced.as_deref(),
                 &self.tiles,
                 &self.policy,
                 tile,

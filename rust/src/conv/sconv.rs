@@ -42,12 +42,49 @@
 //! (same nonzero order, same 4-wide grouping), so the blocked kernel
 //! is byte-identical to [`sconv_plane`] by construction — block
 //! geometry ([`TilePolicy`]) can never change results.
+//!
+//! ## The vectorized inner loop (`TilePolicy::lanes > 1`)
+//!
+//! [`sconv_planes_simd`] keeps the same block structure but replaces
+//! the scalar inner loop with explicit [`F32v`] strips: each nonzero
+//! weight is broadcast across [`SIMD_LANES`] contiguous output pixels
+//! and FMA-accumulated into a register vector, one strip stored per
+//! `nnz` pass — so one resident input block feeds `mr × LANES` MACs
+//! per nonzero visit. Per output element the accumulation is the plain
+//! sequential CSR-order `fmaf` chain (lane position never matters), so
+//! the vector path is **byte-identical to itself** under any strip /
+//! block / tile / pool decomposition — but it is *not* byte-identical
+//! to the 4-wide-grouped scalar kernel; the scalar path stays the
+//! byte-determinism oracle and the vector path is ULP-bounded against
+//! it (`tests/plan_props.rs`). [`sconv_planes_balanced`] is the same
+//! kernel over [`BalancedCsr`] banks (equal per-row slot counts within
+//! each `mr` bank, padding slots arithmetic no-ops), bit-identical to
+//! the CSR vector kernel.
 
 use crate::config::ConvShape;
-use crate::sparse::{EllMatrix, StretchedFilter};
+use crate::sparse::{BalancedCsr, EllMatrix, StretchedFilter};
 use crate::tensor::{Dims4, Tensor4};
 use crate::util::{SharedSlice, WorkerPool};
 use std::ops::Range;
+
+use super::simd::{fmaf, F32v};
+pub use super::simd::SIMD_LANES;
+
+/// Which packing of the stretched filter banks the stride-1 microkernel
+/// walks — a per-plan axis of [`TilePolicy`] that
+/// [`super::DirectSparsePlan`] bakes at build time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparseLayout {
+    /// Raw stretched CSR banks — the scalar oracle's layout, and the
+    /// vector kernel's default.
+    Csr,
+    /// Bank-balanced sliced ELL ([`BalancedCsr`]): rows of each
+    /// `mr`-channel bank padded to equal slot counts, so a vectorized
+    /// register block has one static trip count for all its channels.
+    /// Only the vectorized path (`lanes > 1`) consumes the balanced
+    /// banks; with `lanes == 1` the scalar kernel keeps reading CSR.
+    Balanced,
+}
 
 /// Geometry of the direct-sparse execution: how many channel tiles the
 /// pool schedules, and the cache-block shape of the microkernel. Held
@@ -59,6 +96,11 @@ use std::ops::Range;
 /// microkernel performs the identical float operations in the identical
 /// order for every `mr` / `block_floats` choice, so outputs are
 /// byte-identical across policies (pinned by `tests/plan_props.rs`).
+/// The `lanes` axis is the one deliberate exception: `lanes > 1`
+/// switches to the vectorized kernel, whose per-element accumulation is
+/// sequential-in-CSR-order rather than 4-wide grouped — deterministic
+/// across tiles/blocks/pool sizes, but ULP-level different from the
+/// scalar oracle (see `tests/plan_props.rs`'s ULP harness).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TilePolicy {
     /// Target number of nnz-weighted channel tiles per image
@@ -73,6 +115,15 @@ pub struct TilePolicy {
     /// unit). `usize::MAX` disables blocking (one pass over the whole
     /// span per channel — the PR-2 kernel shape).
     pub block_floats: usize,
+    /// Output pixels per vector strip of the stride-1 inner loop.
+    /// `1` selects the scalar blocked kernel (the byte-determinism
+    /// oracle); `> 1` (normally [`SIMD_LANES`]) selects the vectorized
+    /// kernel, which broadcasts each nonzero across a strip of `lanes`
+    /// contiguous output pixels and FMA-accumulates in registers.
+    pub lanes: usize,
+    /// Which filter-bank packing the kernel walks (see
+    /// [`SparseLayout`]).
+    pub layout: SparseLayout,
 }
 
 impl Default for TilePolicy {
@@ -81,6 +132,12 @@ impl Default for TilePolicy {
             target_tiles: 48,
             mr: 4,
             block_floats: 1024,
+            // The `simd` cargo feature opts the *default* policy into
+            // the vectorized kernel; the default offline build keeps
+            // the byte-exact scalar contract. Either kernel is
+            // compiled and selectable explicitly in both builds.
+            lanes: if cfg!(feature = "simd") { SIMD_LANES } else { 1 },
+            layout: SparseLayout::Csr,
         }
     }
 }
@@ -101,12 +158,33 @@ impl TilePolicy {
 
     /// The unblocked policy: one channel at a time over the whole
     /// scratch span — exactly the PR-2 per-channel kernel. Used as the
-    /// baseline of the `sconv-blocked-*` bench rows.
+    /// baseline of the `sconv-blocked-*` bench rows. Always scalar
+    /// (`lanes: 1`), so it stays the byte-determinism oracle in every
+    /// build.
     pub fn unblocked() -> Self {
         Self {
             target_tiles: 48,
             mr: 1,
             block_floats: usize::MAX,
+            lanes: 1,
+            layout: SparseLayout::Csr,
+        }
+    }
+
+    /// Round a tile target up to a multiple of `mr`, capped so the
+    /// result never exceeds [`Self::MAX_TILES`] — when the tile count
+    /// is a multiple of the register-block height, a retile never
+    /// leaves a channel tile whose width forces register blocks to
+    /// straddle the tile boundary (a straddled block splits into
+    /// sub-`mr` remainders on both sides, wasting the reuse the block
+    /// exists for).
+    fn snap_to_mr(&self, target: usize) -> usize {
+        let mr = self.mr.max(1);
+        let up = target.div_ceil(mr) * mr;
+        if up <= Self::MAX_TILES {
+            up.max(mr)
+        } else {
+            ((Self::MAX_TILES / mr) * mr).max(mr)
         }
     }
 
@@ -117,11 +195,17 @@ impl TilePolicy {
     /// refined policy — finer tiles when jobs finished unbalanced,
     /// coarser tiles when the queue barely rebalances (steals rare and
     /// jobs already even) — or `None` when the current granularity is
-    /// already right.
+    /// already right. Targets are snapped to multiples of `mr`
+    /// ([`Self::snap_to_mr`]); the `lanes`/`layout` axes ride along
+    /// unchanged, so a retile never silently flips the kernel variant.
     pub fn adjusted(&self, mean_job_imbalance: f64, steal_rate: f64) -> Option<TilePolicy> {
         if mean_job_imbalance > Self::REFINE_IMBALANCE && self.target_tiles < Self::MAX_TILES {
+            let next = self.snap_to_mr((self.target_tiles * 2).min(Self::MAX_TILES));
+            if next <= self.target_tiles {
+                return None; // mr granularity can't refine further
+            }
             return Some(Self {
-                target_tiles: (self.target_tiles * 2).min(Self::MAX_TILES),
+                target_tiles: next,
                 ..*self
             });
         }
@@ -129,8 +213,12 @@ impl TilePolicy {
             && steal_rate < Self::COARSEN_STEAL_RATE
             && self.target_tiles > Self::MIN_TILES
         {
+            let next = self.snap_to_mr((self.target_tiles / 2).max(Self::MIN_TILES));
+            if next >= self.target_tiles {
+                return None; // already at the coarsest mr multiple
+            }
             return Some(Self {
-                target_tiles: (self.target_tiles / 2).max(Self::MIN_TILES),
+                target_tiles: next,
                 ..*self
             });
         }
@@ -310,6 +398,107 @@ fn sconv_planes_blocked(
     }
 }
 
+/// The shared inner loop of the vectorized kernels: overwrite `scr`
+/// (one channel's `[b0, b1)` window, `base = b0`) with the sum of
+/// `val * in_group[off + base + e]` over the given nonzero slots.
+/// Full [`SIMD_LANES`] strips accumulate in a [`F32v`] register and
+/// store once; the tail accumulates per element through the same
+/// [`fmaf`] — so per output element the operation sequence (one fused
+/// op per slot, in slot order) is independent of where strip
+/// boundaries fall. No pre-zeroing: every element is computed in full
+/// and stored exactly once.
+#[inline]
+fn vector_accumulate(vals: &[f32], offs: &[u32], in_group: &[f32], base: usize, scr: &mut [f32]) {
+    let mut e = 0;
+    while e + SIMD_LANES <= scr.len() {
+        let mut acc = F32v::zero();
+        for (val, off) in vals.iter().zip(offs) {
+            let src = &in_group[*off as usize + base + e..];
+            acc = F32v::load(src).mul_add(F32v::splat(*val), acc);
+        }
+        acc.store(&mut scr[e..]);
+        e += SIMD_LANES;
+    }
+    while e < scr.len() {
+        let mut s = 0.0f32;
+        for (val, off) in vals.iter().zip(offs) {
+            s = fmaf(in_group[*off as usize + base + e], *val, s);
+        }
+        scr[e] = s;
+        e += 1;
+    }
+}
+
+/// The vectorized stride-1 microkernel over raw CSR banks: same block
+/// structure as [`sconv_planes_blocked`] (row blocks of `block` floats,
+/// all `mls` channels applied per block), but the per-channel inner
+/// loop runs in [`SIMD_LANES`]-wide strips via [`vector_accumulate`].
+/// Selected when `TilePolicy::lanes > 1` with [`SparseLayout::Csr`].
+fn sconv_planes_simd(
+    span: usize,
+    bank: &StretchedFilter,
+    ml0: usize,
+    mls: usize,
+    in_group: &[f32],
+    scratch: &mut [f32],
+    block: usize,
+) {
+    debug_assert_eq!(scratch.len(), mls * span);
+    let block = block.max(1);
+    let mut b0 = 0;
+    while b0 < span {
+        let b1 = (b0 + block).min(span);
+        for i in 0..mls {
+            let range = bank.csr.row_range(ml0 + i);
+            let vals = &bank.csr.values[range.clone()];
+            let offs = &bank.csr.colidx[range];
+            vector_accumulate(
+                vals,
+                offs,
+                in_group,
+                b0,
+                &mut scratch[i * span + b0..i * span + b1],
+            );
+        }
+        b0 = b1;
+    }
+}
+
+/// The vectorized stride-1 microkernel over a [`BalancedCsr`] bank:
+/// identical to [`sconv_planes_simd`] except each channel walks its
+/// bank-balanced slot row — a **static** trip count shared by every
+/// channel of the register block (the padding slots carry value 0.0 /
+/// column 0 and are bit-exact no-ops under [`fmaf`], so this kernel is
+/// byte-identical to the CSR vector kernel). Selected when
+/// `TilePolicy::lanes > 1` with [`SparseLayout::Balanced`].
+fn sconv_planes_balanced(
+    span: usize,
+    bal: &BalancedCsr,
+    ml0: usize,
+    mls: usize,
+    in_group: &[f32],
+    scratch: &mut [f32],
+    block: usize,
+) {
+    debug_assert_eq!(scratch.len(), mls * span);
+    let block = block.max(1);
+    let mut b0 = 0;
+    while b0 < span {
+        let b1 = (b0 + block).min(span);
+        for i in 0..mls {
+            let (vals, offs) = bal.row_slots(ml0 + i);
+            vector_accumulate(
+                vals,
+                offs,
+                in_group,
+                b0,
+                &mut scratch[i * span + b0..i * span + b1],
+            );
+        }
+        b0 = b1;
+    }
+}
+
 /// Pack output channels into contiguous tiles of ~equal stored-nonzero
 /// count — the unit of work the pool schedules. Equal-*plane* splitting
 /// assigns every channel the same weight, so one dense channel among
@@ -394,6 +583,7 @@ pub(crate) fn sconv_tiled(
     padded: &[f32],
     batch: usize,
     banks: &[StretchedFilter],
+    balanced: Option<&[BalancedCsr]>,
     tiles: &[Range<usize>],
     policy: &TilePolicy,
     pool: &WorkerPool,
@@ -418,7 +608,11 @@ pub(crate) fn sconv_tiled(
         // SAFETY: worker ids are unique among concurrently running
         // tiles of this job, and `tiles` partitions 0..M — see
         // `sconv_tile`.
-        unsafe { sconv_tile(shape, padded, banks, tiles, policy, tile, worker, &out_sh, &scr_sh) }
+        unsafe {
+            sconv_tile(
+                shape, padded, banks, balanced, tiles, policy, tile, worker, &out_sh, &scr_sh,
+            )
+        }
     });
 }
 
@@ -432,12 +626,16 @@ pub(crate) fn sconv_tiled(
 /// planes by construction.
 ///
 /// Stride-1 channels run through the cache-blocked multi-channel
-/// microkernel ([`sconv_planes_blocked`]): the tile's channels are cut
-/// into register blocks of up to `policy.mr` channels (never crossing a
-/// group boundary — channels of different groups read different input),
-/// each accumulated jointly over `policy.block_floats`-sized row
-/// blocks. Strided layers keep the per-channel gather kernel
-/// ([`sconv_plane`]).
+/// microkernel: the tile's channels are cut into register blocks of up
+/// to `policy.mr` channels (never crossing a group boundary — channels
+/// of different groups read different input), each accumulated jointly
+/// over `policy.block_floats`-sized row blocks. `policy.lanes` picks
+/// the kernel variant: `1` runs the scalar oracle
+/// ([`sconv_planes_blocked`]); `> 1` runs the vectorized kernel over
+/// CSR ([`sconv_planes_simd`]) or, when `balanced` banks were baked
+/// into the plan, over the bank-balanced layout
+/// ([`sconv_planes_balanced`]). Strided layers keep the per-channel
+/// gather kernel ([`sconv_plane`]).
 ///
 /// # Safety
 ///
@@ -451,6 +649,7 @@ pub(crate) unsafe fn sconv_tile(
     shape: &ConvShape,
     padded: &[f32],
     banks: &[StretchedFilter],
+    balanced: Option<&[BalancedCsr]>,
     tiles: &[Range<usize>],
     policy: &TilePolicy,
     tile: usize,
@@ -484,15 +683,38 @@ pub(crate) unsafe fn sconv_tile(
             let mls = mr.min(tiles[ct].end - m).min((g + 1) * mg - m);
             let in_group = &img[g * group_len..(g + 1) * group_len];
             let scr_block = &mut scr[..mls * span];
-            sconv_planes_blocked(
-                span,
-                &banks[g],
-                m % mg,
-                mls,
-                in_group,
-                scr_block,
-                policy.block_floats,
-            );
+            if policy.lanes > 1 {
+                match balanced {
+                    Some(bal) => sconv_planes_balanced(
+                        span,
+                        &bal[g],
+                        m % mg,
+                        mls,
+                        in_group,
+                        scr_block,
+                        policy.block_floats,
+                    ),
+                    None => sconv_planes_simd(
+                        span,
+                        &banks[g],
+                        m % mg,
+                        mls,
+                        in_group,
+                        scr_block,
+                        policy.block_floats,
+                    ),
+                }
+            } else {
+                sconv_planes_blocked(
+                    span,
+                    &banks[g],
+                    m % mg,
+                    mls,
+                    in_group,
+                    scr_block,
+                    policy.block_floats,
+                );
+            }
             // Extract each channel's E x F window from its scratch
             // plane — the same copy the per-channel kernel performs, so
             // every output byte is overwritten (no pre-zero needed).
@@ -564,6 +786,7 @@ pub fn sconv_with_pool(
         padded.data(),
         d.n,
         banks,
+        None, // free-function path: CSR layout (plans bake balanced banks)
         &tiles,
         &policy,
         pool,
@@ -866,6 +1089,207 @@ mod tests {
             at_min = n;
         }
         assert_eq!(at_min.target_tiles, TilePolicy::MIN_TILES);
+    }
+
+    /// The satellite fix: retiled targets are always multiples of `mr`,
+    /// so register blocks never straddle a tile boundary after a
+    /// retile — and the snap can never loop the adaptive walk forever.
+    #[test]
+    fn adjusted_snaps_tile_target_to_register_block_multiples() {
+        let p = TilePolicy {
+            target_tiles: 48,
+            mr: 3,
+            ..TilePolicy::default()
+        };
+        // 48*2 = 96 is a multiple of 3 already; 48/2 = 24 likewise.
+        assert_eq!(p.adjusted(1.8, 0.5).unwrap().target_tiles, 96);
+        assert_eq!(p.adjusted(1.0, 0.0).unwrap().target_tiles, 24);
+        // A non-multiple start snaps up on both moves.
+        let odd = TilePolicy {
+            target_tiles: 50,
+            mr: 3,
+            ..TilePolicy::default()
+        };
+        assert_eq!(odd.adjusted(1.8, 0.5).unwrap().target_tiles % 3, 0);
+        assert_eq!(odd.adjusted(1.0, 0.0).unwrap().target_tiles % 3, 0);
+        // Clamped walks terminate at mr multiples even when MAX/MIN
+        // aren't multiples of mr (512 % 3 != 0).
+        let mut fine = p;
+        while let Some(n) = fine.adjusted(2.0, 0.5) {
+            assert!(n.target_tiles > fine.target_tiles, "refine must refine");
+            fine = n;
+        }
+        assert_eq!(fine.target_tiles % 3, 0);
+        assert!(fine.target_tiles <= TilePolicy::MAX_TILES);
+        assert!(fine.target_tiles + 3 > TilePolicy::MAX_TILES, "stopped early");
+        let mut coarse = p;
+        while let Some(n) = coarse.adjusted(1.0, 0.0) {
+            assert!(n.target_tiles < coarse.target_tiles, "coarsen must coarsen");
+            coarse = n;
+        }
+        assert_eq!(coarse.target_tiles % 3, 0);
+        assert!(coarse.target_tiles >= TilePolicy::MIN_TILES);
+        // The lanes/layout axes ride along unchanged through a retile.
+        let vec_policy = TilePolicy {
+            lanes: SIMD_LANES,
+            layout: SparseLayout::Balanced,
+            ..TilePolicy::default()
+        };
+        let retiled = vec_policy.adjusted(1.8, 0.5).unwrap();
+        assert_eq!(retiled.lanes, SIMD_LANES);
+        assert_eq!(retiled.layout, SparseLayout::Balanced);
+    }
+
+    /// Count the bit-distance between two floats on the monotonic
+    /// integer number line (the usual ULP metric).
+    fn ulps(a: f32, b: f32) -> u64 {
+        fn key(x: f32) -> i64 {
+            let i = x.to_bits() as i32 as i64;
+            if i < 0 {
+                (i32::MIN as i64) - i
+            } else {
+                i
+            }
+        }
+        key(a).abs_diff(key(b))
+    }
+
+    /// The vectorized microkernel's contract, at the kernel level:
+    /// (a) byte-identical to itself across every register-block and
+    /// row-block geometry (per-element op order never depends on the
+    /// decomposition), (b) byte-identical between the CSR and the
+    /// bank-balanced layouts (padding slots are arithmetic no-ops),
+    /// (c) within a few ULPs of the scalar oracle (different summation
+    /// grouping, same sum).
+    #[test]
+    fn vector_microkernel_is_decomposition_invariant_and_ulp_close_to_scalar() {
+        let policies = [
+            (1usize, usize::MAX),
+            (1, 7),
+            (2, 64),
+            (3, 33),
+            (4, 1024),
+            (8, 5),
+        ];
+        for (i, shape) in shapes_under_test().into_iter().enumerate() {
+            if shape.stride != 1 {
+                continue; // the vector kernel only serves stride 1
+            }
+            let (x, w) = random_case(&shape, 1, 5200 + i as u64);
+            let banks = w.stretched_banks();
+            let padded = x.pad_spatial(shape.pad);
+            let (e, f) = (shape.out_h(), shape.out_w());
+            let wp = shape.padded_w();
+            let span = (e - 1) * wp + f;
+            let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
+            let group_len = cg * shape.padded_h() * wp;
+            let img = padded.image(0);
+
+            let run = |mr: usize, block: usize, balanced: Option<&[BalancedCsr]>| -> Vec<f32> {
+                let mut got = vec![0.0f32; shape.m * span];
+                let mut m = 0;
+                while m < shape.m {
+                    let g = m / mg;
+                    let mls = mr.min(shape.m - m).min((g + 1) * mg - m);
+                    let in_group = &img[g * group_len..(g + 1) * group_len];
+                    let scratch = &mut got[m * span..(m + mls) * span];
+                    match balanced {
+                        Some(bal) => sconv_planes_balanced(
+                            span, &bal[g], m % mg, mls, in_group, scratch, block,
+                        ),
+                        None => sconv_planes_simd(
+                            span, &banks[g], m % mg, mls, in_group, scratch, block,
+                        ),
+                    }
+                    m += mls;
+                }
+                got
+            };
+
+            // Scalar oracle planes (unblocked geometry).
+            let mut scalar = vec![0.0f32; shape.m * span];
+            for m in 0..shape.m {
+                let g = m / mg;
+                let in_group = &img[g * group_len..(g + 1) * group_len];
+                sconv_planes_blocked(
+                    span,
+                    &banks[g],
+                    m % mg,
+                    1,
+                    in_group,
+                    &mut scalar[m * span..(m + 1) * span],
+                    usize::MAX,
+                );
+            }
+
+            let reference = run(1, usize::MAX, None);
+            for &(mr, block) in &policies {
+                let got = run(mr, block, None);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    reference.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{shape} vector kernel not decomposition-invariant (mr{mr} block{block})"
+                );
+            }
+            let balanced: Vec<BalancedCsr> = banks
+                .iter()
+                .map(|b| BalancedCsr::from_csr(&b.csr, 4))
+                .collect();
+            for &(mr, block) in &policies {
+                let got = run(mr, block, Some(&balanced));
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    reference.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{shape} balanced layout changed bits (mr{mr} block{block})"
+                );
+            }
+            for (j, (&got, &want)) in reference.iter().zip(&scalar).enumerate() {
+                assert!(
+                    ulps(got, want) <= 256 || (got - want).abs() <= 1e-4,
+                    "{shape} elem {j}: vector {got} vs scalar {want} ({} ulps)",
+                    ulps(got, want)
+                );
+            }
+        }
+    }
+
+    /// When every CSR row holds at most one nonzero there is no
+    /// summation to reorder, so the vector path must reproduce the
+    /// scalar kernel **bit for bit** — the "exact when lane order
+    /// preserves op order" half of the tolerance contract.
+    #[test]
+    fn vector_kernel_is_bit_exact_on_single_nonzero_rows() {
+        let shape = ConvShape::new(2, 6, 9, 9, 3, 3, 1, 1);
+        // One tap per output channel, at varying (c, r, s) positions.
+        let per_ch = shape.c_per_group() * shape.r * shape.s;
+        let mut dense = vec![0.0f32; shape.weights()];
+        for m in 0..shape.m {
+            dense[m * per_ch + (m * 5) % per_ch] = 0.75 + m as f32 * 0.3;
+        }
+        let w = ConvWeights::from_dense(&shape, dense);
+        let banks = w.stretched_banks();
+        let mut rng = Rng::new(77);
+        let x = Tensor4::random_activations(Dims4::new(1, shape.c, shape.h, shape.w), &mut rng);
+        let padded = x.pad_spatial(shape.pad);
+        let (e, f) = (shape.out_h(), shape.out_w());
+        let wp = shape.padded_w();
+        let span = (e - 1) * wp + f;
+        let mg = shape.m_per_group();
+        let group_len = shape.c_per_group() * shape.padded_h() * wp;
+        let img = padded.image(0);
+        for m in 0..shape.m {
+            let g = m / mg;
+            let in_group = &img[g * group_len..(g + 1) * group_len];
+            let mut scalar = vec![0.0f32; span];
+            let mut vector = vec![0.0f32; span];
+            sconv_planes_blocked(span, &banks[g], m % mg, 1, in_group, &mut scalar, 1024);
+            sconv_planes_simd(span, &banks[g], m % mg, 1, in_group, &mut vector, 1024);
+            assert_eq!(
+                scalar.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                vector.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "channel {m}"
+            );
+        }
     }
 
     #[test]

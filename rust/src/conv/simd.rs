@@ -1,0 +1,132 @@
+//! Portable fixed-width f32 vector for the direct-sparse microkernel.
+//!
+//! `std::simd` is still nightly-only and this crate builds on stable, so
+//! the vector type is the `wide`-style emulation form: a fixed-size
+//! `[f32; SIMD_LANES]` with `#[inline(always)]` element-wise ops. Every
+//! lane operation has a static trip count and no cross-lane dependency,
+//! which is exactly the shape LLVM's auto-vectoriser lowers to packed
+//! FMA instructions on any target with vector units — and which degrades
+//! to a plain scalar loop (bit-identically) on targets without them.
+//! That makes this module safe to compile unconditionally; the `simd`
+//! cargo feature only flips the *default* [`TilePolicy::lanes`] from 1
+//! to [`SIMD_LANES`] so the offline default build keeps its byte-exact
+//! scalar contract.
+//!
+//! Determinism contract: a [`F32v`] accumulator applies, per lane, the
+//! same `fmaf` sequence as the scalar tail loop of the vector kernels —
+//! one fused (or mul-then-add, depending on `target_feature=fma`)
+//! operation per nonzero, in CSR order. Per output element the op
+//! sequence is therefore independent of strip boundaries, block
+//! geometry, tiling, and pool size; the vector path is byte-identical
+//! to itself under any decomposition, and differs from the 4-wide
+//! grouped scalar oracle only by summation-order rounding (the ULP
+//! harness in `tests/plan_props.rs` bounds that).
+//!
+//! [`TilePolicy::lanes`]: super::TilePolicy::lanes
+
+/// Output pixels per vector strip of the vectorized stride-1 microkernel.
+///
+/// Eight f32 lanes = one AVX2 register (two NEON quads); wider targets
+/// simply unroll. Compiled in every build — [`super::TilePolicy::lanes`]
+/// decides at *plan build time* whether the vector kernel runs.
+pub const SIMD_LANES: usize = 8;
+
+/// Fused multiply-add when the target has hardware FMA, plain
+/// multiply-then-add otherwise. One rounding contract per build: the
+/// vector lanes and the scalar tail of the vectorized kernels both go
+/// through this function, so per-element arithmetic never depends on
+/// whether an element landed in a full strip or in the tail.
+#[inline(always)]
+pub fn fmaf(a: f32, b: f32, c: f32) -> f32 {
+    #[cfg(target_feature = "fma")]
+    {
+        a.mul_add(b, c)
+    }
+    #[cfg(not(target_feature = "fma"))]
+    {
+        a * b + c
+    }
+}
+
+/// A `SIMD_LANES`-wide f32 vector emulated as a fixed-size array.
+///
+/// All ops are element-wise with static trip counts; the accumulator
+/// form `acc = x.mul_add(w, acc)` is the register block of the
+/// vectorized microkernel.
+#[derive(Clone, Copy, Debug)]
+#[repr(align(32))]
+pub struct F32v(pub [f32; SIMD_LANES]);
+
+impl F32v {
+    /// All lanes zero — the accumulator seed.
+    #[inline(always)]
+    pub fn zero() -> Self {
+        F32v([0.0; SIMD_LANES])
+    }
+
+    /// Broadcast one scalar (a nonzero weight) across all lanes.
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        F32v([v; SIMD_LANES])
+    }
+
+    /// Load the first `SIMD_LANES` floats of `src` (one strip of
+    /// contiguous input pixels).
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> Self {
+        let mut a = [0.0f32; SIMD_LANES];
+        a.copy_from_slice(&src[..SIMD_LANES]);
+        F32v(a)
+    }
+
+    /// Store all lanes into the first `SIMD_LANES` floats of `dst`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        dst[..SIMD_LANES].copy_from_slice(&self.0);
+    }
+
+    /// Per-lane `fmaf(self, b, c)` — the one arithmetic op of the
+    /// vector kernels' inner loop.
+    #[inline(always)]
+    pub fn mul_add(self, b: F32v, c: F32v) -> F32v {
+        let mut out = [0.0f32; SIMD_LANES];
+        for l in 0..SIMD_LANES {
+            out[l] = fmaf(self.0[l], b.0[l], c.0[l]);
+        }
+        F32v(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_apply_the_scalar_fmaf_bitwise() {
+        // The determinism contract: each lane must equal the scalar
+        // fmaf of its operands, bit for bit.
+        let a: Vec<f32> = (0..SIMD_LANES).map(|i| 0.1 + i as f32 * 0.37).collect();
+        let b: Vec<f32> = (0..SIMD_LANES).map(|i| -1.3 + i as f32 * 0.11).collect();
+        let acc: Vec<f32> = (0..SIMD_LANES).map(|i| 7.0 - i as f32).collect();
+        let got = F32v::load(&a).mul_add(F32v::load(&b), F32v::load(&acc));
+        for l in 0..SIMD_LANES {
+            assert_eq!(
+                got.0[l].to_bits(),
+                fmaf(a[l], b[l], acc[l]).to_bits(),
+                "lane {l}"
+            );
+        }
+    }
+
+    #[test]
+    fn splat_zero_load_store_round_trip() {
+        assert_eq!(F32v::zero().0, [0.0; SIMD_LANES]);
+        assert_eq!(F32v::splat(2.5).0, [2.5; SIMD_LANES]);
+        let src: Vec<f32> = (0..SIMD_LANES + 3).map(|i| i as f32).collect();
+        let v = F32v::load(&src);
+        let mut dst = vec![f32::NAN; SIMD_LANES + 3];
+        v.store(&mut dst);
+        assert_eq!(&dst[..SIMD_LANES], &src[..SIMD_LANES]);
+        assert!(dst[SIMD_LANES..].iter().all(|x| x.is_nan()));
+    }
+}

@@ -255,13 +255,18 @@ impl NetworkSchedule {
     /// the cached DirectSparse tile policies
     /// (`conv::PlanCache::adapt_tile_policies`) — subsequent
     /// [`NetworkSchedule::run`]s compile against the refined
-    /// granularity. Returns the number of layers retiled (0 when the
-    /// interval ran no distributed jobs or the granularity is already
-    /// right).
+    /// granularity. Reads only kernel-origin jobs
+    /// ([`PoolStats::interval_kernel_tiling_signal`]) so DAG plumbing
+    /// jobs (pad/relu/concat, untileable) can't dilute the imbalance
+    /// the retile is reacting to. Returns the number of layers retiled
+    /// (0 when the interval ran no distributed kernel jobs or the
+    /// granularity is already right).
+    ///
+    /// [`PoolStats::interval_kernel_tiling_signal`]: crate::util::PoolStats::interval_kernel_tiling_signal
     pub fn adapt_tiling(&self) -> usize {
         let now = self.pool.stats();
         let mut anchor = self.tile_stats.lock().unwrap();
-        let signal = now.interval_tiling_signal(&anchor);
+        let signal = now.interval_kernel_tiling_signal(&anchor);
         *anchor = now;
         drop(anchor);
         match signal {

@@ -544,11 +544,15 @@ fn executor_loop(
                 // a retile of a plan nothing executes must not force a
                 // replan. Changed layers' cached plans are invalidated,
                 // so a retile rides the same incremental rebuild below
-                // that a method flip does.
+                // that a method flip does. The signal reads only
+                // kernel-origin jobs: the DAG walk's per-image plumbing
+                // jobs (pad/relu/concat) are untileable and would
+                // otherwise dilute the imbalance the retile can fix.
                 let mut retiled = 0usize;
                 if cfg.adaptive_tiling {
                     let now = pool.stats();
-                    if let Some((imbalance, steal_rate)) = now.interval_tiling_signal(&tile_stats)
+                    if let Some((imbalance, steal_rate)) =
+                        now.interval_kernel_tiling_signal(&tile_stats)
                     {
                         metrics
                             .pool_job_imbalance_milli

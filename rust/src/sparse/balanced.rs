@@ -1,0 +1,263 @@
+//! Bank-balanced sparse layout for the vectorized microkernel —
+//! a sliced-ELL variant after Balanced Sparsity (PAPERS.md, arXiv
+//! 1811.00206) and the ELL slicing literature.
+//!
+//! The vector kernel processes register blocks of `mr` consecutive
+//! output channels. With raw CSR those channels carry *different* nnz
+//! counts, so inside one register block the per-channel inner loops
+//! have different trip counts: the block's progress is gated by its
+//! densest row while sparser rows finish early — the lane-idle problem
+//! Balanced Sparsity prunes away. [`BalancedCsr`] fixes it at the
+//! *layout* level instead of the pruning level: rows are grouped into
+//! **banks** of `bank_rows` (= the plan's `mr`) consecutive rows, and
+//! every row of a bank is padded with explicit `(0.0, colidx 0)` slots
+//! to the bank's max row nnz. Within a bank every row then has the
+//! identical static trip count, and the padded slots are arithmetic
+//! no-ops (`fmaf(0, x, acc)` returns `acc` bit-for-bit for finite `x`,
+//! since a running sum in the kernels is never `-0.0`).
+//!
+//! Unlike full ELL (one global `k = max_row_nnz`), padding is per-bank,
+//! so one dense row inflates only its own `mr`-row bank — the padding
+//! overhead of skewed layers stays proportional to the skew, not to the
+//! worst row. The layout is **lossless**: stored CSR matrices never
+//! contain explicit zeros ([`CsrMatrix::validate`]), so dropping the
+//! zero-valued slots reconstructs the original CSR exactly, in order.
+
+use super::CsrMatrix;
+
+/// A CSR matrix re-packed into nnz-balanced banks of consecutive rows
+/// (sliced ELL): within each bank of `bank_rows` rows, every row holds
+/// exactly the bank's `k` slots (real nonzeros in CSR column order,
+/// then zero padding), so a register block that walks one bank has one
+/// static trip count for all its rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BalancedCsr {
+    /// Row count of the original matrix.
+    pub rows: usize,
+    /// Column count of the original matrix.
+    pub cols: usize,
+    /// Rows per bank — the register-block height (`TilePolicy::mr`)
+    /// this layout was balanced for.
+    pub bank_rows: usize,
+    /// Per-bank slot count `k` = max row nnz within the bank.
+    pub bank_k: Vec<usize>,
+    /// Start offset of each bank into `values`/`colidx` (banks + 1
+    /// entries; bank `b` occupies `bank_ptr[b]..bank_ptr[b + 1]`).
+    pub bank_ptr: Vec<usize>,
+    /// Slot values, row-major within each bank; padding slots are 0.0.
+    pub values: Vec<f32>,
+    /// Slot column ids; padding slots use column 0 (always in range,
+    /// and harmless because the paired value is 0.0).
+    pub colidx: Vec<u32>,
+}
+
+impl BalancedCsr {
+    /// Re-pack `csr` into banks of `bank_rows` consecutive rows. The
+    /// last bank may be short when `rows % bank_rows != 0`.
+    pub fn from_csr(csr: &CsrMatrix, bank_rows: usize) -> Self {
+        let bank_rows = bank_rows.max(1);
+        let n_banks = csr.rows.div_ceil(bank_rows);
+        let mut bank_k = Vec::with_capacity(n_banks);
+        let mut bank_ptr = Vec::with_capacity(n_banks + 1);
+        let mut values = Vec::new();
+        let mut colidx = Vec::new();
+        bank_ptr.push(0);
+        for b in 0..n_banks {
+            let r0 = b * bank_rows;
+            let r1 = ((b + 1) * bank_rows).min(csr.rows);
+            let k = (r0..r1).map(|r| csr.row_nnz(r)).max().unwrap_or(0);
+            for r in r0..r1 {
+                let range = csr.row_range(r);
+                values.extend_from_slice(&csr.values[range.clone()]);
+                colidx.extend_from_slice(&csr.colidx[range.clone()]);
+                let pad = k - range.len();
+                values.extend(std::iter::repeat(0.0).take(pad));
+                colidx.extend(std::iter::repeat(0u32).take(pad));
+            }
+            bank_k.push(k);
+            bank_ptr.push(values.len());
+        }
+        Self {
+            rows: csr.rows,
+            cols: csr.cols,
+            bank_rows,
+            bank_k,
+            bank_ptr,
+            values,
+            colidx,
+        }
+    }
+
+    /// The `k` slots of row `r`: `(values, colidx)` slices of identical
+    /// length — real nonzeros in CSR order followed by zero padding.
+    #[inline(always)]
+    pub fn row_slots(&self, r: usize) -> (&[f32], &[u32]) {
+        let b = r / self.bank_rows;
+        let k = self.bank_k[b];
+        let start = self.bank_ptr[b] + (r - b * self.bank_rows) * k;
+        (
+            &self.values[start..start + k],
+            &self.colidx[start..start + k],
+        )
+    }
+
+    /// Number of banks.
+    pub fn banks(&self) -> usize {
+        self.bank_k.len()
+    }
+
+    /// Total slots stored (nnz + padding).
+    pub fn slots(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Stored nonzeros (excluding padding) — equals the source CSR's
+    /// nnz by construction.
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Fraction of slots that are padding — the cost of balancing,
+    /// analogous to [`super::EllMatrix`]'s padding overhead but bounded
+    /// per `bank_rows`-row bank instead of per matrix.
+    pub fn padding_ratio(&self) -> f64 {
+        if self.slots() == 0 {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / self.slots() as f64
+    }
+
+    /// Reconstruct the original CSR by dropping the padding slots.
+    /// Lossless because source matrices never store explicit zeros.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut values = Vec::with_capacity(self.nnz());
+        let mut colidx = Vec::with_capacity(self.nnz());
+        let mut rowptr = Vec::with_capacity(self.rows + 1);
+        rowptr.push(0u32);
+        for r in 0..self.rows {
+            let (vals, cols) = self.row_slots(r);
+            for (v, c) in vals.iter().zip(cols) {
+                if *v != 0.0 {
+                    values.push(*v);
+                    colidx.push(*c);
+                }
+            }
+            rowptr.push(values.len() as u32);
+        }
+        CsrMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            values,
+            colidx,
+            rowptr,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune_magnitude;
+    use crate::util::Rng;
+
+    fn random_csr(rows: usize, cols: usize, sparsity: f32, seed: u64) -> CsrMatrix {
+        let mut rng = Rng::new(seed);
+        let mut dense = rng.normal_vec(rows * cols);
+        if sparsity > 0.0 {
+            prune_magnitude(&mut dense, sparsity);
+        }
+        CsrMatrix::from_dense(rows, cols, &dense)
+    }
+
+    #[test]
+    fn rows_within_a_bank_carry_identical_slot_counts() {
+        // The balance property: zero spread inside every bank.
+        for (rows, cols, sp, bank_rows) in
+            [(16, 36, 0.7, 4), (13, 50, 0.9, 4), (7, 20, 0.5, 3), (9, 9, 0.0, 8)]
+        {
+            let csr = random_csr(rows, cols, sp, 42 + rows as u64);
+            let bal = BalancedCsr::from_csr(&csr, bank_rows);
+            for b in 0..bal.banks() {
+                let r0 = b * bank_rows;
+                let r1 = ((b + 1) * bank_rows).min(rows);
+                let counts: Vec<usize> = (r0..r1).map(|r| bal.row_slots(r).0.len()).collect();
+                assert!(
+                    counts.iter().all(|&k| k == bal.bank_k[b]),
+                    "bank {b} slot spread: {counts:?}"
+                );
+                // And k is tight: the densest row of the bank fills it.
+                let max_nnz = (r0..r1).map(|r| csr.row_nnz(r)).max().unwrap();
+                assert_eq!(bal.bank_k[b], max_nnz, "bank {b} over-padded");
+            }
+        }
+    }
+
+    #[test]
+    fn round_trips_to_csr_losslessly() {
+        for (rows, cols, sp, bank_rows) in [
+            (16, 36, 0.7, 4),
+            (13, 50, 0.95, 4),
+            (5, 8, 0.5, 2),
+            (6, 12, 0.0, 16), // bank_rows > rows: one short bank
+        ] {
+            let csr = random_csr(rows, cols, sp, 7 + cols as u64);
+            let bal = BalancedCsr::from_csr(&csr, bank_rows);
+            let back = bal.to_csr();
+            assert_eq!(back, csr, "{rows}x{cols} sp{sp} bank{bank_rows}");
+            back.validate().unwrap();
+            assert_eq!(bal.nnz(), csr.nnz());
+        }
+    }
+
+    #[test]
+    fn padding_slots_are_zero_valued_column_zero() {
+        let csr = random_csr(12, 30, 0.8, 11);
+        let bal = BalancedCsr::from_csr(&csr, 4);
+        let mut padding = 0;
+        for r in 0..bal.rows {
+            let (vals, cols) = bal.row_slots(r);
+            let nnz = csr.row_nnz(r);
+            // Real slots first, in CSR order.
+            let range = csr.row_range(r);
+            assert_eq!(&vals[..nnz], &csr.values[range.clone()]);
+            assert_eq!(&cols[..nnz], &csr.colidx[range]);
+            // Then padding: value 0.0, column 0.
+            assert!(vals[nnz..].iter().all(|&v| v == 0.0));
+            assert!(cols[nnz..].iter().all(|&c| c == 0));
+            padding += vals.len() - nnz;
+        }
+        assert_eq!(bal.slots(), bal.nnz() + padding);
+        let want_ratio = padding as f64 / bal.slots() as f64;
+        assert!((bal.padding_ratio() - want_ratio).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_all_zero_matrices() {
+        let empty = CsrMatrix::from_dense(4, 6, &vec![0.0; 24]);
+        let bal = BalancedCsr::from_csr(&empty, 4);
+        assert_eq!(bal.slots(), 0);
+        assert_eq!(bal.padding_ratio(), 0.0);
+        assert_eq!(bal.to_csr(), empty);
+        for r in 0..4 {
+            assert!(bal.row_slots(r).0.is_empty());
+        }
+    }
+
+    #[test]
+    fn one_dense_row_inflates_only_its_own_bank() {
+        // Rows 0..8 with 1 nnz each except row 5 fully dense: banks of
+        // 4 keep bank 0 at k=1; only bank 1 pays the dense row's k.
+        let cols = 10;
+        let mut dense = vec![0.0f32; 8 * cols];
+        for r in 0..8 {
+            dense[r * cols + (r % cols)] = 1.0 + r as f32;
+        }
+        for c in 0..cols {
+            dense[5 * cols + c] = 0.5 + c as f32;
+        }
+        let csr = CsrMatrix::from_dense(8, cols, &dense);
+        let bal = BalancedCsr::from_csr(&csr, 4);
+        assert_eq!(bal.bank_k, vec![1, cols]);
+        assert_eq!(bal.to_csr(), csr);
+    }
+}

@@ -1,13 +1,16 @@
 //! Sparse weight handling: CSR (paper Fig 4), ELLPACK (our TPU-friendly
-//! padded variant), magnitude pruning (produces the pruned models), and
-//! weight stretching (paper §3.1).
+//! padded variant), bank-balanced sliced ELL ([`BalancedCsr`], the
+//! vectorized microkernel's lane-friendly layout), magnitude pruning
+//! (produces the pruned models), and weight stretching (paper §3.1).
 
+mod balanced;
 mod csr;
 mod ell;
 mod prune;
 mod stats;
 mod stretch;
 
+pub use balanced::BalancedCsr;
 pub use csr::CsrMatrix;
 pub use ell::EllMatrix;
 pub use prune::{prune_magnitude, prune_magnitude_per_row, prune_random, prune_to_exact_nnz};

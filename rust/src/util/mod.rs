@@ -12,7 +12,7 @@ mod rng;
 mod stats;
 mod timer;
 
-pub use pool::{JobHandle, JobTicket, PoolStats, SharedSlice, WorkerPool};
+pub use pool::{JobHandle, JobOrigin, JobTicket, PoolStats, SharedSlice, WorkerPool};
 pub use rng::Rng;
 pub use stats::{geomean, mean, percentile, stddev};
 pub use timer::{ScopedTimer, Stopwatch};

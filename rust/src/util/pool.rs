@@ -109,12 +109,52 @@ impl TaskRef {
     }
 }
 
+/// Which subsystem submitted a job — the axis the per-job completion
+/// telemetry is folded under, so a consumer can read only the jobs it
+/// controls. The adaptive-tiling loop tunes the granularity of
+/// **kernel** jobs; before origins existed it read one pool-wide
+/// signal, and the DAG executor's many small per-image plumbing jobs
+/// (pad/relu/concat, inherently 1-tile-per-image and untileable)
+/// diluted — or on plumbing-heavy networks drowned — the imbalance of
+/// the conv jobs the retile can actually fix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobOrigin {
+    /// Compute-kernel tile jobs: every blocking [`WorkerPool::run`] /
+    /// [`WorkerPool::submit`] and the DAG executor's conv-kernel jobs.
+    /// The only origin [`TilePolicy::adjusted`] consumers should read
+    /// (via [`PoolStats::interval_kernel_tiling_signal`]).
+    ///
+    /// [`TilePolicy::adjusted`]: crate::conv::TilePolicy::adjusted
+    Kernel = 0,
+    /// DAG-walk plumbing jobs (pad, relu, fc, pool, lrn, concat): work
+    /// whose tile count is fixed by batch geometry, not by tiling
+    /// policy.
+    Dag = 1,
+    /// Serving-side auxiliary jobs (reserved for the coordinator; no
+    /// in-tree producer yet — the server's batches flow through the
+    /// DAG executor's `Kernel`/`Dag` jobs).
+    Serve = 2,
+}
+
+impl JobOrigin {
+    /// Number of origin lanes (the telemetry array length).
+    pub const COUNT: usize = 3;
+
+    /// Position of this origin in the `PoolStats::origin_*` arrays.
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
 /// One queued tile job. A borrowed task reference is a lifetime-erased
 /// view of the submitter's closure; it is only ever dereferenced while
 /// the job is incomplete, and the [`JobTicket`] contract guarantees the
 /// closure outlives completion. Owned tasks carry no such contract.
 struct Job {
     task: TaskRef,
+    /// Which subsystem submitted this job (telemetry attribution).
+    origin: JobOrigin,
     num_tiles: usize,
     /// Static block-partition share (`ceil(num_tiles / workers)`) used
     /// only for steal accounting: executing a tile outside your own
@@ -202,13 +242,14 @@ struct Shared {
     /// reflects only genuinely distributed jobs.
     inline_tiles: AtomicU64,
     jobs: AtomicU64,
-    /// Per-job completion telemetry, folded in at each handshake. One
-    /// mutex (uncontended: locked once per job completion and per
-    /// `stats` snapshot) keeps the numerator/denominator pairs
-    /// consistent — separate atomics would let a snapshot taken
-    /// mid-fold divide an imbalance sum missing a job by a tile count
-    /// that includes it.
-    job_telemetry: Mutex<JobTelemetry>,
+    /// Per-job completion telemetry, folded in at each handshake and
+    /// segregated by [`JobOrigin`] (indexed by `origin.index()`) so the
+    /// retile loop can read kernel jobs alone. One mutex (uncontended:
+    /// locked once per job completion and per `stats` snapshot) keeps
+    /// the numerator/denominator pairs consistent — separate atomics
+    /// would let a snapshot taken mid-fold divide an imbalance sum
+    /// missing a job by a tile count that includes it.
+    job_telemetry: Mutex<[JobTelemetry; JobOrigin::COUNT]>,
 }
 
 /// Cumulative per-job completion telemetry (see [`Shared::finish`] for
@@ -320,7 +361,8 @@ impl Shared {
         // signal would be dominated by jobs tiling cannot affect.
         let weight = job.num_tiles as u64;
         {
-            let mut t = self.job_telemetry.lock().unwrap();
+            let mut all = self.job_telemetry.lock().unwrap();
+            let t = &mut all[job.origin.index()];
             t.jobs += 1;
             t.tiles += weight;
             t.imbalance_milli += (imbalance * 1000.0) as u64 * weight;
@@ -423,7 +465,8 @@ pub struct PoolStats {
     pub steals: Vec<u64>,
     /// Queued (distributed) jobs whose completion handshake has fired.
     /// Inline jobs (1-worker pool or single-tile `run`) are excluded,
-    /// like [`PoolStats::inline_tiles`].
+    /// like [`PoolStats::inline_tiles`]. Sum over origins of
+    /// [`PoolStats::origin_jobs_completed`].
     pub jobs_completed: u64,
     /// Sum of `num_tiles` over completed jobs — the weight denominator
     /// of the per-job telemetry means.
@@ -437,6 +480,17 @@ pub struct PoolStats {
     /// milli-units, tile-weighted like
     /// [`PoolStats::job_imbalance_milli_sum`].
     pub job_occupancy_milli_sum: u64,
+    /// [`PoolStats::jobs_completed`] split by [`JobOrigin`] (indexed by
+    /// `origin as usize`).
+    pub origin_jobs_completed: [u64; JobOrigin::COUNT],
+    /// [`PoolStats::job_tiles_completed`] split by [`JobOrigin`].
+    pub origin_job_tiles: [u64; JobOrigin::COUNT],
+    /// [`PoolStats::job_imbalance_milli_sum`] split by [`JobOrigin`] —
+    /// the numerators the per-origin tiling signal reads, so the DAG
+    /// walk's untileable plumbing jobs cannot dilute the kernel signal.
+    pub origin_imbalance_milli: [u64; JobOrigin::COUNT],
+    /// [`PoolStats::job_occupancy_milli_sum`] split by [`JobOrigin`].
+    pub origin_occupancy_milli: [u64; JobOrigin::COUNT],
 }
 
 impl PoolStats {
@@ -515,11 +569,45 @@ impl PoolStats {
     /// steal counters have not flushed yet (they land a beat after the
     /// completion handshake), the steal rate reports as **1.0** —
     /// unknown must never read as "queue quiescent" and trigger a
-    /// coarsen (refining never consults the rate). Every consumer of
-    /// `TilePolicy::adjusted` should go through this helper rather
-    /// than pairing the two interval calls by hand.
+    /// coarsen (refining never consults the rate).
+    ///
+    /// This is the **all-origins** form; retile consumers that share a
+    /// pool with the DAG executor's plumbing jobs should prefer
+    /// [`PoolStats::interval_kernel_tiling_signal`], which reads only
+    /// the jobs tiling controls.
     pub fn interval_tiling_signal(&self, earlier: &PoolStats) -> Option<(f64, f64)> {
         let imbalance = self.interval_job_imbalance(earlier)?;
+        Some((imbalance, self.interval_steal_rate(earlier).unwrap_or(1.0)))
+    }
+
+    /// Tile-weighted mean per-job imbalance of **kernel-origin** jobs
+    /// completed since `earlier` — `None` when no kernel job completed
+    /// in the interval (plumbing-only intervals must not trigger a
+    /// retile).
+    pub fn interval_kernel_job_imbalance(&self, earlier: &PoolStats) -> Option<f64> {
+        let k = JobOrigin::Kernel.index();
+        let tiles = self.origin_job_tiles[k].checked_sub(earlier.origin_job_tiles[k])?;
+        if tiles == 0 {
+            return None;
+        }
+        let sum =
+            self.origin_imbalance_milli[k].checked_sub(earlier.origin_imbalance_milli[k])?;
+        Some(sum as f64 / tiles as f64 / 1000.0)
+    }
+
+    /// [`PoolStats::interval_tiling_signal`] restricted to
+    /// kernel-origin jobs: the imbalance numerator counts only jobs the
+    /// [`TilePolicy`] retile loop actually re-tiles, so per-image DAG
+    /// plumbing (pad/relu/concat — origin [`JobOrigin::Dag`]) can no
+    /// longer dilute the signal. The steal rate stays pool-wide (steal
+    /// counters are per worker, not per job — queue pressure is shared
+    /// either way), with the same unknown-reads-as-1.0 coarsen guard.
+    /// This is the form the serving executor and the scheduler's
+    /// `adapt_tiling` consume.
+    ///
+    /// [`TilePolicy`]: crate::conv::TilePolicy
+    pub fn interval_kernel_tiling_signal(&self, earlier: &PoolStats) -> Option<(f64, f64)> {
+        let imbalance = self.interval_kernel_job_imbalance(earlier)?;
         Some((imbalance, self.interval_steal_rate(earlier).unwrap_or(1.0)))
     }
 
@@ -730,7 +818,7 @@ impl WorkerPool {
             counters: (0..workers).map(|_| WorkerCounters::default()).collect(),
             inline_tiles: AtomicU64::new(0),
             jobs: AtomicU64::new(0),
-            job_telemetry: Mutex::new(JobTelemetry::default()),
+            job_telemetry: Mutex::new([JobTelemetry::default(); JobOrigin::COUNT]),
         });
         let handles = (1..workers)
             .map(|w| {
@@ -898,7 +986,9 @@ impl WorkerPool {
         // SAFETY: per the function contract the closure outlives the
         // job; the reference is never dereferenced after completion.
         let erased: &'static (dyn Fn(usize, usize) + Sync) = std::mem::transmute(task);
-        let job = self.enqueue(num_tiles, TaskRef::Borrowed(erased), deps);
+        // Borrowed submissions are the kernels' blocking/ticketed path
+        // (`run`/`submit`/`submit_after`) — always kernel-origin.
+        let job = self.enqueue(num_tiles, TaskRef::Borrowed(erased), JobOrigin::Kernel, deps);
         JobTicket {
             pool: self,
             job,
@@ -919,7 +1009,11 @@ impl WorkerPool {
     /// This is the submission surface of the DAG network executor:
     /// every inception-branch layer becomes one or more owned jobs
     /// chained behind its producers, and the concat job lists all four
-    /// branch tails as `deps`.
+    /// branch tails as `deps`. `origin` attributes the job's completion
+    /// telemetry: conv-kernel jobs pass [`JobOrigin::Kernel`] (they are
+    /// what the retile loop tunes), per-image plumbing passes
+    /// [`JobOrigin::Dag`], so the kernel-only tiling signal stays
+    /// undiluted.
     ///
     /// Dependencies must come from the same pool (checked in debug
     /// builds). A zero-tile job completes immediately, without waiting
@@ -928,6 +1022,7 @@ impl WorkerPool {
         &self,
         num_tiles: usize,
         task: Box<dyn Fn(usize, usize) + Send + Sync>,
+        origin: JobOrigin,
         deps: &[&JobHandle],
     ) -> JobHandle {
         for d in deps {
@@ -937,7 +1032,7 @@ impl WorkerPool {
             );
         }
         let deps: Vec<Arc<Job>> = deps.iter().map(|d| d.job.clone()).collect();
-        let job = self.enqueue(num_tiles, TaskRef::Owned(task), deps);
+        let job = self.enqueue(num_tiles, TaskRef::Owned(task), origin, deps);
         JobHandle {
             shared: self.shared.clone(),
             job,
@@ -946,11 +1041,18 @@ impl WorkerPool {
     }
 
     /// Shared queue-insertion path for borrowed and owned jobs.
-    fn enqueue(&self, num_tiles: usize, task: TaskRef, deps: Vec<Arc<Job>>) -> Arc<Job> {
+    fn enqueue(
+        &self,
+        num_tiles: usize,
+        task: TaskRef,
+        origin: JobOrigin,
+        deps: Vec<Arc<Job>>,
+    ) -> Arc<Job> {
         let sh = &self.shared;
         sh.jobs.fetch_add(1, Ordering::Relaxed);
         let job = Arc::new(Job {
             task,
+            origin,
             num_tiles,
             share: num_tiles.div_ceil(sh.workers).max(1),
             next_tile: AtomicUsize::new(0),
@@ -999,10 +1101,16 @@ impl WorkerPool {
                 .iter()
                 .map(|c| c.steals.load(Ordering::Relaxed))
                 .collect(),
-            jobs_completed: jt.jobs,
-            job_tiles_completed: jt.tiles,
-            job_imbalance_milli_sum: jt.imbalance_milli,
-            job_occupancy_milli_sum: jt.occupancy_milli,
+            // Aggregate fields are the over-origin sums, so every
+            // pre-origin consumer keeps reading the same totals.
+            jobs_completed: jt.iter().map(|t| t.jobs).sum(),
+            job_tiles_completed: jt.iter().map(|t| t.tiles).sum(),
+            job_imbalance_milli_sum: jt.iter().map(|t| t.imbalance_milli).sum(),
+            job_occupancy_milli_sum: jt.iter().map(|t| t.occupancy_milli).sum(),
+            origin_jobs_completed: jt.map(|t| t.jobs),
+            origin_job_tiles: jt.map(|t| t.tiles),
+            origin_imbalance_milli: jt.map(|t| t.imbalance_milli),
+            origin_occupancy_milli: jt.map(|t| t.occupancy_milli),
         }
     }
 }
@@ -1272,6 +1380,7 @@ mod tests {
                     Box::new(move |_t, _w| {
                         hits.fetch_add(1, Ordering::Relaxed);
                     }),
+                    JobOrigin::Dag,
                     &[],
                 )
             };
@@ -1286,6 +1395,7 @@ mod tests {
                     Box::new(move |_t, _w| {
                         hits2.fetch_add(1, Ordering::Relaxed);
                     }),
+                    JobOrigin::Dag,
                     &[],
                 );
                 // dropped here; must block until every tile ran
@@ -1312,6 +1422,7 @@ mod tests {
                         std::thread::yield_now();
                         a.fetch_add(1, Ordering::SeqCst);
                     }),
+                    JobOrigin::Kernel,
                     &[],
                 )
             };
@@ -1322,6 +1433,7 @@ mod tests {
                     Box::new(move |_t, _w| {
                         b.fetch_add(1, Ordering::SeqCst);
                     }),
+                    JobOrigin::Dag,
                     &[],
                 )
             };
@@ -1334,6 +1446,7 @@ mod tests {
                             ok.store(false, Ordering::SeqCst);
                         }
                     }),
+                    JobOrigin::Dag,
                     &[&ha, &hb],
                 )
             };
@@ -1357,9 +1470,9 @@ mod tests {
                 trace.lock().unwrap().push(tag);
             })
         };
-        let h1 = pool.submit_owned(2, mk(1, &trace), &[]);
-        let h2 = pool.submit_owned(2, mk(2, &trace), &[&h1]);
-        let h3 = pool.submit_owned(2, mk(3, &trace), &[&h2]);
+        let h1 = pool.submit_owned(2, mk(1, &trace), JobOrigin::Dag, &[]);
+        let h2 = pool.submit_owned(2, mk(2, &trace), JobOrigin::Dag, &[&h1]);
+        let h3 = pool.submit_owned(2, mk(3, &trace), JobOrigin::Dag, &[&h2]);
         h3.wait();
         assert_eq!(*trace.lock().unwrap(), vec![1, 1, 2, 2, 3, 3]);
         h1.wait();
@@ -1423,13 +1536,76 @@ mod tests {
     }
 
     #[test]
+    fn dag_origin_jobs_do_not_pollute_the_kernel_tiling_signal() {
+        let pool = WorkerPool::new(2);
+
+        // A kernel job (pool.run submits with JobOrigin::Kernel) lands in
+        // the kernel bucket only.
+        pool.run(6, &|_t, _w| {});
+        let after_kernel = pool.stats();
+        assert_eq!(
+            after_kernel.origin_jobs_completed[JobOrigin::Kernel.index()],
+            1
+        );
+        assert_eq!(after_kernel.origin_jobs_completed[JobOrigin::Dag.index()], 0);
+        assert_eq!(
+            after_kernel.origin_jobs_completed[JobOrigin::Serve.index()],
+            0
+        );
+
+        // DAG-origin jobs must leave the kernel bucket untouched...
+        pool.submit_owned(4, Box::new(|_t, _w| {}), JobOrigin::Dag, &[])
+            .wait();
+        pool.submit_owned(4, Box::new(|_t, _w| {}), JobOrigin::Dag, &[])
+            .wait();
+        let after_dag = pool.stats();
+        assert_eq!(after_dag.origin_jobs_completed[JobOrigin::Kernel.index()], 1);
+        assert_eq!(after_dag.origin_jobs_completed[JobOrigin::Dag.index()], 2);
+        assert_eq!(
+            after_dag.origin_job_tiles[JobOrigin::Kernel.index()],
+            after_kernel.origin_job_tiles[JobOrigin::Kernel.index()],
+            "dag jobs must not add kernel tiles"
+        );
+
+        // ...so a DAG-only interval yields no kernel retiling signal even
+        // though the aggregate interval saw completed jobs.
+        assert!(after_dag.interval_job_imbalance(&after_kernel).is_some());
+        assert!(after_dag
+            .interval_kernel_job_imbalance(&after_kernel)
+            .is_none());
+        assert!(after_dag
+            .interval_kernel_tiling_signal(&after_kernel)
+            .is_none());
+
+        // A fresh kernel job re-arms the kernel signal.
+        pool.run(6, &|_t, _w| {});
+        let after_more = pool.stats();
+        let (imb, rate) = after_more
+            .interval_kernel_tiling_signal(&after_dag)
+            .expect("a kernel job completed in the interval");
+        assert!(imb >= 0.999 && imb <= after_more.workers as f64, "{imb}");
+        assert!((0.0..=1.0).contains(&rate), "{rate}");
+
+        // Aggregate counters remain the sums over the origin buckets, so
+        // existing consumers keep reading the same totals.
+        assert_eq!(
+            after_more.jobs_completed,
+            after_more.origin_jobs_completed.iter().sum::<u64>()
+        );
+        assert_eq!(
+            after_more.job_tiles_completed,
+            after_more.origin_job_tiles.iter().sum::<u64>()
+        );
+    }
+
+    #[test]
     fn completion_timestamps_respect_dependency_order() {
         // 1-worker pool: the waiter's help-drain executes the chain in
         // dependency order on this thread, so h1's handshake (and its
         // stamp) deterministically precedes h2's.
         let pool = WorkerPool::new(1);
-        let h1 = pool.submit_owned(4, Box::new(|_t, _w| {}), &[]);
-        let h2 = pool.submit_owned(4, Box::new(|_t, _w| {}), &[&h1]);
+        let h1 = pool.submit_owned(4, Box::new(|_t, _w| {}), JobOrigin::Dag, &[]);
+        let h2 = pool.submit_owned(4, Box::new(|_t, _w| {}), JobOrigin::Dag, &[&h1]);
         let t2 = h2.wait_timed();
         let t1 = h1
             .completed_at()

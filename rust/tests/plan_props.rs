@@ -8,7 +8,7 @@
 use escoin::config::{googlenet, miniception, minicnn, ConvShape};
 use escoin::conv::{
     direct_dense, shapes_under_test, winograd_applicable, ConvWeights, LayerPlan, Method,
-    NetworkPlan, TilePolicy, Workspace, WorkspaceArena,
+    NetworkPlan, SparseLayout, TilePolicy, Workspace, WorkspaceArena, SIMD_LANES,
 };
 use escoin::tensor::{Dims4, Tensor4};
 use escoin::util::{Rng, WorkerPool};
@@ -93,22 +93,37 @@ fn property_plan_output_is_byte_identical_across_pool_sizes() {
 /// block length are pure geometry and must never touch a result bit.
 #[test]
 fn property_blocked_microkernel_is_byte_identical_across_policies_and_pools() {
+    // `lanes` is pinned to 1 throughout: this grid is the SCALAR
+    // byte-identity contract (the vectorized kernel is deliberately a
+    // different op order — its own grid below is ULP-bounded). The
+    // pinning keeps this test meaningful under `--features simd`, where
+    // `TilePolicy::default()` flips to vector lanes.
     let policies = [
-        TilePolicy::default(),
+        TilePolicy {
+            lanes: 1,
+            layout: SparseLayout::Csr,
+            ..TilePolicy::default()
+        },
         TilePolicy {
             target_tiles: 3,
             mr: 2,
             block_floats: 64,
+            lanes: 1,
+            layout: SparseLayout::Csr,
         },
         TilePolicy {
             target_tiles: 7,
             mr: 8,
             block_floats: 33,
+            lanes: 1,
+            layout: SparseLayout::Csr,
         },
         TilePolicy {
             target_tiles: 512,
             mr: 3,
             block_floats: 1,
+            lanes: 1,
+            layout: SparseLayout::Csr,
         },
     ];
     let pools: Vec<WorkerPool> = [1, 4, 8].into_iter().map(WorkerPool::new).collect();
@@ -136,6 +151,95 @@ fn property_blocked_microkernel_is_byte_identical_across_policies_and_pools() {
     }
 }
 
+/// Monotonic-key ULP distance: maps each float's bit pattern onto a
+/// number line where adjacent representable floats differ by 1, so the
+/// distance is order-of-magnitude aware (unlike an absolute epsilon).
+fn ulps(a: f32, b: f32) -> u64 {
+    fn key(x: f32) -> i64 {
+        let i = x.to_bits() as i32 as i64;
+        if i < 0 {
+            (i32::MIN as i64) - i
+        } else {
+            i
+        }
+    }
+    key(a).abs_diff(key(b))
+}
+
+/// The vectorized-microkernel acceptance grid (the tentpole's
+/// correctness contract), cfg-independent — the policies name their
+/// lane width explicitly, so this exercises the vector kernels even in
+/// the default (scalar-default) build:
+///
+/// * the SIMD plan is **byte-identical to itself** across pool sizes
+///   1/4/8 (per-element op order is fixed by CSR order, not by the
+///   strip/tile/pool decomposition);
+/// * the bank-balanced plan is **byte-identical** to the SIMD-CSR plan
+///   (padding slots are arithmetic no-ops);
+/// * both are ULP-bounded against the scalar byte-determinism oracle
+///   (the lane order reassociates the 4-wide-grouped scalar sums).
+#[test]
+fn property_vectorized_plans_are_pool_invariant_and_ulp_close_to_scalar() {
+    let pools: Vec<WorkerPool> = [1, 4, 8].into_iter().map(WorkerPool::new).collect();
+    let scalar_policy = TilePolicy {
+        lanes: 1,
+        layout: SparseLayout::Csr,
+        ..TilePolicy::default()
+    };
+    let simd_policy = TilePolicy {
+        lanes: SIMD_LANES,
+        layout: SparseLayout::Csr,
+        ..TilePolicy::default()
+    };
+    let balanced_policy = TilePolicy {
+        lanes: SIMD_LANES,
+        layout: SparseLayout::Balanced,
+        ..TilePolicy::default()
+    };
+    for (i, shape) in shapes_under_test().into_iter().enumerate() {
+        let (x, w) = case(&shape, 2, 4400 + i as u64);
+        let scalar_plan =
+            LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, scalar_policy);
+        let simd_plan = LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, simd_policy);
+        let balanced_plan =
+            LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, balanced_policy);
+
+        let scalar = scalar_plan.run(&x, &pools[0]);
+        let simd_ref = bits(simd_plan.run(&x, &pools[0]).data());
+        let bal_ref = bits(balanced_plan.run(&x, &pools[0]).data());
+        assert_eq!(
+            simd_ref, bal_ref,
+            "{shape}: balanced layout diverged from the CSR vector kernel"
+        );
+        for pool in &pools[1..] {
+            assert_eq!(
+                simd_ref,
+                bits(simd_plan.run(&x, pool).data()),
+                "{shape}: simd plan not pool-invariant at t{}",
+                pool.workers()
+            );
+            assert_eq!(
+                bal_ref,
+                bits(balanced_plan.run(&x, pool).data()),
+                "{shape}: balanced plan not pool-invariant at t{}",
+                pool.workers()
+            );
+        }
+        for (j, (&s, &v)) in scalar
+            .data()
+            .iter()
+            .zip(simd_plan.run(&x, &pools[0]).data())
+            .enumerate()
+        {
+            assert!(
+                ulps(s, v) <= 256 || (s - v).abs() <= 1e-4,
+                "{shape} elem {j}: scalar {s} vs simd {v} ({} ulps)",
+                ulps(s, v)
+            );
+        }
+    }
+}
+
 /// The blocked microkernel through the **async tile body** (the DAG
 /// executor's path): driving `run_async_tile` by hand under non-default
 /// policies must still reproduce the blocking `execute_into` bytes.
@@ -150,6 +254,18 @@ fn property_async_tile_body_honours_tile_policies() {
             target_tiles: 5,
             mr: 3,
             block_floats: 48,
+            lanes: 1,
+            layout: SparseLayout::Csr,
+        },
+        // The vectorized kernel through the same async body: the
+        // blocking/async agreement must hold for every lane width and
+        // layout, not just the scalar oracle.
+        TilePolicy {
+            target_tiles: 5,
+            mr: 4,
+            block_floats: 48,
+            lanes: SIMD_LANES,
+            layout: SparseLayout::Balanced,
         },
     ];
     for (i, shape) in shapes_under_test().into_iter().enumerate() {
