@@ -46,6 +46,25 @@
 //!   `SparseLayout::Balanced`: rows of each `mr`-channel bank padded
 //!   to equal slot counts — one static trip count per register block)
 //!   vs the same vector kernel walking raw CSR rows (`free_ns`).
+//! * `sconv-strided-b1`/`b8` — the strided row-gather register-block
+//!   kernel (`plan_ns`, per-phase gather strips shared by all `mr`
+//!   channels of the block and reused across nonzeros via the epoch
+//!   memo) vs the per-channel strided gather (`free_ns`,
+//!   `TilePolicy::unblocked()`: every channel re-gathers every output
+//!   row) on a ResNet-class stride-2 3x3 layer. Under `--features
+//!   simd` the blocked side is additionally lane-vectorized.
+//! * `sconv-depthwise-b1` — the same comparison on a MobileNet-class
+//!   depthwise layer (`groups == C`): the group-aware channel packer
+//!   coalesces whole single-channel groups into register blocks
+//!   (`plan_ns`) vs one gather pass per channel (`free_ns`).
+//! * `resnet50-dag-b1` — whole-network ResNet-50 iteration at batch 1:
+//!   sequential topological walk (`free_ns`) vs the asynchronous DAG
+//!   walk (`plan_ns`) over the residual branch/`Add`-merge graph.
+//! * `mobilenet-b1` — whole-network MobileNetV1 iteration at batch 1:
+//!   every conv planned with `TilePolicy::unblocked()` (`free_ns`,
+//!   per-channel gather) vs the default blocked policy (`plan_ns`),
+//!   same weight stream — the end-to-end win of the grouped/strided
+//!   blocked kernels on a depthwise-separable network.
 //! * `retile-adaptive` — a deliberately coarse tiling (`free_ns`,
 //!   one channel tile per image at batch `threads + 1`, so a lane must
 //!   run two whole-image tiles — straggler-bound by construction) vs
@@ -60,14 +79,16 @@
 //! Knobs: `ESCOIN_THREADS`, `ESCOIN_BENCH_WARMUP`, `ESCOIN_BENCH_ITERS`.
 
 use escoin::bench_harness::{bench_median, BenchOpts};
-use escoin::config::{alexnet, googlenet, ConvShape};
+use escoin::config::{alexnet, googlenet, mobilenetv1, resnet50, ConvShape, LayerKind};
 use escoin::conv::{
     lowered_gemm_parallel, lowered_spmm_parallel, sconv_parallel, ConvWeights, LayerPlan, Method,
-    NetworkPlan, PlanCache, SparseLayout, TilePolicy, Workspace, WorkspaceArena, SIMD_LANES,
+    NetworkPlan, PlanCache, SparseLayout, TilePolicy, WeightedOp, Workspace, WorkspaceArena,
+    SIMD_LANES,
 };
 use escoin::coordinator::{BatcherConfig, RouterConfig, ServerConfig, ServerHandle};
 use escoin::tensor::{Dims4, Tensor4};
 use escoin::util::{default_threads, Rng, WorkerPool};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 struct Row {
@@ -333,6 +354,92 @@ fn main() {
         }
     }
 
+    // Strided row-gather headline: the register-blocked strided kernel
+    // (per-phase gather strips shared by all `mr` channels of the block
+    // and memoized across nonzeros) vs the per-channel strided gather
+    // (`TilePolicy::unblocked()`: every channel re-gathers every output
+    // row from scratch), on a ResNet-class stride-2 3x3 layer. The
+    // default policy follows the build's lane width, so the simd leg
+    // additionally vectorizes the blocked side.
+    {
+        let shape = ConvShape::new(64, 64, 56, 56, 3, 3, 2, 1).with_sparsity(0.7);
+        let mut rng = Rng::new(6);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let gather =
+            LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, TilePolicy::unblocked());
+        let blocked =
+            LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, TilePolicy::default());
+        for (b, label) in [(1usize, "sconv-strided-b1"), (8usize, "sconv-strided-b8")] {
+            let x =
+                Tensor4::random_activations(Dims4::new(b, shape.c, shape.h, shape.w), &mut rng);
+            ws.ensure(
+                gather
+                    .workspace_floats(b, pool.workers())
+                    .max(blocked.workspace_floats(b, pool.workers())),
+            );
+            let mut out = Tensor4::zeros(blocked.out_dims(b));
+            let gather_t = bench_median(bench, || {
+                gather.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+            });
+            let blocked_t = bench_median(bench, || {
+                blocked.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+            });
+            rows.push(Row {
+                shape: "resnet_conv_3x3_s2_56x56_sp70",
+                method: label,
+                batch: b,
+                free_ns: gather_t.as_nanos(),
+                plan_ns: blocked_t.as_nanos(),
+            });
+            println!(
+                "{label}: per-channel-gather {gather_t:?}  blocked {blocked_t:?}  ({:.2}x)",
+                gather_t.as_secs_f64() / blocked_t.as_secs_f64().max(1e-12)
+            );
+        }
+    }
+
+    // Depthwise headline: the same gather-vs-blocked comparison on a
+    // MobileNet-class depthwise layer (`groups == C`), where the
+    // group-aware packer coalesces whole single-channel groups into
+    // `mr`-channel register blocks instead of falling back to one
+    // per-channel pass per group.
+    {
+        let shape = ConvShape::new(512, 512, 14, 14, 3, 3, 1, 1)
+            .with_groups(512)
+            .with_sparsity(0.5);
+        let mut rng = Rng::new(7);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let gather =
+            LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, TilePolicy::unblocked());
+        let blocked =
+            LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, TilePolicy::default());
+        let b = 1usize;
+        let x = Tensor4::random_activations(Dims4::new(b, shape.c, shape.h, shape.w), &mut rng);
+        ws.ensure(
+            gather
+                .workspace_floats(b, pool.workers())
+                .max(blocked.workspace_floats(b, pool.workers())),
+        );
+        let mut out = Tensor4::zeros(blocked.out_dims(b));
+        let gather_t = bench_median(bench, || {
+            gather.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+        });
+        let blocked_t = bench_median(bench, || {
+            blocked.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+        });
+        rows.push(Row {
+            shape: "mobilenet_dw_3x3_14x14_g512_sp50",
+            method: "sconv-depthwise-b1",
+            batch: b,
+            free_ns: gather_t.as_nanos(),
+            plan_ns: blocked_t.as_nanos(),
+        });
+        println!(
+            "sconv-depthwise-b1: per-channel {gather_t:?}  blocked {blocked_t:?}  ({:.2}x)",
+            gather_t.as_secs_f64() / blocked_t.as_secs_f64().max(1e-12)
+        );
+    }
+
     // Adaptive-retile headline: a deliberately coarse tiling vs the
     // tiling the measured-imbalance feedback loop refines it into —
     // the serving executor runs exactly this adjustment at its replan
@@ -455,6 +562,85 @@ fn main() {
                 sequential.as_secs_f64() / dag.as_secs_f64().max(1e-12)
             );
         }
+    }
+
+    // DAG-vs-sequential walk on ResNet-50's residual graph: every
+    // bottleneck's main path and shortcut are real branches joined by
+    // an elementwise Add merge, so the async walk can overlap the
+    // shortcut's downsample conv with the main 1x1-3x3-1x1 chain.
+    // Batch 1 only — the network is ~4x GoogLeNet's MACs.
+    {
+        let net = resnet50();
+        let b = 1usize;
+        let plan = NetworkPlan::build(&net, b, 42, |_, _| Method::DirectSparse);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+        let sequential = bench_median(bench, || {
+            plan.run(&pool, &mut arena);
+        });
+        let dag = bench_median(bench, || {
+            plan.run_async(None, &pool, &mut arena);
+        });
+        rows.push(Row {
+            shape: "resnet50",
+            method: "resnet50-dag-b1",
+            batch: b,
+            free_ns: sequential.as_nanos(),
+            plan_ns: dag.as_nanos(),
+        });
+        println!(
+            "resnet50-dag-b1: sequential-walk {sequential:?}  dag-walk {dag:?} ({:.2}x)",
+            sequential.as_secs_f64() / dag.as_secs_f64().max(1e-12)
+        );
+    }
+
+    // Whole-network MobileNetV1 at batch 1: every conv planned with the
+    // per-channel gather policy (`TilePolicy::unblocked()`) vs the
+    // default blocked policy, identical weight stream (both walks
+    // replicate `NetworkPlan::build`'s seeded RNG order) — the
+    // end-to-end win of the grouped/strided blocked kernels on a
+    // depthwise-separable network.
+    {
+        let net = mobilenetv1();
+        let b = 1usize;
+        let build_with = |policy: TilePolicy| -> NetworkPlan {
+            let mut rng = Rng::new(42);
+            NetworkPlan::from_parts(&net, b, &mut |layer| match &layer.kind {
+                LayerKind::Conv(shape) => {
+                    let w = Arc::new(ConvWeights::synthetic(shape, &mut rng));
+                    let method = if shape.is_sparse() {
+                        Method::DirectSparse
+                    } else {
+                        Method::LoweredGemm
+                    };
+                    Some(WeightedOp::Conv(Arc::new(
+                        LayerPlan::build_shared_with_policy(shape, w, method, policy),
+                    )))
+                }
+                LayerKind::Fc(fc) => Some(WeightedOp::Fc(Arc::new(rng.normal_vec(fc.weights())))),
+                _ => None,
+            })
+        };
+        let gather = build_with(TilePolicy::unblocked());
+        let blocked = build_with(TilePolicy::default());
+        let mut gather_arena = WorkspaceArena::for_plan(&gather, &pool);
+        let mut blocked_arena = WorkspaceArena::for_plan(&blocked, &pool);
+        let gather_t = bench_median(bench, || {
+            gather.run(&pool, &mut gather_arena);
+        });
+        let blocked_t = bench_median(bench, || {
+            blocked.run(&pool, &mut blocked_arena);
+        });
+        rows.push(Row {
+            shape: "mobilenetv1",
+            method: "mobilenet-b1",
+            batch: b,
+            free_ns: gather_t.as_nanos(),
+            plan_ns: blocked_t.as_nanos(),
+        });
+        println!(
+            "mobilenet-b1: per-channel-gather {gather_t:?}  blocked {blocked_t:?} ({:.2}x)",
+            gather_t.as_secs_f64() / blocked_t.as_secs_f64().max(1e-12)
+        );
     }
 
     // Replan cost: the old executor rebuilt every layer (weights

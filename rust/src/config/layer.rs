@@ -260,6 +260,19 @@ pub enum LayerKind {
         /// Spatial width (shared by every input).
         w: usize,
     },
+    /// Elementwise addition of this layer's **exactly two** declared
+    /// dataflow inputs (`Layer::inputs`), producing `c` channels of
+    /// `h x w` — the merge point of a residual block. Both inputs must
+    /// already have shape `c x h x w`; `config::Network::validate_graph`
+    /// checks the arity and `conv::NetworkPlan` checks the dims.
+    Add {
+        /// Output channels (same as both inputs).
+        c: usize,
+        /// Spatial height (same as both inputs).
+        h: usize,
+        /// Spatial width (same as both inputs).
+        w: usize,
+    },
     /// Elementwise ReLU over `elems` activations.
     Relu { elems: usize },
     /// Local response normalisation over `elems` activations (AlexNet).
@@ -276,6 +289,7 @@ impl LayerKind {
             LayerKind::Fc(f) => f.macs(n),
             LayerKind::Pool { .. }
             | LayerKind::Concat { .. }
+            | LayerKind::Add { .. }
             | LayerKind::Relu { .. }
             | LayerKind::Lrn { .. } => 0,
         }
@@ -382,6 +396,16 @@ mod tests {
     #[test]
     fn concat_is_weightless_and_mac_free() {
         let k = LayerKind::Concat { c: 256, h: 28, w: 28 };
+        assert_eq!(k.weights(), 0);
+        assert_eq!(k.macs(8), 0);
+        assert!(k.as_conv().is_none());
+    }
+
+    #[test]
+    fn add_is_weightless_and_mac_free() {
+        // Residual merges carry no weights and the paper's MAC totals
+        // only count Conv + FC, so Add must not perturb Table 3.
+        let k = LayerKind::Add { c: 256, h: 56, w: 56 };
         assert_eq!(k.weights(), 0);
         assert_eq!(k.macs(8), 0);
         assert!(k.as_conv().is_none());

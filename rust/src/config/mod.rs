@@ -13,5 +13,5 @@ mod networks;
 pub use layer::{pool_out_dim, ConvShape, FcShape, LayerKind, PoolKind};
 pub use network::{Layer, Network, NetworkSummary};
 pub use networks::{
-    alexnet, all_networks, googlenet, minicnn, miniception, network_by_name, resnet50,
+    alexnet, all_networks, googlenet, minicnn, miniception, mobilenetv1, network_by_name, resnet50,
 };

@@ -47,7 +47,8 @@ impl Layer {
 /// A full network: ordered layers, as enumerated in `networks.rs`.
 #[derive(Clone, Debug)]
 pub struct Network {
-    /// Network name (`alexnet`, `googlenet`, `resnet50`, `minicnn`).
+    /// Network name (`alexnet`, `googlenet`, `resnet50`, `mobilenetv1`,
+    /// `minicnn`).
     pub name: String,
     /// Layers in execution order.
     pub layers: Vec<Layer>,
@@ -126,7 +127,8 @@ impl Network {
     }
 
     /// Strip the explicit dataflow graph: drop [`LayerKind::Concat`]
-    /// merge layers (weight- and MAC-free) and clear every `inputs`
+    /// and [`LayerKind::Add`] merge layers (weight- and MAC-free) and
+    /// clear every `inputs`
     /// list, leaving the seed-style chain in which a layer whose shape
     /// does not match its predecessor runs on a fresh synthetic input.
     /// The figure benches use this when *spatially scaling* a network
@@ -135,8 +137,12 @@ impl Network {
     /// per-layer timings stay faithful (conv cost depends only on
     /// shapes).
     pub fn into_chain(mut self) -> Network {
-        self.layers
-            .retain(|l| !matches!(l.kind, LayerKind::Concat { .. }));
+        self.layers.retain(|l| {
+            !matches!(
+                l.kind,
+                LayerKind::Concat { .. } | LayerKind::Add { .. }
+            )
+        });
         for l in &mut self.layers {
             l.inputs.clear();
         }
@@ -145,7 +151,8 @@ impl Network {
 
     /// Validate the dataflow graph: layer names unique, every declared
     /// input names an **earlier** layer (so list order is a topological
-    /// order), concats list at least two inputs, every other kind at
+    /// order), concats list at least two inputs, adds exactly two,
+    /// every other kind at
     /// most one, and only the first layer is a source. Chain networks
     /// (no explicit inputs) are trivially valid.
     pub fn validate_graph(&self) -> Result<(), String> {
@@ -171,6 +178,15 @@ impl Network {
                         return Err(format!(
                             "concat {:?} needs at least two inputs",
                             layer.name
+                        ));
+                    }
+                }
+                LayerKind::Add { .. } => {
+                    if layer.inputs.len() != 2 {
+                        return Err(format!(
+                            "add {:?} needs exactly two inputs, got {}",
+                            layer.name,
+                            layer.inputs.len()
                         ));
                     }
                 }

@@ -222,9 +222,14 @@ pub fn googlenet() -> Network {
     }
 }
 
-/// One ResNet-50 bottleneck block: 1x1 reduce, 3x3 (stride `stride`,
-/// pruned), 1x1 expand, plus an optional 1x1 downsample projection.
-/// Spatial `hw` is the *input* spatial size of the block.
+/// One ResNet-50 bottleneck block as a **residual branch/merge graph**:
+/// 1x1 reduce, 3x3 (stride `stride`, pruned), 1x1 expand, plus either a
+/// 1x1 downsample projection or the identity shortcut, joined by a
+/// [`LayerKind::Add`] merge. Spatial `hw` is the *input* spatial size of
+/// the block; `input` names the block's feeding layer, and the returned
+/// name is the block's `…/add` merge, which the next block (or the head
+/// pool) consumes.
+#[allow(clippy::too_many_arguments)]
 fn bottleneck(
     layers: &mut Vec<Layer>,
     name: &str,
@@ -234,32 +239,70 @@ fn bottleneck(
     stride: usize,
     downsample: bool,
     sp3: f32,
-) {
+    input: &str,
+) -> String {
     let out_c = mid * 4;
     let out_hw = if stride == 2 { hw / 2 } else { hw };
-    layers.push(conv(
-        &format!("{name}/conv1"),
-        ConvShape::new(in_c, mid, hw, hw, 1, 1, 1, 0),
-    ));
+    layers.push(
+        conv(
+            &format!("{name}/conv1"),
+            ConvShape::new(in_c, mid, hw, hw, 1, 1, 1, 0),
+        )
+        .with_inputs([input]),
+    );
     // v1.5 convention: the stage stride lives in the 3x3.
-    layers.push(conv(
-        &format!("{name}/conv2"),
-        ConvShape::new(mid, mid, hw, hw, 3, 3, stride, 1).with_sparsity(sp3),
-    ));
-    layers.push(conv(
-        &format!("{name}/conv3"),
-        ConvShape::new(mid, out_c, out_hw, out_hw, 1, 1, 1, 0),
-    ));
-    if downsample {
-        layers.push(conv(
-            &format!("{name}/downsample"),
-            ConvShape::new(in_c, out_c, hw, hw, 1, 1, stride, 0),
-        ));
-    }
+    layers.push(
+        conv(
+            &format!("{name}/conv2"),
+            ConvShape::new(mid, mid, hw, hw, 3, 3, stride, 1).with_sparsity(sp3),
+        )
+        .with_inputs([format!("{name}/conv1")]),
+    );
+    layers.push(
+        conv(
+            &format!("{name}/conv3"),
+            ConvShape::new(mid, out_c, out_hw, out_hw, 1, 1, 1, 0),
+        )
+        .with_inputs([format!("{name}/conv2")]),
+    );
+    // Shortcut branch: a strided 1x1 projection when the block changes
+    // channels or resolution, the identity edge otherwise.
+    let shortcut = if downsample {
+        layers.push(
+            conv(
+                &format!("{name}/downsample"),
+                ConvShape::new(in_c, out_c, hw, hw, 1, 1, stride, 0),
+            )
+            .with_inputs([input]),
+        );
+        format!("{name}/downsample")
+    } else {
+        input.to_string()
+    };
+    layers.push(
+        Layer::new(
+            format!("{name}/add"),
+            LayerKind::Add {
+                c: out_c,
+                h: out_hw,
+                w: out_hw,
+            },
+        )
+        .with_inputs([format!("{name}/conv3"), shortcut]),
+    );
+    format!("{name}/add")
 }
 
 /// ResNet-50. 53 CONV layers (stem + 48 block convs + 4 downsample
 /// projections); the 16 bottleneck 3x3 convs are pruned.
+///
+/// Like [`googlenet`], this table is a real **branch/merge dataflow
+/// graph**: every bottleneck declares its main path and shortcut
+/// explicitly and joins them in a [`LayerKind::Add`] residual merge, so
+/// `conv::NetworkPlan` compiles it into a DAG whose shortcut and main
+/// branches the async executor overlaps (`NetworkPlan::run_async`).
+/// `Network::into_chain` strips the Add merges (weight- and MAC-free)
+/// when the fig. 9/11 scaled harnesses need the seed-style chain walk.
 pub fn resnet50() -> Network {
     let mut layers = vec![
         conv("conv1", ConvShape::new(3, 64, 224, 224, 7, 7, 2, 3)),
@@ -273,6 +316,7 @@ pub fn resnet50() -> Network {
         (5, 3, 7, 512, 0.80),
     ];
     let mut in_c = 64;
+    let mut prev = "pool1".to_string();
     for (stage, blocks, hw, mid, sp) in stages {
         for b in 0..blocks {
             let first = b == 0;
@@ -283,7 +327,7 @@ pub fn resnet50() -> Network {
             // block of stages 3..5 (they receive the previous stage's
             // resolution), `hw` afterwards.
             let block_hw = if first && stage > 2 { hw * 2 } else { hw };
-            bottleneck(
+            prev = bottleneck(
                 &mut layers,
                 &format!("conv{stage}_{}", b + 1),
                 block_hw,
@@ -292,14 +336,84 @@ pub fn resnet50() -> Network {
                 stride,
                 first,
                 sp,
+                &prev,
             );
             in_c = mid * 4;
         }
     }
-    layers.push(pool("avgpool", PoolKind::Avg, 2048, 7, 7, 7, 1, 0));
+    layers.push(pool("avgpool", PoolKind::Avg, 2048, 7, 7, 7, 1, 0).with_inputs([prev]));
     layers.push(fc("fc", 2048, 1000));
     Network {
         name: "ResNet".to_string(),
+        layers,
+    }
+}
+
+/// One MobileNetV1 depthwise-separable pair: a 3x3 **depthwise** conv
+/// (`groups == in_c`, stride `stride`) followed by a 1x1 pointwise conv
+/// to `out_c` channels (pruned at `sp_pw` when nonzero — MobileNet's
+/// weights live almost entirely in the pointwise layers, so that is
+/// where pruning pays). Returns the pair's output spatial size.
+fn dw_sep(
+    layers: &mut Vec<Layer>,
+    name: &str,
+    hw: usize,
+    in_c: usize,
+    out_c: usize,
+    stride: usize,
+    sp_pw: f32,
+) -> usize {
+    let out_hw = if stride == 2 { hw / 2 } else { hw };
+    layers.push(conv(
+        &format!("{name}/dw"),
+        ConvShape::new(in_c, in_c, hw, hw, 3, 3, stride, 1).with_groups(in_c),
+    ));
+    let mut pw = ConvShape::new(in_c, out_c, out_hw, out_hw, 1, 1, 1, 0);
+    if sp_pw > 0.0 {
+        pw = pw.with_sparsity(sp_pw);
+    }
+    layers.push(conv(&format!("{name}/pw"), pw));
+    out_hw
+}
+
+/// MobileNetV1 (width multiplier 1.0, 224x224 input). 27 CONV layers:
+/// the stride-2 stem plus 13 depthwise-separable pairs
+/// ([`LayerKind::Conv`] with `groups == C` for the 3x3s), ending in a
+/// 7x7 average pool and a 1024→1000 classifier. The large pointwise
+/// layers are pruned — together with the depthwise 3x3s this makes the
+/// network the crate's torture test for the grouped/strided blocked
+/// microkernels (every conv here is 1x1, strided, or depthwise).
+pub fn mobilenetv1() -> Network {
+    let mut layers = vec![conv(
+        "conv1",
+        ConvShape::new(3, 32, 224, 224, 3, 3, 2, 1),
+    )];
+    // (out_channels, dw_stride, pointwise sparsity) per separable pair.
+    let pairs: [(usize, usize, f32); 13] = [
+        (64, 1, 0.0),
+        (128, 2, 0.5),
+        (128, 1, 0.6),
+        (256, 2, 0.6),
+        (256, 1, 0.65),
+        (512, 2, 0.7),
+        (512, 1, 0.75),
+        (512, 1, 0.75),
+        (512, 1, 0.75),
+        (512, 1, 0.75),
+        (512, 1, 0.75),
+        (1024, 2, 0.75),
+        (1024, 1, 0.8),
+    ];
+    let mut hw = 112;
+    let mut in_c = 32;
+    for (i, (out_c, stride, sp)) in pairs.into_iter().enumerate() {
+        hw = dw_sep(&mut layers, &format!("conv{}", i + 2), hw, in_c, out_c, stride, sp);
+        in_c = out_c;
+    }
+    layers.push(pool("avgpool", PoolKind::Avg, 1024, 7, 7, 7, 1, 0));
+    layers.push(fc("fc", 1024, 1000));
+    Network {
+        name: "MobileNetV1".to_string(),
         layers,
     }
 }
@@ -357,13 +471,14 @@ pub fn all_networks() -> Vec<Network> {
 }
 
 /// Case-insensitive lookup by the names used throughout the paper, plus
-/// the serving-path `minicnn` and the inception-structured test network
-/// `miniception`.
+/// the serving-path `minicnn`, the inception-structured test network
+/// `miniception`, and the depthwise-separable `mobilenetv1`.
 pub fn network_by_name(name: &str) -> Option<Network> {
     match name.to_ascii_lowercase().as_str() {
         "alexnet" => Some(alexnet()),
         "googlenet" => Some(googlenet()),
         "resnet" | "resnet50" | "resnet-50" => Some(resnet50()),
+        "mobilenet" | "mobilenetv1" | "mobilenet-v1" => Some(mobilenetv1()),
         "minicnn" => Some(minicnn()),
         "miniception" => Some(miniception()),
         _ => None,
@@ -483,6 +598,8 @@ mod tests {
     fn lookup_by_name() {
         assert!(network_by_name("AlexNet").is_some());
         assert!(network_by_name("resnet-50").is_some());
+        assert!(network_by_name("MobileNet").is_some());
+        assert!(network_by_name("mobilenetv1").is_some());
         assert!(network_by_name("MiniCeption").is_some());
         assert!(network_by_name("vgg").is_none());
     }
@@ -516,8 +633,73 @@ mod tests {
         }
         // The chain networks stay pure chains.
         assert!(!alexnet().has_explicit_graph());
-        assert!(!resnet50().has_explicit_graph());
+        assert!(!mobilenetv1().has_explicit_graph());
         assert!(!minicnn().has_explicit_graph());
+    }
+
+    #[test]
+    fn resnet50_is_a_valid_residual_graph() {
+        let net = resnet50();
+        assert!(net.has_explicit_graph());
+        net.validate_graph().expect("resnet50 graph");
+        // Every bottleneck merges its expand conv with the shortcut:
+        // the downsample projection in a stage's first block, the
+        // previous block's add otherwise.
+        let adds: Vec<&Layer> = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Add { .. }))
+            .collect();
+        assert_eq!(adds.len(), 16, "one residual merge per bottleneck");
+        for add in &adds {
+            assert_eq!(add.inputs.len(), 2, "{}", add.name);
+        }
+        let first = net
+            .layers
+            .iter()
+            .find(|l| l.name == "conv3_1/add")
+            .unwrap();
+        assert_eq!(
+            first.inputs,
+            vec!["conv3_1/conv3".to_string(), "conv3_1/downsample".to_string()]
+        );
+        let LayerKind::Add { c, h, w } = first.kind else {
+            panic!("conv3_1/add is not an add");
+        };
+        assert_eq!((c, h, w), (512, 28, 28));
+        let second = net
+            .layers
+            .iter()
+            .find(|l| l.name == "conv3_2/add")
+            .unwrap();
+        assert_eq!(
+            second.inputs,
+            vec!["conv3_2/conv3".to_string(), "conv3_1/add".to_string()],
+            "identity shortcut reads the previous merge"
+        );
+    }
+
+    #[test]
+    fn mobilenetv1_geometry_chains() {
+        let net = mobilenetv1();
+        // 1 stem + 13 depthwise/pointwise pairs.
+        assert_eq!(net.conv_layers().len(), 27);
+        // Every 3x3 is depthwise (groups == C == M); every 1x1 is dense
+        // across channels; the spatial chain 224→112→56→28→14→7 closes.
+        for (name, c) in net.conv_layers() {
+            if c.r == 3 && name != "conv1" {
+                assert!(c.groups == c.c && c.m == c.c, "{name} is not depthwise");
+            } else if name != "conv1" {
+                assert_eq!((c.r, c.s, c.groups), (1, 1, 1), "{name}");
+            }
+        }
+        assert_eq!(net.find_conv("conv13/pw").unwrap().out_h(), 7);
+        assert_eq!(net.find_conv("conv14/pw").unwrap().m, 1024);
+        // MobileNetV1 at width 1.0: ~4.2M weights, ~569M MACs.
+        let s = net.summary();
+        assert!(within(s.weights as f64, 4.2e6, 0.05), "weights={}", s.weights);
+        assert!(within(s.macs as f64, 569e6, 0.05), "macs={}", s.macs);
+        assert!(!net.sparse_conv_layers().is_empty());
     }
 
     #[test]
@@ -570,6 +752,17 @@ mod tests {
         let s = chain.summary();
         assert_eq!(s.conv_layers, 57);
         assert_eq!(s.sparse_conv_layers, 19);
+        // Same for the residual graph: Add merges strip away and the
+        // fig. 9/11 scaled harnesses see the seed-style conv chain.
+        let chain = resnet50().into_chain();
+        assert!(!chain.has_explicit_graph());
+        assert!(chain
+            .layers
+            .iter()
+            .all(|l| !matches!(l.kind, LayerKind::Add { .. })));
+        let s = chain.summary();
+        assert_eq!(s.conv_layers, 53);
+        assert_eq!(s.sparse_conv_layers, 16);
     }
 
     #[test]
@@ -602,5 +795,17 @@ mod tests {
             ],
         };
         assert!(net.validate_graph().is_err());
+        // Add with the wrong arity (residual merges take exactly two).
+        for inputs in [vec!["a"], vec!["a", "b", "b"]] {
+            let net = Network {
+                name: "bad4".into(),
+                layers: vec![
+                    conv("a", ConvShape::new(3, 4, 8, 8, 3, 3, 1, 1)),
+                    conv("b", ConvShape::new(3, 4, 8, 8, 3, 3, 1, 1)),
+                    Layer::new("add", LayerKind::Add { c: 4, h: 8, w: 8 }).with_inputs(inputs),
+                ],
+            };
+            assert!(net.validate_graph().is_err());
+        }
     }
 }

@@ -34,7 +34,8 @@
 //! inception modules) compiles to a **DAG plan**: steps carry
 //! dependency edges, activations live in liveness-assigned *slots*
 //! instead of the two ping-pong buffers, a concat step writes its
-//! inputs' channel ranges, and each step gets a workspace interval that
+//! inputs' channel ranges, a residual add step sums its two inputs
+//! elementwise, and each step gets a workspace interval that
 //! never overlaps a step it can run concurrently with. Such a plan has
 //! two walks that produce **byte-identical** logits:
 //!
@@ -120,6 +121,15 @@ fn lrn_in_place(xs: &mut [f32]) {
     for v in xs {
         let x2 = *v * *v;
         *v /= (1.0 + 1e-4 * x2).powf(0.75);
+    }
+}
+
+/// Elementwise residual add over one activation block — the ONE body
+/// shared by the sequential DAG walk and the async per-image add jobs,
+/// so both walks run identical arithmetic by construction.
+fn add_into(a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x + y;
     }
 }
 
@@ -224,6 +234,12 @@ enum PlanOp {
     /// per-image float count (`c_i * H * W`); inputs are copied into
     /// consecutive channel ranges in declaration order.
     Concat { parts: Vec<usize> },
+    /// Elementwise residual add (DAG plans only): exactly two inputs of
+    /// identical dims, summed per element — the merge point of a ResNet
+    /// bottleneck. The slot-liveness rule keeps the shortcut's value
+    /// alive across the block's main path automatically (the add
+    /// consumes it, so its slot cannot be reclaimed earlier).
+    Add,
 }
 
 struct PlanStep {
@@ -459,6 +475,18 @@ impl NetworkPlan {
                     let dims = Dims4::new(batch, *c, *h, *w);
                     (PlanOp::Concat { parts }, dims, dims, MatchMode::Exact)
                 }
+                LayerKind::Add { c, h, w } => {
+                    assert!(
+                        graph && producer_dims.len() == 2,
+                        "{}: add needs a layer graph with exactly 2 inputs",
+                        layer.name
+                    );
+                    let dims = Dims4::new(batch, *c, *h, *w);
+                    for d in &producer_dims {
+                        assert_eq!(*d, dims, "{}: add input dims", layer.name);
+                    }
+                    (PlanOp::Add, dims, dims, MatchMode::Exact)
+                }
                 LayerKind::Relu { elems } => (
                     PlanOp::Relu,
                     Dims4::new(batch, *elems, 1, 1),
@@ -475,7 +503,8 @@ impl NetworkPlan {
 
             // Graph mode: real dataflow means shapes must chain —
             // validate against the producer instead of synthesising.
-            if graph && !matches!(op, PlanOp::Concat { .. }) {
+            // Concat and Add validated all their producers above.
+            if graph && !matches!(op, PlanOp::Concat { .. } | PlanOp::Add) {
                 if let Some(d) = producer_dims.first() {
                     match matching {
                         MatchMode::Exact => assert_eq!(
@@ -1084,6 +1113,9 @@ impl NetworkPlan {
                     concat_images(self.batch, step.out_dims.chw(), parts, &ins, out)
                 });
             }
+            PlanOp::Add => {
+                lap(&mut sw, "add", || add_into(ins[0], ins[1], out));
+            }
         }
 
         if let Some(obs) = observer.as_mut() {
@@ -1382,6 +1414,19 @@ impl NetworkPlan {
                         dst.copy_from_slice(src);
                     });
                     step_jobs.push(pool.submit_owned(batch * np, task, JobOrigin::Dag, &dep_handles));
+                }
+                PlanOp::Add => {
+                    let (a_sh, b_sh) = (in_shs[0], in_shs[1]);
+                    let task = Box::new(move |n: usize, _worker: usize| {
+                        // SAFETY: per-image output ranges are disjoint;
+                        // both producers completed before this job
+                        // became runnable.
+                        let a = unsafe { a_sh.slice_ref(n * out_chw, out_chw) };
+                        let b = unsafe { b_sh.slice_ref(n * out_chw, out_chw) };
+                        let dst = unsafe { out_sh.slice_mut(n * out_chw, out_chw) };
+                        add_into(a, b, dst);
+                    });
+                    step_jobs.push(pool.submit_owned(batch, task, JobOrigin::Dag, &dep_handles));
                 }
             }
             drop(dep_handles);
@@ -2186,6 +2231,69 @@ mod tests {
         // read-only).
         let want = plan.run_async(None, &pool, &mut arena).to_vec();
         assert_eq!(logits, want);
+    }
+
+    #[test]
+    fn residual_add_merges_sum_their_inputs_across_walks() {
+        // A tiny residual block: `stem` feeds both the main-path conv
+        // and the add, so the slot-liveness rule must keep the shortcut
+        // alive across the main path under every schedule.
+        let stem_shape = ConvShape::new(3, 4, 8, 8, 3, 3, 1, 1);
+        let main_shape = ConvShape::new(4, 4, 8, 8, 3, 3, 1, 1).with_sparsity(0.5);
+        let net = Network {
+            name: "miniresidual".into(),
+            layers: vec![
+                Layer::new("stem", LayerKind::Conv(stem_shape.clone())),
+                Layer::new("main", LayerKind::Conv(main_shape.clone())).with_inputs(["stem"]),
+                Layer::new("add", LayerKind::Add { c: 4, h: 8, w: 8 })
+                    .with_inputs(["main", "stem"]),
+            ],
+        };
+        let pool = WorkerPool::new(4);
+        let plan = NetworkPlan::build(&net, 2, 37, |_, _| Method::DirectSparse);
+        assert!(plan.supports_async());
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+        let mut rng = Rng::new(13);
+        let mut img = vec![0.0; plan.input_dims().len()];
+        rng.fill_activations(&mut img);
+        let want = plan.run_with_input(&img, &pool, &mut arena).to_vec();
+        for workers in [1, 4] {
+            let pool = WorkerPool::new(workers);
+            let got = plan.run_async(Some(&img), &pool, &mut arena).to_vec();
+            assert_eq!(
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "async walk diverged at {workers} workers"
+            );
+        }
+        // The merge really sums: prefix chains built from the same seed
+        // reproduce the weight stream, so their outputs are exactly the
+        // add's two inputs (each post-ReLU conv output).
+        let stem_net = Network {
+            name: "stem-only".into(),
+            layers: vec![Layer::new("stem", LayerKind::Conv(stem_shape.clone()))],
+        };
+        let main_net = Network {
+            name: "stem-main".into(),
+            layers: vec![
+                Layer::new("stem", LayerKind::Conv(stem_shape)),
+                Layer::new("main", LayerKind::Conv(main_shape)),
+            ],
+        };
+        let stem_plan = NetworkPlan::build(&stem_net, 2, 37, |_, _| Method::DirectSparse);
+        let main_plan = NetworkPlan::build(&main_net, 2, 37, |_, _| Method::DirectSparse);
+        let shortcut = stem_plan.run_with_input(&img, &pool, &mut arena).to_vec();
+        let main_out = main_plan.run_with_input(&img, &pool, &mut arena).to_vec();
+        let expected: Vec<f32> = main_out
+            .iter()
+            .zip(&shortcut)
+            .map(|(&x, &y)| x + y)
+            .collect();
+        assert_eq!(
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            expected.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "add output must be the elementwise sum of its inputs"
+        );
     }
 
     #[test]

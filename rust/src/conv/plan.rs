@@ -204,8 +204,9 @@ fn padded_view<'a>(
 /// once (paper §3.1), output channels pre-packed into **nnz-weighted
 /// tiles** (each tile ~equal stored nonzeros, so each pool tile is
 /// ~equal FLOPs — skewed per-channel sparsity cannot idle workers the
-/// way equal-plane splitting does), per-worker stride-1 scratch planes
-/// carved from the workspace. The tile count and the microkernel's
+/// way equal-plane splitting does), per-worker scratch — stride-1
+/// accumulator planes, or the strided row-gather strip table — carved
+/// from the workspace. The tile count and the microkernel's
 /// cache-block geometry come from an explicit [`TilePolicy`], fixed at
 /// build time (tile geometry is baked into the plan so in-flight runs
 /// — including captured async tile counts — can never observe a
@@ -232,17 +233,17 @@ impl DirectSparsePlan {
 
     /// Stretch the weights and pack channel tiles under an explicit
     /// [`TilePolicy`] — the adaptive-tiling rebuild path. When the
-    /// policy asks for [`SparseLayout::Balanced`] (stride-1 layers
-    /// only; the strided gather kernel has no vector path), the
-    /// stretched banks are additionally re-packed into per-`mr`-bank
-    /// balanced slot rows here, once, so the serving loop's retiles
+    /// policy asks for [`SparseLayout::Balanced`], the stretched banks
+    /// are additionally re-packed into per-`mr`-bank balanced slot
+    /// rows here, once (both the stride-1 span kernel and the strided
+    /// row-gather kernel consume them), so the serving loop's retiles
     /// and method flips pay the packing cost at plan build — never on
     /// the execute path.
     pub fn build_with_policy(shape: &ConvShape, weights: &ConvWeights, policy: TilePolicy) -> Self {
         assert_eq!(weights.shape, *shape, "weights/shape mismatch");
         let banks = weights.stretched_banks();
         let (tiles, tile_nnz) = nnz_channel_tiles(shape, &banks, policy.target_tiles);
-        let balanced = (policy.layout == SparseLayout::Balanced && shape.stride == 1).then(|| {
+        let balanced = (policy.layout == SparseLayout::Balanced).then(|| {
             banks
                 .iter()
                 .map(|b| BalancedCsr::from_csr(&b.csr, policy.mr.max(1)))
@@ -264,7 +265,7 @@ impl DirectSparsePlan {
     }
 
     /// The bank-balanced banks, when the policy baked them
-    /// ([`SparseLayout::Balanced`], stride 1).
+    /// ([`SparseLayout::Balanced`]).
     pub fn balanced(&self) -> Option<&[BalancedCsr]> {
         self.balanced.as_deref()
     }
@@ -920,10 +921,26 @@ pub fn shapes_under_test() -> Vec<ConvShape> {
         ConvShape::new(2, 3, 9, 9, 5, 5, 1, 2).with_sparsity(0.8),
         // strided (ResNet downsample 3x3 stride 2)
         ConvShape::new(4, 4, 8, 8, 3, 3, 2, 1).with_sparsity(0.6),
+        // strided + grouped (the grouped row-gather path)
+        ConvShape::new(4, 6, 9, 9, 3, 3, 2, 1)
+            .with_groups(2)
+            .with_sparsity(0.5),
+        // stride > filter width (ResNet 1x1 stride-2 projection)
+        ConvShape::new(6, 8, 7, 7, 1, 1, 2, 0).with_sparsity(0.6),
+        // large stride, 5x5 taps (AlexNet conv1 class, phases > 1)
+        ConvShape::new(3, 4, 11, 11, 5, 5, 4, 2).with_sparsity(0.6),
         // grouped (AlexNet conv4/conv5 class)
         ConvShape::new(4, 6, 7, 7, 3, 3, 1, 1)
             .with_groups(2)
             .with_sparsity(0.5),
+        // depthwise 3x3 (MobileNetV1 dw layer)
+        ConvShape::new(6, 6, 8, 8, 3, 3, 1, 1)
+            .with_groups(6)
+            .with_sparsity(0.4),
+        // depthwise 3x3 stride 2 (MobileNetV1 downsample dw layer)
+        ConvShape::new(5, 5, 9, 9, 3, 3, 2, 1)
+            .with_groups(5)
+            .with_sparsity(0.4),
         // 1x1 pointwise
         ConvShape::new(8, 4, 5, 5, 1, 1, 1, 0).with_sparsity(0.6),
         // valid padding, rectangular input
@@ -1003,6 +1020,43 @@ mod tests {
             plan.execute_into(3, x.data(), &pool, &mut ws, out.data_mut(), None);
         }
         assert_eq!(ws.capacity(), cap, "steady-state workspace growth");
+    }
+
+    /// The strided-workspace satellite: `stride > 1` plans used to
+    /// claim zero scratch; now they must account the per-worker
+    /// row-gather strip table — nonzero, scaling linearly with the
+    /// worker count — and the arena must still reach steady state
+    /// after the first run (grow once, then never again).
+    #[test]
+    fn strided_workspace_is_accounted_and_grows_once() {
+        for shape in [
+            ConvShape::new(4, 4, 9, 9, 3, 3, 2, 1).with_sparsity(0.5),
+            ConvShape::new(6, 6, 9, 9, 3, 3, 2, 1)
+                .with_groups(6)
+                .with_sparsity(0.4),
+        ] {
+            let (x, w) = case(&shape, 2, 61);
+            let pool = WorkerPool::new(4);
+            let plan = LayerPlan::build(&shape, &w, Method::DirectSparse);
+            let plen = pad_floats(&shape, 2);
+            let one = plan.workspace_floats(2, 1);
+            let four = plan.workspace_floats(2, 4);
+            assert!(one > plen, "{shape}: strided plan must claim gather scratch");
+            assert_eq!(
+                four - plen,
+                4 * (one - plen),
+                "{shape}: gather scratch must be per worker"
+            );
+            let mut ws = Workspace::new();
+            let mut out = Tensor4::zeros(plan.out_dims(2));
+            plan.execute_into(2, x.data(), &pool, &mut ws, out.data_mut(), None);
+            let cap = ws.capacity();
+            assert!(cap >= plan.workspace_floats(2, pool.workers()));
+            for _ in 0..3 {
+                plan.execute_into(2, x.data(), &pool, &mut ws, out.data_mut(), None);
+            }
+            assert_eq!(ws.capacity(), cap, "{shape}: steady-state workspace growth");
+        }
     }
 
     #[test]

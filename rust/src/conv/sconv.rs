@@ -60,6 +60,26 @@
 //! kernel over [`BalancedCsr`] banks (equal per-row slot counts within
 //! each `mr` bank, padding slots arithmetic no-ops), bit-identical to
 //! the CSR vector kernel.
+//!
+//! ## The strided row-gather microkernel (`stride > 1`)
+//!
+//! Strided layers cannot collapse `E x F` into one contiguous span, so
+//! the original path re-streamed the input once per output channel
+//! through per-element gathers ([`sconv_plane`]'s strided branch —
+//! kept as the byte-identity oracle). The blocked strided kernels
+//! instead stage each distinct `(channel, tap-row, phase)` gather
+//! **once per output row** into a contiguous strip (the
+//! [`StridedGather`] table, epoch-tagged per row, so a register block
+//! of `mr` channels — and every nonzero sharing a gather pattern —
+//! reuses one staged strip), then accumulate from the strips
+//! contiguously: 4-wide fused scalar groups ([`sconv_strided_blocked`],
+//! byte-identical to the oracle for every `mr`) or splat-FMA [`F32v`]
+//! strips ([`sconv_strided_vector`], the same slot-order `fmaf`
+//! contract as the stride-1 vector kernels; CSR and balanced layouts
+//! bit-identical). Grouped and depthwise layers run the same kernels —
+//! register blocks clip at group boundaries (`mls = 1` for depthwise,
+//! where no two channels share input), and [`nnz_channel_tiles`] packs
+//! tiles group-aware so tile boundaries respect group boundaries.
 
 use crate::config::ConvShape;
 use crate::sparse::{BalancedCsr, EllMatrix, StretchedFilter};
@@ -70,9 +90,10 @@ use std::ops::Range;
 use super::simd::{fmaf, F32v};
 pub use super::simd::SIMD_LANES;
 
-/// Which packing of the stretched filter banks the stride-1 microkernel
-/// walks — a per-plan axis of [`TilePolicy`] that
-/// [`super::DirectSparsePlan`] bakes at build time.
+/// Which packing of the stretched filter banks the blocked microkernels
+/// (stride-1 span and strided row-gather alike) walk — a per-plan axis
+/// of [`TilePolicy`] that [`super::DirectSparsePlan`] bakes at build
+/// time.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SparseLayout {
     /// Raw stretched CSR banks — the scalar oracle's layout, and the
@@ -107,19 +128,25 @@ pub struct TilePolicy {
     /// ([`nnz_channel_tiles`]); more tiles = finer load balancing,
     /// fewer tiles = less scheduling overhead.
     pub target_tiles: usize,
-    /// Output channels per register block of the stride-1 microkernel —
-    /// the input reuse factor: each input row block is loaded once and
-    /// reused by the nonzeros of `mr` channels while cache-resident.
+    /// Output channels per register block of the blocked microkernels —
+    /// the input reuse factor: each input row block (stride 1) or
+    /// staged gather strip (stride > 1) is loaded once and reused by
+    /// the nonzeros of `mr` channels while cache-resident. Register
+    /// blocks never cross a group boundary, so depthwise layers
+    /// degenerate to `mr = 1` blocks by construction.
     pub mr: usize,
     /// Stride-1 scratch row-block length in floats (the L1 blocking
     /// unit). `usize::MAX` disables blocking (one pass over the whole
-    /// span per channel — the PR-2 kernel shape).
+    /// span per channel — the PR-2 kernel shape). The strided
+    /// row-gather kernel blocks per output row instead and ignores
+    /// this axis.
     pub block_floats: usize,
-    /// Output pixels per vector strip of the stride-1 inner loop.
-    /// `1` selects the scalar blocked kernel (the byte-determinism
-    /// oracle); `> 1` (normally [`SIMD_LANES`]) selects the vectorized
-    /// kernel, which broadcasts each nonzero across a strip of `lanes`
-    /// contiguous output pixels and FMA-accumulates in registers.
+    /// Output pixels per vector strip of the inner loop (stride-1 span
+    /// or strided gather strip). `1` selects the scalar blocked kernel
+    /// (the byte-determinism oracle); `> 1` (normally [`SIMD_LANES`])
+    /// selects the vectorized kernel, which broadcasts each nonzero
+    /// across a strip of `lanes` contiguous output pixels and
+    /// FMA-accumulates in registers.
     pub lanes: usize,
     /// Which filter-bank packing the kernel walks (see
     /// [`SparseLayout`]).
@@ -228,13 +255,15 @@ impl TilePolicy {
 
 /// Scratch floats one worker needs under `policy`: the stride-1 fast
 /// path accumulates a register block of `mr` channels into `mr`
-/// `(E-1)*Wp + F` planes at once; the strided path needs none, but one
-/// float keeps per-worker chunking uniform.
+/// `(E-1)*Wp + F` planes at once; the strided path stages row gathers
+/// in the [`StridedGather`] strip table (one epoch tag plus one
+/// `glen_cap`-float strip per distinct `(channel, tap-row, phase)`
+/// gather pattern of an input group).
 pub(crate) fn worker_scratch_floats(shape: &ConvShape, policy: &TilePolicy) -> usize {
     if shape.stride == 1 {
         policy.mr.max(1) * ((shape.out_h() - 1) * shape.padded_w() + shape.out_w())
     } else {
-        1
+        StridedGather::of(shape).scratch_floats()
     }
 }
 
@@ -246,6 +275,13 @@ pub(crate) fn worker_scratch_floats(shape: &ConvShape, policy: &TilePolicy) -> u
 /// output row performs four fused AXPYs, amortising the load/store of the
 /// accumulator row — without this, short rows (F ≈ 13 on the 3x3 layers)
 /// are store-bound and the direct method loses its edge.
+///
+/// Since the strided row-gather kernels took over the `stride > 1`
+/// dispatch, this per-channel kernel survives as the **byte-identity
+/// oracle** the microkernel tests measure against (its strided branch
+/// fixes the per-element operation sequence the blocked kernels must
+/// reproduce).
+#[cfg_attr(not(test), allow(dead_code))]
 #[inline]
 fn sconv_plane(
     shape: &ConvShape,
@@ -499,6 +535,257 @@ fn sconv_planes_balanced(
     }
 }
 
+/// Geometry of the strided row-gather scratch. For `stride > 1` every
+/// nonzero's window over an output row is a strided gather
+/// (`in_group[off + h*stride*Wp + w*stride]`), so the strided
+/// microkernels stage each distinct gather pattern once per output row
+/// into a contiguous **strip** and let every channel of the register
+/// block (and every vector lane) read it contiguously.
+///
+/// A nonzero at tap `(c, r, s)` reads phase `q = s % stride` of input
+/// row `h*stride + r` of channel `c`; two nonzeros sharing `(c, r, q)`
+/// read overlapping windows of the **same** strip, shifted by
+/// `s / stride` — so the strip table is indexed by `(c, r, q)` and a
+/// nonzero consumes the contiguous window `strip[s/stride ..][..F]`.
+/// Strip `(c, r, q)` at output row `h` holds
+/// `in_group[c*Hp*Wp + (h*stride + r)*Wp + q + j*stride]` for
+/// `j < (S-1-q)/stride + F`; the maximum column touched is
+/// `q + (S-1-q) + (F-1)*stride <= S-1 + Wp-S = Wp-1` (the floor in
+/// `F = (W + 2p - S)/stride + 1` gives `(F-1)*stride <= Wp - S`), and
+/// the maximum row is `(E-1)*stride + R-1 <= Hp-1` likewise, so every
+/// gather stays inside the padded image — including the balanced
+/// layout's padding slots, whose offset 0 decodes to strip `(0, 0, 0)`.
+#[derive(Clone, Copy)]
+struct StridedGather {
+    /// Padded plane floats `Hp * Wp` — the channel pitch of an offset.
+    plane: usize,
+    /// Padded row floats `Wp`.
+    wp: usize,
+    /// Filter height `R` (tap rows per channel).
+    r_taps: usize,
+    /// Filter width `S`.
+    s_taps: usize,
+    /// Output width `F` — the window every nonzero reads per row.
+    f: usize,
+    /// Convolution stride (`> 1` on this path).
+    stride: usize,
+    /// Distinct phases per `(channel, tap-row)`: `min(stride, S)`.
+    phases: usize,
+    /// Strip capacity in floats: `(S-1)/stride + F`, the longest
+    /// per-phase window (phase 0).
+    glen_cap: usize,
+    /// Strip count: `Cg * R * phases`.
+    strips: usize,
+}
+
+impl StridedGather {
+    /// The gather geometry of one input group of `shape`.
+    fn of(shape: &ConvShape) -> Self {
+        let stride = shape.stride;
+        let phases = stride.min(shape.s);
+        Self {
+            plane: shape.padded_h() * shape.padded_w(),
+            wp: shape.padded_w(),
+            r_taps: shape.r,
+            s_taps: shape.s,
+            f: shape.out_w(),
+            stride,
+            phases,
+            glen_cap: (shape.s - 1) / stride + shape.out_w(),
+            strips: shape.c_per_group() * shape.r * phases,
+        }
+    }
+
+    /// Per-worker scratch floats: one epoch tag per strip plus the
+    /// strip table itself.
+    fn scratch_floats(&self) -> usize {
+        self.strips * (1 + self.glen_cap)
+    }
+
+    /// Map a stretched offset to its `(strip index, window shift)`
+    /// pair. The stretch layout guarantees `r < R` and `s < S`
+    /// ([`crate::sparse::stretch_weights`]), so the decode is exact.
+    #[inline]
+    fn decode(&self, off: usize) -> (usize, usize) {
+        let c = off / self.plane;
+        let rem = off % self.plane;
+        let r = rem / self.wp;
+        let s = rem % self.wp;
+        (
+            (c * self.r_taps + r) * self.phases + s % self.stride,
+            s / self.stride,
+        )
+    }
+
+    /// Stage the strip for nonzero offset `off` at output row `h`
+    /// unless the epoch tag says row `h` already staged it. The tag
+    /// stores `h` as f32 (exact below 2^24 rows); callers reset the
+    /// tags to -1.0 once per register block, so a stale strip from a
+    /// previous tile, image, or group — or garbage in a dirty
+    /// workspace — can never be served.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn ensure(
+        &self,
+        off: usize,
+        si: usize,
+        sq: usize,
+        h: usize,
+        in_group: &[f32],
+        epoch: &mut [f32],
+        table: &mut [f32],
+    ) {
+        let tag = h as f32;
+        if epoch[si] == tag {
+            return;
+        }
+        epoch[si] = tag;
+        let q = si % self.phases;
+        let glen = (self.s_taps - 1 - q) / self.stride + self.f;
+        // `off - sq*stride` drops the in-phase shift back to the strip
+        // origin `c*Hp*Wp + r*Wp + q`.
+        let src = off - sq * self.stride + h * self.stride * self.wp;
+        let dst = &mut table[si * self.glen_cap..si * self.glen_cap + glen];
+        for (j, d) in dst.iter_mut().enumerate() {
+            *d = in_group[src + j * self.stride];
+        }
+    }
+}
+
+/// The strided counterpart of [`sconv_planes_blocked`]: a register
+/// block of `mls` consecutive group-local channels (`ml0..ml0 + mls`)
+/// accumulates directly into its pre-zeroed output rows, one output
+/// row at a time. At each output row every distinct
+/// `(channel, tap-row, phase)` gather is staged **once** into a
+/// contiguous strip ([`StridedGather`]) and reused by the nonzeros of
+/// all `mls` channels — the strided analogue of the stride-1 register
+/// block sharing one resident input block — and the accumulation loop
+/// reads the strip contiguously, so the strided path stops re-streaming
+/// the input once per output channel.
+///
+/// Per output element the operation sequence is identical to
+/// [`sconv_plane`]'s strided branch: nonzeros in CSR order, the same
+/// 4-wide fused grouping, and gathered values equal to the direct
+/// strided loads — so this kernel is **byte-identical** to the
+/// per-channel gather oracle for every `mr` (pinned by the strided
+/// microkernel tests below).
+///
+/// `out_block` must hold `mls * E * F` pre-zeroed floats; `scr` must
+/// hold [`StridedGather::scratch_floats`] floats in any state.
+fn sconv_strided_blocked(
+    shape: &ConvShape,
+    bank: &StretchedFilter,
+    ml0: usize,
+    mls: usize,
+    in_group: &[f32],
+    out_block: &mut [f32],
+    scr: &mut [f32],
+) {
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let gg = StridedGather::of(shape);
+    debug_assert_eq!(out_block.len(), mls * e * f);
+    let (epoch, table) = scr[..gg.scratch_floats()].split_at_mut(gg.strips);
+    epoch.fill(-1.0);
+    for h in 0..e {
+        for i in 0..mls {
+            let range = bank.csr.row_range(ml0 + i);
+            let vals = &bank.csr.values[range.clone()];
+            let offs = &bank.csr.colidx[range];
+            let out_row = &mut out_block[(i * e + h) * f..(i * e + h + 1) * f];
+            let mut j = 0;
+            while j + 4 <= vals.len() {
+                let (v0, v1, v2, v3) = (vals[j], vals[j + 1], vals[j + 2], vals[j + 3]);
+                let (o0, o1, o2, o3) = (
+                    offs[j] as usize,
+                    offs[j + 1] as usize,
+                    offs[j + 2] as usize,
+                    offs[j + 3] as usize,
+                );
+                let (si0, sq0) = gg.decode(o0);
+                let (si1, sq1) = gg.decode(o1);
+                let (si2, sq2) = gg.decode(o2);
+                let (si3, sq3) = gg.decode(o3);
+                gg.ensure(o0, si0, sq0, h, in_group, epoch, table);
+                gg.ensure(o1, si1, sq1, h, in_group, epoch, table);
+                gg.ensure(o2, si2, sq2, h, in_group, epoch, table);
+                gg.ensure(o3, si3, sq3, h, in_group, epoch, table);
+                let s0 = &table[si0 * gg.glen_cap + sq0..si0 * gg.glen_cap + sq0 + f];
+                let s1 = &table[si1 * gg.glen_cap + sq1..si1 * gg.glen_cap + sq1 + f];
+                let s2 = &table[si2 * gg.glen_cap + sq2..si2 * gg.glen_cap + sq2 + f];
+                let s3 = &table[si3 * gg.glen_cap + sq3..si3 * gg.glen_cap + sq3 + f];
+                for (w, o) in out_row.iter_mut().enumerate() {
+                    *o += v0 * s0[w] + v1 * s1[w] + v2 * s2[w] + v3 * s3[w];
+                }
+                j += 4;
+            }
+            while j < vals.len() {
+                let val = vals[j];
+                let off = offs[j] as usize;
+                let (si, sq) = gg.decode(off);
+                gg.ensure(off, si, sq, h, in_group, epoch, table);
+                let strip = &table[si * gg.glen_cap + sq..si * gg.glen_cap + sq + f];
+                for (o, g) in out_row.iter_mut().zip(strip) {
+                    *o += val * g;
+                }
+                j += 1;
+            }
+        }
+    }
+}
+
+/// The strided vectorized microkernel: the same row-gather staging as
+/// [`sconv_strided_blocked`], but each nonzero is broadcast and
+/// FMA-accumulated into the output row in [`SIMD_LANES`]-wide [`F32v`]
+/// strips (scalar [`fmaf`] tail) — the splat-FMA inner loop of the
+/// stride-1 vector kernels, reading the staged strip contiguously.
+///
+/// `rows` yields one channel's nonzero slots (the CSR row, or a
+/// [`BalancedCsr`] slot row). Per output element the accumulation is
+/// the sequential slot-order `fmaf` chain, so the kernel is
+/// byte-identical to itself under any register-block / tile / pool
+/// decomposition and ULP-bounded against the scalar oracle; balanced
+/// padding slots (value 0.0, offset 0) decode to strip `(0, 0, 0)` —
+/// an in-bounds gather — and are bit-exact no-ops under [`fmaf`], so
+/// the balanced variant is byte-identical to the CSR variant.
+fn sconv_strided_vector<'a>(
+    shape: &ConvShape,
+    rows: impl Fn(usize) -> (&'a [f32], &'a [u32]),
+    ml0: usize,
+    mls: usize,
+    in_group: &[f32],
+    out_block: &mut [f32],
+    scr: &mut [f32],
+) {
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let gg = StridedGather::of(shape);
+    debug_assert_eq!(out_block.len(), mls * e * f);
+    let (epoch, table) = scr[..gg.scratch_floats()].split_at_mut(gg.strips);
+    epoch.fill(-1.0);
+    for h in 0..e {
+        for i in 0..mls {
+            let (vals, offs) = rows(ml0 + i);
+            let out_row = &mut out_block[(i * e + h) * f..(i * e + h + 1) * f];
+            for (val, off) in vals.iter().zip(offs) {
+                let off = *off as usize;
+                let (si, sq) = gg.decode(off);
+                gg.ensure(off, si, sq, h, in_group, epoch, table);
+                let strip = &table[si * gg.glen_cap + sq..si * gg.glen_cap + sq + f];
+                let vv = F32v::splat(*val);
+                let mut w = 0;
+                while w + SIMD_LANES <= f {
+                    let acc = F32v::load(&strip[w..]).mul_add(vv, F32v::load(&out_row[w..]));
+                    acc.store(&mut out_row[w..]);
+                    w += SIMD_LANES;
+                }
+                while w < f {
+                    out_row[w] = fmaf(strip[w], *val, out_row[w]);
+                    w += 1;
+                }
+            }
+        }
+    }
+}
+
 /// Pack output channels into contiguous tiles of ~equal stored-nonzero
 /// count — the unit of work the pool schedules. Equal-*plane* splitting
 /// assigns every channel the same weight, so one dense channel among
@@ -517,6 +804,15 @@ fn sconv_planes_balanced(
 /// closed first), so a dense channel never drags neighbours and
 /// multi-channel tiles stay below `2 * target` nnz — a single dense
 /// channel is the only way a tile exceeds the target floor.
+///
+/// Tiles are **group-aware**: for `groups > 1` no tile straddles a
+/// group-boundary interior (a register block cannot span groups, so a
+/// straddling tile would split into sub-`mr` remainders on both
+/// sides). Coarse groups (fewer groups than the tile target — AlexNet's
+/// two-way splits) are each packed independently with a tile budget
+/// proportional to their nnz share; fine groups (depthwise, where
+/// groups reach or exceed the target) are packed as **atomic units**
+/// through the same greedy packer, with whole-group nnz as the weight.
 pub(crate) fn nnz_channel_tiles(
     shape: &ConvShape,
     banks: &[StretchedFilter],
@@ -524,9 +820,34 @@ pub(crate) fn nnz_channel_tiles(
 ) -> (Vec<Range<usize>>, Vec<usize>) {
     assert_eq!(banks.len(), shape.groups);
     let mg = shape.m_per_group();
-    weighted_channel_tiles(shape.m, target_tiles, |m| {
-        banks[m / mg].csr.row_nnz(m % mg)
-    })
+    if shape.groups == 1 {
+        return weighted_channel_tiles(shape.m, target_tiles, |m| banks[0].csr.row_nnz(m));
+    }
+    let group_nnz: Vec<usize> = banks.iter().map(|b| b.csr.nnz()).collect();
+    let total: usize = group_nnz.iter().sum();
+    if shape.groups >= target_tiles.max(1) {
+        // At least as many groups as tiles: pack whole groups as
+        // atomic units (every tile boundary is a group boundary).
+        let (gtiles, weights) =
+            weighted_channel_tiles(shape.groups, target_tiles, |g| group_nnz[g]);
+        let tiles = gtiles.into_iter().map(|r| r.start * mg..r.end * mg).collect();
+        return (tiles, weights);
+    }
+    // Coarse groups: give each a tile budget proportional to its nnz
+    // and pack within it, so tiles never cross into a neighbour group.
+    let mut tiles = Vec::new();
+    let mut weights = Vec::new();
+    for (g, bank) in banks.iter().enumerate() {
+        let share = if total == 0 {
+            1
+        } else {
+            (target_tiles * group_nnz[g] + total / 2) / total
+        };
+        let (gt, gw) = weighted_channel_tiles(mg, share.max(1), |ml| bank.csr.row_nnz(ml));
+        tiles.extend(gt.into_iter().map(|r| g * mg + r.start..g * mg + r.end));
+        weights.extend(gw);
+    }
+    (tiles, weights)
 }
 
 /// The greedy weighted channel packer behind [`nnz_channel_tiles`] (CSR
@@ -574,9 +895,9 @@ fn weighted_channel_tiles(
 /// `worker_scratch_floats` slice of `scratch` (so `scratch` must hold
 /// at least `pool.workers()` of them, sized for the same `policy`);
 /// output planes are disjoint per tile — no synchronisation, mirroring
-/// the paper's thread-block-per-output-channel partitioning. The
-/// strided path writes `+=` into `out`, so the caller must zero it
-/// first.
+/// the paper's thread-block-per-output-channel partitioning. Every
+/// output byte is written regardless of prior contents (the strided
+/// register blocks zero their own planes before accumulating).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn sconv_tiled(
     shape: &ConvShape,
@@ -625,17 +946,18 @@ pub(crate) fn sconv_tiled(
 /// executor's async conv jobs, so both produce **byte-identical**
 /// planes by construction.
 ///
-/// Stride-1 channels run through the cache-blocked multi-channel
-/// microkernel: the tile's channels are cut into register blocks of up
-/// to `policy.mr` channels (never crossing a group boundary — channels
-/// of different groups read different input), each accumulated jointly
-/// over `policy.block_floats`-sized row blocks. `policy.lanes` picks
-/// the kernel variant: `1` runs the scalar oracle
-/// ([`sconv_planes_blocked`]); `> 1` runs the vectorized kernel over
-/// CSR ([`sconv_planes_simd`]) or, when `balanced` banks were baked
-/// into the plan, over the bank-balanced layout
-/// ([`sconv_planes_balanced`]). Strided layers keep the per-channel
-/// gather kernel ([`sconv_plane`]).
+/// All channels run through the blocked multi-channel microkernels:
+/// the tile's channels are cut into register blocks of up to
+/// `policy.mr` channels (never crossing a group boundary — channels of
+/// different groups read different input). Stride-1 blocks accumulate
+/// jointly over `policy.block_floats`-sized row blocks of the
+/// contiguous span; strided blocks share the per-row gather strips of
+/// [`StridedGather`]. `policy.lanes` picks the kernel variant: `1`
+/// runs the scalar oracles ([`sconv_planes_blocked`] /
+/// [`sconv_strided_blocked`]); `> 1` runs the vectorized kernels over
+/// CSR ([`sconv_planes_simd`] / [`sconv_strided_vector`]) or, when
+/// `balanced` banks were baked into the plan, over the bank-balanced
+/// layout.
 ///
 /// # Safety
 ///
@@ -728,17 +1050,49 @@ pub(crate) unsafe fn sconv_tile(
             m += mls;
         }
     } else {
-        for m in tiles[ct].clone() {
+        let mr = policy.mr.max(1);
+        let mut m = tiles[ct].start;
+        while m < tiles[ct].end {
             let g = m / mg;
+            let mls = mr.min(tiles[ct].end - m).min((g + 1) * mg - m);
             let in_group = &img[g * group_len..(g + 1) * group_len];
-            let plane = unsafe { out_sh.slice_mut((n * shape.m + m) * ef, ef) };
-            // Each tile zeroes its own planes (the strided path
-            // accumulates with `+=`), so the tile body is
-            // self-contained for the async path; on the blocking path
-            // this re-zeroes an already-zeroed plane — byte-identical
-            // either way.
-            plane.fill(0.0);
-            sconv_plane(shape, in_group, &banks[g], m % mg, plane, &mut scr[..span]);
+            // Consecutive channels of one image are contiguous in the
+            // output, so the register block accumulates into one slice.
+            let out_block = unsafe { out_sh.slice_mut((n * shape.m + m) * ef, mls * ef) };
+            // The strided kernels accumulate with `+=`; zeroing here
+            // keeps the tile body self-contained for the async path.
+            out_block.fill(0.0);
+            if policy.lanes > 1 {
+                match balanced {
+                    Some(bal) => sconv_strided_vector(
+                        shape,
+                        |ml| bal[g].row_slots(ml),
+                        m % mg,
+                        mls,
+                        in_group,
+                        out_block,
+                        scr,
+                    ),
+                    None => sconv_strided_vector(
+                        shape,
+                        |ml| {
+                            let range = banks[g].csr.row_range(ml);
+                            (
+                                &banks[g].csr.values[range.clone()],
+                                &banks[g].csr.colidx[range],
+                            )
+                        },
+                        m % mg,
+                        mls,
+                        in_group,
+                        out_block,
+                        scr,
+                    ),
+                }
+            } else {
+                sconv_strided_blocked(shape, &banks[g], m % mg, mls, in_group, out_block, scr);
+            }
+            m += mls;
         }
     }
 }
@@ -1289,6 +1643,173 @@ mod tests {
                 vector.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                 "channel {m}"
             );
+        }
+    }
+
+    /// The strided tentpole at its root: the strided row-gather
+    /// register block ([`sconv_strided_blocked`]) must reproduce the
+    /// per-channel strided gather oracle ([`sconv_plane`]) **byte for
+    /// byte** on every strided shape of the grid, for every
+    /// register-block width — gathering through the epoch-tagged strip
+    /// table (even starting from a NaN-dirty table) is pure data
+    /// movement and can never touch a result bit.
+    #[test]
+    fn strided_blocked_kernel_is_byte_identical_to_sconv_plane() {
+        let mut tested = 0;
+        for (i, shape) in shapes_under_test().into_iter().enumerate() {
+            if shape.stride == 1 {
+                continue; // the stride-1 kernels have their own grids above
+            }
+            tested += 1;
+            let (x, w) = random_case(&shape, 1, 6100 + i as u64);
+            let banks = w.stretched_banks();
+            let padded = x.pad_spatial(shape.pad);
+            let (e, f) = (shape.out_h(), shape.out_w());
+            let ef = e * f;
+            let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
+            let group_len = cg * shape.padded_h() * shape.padded_w();
+            let img = padded.image(0);
+
+            // Oracle: the per-channel strided gather kernel.
+            let mut want = vec![0.0f32; shape.m * ef];
+            for m in 0..shape.m {
+                let g = m / mg;
+                let in_group = &img[g * group_len..(g + 1) * group_len];
+                sconv_plane(
+                    &shape,
+                    in_group,
+                    &banks[g],
+                    m % mg,
+                    &mut want[m * ef..(m + 1) * ef],
+                    &mut [],
+                );
+            }
+
+            let scratch_len = worker_scratch_floats(&shape, &TilePolicy::default());
+            for mr in [1usize, 2, 3, 4, 8] {
+                let mut got = vec![f32::NAN; shape.m * ef];
+                let mut scr = vec![f32::NAN; scratch_len];
+                let mut m = 0;
+                while m < shape.m {
+                    let g = m / mg;
+                    let mls = mr.min(shape.m - m).min((g + 1) * mg - m);
+                    let in_group = &img[g * group_len..(g + 1) * group_len];
+                    let out_block = &mut got[m * ef..(m + mls) * ef];
+                    out_block.fill(0.0);
+                    sconv_strided_blocked(
+                        &shape, &banks[g], m % mg, mls, in_group, out_block, &mut scr,
+                    );
+                    m += mls;
+                }
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(wb, gb, "{shape} mr{mr}");
+            }
+        }
+        assert!(tested >= 3, "grid must carry strided shapes");
+    }
+
+    /// The strided vector kernel's contract, mirroring the stride-1
+    /// one: (a) byte-identical to itself across register-block widths,
+    /// (b) byte-identical between CSR and bank-balanced layouts
+    /// (padding slots decode to strip `(0,0,0)` and are `fmaf`
+    /// no-ops), (c) ULP-bounded against the scalar strided oracle.
+    #[test]
+    fn strided_vector_kernel_is_decomposition_invariant_and_ulp_close_to_scalar() {
+        for (i, shape) in shapes_under_test().into_iter().enumerate() {
+            if shape.stride == 1 {
+                continue;
+            }
+            let (x, w) = random_case(&shape, 1, 7300 + i as u64);
+            let banks = w.stretched_banks();
+            let padded = x.pad_spatial(shape.pad);
+            let (e, f) = (shape.out_h(), shape.out_w());
+            let ef = e * f;
+            let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
+            let group_len = cg * shape.padded_h() * shape.padded_w();
+            let img = padded.image(0);
+            let scratch_len = worker_scratch_floats(&shape, &TilePolicy::default());
+
+            let run = |mr: usize, balanced: Option<&[BalancedCsr]>| -> Vec<f32> {
+                let mut got = vec![0.0f32; shape.m * ef];
+                let mut scr = vec![f32::NAN; scratch_len];
+                let mut m = 0;
+                while m < shape.m {
+                    let g = m / mg;
+                    let mls = mr.min(shape.m - m).min((g + 1) * mg - m);
+                    let in_group = &img[g * group_len..(g + 1) * group_len];
+                    let out_block = &mut got[m * ef..(m + mls) * ef];
+                    match balanced {
+                        Some(bal) => sconv_strided_vector(
+                            &shape,
+                            |ml| bal[g].row_slots(ml),
+                            m % mg,
+                            mls,
+                            in_group,
+                            out_block,
+                            &mut scr,
+                        ),
+                        None => sconv_strided_vector(
+                            &shape,
+                            |ml| {
+                                let r = banks[g].csr.row_range(ml);
+                                (&banks[g].csr.values[r.clone()], &banks[g].csr.colidx[r])
+                            },
+                            m % mg,
+                            mls,
+                            in_group,
+                            out_block,
+                            &mut scr,
+                        ),
+                    }
+                    m += mls;
+                }
+                got
+            };
+
+            // Scalar oracle planes via the per-channel gather kernel.
+            let mut scalar = vec![0.0f32; shape.m * ef];
+            for m in 0..shape.m {
+                let g = m / mg;
+                let in_group = &img[g * group_len..(g + 1) * group_len];
+                sconv_plane(
+                    &shape,
+                    in_group,
+                    &banks[g],
+                    m % mg,
+                    &mut scalar[m * ef..(m + 1) * ef],
+                    &mut [],
+                );
+            }
+
+            let reference = run(1, None);
+            for mr in [2usize, 3, 4, 8] {
+                let got = run(mr, None);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    reference.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{shape} strided vector kernel not decomposition-invariant (mr{mr})"
+                );
+            }
+            let balanced: Vec<BalancedCsr> = banks
+                .iter()
+                .map(|b| BalancedCsr::from_csr(&b.csr, 4))
+                .collect();
+            for mr in [1usize, 4] {
+                let got = run(mr, Some(&balanced));
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    reference.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{shape} balanced layout changed strided bits (mr{mr})"
+                );
+            }
+            for (j, (&got, &want)) in reference.iter().zip(&scalar).enumerate() {
+                assert!(
+                    ulps(got, want) <= 256 || (got - want).abs() <= 1e-4,
+                    "{shape} elem {j}: strided vector {got} vs scalar {want} ({} ulps)",
+                    ulps(got, want)
+                );
+            }
         }
     }
 

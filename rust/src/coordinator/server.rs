@@ -117,7 +117,7 @@ pub struct InferResponse {
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Network to serve (`config::network_by_name`): `minicnn` (default),
-    /// `alexnet`, `googlenet`, `resnet50`.
+    /// `alexnet`, `googlenet`, `resnet50`, `mobilenetv1`.
     pub network: String,
     /// Batching policy: target batch size and formation deadline.
     pub batcher: BatcherConfig,

@@ -101,7 +101,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         Some("prune") => {
             let model = args.get(1).map(|s| s.as_str()).unwrap_or("alexnet");
             let net = network_by_name(model).ok_or_else(|| {
-                format!("unknown model {model:?} (alexnet|googlenet|resnet|minicnn)")
+                format!("unknown model {model:?} (alexnet|googlenet|resnet|mobilenet|minicnn)")
             })?;
             let mut rng = Rng::new(0xE5);
             println!("{}: per-layer pruned weight statistics", net.name);

@@ -5,7 +5,7 @@
 //! workspace arena, and pool runs must be byte-identical to
 //! single-thread runs.
 
-use escoin::config::{googlenet, miniception, minicnn, ConvShape};
+use escoin::config::{googlenet, miniception, minicnn, resnet50, ConvShape};
 use escoin::conv::{
     direct_dense, shapes_under_test, winograd_applicable, ConvWeights, LayerPlan, Method,
     NetworkPlan, SparseLayout, TilePolicy, Workspace, WorkspaceArena, SIMD_LANES,
@@ -410,6 +410,31 @@ fn googlenet_dag_walk_matches_sequential_walk_at_pools_1_4_8() {
         assert_eq!(
             sequential, dag,
             "googlenet DAG walk diverged from the sequential walk at t{threads}"
+        );
+    }
+}
+
+/// The residual counterpart of the GoogLeNet property: `resnet50()` is
+/// now a branch/merge graph (bottleneck main paths + shortcut edges
+/// joined by Add merges, including every stride-2 and downsample conv
+/// on the strided blocked microkernel), and its async DAG walk must be
+/// byte-identical to the sequential walk at every pool size.
+#[test]
+fn resnet50_dag_walk_matches_sequential_walk_at_pools_1_4_8() {
+    let net = resnet50();
+    let plan = NetworkPlan::build(&net, 1, 0x6007, |_, _| Method::DirectSparse);
+    assert!(plan.supports_async(), "resnet50 must compile to a DAG plan");
+    let ref_pool = WorkerPool::new(4);
+    let mut arena = WorkspaceArena::for_plan(&plan, &ref_pool);
+    let sequential = bits(plan.run(&ref_pool, &mut arena));
+    drop(arena);
+    for threads in [1, 4, 8] {
+        let pool = WorkerPool::new(threads);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+        let dag = bits(plan.run_async(None, &pool, &mut arena));
+        assert_eq!(
+            sequential, dag,
+            "resnet50 DAG walk diverged from the sequential walk at t{threads}"
         );
     }
 }
