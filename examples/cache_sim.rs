@@ -1,5 +1,8 @@
 //! Drive the GPU memory-hierarchy simulator directly on one layer:
-//! replay each kernel's access stream and print hit rates + DRAM traffic.
+//! replay each kernel's access stream and print hit rates + DRAM
+//! traffic — then run the offline `TilePolicy` autotuner on the same
+//! layer and print the sweep's ranking (the simulated costs plan
+//! compilation bakes winners from).
 //!
 //! ```text
 //! cargo run --release --example cache_sim -- [sparsity]
@@ -7,11 +10,29 @@
 
 use escoin::bench_harness::Table;
 use escoin::config::ConvShape;
-use escoin::conv::ConvWeights;
+use escoin::conv::{ConvWeights, SparseLayout, TilePolicy};
 use escoin::simulator::{
-    trace_csrmm, trace_im2col, trace_sconv, trace_sgemm, MemoryHierarchy,
+    autotune_policy_p100, trace_csrmm, trace_im2col, trace_sconv, trace_sconv_microkernel,
+    trace_sgemm, MemoryHierarchy,
 };
+use escoin::sparse::BalancedCsr;
 use escoin::util::Rng;
+
+fn policy_label(p: &TilePolicy) -> String {
+    let block = if p.block_floats == usize::MAX {
+        "all".to_string()
+    } else {
+        p.block_floats.to_string()
+    };
+    let layout = match p.layout {
+        SparseLayout::Csr => "csr",
+        SparseLayout::Balanced => "bal",
+    };
+    format!(
+        "tiles={} mr={} block={} lanes={} {}",
+        p.target_tiles, p.mr, block, p.lanes, layout
+    )
+}
 
 fn main() {
     let sparsity: f32 = std::env::args()
@@ -26,6 +47,7 @@ fn main() {
     let mut rng = Rng::new(3);
     let w = ConvWeights::synthetic(&shape, &mut rng);
     let (k, ef) = shape.lowered_dims();
+    let banks = w.stretched_banks();
 
     let mut t = Table::new(
         "Simulated P100 memory behaviour per kernel",
@@ -54,10 +76,59 @@ fn main() {
         trace_csrmm(&w.csr_banks()[0], ef, m).scalar_accesses
     });
     run("sconv (Escoin)", &mut |m| {
-        trace_sconv(&shape, &w.stretched_banks()[0], m).scalar_accesses
+        trace_sconv(&shape, &banks[0], m).scalar_accesses
+    });
+    // The microkernels the plan layer actually dispatches today, at the
+    // default policy and a vectorized/bank-balanced variant — traced
+    // with the same generators the autotuner scores candidates through.
+    let scalar = TilePolicy {
+        lanes: 1,
+        layout: SparseLayout::Csr,
+        ..TilePolicy::default()
+    };
+    run("sconv-blocked (mr-block microkernel)", &mut |m| {
+        trace_sconv_microkernel(&shape, &banks, None, &scalar, m).scalar_accesses
+    });
+    let vector = TilePolicy {
+        lanes: escoin::conv::SIMD_LANES,
+        ..scalar
+    };
+    let balanced: Vec<BalancedCsr> = banks
+        .iter()
+        .map(|b| BalancedCsr::from_csr(&b.csr, vector.mr.max(1)))
+        .collect();
+    run("sconv-balanced (vector microkernel)", &mut |m| {
+        trace_sconv_microkernel(&shape, &banks, Some(&balanced), &vector, m).scalar_accesses
     });
     print!("{}", t.render());
     println!(
         "note: lowering approaches pay im2col + their matmul; Escoin pays sconv only."
+    );
+
+    // The offline sweep plan compilation runs (`ServerConfig::
+    // autotune_policies` / `NetworkSchedule::autotune_tiling`): every
+    // candidate geometry ranked by simulated DRAM traffic, winner
+    // first. Deterministic — same layer, same table.
+    let outcome = autotune_policy_p100(&shape, &w);
+    let mut sweep = Table::new(
+        "TilePolicy autotune sweep (ranked, winner first)",
+        &["policy", "DRAM MB", "L2 miss", "RO miss", "RO hit"],
+    );
+    for s in &outcome.ranked {
+        sweep.row(vec![
+            policy_label(&s.policy),
+            format!("{:.2}", s.report.dram_bytes as f64 / 1e6),
+            s.report.l2.misses.to_string(),
+            s.report.ro.misses.to_string(),
+            format!("{:.0}%", 100.0 * s.report.ro_hit_rate()),
+        ]);
+    }
+    print!("{}", sweep.render());
+    let best = outcome.ranked[0].report.dram_bytes as f64;
+    let default = outcome.default_score().report.dram_bytes as f64;
+    println!(
+        "winner: {} ({:.2}x less predicted DRAM traffic than the default policy)",
+        policy_label(&outcome.best),
+        default / best.max(1.0)
     );
 }

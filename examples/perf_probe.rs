@@ -71,6 +71,16 @@
 //!   the tiling the telemetry feedback loop (`TilePolicy::adjusted`,
 //!   driven by measured per-job imbalance) refines it into
 //!   (`plan_ns`).
+//! * `sconv-autotune-b1` — per kernel class (blocked 27x27 / 13x13 /
+//!   strided 28x28 shapes): the default `TilePolicy` (`free_ns`) vs
+//!   the simulator-ranked winner baked by the offline sweep
+//!   (`plan_ns`), measured ns/iter at batch 1.
+//! * `autotune-predicted-vs-measured` — the prediction behind those
+//!   rows, on the same shapes: simulated bytes-from-DRAM of the
+//!   default policy (`free_ns`) vs the tuned winner (`plan_ns`).
+//!   Values are bytes, not ns — the row pairs the sim ranking with the
+//!   measured `sconv-autotune-b1` rows so the predicted-vs-measured
+//!   contract stays diffable across PRs.
 //!
 //! ```text
 //! cargo run --release --example perf_probe [--out PATH]
@@ -86,6 +96,7 @@ use escoin::conv::{
     SIMD_LANES,
 };
 use escoin::coordinator::{BatcherConfig, RouterConfig, ServerConfig, ServerHandle};
+use escoin::simulator::{autotune_policy, P100_GEOMETRY};
 use escoin::tensor::{Dims4, Tensor4};
 use escoin::util::{default_threads, Rng, WorkerPool};
 use std::sync::Arc;
@@ -505,6 +516,85 @@ fn main() {
         );
     }
 
+    // Simulator-autotune headline: for each kernel class the offline
+    // sweep can retile (register-blocked stride-1, vector-width 13x13,
+    // strided row-gather), measure the default-policy plan against the
+    // sim-ranked winner — and record the prediction itself (simulated
+    // bytes-from-DRAM, default vs tuned) right next to the measured
+    // ns/iter. That pairing is the predicted-vs-measured contract
+    // documented in rust/src/simulator/README.md: the simulator may
+    // only claim a ranking that the measured rows can be diffed
+    // against. Shapes are moderate (the sweep replays one full address
+    // trace per candidate), batch 1 throughout.
+    {
+        let tune_shapes: [(&'static str, ConvShape); 3] = [
+            (
+                "autotune_conv2_5x5_27x27_sp85",
+                ConvShape::new(48, 64, 27, 27, 5, 5, 1, 2)
+                    .with_groups(2)
+                    .with_sparsity(0.85),
+            ),
+            (
+                "autotune_conv3_3x3_13x13_sp88",
+                ConvShape::new(128, 192, 13, 13, 3, 3, 1, 1).with_sparsity(0.88),
+            ),
+            (
+                "autotune_3x3_s2_28x28_sp70",
+                ConvShape::new(32, 32, 28, 28, 3, 3, 2, 1).with_sparsity(0.7),
+            ),
+        ];
+        let b = 1usize;
+        for (name, shape) in &tune_shapes {
+            let mut rng = Rng::new(8);
+            let w = ConvWeights::synthetic(shape, &mut rng);
+            let outcome = autotune_policy(shape, &w, P100_GEOMETRY);
+            let default_plan = LayerPlan::build(shape, &w, Method::DirectSparse);
+            let tuned_plan =
+                LayerPlan::build_with_policy(shape, &w, Method::DirectSparse, outcome.best);
+            let x =
+                Tensor4::random_activations(Dims4::new(b, shape.c, shape.h, shape.w), &mut rng);
+            ws.ensure(
+                default_plan
+                    .workspace_floats(b, pool.workers())
+                    .max(tuned_plan.workspace_floats(b, pool.workers())),
+            );
+            let mut out = Tensor4::zeros(default_plan.out_dims(b));
+            let default_t = bench_median(bench, || {
+                default_plan.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+            });
+            let tuned_t = bench_median(bench, || {
+                tuned_plan.execute_into(b, x.data(), &pool, &mut ws, out.data_mut(), None)
+            });
+            rows.push(Row {
+                shape: *name,
+                method: "sconv-autotune-b1",
+                batch: b,
+                free_ns: default_t.as_nanos(),
+                plan_ns: tuned_t.as_nanos(),
+            });
+            // The prediction those measured rows validate: simulated
+            // DRAM bytes of the default policy vs the sweep winner
+            // (values are bytes, not ns — the row reuses the schema's
+            // two integer slots).
+            let predicted_default = outcome.default_score().report.dram_bytes;
+            let predicted_tuned = outcome.ranked[0].report.dram_bytes;
+            rows.push(Row {
+                shape: *name,
+                method: "autotune-predicted-vs-measured",
+                batch: b,
+                free_ns: predicted_default as u128,
+                plan_ns: predicted_tuned as u128,
+            });
+            println!(
+                "sconv-autotune-b1 {name}: default {default_t:?}  tuned({:?}) {tuned_t:?}  \
+                 ({:.2}x measured, {:.2}x predicted-dram)",
+                outcome.best,
+                default_t.as_secs_f64() / tuned_t.as_secs_f64().max(1e-12),
+                predicted_default as f64 / (predicted_tuned as f64).max(1.0)
+            );
+        }
+    }
+
     // Serving-pipeline headline: ns/request over a paced open-loop
     // stream, sequential executor vs the two-slot pipeline. Pacing
     // (rather than blasting the queue full) is what exposes the win:
@@ -752,6 +842,7 @@ fn serve_wall(
         pipeline_depth: depth,
         strict_replan: false,
         adaptive_tiling: false,
+        autotune_policies: false,
     })
     .expect("server start");
     let mut rng = Rng::new(100 + seed);

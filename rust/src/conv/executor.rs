@@ -50,7 +50,7 @@
 //!   waits on all of them.
 
 use super::plan::{ConvExecutor, LayerPlan, Method};
-use super::sconv::TilePolicy;
+use super::sconv::{PolicySource, TilePolicy};
 use crate::config::{pool_out_dim, ConvShape, FcShape, Layer, LayerKind, Network, PoolKind};
 use crate::conv::weights::ConvWeights;
 use crate::tensor::Dims4;
@@ -1591,11 +1591,13 @@ pub struct PlanCache {
     conv_weights: HashMap<String, Arc<ConvWeights>>,
     fc_weights: HashMap<String, Arc<Vec<f32>>>,
     plans: Mutex<HashMap<(String, Method), Arc<LayerPlan>>>,
-    /// Per-layer DirectSparse tile policy (default when absent). A
-    /// policy change invalidates the layer's cached DirectSparse plan,
-    /// so a telemetry-driven *retile* rebuilds exactly the affected
-    /// plans through the same incremental path as a method flip.
-    tile_policies: Mutex<HashMap<String, TilePolicy>>,
+    /// Per-layer DirectSparse tile policy plus its [`PolicySource`]
+    /// provenance (default when absent). A policy change invalidates
+    /// the layer's cached DirectSparse plan, so a telemetry-driven
+    /// *retile* — or an offline autotune bake — rebuilds exactly the
+    /// affected plans through the same incremental path as a method
+    /// flip.
+    tile_policies: Mutex<HashMap<String, (TilePolicy, PolicySource)>>,
     layer_builds: AtomicU64,
 }
 
@@ -1650,18 +1652,22 @@ impl PlanCache {
         // invalidation removes what we built) — never a stale-policy
         // plan surviving a lost invalidation.
         let policies = self.tile_policies.lock().unwrap();
-        let policy = policies.get(name).copied().unwrap_or_default();
+        let (policy, source) = policies
+            .get(name)
+            .copied()
+            .unwrap_or((TilePolicy::default(), PolicySource::Default));
         let mut cache = self.plans.lock().unwrap();
         drop(policies);
         cache
             .entry((name.to_string(), method))
             .or_insert_with(|| {
                 self.layer_builds.fetch_add(1, Ordering::Relaxed);
-                Arc::new(LayerPlan::build_shared_with_policy(
+                Arc::new(LayerPlan::build_shared_with_policy_source(
                     shape,
                     self.conv_weights[name].clone(),
                     method,
                     policy,
+                    source,
                 ))
             })
             .clone()
@@ -1674,8 +1680,21 @@ impl PlanCache {
             .lock()
             .unwrap()
             .get(layer)
-            .copied()
+            .map(|(p, _)| *p)
             .unwrap_or_default()
+    }
+
+    /// Where a layer's current [`TilePolicy`] came from:
+    /// [`PolicySource::Default`] until an autotune bake
+    /// ([`PolicySource::Tuned`]) or a runtime override
+    /// ([`PolicySource::Adaptive`]) changed it.
+    pub fn tile_policy_source(&self, layer: &str) -> PolicySource {
+        self.tile_policies
+            .lock()
+            .unwrap()
+            .get(layer)
+            .map(|(_, s)| *s)
+            .unwrap_or(PolicySource::Default)
     }
 
     /// Set a layer's DirectSparse [`TilePolicy`]. When the policy
@@ -1684,13 +1703,35 @@ impl PlanCache {
     /// that plan (counted by [`PlanCache::layer_builds`]); plans
     /// already held by in-flight runs keep their own `Arc`s, so a
     /// retile is as safe as a method flip. Returns whether anything
-    /// changed.
+    /// changed. Explicit sets are runtime overrides, so the layer is
+    /// tagged [`PolicySource::Adaptive`]; the autotuner bakes through
+    /// [`PlanCache::set_tile_policy_with_source`].
     pub fn set_tile_policy(&self, layer: &str, policy: TilePolicy) -> bool {
+        self.set_tile_policy_with_source(layer, policy, PolicySource::Adaptive)
+    }
+
+    /// [`PlanCache::set_tile_policy`] with an explicit [`PolicySource`]
+    /// tag — the offline autotuner bakes winners as
+    /// [`PolicySource::Tuned`] through here. A change to **either** the
+    /// geometry or the provenance invalidates the layer's cached
+    /// DirectSparse plan, so a plan's reported
+    /// [`LayerPlan::policy_source`] always matches the cache entry it
+    /// was built from.
+    pub fn set_tile_policy_with_source(
+        &self,
+        layer: &str,
+        policy: TilePolicy,
+        source: PolicySource,
+    ) -> bool {
         let mut policies = self.tile_policies.lock().unwrap();
-        if policies.get(layer).copied().unwrap_or_default() == policy {
+        let current = policies
+            .get(layer)
+            .copied()
+            .unwrap_or((TilePolicy::default(), PolicySource::Default));
+        if current == (policy, source) {
             return false;
         }
-        policies.insert(layer.to_string(), policy);
+        policies.insert(layer.to_string(), (policy, source));
         self.plans
             .lock()
             .unwrap()
@@ -1745,7 +1786,7 @@ impl PlanCache {
             .map(|l| {
                 policies
                     .get(l)
-                    .copied()
+                    .map(|(p, _)| *p)
                     .unwrap_or_default()
                     .target_tiles
             })

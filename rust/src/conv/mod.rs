@@ -60,9 +60,20 @@ pub use plan::{
     LoweredSpmmPlan, Method, WinogradPlan,
 };
 pub use sconv::{
-    sconv, sconv_ell, sconv_ell_with_pool, sconv_parallel, sconv_with_pool, SparseLayout,
-    TilePolicy, SIMD_LANES,
+    sconv, sconv_ell, sconv_ell_with_pool, sconv_parallel, sconv_with_pool, PolicySource,
+    SparseLayout, TilePolicy, SIMD_LANES,
 };
+// Crate-internal kernel geometry consumed by the simulator's
+// microkernel trace generators (`crate::simulator::trace`), so the
+// traced loop nests share the exact tiling and gather math the kernels
+// run.
+pub(crate) use sconv::{nnz_channel_tiles, StridedGather};
+
+// Test-only address-recording hook (hidden from docs; consumed by
+// `tests/trace_fidelity.rs` to pin the simulator's traces against the
+// real kernels' reads).
+#[doc(hidden)]
+pub use sconv::recording;
 pub use spmm::{csrmm, csrmm_pool};
 pub use weights::ConvWeights;
 pub use winograd::{winograd_3x3, winograd_applicable};

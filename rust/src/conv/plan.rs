@@ -23,7 +23,8 @@
 use super::executor::{pad_into, Workspace};
 use super::im2col::im2col_group_into;
 use super::sconv::{
-    nnz_channel_tiles, sconv_tile, sconv_tiled, worker_scratch_floats, SparseLayout, TilePolicy,
+    nnz_channel_tiles, sconv_tile, sconv_tiled, worker_scratch_floats, PolicySource, SparseLayout,
+    TilePolicy,
 };
 use super::weights::ConvWeights;
 use super::winograd::{
@@ -115,6 +116,15 @@ pub trait ConvExecutor: Send + Sync {
     /// the adaptive-tiling loop and tests can inspect the live plan.
     fn tile_policy(&self) -> Option<TilePolicy> {
         None
+    }
+
+    /// Where the executor's [`TilePolicy`] came from ([`PolicySource`]):
+    /// the static default, the offline simulator sweep, or a runtime
+    /// override. Provenance only — it never affects dispatch or
+    /// results; methods without policy knobs report
+    /// [`PolicySource::Default`].
+    fn policy_source(&self) -> PolicySource {
+        PolicySource::Default
     }
 
     /// Number of tiles the **asynchronous (DAG) execution path**
@@ -220,6 +230,9 @@ pub struct DirectSparsePlan {
     /// consumed by the vectorized microkernel (`policy.lanes > 1`).
     balanced: Option<Vec<BalancedCsr>>,
     policy: TilePolicy,
+    /// Where `policy` came from ([`PolicySource`]) — provenance carried
+    /// for observability; never consulted by the kernels.
+    source: PolicySource,
     tiles: Vec<Range<usize>>,
     tile_nnz: Vec<usize>,
 }
@@ -240,6 +253,20 @@ impl DirectSparsePlan {
     /// and method flips pay the packing cost at plan build — never on
     /// the execute path.
     pub fn build_with_policy(shape: &ConvShape, weights: &ConvWeights, policy: TilePolicy) -> Self {
+        Self::build_with_policy_source(shape, weights, policy, PolicySource::Default)
+    }
+
+    /// [`DirectSparsePlan::build_with_policy`] tagged with the policy's
+    /// [`PolicySource`] — the plan cache threads its per-layer
+    /// provenance through here so a plan can report whether its
+    /// geometry is the static default, a simulator-tuned choice, or a
+    /// telemetry override. The tag changes nothing about the build.
+    pub fn build_with_policy_source(
+        shape: &ConvShape,
+        weights: &ConvWeights,
+        policy: TilePolicy,
+        source: PolicySource,
+    ) -> Self {
         assert_eq!(weights.shape, *shape, "weights/shape mismatch");
         let banks = weights.stretched_banks();
         let (tiles, tile_nnz) = nnz_channel_tiles(shape, &banks, policy.target_tiles);
@@ -254,6 +281,7 @@ impl DirectSparsePlan {
             banks,
             balanced,
             policy,
+            source,
             tiles,
             tile_nnz,
         }
@@ -298,6 +326,10 @@ impl ConvExecutor for DirectSparsePlan {
 
     fn tile_policy(&self) -> Option<TilePolicy> {
         Some(self.policy)
+    }
+
+    fn policy_source(&self) -> PolicySource {
+        self.source
     }
 
     fn workspace_floats(&self, batch: usize, workers: usize) -> usize {
@@ -754,10 +786,25 @@ impl LayerPlan {
         method: Method,
         policy: TilePolicy,
     ) -> LayerPlan {
+        Self::build_with_policy_source(shape, weights, method, policy, PolicySource::Default)
+    }
+
+    /// [`LayerPlan::build_with_policy`] with the policy's
+    /// [`PolicySource`] provenance tag (meaningful for DirectSparse
+    /// only; the other methods have no policy and always report
+    /// [`PolicySource::Default`]). The tag never changes what is built
+    /// or computed.
+    pub fn build_with_policy_source(
+        shape: &ConvShape,
+        weights: &ConvWeights,
+        method: Method,
+        policy: TilePolicy,
+        source: PolicySource,
+    ) -> LayerPlan {
         let exec: Box<dyn ConvExecutor> = match method {
-            Method::DirectSparse => {
-                Box::new(DirectSparsePlan::build_with_policy(shape, weights, policy))
-            }
+            Method::DirectSparse => Box::new(DirectSparsePlan::build_with_policy_source(
+                shape, weights, policy, source,
+            )),
             Method::LoweredGemm => Box::new(LoweredGemmPlan::build(shape, weights)),
             Method::LoweredSpmm => Box::new(LoweredSpmmPlan::build(shape, weights)),
             Method::Winograd => Box::new(WinogradPlan::build(shape, weights)),
@@ -782,11 +829,26 @@ impl LayerPlan {
         method: Method,
         policy: TilePolicy,
     ) -> LayerPlan {
+        Self::build_shared_with_policy_source(shape, weights, method, policy, PolicySource::Default)
+    }
+
+    /// [`LayerPlan::build_shared_with_policy`] with the policy's
+    /// [`PolicySource`] provenance tag — the [`super::PlanCache`] build
+    /// path, so a compiled plan can report whether its geometry came
+    /// from the static default, the offline simulator sweep, or a
+    /// runtime retile.
+    pub fn build_shared_with_policy_source(
+        shape: &ConvShape,
+        weights: Arc<ConvWeights>,
+        method: Method,
+        policy: TilePolicy,
+        source: PolicySource,
+    ) -> LayerPlan {
         match method {
             Method::LoweredGemm => LayerPlan {
                 exec: Box::new(LoweredGemmPlan::build_shared(shape, weights)),
             },
-            _ => Self::build_with_policy(shape, &weights, method, policy),
+            _ => Self::build_with_policy_source(shape, &weights, method, policy, source),
         }
     }
 
@@ -794,6 +856,12 @@ impl LayerPlan {
     /// `None` for methods without policy knobs).
     pub fn tile_policy(&self) -> Option<TilePolicy> {
         self.exec.tile_policy()
+    }
+
+    /// Where this plan's [`TilePolicy`] came from (see
+    /// [`PolicySource`]).
+    pub fn policy_source(&self) -> PolicySource {
+        self.exec.policy_source()
     }
 
     /// The layer geometry this plan was compiled for.
@@ -874,6 +942,10 @@ impl ConvExecutor for LayerPlan {
 
     fn tile_policy(&self) -> Option<TilePolicy> {
         self.exec.tile_policy()
+    }
+
+    fn policy_source(&self) -> PolicySource {
+        self.exec.policy_source()
     }
 
     fn workspace_floats(&self, batch: usize, workers: usize) -> usize {

@@ -107,6 +107,28 @@ pub enum SparseLayout {
     Balanced,
 }
 
+/// Where a layer's [`TilePolicy`] came from — the provenance axis the
+/// plan cache tracks next to the geometry itself, so consumers can tell
+/// a static default from a simulator-tuned seed from a telemetry
+/// override. The geometry axes live in [`TilePolicy`]; the source rides
+/// alongside (it is provenance, not geometry, and must never affect
+/// kernel dispatch or results).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicySource {
+    /// The static [`TilePolicy::default`] — no tuner or telemetry has
+    /// touched this layer.
+    Default,
+    /// Chosen offline by the cache-simulator sweep
+    /// ([`crate::simulator::autotune`]): the candidate with the fewest
+    /// simulated bytes-from-DRAM for this layer shape.
+    Tuned,
+    /// Overridden at runtime — either by the telemetry retile loop
+    /// ([`TilePolicy::adjusted`] folding measured pool imbalance /
+    /// steal rate back in) or by an explicit
+    /// `PlanCache::set_tile_policy` call.
+    Adaptive,
+}
+
 /// Geometry of the direct-sparse execution: how many channel tiles the
 /// pool schedules, and the cache-block shape of the microkernel. Held
 /// per [`super::DirectSparsePlan`] (replacing the old hardcoded
@@ -267,6 +289,73 @@ pub(crate) fn worker_scratch_floats(shape: &ConvShape, policy: &TilePolicy) -> u
     }
 }
 
+/// Test-only input-address recorder for the direct-sparse microkernels.
+///
+/// The simulator's trace generators ([`crate::simulator::trace`]) claim
+/// to emit the same padded-input address stream the real kernels touch;
+/// `tests/trace_fidelity.rs` pins that claim by recording the kernels'
+/// actual reads through this hook and comparing address **sets**. The
+/// module is always compiled (so integration tests link in every
+/// profile), but the record calls inside the kernels are compiled only
+/// under `debug_assertions` — release builds carry zero hook overhead,
+/// and fidelity tests skip themselves under `--release`.
+///
+/// Recording is process-global (any pool worker thread logs into one
+/// list); the per-thread base offset is set by [`sconv_tile`] so the
+/// logged ranges are absolute indices into the padded batch-input
+/// slice.
+#[doc(hidden)]
+pub mod recording {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+
+    /// One recorded input read: `len` floats starting at absolute
+    /// padded-input index `start`, `step` indices apart.
+    pub type ReadRange = (usize, usize, usize);
+
+    static ACTIVE: AtomicBool = AtomicBool::new(false);
+    static LOG: Mutex<Vec<ReadRange>> = Mutex::new(Vec::new());
+
+    thread_local! {
+        /// Absolute offset of the current `(image, group)` input slice,
+        /// set by `sconv_tile` on whichever thread runs the tile.
+        static BASE: Cell<usize> = const { Cell::new(0) };
+    }
+
+    /// Whether the hook can observe anything in this build profile.
+    pub fn enabled() -> bool {
+        cfg!(debug_assertions)
+    }
+
+    /// Arm the recorder (clears any previous log).
+    pub fn start() {
+        LOG.lock().unwrap().clear();
+        ACTIVE.store(true, Ordering::SeqCst);
+    }
+
+    /// Disarm the recorder and take the logged read ranges.
+    pub fn take() -> Vec<ReadRange> {
+        ACTIVE.store(false, Ordering::SeqCst);
+        std::mem::take(&mut LOG.lock().unwrap())
+    }
+
+    #[cfg_attr(not(debug_assertions), allow(dead_code))]
+    #[inline]
+    pub(crate) fn set_base(base: usize) {
+        BASE.with(|b| b.set(base));
+    }
+
+    #[cfg_attr(not(debug_assertions), allow(dead_code))]
+    #[inline]
+    pub(crate) fn record(start: usize, len: usize, step: usize) {
+        if ACTIVE.load(Ordering::Relaxed) && len > 0 {
+            let base = BASE.with(|b| b.get());
+            LOG.lock().unwrap().push((base + start, len, step));
+        }
+    }
+}
+
 /// One output plane (`E x F`) for image `n`, group `g`, group-local filter
 /// `ml`, given the group's slice of the padded input.
 ///
@@ -409,6 +498,10 @@ fn sconv_planes_blocked(
             let vals = &bank.csr.values[range.clone()];
             let offs = &bank.csr.colidx[range];
             let scr = &mut scratch[i * span + b0..i * span + b1];
+            #[cfg(debug_assertions)]
+            for off in offs {
+                recording::record(*off as usize + b0, b1 - b0, 1);
+            }
             let mut j = 0;
             while j + 4 <= vals.len() {
                 let (v0, v1, v2, v3) = (vals[j], vals[j + 1], vals[j + 2], vals[j + 3]);
@@ -445,6 +538,12 @@ fn sconv_planes_blocked(
 /// and stored exactly once.
 #[inline]
 fn vector_accumulate(vals: &[f32], offs: &[u32], in_group: &[f32], base: usize, scr: &mut [f32]) {
+    // Per slot, the strip loads plus the scalar tail cover exactly the
+    // window `[off + base, off + base + scr.len())` — record it whole.
+    #[cfg(debug_assertions)]
+    for off in offs {
+        recording::record(*off as usize + base, scr.len(), 1);
+    }
     let mut e = 0;
     while e + SIMD_LANES <= scr.len() {
         let mut acc = F32v::zero();
@@ -556,31 +655,31 @@ fn sconv_planes_balanced(
 /// gather stays inside the padded image — including the balanced
 /// layout's padding slots, whose offset 0 decodes to strip `(0, 0, 0)`.
 #[derive(Clone, Copy)]
-struct StridedGather {
+pub(crate) struct StridedGather {
     /// Padded plane floats `Hp * Wp` — the channel pitch of an offset.
-    plane: usize,
+    pub(crate) plane: usize,
     /// Padded row floats `Wp`.
-    wp: usize,
+    pub(crate) wp: usize,
     /// Filter height `R` (tap rows per channel).
-    r_taps: usize,
+    pub(crate) r_taps: usize,
     /// Filter width `S`.
-    s_taps: usize,
+    pub(crate) s_taps: usize,
     /// Output width `F` — the window every nonzero reads per row.
-    f: usize,
+    pub(crate) f: usize,
     /// Convolution stride (`> 1` on this path).
-    stride: usize,
+    pub(crate) stride: usize,
     /// Distinct phases per `(channel, tap-row)`: `min(stride, S)`.
-    phases: usize,
+    pub(crate) phases: usize,
     /// Strip capacity in floats: `(S-1)/stride + F`, the longest
     /// per-phase window (phase 0).
-    glen_cap: usize,
+    pub(crate) glen_cap: usize,
     /// Strip count: `Cg * R * phases`.
-    strips: usize,
+    pub(crate) strips: usize,
 }
 
 impl StridedGather {
     /// The gather geometry of one input group of `shape`.
-    fn of(shape: &ConvShape) -> Self {
+    pub(crate) fn of(shape: &ConvShape) -> Self {
         let stride = shape.stride;
         let phases = stride.min(shape.s);
         Self {
@@ -598,7 +697,7 @@ impl StridedGather {
 
     /// Per-worker scratch floats: one epoch tag per strip plus the
     /// strip table itself.
-    fn scratch_floats(&self) -> usize {
+    pub(crate) fn scratch_floats(&self) -> usize {
         self.strips * (1 + self.glen_cap)
     }
 
@@ -606,7 +705,7 @@ impl StridedGather {
     /// pair. The stretch layout guarantees `r < R` and `s < S`
     /// ([`crate::sparse::stretch_weights`]), so the decode is exact.
     #[inline]
-    fn decode(&self, off: usize) -> (usize, usize) {
+    pub(crate) fn decode(&self, off: usize) -> (usize, usize) {
         let c = off / self.plane;
         let rem = off % self.plane;
         let r = rem / self.wp;
@@ -645,6 +744,8 @@ impl StridedGather {
         // `off - sq*stride` drops the in-phase shift back to the strip
         // origin `c*Hp*Wp + r*Wp + q`.
         let src = off - sq * self.stride + h * self.stride * self.wp;
+        #[cfg(debug_assertions)]
+        recording::record(src, glen, self.stride);
         let dst = &mut table[si * self.glen_cap..si * self.glen_cap + glen];
         for (j, d) in dst.iter_mut().enumerate() {
             *d = in_group[src + j * self.stride];
@@ -1004,6 +1105,8 @@ pub(crate) unsafe fn sconv_tile(
             // input planes).
             let mls = mr.min(tiles[ct].end - m).min((g + 1) * mg - m);
             let in_group = &img[g * group_len..(g + 1) * group_len];
+            #[cfg(debug_assertions)]
+            recording::set_base(n * img_len + g * group_len);
             let scr_block = &mut scr[..mls * span];
             if policy.lanes > 1 {
                 match balanced {
@@ -1056,6 +1159,8 @@ pub(crate) unsafe fn sconv_tile(
             let g = m / mg;
             let mls = mr.min(tiles[ct].end - m).min((g + 1) * mg - m);
             let in_group = &img[g * group_len..(g + 1) * group_len];
+            #[cfg(debug_assertions)]
+            recording::set_base(n * img_len + g * group_len);
             // Consecutive channels of one image are contiguous in the
             // output, so the register block accumulates into one slice.
             let out_block = unsafe { out_sh.slice_mut((n * shape.m + m) * ef, mls * ef) };

@@ -121,6 +121,11 @@ pub struct Metrics {
     /// Current DirectSparse tile target (max over layers) after the
     /// last retile; 0 until adaptive tiling first adjusts.
     pub tile_target: AtomicU64,
+    /// Layers whose tile policy the startup autotune sweep baked as
+    /// `conv::PolicySource::Tuned` (0 when
+    /// `ServerConfig::autotune_policies` is off or every winner was
+    /// already baked).
+    pub tuned_layers: AtomicU64,
     /// Times the executor swapped in a recompiled plan.
     pub replans: AtomicU64,
     /// Cumulative nanoseconds spent rebuilding plans after router flips.
@@ -163,6 +168,8 @@ pub struct MetricsSnapshot {
     /// Current DirectSparse tile target after the last retile (0 until
     /// adaptive tiling first adjusts).
     pub tile_target: u64,
+    /// Layers the startup autotune sweep baked a `Tuned` policy for.
+    pub tuned_layers: u64,
     /// Times the executor swapped in a recompiled plan.
     pub replans: u64,
     /// Total wall time spent rebuilding plans after router flips.
@@ -212,6 +219,7 @@ impl Metrics {
                 / 1000.0,
             retiles: self.retiles.load(Ordering::Relaxed),
             tile_target: self.tile_target.load(Ordering::Relaxed),
+            tuned_layers: self.tuned_layers.load(Ordering::Relaxed),
             replans: self.replans.load(Ordering::Relaxed),
             replan_build_time: Duration::from_nanos(self.replan_build_ns.load(Ordering::Relaxed)),
             replan_layers_rebuilt: self.replan_layers_rebuilt.load(Ordering::Relaxed),
@@ -287,6 +295,14 @@ mod tests {
         assert_eq!(s.retiles, 2);
         assert_eq!(s.tile_target, 96);
         assert!((s.pool_job_imbalance - 1.43).abs() < 1e-9);
+    }
+
+    #[test]
+    fn autotune_gauge_surfaces_in_snapshot() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().tuned_layers, 0);
+        m.tuned_layers.store(5, Ordering::Relaxed);
+        assert_eq!(m.snapshot().tuned_layers, 5);
     }
 
     #[test]

@@ -13,8 +13,11 @@
 
 use super::router::{Method, Router};
 use crate::config::{ConvShape, Network};
-use crate::conv::{ConvWeights, LayerPlan, NetworkPlan, PlanCache, WorkspaceArena};
-use crate::util::{PoolStats, WorkerPool};
+use crate::conv::{
+    ConvWeights, LayerPlan, NetworkPlan, PlanCache, PolicySource, TilePolicy, WorkspaceArena,
+};
+use crate::simulator::{autotune_policy, P100_GEOMETRY};
+use crate::util::{JobOrigin, PoolStats, WorkerPool};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -274,6 +277,66 @@ impl NetworkSchedule {
             None => 0,
         }
     }
+
+    /// Offline, simulator-guided tile-policy search
+    /// (`simulator::autotune_policy`) over every sparse CONV layer,
+    /// baking each winner into the plan cache as
+    /// [`PolicySource::Tuned`]. Per-layer sweeps run as one
+    /// [`JobOrigin::Autotune`] job on the shared pool (one tile per
+    /// layer), so a multi-layer network sweeps its layers concurrently
+    /// — and, because the autotune origin is excluded from
+    /// [`PoolStats::interval_kernel_tiling_signal`], the sweep itself
+    /// never perturbs the telemetry the online retile loop
+    /// ([`NetworkSchedule::adapt_tiling`]) reacts to. Tuned policies
+    /// *seed* that loop: the next telemetry step refines from the baked
+    /// geometry (re-tagging the layer [`PolicySource::Adaptive`])
+    /// instead of the static default. Returns the number of layers
+    /// whose policy changed; deterministic for a given schedule
+    /// (same network + seed → same baked policies).
+    ///
+    /// [`PoolStats::interval_kernel_tiling_signal`]: crate::util::PoolStats::interval_kernel_tiling_signal
+    pub fn autotune_tiling(&self) -> usize {
+        let sparse: Vec<(String, ConvShape, Arc<ConvWeights>)> = self
+            .network
+            .sparse_conv_layers()
+            .into_iter()
+            .filter_map(|(name, shape)| {
+                self.cache
+                    .conv_weights(name)
+                    .map(|w| (name.to_string(), shape.clone(), w.clone()))
+            })
+            .collect();
+        if sparse.is_empty() {
+            return 0;
+        }
+        let items = Arc::new(sparse);
+        let results: Arc<Mutex<Vec<Option<TilePolicy>>>> =
+            Arc::new(Mutex::new(vec![None; items.len()]));
+        let task = {
+            let items = Arc::clone(&items);
+            let results = Arc::clone(&results);
+            Box::new(move |t: usize, _worker: usize| {
+                let (_, shape, weights) = &items[t];
+                let best = autotune_policy(shape, weights, P100_GEOMETRY).best;
+                results.lock().unwrap()[t] = Some(best);
+            })
+        };
+        self.pool
+            .submit_owned(items.len(), task, JobOrigin::Autotune, &[])
+            .wait();
+        let results = results.lock().unwrap();
+        let mut changed = 0;
+        for ((name, _, _), best) in items.iter().zip(results.iter()) {
+            let best = best.expect("every sweep tile ran");
+            if self
+                .cache
+                .set_tile_policy_with_source(name, best, PolicySource::Tuned)
+            {
+                changed += 1;
+            }
+        }
+        changed
+    }
 }
 
 #[cfg(test)]
@@ -440,6 +503,38 @@ mod tests {
         // second immediate call sees an empty interval again.
         let _ = sched.adapt_tiling();
         assert_eq!(sched.adapt_tiling(), 0, "interval anchor must advance");
+    }
+
+    #[test]
+    fn autotune_tiling_bakes_tuned_policies_without_touching_the_retile_signal() {
+        let sched = NetworkSchedule::build(tiny_net(), 4, Arc::new(WorkerPool::new(2)));
+        let cache = sched.plan_cache();
+        assert_eq!(cache.tile_policy_source("c2"), PolicySource::Default);
+
+        // The sweep bakes the simulator's winner for the sparse layer
+        // only; the dense layer keeps its default/untouched policy.
+        // Provenance flips Default -> Tuned even if the winning
+        // geometry equals the default, so exactly the sparse layer
+        // counts as changed.
+        let changed = sched.autotune_tiling();
+        assert_eq!(changed, 1);
+        assert_eq!(cache.tile_policy_source("c1"), PolicySource::Default);
+        assert_eq!(cache.tile_policy_source("c2"), PolicySource::Tuned);
+        let sparse = ConvShape::new(4, 6, 8, 8, 3, 3, 1, 1).with_sparsity(0.8);
+        let want = autotune_policy(&sparse, sched.weights_for("c2").unwrap(), P100_GEOMETRY).best;
+        assert_eq!(cache.tile_policy("c2"), want);
+
+        // Determinism + idempotence: the same schedule re-tunes to the
+        // same policy, so nothing changes on the second pass.
+        assert_eq!(sched.autotune_tiling(), 0);
+
+        // The sweep ran as Autotune-origin pool jobs, which the retile
+        // loop's kernel-only signal must not see: an immediate
+        // adapt_tiling observes an interval with no kernel jobs and
+        // retiles nothing, leaving the layer Tuned (the baked policy
+        // seeds the loop rather than being clobbered by it).
+        assert_eq!(sched.adapt_tiling(), 0);
+        assert_eq!(cache.tile_policy_source("c2"), PolicySource::Tuned);
     }
 
     #[test]

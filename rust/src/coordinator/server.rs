@@ -154,6 +154,15 @@ pub struct ServerConfig {
     /// Geometry never changes logits — turn this off only to pin the
     /// tile layout (benchmarks comparing fixed configurations do).
     pub adaptive_tiling: bool,
+    /// Run the offline, simulator-guided tile-policy sweep
+    /// (`simulator::tune_plan_cache`) once at startup, before the first
+    /// plan compiles: every sparse CONV layer's candidate geometries
+    /// are ranked under the simulated P100 cache hierarchy and the
+    /// winner is baked as `conv::PolicySource::Tuned`, seeding the
+    /// adaptive-tiling loop above. Off by default — the sweep replays
+    /// one microkernel walk per candidate per layer, a startup cost
+    /// benchmarks and latency-sensitive bring-up may not want.
+    pub autotune_policies: bool,
 }
 
 impl Default for ServerConfig {
@@ -168,6 +177,7 @@ impl Default for ServerConfig {
             pipeline_depth: 2,
             strict_replan: false,
             adaptive_tiling: true,
+            autotune_policies: false,
         }
     }
 }
@@ -425,6 +435,14 @@ fn executor_loop(
         // Weights are materialised exactly once, into the cache every
         // replan reuses.
         let cache = PlanCache::build(&net, cfg.weight_seed);
+        if cfg.autotune_policies {
+            // Bake simulator-tuned tile policies before the first plan
+            // compiles, so the initial DirectSparse plans already carry
+            // the swept geometry (PolicySource::Tuned).
+            use crate::simulator::{tune_plan_cache, P100_GEOMETRY};
+            let tuned = tune_plan_cache(&cache, &net, P100_GEOMETRY);
+            metrics.tuned_layers.store(tuned as u64, Ordering::Relaxed);
+        }
         let assignment = desired_methods(&net, &router);
         let plan = Arc::new(build_plan(&cache, &net, batch_size, &assignment));
         // One arena + input staging buffer per pipeline slot.

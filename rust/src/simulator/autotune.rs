@@ -1,0 +1,308 @@
+//! Offline [`TilePolicy`] autotuning under the simulated cache
+//! hierarchy.
+//!
+//! Park et al. (arXiv 1608.01409) pick the best convolution
+//! implementation per layer from an analytical performance model
+//! instead of a static default; this module is that move for the
+//! direct-sparse microkernel's *geometry*. For one layer `(shape,
+//! weights)` it replays the microkernel's real address stream
+//! ([`super::trace::trace_sconv_microkernel`]) once per candidate
+//! [`TilePolicy`] through a fresh [`MemoryHierarchy`], ranks the
+//! candidates by simulated memory cost — bytes-from-DRAM first, then
+//! L2 and read-only misses — and reports the winner.
+//!
+//! The whole pipeline is a pure function of `(shape, weights,
+//! geometry)`: the candidate list is fixed and ordered, every candidate
+//! is scored on its own hierarchy, and ties resolve to the earlier
+//! candidate (stable sort), so the same inputs always produce the same
+//! [`TilePolicy`] — which is what makes the tuner unit-testable and a
+//! baked policy reproducible across runs. Geometry never changes
+//! results (`tests/plan_props.rs` pins byte-identity across policies),
+//! so the sweep can only ever trade speed, never correctness.
+//!
+//! [`tune_plan_cache`] is the plan-compilation entry point: it sweeps
+//! every sparse CONV layer of a network and bakes each winner into the
+//! [`PlanCache`] as [`PolicySource::Tuned`], where the telemetry retile
+//! loop ([`PlanCache::adapt_tile_policies`]) picks it up as its
+//! starting point instead of the static default.
+
+use super::cache::CacheConfig;
+use super::memory::{MemoryHierarchy, MemoryReport, P100_GEOMETRY};
+use super::trace::trace_sconv_microkernel;
+use crate::config::{ConvShape, LayerKind, Network};
+use crate::conv::{ConvWeights, PlanCache, PolicySource, SparseLayout, TilePolicy};
+use crate::sparse::{BalancedCsr, StretchedFilter};
+
+/// One candidate's simulated cost.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyScore {
+    /// The candidate geometry.
+    pub policy: TilePolicy,
+    /// The hierarchy counters its microkernel walk produced.
+    pub report: MemoryReport,
+    /// Scalar loads/stores of the walk (pre-coalescing) — the FLOP-side
+    /// cost proxy, identical across stride-1 CSR candidates.
+    pub scalar_accesses: u64,
+}
+
+impl PolicyScore {
+    /// The lexicographic rank key: DRAM bytes, then L2 misses, then
+    /// read-only-cache misses. DRAM traffic dominates on the
+    /// bandwidth-bound sparse layers (the paper's core premise), the
+    /// miss counts break ties between candidates with equal footprints.
+    pub fn rank_key(&self) -> (u64, u64, u64) {
+        (
+            self.report.dram_bytes,
+            self.report.l2.misses,
+            self.report.ro.misses,
+        )
+    }
+}
+
+/// The result of one layer's sweep.
+#[derive(Clone, Debug)]
+pub struct AutotuneOutcome {
+    /// The winning geometry (first of `ranked`).
+    pub best: TilePolicy,
+    /// Every candidate, best first ([`PolicyScore::rank_key`] order;
+    /// ties keep candidate order, so the ranking is deterministic).
+    pub ranked: Vec<PolicyScore>,
+}
+
+impl AutotuneOutcome {
+    /// The score of the default policy — the baseline every
+    /// predicted-vs-measured row compares against. The default is
+    /// always a candidate, so this cannot fail.
+    pub fn default_score(&self) -> &PolicyScore {
+        let d = TilePolicy::default();
+        self.ranked
+            .iter()
+            .find(|s| s.policy == d)
+            .expect("default policy is always swept")
+    }
+}
+
+/// The fixed, ordered candidate list the sweep scores. Always contains
+/// [`TilePolicy::default`] (first — ties resolve toward it) and
+/// [`TilePolicy::unblocked`], then the `mr` × `block_floats` grid over
+/// the build's default `lanes`, and — when the build vectorizes
+/// (`lanes > 1`) — the bank-balanced layout at each `mr`. The
+/// `target_tiles` axis is left at the default: tile count balances the
+/// *pool*, which the online retile loop owns; the sweep owns the
+/// per-worker cache behaviour (`mr`, `block_floats`, `layout`).
+pub fn candidate_policies() -> Vec<TilePolicy> {
+    let d = TilePolicy::default();
+    let mut out = vec![d, TilePolicy::unblocked()];
+    for mr in [2usize, 4, 8] {
+        for block_floats in [256usize, 1024, 4096, usize::MAX] {
+            out.push(TilePolicy {
+                mr,
+                block_floats,
+                ..d
+            });
+        }
+    }
+    if d.lanes > 1 {
+        for mr in [2usize, 4, 8] {
+            out.push(TilePolicy {
+                mr,
+                layout: SparseLayout::Balanced,
+                ..d
+            });
+        }
+    }
+    let mut seen: Vec<TilePolicy> = Vec::new();
+    out.retain(|p| {
+        if seen.contains(p) {
+            false
+        } else {
+            seen.push(*p);
+            true
+        }
+    });
+    out
+}
+
+/// Score one `(shape, policy)` pair on a fresh hierarchy of `geometry`.
+/// Builds the same operands the plan would bake (stretched banks;
+/// balanced banks when the policy selects [`SparseLayout::Balanced`])
+/// and replays the microkernel walk once.
+pub fn score_policy(
+    shape: &ConvShape,
+    weights: &ConvWeights,
+    policy: &TilePolicy,
+    geometry: (CacheConfig, CacheConfig),
+) -> PolicyScore {
+    let banks = weights.stretched_banks();
+    score_banks(shape, &banks, policy, geometry)
+}
+
+/// [`score_policy`] over pre-stretched banks (the sweep stretches
+/// once and scores many candidates).
+fn score_banks(
+    shape: &ConvShape,
+    banks: &[StretchedFilter],
+    policy: &TilePolicy,
+    geometry: (CacheConfig, CacheConfig),
+) -> PolicyScore {
+    let balanced: Option<Vec<BalancedCsr>> = (policy.layout == SparseLayout::Balanced).then(|| {
+        banks
+            .iter()
+            .map(|b| BalancedCsr::from_csr(&b.csr, policy.mr.max(1)))
+            .collect()
+    });
+    let mut mem = MemoryHierarchy::new(geometry.0, geometry.1);
+    let t = trace_sconv_microkernel(shape, banks, balanced.as_deref(), policy, &mut mem);
+    PolicyScore {
+        policy: *policy,
+        report: mem.report(),
+        scalar_accesses: t.scalar_accesses,
+    }
+}
+
+/// Sweep every candidate geometry for one layer and rank them by
+/// simulated memory cost. Deterministic: same `(shape, weights,
+/// geometry)` → identical ranking and identical `best`
+/// (`tests/autotune_props.rs` pins this).
+pub fn autotune_policy(
+    shape: &ConvShape,
+    weights: &ConvWeights,
+    geometry: (CacheConfig, CacheConfig),
+) -> AutotuneOutcome {
+    let banks = weights.stretched_banks();
+    let mut ranked: Vec<PolicyScore> = candidate_policies()
+        .iter()
+        .map(|p| score_banks(shape, &banks, p, geometry))
+        .collect();
+    ranked.sort_by_key(PolicyScore::rank_key);
+    AutotuneOutcome {
+        best: ranked[0].policy,
+        ranked,
+    }
+}
+
+/// [`autotune_policy`] on the P100 geometry the paper benchmarks
+/// ([`P100_GEOMETRY`]).
+pub fn autotune_policy_p100(shape: &ConvShape, weights: &ConvWeights) -> AutotuneOutcome {
+    autotune_policy(shape, weights, P100_GEOMETRY)
+}
+
+/// Sweep every **sparse** CONV layer of `network` and bake each winner
+/// into `cache` as [`PolicySource::Tuned`] — the offline-autotune entry
+/// point plan compilation goes through ([`crate::coordinator`] exposes
+/// it as `NetworkSchedule::autotune_tiling` and
+/// `ServerConfig::autotune_policies`). Dense layers route to
+/// LoweredGemm and are skipped. Returns the number of layers whose
+/// policy entry changed; their cached DirectSparse plans are
+/// invalidated, so the next plan request compiles with the tuned
+/// geometry (and reports it via `LayerPlan::policy_source`).
+pub fn tune_plan_cache(
+    cache: &PlanCache,
+    network: &Network,
+    geometry: (CacheConfig, CacheConfig),
+) -> usize {
+    let mut changed = 0;
+    for layer in &network.layers {
+        let LayerKind::Conv(shape) = &layer.kind else {
+            continue;
+        };
+        if !shape.is_sparse() {
+            continue;
+        }
+        let Some(weights) = cache.conv_weights(&layer.name) else {
+            continue;
+        };
+        let best = autotune_policy(shape, weights, geometry).best;
+        if cache.set_tile_policy_with_source(&layer.name, best, PolicySource::Tuned) {
+            changed += 1;
+        }
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn layer() -> (ConvShape, ConvWeights) {
+        let shape = ConvShape::new(16, 24, 13, 13, 3, 3, 1, 1).with_sparsity(0.85);
+        let mut rng = Rng::new(11);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        (shape, w)
+    }
+
+    #[test]
+    fn candidates_are_unique_and_lead_with_the_default() {
+        let cands = candidate_policies();
+        assert_eq!(cands[0], TilePolicy::default());
+        assert!(cands.contains(&TilePolicy::unblocked()));
+        for (i, a) in cands.iter().enumerate() {
+            for b in &cands[i + 1..] {
+                assert_ne!(a, b, "duplicate candidate {a:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let (shape, w) = layer();
+        let a = autotune_policy_p100(&shape, &w);
+        let b = autotune_policy_p100(&shape, &w);
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.ranked.len(), b.ranked.len());
+        for (x, y) in a.ranked.iter().zip(&b.ranked) {
+            assert_eq!(x.policy, y.policy);
+            assert_eq!(x.rank_key(), y.rank_key());
+            assert_eq!(x.scalar_accesses, y.scalar_accesses);
+        }
+    }
+
+    #[test]
+    fn ranking_is_sorted_and_contains_every_candidate() {
+        let (shape, w) = layer();
+        let out = autotune_policy_p100(&shape, &w);
+        assert_eq!(out.ranked.len(), candidate_policies().len());
+        assert_eq!(out.best, out.ranked[0].policy);
+        for pair in out.ranked.windows(2) {
+            assert!(pair[0].rank_key() <= pair[1].rank_key());
+        }
+        // The default is swept, so the predicted-vs-measured baseline
+        // always exists.
+        let _ = out.default_score();
+    }
+
+    #[test]
+    fn winner_never_costs_more_dram_than_the_default() {
+        let (shape, w) = layer();
+        let out = autotune_policy_p100(&shape, &w);
+        assert!(out.ranked[0].report.dram_bytes <= out.default_score().report.dram_bytes);
+    }
+
+    #[test]
+    fn tune_plan_cache_bakes_tuned_sources_for_sparse_layers_only() {
+        use crate::config::Layer;
+        let dense = ConvShape::new(3, 4, 8, 8, 3, 3, 1, 1);
+        let sparse = ConvShape::new(4, 6, 8, 8, 3, 3, 1, 1).with_sparsity(0.8);
+        let net = Network {
+            name: "tune-mini".into(),
+            layers: vec![
+                Layer::new("c1", LayerKind::Conv(dense)),
+                Layer::new("c2", LayerKind::Conv(sparse)),
+            ],
+        };
+        let cache = PlanCache::build(&net, 3);
+        tune_plan_cache(&cache, &net, P100_GEOMETRY);
+        assert_eq!(cache.tile_policy_source("c1"), PolicySource::Default);
+        assert_eq!(cache.tile_policy_source("c2"), PolicySource::Tuned);
+        // The baked policy is the sweep winner, and the compiled plan
+        // carries the provenance.
+        let want = autotune_policy_p100(&sparse, cache.conv_weights("c2").unwrap()).best;
+        assert_eq!(cache.tile_policy("c2"), want);
+        let plan = cache.plan_for("c2", &sparse, crate::conv::Method::DirectSparse);
+        assert_eq!(plan.policy_source(), PolicySource::Tuned);
+        assert_eq!(plan.tile_policy(), Some(want));
+        // Re-tuning is idempotent: same winner, no further invalidation.
+        assert_eq!(tune_plan_cache(&cache, &net, P100_GEOMETRY), 0);
+    }
+}

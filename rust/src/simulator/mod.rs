@@ -12,20 +12,38 @@
 //! * [`memory`]   — read-only cache -> L2 -> DRAM hierarchy with
 //!   per-stream accounting.
 //! * [`trace`]    — address-stream generators that walk the same loop
-//!   structures as the real kernels (`sconv`, `csrmm`, `sgemm`, `im2col`).
+//!   structures as the real kernels (`sconv`, `csrmm`, `sgemm`,
+//!   `im2col`) **and** the crate's own direct-sparse microkernels
+//!   (register-blocked, vectorized, bank-balanced, strided row-gather —
+//!   [`trace_sconv_microkernel`]), pinned against the kernels' recorded
+//!   reads by `tests/trace_fidelity.rs`.
+//! * [`autotune`] — the offline [`crate::conv::TilePolicy`] sweep: rank
+//!   candidate geometries per layer by simulated bytes-from-DRAM and
+//!   bake the winner into the plan cache as
+//!   [`crate::conv::PolicySource::Tuned`].
 //!
-//! The claim under test is *relative*: Escoin's direct sparse convolution
-//! must show substantially higher read-only-cache and L2 hit rates than
-//! the lowered csrmm on the same layers, because the lowered matrix
-//! duplicates the input R*S times while sconv re-reads the compact padded
-//! image through overlapping windows.
+//! The original claim under test is *relative*: Escoin's direct sparse
+//! convolution must show substantially higher read-only-cache and L2 hit
+//! rates than the lowered csrmm on the same layers, because the lowered
+//! matrix duplicates the input R*S times while sconv re-reads the
+//! compact padded image through overlapping windows. Since the autotuner
+//! landed, the simulator is also *load-bearing*: plan compilation can
+//! ask it which geometry to bake (see `rust/src/simulator/README.md`).
 
+pub mod autotune;
 pub mod cache;
 pub mod coalesce;
 pub mod memory;
 pub mod trace;
 
+pub use autotune::{
+    autotune_policy, autotune_policy_p100, candidate_policies, score_policy, tune_plan_cache,
+    AutotuneOutcome, PolicyScore,
+};
 pub use cache::{Cache, CacheConfig, CacheStats};
 pub use coalesce::coalesce_warp;
 pub use memory::{AccessKind, MemoryHierarchy, MemoryReport, P100_GEOMETRY};
-pub use trace::{trace_csrmm, trace_im2col, trace_sconv, trace_sgemm, KernelTrace};
+pub use trace::{
+    trace_csrmm, trace_im2col, trace_sconv, trace_sconv_input_addresses,
+    trace_sconv_microkernel, trace_sgemm, KernelTrace,
+};

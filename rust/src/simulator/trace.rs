@@ -12,10 +12,20 @@
 //! and executed sequentially (hit rates are cache-state quantities, not
 //! timing quantities), and batch 1 is traced (the reuse pattern is
 //! per-image).
+//!
+//! Besides the paper-era whole-kernel generators, this module traces
+//! the **microkernels the crate actually runs today**
+//! ([`trace_sconv_microkernel`]): the register-blocked stride-1 path,
+//! its vectorized and bank-balanced variants, and the strided
+//! row-gather path — walking the same [`TilePolicy`]-driven loop nests
+//! as `conv::sconv`, so the autotuner (`super::autotune`) sweeps real
+//! address streams. `tests/trace_fidelity.rs` pins the traced input
+//! address set against the kernels' recorded reads.
 
 use super::memory::{AccessKind, MemoryHierarchy};
 use crate::config::ConvShape;
-use crate::sparse::{CsrMatrix, StretchedFilter};
+use crate::conv::{nnz_channel_tiles, StridedGather, TilePolicy};
+use crate::sparse::{BalancedCsr, CsrMatrix, StretchedFilter};
 
 const WARP: usize = 32;
 
@@ -267,6 +277,256 @@ pub fn trace_im2col(shape: &ConvShape, mem: &mut MemoryHierarchy) -> KernelTrace
     }
 }
 
+/// Where the microkernel walk sends its address events. One walk serves
+/// two sinks — the [`MemoryHierarchy`] replay behind
+/// [`trace_sconv_microkernel`] and the raw index collection behind
+/// [`trace_sconv_input_addresses`] — so the stream the autotuner scores
+/// and the stream the fidelity tests assert cannot drift apart.
+trait SconvSink {
+    /// `len` input floats read by the block on `sm`, starting at
+    /// absolute padded-input index `idx`, `step` indices apart.
+    fn input_read(&mut self, sm: usize, idx: usize, len: usize, step: usize);
+    /// One stored weight slot (value + column index) at slot `j`.
+    fn weight_read(&mut self, sm: usize, j: usize);
+    /// `len` output floats written starting at output index `start`.
+    fn output_write(&mut self, sm: usize, start: usize, len: usize);
+}
+
+/// Replays events into a [`MemoryHierarchy`] with the paper's §3.3
+/// placement: inputs through the read-only cache, weights as global
+/// loads, outputs written through L2.
+struct HierarchySink<'a> {
+    mem: &'a mut MemoryHierarchy,
+    scalar: u64,
+}
+
+impl SconvSink for HierarchySink<'_> {
+    fn input_read(&mut self, sm: usize, idx: usize, len: usize, step: usize) {
+        let addrs: Vec<u64> = (0..len)
+            .map(|k| INPUT_BASE + ((idx + k * step) * 4) as u64)
+            .collect();
+        for chunk in addrs.chunks(WARP) {
+            self.mem.warp_access_on(sm, chunk, AccessKind::ReadOnly);
+        }
+        self.scalar += len as u64;
+    }
+
+    fn weight_read(&mut self, sm: usize, j: usize) {
+        let j = j as u64;
+        self.mem
+            .warp_access_on(sm, &[WVAL_BASE + j * 4], AccessKind::GlobalRead);
+        self.mem
+            .warp_access_on(sm, &[WIDX_BASE + j * 4], AccessKind::GlobalRead);
+        self.scalar += 2;
+    }
+
+    fn output_write(&mut self, sm: usize, start: usize, len: usize) {
+        for base in (0..len).step_by(WARP) {
+            let lanes: Vec<u64> = (base..(base + WARP).min(len))
+                .map(|px| OUTPUT_BASE + ((start + px) as u64) * 4)
+                .collect();
+            self.mem.warp_access_on(sm, &lanes, AccessKind::GlobalWrite);
+        }
+        self.scalar += len as u64;
+    }
+}
+
+/// Collects the raw padded-input float indices the walk touches —
+/// exactly what the kernels' `conv::recording` hook logs.
+struct AddressSink {
+    addrs: Vec<usize>,
+}
+
+impl SconvSink for AddressSink {
+    fn input_read(&mut self, _sm: usize, idx: usize, len: usize, step: usize) {
+        self.addrs.extend((0..len).map(|k| idx + k * step));
+    }
+
+    fn weight_read(&mut self, _sm: usize, _j: usize) {}
+
+    fn output_write(&mut self, _sm: usize, _start: usize, _len: usize) {}
+}
+
+/// The nonzero slots one walked channel consumes: the CSR row, or the
+/// balanced bank's padded slot row when the vectorized kernel runs the
+/// [`BalancedCsr`] layout (padding slots carry offset 0 and are real
+/// reads — strip `(0, 0, 0)` on the strided path).
+fn walk_slots<'a>(
+    banks: &'a [StretchedFilter],
+    balanced: Option<&'a [BalancedCsr]>,
+    use_balanced: bool,
+    g: usize,
+    ml: usize,
+) -> &'a [u32] {
+    if use_balanced {
+        balanced.unwrap()[g].row_slots(ml).1
+    } else {
+        let range = banks[g].csr.row_range(ml);
+        &banks[g].csr.colidx[range]
+    }
+}
+
+/// Walk the direct-sparse microkernel `conv::sconv::sconv_tile`
+/// dispatches for this `(shape, policy)` — same nnz-weighted channel
+/// tiles, same register blocks (up to `policy.mr` channels, never
+/// crossing a group), same `block_floats` row blocks (stride 1) or
+/// epoch-memoized [`StridedGather`] strips (stride > 1) — emitting
+/// every input read, weight-slot read, and output write into `sink`.
+/// Batch 1, one thread block per channel tile, blocks round-robin over
+/// the simulated SMs. Returns the traced kernel-variant name.
+fn walk_sconv_microkernel<S: SconvSink>(
+    shape: &ConvShape,
+    banks: &[StretchedFilter],
+    balanced: Option<&[BalancedCsr]>,
+    policy: &TilePolicy,
+    sink: &mut S,
+) -> &'static str {
+    let (e, f) = (shape.out_h(), shape.out_w());
+    let ef = e * f;
+    let (cg, mg) = (shape.c_per_group(), shape.m_per_group());
+    let (hp, wp) = (shape.padded_h(), shape.padded_w());
+    let group_len = cg * hp * wp;
+    let vector = policy.lanes > 1;
+    let use_balanced = vector && balanced.is_some();
+    let mr = policy.mr.max(1);
+    let (tiles, _) = nnz_channel_tiles(shape, banks, policy.target_tiles);
+
+    // Per-(group, row) weight-slot bases: groups never alias in the
+    // weight region, while every re-walk of a row (per row block, per
+    // output row) hits the same addresses — the reuse the caches see.
+    let mut wofs: Vec<Vec<usize>> = Vec::with_capacity(banks.len());
+    let mut acc = 0usize;
+    for (g, _) in banks.iter().enumerate() {
+        let mut per_row = Vec::with_capacity(mg);
+        for ml in 0..mg {
+            per_row.push(acc);
+            acc += walk_slots(banks, balanced, use_balanced, g, ml).len();
+        }
+        wofs.push(per_row);
+    }
+
+    if shape.stride == 1 {
+        let span = (e - 1) * wp + f;
+        let block = policy.block_floats.max(1);
+        for (ct, tile) in tiles.iter().enumerate() {
+            let sm = ct % super::memory::NUM_SM;
+            let mut m = tile.start;
+            while m < tile.end {
+                let g = m / mg;
+                let mls = mr.min(tile.end - m).min((g + 1) * mg - m);
+                let base = g * group_len;
+                let mut b0 = 0;
+                while b0 < span {
+                    let b1 = b0.saturating_add(block).min(span);
+                    for i in 0..mls {
+                        let ml = m % mg + i;
+                        let offs = walk_slots(banks, balanced, use_balanced, g, ml);
+                        for (j, off) in offs.iter().enumerate() {
+                            sink.weight_read(sm, wofs[g][ml] + j);
+                            sink.input_read(sm, base + *off as usize + b0, b1 - b0, 1);
+                        }
+                    }
+                    b0 = b1;
+                }
+                for i in 0..mls {
+                    sink.output_write(sm, (m + i) * ef, ef);
+                }
+                m += mls;
+            }
+        }
+        if use_balanced {
+            "sconv-balanced"
+        } else if vector {
+            "sconv-simd"
+        } else {
+            "sconv-blocked"
+        }
+    } else {
+        let gg = StridedGather::of(shape);
+        let mut epoch = vec![usize::MAX; gg.strips];
+        for (ct, tile) in tiles.iter().enumerate() {
+            let sm = ct % super::memory::NUM_SM;
+            let mut m = tile.start;
+            while m < tile.end {
+                let g = m / mg;
+                let mls = mr.min(tile.end - m).min((g + 1) * mg - m);
+                let base = g * group_len;
+                // The kernels reset the strip epoch once per register
+                // block; a strip staged by row h is reused by every
+                // channel and nonzero of the block at that row.
+                epoch.fill(usize::MAX);
+                for h in 0..e {
+                    for i in 0..mls {
+                        let ml = m % mg + i;
+                        let offs = walk_slots(banks, balanced, use_balanced, g, ml);
+                        for (j, off) in offs.iter().enumerate() {
+                            sink.weight_read(sm, wofs[g][ml] + j);
+                            let off = *off as usize;
+                            let (si, sq) = gg.decode(off);
+                            if epoch[si] != h {
+                                epoch[si] = h;
+                                let q = si % gg.phases;
+                                let glen = (gg.s_taps - 1 - q) / gg.stride + gg.f;
+                                let src = off - sq * gg.stride + h * gg.stride * gg.wp;
+                                sink.input_read(sm, base + src, glen, gg.stride);
+                            }
+                        }
+                    }
+                }
+                sink.output_write(sm, m * ef, mls * ef);
+                m += mls;
+            }
+        }
+        if vector {
+            "sconv-strided-simd"
+        } else {
+            "sconv-strided"
+        }
+    }
+}
+
+/// Trace the direct-sparse **microkernel** the plan layer actually runs
+/// for `(shape, policy)` — the register-blocked stride-1 path, its
+/// vectorized (`policy.lanes > 1`) and bank-balanced (`balanced`
+/// present) variants, or the [`StridedGather`] row-gather path — into
+/// `mem`. Pass the same `banks` / `balanced` the plan would bake
+/// (balanced banks are consumed only by the vectorized path, mirroring
+/// the kernel dispatch). This is the cost model behind
+/// [`super::autotune`]: candidate policies are ranked by the
+/// [`MemoryHierarchy`] report this walk produces.
+pub fn trace_sconv_microkernel(
+    shape: &ConvShape,
+    banks: &[StretchedFilter],
+    balanced: Option<&[BalancedCsr]>,
+    policy: &TilePolicy,
+    mem: &mut MemoryHierarchy,
+) -> KernelTrace {
+    mem.kernel_boundary();
+    let mut sink = HierarchySink { mem, scalar: 0 };
+    let name = walk_sconv_microkernel(shape, banks, balanced, policy, &mut sink);
+    KernelTrace {
+        name,
+        scalar_accesses: sink.scalar,
+    }
+}
+
+/// The sorted, deduplicated set of padded-input float indices the
+/// microkernel walk reads for `(shape, policy)` at batch 1 — the same
+/// indices `conv::recording` logs from the real kernels, which is
+/// exactly what `tests/trace_fidelity.rs` asserts.
+pub fn trace_sconv_input_addresses(
+    shape: &ConvShape,
+    banks: &[StretchedFilter],
+    balanced: Option<&[BalancedCsr]>,
+    policy: &TilePolicy,
+) -> Vec<usize> {
+    let mut sink = AddressSink { addrs: Vec::new() };
+    walk_sconv_microkernel(shape, banks, balanced, policy, &mut sink);
+    sink.addrs.sort_unstable();
+    sink.addrs.dedup();
+    sink.addrs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -380,5 +640,104 @@ mod tests {
         let t = trace_sgemm(shape.m, k, ef, &mut m);
         assert!(t.scalar_accesses > 0);
         assert!(m.report().transactions > 0);
+    }
+
+    fn policy(mr: usize, block_floats: usize, lanes: usize) -> TilePolicy {
+        TilePolicy {
+            target_tiles: 48,
+            mr,
+            block_floats,
+            lanes,
+            layout: crate::conv::SparseLayout::Csr,
+        }
+    }
+
+    #[test]
+    fn microkernel_variant_names_follow_the_dispatch() {
+        let (shape, w) = layer();
+        let banks = w.stretched_banks();
+        let bal: Vec<BalancedCsr> = banks
+            .iter()
+            .map(|b| BalancedCsr::from_csr(&b.csr, 4))
+            .collect();
+        let mut m = MemoryHierarchy::p100();
+        assert_eq!(
+            trace_sconv_microkernel(&shape, &banks, None, &policy(4, 1024, 1), &mut m).name,
+            "sconv-blocked"
+        );
+        assert_eq!(
+            trace_sconv_microkernel(&shape, &banks, None, &policy(4, 1024, 8), &mut m).name,
+            "sconv-simd"
+        );
+        assert_eq!(
+            trace_sconv_microkernel(&shape, &banks, Some(&bal), &policy(4, 1024, 8), &mut m).name,
+            "sconv-balanced"
+        );
+        // Balanced banks are ignored by the scalar path, like the kernel.
+        assert_eq!(
+            trace_sconv_microkernel(&shape, &banks, Some(&bal), &policy(4, 1024, 1), &mut m).name,
+            "sconv-blocked"
+        );
+
+        let strided = ConvShape::new(16, 8, 13, 13, 3, 3, 2, 1).with_sparsity(0.8);
+        let mut rng = Rng::new(7);
+        let ws = ConvWeights::synthetic(&strided, &mut rng);
+        let sbanks = ws.stretched_banks();
+        assert_eq!(
+            trace_sconv_microkernel(&strided, &sbanks, None, &policy(4, 1024, 1), &mut m).name,
+            "sconv-strided"
+        );
+        assert_eq!(
+            trace_sconv_microkernel(&strided, &sbanks, None, &policy(4, 1024, 8), &mut m).name,
+            "sconv-strided-simd"
+        );
+    }
+
+    #[test]
+    fn microkernel_trace_is_deterministic() {
+        let (shape, w) = layer();
+        let banks = w.stretched_banks();
+        let p = policy(4, 1024, 1);
+        let mut m1 = MemoryHierarchy::p100();
+        let t1 = trace_sconv_microkernel(&shape, &banks, None, &p, &mut m1);
+        let mut m2 = MemoryHierarchy::p100();
+        let t2 = trace_sconv_microkernel(&shape, &banks, None, &p, &mut m2);
+        assert_eq!(t1.scalar_accesses, t2.scalar_accesses);
+        let (r1, r2) = (m1.report(), m2.report());
+        assert_eq!(r1.dram_bytes, r2.dram_bytes);
+        assert_eq!(r1.transactions, r2.transactions);
+        assert_eq!(r1.ro.hits, r2.ro.hits);
+        assert_eq!(r1.l2.misses, r2.l2.misses);
+    }
+
+    #[test]
+    fn stride1_input_address_set_is_blocking_invariant() {
+        // Blocking slices each nonzero's span into row blocks but the
+        // union of reads is the whole span either way — the address SET
+        // is a geometry invariant, only the visit order (and thus cache
+        // behaviour) changes with the policy.
+        let (shape, w) = layer();
+        let banks = w.stretched_banks();
+        let a = trace_sconv_input_addresses(&shape, &banks, None, &policy(4, 1024, 1));
+        let b = trace_sconv_input_addresses(&shape, &banks, None, &policy(1, usize::MAX, 1));
+        let c = trace_sconv_input_addresses(&shape, &banks, None, &policy(8, 256, 8));
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        // Every index stays inside the padded image.
+        let img = shape.c * shape.padded_h() * shape.padded_w();
+        assert!(*a.last().unwrap() < img);
+    }
+
+    #[test]
+    fn strided_input_addresses_stay_inside_the_padded_image() {
+        let shape = ConvShape::new(16, 8, 13, 13, 3, 3, 2, 1).with_sparsity(0.8);
+        let mut rng = Rng::new(7);
+        let w = ConvWeights::synthetic(&shape, &mut rng);
+        let banks = w.stretched_banks();
+        let a = trace_sconv_input_addresses(&shape, &banks, None, &policy(4, 1024, 1));
+        assert!(!a.is_empty());
+        let img = shape.c * shape.padded_h() * shape.padded_w();
+        assert!(*a.last().unwrap() < img);
     }
 }

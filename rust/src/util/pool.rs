@@ -134,11 +134,19 @@ pub enum JobOrigin {
     /// in-tree producer yet — the server's batches flow through the
     /// DAG executor's `Kernel`/`Dag` jobs).
     Serve = 2,
+    /// Offline autotune sweeps (`crate::simulator::autotune`) run on
+    /// the shared pool, e.g. `NetworkSchedule::autotune_tiling`. Sim
+    /// replays have no tile-granularity story the retile loop could
+    /// act on, so this lane — like `Dag` — is **excluded** from
+    /// [`PoolStats::interval_kernel_tiling_signal`]: a background
+    /// sweep can never perturb the telemetry that retiles the live
+    /// kernels.
+    Autotune = 3,
 }
 
 impl JobOrigin {
     /// Number of origin lanes (the telemetry array length).
-    pub const COUNT: usize = 3;
+    pub const COUNT: usize = 4;
 
     /// Position of this origin in the `PoolStats::origin_*` arrays.
     #[inline]
@@ -1588,6 +1596,70 @@ mod tests {
 
         // Aggregate counters remain the sums over the origin buckets, so
         // existing consumers keep reading the same totals.
+        assert_eq!(
+            after_more.jobs_completed,
+            after_more.origin_jobs_completed.iter().sum::<u64>()
+        );
+        assert_eq!(
+            after_more.job_tiles_completed,
+            after_more.origin_job_tiles.iter().sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn autotune_origin_jobs_do_not_pollute_the_kernel_tiling_signal() {
+        let pool = WorkerPool::new(2);
+
+        // Establish a kernel-bucket baseline.
+        pool.run(6, &|_t, _w| {});
+        let after_kernel = pool.stats();
+        assert_eq!(
+            after_kernel.origin_jobs_completed[JobOrigin::Kernel.index()],
+            1
+        );
+        assert_eq!(
+            after_kernel.origin_jobs_completed[JobOrigin::Autotune.index()],
+            0
+        );
+
+        // Offline sweep jobs land in the autotune bucket only...
+        pool.submit_owned(5, Box::new(|_t, _w| {}), JobOrigin::Autotune, &[])
+            .wait();
+        pool.submit_owned(5, Box::new(|_t, _w| {}), JobOrigin::Autotune, &[])
+            .wait();
+        let after_tune = pool.stats();
+        assert_eq!(
+            after_tune.origin_jobs_completed[JobOrigin::Kernel.index()],
+            1
+        );
+        assert_eq!(
+            after_tune.origin_jobs_completed[JobOrigin::Autotune.index()],
+            2
+        );
+        assert_eq!(
+            after_tune.origin_job_tiles[JobOrigin::Kernel.index()],
+            after_kernel.origin_job_tiles[JobOrigin::Kernel.index()],
+            "autotune jobs must not add kernel tiles"
+        );
+
+        // ...so an autotune-only interval yields NO kernel retiling
+        // signal: the offline sweep can never perturb the online retile
+        // loop, even though the aggregate interval saw completed jobs.
+        assert!(after_tune.interval_job_imbalance(&after_kernel).is_some());
+        assert!(after_tune
+            .interval_kernel_job_imbalance(&after_kernel)
+            .is_none());
+        assert!(after_tune
+            .interval_kernel_tiling_signal(&after_kernel)
+            .is_none());
+
+        // A fresh kernel job re-arms the signal and the aggregate
+        // counters still sum over all four buckets.
+        pool.run(6, &|_t, _w| {});
+        let after_more = pool.stats();
+        assert!(after_more
+            .interval_kernel_tiling_signal(&after_tune)
+            .is_some());
         assert_eq!(
             after_more.jobs_completed,
             after_more.origin_jobs_completed.iter().sum::<u64>()

@@ -1,0 +1,194 @@
+//! Property tests for the simulator-guided TilePolicy autotuner
+//! (`simulator::autotune`): the sweep is a pure function of `(shape,
+//! weights, hierarchy)`, every geometry it may pick preserves results
+//! (byte-identical scalar, ULP-bounded vectorized — the same contract
+//! `tests/plan_props.rs` pins for hand-picked policies), and a tuned
+//! policy is reachable end to end through the public `PlanCache` API.
+
+use escoin::config::{minicnn, ConvShape, LayerKind};
+use escoin::conv::{
+    shapes_under_test, ConvWeights, LayerPlan, Method, PlanCache, PolicySource, SparseLayout,
+    TilePolicy, SIMD_LANES,
+};
+use escoin::simulator::{autotune_policy, candidate_policies, tune_plan_cache, P100_GEOMETRY};
+use escoin::tensor::{Dims4, Tensor4};
+use escoin::util::{Rng, WorkerPool};
+
+fn case(shape: &ConvShape, batch: usize, seed: u64) -> (Tensor4, ConvWeights) {
+    let mut rng = Rng::new(seed);
+    let x = Tensor4::random_activations(Dims4::new(batch, shape.c, shape.h, shape.w), &mut rng);
+    let w = ConvWeights::synthetic(shape, &mut rng);
+    (x, w)
+}
+
+fn bits(t: &Tensor4) -> Vec<u32> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Monotonic-key ULP distance (same mapping as `tests/plan_props.rs`).
+fn ulps(a: f32, b: f32) -> u64 {
+    fn key(x: f32) -> i64 {
+        let i = x.to_bits() as i32 as i64;
+        if i < 0 {
+            (i32::MIN as i64) - i
+        } else {
+            i
+        }
+    }
+    key(a).abs_diff(key(b))
+}
+
+/// Determinism over the canonical shape grid: the same `(shape,
+/// weights, hierarchy)` always yields the identical ranking and winner,
+/// and the ranking covers exactly the fixed candidate list.
+#[test]
+fn property_sweep_is_deterministic_over_the_shape_grid() {
+    for (i, shape) in shapes_under_test().into_iter().enumerate() {
+        let (_, w) = case(&shape, 1, 6000 + i as u64);
+        let a = autotune_policy(&shape, &w, P100_GEOMETRY);
+        let b = autotune_policy(&shape, &w, P100_GEOMETRY);
+        assert_eq!(a.best, b.best, "{shape}: winner is not deterministic");
+        assert_eq!(a.ranked.len(), candidate_policies().len());
+        for (x, y) in a.ranked.iter().zip(&b.ranked) {
+            assert_eq!(x.policy, y.policy, "{shape}: ranking order drifted");
+            assert_eq!(x.rank_key(), y.rank_key());
+        }
+        // Sorted best-first, with the default always present as the
+        // predicted-vs-measured baseline.
+        assert_eq!(a.best, a.ranked[0].policy);
+        for pair in a.ranked.windows(2) {
+            assert!(pair[0].rank_key() <= pair[1].rank_key());
+        }
+        assert!(
+            a.ranked[0].report.dram_bytes <= a.default_score().report.dram_bytes,
+            "{shape}: winner predicts more DRAM traffic than the default"
+        );
+    }
+}
+
+/// The safety property that makes offline tuning unconditionally safe
+/// to bake: ANY policy the sweep may pick preserves results. Scalar
+/// candidates are byte-identical to the scalar reference; vectorized
+/// candidates (their own deliberate op order) stay within the crate's
+/// ULP envelope — across pools 1/4/8, on every grid shape. The swept
+/// winner itself is checked on top of the full candidate list.
+#[test]
+fn property_every_swept_policy_preserves_results() {
+    let scalar_ref = TilePolicy {
+        lanes: 1,
+        layout: SparseLayout::Csr,
+        ..TilePolicy::default()
+    };
+    // The fixed candidates (lanes follow the build default) plus forced
+    // vector/balanced candidates, so the default CI leg also exercises
+    // the ULP arm and the simd leg also exercises the scalar arm.
+    let mut policies = candidate_policies();
+    policies.push(TilePolicy {
+        lanes: SIMD_LANES,
+        ..scalar_ref
+    });
+    policies.push(TilePolicy {
+        lanes: SIMD_LANES,
+        layout: SparseLayout::Balanced,
+        ..scalar_ref
+    });
+    policies.push(scalar_ref);
+
+    let pools: Vec<WorkerPool> = [1usize, 4, 8].into_iter().map(WorkerPool::new).collect();
+    for (i, shape) in shapes_under_test().into_iter().enumerate() {
+        let (x, w) = case(&shape, 2, 6300 + i as u64);
+        let reference = LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, scalar_ref)
+            .run(&x, &pools[0]);
+        let ref_bits = bits(&reference);
+        let mut swept = policies.clone();
+        swept.push(autotune_policy(&shape, &w, P100_GEOMETRY).best);
+        for policy in swept {
+            let plan = LayerPlan::build_with_policy(&shape, &w, Method::DirectSparse, policy);
+            let single = plan.run(&x, &pools[0]);
+            for pool in &pools[1..] {
+                assert_eq!(
+                    bits(&single),
+                    bits(&plan.run(&x, pool)),
+                    "{shape} with {policy:?}: pool size changed bytes"
+                );
+            }
+            if policy.lanes <= 1 {
+                assert_eq!(
+                    ref_bits,
+                    bits(&single),
+                    "{shape} with scalar {policy:?}: bytes diverged from the reference"
+                );
+            } else {
+                for (j, (&s, &v)) in reference.data().iter().zip(single.data()).enumerate() {
+                    assert!(
+                        ulps(s, v) <= 256 || (s - v).abs() <= 1e-4,
+                        "{shape} with {policy:?} elem {j}: scalar {s} vs vector {v} ({} ulps)",
+                        ulps(s, v)
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// End-to-end reachability through the public API: `tune_plan_cache`
+/// bakes the sweep winner into the `PlanCache`, the compiled plan
+/// reports `PolicySource::Tuned` with the winning geometry, results
+/// don't move, and two independently built caches tune to identical
+/// policies (cross-cache determinism).
+#[test]
+fn tuned_policies_are_baked_deterministically_through_the_plan_cache() {
+    let net = minicnn();
+    let cache = PlanCache::build(&net, 9);
+    let twin = PlanCache::build(&net, 9);
+    let pool = WorkerPool::new(4);
+
+    let sparse: Vec<(&str, &ConvShape)> = net
+        .layers
+        .iter()
+        .filter_map(|l| match &l.kind {
+            LayerKind::Conv(s) if s.is_sparse() => Some((l.name.as_str(), s)),
+            _ => None,
+        })
+        .collect();
+    assert!(!sparse.is_empty(), "minicnn must have sparse conv layers");
+
+    // Outputs of the pre-tune plans, per sparse layer.
+    let before: Vec<Tensor4> = sparse
+        .iter()
+        .map(|(name, shape)| {
+            let (x, _) = case(shape, 2, 7000);
+            cache.plan_for(name, shape, Method::DirectSparse).run(&x, &pool)
+        })
+        .collect();
+
+    let tuned = tune_plan_cache(&cache, &net, P100_GEOMETRY);
+    assert_eq!(tuned, sparse.len(), "every sparse layer gets a bake");
+    assert_eq!(tune_plan_cache(&cache, &net, P100_GEOMETRY), 0, "idempotent");
+    tune_plan_cache(&twin, &net, P100_GEOMETRY);
+
+    let default_lanes = TilePolicy::default().lanes;
+    for (i, (name, shape)) in sparse.iter().enumerate() {
+        // The baked policy is exactly the sweep winner, on both caches.
+        let want = autotune_policy(shape, cache.conv_weights(name).unwrap(), P100_GEOMETRY).best;
+        assert_eq!(cache.tile_policy(name), want);
+        assert_eq!(twin.tile_policy(name), want, "{name}: caches disagree");
+        assert_eq!(cache.tile_policy_source(name), PolicySource::Tuned);
+
+        // The recompiled plan carries the tuned geometry + provenance...
+        let plan = cache.plan_for(name, shape, Method::DirectSparse);
+        assert_eq!(plan.policy_source(), PolicySource::Tuned);
+        assert_eq!(plan.tile_policy(), Some(want));
+
+        // ...and moves no result: candidates keep the build's default
+        // lanes, so tuned output is byte-identical to the pre-tune
+        // output (same op order), on every build leg.
+        assert_eq!(want.lanes, default_lanes);
+        let (x, _) = case(shape, 2, 7000);
+        assert_eq!(
+            bits(&before[i]),
+            bits(&plan.run(&x, &pool)),
+            "{name}: tuning changed served bytes"
+        );
+    }
+}

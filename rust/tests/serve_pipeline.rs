@@ -43,6 +43,7 @@ fn fixed_plan_cfg_for(network: &str, pipeline_depth: usize, batch_size: usize) -
         pipeline_depth,
         strict_replan: false,
         adaptive_tiling: false,
+        autotune_policies: false,
     }
 }
 
@@ -161,6 +162,7 @@ fn strict_replan_drains_the_pipeline_and_answers_everything() {
         pipeline_depth: 2,
         strict_replan: true,
         adaptive_tiling: false,
+        autotune_policies: false,
     };
     let server = ServerHandle::start(cfg).unwrap();
     let mut rng = Rng::new(15);
@@ -252,6 +254,7 @@ fn server_replans_incrementally_under_router_churn() {
         pipeline_depth: 2,
         strict_replan: false,
         adaptive_tiling: false,
+        autotune_policies: false,
     };
     let server = ServerHandle::start(cfg).unwrap();
     let mut rng = Rng::new(14);
@@ -298,4 +301,41 @@ fn adaptive_tiling_serving_is_byte_identical_to_pinned_tiling() {
     let pinned = serve_stream(adaptive(false), &images);
     let retiled = serve_stream(adaptive(true), &images);
     assert_eq!(pinned, retiled, "a retile changed served logits");
+}
+
+#[test]
+fn autotuned_serving_is_byte_identical_and_surfaces_the_gauge() {
+    // The startup autotune sweep bakes simulator-ranked tile policies
+    // before the first plan compiles. Geometry is pure work-cutting, so
+    // a tuned server must answer with exactly the bytes of an untuned
+    // one — and report how many layers it baked.
+    let tuned_cfg = |on: bool| ServerConfig {
+        autotune_policies: on,
+        ..fixed_plan_cfg(2, 2)
+    };
+    let mut rng = Rng::new(4242);
+    let images: Vec<Vec<f32>> = (0..11).map(|_| rng.activation_vec(3 * 16 * 16)).collect();
+
+    let plain = serve_stream(tuned_cfg(false), &images);
+
+    let server = ServerHandle::start(tuned_cfg(true)).expect("server start");
+    let pending: Vec<_> = images
+        .iter()
+        .map(|img| server.submit(img.clone()).expect("submit"))
+        .collect();
+    let tuned: Vec<Vec<f32>> = pending
+        .into_iter()
+        .map(|rx| {
+            rx.recv_timeout(Duration::from_secs(120))
+                .expect("response")
+                .logits
+        })
+        .collect();
+    let stats = server.shutdown().expect("shutdown");
+
+    assert_eq!(plain, tuned, "autotuned policies changed served logits");
+    // minicnn has 2 sparse conv layers; the sweep bakes both (the
+    // provenance flips Default -> Tuned even when the winning geometry
+    // matches the default).
+    assert_eq!(stats.snapshot.tuned_layers, 2);
 }

@@ -1,0 +1,290 @@
+//! Property tests for the cache-model substrate the autotuner ranks
+//! [`TilePolicy`] candidates on (`simulator::{cache, coalesce,
+//! memory}`): true-LRU replacement against a reference recency model,
+//! hit-count monotonicity in associativity/capacity, warp-coalescing
+//! invariants, and the flush / reset / kernel-boundary semantics the
+//! per-candidate sweep isolation depends on.
+//!
+//! [`TilePolicy`]: escoin::conv::TilePolicy
+
+use escoin::simulator::{
+    coalesce_warp, AccessKind, Cache, CacheConfig, CacheStats, MemoryHierarchy,
+};
+use escoin::util::Rng;
+
+/// A deterministic address trace with enough locality to produce both
+/// hits and misses at every geometry under test: a random walk over a
+/// working set a few times larger than the smallest cache, with
+/// occasional far jumps.
+fn trace(len: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    let mut addr: u64 = 0;
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        match rng.below(8) {
+            0 => addr = (rng.below(1 << 16)) as u64, // far jump
+            1..=4 => addr = addr.wrapping_add(rng.below(256) as u64), // near walk
+            _ => {} // re-touch (temporal locality)
+        }
+        out.push(addr % (1 << 16));
+    }
+    out
+}
+
+/// Reference model: one recency-ordered line list per set, MRU first.
+/// `Cache::access` must agree with it on every single access.
+struct ModelLru {
+    cfg: CacheConfig,
+    sets: Vec<Vec<u64>>,
+}
+
+impl ModelLru {
+    fn new(cfg: CacheConfig) -> Self {
+        Self {
+            sets: vec![Vec::new(); cfg.sets()],
+            cfg,
+        }
+    }
+
+    fn access(&mut self, addr: u64) -> bool {
+        let line = addr / self.cfg.line_bytes as u64;
+        let set = &mut self.sets[(line % self.sets.len() as u64) as usize];
+        if let Some(pos) = set.iter().position(|&t| t == line) {
+            let t = set.remove(pos);
+            set.insert(0, t);
+            true
+        } else {
+            set.insert(0, line);
+            set.truncate(self.cfg.ways);
+            false
+        }
+    }
+}
+
+/// The cache is *exactly* true-LRU: every access agrees hit-for-hit
+/// with an independent recency-list model, across several geometries
+/// (including the degenerate direct-mapped and single-set cases).
+#[test]
+fn property_cache_matches_a_reference_lru_model_access_for_access() {
+    let geometries = [
+        (512usize, 64usize, 2usize), // tiny, 4 sets
+        (256, 64, 4),                // single set, pure LRU stack
+        (1024, 32, 1),               // direct-mapped
+        (4096, 128, 8),              // L2-ish shape
+    ];
+    for (size_bytes, line_bytes, ways) in geometries {
+        let cfg = CacheConfig {
+            size_bytes,
+            line_bytes,
+            ways,
+        };
+        let mut cache = Cache::new(cfg);
+        let mut model = ModelLru::new(cfg);
+        let mut hits = 0u64;
+        for (i, &addr) in trace(20_000, 7).iter().enumerate() {
+            let want = model.access(addr);
+            let got = cache.access(addr);
+            assert_eq!(
+                got, want,
+                "access {i} (addr {addr:#x}) diverged from the LRU model at \
+                 {size_bytes}B/{line_bytes}B/{ways}w"
+            );
+            hits += want as u64;
+        }
+        assert_eq!(cache.stats().hits, hits, "hit counter drifted");
+        assert_eq!(cache.stats().accesses(), 20_000);
+        // The trace is built to exercise both outcomes everywhere.
+        assert!(cache.stats().hits > 0 && cache.stats().misses > 0);
+    }
+}
+
+/// LRU inclusion property: at a fixed set count and line size, a cache
+/// with more ways holds a superset of every narrower cache's contents
+/// after any access sequence — so hits are monotone non-decreasing in
+/// associativity. Since capacity here is `sets * line * ways`, the same
+/// walk is also capacity monotonicity at fixed set count (the form in
+/// which the property actually holds; growing the set count instead
+/// re-hashes lines and is *not* monotone in general).
+#[test]
+fn property_hits_are_monotone_in_ways_at_fixed_sets() {
+    const SETS: usize = 16;
+    const LINE: usize = 32;
+    for seed in [1u64, 2, 3] {
+        let t = trace(30_000, seed);
+        let mut prev_hits = None;
+        for ways in [1usize, 2, 4, 8, 16] {
+            let mut cache = Cache::new(CacheConfig {
+                size_bytes: SETS * LINE * ways,
+                line_bytes: LINE,
+                ways,
+            });
+            assert_eq!(cache.config().sets(), SETS);
+            for &a in &t {
+                cache.access(a);
+            }
+            let hits = cache.stats().hits;
+            if let Some(prev) = prev_hits {
+                assert!(
+                    hits >= prev,
+                    "seed {seed}: {ways} ways hit {hits} < narrower cache's {prev}"
+                );
+            }
+            prev_hits = Some(hits);
+        }
+    }
+}
+
+/// Wider caches can only convert misses to hits, never change the
+/// access count — so `hit_rate` is monotone too and bounded by [0, 1].
+#[test]
+fn property_hit_rate_is_monotone_and_bounded() {
+    let t = trace(10_000, 11);
+    let mut prev = -1.0f64;
+    for ways in [1usize, 2, 4, 8] {
+        let mut cache = Cache::new(CacheConfig {
+            size_bytes: 8 * 64 * ways,
+            line_bytes: 64,
+            ways,
+        });
+        for &a in &t {
+            cache.access(a);
+        }
+        let r = cache.stats().hit_rate();
+        assert!((0.0..=1.0).contains(&r));
+        assert!(r >= prev, "{ways} ways regressed the hit rate");
+        prev = r;
+    }
+    // Idle caches report 0.0, not NaN.
+    assert_eq!(CacheStats::default().hit_rate(), 0.0);
+}
+
+/// `coalesce_warp` output is sorted, duplicate-free, line-aligned,
+/// covers exactly the input's distinct lines, and is invariant under
+/// lane permutation — the §3.2 transaction rule as an algebra.
+#[test]
+fn property_coalesce_warp_dedups_and_line_aligns() {
+    let mut rng = Rng::new(23);
+    for line_bytes in [32usize, 64, 128] {
+        let mask = !(line_bytes as u64 - 1);
+        for _ in 0..200 {
+            let lanes: Vec<u64> = (0..32).map(|_| rng.below(1 << 14) as u64).collect();
+            let lines = coalesce_warp(&lanes, line_bytes);
+            // Strictly increasing (sorted + deduped in one check).
+            assert!(lines.windows(2).all(|w| w[0] < w[1]));
+            // Line-aligned, and never more transactions than lanes.
+            assert!(lines.iter().all(|l| l & !mask == 0));
+            assert!(lines.len() <= lanes.len());
+            // Exactly the set of distinct lines the lanes touch.
+            for a in &lanes {
+                assert!(lines.binary_search(&(a & mask)).is_ok());
+            }
+            let mut distinct: Vec<u64> = lanes.iter().map(|a| a & mask).collect();
+            distinct.sort_unstable();
+            distinct.dedup();
+            assert_eq!(lines, distinct);
+            // Order of lanes within the warp is irrelevant.
+            let mut shuffled = lanes.clone();
+            rng.shuffle(&mut shuffled);
+            assert_eq!(coalesce_warp(&shuffled, line_bytes), lines);
+        }
+    }
+}
+
+/// `flush` and `reset_stats` are exact complements: one clears contents
+/// and keeps counters, the other clears counters and keeps contents.
+#[test]
+fn flush_and_reset_stats_are_complementary() {
+    let cfg = CacheConfig {
+        size_bytes: 1024,
+        line_bytes: 64,
+        ways: 4,
+    };
+    let mut cache = Cache::new(cfg);
+    for addr in (0..1024u64).step_by(64) {
+        cache.access(addr);
+    }
+    let filled = cache.stats();
+    assert_eq!(filled.misses, 16);
+
+    // reset_stats: counters go to zero, the working set stays resident.
+    cache.reset_stats();
+    assert_eq!(cache.stats(), CacheStats::default());
+    for addr in (0..1024u64).step_by(64) {
+        assert!(cache.access(addr), "reset_stats must not evict {addr:#x}");
+    }
+    assert_eq!(cache.stats(), CacheStats { hits: 16, misses: 0 });
+
+    // flush: contents go away, the counters keep accumulating.
+    cache.flush();
+    let before = cache.stats();
+    for addr in (0..1024u64).step_by(64) {
+        assert!(!cache.access(addr), "flush must evict {addr:#x}");
+    }
+    assert_eq!(cache.stats().hits, before.hits);
+    assert_eq!(cache.stats().misses, before.misses + 16);
+}
+
+/// `kernel_boundary` models a new launch: per-SM read-only caches flush
+/// (their stats survive), the shared L2 keeps both lines and stats —
+/// which is exactly why the autotuner scores each candidate on a fresh
+/// hierarchy rather than a boundary: L2 state would otherwise leak
+/// between candidates.
+#[test]
+fn kernel_boundary_flushes_ro_contents_only() {
+    let mut mem = MemoryHierarchy::p100();
+    let warp: Vec<u64> = (0..32).map(|i| i * 4).collect();
+    for sm in 0..4 {
+        mem.warp_access_on(sm, &warp, AccessKind::ReadOnly);
+    }
+    let before = mem.report();
+    assert!(before.ro.misses > 0);
+
+    mem.kernel_boundary();
+    let at_boundary = mem.report();
+    // Stats are untouched by the boundary itself.
+    assert_eq!(at_boundary.ro, before.ro);
+    assert_eq!(at_boundary.l2, before.l2);
+    assert_eq!(at_boundary.dram_bytes, before.dram_bytes);
+
+    // Re-reading after the boundary: RO misses again on every SM, but
+    // L2 serves the refills without new DRAM traffic.
+    for sm in 0..4 {
+        mem.warp_access_on(sm, &warp, AccessKind::ReadOnly);
+    }
+    let after = mem.report();
+    assert_eq!(after.ro.hits, before.ro.hits, "RO lines must be gone");
+    assert!(after.ro.misses > before.ro.misses);
+    assert!(after.l2.hits > before.l2.hits, "L2 lines must survive");
+    assert_eq!(after.dram_bytes, before.dram_bytes);
+}
+
+/// Access-kind routing: read-only traffic fills the per-SM RO caches,
+/// global reads/writes bypass them, and every L2 miss costs exactly one
+/// line of DRAM traffic.
+#[test]
+fn access_kinds_route_to_the_documented_levels() {
+    let mut mem = MemoryHierarchy::p100();
+    let l2_line = 128u64;
+
+    mem.access(0, AccessKind::GlobalRead);
+    let r = mem.report();
+    assert_eq!(r.ro.accesses(), 0);
+    assert_eq!((r.l2.accesses(), r.dram_bytes), (1, l2_line));
+
+    mem.access(4096, AccessKind::GlobalWrite);
+    let r = mem.report();
+    assert_eq!(r.ro.accesses(), 0);
+    assert_eq!((r.l2.accesses(), r.dram_bytes), (2, 2 * l2_line));
+
+    mem.access(8192, AccessKind::ReadOnly);
+    let r = mem.report();
+    assert_eq!(r.ro.accesses(), 1);
+    assert_eq!((r.l2.accesses(), r.dram_bytes), (3, 3 * l2_line));
+
+    // A repeat read-only access is satisfied by the RO cache and never
+    // reaches L2 or DRAM.
+    mem.access(8192, AccessKind::ReadOnly);
+    let r = mem.report();
+    assert_eq!(r.ro.hits, 1);
+    assert_eq!((r.l2.accesses(), r.dram_bytes), (3, 3 * l2_line));
+}

@@ -1,0 +1,189 @@
+//! Trace-fidelity suite: the simulator's microkernel address generators
+//! ([`trace_sconv_input_addresses`]) must read **exactly** the
+//! padded-input addresses the real direct-sparse kernels read — else
+//! the autotuner would rank policies on a phantom access pattern. The
+//! real reads come from the test-only `conv::recording` hook, whose
+//! record sites are compiled only under `debug_assertions`; every test
+//! here skips itself in release builds (`recording::enabled()`).
+//!
+//! The recorder is process-global, so every test in this file holds one
+//! lock while recording — tests stay correct under the default parallel
+//! test runner.
+
+use escoin::config::ConvShape;
+use escoin::conv::{
+    recording, shapes_under_test, ConvWeights, LayerPlan, Method, SparseLayout, TilePolicy,
+    SIMD_LANES,
+};
+use escoin::simulator::trace_sconv_input_addresses;
+use escoin::sparse::BalancedCsr;
+use escoin::tensor::{Dims4, Tensor4};
+use escoin::util::{Rng, WorkerPool};
+use std::collections::BTreeSet;
+use std::sync::Mutex;
+
+/// Serializes recorder use across tests (the hook is process-global).
+static RECORDER: Mutex<()> = Mutex::new(());
+
+fn case(shape: &ConvShape, batch: usize, seed: u64) -> (Tensor4, ConvWeights) {
+    let mut rng = Rng::new(seed);
+    let x = Tensor4::random_activations(Dims4::new(batch, shape.c, shape.h, shape.w), &mut rng);
+    let w = ConvWeights::synthetic(shape, &mut rng);
+    (x, w)
+}
+
+/// Run the compiled DirectSparse plan once and return the set of
+/// absolute padded-input indices the kernels recorded reading.
+fn recorded_input_set(
+    shape: &ConvShape,
+    x: &Tensor4,
+    w: &ConvWeights,
+    policy: TilePolicy,
+    pool: &WorkerPool,
+) -> BTreeSet<usize> {
+    let plan = LayerPlan::build_with_policy(shape, w, Method::DirectSparse, policy);
+    recording::start();
+    let _ = plan.run(x, pool);
+    let mut set = BTreeSet::new();
+    for (start, len, step) in recording::take() {
+        for k in 0..len {
+            set.insert(start + k * step);
+        }
+    }
+    set
+}
+
+/// The simulator's claim: the address set its walk of `(shape, policy)`
+/// produces, with the same operands the plan would bake.
+fn traced_input_set(shape: &ConvShape, w: &ConvWeights, policy: TilePolicy) -> BTreeSet<usize> {
+    let banks = w.stretched_banks();
+    let balanced: Option<Vec<BalancedCsr>> = (policy.layout == SparseLayout::Balanced).then(|| {
+        banks
+            .iter()
+            .map(|b| BalancedCsr::from_csr(&b.csr, policy.mr.max(1)))
+            .collect()
+    });
+    trace_sconv_input_addresses(shape, &banks, balanced.as_deref(), &policy)
+        .into_iter()
+        .collect()
+}
+
+/// The policy spread the fidelity grid runs: the scalar register-blocked
+/// kernel (default-ish and deliberately odd geometry), the unblocked
+/// per-channel oracle shape, the vectorized kernel, and the
+/// bank-balanced vectorized kernel. `lanes` is set explicitly so the
+/// same variants are pinned on both the default and `--features simd`
+/// CI legs.
+fn fidelity_policies() -> Vec<TilePolicy> {
+    let scalar = TilePolicy {
+        lanes: 1,
+        layout: SparseLayout::Csr,
+        ..TilePolicy::default()
+    };
+    vec![
+        scalar,
+        TilePolicy {
+            target_tiles: 5,
+            mr: 3,
+            block_floats: 33,
+            ..scalar
+        },
+        TilePolicy {
+            mr: 1,
+            block_floats: usize::MAX,
+            ..scalar
+        },
+        TilePolicy {
+            lanes: SIMD_LANES,
+            block_floats: 256,
+            ..scalar
+        },
+        TilePolicy {
+            lanes: SIMD_LANES,
+            layout: SparseLayout::Balanced,
+            ..scalar
+        },
+    ]
+}
+
+/// The core fidelity contract, over the canonical shape grid (stride-1,
+/// strided, grouped, depthwise, 1x1) × the kernel-variant policy
+/// spread: traced address set == recorded address set, exactly.
+#[test]
+fn property_traced_addresses_equal_the_kernels_recorded_reads() {
+    if !recording::enabled() {
+        return; // record sites compile only under debug_assertions
+    }
+    let _guard = RECORDER.lock().unwrap_or_else(|e| e.into_inner());
+    let pool = WorkerPool::new(2);
+    for (i, shape) in shapes_under_test().into_iter().enumerate() {
+        let (x, w) = case(&shape, 1, 4000 + i as u64);
+        for policy in fidelity_policies() {
+            let got = recorded_input_set(&shape, &x, &w, policy, &pool);
+            let want = traced_input_set(&shape, &w, policy);
+            assert!(!want.is_empty(), "{shape}: trace produced no reads");
+            assert_eq!(
+                got, want,
+                "{shape} with {policy:?}: kernel reads diverge from the trace"
+            );
+            // Sanity: every address stays inside the padded image.
+            let img = shape.c * shape.padded_h() * shape.padded_w();
+            assert!(*want.iter().next_back().unwrap() < img);
+        }
+    }
+}
+
+/// The recorded set is invariant across pool sizes: tile decomposition
+/// is fixed by the policy, never by the worker count — so one traced
+/// stream stands for every pool the plan may run on (the tuner scores
+/// it once, pools 1/4/8 all match it).
+#[test]
+fn recorded_reads_are_pool_invariant() {
+    if !recording::enabled() {
+        return;
+    }
+    let _guard = RECORDER.lock().unwrap_or_else(|e| e.into_inner());
+    // One stride-1 and one strided+grouped representative keep this
+    // fast; the full grid above already pins every variant at pool 2.
+    let shapes = [
+        ConvShape::new(3, 4, 6, 6, 3, 3, 1, 1).with_sparsity(0.7),
+        ConvShape::new(4, 6, 9, 9, 3, 3, 2, 1)
+            .with_groups(2)
+            .with_sparsity(0.5),
+    ];
+    for (i, shape) in shapes.into_iter().enumerate() {
+        let (x, w) = case(&shape, 1, 4400 + i as u64);
+        for policy in fidelity_policies() {
+            let reference = recorded_input_set(&shape, &x, &w, policy, &WorkerPool::new(1));
+            for workers in [4usize, 8] {
+                let got = recorded_input_set(&shape, &x, &w, policy, &WorkerPool::new(workers));
+                assert_eq!(got, reference, "{shape} with {policy:?} at {workers} workers");
+            }
+            assert_eq!(reference, traced_input_set(&shape, &w, policy));
+        }
+    }
+}
+
+/// Batch composition: the batch-`N` recorded set is exactly the batch-1
+/// trace shifted by each image's base — the reuse pattern is per-image,
+/// which is why the tuner traces batch 1 and the ranking carries to any
+/// batch.
+#[test]
+fn batched_reads_are_the_per_image_trace_replicated() {
+    if !recording::enabled() {
+        return;
+    }
+    let _guard = RECORDER.lock().unwrap_or_else(|e| e.into_inner());
+    let shape = ConvShape::new(3, 4, 6, 6, 3, 3, 1, 1).with_sparsity(0.7);
+    let (x, w) = case(&shape, 3, 4800);
+    let pool = WorkerPool::new(2);
+    let policy = fidelity_policies()[0];
+
+    let got = recorded_input_set(&shape, &x, &w, policy, &pool);
+    let per_image = traced_input_set(&shape, &w, policy);
+    let img = shape.c * shape.padded_h() * shape.padded_w();
+    let want: BTreeSet<usize> = (0..3)
+        .flat_map(|n| per_image.iter().map(move |a| a + n * img))
+        .collect();
+    assert_eq!(got, want);
+}
