@@ -15,6 +15,13 @@
 //!   `pipeline_depth = 1`) vs the two-slot pipeline (`plan_ns`,
 //!   `pipeline_depth = 2`) that overlaps batch N+1's head layers and
 //!   batch formation with batch N's tail layers.
+//! * `serve-load-b1`/`b8` — the closed-loop Poisson load harness
+//!   against the two-tenant (minicnn + microcnn) front door with
+//!   admission control and a 250 ms deadline. Extended rows: beyond
+//!   the base keys (`free_ns`/`plan_ns` mirror p50/p99 ns) they carry
+//!   `p50_ns`, `p99_ns`, `throughput_rps_milli`, `rejected`, and
+//!   `deadline_hit_milli`. Request count via `ESCOIN_LOADGEN_REQUESTS`
+//!   (default 64).
 //! * `replan-full-vs-incremental` — ns per server replan: rebuilding
 //!   every layer from scratch (`free_ns`, weights regenerated +
 //!   re-transformed, what `build_plan` used to do) vs an incremental
@@ -86,9 +93,10 @@
 //! cargo run --release --example perf_probe [--out PATH]
 //! ```
 //!
-//! Knobs: `ESCOIN_THREADS`, `ESCOIN_BENCH_WARMUP`, `ESCOIN_BENCH_ITERS`.
+//! Knobs: `ESCOIN_THREADS`, `ESCOIN_BENCH_WARMUP`, `ESCOIN_BENCH_ITERS`,
+//! `ESCOIN_LOADGEN_REQUESTS`.
 
-use escoin::bench_harness::{bench_median, BenchOpts};
+use escoin::bench_harness::{bench_median, run_load, BenchOpts, LoadGenConfig};
 use escoin::config::{alexnet, googlenet, mobilenetv1, resnet50, ConvShape, LayerKind};
 use escoin::conv::{
     lowered_gemm_parallel, lowered_spmm_parallel, sconv_parallel, ConvWeights, LayerPlan, Method,
@@ -108,6 +116,23 @@ struct Row {
     batch: usize,
     free_ns: u128,
     plan_ns: u128,
+}
+
+/// A `serve-load-*` row: the base five keys (so existing diff tooling
+/// keeps working; `free_ns`/`plan_ns` mirror p50/p99) plus the SLO
+/// fields the load harness reports. Serialized with the extended key
+/// set the CI schema check expects for `serve-load` methods.
+struct LoadRow {
+    shape: &'static str,
+    method: &'static str,
+    batch: usize,
+    free_ns: u128,
+    plan_ns: u128,
+    p50_ns: u128,
+    p99_ns: u128,
+    throughput_rps_milli: u128,
+    rejected: u128,
+    deadline_hit_milli: u128,
 }
 
 fn main() {
@@ -625,6 +650,73 @@ fn main() {
         );
     }
 
+    // Closed-loop load harness: the deterministic seeded Poisson
+    // generator driving the two-tenant (minicnn 3:1 microcnn) front
+    // door with admission control and a per-request deadline. Reported
+    // as SLO rows (p50/p99/throughput/rejections/deadline-hit rate)
+    // rather than a free-vs-plan pair; `free_ns`/`plan_ns` mirror
+    // p50/p99 so the base schema's positivity checks still apply.
+    let mut load_rows: Vec<LoadRow> = Vec::new();
+    {
+        let requests: usize = std::env::var("ESCOIN_LOADGEN_REQUESTS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        for (b, label) in [(1usize, "serve-load-b1"), (8usize, "serve-load-b8")] {
+            let window = (4 * b).max(8);
+            let server = ServerHandle::start(ServerConfig {
+                network: "minicnn".into(),
+                tenants: vec!["microcnn".into()],
+                batcher: BatcherConfig {
+                    batch_size: b,
+                    max_wait: Duration::from_millis(1),
+                },
+                max_queue_depth: 2 * window,
+                threads,
+                router: RouterConfig {
+                    explore_every: 0,
+                    ..Default::default()
+                },
+                replan_every: 0,
+                adaptive_tiling: false,
+                ..Default::default()
+            })
+            .expect("server start");
+            let cfg = LoadGenConfig {
+                seed: 0x10AD + b as u64,
+                requests,
+                mean_interarrival: Duration::from_micros(200),
+                tenant_weights: vec![3, 1],
+                deadline: Some(Duration::from_millis(250)),
+                window,
+            };
+            let report = run_load(&server, &cfg).expect("load run");
+            server.shutdown().expect("shutdown");
+            load_rows.push(LoadRow {
+                shape: "minicnn+microcnn_poisson",
+                method: label,
+                batch: b,
+                free_ns: report.p50.as_nanos().max(1),
+                plan_ns: report.p99.as_nanos().max(1),
+                p50_ns: report.p50.as_nanos().max(1),
+                p99_ns: report.p99.as_nanos().max(1),
+                throughput_rps_milli: ((report.throughput_rps * 1000.0) as u128).max(1),
+                rejected: report.rejected as u128,
+                deadline_hit_milli: (report.deadline_hit_rate() * 1000.0).round() as u128,
+            });
+            println!(
+                "{label}: {} reqs p50 {:?} p99 {:?} {:.1} req/s \
+                 ({} rejected, deadline hit rate {:.3})",
+                report.completed,
+                report.p50,
+                report.p99,
+                report.throughput_rps,
+                report.rejected,
+                report.deadline_hit_rate()
+            );
+        }
+    }
+
     // DAG-vs-sequential walk on GoogLeNet: the async branch-overlap
     // executor against the sequential topological walk, same compiled
     // plan, same shared pool — what the inception modules' 4-way
@@ -782,19 +874,35 @@ fn main() {
         "  \"threads\": {threads},\n  \"batch\": {batch},\n  \"iters\": {},\n  \"rows\": [\n",
         bench.iters
     ));
-    for (i, r) in rows.iter().enumerate() {
-        json.push_str(&format!(
+    let mut entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"shape\": \"{}\", \"method\": \"{}\", \"batch\": {}, \
+                 \"free_ns\": {}, \"plan_ns\": {}}}",
+                r.shape, r.method, r.batch, r.free_ns, r.plan_ns
+            )
+        })
+        .collect();
+    entries.extend(load_rows.iter().map(|r| {
+        format!(
             "    {{\"shape\": \"{}\", \"method\": \"{}\", \"batch\": {}, \
-             \"free_ns\": {}, \"plan_ns\": {}}}{}\n",
+             \"free_ns\": {}, \"plan_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \
+             \"throughput_rps_milli\": {}, \"rejected\": {}, \"deadline_hit_milli\": {}}}",
             r.shape,
             r.method,
             r.batch,
             r.free_ns,
             r.plan_ns,
-            if i + 1 == rows.len() { "" } else { "," }
-        ));
-    }
-    json.push_str("  ]\n}\n");
+            r.p50_ns,
+            r.p99_ns,
+            r.throughput_rps_milli,
+            r.rejected,
+            r.deadline_hit_milli
+        )
+    }));
+    json.push_str(&entries.join(",\n"));
+    json.push_str("\n  ]\n}\n");
     std::fs::write(&out_path, &json).expect("write BENCH_sconv.json");
     println!("wrote {out_path}");
 
@@ -840,9 +948,8 @@ fn serve_wall(
         },
         replan_every: 0,
         pipeline_depth: depth,
-        strict_replan: false,
         adaptive_tiling: false,
-        autotune_policies: false,
+        ..Default::default()
     })
     .expect("server start");
     let mut rng = Rng::new(100 + seed);

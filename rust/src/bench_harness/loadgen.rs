@@ -1,0 +1,344 @@
+//! Deterministic closed-loop load generator for the serving front door.
+//!
+//! The paper benches kernels under back-to-back batches; a serving
+//! deployment instead sees *arrivals*: requests trickle in, queue, and
+//! miss deadlines when the box saturates. This module generates that
+//! traffic reproducibly:
+//!
+//! * **Seeded Poisson arrivals.** [`schedule`] is a pure function of
+//!   [`LoadGenConfig`]: exponential inter-arrival gaps and weighted
+//!   tenant picks are drawn from the crate's xorshift
+//!   [`Rng`](crate::util::Rng), in *virtual* time. No wall-clock value
+//!   feeds any decision — the same seed yields byte-identical arrival
+//!   offsets, tenant choices, and request images on every run.
+//! * **Closed loop.** [`run_load`] paces the virtual schedule against
+//!   the wall clock but never holds more than [`LoadGenConfig::window`]
+//!   requests outstanding: when the window is full it blocks on the
+//!   oldest in-flight response before submitting the next arrival, so a
+//!   saturated server slows the generator down instead of growing an
+//!   unbounded client-side queue.
+//! * **SLO accounting.** The resulting [`LoadReport`] carries exact
+//!   (sorted, not histogram-bucketed) p50/p99 service latencies,
+//!   throughput, admission rejections, deadline hit/miss counts, and a
+//!   per-request method trace for determinism tests.
+//!
+//! `perf_probe` drives this against a two-tenant server to emit the
+//! `serve-load-*` rows of `BENCH_sconv.json`; `tests/serve_load.rs`
+//! replays fixed seeds to pin determinism, tenant isolation, and
+//! pressure-mode routing.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{InferResponse, Method, ServerError, ServerHandle};
+use crate::util::Rng;
+
+/// Parameters of one load-generation run. All randomness derives from
+/// `seed`; two runs with equal configs produce identical schedules.
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    /// Seed for arrival gaps, tenant picks, and request images.
+    pub seed: u64,
+    /// Total requests to generate.
+    pub requests: usize,
+    /// Mean of the exponential inter-arrival gap (virtual time; the
+    /// runner paces real submissions against this schedule).
+    pub mean_interarrival: Duration,
+    /// Relative arrival weight per tenant index; a tenant with weight 0
+    /// receives no traffic. Empty means "all traffic to tenant 0".
+    pub tenant_weights: Vec<u32>,
+    /// Per-request deadline (submission + this), if any. Drives the
+    /// deadline hit/miss counts and the router's slack-based pressure.
+    pub deadline: Option<Duration>,
+    /// Maximum requests outstanding at once (closed loop). 0 means
+    /// unbounded.
+    pub window: usize,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x10AD_0001,
+            requests: 64,
+            mean_interarrival: Duration::from_micros(200),
+            tenant_weights: Vec::new(),
+            deadline: None,
+            window: 8,
+        }
+    }
+}
+
+/// One generated arrival: a virtual offset from the start of the run
+/// and the tenant the request targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Arrival {
+    /// Virtual arrival time, as an offset from the run start.
+    pub at: Duration,
+    /// Target tenant index.
+    pub tenant: usize,
+}
+
+/// Build the full arrival schedule for `cfg` — a pure function of the
+/// config (monotone in `at`; no wall-clock input), so tests can assert
+/// that two runs with the same seed see the same traffic.
+pub fn schedule(cfg: &LoadGenConfig) -> Vec<Arrival> {
+    let weights: &[u32] = if cfg.tenant_weights.is_empty() {
+        &[1]
+    } else {
+        &cfg.tenant_weights
+    };
+    let total: u64 = weights.iter().map(|&w| u64::from(w)).sum();
+    assert!(total > 0, "loadgen: all tenant weights are zero");
+    let mut rng = Rng::new(cfg.seed);
+    let mean = cfg.mean_interarrival.as_secs_f32();
+    let mut at = Duration::ZERO;
+    let mut out = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        // Exponential gap via inverse CDF; u in [0,1) keeps ln finite.
+        let u = rng.next_f32();
+        at += Duration::from_secs_f32(-(1.0 - u).ln() * mean);
+        let mut pick = rng.next_u64() % total;
+        let mut tenant = 0;
+        for (i, &w) in weights.iter().enumerate() {
+            if pick < u64::from(w) {
+                tenant = i;
+                break;
+            }
+            pick -= u64::from(w);
+        }
+        out.push(Arrival { at, tenant });
+    }
+    out
+}
+
+/// Deterministic input image for arrival `index` of a run seeded with
+/// `seed`. Keyed by arrival index (not draw order), so the image a
+/// request carries is independent of closed-loop interleaving.
+pub fn request_image(seed: u64, index: usize, elems: usize) -> Vec<f32> {
+    Rng::new(seed ^ 0x1A6E_5EED ^ ((index as u64) << 20)).activation_vec(elems)
+}
+
+/// Outcome of a [`run_load`] run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Arrivals the generator attempted to submit.
+    pub submitted: usize,
+    /// Requests the server admitted.
+    pub admitted: usize,
+    /// Requests refused by admission control (queue full).
+    pub rejected: usize,
+    /// Admitted requests whose response arrived.
+    pub completed: usize,
+    /// Median server-side latency (queueing + service).
+    pub p50: Duration,
+    /// 99th-percentile server-side latency (exact, from sorted samples).
+    pub p99: Duration,
+    /// Mean server-side latency.
+    pub mean: Duration,
+    /// Completed requests per wall-clock second.
+    pub throughput_rps: f64,
+    /// Responses that beat their deadline (client-observed).
+    pub deadline_hits: u64,
+    /// Responses that arrived past their deadline (client-observed).
+    pub deadline_misses: u64,
+    /// Wall-clock duration of the whole run.
+    pub wall: Duration,
+    /// Per completed request, in arrival order: `(arrival index, tenant,
+    /// per-layer methods the serving plan used)`. The determinism test
+    /// asserts two equal-seed runs produce identical traces.
+    pub method_trace: Vec<(usize, usize, Arc<Vec<(String, Method)>>)>,
+}
+
+impl LoadReport {
+    /// Fraction of deadline-carrying responses that beat their deadline,
+    /// in `[0, 1]`; 1.0 when no request carried a deadline.
+    pub fn deadline_hit_rate(&self) -> f64 {
+        let total = self.deadline_hits + self.deadline_misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.deadline_hits as f64 / total as f64
+        }
+    }
+}
+
+struct InFlight {
+    index: usize,
+    tenant: usize,
+    deadline: Option<Instant>,
+    rx: Receiver<InferResponse>,
+}
+
+/// Drive `server` with the traffic described by `cfg` and collect a
+/// [`LoadReport`].
+///
+/// Pacing: submissions chase the virtual schedule against the wall
+/// clock (sleeping through idle gaps) but the closed-loop `window`
+/// bounds outstanding requests — under saturation the generator blocks
+/// on the oldest response, which is exactly the backpressure a
+/// well-behaved client applies. Admission rejections are counted, not
+/// retried. Errors other than rejection abort the run.
+pub fn run_load(server: &ServerHandle, cfg: &LoadGenConfig) -> Result<LoadReport, ServerError> {
+    let arrivals = schedule(cfg);
+    let start = Instant::now();
+    let mut inflight: VecDeque<InFlight> = VecDeque::new();
+    let mut report = LoadReport {
+        submitted: 0,
+        admitted: 0,
+        rejected: 0,
+        completed: 0,
+        p50: Duration::ZERO,
+        p99: Duration::ZERO,
+        mean: Duration::ZERO,
+        throughput_rps: 0.0,
+        deadline_hits: 0,
+        deadline_misses: 0,
+        wall: Duration::ZERO,
+        method_trace: Vec::new(),
+    };
+    let mut latencies: Vec<Duration> = Vec::with_capacity(arrivals.len());
+    let retire = |f: InFlight, report: &mut LoadReport, latencies: &mut Vec<Duration>| {
+        let resp = f
+            .rx
+            .recv()
+            .map_err(|_| ServerError("loadgen: server dropped a response channel".into()))?;
+        if let Some(d) = f.deadline {
+            if Instant::now() <= d {
+                report.deadline_hits += 1;
+            } else {
+                report.deadline_misses += 1;
+            }
+        }
+        latencies.push(resp.latency);
+        report.completed += 1;
+        report.method_trace.push((f.index, f.tenant, resp.methods));
+        Ok::<(), ServerError>(())
+    };
+    for (index, a) in arrivals.iter().enumerate() {
+        // Closed loop: cap outstanding before taking the next arrival.
+        while cfg.window > 0 && inflight.len() >= cfg.window {
+            let oldest = inflight.pop_front().expect("non-empty window");
+            retire(oldest, &mut report, &mut latencies)?;
+        }
+        let target = start + a.at;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let image = request_image(cfg.seed, index, server.tenant_image_elems(a.tenant));
+        let deadline = cfg.deadline.map(|d| Instant::now() + d);
+        report.submitted += 1;
+        match server.submit_to(a.tenant, image, deadline) {
+            Ok(rx) => {
+                report.admitted += 1;
+                inflight.push_back(InFlight {
+                    index,
+                    tenant: a.tenant,
+                    deadline,
+                    rx,
+                });
+            }
+            Err(e) if e.0.contains("rejected") => report.rejected += 1,
+            Err(e) => return Err(e),
+        }
+    }
+    while let Some(f) = inflight.pop_front() {
+        retire(f, &mut report, &mut latencies)?;
+    }
+    report.wall = start.elapsed();
+    if !latencies.is_empty() {
+        latencies.sort_unstable();
+        let n = latencies.len();
+        report.p50 = latencies[(n - 1) * 50 / 100];
+        report.p99 = latencies[(n - 1) * 99 / 100];
+        report.mean = latencies.iter().sum::<Duration>() / n as u32;
+        report.throughput_rps = n as f64 / report.wall.as_secs_f64().max(1e-9);
+    }
+    // Trace entries were pushed in completion order; re-sort to arrival
+    // order so equal-seed runs compare trace-for-trace.
+    report.method_trace.sort_by_key(|(i, _, _)| *i);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(seed: u64) -> LoadGenConfig {
+        LoadGenConfig {
+            seed,
+            requests: 200,
+            mean_interarrival: Duration::from_micros(500),
+            tenant_weights: vec![3, 1],
+            ..LoadGenConfig::default()
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        assert_eq!(schedule(&cfg(7)), schedule(&cfg(7)));
+        assert_ne!(schedule(&cfg(7)), schedule(&cfg(8)));
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let s = schedule(&cfg(11));
+        assert!(s.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn tenant_weights_are_respected() {
+        let mut c = cfg(13);
+        c.requests = 4000;
+        let s = schedule(&c);
+        let t1 = s.iter().filter(|a| a.tenant == 1).count();
+        let frac = t1 as f64 / s.len() as f64;
+        // Weight 1 of 4 => ~25%; wide tolerance keeps this seed-stable.
+        assert!((0.15..0.35).contains(&frac), "tenant-1 fraction {frac}");
+        // A zero weight must starve the tenant entirely.
+        c.tenant_weights = vec![1, 0];
+        assert!(schedule(&c).iter().all(|a| a.tenant == 0));
+    }
+
+    #[test]
+    fn gaps_average_near_the_configured_mean() {
+        let mut c = cfg(17);
+        c.requests = 5000;
+        c.tenant_weights = vec![1];
+        let s = schedule(&c);
+        let mean = s.last().unwrap().at.as_secs_f64() / s.len() as f64;
+        let want = c.mean_interarrival.as_secs_f64();
+        assert!(
+            (0.9 * want..1.1 * want).contains(&mean),
+            "mean gap {mean} vs {want}"
+        );
+    }
+
+    #[test]
+    fn request_images_keyed_by_index_not_order() {
+        assert_eq!(request_image(5, 3, 32), request_image(5, 3, 32));
+        assert_ne!(request_image(5, 3, 32), request_image(5, 4, 32));
+        assert_ne!(request_image(5, 3, 32), request_image(6, 3, 32));
+    }
+
+    #[test]
+    fn deadline_hit_rate_defaults_to_one() {
+        let r = LoadReport {
+            submitted: 0,
+            admitted: 0,
+            rejected: 0,
+            completed: 0,
+            p50: Duration::ZERO,
+            p99: Duration::ZERO,
+            mean: Duration::ZERO,
+            throughput_rps: 0.0,
+            deadline_hits: 0,
+            deadline_misses: 0,
+            wall: Duration::ZERO,
+            method_trace: Vec::new(),
+        };
+        assert_eq!(r.deadline_hit_rate(), 1.0);
+    }
+}

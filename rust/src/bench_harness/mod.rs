@@ -13,11 +13,16 @@
 //! Absolute numbers differ from the paper's P100/1080Ti (our substrate is
 //! the native CPU kernels + cache simulator, DESIGN.md §7); what must
 //! reproduce is the *shape*: who wins, by roughly what factor, and why.
+//!
+//! Beyond the paper's figures, [`loadgen`] adds a deterministic
+//! closed-loop Poisson load generator for the multi-tenant serving path
+//! (the `serve-load-*` rows of `BENCH_sconv.json`).
 
 pub mod fig10;
 pub mod fig11;
 pub mod fig8;
 pub mod fig9;
+pub mod loadgen;
 pub mod platform;
 pub mod report;
 pub mod table3;
@@ -27,6 +32,7 @@ pub use fig10::{fig10_cache_rates, Fig10Row};
 pub use fig11::{fig11_overall, Fig11Row};
 pub use fig8::{fig8_sparse_conv, Fig8Row};
 pub use fig9::{fig9_breakdown, Fig9Row};
+pub use loadgen::{run_load, schedule, Arrival, LoadGenConfig, LoadReport};
 pub use platform::{table2_platforms, Testbed};
 pub use report::{markdown_table, Table};
 pub use table3::table3_rows;

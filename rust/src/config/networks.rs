@@ -465,14 +465,36 @@ pub fn minicnn() -> Network {
     }
 }
 
+/// MicroCNN — an even smaller single-conv classifier used as the
+/// *second tenant* in multi-tenant serving tests and the load-generator
+/// harness: its 3x8x8 input differs from [`minicnn`]'s 3x16x16, so a
+/// cross-tenant image mixup fails admission validation instead of
+/// silently corrupting logits. The one conv is pruned so pressure-mode
+/// routing has a sparse method to flip.
+pub fn microcnn() -> Network {
+    let layers = vec![
+        conv(
+            "conv1",
+            ConvShape::new(3, 8, 8, 8, 3, 3, 1, 1).with_sparsity(0.75),
+        ),
+        pool("pool1", PoolKind::Max, 8, 8, 8, 2, 2, 0),
+        fc("fc", 8 * 4 * 4, 10),
+    ];
+    Network {
+        name: "microcnn".into(),
+        layers,
+    }
+}
+
 /// The paper's three evaluated networks (Table 3 rows).
 pub fn all_networks() -> Vec<Network> {
     vec![alexnet(), googlenet(), resnet50()]
 }
 
 /// Case-insensitive lookup by the names used throughout the paper, plus
-/// the serving-path `minicnn`, the inception-structured test network
-/// `miniception`, and the depthwise-separable `mobilenetv1`.
+/// the serving-path `minicnn`, its multi-tenant sibling `microcnn`, the
+/// inception-structured test network `miniception`, and the
+/// depthwise-separable `mobilenetv1`.
 pub fn network_by_name(name: &str) -> Option<Network> {
     match name.to_ascii_lowercase().as_str() {
         "alexnet" => Some(alexnet()),
@@ -480,6 +502,7 @@ pub fn network_by_name(name: &str) -> Option<Network> {
         "resnet" | "resnet50" | "resnet-50" => Some(resnet50()),
         "mobilenet" | "mobilenetv1" | "mobilenet-v1" => Some(mobilenetv1()),
         "minicnn" => Some(minicnn()),
+        "microcnn" => Some(microcnn()),
         "miniception" => Some(miniception()),
         _ => None,
     }
@@ -595,8 +618,36 @@ mod tests {
     }
 
     #[test]
+    fn microcnn_is_shape_consistent_and_distinct_from_minicnn() {
+        let micro = microcnn();
+        let mini = minicnn();
+        // The two serving tenants must not share an input shape, so a
+        // cross-tenant buffer mixup fails loudly at submit time.
+        let micro_in = micro.conv_layers()[0].1;
+        let mini_in = mini.conv_layers()[0].1;
+        assert_eq!((micro_in.c, micro_in.h, micro_in.w), (3, 8, 8));
+        assert_ne!(
+            micro_in.c * micro_in.h * micro_in.w,
+            mini_in.c * mini_in.h * mini_in.w
+        );
+        // conv1 (3x8x8, pad 1) -> pool1 2x2/2 -> fc expects 8*4*4.
+        assert_eq!((micro_in.out_h(), micro_in.out_w()), (8, 8));
+        assert!(micro_in.is_sparse(), "pressure routing needs a sparse conv");
+        let fc = micro
+            .layers
+            .iter()
+            .find_map(|l| match &l.kind {
+                LayerKind::Fc(f) => Some((f.in_features, f.out_features)),
+                _ => None,
+            })
+            .expect("microcnn fc");
+        assert_eq!(fc, (8 * 4 * 4, 10));
+    }
+
+    #[test]
     fn lookup_by_name() {
         assert!(network_by_name("AlexNet").is_some());
+        assert!(network_by_name("MicroCNN").is_some());
         assert!(network_by_name("resnet-50").is_some());
         assert!(network_by_name("MobileNet").is_some());
         assert!(network_by_name("mobilenetv1").is_some());

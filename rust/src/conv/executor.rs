@@ -1200,10 +1200,14 @@ impl NetworkPlan {
     /// one per-image-tiled job; a concat is one job tiling `(image,
     /// input)` pairs, each copying its branch's channel range — the
     /// [`crate::util::SharedSlice`] disjoint-write pattern. The pool's
-    /// dependency-aware FIFO queue then schedules the topological
+    /// dependency-aware priority queue then schedules the topological
     /// frontier: independent branch chains overlap, the concat waits on
-    /// all four branch tails, and an older batch's jobs drain before a
-    /// pipelined successor's.
+    /// all four branch tails, and each step is submitted at its
+    /// **critical-path weight** (the MAC count of the heaviest
+    /// dependency chain from the step to the sink, via
+    /// [`WorkerPool::submit_owned_prioritized`]) so the longest
+    /// inception/residual branch drains first and the merge is released
+    /// as early as possible.
     ///
     /// Drive the returned [`AsyncCursor`] with
     /// [`NetworkPlan::step_async`] until it returns `false`, then read
@@ -1249,6 +1253,32 @@ impl NetworkPlan {
             .collect();
 
         let batch = self.batch;
+        // Critical-path weight per step: the summed per-image work (MACs
+        // for conv/fc, element count for plumbing) of the heaviest
+        // dependency chain from the step to the sink. Steps are stored
+        // in topological order, so a reverse sweep finalises every
+        // dependent before its producer. Jobs are submitted at this
+        // weight so workers pull the longest inception/residual branch
+        // first and the merge step's dependencies clear earliest.
+        let step_cost = |step: &PlanStep| -> u64 {
+            let c = match &step.op {
+                PlanOp::Conv { plan } => plan.shape().macs(1),
+                PlanOp::Fc { fc, .. } => fc.macs(1),
+                _ => step.out_dims.chw(),
+            };
+            (c as u64).max(1)
+        };
+        let mut critical = vec![0u64; self.steps.len()];
+        for i in (0..self.steps.len()).rev() {
+            let mut downstream = 0u64;
+            for (j, s) in self.steps.iter().enumerate().skip(i + 1) {
+                if s.deps.contains(&i) {
+                    downstream = downstream.max(critical[j]);
+                }
+            }
+            critical[i] = step_cost(&self.steps[i]) + downstream;
+        }
+
         let mut jobs: Vec<Vec<JobHandle>> = Vec::with_capacity(self.steps.len());
         for (i, step) in self.steps.iter().enumerate() {
             let out_sh = slot_views[step.out_slot];
@@ -1300,7 +1330,13 @@ impl NetworkPlan {
                             let dst = unsafe { ws_sh.slice_mut(n * padded_chw, padded_chw) };
                             pad_image_into(&shape, img, dst);
                         });
-                        Some(pool.submit_owned(batch, task, JobOrigin::Dag, &dep_handles))
+                        Some(pool.submit_owned_prioritized(
+                            batch,
+                            task,
+                            JobOrigin::Dag,
+                            critical[i],
+                            &dep_handles,
+                        ))
                     } else {
                         None
                     };
@@ -1326,8 +1362,13 @@ impl NetworkPlan {
                             kplan.run_async_tile(t, worker, batch, padded, &scratch_sh, &out_sh)
                         };
                     });
-                    let kernel_job =
-                        pool.submit_owned(tiles, task, JobOrigin::Kernel, &kernel_deps);
+                    let kernel_job = pool.submit_owned_prioritized(
+                        tiles,
+                        task,
+                        JobOrigin::Kernel,
+                        critical[i],
+                        &kernel_deps,
+                    );
 
                     // ReLU follows every conv (seed scheduler
                     // behaviour), fused as a per-image job behind the
@@ -1337,7 +1378,13 @@ impl NetworkPlan {
                         let img = unsafe { out_sh.slice_mut(n * out_chw, out_chw) };
                         relu_in_place(img);
                     });
-                    let relu_job = pool.submit_owned(batch, task, JobOrigin::Dag, &[&kernel_job]);
+                    let relu_job = pool.submit_owned_prioritized(
+                        batch,
+                        task,
+                        JobOrigin::Dag,
+                        critical[i],
+                        &[&kernel_job],
+                    );
                     if let Some(p) = pad_job {
                         step_jobs.push(p);
                     }
@@ -1355,7 +1402,13 @@ impl NetworkPlan {
                         let orow = unsafe { out_sh.slice_mut(n * out_f, out_f) };
                         fc_image_into(&fc, &weights, xrow, orow);
                     });
-                    step_jobs.push(pool.submit_owned(batch, task, JobOrigin::Dag, &dep_handles));
+                    step_jobs.push(pool.submit_owned_prioritized(
+                        batch,
+                        task,
+                        JobOrigin::Dag,
+                        critical[i],
+                        &dep_handles,
+                    ));
                 }
                 PlanOp::Pool {
                     kind,
@@ -1374,7 +1427,13 @@ impl NetworkPlan {
                         let out_img = unsafe { out_sh.slice_mut(n * out_chw, out_chw) };
                         pool_image_into(kind, k, stride, pad, in_dims, out_dims, n, src, out_img);
                     });
-                    step_jobs.push(pool.submit_owned(batch, task, JobOrigin::Dag, &dep_handles));
+                    step_jobs.push(pool.submit_owned_prioritized(
+                        batch,
+                        task,
+                        JobOrigin::Dag,
+                        critical[i],
+                        &dep_handles,
+                    ));
                 }
                 PlanOp::Relu | PlanOp::Lrn => {
                     let lrn = matches!(step.op, PlanOp::Lrn);
@@ -1392,7 +1451,13 @@ impl NetworkPlan {
                             relu_in_place(dst);
                         }
                     });
-                    step_jobs.push(pool.submit_owned(batch, task, JobOrigin::Dag, &dep_handles));
+                    step_jobs.push(pool.submit_owned_prioritized(
+                        batch,
+                        task,
+                        JobOrigin::Dag,
+                        critical[i],
+                        &dep_handles,
+                    ));
                 }
                 PlanOp::Concat { parts } => {
                     let parts = parts.clone();
@@ -1413,7 +1478,13 @@ impl NetworkPlan {
                         let dst = unsafe { out_sh.slice_mut(n * out_chw + offs[p], len) };
                         dst.copy_from_slice(src);
                     });
-                    step_jobs.push(pool.submit_owned(batch * np, task, JobOrigin::Dag, &dep_handles));
+                    step_jobs.push(pool.submit_owned_prioritized(
+                        batch * np,
+                        task,
+                        JobOrigin::Dag,
+                        critical[i],
+                        &dep_handles,
+                    ));
                 }
                 PlanOp::Add => {
                     let (a_sh, b_sh) = (in_shs[0], in_shs[1]);
@@ -1426,7 +1497,13 @@ impl NetworkPlan {
                         let dst = unsafe { out_sh.slice_mut(n * out_chw, out_chw) };
                         add_into(a, b, dst);
                     });
-                    step_jobs.push(pool.submit_owned(batch, task, JobOrigin::Dag, &dep_handles));
+                    step_jobs.push(pool.submit_owned_prioritized(
+                        batch,
+                        task,
+                        JobOrigin::Dag,
+                        critical[i],
+                        &dep_handles,
+                    ));
                 }
             }
             drop(dep_handles);

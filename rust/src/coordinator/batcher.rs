@@ -20,6 +20,13 @@
 //!
 //! A partially formed batch is carried across calls (the pending buffer
 //! below), so mixing the two surfaces never reorders or drops requests.
+//!
+//! Multi-tenant intake adds a fairness wrinkle: each model has its own
+//! batcher, and a stale short batch on one model (past its deadline,
+//! below batch size) must not starve another model's *full* batch of a
+//! pipeline slot. [`Batcher::poll_full_batch`] exposes the "full only"
+//! intake the server's cross-tenant full-batch pass needs; the ready
+//! pass ([`Batcher::poll_batch`]) then releases stale shorts.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
@@ -135,12 +142,10 @@ impl<T> Batcher<T> {
         self.emit()
     }
 
-    /// Non-blocking intake: drain whatever is queued right now and emit
-    /// a batch only if one is *ready* — full, past the deadline of its
-    /// first item, or final because the channel closed. Returns `None`
-    /// when nothing is ready yet (call again later, or fall back to
-    /// [`Batcher::next_batch`] when there is nothing else to do).
-    pub fn poll_batch(&mut self) -> Option<Batch<T>> {
+    /// Drain the channel into the pending buffer without blocking,
+    /// stopping at batch size (the shared intake step of every
+    /// non-blocking surface).
+    fn fill(&mut self) {
         while self.pending.len() < self.cfg.batch_size && !self.closed {
             match self.rx.try_recv() {
                 Ok(item) => self.stash(item),
@@ -148,6 +153,15 @@ impl<T> Batcher<T> {
                 Err(TryRecvError::Disconnected) => self.closed = true,
             }
         }
+    }
+
+    /// Non-blocking intake: drain whatever is queued right now and emit
+    /// a batch only if one is *ready* — full, past the deadline of its
+    /// first item, or final because the channel closed. Returns `None`
+    /// when nothing is ready yet (call again later, or fall back to
+    /// [`Batcher::next_batch`] when there is nothing else to do).
+    pub fn poll_batch(&mut self) -> Option<Batch<T>> {
+        self.fill();
         if self.pending.is_empty() {
             return None;
         }
@@ -161,6 +175,34 @@ impl<T> Batcher<T> {
         } else {
             None
         }
+    }
+
+    /// Non-blocking intake that emits only a *full* batch, holding
+    /// short batches back even past their deadline. The multi-tenant
+    /// server runs this across every tenant before any
+    /// [`poll_batch`](Self::poll_batch) call, so one model's stale
+    /// pending batch cannot claim a pipeline slot ahead of another
+    /// model's full batch (the pending-carry fairness fix — pinned by
+    /// `full_batch_beats_stale_pending_across_tenants`).
+    pub fn poll_full_batch(&mut self) -> Option<Batch<T>> {
+        self.fill();
+        if self.pending.len() >= self.cfg.batch_size {
+            self.emit()
+        } else {
+            None
+        }
+    }
+
+    /// Whether the batcher holds received-but-unemitted items.
+    pub fn has_pending(&self) -> bool {
+        !self.pending.is_empty()
+    }
+
+    /// Whether intake is finished for good: the sender side is gone and
+    /// every received item has been emitted. The multi-tenant server
+    /// uses this to retire a tenant's intake during shutdown.
+    pub fn is_drained(&self) -> bool {
+        self.closed && self.pending.is_empty()
     }
 }
 
@@ -276,6 +318,52 @@ mod tests {
         assert_eq!(batch.items, vec![10]);
         assert!(b.poll_batch().is_none());
         assert!(b.next_batch().is_none());
+    }
+
+    /// Regression: a stale (past-deadline, short) pending batch on one
+    /// tenant must not starve another tenant's full batch. The server's
+    /// intake runs a full-batch pass over every tenant first;
+    /// `poll_full_batch` must hold the stale short back in that pass
+    /// and leave it intact for the ready pass.
+    #[test]
+    fn full_batch_beats_stale_pending_across_tenants() {
+        // Tenant A: one item, deadline long blown — stale short batch.
+        let (tx_a, rx_a) = channel();
+        let mut a = Batcher::new(rx_a, cfg(4, 0));
+        tx_a.send(100).unwrap();
+        assert!(a.poll_full_batch().is_none(), "stale short is not full");
+        assert!(a.has_pending(), "held back, not dropped");
+
+        // Tenant B: a full batch sitting in the channel.
+        let (tx_b, rx_b) = channel();
+        let mut b = Batcher::new(rx_b, cfg(4, 1000));
+        for i in 0..4 {
+            tx_b.send(i).unwrap();
+        }
+        // Full-batch pass: B wins the first pipeline slot.
+        let full = b.poll_full_batch().unwrap();
+        assert_eq!(full.items, vec![0, 1, 2, 3]);
+
+        // Ready pass: A's stale short is then released, intact.
+        let stale = a.poll_batch().unwrap();
+        assert_eq!(stale.items, vec![100]);
+        drop(tx_a);
+    }
+
+    #[test]
+    fn poll_full_batch_holds_young_and_emits_full() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(rx, cfg(3, 1000));
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert!(b.poll_full_batch().is_none());
+        tx.send(3).unwrap();
+        assert_eq!(b.poll_full_batch().unwrap().items, vec![1, 2, 3]);
+        assert!(!b.has_pending());
+        assert!(!b.is_drained());
+        drop(tx);
+        assert!(b.poll_batch().is_none());
+        assert!(b.is_drained());
     }
 
     #[test]

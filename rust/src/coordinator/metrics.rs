@@ -103,6 +103,22 @@ pub struct Metrics {
     pub padded_slots: AtomicU64,
     /// Failed requests (reserved; the native path currently cannot fail).
     pub errors: AtomicU64,
+    /// Requests refused by admission control (`max_queue_depth` hit).
+    /// Rejections are counted, never silently dropped.
+    pub rejected: AtomicU64,
+    /// Responses delivered at or before their request's deadline.
+    pub deadline_hits: AtomicU64,
+    /// Responses delivered after their request's deadline.
+    pub deadline_misses: AtomicU64,
+    /// Times the serving loop engaged router pressure mode.
+    pub pressure_enters: AtomicU64,
+    /// Times the serving loop released router pressure mode.
+    pub pressure_exits: AtomicU64,
+    /// 1 while pressure mode is engaged, 0 otherwise (gauge).
+    pub pressure_mode: AtomicU64,
+    /// Admitted requests currently in flight (gauge — the admission
+    /// queue depth the pressure trigger compares against).
+    pub queue_depth: AtomicU64,
     /// Worker count of the executor's pool.
     pub pool_workers: AtomicU64,
     /// Cumulative tiles executed on the pool.
@@ -152,6 +168,20 @@ pub struct MetricsSnapshot {
     pub padded_slots: u64,
     /// Failed requests.
     pub errors: u64,
+    /// Requests refused by admission control.
+    pub rejected: u64,
+    /// Responses delivered within their deadline.
+    pub deadline_hits: u64,
+    /// Responses delivered after their deadline.
+    pub deadline_misses: u64,
+    /// Pressure-mode engagements.
+    pub pressure_enters: u64,
+    /// Pressure-mode releases.
+    pub pressure_exits: u64,
+    /// Whether pressure mode is engaged right now.
+    pub pressure_mode: bool,
+    /// Admitted requests in flight at snapshot time.
+    pub queue_depth: u64,
     /// Worker count of the executor's pool.
     pub pool_workers: u64,
     /// Cumulative tiles executed on the pool.
@@ -211,6 +241,13 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            deadline_hits: self.deadline_hits.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            pressure_enters: self.pressure_enters.load(Ordering::Relaxed),
+            pressure_exits: self.pressure_exits.load(Ordering::Relaxed),
+            pressure_mode: self.pressure_mode.load(Ordering::Relaxed) != 0,
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
             pool_workers: self.pool_workers.load(Ordering::Relaxed),
             pool_tiles: self.pool_tiles.load(Ordering::Relaxed),
             pool_steals: self.pool_steals.load(Ordering::Relaxed),
@@ -315,6 +352,33 @@ mod tests {
         assert_eq!(s.replans, 3);
         assert_eq!(s.replan_build_time, Duration::from_nanos(2_500_000));
         assert_eq!(s.replan_layers_rebuilt, 4);
+    }
+
+    #[test]
+    fn admission_and_deadline_gauges_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.rejected.store(3, Ordering::Relaxed);
+        m.deadline_hits.store(8, Ordering::Relaxed);
+        m.deadline_misses.store(2, Ordering::Relaxed);
+        m.queue_depth.store(5, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 3);
+        assert_eq!(s.deadline_hits, 8);
+        assert_eq!(s.deadline_misses, 2);
+        assert_eq!(s.queue_depth, 5);
+    }
+
+    #[test]
+    fn pressure_gauges_surface_in_snapshot() {
+        let m = Metrics::new();
+        assert!(!m.snapshot().pressure_mode);
+        m.pressure_enters.store(2, Ordering::Relaxed);
+        m.pressure_exits.store(1, Ordering::Relaxed);
+        m.pressure_mode.store(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.pressure_enters, 2);
+        assert_eq!(s.pressure_exits, 1);
+        assert!(s.pressure_mode);
     }
 
     #[test]

@@ -13,11 +13,15 @@
 //! * [`scheduler`] — whole-network pipeline over a shared
 //!   [`crate::conv::PlanCache`] with per-kernel timing (drives the
 //!   Fig 9/11 benches).
-//! * [`server`] — the request loop: an executor thread keeps up to two
-//!   batches in flight on a shared [`crate::conv::NetworkPlan`]
-//!   (per-slot workspace arenas), interleaves their layer steps on one
-//!   worker pool, replans incrementally through the plan cache, and
-//!   fans responses back out.
+//! * [`server`] — the request loop: one executor thread hosts every
+//!   registered tenant network (per-tenant plan cache, batcher, and
+//!   router behind one front door with admission control and optional
+//!   request deadlines), keeps up to two batches in flight on shared
+//!   [`crate::conv::NetworkPlan`]s (per-slot workspace arenas),
+//!   interleaves their layer steps on one worker pool, replans
+//!   incrementally through the plan cache — flipping to
+//!   cheapest-method routing under overload pressure — and fans
+//!   responses back out.
 //! * [`metrics`] — counters + latency histograms (incl. pool and replan
 //!   gauges) for the E2E example.
 //!

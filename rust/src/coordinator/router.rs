@@ -11,10 +11,20 @@
 //! 2. An online refinement: measured per-(layer, method) latencies are
 //!    folded into an EWMA, and the router switches when another method is
 //!    consistently faster (epsilon-greedy exploration).
+//! 3. A **pressure mode** for overload: when the serving front door sees
+//!    queue depth or deadline slack cross its configured thresholds
+//!    ([`RouterConfig::pressure_queue_depth`] /
+//!    [`RouterConfig::pressure_slack`]), it flips the router into
+//!    pressure via [`Router::set_pressure`], and [`Router::choose`]
+//!    switches from fastest-EWMA to the deterministic
+//!    cheapest-modelled-work method ([`Router::cheapest`]) until the
+//!    backlog drains. Cheapest never explores and reads no EWMA state,
+//!    so the method trace under saturation is reproducible.
 
 use crate::config::ConvShape;
 use crate::conv::winograd_applicable;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -34,6 +44,16 @@ pub struct RouterConfig {
     pub explore_every: u64,
     /// Allow Winograd for dense 3x3/s1 layers.
     pub enable_winograd: bool,
+    /// Queue depth (in-flight admitted requests) at or above which the
+    /// serving loop engages pressure mode. `0` disables the depth
+    /// trigger (the default — routing behaviour is unchanged unless a
+    /// deployment opts in).
+    pub pressure_queue_depth: usize,
+    /// Deadline slack below which pressure mode engages: if any
+    /// in-flight request's deadline is closer than this, the server
+    /// flips to cheapest-method routing. `Duration::ZERO` disables the
+    /// slack trigger (the default).
+    pub pressure_slack: Duration,
 }
 
 impl Default for RouterConfig {
@@ -43,6 +63,8 @@ impl Default for RouterConfig {
             ewma_alpha: 0.3,
             explore_every: 16,
             enable_winograd: false,
+            pressure_queue_depth: 0,
+            pressure_slack: Duration::ZERO,
         }
     }
 }
@@ -51,6 +73,8 @@ impl Default for RouterConfig {
 pub struct Router {
     cfg: RouterConfig,
     state: Mutex<RouterState>,
+    /// Overload flag, set by the serving loop (see module docs item 3).
+    pressure: AtomicBool,
 }
 
 #[derive(Default)]
@@ -66,7 +90,59 @@ impl Router {
         Self {
             cfg,
             state: Mutex::new(RouterState::default()),
+            pressure: AtomicBool::new(false),
         }
+    }
+
+    /// The configuration this router was built with (the serving loop
+    /// reads the pressure thresholds from here).
+    pub fn config(&self) -> &RouterConfig {
+        &self.cfg
+    }
+
+    /// Engage or release pressure mode. Returns the previous state so
+    /// callers can count transitions without a second load.
+    pub fn set_pressure(&self, on: bool) -> bool {
+        self.pressure.swap(on, Ordering::Relaxed)
+    }
+
+    /// Whether [`choose`](Self::choose) is currently short-circuiting to
+    /// [`cheapest`](Self::cheapest).
+    pub fn under_pressure(&self) -> bool {
+        self.pressure.load(Ordering::Relaxed)
+    }
+
+    /// The cheapest-modelled-work method for a layer: candidate cost is
+    /// its MAC count plus, for lowering methods, the im2col buffer
+    /// writes (paper Fig 2/3 — lowering pays a materialization the
+    /// direct path skips). Deterministic — no EWMA state, no
+    /// exploration, first candidate wins ties — so the under-pressure
+    /// method trace is reproducible from the shape alone.
+    pub fn cheapest(&self, shape: &ConvShape) -> Method {
+        let (rows, cols) = shape.lowered_dims();
+        let lowered_elems = rows * cols * shape.groups;
+        let cost = |m: Method| -> usize {
+            match m {
+                Method::LoweredGemm => shape.macs(1) + lowered_elems,
+                Method::LoweredSpmm => shape.sparse_macs(1) + lowered_elems,
+                Method::DirectSparse => shape.sparse_macs(1),
+                // Winograd saves multiplies on dense 3x3/s1 but pays
+                // tile transforms; model it as dense work (it never
+                // beats the direct-sparse path under pressure).
+                Method::Winograd => shape.macs(1),
+            }
+        };
+        let cands = self.candidates(shape);
+        let mut best = cands[0];
+        let mut best_cost = cost(best);
+        for &m in &cands[1..] {
+            let c = cost(m);
+            if c < best_cost {
+                best = m;
+                best_cost = c;
+            }
+        }
+        best
     }
 
     /// The static heuristic (no measurements yet): the paper's §4 winner
@@ -96,8 +172,16 @@ impl Router {
 
     /// Pick the method for `layer` with shape `shape`: best EWMA if we
     /// have measurements, the static heuristic otherwise, with periodic
-    /// exploration of the runner-up.
+    /// exploration of the runner-up. Under pressure
+    /// ([`set_pressure`](Self::set_pressure)) the whole ladder is
+    /// bypassed for the deterministic [`cheapest`](Self::cheapest)
+    /// method, and the decision does not advance the exploration
+    /// counter (so releasing pressure resumes the exact pre-pressure
+    /// schedule).
     pub fn choose(&self, layer: &str, shape: &ConvShape) -> Method {
+        if self.under_pressure() {
+            return self.cheapest(shape);
+        }
         let mut st = self.state.lock().unwrap();
         st.decisions += 1;
         let cands = self.candidates(shape);
@@ -237,5 +321,51 @@ mod tests {
         let r = router();
         assert_eq!(r.candidates(&dense_3x3()), vec![Method::LoweredGemm]);
         assert_eq!(r.candidates(&sparse_3x3()).len(), 3);
+    }
+
+    #[test]
+    fn cheapest_prefers_direct_sparse_and_skips_lowering_cost() {
+        let r = router();
+        // Sparse layer: direct sparse does nnz-proportional work and
+        // pays no im2col materialization — strictly cheapest.
+        assert_eq!(r.cheapest(&sparse_3x3()), Method::DirectSparse);
+        // Dense layer: only GEMM is a candidate.
+        assert_eq!(r.cheapest(&dense_3x3()), Method::LoweredGemm);
+    }
+
+    #[test]
+    fn pressure_flips_choose_to_cheapest_then_recovers() {
+        let r = router();
+        let shape = sparse_3x3();
+        // Teach the EWMA that spmm is fastest so the normal path and
+        // the pressure path provably disagree.
+        r.observe("l", Method::DirectSparse, Duration::from_millis(30));
+        r.observe("l", Method::LoweredSpmm, Duration::from_millis(5));
+        assert_eq!(r.choose("l", &shape), Method::LoweredSpmm);
+
+        assert!(!r.set_pressure(true));
+        assert!(r.under_pressure());
+        assert_eq!(r.choose("l", &shape), Method::DirectSparse);
+
+        assert!(r.set_pressure(false));
+        assert!(!r.under_pressure());
+        assert_eq!(r.choose("l", &shape), Method::LoweredSpmm);
+    }
+
+    #[test]
+    fn pressure_decisions_do_not_advance_exploration() {
+        let r = Router::new(RouterConfig {
+            explore_every: 2,
+            ..Default::default()
+        });
+        let shape = sparse_3x3();
+        r.observe("l", Method::DirectSparse, Duration::from_millis(1));
+        // Under pressure, every decision is the deterministic cheapest
+        // method — no exploration ever fires.
+        r.set_pressure(true);
+        for _ in 0..16 {
+            assert_eq!(r.choose("l", &shape), Method::DirectSparse);
+        }
+        r.set_pressure(false);
     }
 }

@@ -321,8 +321,10 @@ impl NetworkSchedule {
                 results.lock().unwrap()[t] = Some(best);
             })
         };
+        // Priority 0: background sweeps yield the queue to any
+        // critical-path-weighted serving jobs that land meanwhile.
         self.pool
-            .submit_owned(items.len(), task, JobOrigin::Autotune, &[])
+            .submit_owned_prioritized(items.len(), task, JobOrigin::Autotune, 0, &[])
             .wait();
         let results = results.lock().unwrap();
         let mut changed = 0;

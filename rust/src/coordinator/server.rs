@@ -5,6 +5,41 @@
 //! plan layer — zero steady-state allocation on the hot path; responses
 //! fan back out through per-request channels.
 //!
+//! ## The multi-tenant front door
+//!
+//! One server hosts several registered networks ("tenants") behind one
+//! intake: tenant 0 is [`ServerConfig::network`], and every entry of
+//! [`ServerConfig::tenants`] adds another. Each tenant owns its own
+//! [`PlanCache`] (weights materialised once per tenant), its own
+//! [`Batcher`], and its own [`Router`] EWMA state; all tenants share
+//! the **one** [`WorkerPool`] and the one executor thread, so sparse
+//! kernels from different models interleave on the same workers.
+//! Intake is two-pass fair: a full-batch pass across every tenant runs
+//! before any ready (deadline-expired short) batch claims a pipeline
+//! slot, so one model's stale pending batch cannot starve another
+//! model's full batch. Tenants are isolated by construction — separate
+//! caches, arenas, and staging buffers — so logits are byte-identical
+//! to serving each network alone (pinned by `tests/serve_load.rs`).
+//!
+//! ## Admission control and pressure
+//!
+//! [`ServerConfig::max_queue_depth`] bounds admitted-but-unanswered
+//! requests across all tenants; a submit over the bound returns an
+//! error and bumps the `rejected` counter — rejections are counted,
+//! never silently dropped, and `admitted + rejected == attempts` is a
+//! tested invariant (`tests/coordinator_props.rs`). Requests may carry
+//! an optional deadline: response-side hits/misses are counted, and
+//! when queue depth or the deadline slack of any in-flight request
+//! crosses the router's thresholds
+//! ([`RouterConfig::pressure_queue_depth`] /
+//! [`RouterConfig::pressure_slack`]) the executor flips every tenant's
+//! router into **pressure mode** — method selection switches from
+//! fastest-EWMA to deterministic cheapest-modelled-work — and replans
+//! immediately; the flip reverses (with another replan) once the
+//! backlog drains. Transitions are published through the
+//! `pressure_enters` / `pressure_exits` counters and the
+//! `pressure_mode` gauge.
+//!
 //! ## The two-slot pipeline
 //!
 //! The executor keeps up to [`ServerConfig::pipeline_depth`] batches in
@@ -25,30 +60,30 @@
 //! latencies are folded back via `Router::observe`, and every
 //! `replan_every` batches the choices are re-evaluated. When the router
 //! has changed its mind, the executor rebuilds the plan **through the
-//! shared [`PlanCache`]**: weights were materialised once at startup,
-//! and only the flipped layer's plan is compiled (none, if that
-//! `(layer, method)` pair was ever used before) — every untouched layer
-//! keeps its `Arc<LayerPlan>`. Replan build time and layers-rebuilt
-//! counts are published through [`super::metrics::Metrics`]. This is
-//! the paper's §3.4 adaptive kernel customization as a serving loop. A
-//! batch already in flight finishes on the plan it started with; the
-//! new plan applies from the next batch on — unless
-//! [`ServerConfig::strict_replan`] is set, in which case the executor
-//! drains every in-flight slot first so concurrently served responses
-//! never mix method assignments.
+//! tenant's shared [`PlanCache`]**: weights were materialised once at
+//! startup, and only the flipped layer's plan is compiled (none, if
+//! that `(layer, method)` pair was ever used before) — every untouched
+//! layer keeps its `Arc<LayerPlan>`. Replan build time and
+//! layers-rebuilt counts are published through
+//! [`super::metrics::Metrics`]. This is the paper's §3.4 adaptive
+//! kernel customization as a serving loop. A batch already in flight
+//! finishes on the plan it started with; the new plan applies from the
+//! next batch on — unless [`ServerConfig::strict_replan`] is set, in
+//! which case the executor drains every in-flight slot first so
+//! concurrently served responses never mix method assignments.
 //!
 //! ## DAG serving (branch overlap)
 //!
 //! When the served network is a branch/merge graph (`googlenet`,
 //! `miniception`), each slot drives the plan's **asynchronous DAG
 //! walk** instead of the sequential cursor: every layer is submitted as
-//! dependency-chained jobs on the shared pool, so the four branches of
-//! an inception module overlap *within* a batch while the two-slot
-//! pipeline still overlaps batches — both forms of slack fill the same
-//! `WorkerPool`. The async walk cannot lap kernels, but it rebuilds
-//! **approximate per-layer latencies** from the pool's job-completion
-//! timestamps (`NetworkPlan::step_async_timed`) and feeds them to the
-//! router, so the EWMA refines on graph networks too.
+//! dependency-chained jobs on the shared pool — at critical-path
+//! priority, so the longest branch drains first — and the four branches
+//! of an inception module overlap *within* a batch while the two-slot
+//! pipeline still overlaps batches. The async walk cannot lap kernels,
+//! but it rebuilds **approximate per-layer latencies** from the pool's
+//! job-completion timestamps (`NetworkPlan::step_async_timed`) and
+//! feeds them to the router, so the EWMA refines on graph networks too.
 //!
 //! ## Adaptive tiling
 //!
@@ -66,7 +101,7 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::{Router, RouterConfig};
 use crate::config::{network_by_name, LayerKind, Network};
 use crate::conv::{AsyncCursor, Method, NetworkPlan, PlanCache, PlanCursor, WorkspaceArena};
-use crate::util::{default_threads, WorkerPool};
+use crate::util::{default_threads, PoolStats, WorkerPool};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -97,6 +132,10 @@ pub struct InferRequest {
     pub image: Vec<f32>,
     /// When the client submitted (end-to-end latency anchor).
     pub submitted: Instant,
+    /// Optional SLO deadline. Hits and misses are counted in the
+    /// metrics, and imminent deadlines (slack below
+    /// [`RouterConfig::pressure_slack`]) engage router pressure mode.
+    pub deadline: Option<Instant>,
     /// Channel the response is sent back on.
     pub resp: Sender<InferResponse>,
 }
@@ -110,6 +149,11 @@ pub struct InferResponse {
     pub logits: Vec<f32>,
     /// End-to-end latency (submit -> response ready).
     pub latency: Duration,
+    /// The per-CONV-layer method assignment of the plan that computed
+    /// this response (shared by every request of the batch) — the
+    /// per-request method trace the load harness and the pressure-mode
+    /// tests assert on.
+    pub methods: Arc<Vec<(String, Method)>>,
 }
 
 /// Server construction parameters. See `coordinator/README.md` for
@@ -117,25 +161,42 @@ pub struct InferResponse {
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Network to serve (`config::network_by_name`): `minicnn` (default),
-    /// `alexnet`, `googlenet`, `resnet50`, `mobilenetv1`.
+    /// `microcnn`, `alexnet`, `googlenet`, `resnet50`, `mobilenetv1`.
+    /// Always tenant 0.
     pub network: String,
-    /// Batching policy: target batch size and formation deadline.
+    /// Additional networks served alongside [`network`](Self::network)
+    /// as tenants 1.. — each with its own plan cache, batcher, and
+    /// router, all sharing the one worker pool. Empty (the default)
+    /// serves a single tenant.
+    pub tenants: Vec<String>,
+    /// Batching policy: target batch size and formation deadline
+    /// (shared by every tenant's batcher).
     pub batcher: BatcherConfig,
-    /// Seed for the synthetic model weights.
+    /// Admission bound: maximum admitted-but-unanswered requests across
+    /// all tenants. A submit over the bound is rejected with an error
+    /// and counted (`Metrics::rejected`) — never silently dropped.
+    /// `0` (default) admits everything.
+    pub max_queue_depth: usize,
+    /// Seed for the synthetic model weights (per tenant — two tenants
+    /// serving the same network hold identical weights, so co-served
+    /// logits are comparable to solo-served ones).
     pub weight_seed: u64,
     /// Worker-pool size (0 = `util::default_threads()`). The executor
     /// constructs exactly one [`WorkerPool`] of this size for its
     /// lifetime — no per-batch or per-layer thread spawns.
     pub threads: usize,
-    /// Router knobs for per-layer method selection.
+    /// Router knobs for per-layer method selection (per tenant), and
+    /// the pressure-mode thresholds the serving loop applies globally.
     pub router: RouterConfig,
-    /// Re-evaluate router choices every N batches (0 = plan once).
+    /// Re-evaluate router choices every N batches **per tenant**
+    /// (0 = plan once).
     pub replan_every: u64,
-    /// Batches kept in flight by the executor (clamped to at least 1).
-    /// 1 = strict sequential serving; 2 (default) = two-slot pipeline:
-    /// batch N+1's head layers overlap batch N's tail layers and batch
-    /// formation. Each slot owns a workspace arena, so memory scales
-    /// linearly with depth.
+    /// Batches kept in flight by the executor (clamped to at least 1),
+    /// across all tenants. 1 = strict sequential serving; 2 (default) =
+    /// two-slot pipeline: batch N+1's head layers overlap batch N's
+    /// tail layers and batch formation. Each slot owns a workspace
+    /// arena (every tenant preallocates `pipeline_depth` of them), so
+    /// memory scales linearly with depth × tenants.
     pub pipeline_depth: usize,
     /// Drain every in-flight pipeline slot **before** applying a
     /// replan. Off (default), a slot started before a replan finishes
@@ -169,7 +230,9 @@ impl Default for ServerConfig {
     fn default() -> Self {
         Self {
             network: "minicnn".into(),
+            tenants: Vec::new(),
             batcher: BatcherConfig::default(),
+            max_queue_depth: 0,
             weight_seed: 42,
             threads: 0,
             router: RouterConfig::default(),
@@ -187,82 +250,170 @@ impl Default for ServerConfig {
 pub struct ServerStats {
     /// Final metrics snapshot (includes the `replan_*` counters).
     pub snapshot: MetricsSnapshot,
-    /// Wall time spent compiling the initial NetworkPlan (weight
-    /// generation + operand transforms + arena sizing).
+    /// Wall time spent compiling the initial NetworkPlans of every
+    /// tenant (weight generation + operand transforms + arena sizing).
     pub plan_build_time: Duration,
     /// Times the executor swapped in a recompiled plan after a router
-    /// flip.
+    /// flip (summed over tenants, including pressure transitions).
     pub replans: u64,
 }
 
-/// Handle owned by clients: submit requests, then `shutdown` to join.
-pub struct ServerHandle {
-    tx: Option<Sender<InferRequest>>,
-    executor: Option<std::thread::JoinHandle<Result<(Duration, u64), ServerError>>>,
-    metrics: Arc<Metrics>,
-    next_id: AtomicU64,
+/// Shape facts of one tenant the front door validates against.
+struct TenantInfo {
+    name: String,
     image_elems: usize,
     num_classes: usize,
 }
 
+/// Handle owned by clients: submit requests, then `shutdown` to join.
+pub struct ServerHandle {
+    txs: Option<Vec<Sender<InferRequest>>>,
+    executor: Option<std::thread::JoinHandle<Result<(Duration, u64), ServerError>>>,
+    metrics: Arc<Metrics>,
+    /// Admitted-but-unanswered requests, shared with the executor
+    /// (incremented at admission, decremented as each response is
+    /// fanned out).
+    inflight: Arc<AtomicU64>,
+    max_queue_depth: usize,
+    next_id: AtomicU64,
+    tenants: Vec<TenantInfo>,
+}
+
 impl ServerHandle {
-    /// Start the server: spawns the executor thread, which compiles the
-    /// network plan and preallocates the workspace arenas. Blocks until
-    /// the executor is ready to serve.
+    /// Start the server: spawns the executor thread, which compiles
+    /// every tenant's network plan and preallocates the workspace
+    /// arenas. Blocks until the executor is ready to serve.
     pub fn start(cfg: ServerConfig) -> Result<Self, ServerError> {
-        let (tx, rx) = channel::<InferRequest>();
+        let ntenants = 1 + cfg.tenants.len();
+        let mut txs = Vec::with_capacity(ntenants);
+        let mut rxs = Vec::with_capacity(ntenants);
+        for _ in 0..ntenants {
+            let (tx, rx) = channel::<InferRequest>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
         let metrics = Arc::new(Metrics::new());
+        let inflight = Arc::new(AtomicU64::new(0));
+        let max_queue_depth = cfg.max_queue_depth;
         let metrics_exec = metrics.clone();
-        let (ready_tx, ready_rx) = channel::<Result<(usize, usize), ServerError>>();
+        let inflight_exec = inflight.clone();
+        let (ready_tx, ready_rx) = channel::<Result<Vec<TenantInfo>, ServerError>>();
         let executor = std::thread::Builder::new()
             .name("escoin-executor".into())
-            .spawn(move || executor_loop(cfg, rx, metrics_exec, ready_tx))
+            .spawn(move || executor_loop(cfg, rxs, metrics_exec, inflight_exec, ready_tx))
             .map_err(|e| err(format!("spawn failed: {e}")))?;
-        let (image_elems, num_classes) = ready_rx
+        let tenants = ready_rx
             .recv()
             .map_err(|_| err("executor died during startup"))??;
         Ok(Self {
-            tx: Some(tx),
+            txs: Some(txs),
             executor: Some(executor),
             metrics,
+            inflight,
+            max_queue_depth,
             next_id: AtomicU64::new(0),
-            image_elems,
-            num_classes,
+            tenants,
         })
     }
 
-    /// Elements one request image must contain (C*H*W).
+    /// Number of served tenants (1 + `ServerConfig::tenants`).
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Network names by tenant index.
+    pub fn tenant_names(&self) -> Vec<&str> {
+        self.tenants.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    /// Elements one request image for `tenant` must contain (C*H*W).
+    pub fn tenant_image_elems(&self, tenant: usize) -> usize {
+        self.tenants[tenant].image_elems
+    }
+
+    /// Logit count of one response from `tenant`.
+    pub fn tenant_num_classes(&self, tenant: usize) -> usize {
+        self.tenants[tenant].num_classes
+    }
+
+    /// Elements one request image must contain (C*H*W) — tenant 0.
     pub fn image_elems(&self) -> usize {
-        self.image_elems
+        self.tenants[0].image_elems
     }
 
-    /// Logit count of one response.
+    /// Logit count of one response — tenant 0.
     pub fn num_classes(&self) -> usize {
-        self.num_classes
+        self.tenants[0].num_classes
     }
 
-    /// Submit one image; returns the response channel.
+    /// Admitted-but-unanswered requests right now (the admission queue
+    /// depth the `max_queue_depth` bound compares against).
+    pub fn queue_depth(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed) as usize
+    }
+
+    /// Submit one image to tenant 0 with no deadline; returns the
+    /// response channel.
     pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<InferResponse>, ServerError> {
-        if image.len() != self.image_elems {
+        self.submit_to(0, image, None)
+    }
+
+    /// Submit one image to `tenant`, optionally with an SLO deadline.
+    ///
+    /// Admission control: when [`ServerConfig::max_queue_depth`] is
+    /// set and that many requests are already admitted and unanswered,
+    /// the request is **rejected** — an error is returned and the
+    /// `rejected` counter bumps; nothing is ever silently dropped, and
+    /// an in-flight batch is never disturbed.
+    pub fn submit_to(
+        &self,
+        tenant: usize,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<InferResponse>, ServerError> {
+        let info = self
+            .tenants
+            .get(tenant)
+            .ok_or_else(|| err(format!("no tenant {tenant} (have {})", self.tenants.len())))?;
+        if image.len() != info.image_elems {
             return Err(err(format!(
-                "image has {} elems, model wants {}",
+                "image has {} elems, tenant {:?} wants {}",
                 image.len(),
-                self.image_elems
+                info.name,
+                info.image_elems
             )));
         }
+        // Reserve an in-flight slot first and undo on rejection, so
+        // concurrent submitters can never all pass a depth check and
+        // overshoot the bound together.
+        let prev = self.inflight.fetch_add(1, Ordering::Relaxed);
+        if self.max_queue_depth > 0 && prev as usize >= self.max_queue_depth {
+            self.inflight.fetch_sub(1, Ordering::Relaxed);
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(err(format!(
+                "rejected: queue full ({prev} in flight, bound {})",
+                self.max_queue_depth
+            )));
+        }
+        self.metrics
+            .queue_depth
+            .store(self.inflight.load(Ordering::Relaxed), Ordering::Relaxed);
         let (resp_tx, resp_rx) = channel();
         let req = InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             image,
             submitted: Instant::now(),
+            deadline,
             resp: resp_tx,
         };
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .as_ref()
-            .expect("server already shut down")
+        if self.txs.as_ref().expect("server already shut down")[tenant]
             .send(req)
-            .map_err(|_| err("executor gone"))?;
+            .is_err()
+        {
+            self.inflight.fetch_sub(1, Ordering::Relaxed);
+            return Err(err("executor gone"));
+        }
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         Ok(resp_rx)
     }
 
@@ -273,7 +424,7 @@ impl ServerHandle {
 
     /// Close the intake, drain, and join the executor.
     pub fn shutdown(mut self) -> Result<ServerStats, ServerError> {
-        drop(self.tx.take());
+        drop(self.txs.take());
         let (plan_build_time, replans) = self
             .executor
             .take()
@@ -320,21 +471,47 @@ enum SlotCursor {
     Dag(AsyncCursor),
 }
 
-/// One in-flight batch: the plan it started on (kept across replans —
-/// a successor batch may already run a newer plan), its walk cursor,
-/// and the slot-owned arena + staging buffer it computes in.
+/// One in-flight batch: which tenant it belongs to, the plan it started
+/// on (kept across replans — a successor batch may already run a newer
+/// plan) with that plan's method assignment for response tagging, its
+/// walk cursor, and the slot-owned arena + staging buffer it computes
+/// in.
 ///
 /// Field order is load-bearing: `cursor` is declared **before**
 /// `arena`, so when a slot drops, a DAG cursor joins its in-flight pool
 /// jobs before the arena buffers those jobs reference are freed — the
 /// `NetworkPlan::begin_run_async` safety contract.
 struct Slot {
+    tenant: usize,
     batch: Batch<InferRequest>,
     plan: Arc<NetworkPlan>,
+    methods: Arc<Vec<(String, Method)>>,
     cursor: SlotCursor,
     arena: WorkspaceArena,
     input: Vec<f32>,
     exec_started: Instant,
+}
+
+/// Everything the executor owns per registered network: config-derived
+/// immutables (net, shapes), the tenant's plan cache + live plan, its
+/// batcher and router, and the per-tenant slot arenas.
+struct Tenant {
+    name: String,
+    net: Network,
+    router: Router,
+    cache: PlanCache,
+    plan: Arc<NetworkPlan>,
+    /// `plan.conv_methods()`, cached once per (re)build and attached to
+    /// every response the plan computes.
+    methods: Arc<Vec<(String, Method)>>,
+    batcher: Batcher<InferRequest>,
+    image_elems: usize,
+    num_classes: usize,
+    batch_size: usize,
+    nbatches: u64,
+    /// Telemetry anchor for the adaptive-tiling interval.
+    tile_stats: PoolStats,
+    spare: Vec<(WorkspaceArena, Vec<f32>)>,
 }
 
 /// Advance a slot one step: one layer of the sequential walk (feeding
@@ -369,15 +546,100 @@ fn slot_done(slot: &Slot) -> bool {
     }
 }
 
-/// Retire a finished slot: record latencies, fan the logits back out to
-/// the per-request channels, publish the pool gauges, and return the
-/// slot's arena + staging buffer to the spare list.
+/// Stage a formed batch into a free slot of its tenant: copy the images
+/// into the slot's staging buffer (padded tail slots stay zero) and
+/// position the plan cursor before the first layer. Branch/merge plans
+/// (GoogLeNet) start the asynchronous DAG walk, so the module branches
+/// of this batch overlap as dependency-chained jobs on the shared pool;
+/// chain plans keep the sequential cursor.
+fn start_slot(
+    tenant_idx: usize,
+    t: &mut Tenant,
+    batch: Batch<InferRequest>,
+    pool: &WorkerPool,
+    metrics: &Metrics,
+    slots: &mut VecDeque<Slot>,
+) {
+    let (mut arena, mut input) = t.spare.pop().expect("slot arena available");
+    input.fill(0.0);
+    for (slot, req) in batch.items.iter().enumerate() {
+        let dst = slot * t.image_elems;
+        input[dst..dst + t.image_elems].copy_from_slice(&req.image);
+    }
+    metrics
+        .padded_slots
+        .fetch_add(batch.padding(t.batch_size) as u64, Ordering::Relaxed);
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    let cursor = if t.plan.supports_async() {
+        // SAFETY: the cursor is stored in the Slot *before* the
+        // arena (drop order joins jobs first), the slot's arena is
+        // never touched by another cursor while in flight, and
+        // retirement fully steps the cursor before the arena is
+        // recycled into `spare`.
+        SlotCursor::Dag(unsafe { t.plan.begin_run_async(Some(&input), pool, &mut arena) })
+    } else {
+        SlotCursor::Seq(t.plan.begin_run(Some(&input), pool, &mut arena))
+    };
+    slots.push_back(Slot {
+        tenant: tenant_idx,
+        batch,
+        plan: t.plan.clone(),
+        methods: t.methods.clone(),
+        cursor,
+        arena,
+        input,
+        exec_started: Instant::now(),
+    });
+}
+
+/// Two-pass fair intake across tenants, staging up to the pipeline's
+/// free capacity. Pass 1 takes only **full** batches (any tenant, round
+/// robin from `rr`); pass 2 takes ready batches (deadline-expired
+/// shorts, close-outs). A stale short on one tenant therefore can never
+/// claim a pipeline slot ahead of another tenant's full batch — the
+/// pending-carry fairness fix. Returns whether anything was staged.
+fn intake_batches(
+    tenants: &mut [Tenant],
+    slots: &mut VecDeque<Slot>,
+    depth: usize,
+    rr: &mut usize,
+    pool: &WorkerPool,
+    metrics: &Metrics,
+) -> bool {
+    let n = tenants.len();
+    let mut staged = false;
+    for pass in 0..2 {
+        for k in 0..n {
+            if slots.len() >= depth {
+                return staged;
+            }
+            let i = (*rr + k) % n;
+            let batch = if pass == 0 {
+                tenants[i].batcher.poll_full_batch()
+            } else {
+                tenants[i].batcher.poll_batch()
+            };
+            if let Some(b) = batch {
+                start_slot(i, &mut tenants[i], b, pool, metrics, slots);
+                staged = true;
+                *rr = (i + 1) % n;
+            }
+        }
+    }
+    staged
+}
+
+/// Retire a finished slot: record latencies and deadline outcomes, fan
+/// the logits back out to the per-request channels (releasing each
+/// request's admission slot), publish the pool gauges, and return the
+/// slot's arena + staging buffer to its tenant's spare list.
 fn retire_slot(
     slot: Slot,
     num_classes: usize,
     metrics: &Metrics,
     pool: &WorkerPool,
     spare: &mut Vec<(WorkspaceArena, Vec<f32>)>,
+    inflight: &AtomicU64,
 ) {
     metrics.batch_latency.record(slot.exec_started.elapsed());
     {
@@ -390,11 +652,21 @@ fn retire_slot(
             let latency = req.submitted.elapsed();
             metrics.latency.record(latency);
             metrics.responses.fetch_add(1, Ordering::Relaxed);
+            if let Some(d) = req.deadline {
+                if Instant::now() <= d {
+                    metrics.deadline_hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                }
+            }
             let _ = req.resp.send(InferResponse {
                 id: req.id,
                 logits: out,
                 latency,
+                methods: slot.methods.clone(),
             });
+            let depth_now = inflight.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
+            metrics.queue_depth.store(depth_now, Ordering::Relaxed);
         }
     }
     spare.push((slot.arena, slot.input));
@@ -412,51 +684,78 @@ fn retire_slot(
 
 fn executor_loop(
     cfg: ServerConfig,
-    rx: Receiver<InferRequest>,
+    rxs: Vec<Receiver<InferRequest>>,
     metrics: Arc<Metrics>,
-    ready: Sender<Result<(usize, usize), ServerError>>,
+    inflight: Arc<AtomicU64>,
+    ready: Sender<Result<Vec<TenantInfo>, ServerError>>,
 ) -> Result<(Duration, u64), ServerError> {
     let depth = cfg.pipeline_depth.max(1);
-    let startup = (|| -> Result<_, ServerError> {
-        let net = network_by_name(&cfg.network)
-            .ok_or_else(|| err(format!("unknown network {:?}", cfg.network)))?;
+    let batch_size = cfg.batcher.batch_size;
+    let startup = (|| -> Result<(WorkerPool, Vec<Tenant>, Duration), ServerError> {
         let threads = if cfg.threads > 0 {
             cfg.threads
         } else {
             default_threads()
         };
         // The one pool this server ever constructs: shared across all
-        // layers, batches, slots, and replans for the executor's
-        // lifetime.
+        // tenants, layers, batches, slots, and replans for the
+        // executor's lifetime.
         let pool = WorkerPool::new(threads);
-        let router = Router::new(cfg.router.clone());
-        let batch_size = cfg.batcher.batch_size;
+        let mut names = vec![cfg.network.clone()];
+        names.extend(cfg.tenants.iter().cloned());
         let t0 = Instant::now();
-        // Weights are materialised exactly once, into the cache every
-        // replan reuses.
-        let cache = PlanCache::build(&net, cfg.weight_seed);
-        if cfg.autotune_policies {
-            // Bake simulator-tuned tile policies before the first plan
-            // compiles, so the initial DirectSparse plans already carry
-            // the swept geometry (PolicySource::Tuned).
-            use crate::simulator::{tune_plan_cache, P100_GEOMETRY};
-            let tuned = tune_plan_cache(&cache, &net, P100_GEOMETRY);
-            metrics.tuned_layers.store(tuned as u64, Ordering::Relaxed);
+        let mut tenants = Vec::with_capacity(names.len());
+        for (name, rx) in names.iter().zip(rxs) {
+            let net = network_by_name(name)
+                .ok_or_else(|| err(format!("unknown network {name:?}")))?;
+            let router = Router::new(cfg.router.clone());
+            // Weights are materialised exactly once per tenant, into
+            // the cache every replan reuses.
+            let cache = PlanCache::build(&net, cfg.weight_seed);
+            if cfg.autotune_policies {
+                // Bake simulator-tuned tile policies before the first
+                // plan compiles, so the initial DirectSparse plans
+                // already carry the swept geometry (PolicySource::Tuned).
+                use crate::simulator::{tune_plan_cache, P100_GEOMETRY};
+                let tuned = tune_plan_cache(&cache, &net, P100_GEOMETRY);
+                metrics
+                    .tuned_layers
+                    .fetch_add(tuned as u64, Ordering::Relaxed);
+            }
+            let assignment = desired_methods(&net, &router);
+            let plan = Arc::new(build_plan(&cache, &net, batch_size, &assignment));
+            // One arena + input staging buffer per pipeline slot.
+            let spare: Vec<(WorkspaceArena, Vec<f32>)> = (0..depth)
+                .map(|_| {
+                    (
+                        WorkspaceArena::for_plan(&plan, &pool),
+                        vec![0.0f32; plan.input_dims().len()],
+                    )
+                })
+                .collect();
+            let methods = Arc::new(plan.conv_methods());
+            let image_elems = plan.image_elems();
+            let num_classes = plan.output_dims().chw();
+            let tile_stats = pool.stats();
+            tenants.push(Tenant {
+                name: name.clone(),
+                net,
+                router,
+                cache,
+                plan,
+                methods,
+                batcher: Batcher::new(rx, cfg.batcher.clone()),
+                image_elems,
+                num_classes,
+                batch_size,
+                nbatches: 0,
+                tile_stats,
+                spare,
+            });
         }
-        let assignment = desired_methods(&net, &router);
-        let plan = Arc::new(build_plan(&cache, &net, batch_size, &assignment));
-        // One arena + input staging buffer per pipeline slot.
-        let spare: Vec<(WorkspaceArena, Vec<f32>)> = (0..depth)
-            .map(|_| {
-                (
-                    WorkspaceArena::for_plan(&plan, &pool),
-                    vec![0.0f32; plan.input_dims().len()],
-                )
-            })
-            .collect();
-        Ok((net, router, pool, cache, plan, spare, t0.elapsed()))
+        Ok((pool, tenants, t0.elapsed()))
     })();
-    let (net, router, pool, cache, mut plan, mut spare, build_time) = match startup {
+    let (pool, mut tenants, build_time) = match startup {
         Ok(v) => v,
         Err(e) => {
             let msg = e.0.clone();
@@ -464,80 +763,108 @@ fn executor_loop(
             return Err(err(format!("startup failed: {msg}")));
         }
     };
-    let batch_size = plan.batch;
-    let image_elems = plan.image_elems();
-    let num_classes = plan.output_dims().chw();
-    let _ = ready.send(Ok((image_elems, num_classes)));
+    let infos: Vec<TenantInfo> = tenants
+        .iter()
+        .map(|t| TenantInfo {
+            name: t.name.clone(),
+            image_elems: t.image_elems,
+            num_classes: t.num_classes,
+        })
+        .collect();
+    let _ = ready.send(Ok(infos));
 
-    let mut batcher = Batcher::new(rx, cfg.batcher.clone());
+    let ntenants = tenants.len();
     let mut slots: VecDeque<Slot> = VecDeque::new();
     let mut open = true;
-    let mut nbatches = 0u64;
     let mut replans = 0u64;
-    // Telemetry anchor for the adaptive-tiling interval: per-job
-    // imbalance and steal rate are measured between replan checkpoints.
-    let mut tile_stats = pool.stats();
-
-    // Stage a formed batch into a free slot: copy the images into the
-    // slot's staging buffer (padded tail slots stay zero) and position
-    // the plan cursor before the first layer. Branch/merge plans
-    // (GoogLeNet) start the asynchronous DAG walk, so the module
-    // branches of this batch overlap as dependency-chained jobs on the
-    // shared pool; chain plans keep the sequential cursor.
-    let start_slot = |batch: Batch<InferRequest>,
-                          plan: &Arc<NetworkPlan>,
-                          spare: &mut Vec<(WorkspaceArena, Vec<f32>)>,
-                          slots: &mut VecDeque<Slot>| {
-        let (mut arena, mut input) = spare.pop().expect("slot arena available");
-        input.fill(0.0);
-        for (slot, req) in batch.items.iter().enumerate() {
-            let dst = slot * image_elems;
-            input[dst..dst + image_elems].copy_from_slice(&req.image);
-        }
-        metrics
-            .padded_slots
-            .fetch_add(batch.padding(batch_size) as u64, Ordering::Relaxed);
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        let cursor = if plan.supports_async() {
-            // SAFETY: the cursor is stored in the Slot *before* the
-            // arena (drop order joins jobs first), the slot's arena is
-            // never touched by another cursor while in flight, and
-            // retirement fully steps the cursor before the arena is
-            // recycled into `spare`.
-            SlotCursor::Dag(unsafe { plan.begin_run_async(Some(&input), &pool, &mut arena) })
-        } else {
-            SlotCursor::Seq(plan.begin_run(Some(&input), &pool, &mut arena))
-        };
-        slots.push_back(Slot {
-            batch,
-            plan: plan.clone(),
-            cursor,
-            arena,
-            input,
-            exec_started: Instant::now(),
-        });
-    };
+    // Round-robin anchor for fair cross-tenant intake.
+    let mut rr = 0usize;
+    let pressure_depth = cfg.router.pressure_queue_depth;
+    let pressure_slack = cfg.router.pressure_slack;
 
     loop {
-        // Intake. Idle: block for the next batch. Busy with spare
-        // capacity: take whatever the batcher has ready, without
-        // blocking — this is how batch N+1 enters the pipeline while
-        // batch N is mid-network.
-        if slots.is_empty() {
-            if !open {
-                break;
+        // Pressure evaluation: engage when admitted depth or any
+        // in-flight request's deadline slack crosses the configured
+        // thresholds; release when both clear. A transition flips every
+        // tenant's router and replans immediately (incrementally,
+        // through each tenant's cache) so the very next staged batch
+        // runs under the new routing regime.
+        if pressure_depth > 0 || pressure_slack > Duration::ZERO {
+            let qd = inflight.load(Ordering::Relaxed) as usize;
+            let mut want_pressure = pressure_depth > 0 && qd >= pressure_depth;
+            if !want_pressure && pressure_slack > Duration::ZERO {
+                let now = Instant::now();
+                want_pressure = slots.iter().any(|s| {
+                    s.batch.items.iter().any(|r| {
+                        r.deadline
+                            .is_some_and(|d| d.saturating_duration_since(now) < pressure_slack)
+                    })
+                });
             }
-            match batcher.next_batch() {
-                Some(b) => start_slot(b, &plan, &mut spare, &mut slots),
-                None => {
-                    open = false;
+            let was = tenants[0].router.set_pressure(want_pressure);
+            if was != want_pressure {
+                for t in tenants.iter_mut().skip(1) {
+                    t.router.set_pressure(want_pressure);
+                }
+                if want_pressure {
+                    metrics.pressure_enters.fetch_add(1, Ordering::Relaxed);
+                    metrics.pressure_mode.store(1, Ordering::Relaxed);
+                } else {
+                    metrics.pressure_exits.fetch_add(1, Ordering::Relaxed);
+                    metrics.pressure_mode.store(0, Ordering::Relaxed);
+                }
+                for t in tenants.iter_mut() {
+                    let want = desired_methods(&t.net, &t.router);
+                    if want != t.plan.conv_methods() {
+                        let t0 = Instant::now();
+                        let builds_before = t.cache.layer_builds();
+                        t.plan = Arc::new(build_plan(&t.cache, &t.net, batch_size, &want));
+                        t.methods = Arc::new(t.plan.conv_methods());
+                        metrics
+                            .replan_build_ns
+                            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        metrics
+                            .replan_layers_rebuilt
+                            .fetch_add(t.cache.layer_builds() - builds_before, Ordering::Relaxed);
+                        metrics.replans.fetch_add(1, Ordering::Relaxed);
+                        replans += 1;
+                    }
+                }
+            }
+        }
+
+        // Intake. Idle: block for the next batch (single tenant — the
+        // historical low-latency path) or poll all tenants with a short
+        // nap (multi-tenant; blocking on one tenant's channel would
+        // starve the others). Busy with spare capacity: the two-pass
+        // fair intake stages whatever is ready, without blocking —
+        // this is how batch N+1 enters the pipeline while batch N is
+        // mid-network.
+        if slots.is_empty() {
+            if ntenants == 1 {
+                if !open {
+                    break;
+                }
+                match tenants[0].batcher.next_batch() {
+                    Some(b) => start_slot(0, &mut tenants[0], b, &pool, &metrics, &mut slots),
+                    None => {
+                        open = false;
+                        continue;
+                    }
+                }
+            } else {
+                let staged =
+                    intake_batches(&mut tenants, &mut slots, depth, &mut rr, &pool, &metrics);
+                if !staged {
+                    if tenants.iter().all(|t| t.batcher.is_drained()) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_micros(100));
                     continue;
                 }
             }
-        } else if open && slots.len() < depth {
-            if let Some(b) = batcher.poll_batch() {
-                start_slot(b, &plan, &mut spare, &mut slots);
-            }
+        } else if slots.len() < depth {
+            let _ = intake_batches(&mut tenants, &mut slots, depth, &mut rr, &pool, &metrics);
         }
 
         // Advance every in-flight batch one step, oldest first: the
@@ -545,78 +872,101 @@ fn executor_loop(
         // interleave on the shared pool (and, for DAG plans, each
         // batch's own branches additionally overlap as async jobs).
         for slot in slots.iter_mut() {
-            advance_slot(slot, &pool, &router);
+            advance_slot(slot, &pool, &tenants[slot.tenant].router);
         }
 
         // Retire the oldest batch once every layer has run.
         if slots.front().is_some_and(slot_done) {
             let slot = slots.pop_front().unwrap();
-            retire_slot(slot, num_classes, &metrics, &pool, &mut spare);
+            let ti = slot.tenant;
+            let nc = tenants[ti].num_classes;
+            retire_slot(slot, nc, &metrics, &pool, &mut tenants[ti].spare, &inflight);
 
-            nbatches += 1;
-            if cfg.replan_every > 0 && nbatches % cfg.replan_every == 0 {
-                let want = desired_methods(&net, &router);
-                // Adaptive tiling: fold the interval's measured per-job
-                // imbalance and steal rate back into the tile policies
-                // of the layers the assignment routes to DirectSparse —
-                // a retile of a plan nothing executes must not force a
-                // replan. Changed layers' cached plans are invalidated,
-                // so a retile rides the same incremental rebuild below
-                // that a method flip does. The signal reads only
-                // kernel-origin jobs: the DAG walk's per-image plumbing
-                // jobs (pad/relu/concat) are untileable and would
-                // otherwise dilute the imbalance the retile can fix.
-                let mut retiled = 0usize;
-                if cfg.adaptive_tiling {
-                    let now = pool.stats();
-                    if let Some((imbalance, steal_rate)) =
-                        now.interval_kernel_tiling_signal(&tile_stats)
-                    {
-                        metrics
-                            .pool_job_imbalance_milli
-                            .store((imbalance * 1000.0) as u64, Ordering::Relaxed);
-                        let sparse_live: Vec<&str> = want
-                            .iter()
-                            .filter(|(_, m)| *m == Method::DirectSparse)
-                            .map(|(n, _)| n.as_str())
-                            .collect();
-                        retiled = cache.adapt_tile_policies_for(&sparse_live, imbalance, steal_rate);
-                        if retiled > 0 {
-                            metrics.retiles.fetch_add(1, Ordering::Relaxed);
+            tenants[ti].nbatches += 1;
+            if cfg.replan_every > 0 && tenants[ti].nbatches % cfg.replan_every == 0 {
+                let (want, retiled) = {
+                    let t = &mut tenants[ti];
+                    let want = desired_methods(&t.net, &t.router);
+                    // Adaptive tiling: fold the interval's measured
+                    // per-job imbalance and steal rate back into the
+                    // tile policies of the layers the assignment routes
+                    // to DirectSparse — a retile of a plan nothing
+                    // executes must not force a replan. Changed layers'
+                    // cached plans are invalidated, so a retile rides
+                    // the same incremental rebuild below that a method
+                    // flip does. The signal reads only kernel-origin
+                    // jobs: the DAG walk's per-image plumbing jobs
+                    // (pad/relu/concat) are untileable and would
+                    // otherwise dilute the imbalance the retile can
+                    // fix. (Multi-tenant note: the pool interval mixes
+                    // tenants' kernels; each tenant folds the shared
+                    // signal into its own policies at its own
+                    // checkpoint.)
+                    let mut retiled = 0usize;
+                    if cfg.adaptive_tiling {
+                        let now = pool.stats();
+                        if let Some((imbalance, steal_rate)) =
+                            now.interval_kernel_tiling_signal(&t.tile_stats)
+                        {
                             metrics
-                                .tile_target
-                                .store(cache.current_tile_target() as u64, Ordering::Relaxed);
+                                .pool_job_imbalance_milli
+                                .store((imbalance * 1000.0) as u64, Ordering::Relaxed);
+                            let sparse_live: Vec<&str> = want
+                                .iter()
+                                .filter(|(_, m)| *m == Method::DirectSparse)
+                                .map(|(n, _)| n.as_str())
+                                .collect();
+                            retiled =
+                                t.cache.adapt_tile_policies_for(&sparse_live, imbalance, steal_rate);
+                            if retiled > 0 {
+                                metrics.retiles.fetch_add(1, Ordering::Relaxed);
+                                metrics
+                                    .tile_target
+                                    .store(t.cache.current_tile_target() as u64, Ordering::Relaxed);
+                            }
                         }
+                        t.tile_stats = now;
                     }
-                    tile_stats = now;
-                }
-                if retiled > 0 || want != plan.conv_methods() {
+                    (want, retiled)
+                };
+                if retiled > 0 || want != tenants[ti].plan.conv_methods() {
                     if cfg.strict_replan {
-                        // Run the pipeline dry on the old plan before
+                        // Run the pipeline dry on the old plans before
                         // the new one exists: no two concurrently
                         // in-flight batches — and therefore no two
                         // interleaved responses — ever mix method
                         // assignments.
                         while let Some(mut slot) = slots.pop_front() {
                             while !slot_done(&slot) {
-                                advance_slot(&mut slot, &pool, &router);
+                                advance_slot(&mut slot, &pool, &tenants[slot.tenant].router);
                             }
-                            retire_slot(slot, num_classes, &metrics, &pool, &mut spare);
-                            nbatches += 1;
+                            let sti = slot.tenant;
+                            let snc = tenants[sti].num_classes;
+                            retire_slot(
+                                slot,
+                                snc,
+                                &metrics,
+                                &pool,
+                                &mut tenants[sti].spare,
+                                &inflight,
+                            );
+                            tenants[sti].nbatches += 1;
                         }
                     }
                     // Incremental rebuild: only flipped layers compile;
                     // a still-stepping slot keeps its old plan alive
                     // through its own Arc.
+                    let t = &mut tenants[ti];
                     let t0 = Instant::now();
-                    let builds_before = cache.layer_builds();
-                    plan = Arc::new(build_plan(&cache, &net, batch_size, &want));
+                    let builds_before = t.cache.layer_builds();
+                    t.plan = Arc::new(build_plan(&t.cache, &t.net, batch_size, &want));
+                    t.methods = Arc::new(t.plan.conv_methods());
                     metrics
                         .replan_build_ns
                         .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     metrics
                         .replan_layers_rebuilt
-                        .fetch_add(cache.layer_builds() - builds_before, Ordering::Relaxed);
+                        .fetch_add(t.cache.layer_builds() - builds_before, Ordering::Relaxed);
                     metrics.replans.fetch_add(1, Ordering::Relaxed);
                     replans += 1;
                 }

@@ -8,6 +8,9 @@
 //! prune <model> [sparsity]          sparsity statistics for a model
 //! infer [artifact]                  PJRT inference (needs `pjrt` feature)
 //! serve [n] [network] [--threads N] E2E serving run (plan executor)
+//! serve-load [n] [seed] [--threads N]
+//!                                   closed-loop Poisson load run against
+//!                                   a two-tenant server (SLO report)
 //! simulate [sparsity]               cache simulation of one layer
 //! figures [--quick|--figN...]       regenerate the paper's figures
 //! ```
@@ -16,7 +19,7 @@
 //! `ESCOIN_THREADS` env var, then available parallelism.
 //! (The offline toolchain has no clap; parsing is by hand.)
 
-use escoin::bench_harness::{table2_platforms, table3_rows};
+use escoin::bench_harness::{run_load, table2_platforms, table3_rows, LoadGenConfig};
 use escoin::config::network_by_name;
 use escoin::conv::ConvWeights;
 use escoin::coordinator::{BatcherConfig, Router, RouterConfig, ServerConfig, ServerHandle};
@@ -221,6 +224,58 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 s.pool_job_imbalance
             );
         }
+        Some("serve-load") => {
+            let mut rest: Vec<String> = args.drain(1..).collect();
+            let threads = take_threads(&mut rest);
+            let n: usize = rest.first().and_then(|v| v.parse().ok()).unwrap_or(256);
+            let seed: u64 = rest.get(1).and_then(|v| v.parse().ok()).unwrap_or(0x10AD);
+            let server = ServerHandle::start(ServerConfig {
+                network: "minicnn".into(),
+                tenants: vec!["microcnn".into()],
+                batcher: BatcherConfig {
+                    batch_size: 4,
+                    max_wait: Duration::from_millis(2),
+                },
+                max_queue_depth: 64,
+                weight_seed: 42,
+                threads,
+                router: RouterConfig {
+                    pressure_queue_depth: 32,
+                    ..RouterConfig::default()
+                },
+                ..Default::default()
+            })?;
+            let cfg = LoadGenConfig {
+                seed,
+                requests: n,
+                mean_interarrival: Duration::from_micros(300),
+                tenant_weights: vec![3, 1],
+                deadline: Some(Duration::from_millis(50)),
+                window: 16,
+            };
+            let report = run_load(&server, &cfg)?;
+            println!(
+                "{} submitted ({} admitted, {} rejected), {} completed in {:?}",
+                report.submitted, report.admitted, report.rejected, report.completed, report.wall
+            );
+            println!(
+                "latency p50 {:?} p99 {:?} mean {:?}; {:.1} req/s; \
+                 deadline hit rate {:.3} ({} hit / {} missed)",
+                report.p50,
+                report.p99,
+                report.mean,
+                report.throughput_rps,
+                report.deadline_hit_rate(),
+                report.deadline_hits,
+                report.deadline_misses
+            );
+            let m = server.metrics();
+            println!(
+                "server: {} batches, pressure entered {}x / exited {}x, rejected {}",
+                m.batches, m.pressure_enters, m.pressure_exits, m.rejected
+            );
+            server.shutdown()?;
+        }
         Some("simulate") | Some("figures") => {
             // Delegated to the examples to keep one implementation.
             eprintln!(
@@ -236,7 +291,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         _ => {
             eprintln!(
                 "escoin — sparse CNN inference (reproduction of Chen 2018)\n\
-                 usage: escoin <summary|prune|infer|serve|simulate|figures> [args]\n\
+                 usage: escoin <summary|prune|infer|serve|serve-load|simulate|figures> [args]\n\
                  see README.md"
             );
         }

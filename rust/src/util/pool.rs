@@ -26,10 +26,10 @@
 //! * [`WorkerPool::submit`] / [`WorkerPool::submit_after`] — the
 //!   asynchronous, dependency-aware path over a **borrowed** closure:
 //!   returns a [`JobTicket`] immediately; multiple jobs coexist on the
-//!   queue and workers drain them FIFO. `submit_after` chains a job
-//!   behind another ticket — its tiles are not claimed until the
-//!   dependency's handshake fires. See the doc examples on those
-//!   methods for a correct two-job chain.
+//!   queue and workers drain them in priority order (FIFO among equal
+//!   priorities). `submit_after` chains a job behind another ticket —
+//!   its tiles are not claimed until the dependency's handshake fires.
+//!   See the doc examples on those methods for a correct two-job chain.
 //! * [`WorkerPool::submit_owned`] — the asynchronous path over an
 //!   **owned** boxed closure with any number of dependencies, returning
 //!   a lifetime-free [`JobHandle`]. This is what the DAG network
@@ -37,6 +37,18 @@
 //!   layer of an inception module becomes a chain of owned jobs, and
 //!   the four branch chains overlap on the one pool while the concat
 //!   job waits on all of them.
+//! * [`WorkerPool::submit_owned_prioritized`] — `submit_owned` with an
+//!   explicit scheduling priority. When several jobs are runnable,
+//!   workers claim from the highest-priority one first (ties keep FIFO
+//!   order, so every unprioritized submission behaves exactly as
+//!   before). The DAG executor weights each step by its **critical
+//!   path** — the work remaining between the step and the network's
+//!   sink — so the longest inception/residual branch drains first and
+//!   the merge that waits on all branches is never held hostage to a
+//!   short branch scheduled late. Priorities only reorder *claiming*;
+//!   dependencies still gate runnability, and tiles still write
+//!   disjoint ranges, so results stay byte-identical at every pool
+//!   size.
 //!
 //! Scheduling is self-balancing: tiles are claimed from an atomic
 //! counter, so a worker that finishes its nominal share early keeps
@@ -163,6 +175,11 @@ struct Job {
     task: TaskRef,
     /// Which subsystem submitted this job (telemetry attribution).
     origin: JobOrigin,
+    /// Scheduling weight: among runnable jobs, workers claim from the
+    /// highest priority first (FIFO among equals — 0, the default,
+    /// reproduces the pre-priority queue exactly). The DAG executor
+    /// submits each step at its critical-path weight.
+    priority: u64,
     num_tiles: usize,
     /// Static block-partition share (`ceil(num_tiles / workers)`) used
     /// only for steal accounting: executing a tile outside your own
@@ -229,8 +246,11 @@ struct WorkerCounters {
     steals: AtomicU64,
 }
 
-/// The job queue: FIFO order doubles as priority, so an older batch's
-/// layer jobs drain before a pipelined successor's.
+/// The job queue. Workers claim from the highest-priority runnable job;
+/// among equal priorities FIFO order decides, so an older batch's layer
+/// jobs drain before a pipelined successor's at the same weight, and
+/// every unprioritized (priority-0) submission keeps the historical
+/// pure-FIFO schedule.
 struct Queue {
     jobs: VecDeque<Arc<Job>>,
     shutdown: bool,
@@ -444,7 +464,16 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
                 if q.shutdown {
                     return;
                 }
-                if let Some(j) = q.jobs.iter().find(|j| j.runnable()).cloned() {
+                // Highest-priority runnable job; the scan keeps the
+                // *first* of equal priorities, so priority-0 traffic
+                // retains the historical FIFO schedule exactly.
+                let mut best: Option<&Arc<Job>> = None;
+                for j in q.jobs.iter() {
+                    if j.runnable() && best.is_none_or(|b| j.priority > b.priority) {
+                        best = Some(j);
+                    }
+                }
+                if let Some(j) = best.cloned() {
                     break j;
                 }
                 q = shared.start.wait(q).unwrap();
@@ -995,8 +1024,9 @@ impl WorkerPool {
         // job; the reference is never dereferenced after completion.
         let erased: &'static (dyn Fn(usize, usize) + Sync) = std::mem::transmute(task);
         // Borrowed submissions are the kernels' blocking/ticketed path
-        // (`run`/`submit`/`submit_after`) — always kernel-origin.
-        let job = self.enqueue(num_tiles, TaskRef::Borrowed(erased), JobOrigin::Kernel, deps);
+        // (`run`/`submit`/`submit_after`) — always kernel-origin, at
+        // the default priority.
+        let job = self.enqueue(num_tiles, TaskRef::Borrowed(erased), JobOrigin::Kernel, 0, deps);
         JobTicket {
             pool: self,
             job,
@@ -1033,6 +1063,36 @@ impl WorkerPool {
         origin: JobOrigin,
         deps: &[&JobHandle],
     ) -> JobHandle {
+        self.submit_owned_prioritized(num_tiles, task, origin, 0, deps)
+    }
+
+    /// [`WorkerPool::submit_owned`] with an explicit scheduling
+    /// `priority`: when several queued jobs are runnable, workers claim
+    /// tiles from the highest-priority one first; equal priorities keep
+    /// FIFO order, so priority-0 submissions (every other surface)
+    /// behave exactly as before priorities existed.
+    ///
+    /// The DAG network executor submits each step at its
+    /// **critical-path weight** — the MAC-count of the longest
+    /// dependency chain from the step to the network's sink — so the
+    /// long branch of an inception module or a residual block drains
+    /// ahead of its lighter siblings and the merge job is released as
+    /// early as possible. Background sweeps (autotune) stay at priority
+    /// 0 and therefore always yield to serving traffic.
+    ///
+    /// Priorities reorder only *which runnable job is claimed next*:
+    /// dependency order is still enforced (a high-priority job blocked
+    /// on a low-priority prerequisite waits, and the prerequisite's
+    /// completion wakes the pool), and because tiles write disjoint
+    /// ranges, scheduling order never changes results byte-for-byte.
+    pub fn submit_owned_prioritized(
+        &self,
+        num_tiles: usize,
+        task: Box<dyn Fn(usize, usize) + Send + Sync>,
+        origin: JobOrigin,
+        priority: u64,
+        deps: &[&JobHandle],
+    ) -> JobHandle {
         for d in deps {
             debug_assert!(
                 Arc::ptr_eq(&self.shared, &d.shared),
@@ -1040,7 +1100,7 @@ impl WorkerPool {
             );
         }
         let deps: Vec<Arc<Job>> = deps.iter().map(|d| d.job.clone()).collect();
-        let job = self.enqueue(num_tiles, TaskRef::Owned(task), origin, deps);
+        let job = self.enqueue(num_tiles, TaskRef::Owned(task), origin, priority, deps);
         JobHandle {
             shared: self.shared.clone(),
             job,
@@ -1054,6 +1114,7 @@ impl WorkerPool {
         num_tiles: usize,
         task: TaskRef,
         origin: JobOrigin,
+        priority: u64,
         deps: Vec<Arc<Job>>,
     ) -> Arc<Job> {
         let sh = &self.shared;
@@ -1061,6 +1122,7 @@ impl WorkerPool {
         let job = Arc::new(Job {
             task,
             origin,
+            priority,
             num_tiles,
             share: num_tiles.div_ceil(sh.workers).max(1),
             next_tile: AtomicUsize::new(0),

@@ -278,6 +278,62 @@ fn server_replans_when_the_router_changes_its_mind() {
 }
 
 #[test]
+fn property_admission_accounting_under_bursty_arrivals() {
+    // Admission-control accounting: admitted + rejected == submitted
+    // attempts, rejections are surfaced as errors (never silently
+    // dropped), and a rejection never corrupts an in-flight pipeline
+    // slot — every admitted request still gets a full, finite logit
+    // vector.
+    let mut cfg = server_cfg(31);
+    cfg.max_queue_depth = 3;
+    cfg.batcher.max_wait = Duration::from_millis(1);
+    let server = ServerHandle::start(cfg).unwrap();
+    let elems = server.image_elems();
+    let classes = server.num_classes();
+    let mut rng = Rng::new(32);
+    let mut pending = Vec::new();
+    let mut rejected = 0u64;
+    let attempts = 120u64;
+    for burst in 0..attempts {
+        let img = rng.activation_vec(elems);
+        match server.submit(img) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => {
+                rejected += 1;
+                assert!(
+                    e.to_string().contains("rejected"),
+                    "rejection must be explicit: {e}"
+                );
+            }
+        }
+        // Periodically drain so both the admit and the reject path are
+        // exercised across several bursts.
+        if burst % 17 == 16 {
+            for rx in pending.drain(..) {
+                let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+                assert_eq!(resp.logits.len(), classes);
+                assert!(resp.logits.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+    for rx in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert_eq!(resp.logits.len(), classes);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+    }
+    let stats = server.shutdown().unwrap();
+    let s = &stats.snapshot;
+    // The executor answers in milliseconds while the bursts submit in
+    // microseconds, so a depth-3 bound must have rejected something.
+    assert!(rejected > 0, "burst never hit the admission bound");
+    assert_eq!(s.rejected, rejected);
+    assert_eq!(s.requests + s.rejected, attempts);
+    assert_eq!(s.responses, s.requests, "every admitted request answered");
+    assert_eq!(s.errors, 0);
+    assert_eq!(s.queue_depth, 0, "admission gauge must drain to zero");
+}
+
+#[test]
 fn property_ell_fixed_k_respects_manifest_contract() {
     use escoin::sparse::EllMatrix;
     let mut rng = Rng::new(11);

@@ -1,13 +1,21 @@
-//! Worker-pool runtime properties: tile accounting, telemetry, and the
+//! Worker-pool runtime properties: tile accounting, telemetry, the
 //! load-balance claim behind nnz-weighted tiling — one dense output
 //! channel among 95%-sparse channels must not turn into a straggler the
-//! way it does under the seed's equal-plane splitting.
+//! way it does under the seed's equal-plane splitting — and the
+//! critical-path priority queue: higher-priority runnable jobs dequeue
+//! first, priorities never override dependency order, and prioritized
+//! scheduling never changes bytes.
 
-use escoin::config::ConvShape;
-use escoin::conv::{direct_dense, ConvWeights, DirectSparsePlan, LayerPlan, Method, TilePolicy};
+use escoin::config::{miniception, ConvShape};
+use escoin::conv::{
+    direct_dense, ConvWeights, DirectSparsePlan, LayerPlan, Method, NetworkPlan, TilePolicy,
+    WorkspaceArena,
+};
 use escoin::tensor::{Dims4, Tensor4};
-use escoin::util::{Rng, WorkerPool};
+use escoin::util::{JobOrigin, Rng, WorkerPool};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Mutex;
 
 #[test]
 fn pool_executes_all_tiles_and_accounts_them() {
@@ -223,6 +231,108 @@ fn adaptive_retiling_from_telemetry_reduces_measured_imbalance() {
         "refined tiles still schedule unevenly ({fine_sim:.2})"
     );
     assert!(fine_sim < coarse_sim, "{fine_sim:.2} vs {coarse_sim:.2}");
+}
+
+/// Hold a pool with exactly one spawned worker (`new(2)`) inside a gate
+/// job, queue `jobs` behind it, release the gate, and return the labels
+/// in execution order. Because one worker drains the whole queue
+/// sequentially — and the submitting thread never helps until every
+/// label has been received — the received order *is* the dequeue order.
+fn dequeue_order(
+    jobs: &[(&'static str, u64, &[usize])], // (label, priority, dep indices)
+) -> Vec<&'static str> {
+    let pool = WorkerPool::new(2);
+    let (gate_tx, gate_rx) = channel::<()>();
+    let gate_rx = Mutex::new(gate_rx);
+    let (entered_tx, entered_rx) = channel::<()>();
+    let gate = pool.submit_owned(
+        1,
+        Box::new(move |_t, _w| {
+            entered_tx.send(()).unwrap();
+            gate_rx.lock().unwrap().recv().unwrap();
+        }),
+        JobOrigin::Dag,
+        &[],
+    );
+    // The worker is provably inside the gate tile: everything submitted
+    // from here queues behind it.
+    entered_rx.recv().unwrap();
+
+    let (label_tx, label_rx) = channel::<&'static str>();
+    let mut handles = Vec::new();
+    for (label, priority, deps) in jobs {
+        let tx = label_tx.clone();
+        let label = *label;
+        let handle = {
+            let dep_handles: Vec<_> = deps.iter().map(|&i| &handles[i]).collect();
+            pool.submit_owned_prioritized(
+                1,
+                Box::new(move |_t, _w| tx.send(label).unwrap()),
+                JobOrigin::Dag,
+                *priority,
+                &dep_handles,
+            )
+        };
+        handles.push(handle);
+    }
+    gate_tx.send(()).unwrap();
+    let order: Vec<&'static str> = (0..jobs.len()).map(|_| label_rx.recv().unwrap()).collect();
+    // All tiles have executed; joining the handles is now race-free.
+    for h in handles {
+        h.wait();
+    }
+    gate.wait();
+    order
+}
+
+/// The ISSUE's priority property: when several queued jobs are
+/// runnable, the highest priority dequeues first, and equal priorities
+/// keep their FIFO submission order.
+#[test]
+fn higher_priority_jobs_dequeue_before_lighter_siblings() {
+    let order = dequeue_order(&[
+        ("light-a", 0, &[]),
+        ("critical", 5, &[]),
+        ("light-b", 0, &[]),
+    ]);
+    assert_eq!(order, vec!["critical", "light-a", "light-b"]);
+}
+
+/// Priorities schedule among *runnable* jobs only: a high-priority job
+/// that depends on a low-priority prerequisite must wait for it, while
+/// an unrelated mid-priority job overtakes both.
+#[test]
+fn priorities_never_violate_dependency_order() {
+    let order = dequeue_order(&[
+        ("prereq", 0, &[]),
+        ("mid", 50, &[]),
+        ("wants-prereq", 100, &[0]),
+    ]);
+    assert_eq!(order, vec!["mid", "prereq", "wants-prereq"]);
+    // Sanity: flipping the dependency off restores pure priority order.
+    let order = dequeue_order(&[("prereq", 0, &[]), ("mid", 50, &[]), ("free", 100, &[])]);
+    assert_eq!(order, vec!["free", "mid", "prereq"]);
+}
+
+/// Critical-path-weighted DAG serving is pure scheduling: the async
+/// walk (whose jobs now carry critical-path priorities) must stay
+/// byte-identical to the sequential walk at every pool size.
+#[test]
+fn prioritized_dag_walk_is_byte_identical_across_pool_sizes() {
+    let net = miniception();
+    let plan = NetworkPlan::build(&net, 2, 42, |_, _| Method::DirectSparse);
+    let mut rng = Rng::new(91);
+    let img = rng.activation_vec(plan.input_dims().len());
+    let seq_pool = WorkerPool::new(1);
+    let mut seq_arena = WorkspaceArena::for_plan(&plan, &seq_pool);
+    let want = plan.run_with_input(&img, &seq_pool, &mut seq_arena).to_vec();
+    assert!(want.iter().any(|&v| v != 0.0), "vacuous all-zero oracle");
+    for threads in [1, 4, 8] {
+        let pool = WorkerPool::new(threads);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+        let got = plan.run_async(Some(&img), &pool, &mut arena).to_vec();
+        assert_eq!(got, want, "t{threads}: DAG walk diverged");
+    }
 }
 
 /// The skewed layer must also *compute* correctly through the pool at

@@ -41,9 +41,8 @@ fn fixed_plan_cfg_for(network: &str, pipeline_depth: usize, batch_size: usize) -
         },
         replan_every: 0,
         pipeline_depth,
-        strict_replan: false,
         adaptive_tiling: false,
-        autotune_policies: false,
+        ..Default::default()
     }
 }
 
@@ -162,7 +161,7 @@ fn strict_replan_drains_the_pipeline_and_answers_everything() {
         pipeline_depth: 2,
         strict_replan: true,
         adaptive_tiling: false,
-        autotune_policies: false,
+        ..Default::default()
     };
     let server = ServerHandle::start(cfg).unwrap();
     let mut rng = Rng::new(15);
@@ -252,9 +251,8 @@ fn server_replans_incrementally_under_router_churn() {
         },
         replan_every: 2,
         pipeline_depth: 2,
-        strict_replan: false,
         adaptive_tiling: false,
-        autotune_policies: false,
+        ..Default::default()
     };
     let server = ServerHandle::start(cfg).unwrap();
     let mut rng = Rng::new(14);
