@@ -22,6 +22,14 @@
 //!   `p50_ns`, `p99_ns`, `throughput_rps_milli`, `rejected`, and
 //!   `deadline_hit_milli`. Request count via `ESCOIN_LOADGEN_REQUESTS`
 //!   (default 64).
+//! * `serve-chaos-b1`/`b8` — the same closed-loop harness against a
+//!   single-tenant minicnn server with a seeded chaos plan (tile
+//!   panics, NaN poisons, a straggler) layered over it. Extended rows:
+//!   `p50_ns`, `p99_ns`, `failed`, `shed`, `recovery_ns`,
+//!   `deadline_hit_milli`. With `--features fault-inject` the faults
+//!   are armed and the supervised executor degrades gracefully;
+//!   without it the identical row is a clean run (`failed == 0`), so
+//!   the rows exist — and the schema holds — on every build.
 //! * `replan-full-vs-incremental` — ns per server replan: rebuilding
 //!   every layer from scratch (`free_ns`, weights regenerated +
 //!   re-transformed, what `build_plan` used to do) vs an incremental
@@ -96,7 +104,9 @@
 //! Knobs: `ESCOIN_THREADS`, `ESCOIN_BENCH_WARMUP`, `ESCOIN_BENCH_ITERS`,
 //! `ESCOIN_LOADGEN_REQUESTS`.
 
-use escoin::bench_harness::{bench_median, run_load, BenchOpts, LoadGenConfig};
+use escoin::bench_harness::{
+    bench_median, run_chaos, run_load, BenchOpts, ChaosConfig, LoadGenConfig,
+};
 use escoin::config::{alexnet, googlenet, mobilenetv1, resnet50, ConvShape, LayerKind};
 use escoin::conv::{
     lowered_gemm_parallel, lowered_spmm_parallel, sconv_parallel, ConvWeights, LayerPlan, Method,
@@ -132,6 +142,26 @@ struct LoadRow {
     p99_ns: u128,
     throughput_rps_milli: u128,
     rejected: u128,
+    deadline_hit_milli: u128,
+}
+
+/// A `serve-chaos-*` row: the base five keys (`free_ns`/`plan_ns`
+/// mirror p50/p99 again) plus the fault accounting of a chaos load run
+/// — failed/shed request counts, the wall-clock recovery gap after the
+/// first fault, and the deadline-hit rate under faults. Emitted on
+/// every build: without `--features fault-inject` the chaos plan is
+/// inert, so the row degrades to a clean load run with `failed == 0`.
+struct ChaosRow {
+    shape: &'static str,
+    method: &'static str,
+    batch: usize,
+    free_ns: u128,
+    plan_ns: u128,
+    p50_ns: u128,
+    p99_ns: u128,
+    failed: u128,
+    shed: u128,
+    recovery_ns: u128,
     deadline_hit_milli: u128,
 }
 
@@ -717,6 +747,80 @@ fn main() {
         }
     }
 
+    // Chaos serving: the same closed-loop harness with a seeded fault
+    // plan layered over it — tile panics and NaN poisons target
+    // specific serving batches, and the supervised executor degrades
+    // (safe-path retry, arena rebuild) instead of dying. With
+    // `--features fault-inject` the plan is armed and `failed`/
+    // `recovery_ns` measure degradation; without it the identical row
+    // is a clean run (failed == 0), so the schema holds on every leg.
+    let mut chaos_rows: Vec<ChaosRow> = Vec::new();
+    {
+        let requests: usize = std::env::var("ESCOIN_LOADGEN_REQUESTS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        for (b, label) in [(1usize, "serve-chaos-b1"), (8usize, "serve-chaos-b8")] {
+            let window = (4 * b).max(8);
+            let server = ServerHandle::start(ServerConfig {
+                network: "minicnn".into(),
+                batcher: BatcherConfig {
+                    batch_size: b,
+                    max_wait: Duration::from_millis(1),
+                },
+                threads,
+                router: RouterConfig {
+                    explore_every: 0,
+                    ..Default::default()
+                },
+                replan_every: 0,
+                adaptive_tiling: false,
+                ..Default::default()
+            })
+            .expect("server start");
+            let cfg = LoadGenConfig {
+                seed: 0xC4A0 + b as u64,
+                requests,
+                mean_interarrival: Duration::from_micros(200),
+                tenant_weights: Vec::new(),
+                deadline: Some(Duration::from_millis(250)),
+                window,
+            };
+            let chaos = ChaosConfig {
+                seed: 0xC4A0 + b as u64,
+                tile_panics: 2,
+                nan_poisons: 2,
+                straggle: Some((1, Duration::from_millis(2))),
+            };
+            let report = run_chaos(&server, &cfg, &chaos).expect("chaos run");
+            server.shutdown().expect("shutdown");
+            chaos_rows.push(ChaosRow {
+                shape: "minicnn_chaos",
+                method: label,
+                batch: b,
+                free_ns: report.p50.as_nanos().max(1),
+                plan_ns: report.p99.as_nanos().max(1),
+                p50_ns: report.p50.as_nanos().max(1),
+                p99_ns: report.p99.as_nanos().max(1),
+                failed: report.failed as u128,
+                shed: report.shed as u128,
+                recovery_ns: report.recovery.as_nanos(),
+                deadline_hit_milli: (report.deadline_hit_rate() * 1000.0).round() as u128,
+            });
+            println!(
+                "{label}: {} completed / {} failed / {} shed, p50 {:?} p99 {:?}, \
+                 recovery {:?}, deadline hit rate {:.3}",
+                report.completed,
+                report.failed,
+                report.shed,
+                report.p50,
+                report.p99,
+                report.recovery,
+                report.deadline_hit_rate()
+            );
+        }
+    }
+
     // DAG-vs-sequential walk on GoogLeNet: the async branch-overlap
     // executor against the sequential topological walk, same compiled
     // plan, same shared pool — what the inception modules' 4-way
@@ -901,6 +1005,24 @@ fn main() {
             r.deadline_hit_milli
         )
     }));
+    entries.extend(chaos_rows.iter().map(|r| {
+        format!(
+            "    {{\"shape\": \"{}\", \"method\": \"{}\", \"batch\": {}, \
+             \"free_ns\": {}, \"plan_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \
+             \"failed\": {}, \"shed\": {}, \"recovery_ns\": {}, \"deadline_hit_milli\": {}}}",
+            r.shape,
+            r.method,
+            r.batch,
+            r.free_ns,
+            r.plan_ns,
+            r.p50_ns,
+            r.p99_ns,
+            r.failed,
+            r.shed,
+            r.recovery_ns,
+            r.deadline_hit_milli
+        )
+    }));
     json.push_str(&entries.join(",\n"));
     json.push_str("\n  ]\n}\n");
     std::fs::write(&out_path, &json).expect("write BENCH_sconv.json");
@@ -962,7 +1084,7 @@ fn serve_wall(
         std::thread::sleep(pace);
     }
     for rx in pending {
-        rx.recv().expect("response");
+        rx.recv().expect("response channel").expect("response");
     }
     let wall = t0.elapsed();
     server.shutdown().expect("shutdown");

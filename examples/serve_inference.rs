@@ -62,7 +62,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     let mut latencies = Vec::with_capacity(total);
     for rx in pending {
-        let resp = rx.recv()?;
+        let resp = rx.recv()??;
         latencies.push(resp.latency.as_secs_f64() * 1e3);
     }
     let wall = t_run.elapsed();

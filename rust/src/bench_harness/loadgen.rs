@@ -22,17 +22,25 @@
 //!   throughput, admission rejections, deadline hit/miss counts, and a
 //!   per-request method trace for determinism tests.
 //!
+//! * **Chaos scenarios.** [`run_chaos`] layers a seeded [`ChaosConfig`]
+//!   (tile panics, NaN poisons, stragglers) over a load run via
+//!   [`crate::util::fault`], and the report gains fault accounting:
+//!   `failed`/`shed` counts and the wall-clock `recovery` gap between
+//!   the first failure and the next successful response. Without
+//!   `--features fault-inject` the scenario is inert and `run_chaos`
+//!   degrades to a plain [`run_load`], so the `serve-chaos-*` bench
+//!   rows exist on every build.
+//!
 //! `perf_probe` drives this against a two-tenant server to emit the
-//! `serve-load-*` rows of `BENCH_sconv.json`; `tests/serve_load.rs`
-//! replays fixed seeds to pin determinism, tenant isolation, and
-//! pressure-mode routing.
+//! `serve-load-*` and `serve-chaos-*` rows of `BENCH_sconv.json`;
+//! `tests/serve_load.rs` replays fixed seeds to pin determinism, tenant
+//! isolation, and pressure-mode routing.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{InferResponse, Method, ServerError, ServerHandle};
+use crate::coordinator::{Method, ResponseReceiver, ServerError, ServerHandle};
 use crate::util::Rng;
 
 /// Parameters of one load-generation run. All randomness derives from
@@ -131,6 +139,19 @@ pub struct LoadReport {
     pub rejected: usize,
     /// Admitted requests whose response arrived.
     pub completed: usize,
+    /// Admitted requests answered with a typed fault error
+    /// ([`ServerError::Faulted`] / [`ServerError::ExecutorGone`]); the
+    /// safe-path retry keeps this at zero unless retries are disabled
+    /// or fail too.
+    pub failed: usize,
+    /// Admitted requests shed at batch formation because their deadline
+    /// expired before execution ([`ServerError::DeadlineExpired`]).
+    pub shed: usize,
+    /// Wall-clock gap between the first failed response and the next
+    /// successful completion — how quickly the server resumed serving
+    /// after a fault. Zero when nothing failed, or nothing completed
+    /// afterwards.
+    pub recovery: Duration,
     /// Median server-side latency (queueing + service).
     pub p50: Duration,
     /// 99th-percentile server-side latency (exact, from sorted samples).
@@ -168,7 +189,7 @@ struct InFlight {
     index: usize,
     tenant: usize,
     deadline: Option<Instant>,
-    rx: Receiver<InferResponse>,
+    rx: ResponseReceiver,
 }
 
 /// Drive `server` with the traffic described by `cfg` and collect a
@@ -178,8 +199,9 @@ struct InFlight {
 /// clock (sleeping through idle gaps) but the closed-loop `window`
 /// bounds outstanding requests — under saturation the generator blocks
 /// on the oldest response, which is exactly the backpressure a
-/// well-behaved client applies. Admission rejections are counted, not
-/// retried. Errors other than rejection abort the run.
+/// well-behaved client applies. Admission rejections, typed per-request
+/// faults, and deadline sheds are counted, not retried; only transport
+/// breakage (a dropped response channel) aborts the run.
 pub fn run_load(server: &ServerHandle, cfg: &LoadGenConfig) -> Result<LoadReport, ServerError> {
     let arrivals = schedule(cfg);
     let start = Instant::now();
@@ -189,6 +211,9 @@ pub fn run_load(server: &ServerHandle, cfg: &LoadGenConfig) -> Result<LoadReport
         admitted: 0,
         rejected: 0,
         completed: 0,
+        failed: 0,
+        shed: 0,
+        recovery: Duration::ZERO,
         p50: Duration::ZERO,
         p99: Duration::ZERO,
         mean: Duration::ZERO,
@@ -199,28 +224,46 @@ pub fn run_load(server: &ServerHandle, cfg: &LoadGenConfig) -> Result<LoadReport
         method_trace: Vec::new(),
     };
     let mut latencies: Vec<Duration> = Vec::with_capacity(arrivals.len());
-    let retire = |f: InFlight, report: &mut LoadReport, latencies: &mut Vec<Duration>| {
-        let resp = f
-            .rx
-            .recv()
-            .map_err(|_| ServerError("loadgen: server dropped a response channel".into()))?;
-        if let Some(d) = f.deadline {
-            if Instant::now() <= d {
-                report.deadline_hits += 1;
-            } else {
-                report.deadline_misses += 1;
+    let mut first_failure: Option<Instant> = None;
+    let retire = |f: InFlight,
+                  report: &mut LoadReport,
+                  latencies: &mut Vec<Duration>,
+                  first_failure: &mut Option<Instant>|
+     -> Result<(), ServerError> {
+        let outcome = f.rx.recv().map_err(|_| {
+            ServerError::Invalid("loadgen: server dropped a response channel".into())
+        })?;
+        match outcome {
+            Ok(resp) => {
+                if let Some(d) = f.deadline {
+                    if Instant::now() <= d {
+                        report.deadline_hits += 1;
+                    } else {
+                        report.deadline_misses += 1;
+                    }
+                }
+                latencies.push(resp.latency);
+                report.completed += 1;
+                if let Some(at) = *first_failure {
+                    if report.recovery == Duration::ZERO {
+                        report.recovery = at.elapsed();
+                    }
+                }
+                report.method_trace.push((f.index, f.tenant, resp.methods));
+            }
+            Err(ServerError::DeadlineExpired) => report.shed += 1,
+            Err(_) => {
+                report.failed += 1;
+                first_failure.get_or_insert_with(Instant::now);
             }
         }
-        latencies.push(resp.latency);
-        report.completed += 1;
-        report.method_trace.push((f.index, f.tenant, resp.methods));
-        Ok::<(), ServerError>(())
+        Ok(())
     };
     for (index, a) in arrivals.iter().enumerate() {
         // Closed loop: cap outstanding before taking the next arrival.
         while cfg.window > 0 && inflight.len() >= cfg.window {
             let oldest = inflight.pop_front().expect("non-empty window");
-            retire(oldest, &mut report, &mut latencies)?;
+            retire(oldest, &mut report, &mut latencies, &mut first_failure)?;
         }
         let target = start + a.at;
         let now = Instant::now();
@@ -240,12 +283,12 @@ pub fn run_load(server: &ServerHandle, cfg: &LoadGenConfig) -> Result<LoadReport
                     rx,
                 });
             }
-            Err(e) if e.0.contains("rejected") => report.rejected += 1,
+            Err(ServerError::QueueFull { .. }) => report.rejected += 1,
             Err(e) => return Err(e),
         }
     }
     while let Some(f) = inflight.pop_front() {
-        retire(f, &mut report, &mut latencies)?;
+        retire(f, &mut report, &mut latencies, &mut first_failure)?;
     }
     report.wall = start.elapsed();
     if !latencies.is_empty() {
@@ -260,6 +303,94 @@ pub fn run_load(server: &ServerHandle, cfg: &LoadGenConfig) -> Result<LoadReport
     // order so equal-seed runs compare trace-for-trace.
     report.method_trace.sort_by_key(|(i, _, _)| *i);
     Ok(report)
+}
+
+/// A seeded chaos scenario layered over a load run. Fault *targets* are
+/// serving batch sequence numbers (the fault context id — first batch is
+/// 1), drawn deterministically from `seed`, so the same config plants
+/// the same faults on every run. Only armed under
+/// `--features fault-inject`; otherwise [`run_chaos`] is [`run_load`].
+#[derive(Clone, Debug, Default)]
+pub struct ChaosConfig {
+    /// Seed for picking which serving batches are targeted.
+    pub seed: u64,
+    /// One-shot tile panics to plant (each targets a distinct batch).
+    pub tile_panics: usize,
+    /// One-shot NaN output poisons to plant (distinct batches; exercises
+    /// the finite-check + safe-path retry).
+    pub nan_poisons: usize,
+    /// Straggler injections: `(count, delay)` — each delays one tile of
+    /// a distinct batch (perturbs timing, never correctness).
+    pub straggle: Option<(usize, Duration)>,
+}
+
+/// [`run_load`] under an installed fault plan built from `chaos`.
+///
+/// Installs the plan, runs the load, then clears the plan (also on
+/// error). Distinct target batches are drawn without replacement from
+/// `1..=max(requests, targets)`; with batch size 1 every request is its
+/// own batch, so targets map 1:1 onto arrivals. Without the
+/// `fault-inject` feature the chaos config is ignored.
+pub fn run_chaos(
+    server: &ServerHandle,
+    cfg: &LoadGenConfig,
+    chaos: &ChaosConfig,
+) -> Result<LoadReport, ServerError> {
+    #[cfg(feature = "fault-inject")]
+    {
+        use crate::util::fault::{self, FaultKind, FaultPlan, FaultSpec};
+        let straggles = chaos.straggle.map_or(0, |(n, _)| n);
+        let total = chaos.tile_panics + chaos.nan_poisons + straggles;
+        let mut ctxs = Vec::with_capacity(total);
+        if total > 0 {
+            let hi = cfg.requests.max(total) as u64;
+            let mut rng = Rng::new(chaos.seed ^ 0xC4A0_5EED);
+            let mut seen = std::collections::HashSet::new();
+            while ctxs.len() < total {
+                let c = rng.next_u64() % hi + 1;
+                if seen.insert(c) {
+                    ctxs.push(c);
+                }
+            }
+        }
+        let mut it = ctxs.into_iter();
+        let mut specs = Vec::with_capacity(total);
+        for _ in 0..chaos.tile_panics {
+            specs.push(FaultSpec {
+                site: fault::SITE_POOL_TILE,
+                ctx: it.next(),
+                kind: FaultKind::TilePanic,
+                sticky: false,
+            });
+        }
+        for _ in 0..chaos.nan_poisons {
+            specs.push(FaultSpec {
+                site: fault::SITE_SCONV_TILE,
+                ctx: it.next(),
+                kind: FaultKind::PoisonNan,
+                sticky: false,
+            });
+        }
+        if let Some((_, delay)) = chaos.straggle {
+            for _ in 0..straggles {
+                specs.push(FaultSpec {
+                    site: fault::SITE_POOL_TILE,
+                    ctx: it.next(),
+                    kind: FaultKind::Straggle(delay),
+                    sticky: false,
+                });
+            }
+        }
+        fault::install(FaultPlan::new(chaos.seed, specs));
+        let out = run_load(server, cfg);
+        fault::clear();
+        out
+    }
+    #[cfg(not(feature = "fault-inject"))]
+    {
+        let _ = chaos;
+        run_load(server, cfg)
+    }
 }
 
 #[cfg(test)]
@@ -330,6 +461,9 @@ mod tests {
             admitted: 0,
             rejected: 0,
             completed: 0,
+            failed: 0,
+            shed: 0,
+            recovery: Duration::ZERO,
             p50: Duration::ZERO,
             p99: Duration::ZERO,
             mean: Duration::ZERO,

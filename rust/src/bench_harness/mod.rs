@@ -32,7 +32,7 @@ pub use fig10::{fig10_cache_rates, Fig10Row};
 pub use fig11::{fig11_overall, Fig11Row};
 pub use fig8::{fig8_sparse_conv, Fig8Row};
 pub use fig9::{fig9_breakdown, Fig9Row};
-pub use loadgen::{run_load, schedule, Arrival, LoadGenConfig, LoadReport};
+pub use loadgen::{run_chaos, run_load, schedule, Arrival, ChaosConfig, LoadGenConfig, LoadReport};
 pub use platform::{table2_platforms, Testbed};
 pub use report::{markdown_table, Table};
 pub use table3::table3_rows;

@@ -110,9 +110,17 @@ fn lap<T>(sw: &mut Option<Stopwatch>, name: &str, f: impl FnOnce() -> T) -> T {
 /// Elementwise ReLU over one activation block — the ONE body shared by
 /// the chain walk, the sequential DAG walk, and the async per-image
 /// jobs, so every walk runs identical arithmetic by construction.
+///
+/// Written as a comparison rather than `f32::max(0.0)`: `max` returns
+/// the non-NaN operand, which would silently launder a NaN produced by
+/// an upstream kernel into `0.0` before the serving layer's finite
+/// check could see it. The comparison clamps exactly the same values
+/// (anything `< 0.0`) and lets NaN propagate to the logits.
 fn relu_in_place(xs: &mut [f32]) {
     for v in xs {
-        *v = v.max(0.0);
+        if *v < 0.0 {
+            *v = 0.0;
+        }
     }
 }
 

@@ -1200,6 +1200,19 @@ pub(crate) unsafe fn sconv_tile(
             m += mls;
         }
     }
+
+    // Fault injection (compiled out by default): a planned PoisonNan at
+    // the sconv site overwrites this tile's finished output planes —
+    // after the kernels, outside every inner loop, so the hot path gains
+    // no branches without the feature.
+    #[cfg(feature = "fault-inject")]
+    if crate::util::fault::should_poison(crate::util::fault::SITE_SCONV_TILE) {
+        let (lo, hi) = (tiles[ct].start, tiles[ct].end);
+        // SAFETY: same carve as the kernels above — channels `lo..hi` of
+        // image `n` are contiguous planes owned by this tile.
+        let planes = unsafe { out_sh.slice_mut((n * shape.m + lo) * ef, (hi - lo) * ef) };
+        planes.fill(f32::NAN);
+    }
 }
 
 /// Direct sparse convolution, sequential. `banks` must come from

@@ -198,6 +198,27 @@ impl<T> Batcher<T> {
         !self.pending.is_empty()
     }
 
+    /// Failure-path drain: every received-but-unemitted item plus
+    /// whatever is still sitting in the channel right now, in arrival
+    /// order. The executor's supervision uses this when it dies with
+    /// requests in flight, so every admitted request can be answered
+    /// (with an error) and its admission slot released.
+    pub fn drain_all(&mut self) -> Vec<T> {
+        let mut items = std::mem::take(&mut self.pending);
+        self.first_at = None;
+        loop {
+            match self.rx.try_recv() {
+                Ok(item) => items.push(item),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.closed = true;
+                    break;
+                }
+            }
+        }
+        items
+    }
+
     /// Whether intake is finished for good: the sender side is gone and
     /// every received item has been emitted. The multi-tenant server
     /// uses this to retire a tenant's intake during shutdown.

@@ -106,6 +106,21 @@ pub struct Metrics {
     /// Requests refused by admission control (`max_queue_depth` hit).
     /// Rejections are counted, never silently dropped.
     pub rejected: AtomicU64,
+    /// Admitted requests shed at batch formation because their deadline
+    /// had already expired (answered with
+    /// [`crate::coordinator::ServerError::DeadlineExpired`], never
+    /// occupying an execution slot).
+    pub deadline_shed: AtomicU64,
+    /// Times the supervisor tore down and rebuilt a serving slot after
+    /// a panic or non-finite logits (see `coordinator::server` module
+    /// docs, "Supervision & graceful degradation").
+    pub executor_restarts: AtomicU64,
+    /// (layer, method) pairs newly quarantined by the router's circuit
+    /// breaker.
+    pub method_quarantines: AtomicU64,
+    /// Quarantined (layer, method) pairs reinstated after their
+    /// cooldown lapsed.
+    pub method_reinstates: AtomicU64,
     /// Responses delivered at or before their request's deadline.
     pub deadline_hits: AtomicU64,
     /// Responses delivered after their request's deadline.
@@ -170,6 +185,15 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     /// Requests refused by admission control.
     pub rejected: u64,
+    /// Admitted requests shed at batch formation (deadline already
+    /// expired).
+    pub deadline_shed: u64,
+    /// Slot teardown/rebuild events after panics or non-finite logits.
+    pub executor_restarts: u64,
+    /// (layer, method) pairs newly quarantined by the circuit breaker.
+    pub method_quarantines: u64,
+    /// Quarantined pairs reinstated after cooldown.
+    pub method_reinstates: u64,
     /// Responses delivered within their deadline.
     pub deadline_hits: u64,
     /// Responses delivered after their deadline.
@@ -242,6 +266,10 @@ impl Metrics {
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            deadline_shed: self.deadline_shed.load(Ordering::Relaxed),
+            executor_restarts: self.executor_restarts.load(Ordering::Relaxed),
+            method_quarantines: self.method_quarantines.load(Ordering::Relaxed),
+            method_reinstates: self.method_reinstates.load(Ordering::Relaxed),
             deadline_hits: self.deadline_hits.load(Ordering::Relaxed),
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
             pressure_enters: self.pressure_enters.load(Ordering::Relaxed),
@@ -366,6 +394,23 @@ mod tests {
         assert_eq!(s.deadline_hits, 8);
         assert_eq!(s.deadline_misses, 2);
         assert_eq!(s.queue_depth, 5);
+    }
+
+    #[test]
+    fn fault_gauges_surface_in_snapshot() {
+        let m = Metrics::new();
+        let s0 = m.snapshot();
+        assert_eq!(s0.deadline_shed, 0);
+        assert_eq!(s0.executor_restarts, 0);
+        m.deadline_shed.store(2, Ordering::Relaxed);
+        m.executor_restarts.store(1, Ordering::Relaxed);
+        m.method_quarantines.store(3, Ordering::Relaxed);
+        m.method_reinstates.store(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.deadline_shed, 2);
+        assert_eq!(s.executor_restarts, 1);
+        assert_eq!(s.method_quarantines, 3);
+        assert_eq!(s.method_reinstates, 2);
     }
 
     #[test]

@@ -39,5 +39,6 @@ pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
 pub use router::{Method, Router, RouterConfig};
 pub use scheduler::{LayerTiming, NetworkSchedule, ScheduleReport};
 pub use server::{
-    InferRequest, InferResponse, ServerConfig, ServerError, ServerHandle, ServerStats,
+    InferRequest, InferResponse, ResponseReceiver, ServerConfig, ServerError, ServerHandle,
+    ServerStats,
 };

@@ -20,6 +20,20 @@
 //!    cheapest-modelled-work method ([`Router::cheapest`]) until the
 //!    backlog drains. Cheapest never explores and reads no EWMA state,
 //!    so the method trace under saturation is reproducible.
+//! 4. A per-(layer, method) **circuit breaker** for faults: the serving
+//!    loop charges every pair of a faulted plan via
+//!    [`Router::record_faults`] and clears counts on healthy retires
+//!    via [`Router::record_successes`]. A pair that faults
+//!    [`RouterConfig::quarantine_after`] times consecutively is
+//!    **quarantined** — excluded from every selection path (choose,
+//!    exploration, pressure-cheapest) — for
+//!    [`RouterConfig::quarantine_cooldown`] router decisions, doubling
+//!    per re-trip (exponential backoff, capped at 16× the base).
+//!    Cooldowns are measured in decisions, not wall time, so breaker
+//!    behaviour replays deterministically in tests. Expired
+//!    quarantines lapse at the next non-pressure `choose`; if every
+//!    candidate of a layer is quarantined the full set is used (the
+//!    layer must still be served somehow).
 
 use crate::config::ConvShape;
 use crate::conv::winograd_applicable;
@@ -54,6 +68,14 @@ pub struct RouterConfig {
     /// flips to cheapest-method routing. `Duration::ZERO` disables the
     /// slack trigger (the default).
     pub pressure_slack: Duration,
+    /// Consecutive fault reports ([`Router::record_faults`]) that trip
+    /// a (layer, method) pair's circuit breaker into quarantine. `0`
+    /// disables the breaker entirely.
+    pub quarantine_after: u32,
+    /// Base quarantine cooldown, in **router decisions** (not wall
+    /// time — deterministic under test). Doubles on every re-trip of
+    /// the same pair, capped at 16× this base.
+    pub quarantine_cooldown: u64,
 }
 
 impl Default for RouterConfig {
@@ -65,6 +87,8 @@ impl Default for RouterConfig {
             enable_winograd: false,
             pressure_queue_depth: 0,
             pressure_slack: Duration::ZERO,
+            quarantine_after: 3,
+            quarantine_cooldown: 64,
         }
     }
 }
@@ -82,6 +106,25 @@ struct RouterState {
     /// EWMA latency per (layer, method), seconds.
     ewma: HashMap<(String, Method), f64>,
     decisions: u64,
+    /// Circuit-breaker state per (layer, method) pair.
+    breaker: HashMap<(String, Method), Breaker>,
+    /// Quarantines that lapsed since the last
+    /// [`Router::take_reinstates`] — drained by the serving loop into
+    /// the `method_reinstates` counter.
+    reinstates_pending: u64,
+}
+
+/// Per-(layer, method) circuit-breaker state.
+#[derive(Default)]
+struct Breaker {
+    /// Consecutive fault reports since the last success/reinstatement.
+    faults: u32,
+    /// `Some(d)`: quarantined until the router's decision counter
+    /// reaches `d`.
+    until: Option<u64>,
+    /// Times this pair has been quarantined — drives the exponential
+    /// cooldown backoff.
+    trips: u32,
 }
 
 impl Router {
@@ -119,6 +162,12 @@ impl Router {
     /// exploration, first candidate wins ties — so the under-pressure
     /// method trace is reproducible from the shape alone.
     pub fn cheapest(&self, shape: &ConvShape) -> Method {
+        Self::cheapest_of(shape, &self.candidates(shape))
+    }
+
+    /// [`cheapest`](Self::cheapest) restricted to an explicit candidate
+    /// set (the breaker-filtered selection paths use this).
+    fn cheapest_of(shape: &ConvShape, cands: &[Method]) -> Method {
         let (rows, cols) = shape.lowered_dims();
         let lowered_elems = rows * cols * shape.groups;
         let cost = |m: Method| -> usize {
@@ -132,7 +181,6 @@ impl Router {
                 Method::Winograd => shape.macs(1),
             }
         };
-        let cands = self.candidates(shape);
         let mut best = cands[0];
         let mut best_cost = cost(best);
         for &m in &cands[1..] {
@@ -177,15 +225,24 @@ impl Router {
     /// bypassed for the deterministic [`cheapest`](Self::cheapest)
     /// method, and the decision does not advance the exploration
     /// counter (so releasing pressure resumes the exact pre-pressure
-    /// schedule).
+    /// schedule). Every path filters its candidates through the
+    /// circuit breaker (module docs item 4): quarantined pairs are
+    /// skipped unless the whole candidate set is quarantined.
     pub fn choose(&self, layer: &str, shape: &ConvShape) -> Method {
+        let cands = self.candidates(shape);
         if self.under_pressure() {
-            return self.cheapest(shape);
+            // Pressure decisions do not advance the counter, so no
+            // quarantine is reaped here; `allowed` still treats an
+            // expired entry as usable.
+            let st = self.state.lock().unwrap();
+            let allowed = self.allowed(&st, layer, &cands);
+            return Self::cheapest_of(shape, &allowed);
         }
         let mut st = self.state.lock().unwrap();
         st.decisions += 1;
-        let cands = self.candidates(shape);
-        let mut measured: Vec<(Method, f64)> = cands
+        Self::reap(&mut st);
+        let allowed = self.allowed(&st, layer, &cands);
+        let mut measured: Vec<(Method, f64)> = allowed
             .iter()
             .filter_map(|m| {
                 st.ewma
@@ -196,7 +253,7 @@ impl Router {
         // Exploration: revisit an unmeasured or runner-up method so a
         // changing workload cannot pin us to a stale winner.
         if self.cfg.explore_every > 0 && st.decisions % self.cfg.explore_every == 0 {
-            if let Some(unmeasured) = cands
+            if let Some(unmeasured) = allowed
                 .iter()
                 .find(|m| !st.ewma.contains_key(&(layer.to_string(), **m)))
             {
@@ -208,13 +265,123 @@ impl Router {
             }
         }
         if measured.is_empty() {
-            return self.static_choice(shape);
+            let s = self.static_choice(shape);
+            return if allowed.contains(&s) {
+                s
+            } else {
+                Self::cheapest_of(shape, &allowed)
+            };
         }
         measured
             .into_iter()
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
             .unwrap()
             .0
+    }
+
+    /// Charge a fault against every (layer, method) pair of a faulted
+    /// plan. A pair that reaches
+    /// [`quarantine_after`](RouterConfig::quarantine_after) consecutive
+    /// faults trips into quarantine for
+    /// [`quarantine_cooldown`](RouterConfig::quarantine_cooldown)
+    /// decisions (doubling per re-trip, capped at 16x). Returns how
+    /// many pairs were **newly** quarantined by this call, for the
+    /// serving loop's `method_quarantines` counter.
+    pub fn record_faults(&self, pairs: &[(String, Method)]) -> u64 {
+        if self.cfg.quarantine_after == 0 {
+            return 0;
+        }
+        let mut st = self.state.lock().unwrap();
+        let now = st.decisions;
+        let mut newly = 0;
+        for pair in pairs {
+            let b = st.breaker.entry(pair.clone()).or_default();
+            b.faults = b.faults.saturating_add(1);
+            if b.until.is_none() && b.faults >= self.cfg.quarantine_after {
+                let cooldown = self
+                    .cfg
+                    .quarantine_cooldown
+                    .saturating_mul(1 << b.trips.min(4));
+                b.trips = b.trips.saturating_add(1);
+                b.until = Some(now + cooldown);
+                newly += 1;
+            }
+        }
+        newly
+    }
+
+    /// Clear the consecutive-fault count for every pair of a healthily
+    /// retired plan, so only *repeatedly* faulting pairs quarantine.
+    /// Pairs currently in quarantine keep their state (they are not in
+    /// the serving plan, so a success cannot vouch for them).
+    pub fn record_successes(&self, pairs: &[(String, Method)]) {
+        if self.cfg.quarantine_after == 0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        for pair in pairs {
+            if let Some(b) = st.breaker.get_mut(pair) {
+                if b.until.is_none() {
+                    b.faults = 0;
+                }
+            }
+        }
+    }
+
+    /// Whether (layer, method) is currently quarantined (tripped and
+    /// its cooldown has not yet expired).
+    pub fn quarantined(&self, layer: &str, method: Method) -> bool {
+        let st = self.state.lock().unwrap();
+        let now = st.decisions;
+        st.breaker
+            .get(&(layer.to_string(), method))
+            .and_then(|b| b.until)
+            .is_some_and(|d| d > now)
+    }
+
+    /// Drain the count of quarantines that lapsed since the last call
+    /// (the serving loop folds this into its `method_reinstates`
+    /// counter).
+    pub fn take_reinstates(&self) -> u64 {
+        std::mem::take(&mut self.state.lock().unwrap().reinstates_pending)
+    }
+
+    /// Lapse every quarantine whose cooldown has expired at the current
+    /// decision count, resetting its fault streak and queueing a
+    /// reinstatement for [`take_reinstates`](Self::take_reinstates).
+    fn reap(st: &mut RouterState) {
+        let now = st.decisions;
+        for b in st.breaker.values_mut() {
+            if b.until.is_some_and(|d| d <= now) {
+                b.until = None;
+                b.faults = 0;
+                st.reinstates_pending += 1;
+            }
+        }
+    }
+
+    /// `cands` minus quarantined pairs. Falls back to the full set when
+    /// everything is quarantined — the layer must still be served.
+    fn allowed(&self, st: &RouterState, layer: &str, cands: &[Method]) -> Vec<Method> {
+        if self.cfg.quarantine_after == 0 {
+            return cands.to_vec();
+        }
+        let now = st.decisions;
+        let ok: Vec<Method> = cands
+            .iter()
+            .copied()
+            .filter(|m| {
+                st.breaker
+                    .get(&(layer.to_string(), *m))
+                    .and_then(|b| b.until)
+                    .is_none_or(|d| d <= now)
+            })
+            .collect();
+        if ok.is_empty() {
+            cands.to_vec()
+        } else {
+            ok
+        }
     }
 
     /// Fold a measured latency into the EWMA for (layer, method).
@@ -350,6 +517,102 @@ mod tests {
         assert!(r.set_pressure(false));
         assert!(!r.under_pressure());
         assert_eq!(r.choose("l", &shape), Method::LoweredSpmm);
+    }
+
+    #[test]
+    fn breaker_quarantines_after_consecutive_faults() {
+        let r = Router::new(RouterConfig {
+            explore_every: 0,
+            quarantine_after: 2,
+            quarantine_cooldown: 100,
+            ..Default::default()
+        });
+        let shape = sparse_3x3();
+        assert_eq!(r.choose("l", &shape), Method::DirectSparse);
+        let pair = vec![("l".to_string(), Method::DirectSparse)];
+        assert_eq!(r.record_faults(&pair), 0); // 1st fault: under threshold
+        assert!(!r.quarantined("l", Method::DirectSparse));
+        assert_eq!(r.record_faults(&pair), 1); // 2nd fault: trips
+        assert!(r.quarantined("l", Method::DirectSparse));
+        // Excluded from the normal path (static choice redirects to
+        // cheapest-of-allowed) and from the pressure path.
+        assert_eq!(r.choose("l", &shape), Method::LoweredSpmm);
+        r.set_pressure(true);
+        assert_eq!(r.choose("l", &shape), Method::LoweredSpmm);
+        r.set_pressure(false);
+    }
+
+    #[test]
+    fn breaker_reinstates_after_cooldown_with_backoff() {
+        let r = Router::new(RouterConfig {
+            explore_every: 0,
+            quarantine_after: 1,
+            quarantine_cooldown: 2,
+            ..Default::default()
+        });
+        let shape = sparse_3x3();
+        let pair = vec![("l".to_string(), Method::DirectSparse)];
+        // Trip at decision 0: quarantined until decision 2.
+        assert_eq!(r.record_faults(&pair), 1);
+        assert_ne!(r.choose("l", &shape), Method::DirectSparse); // d=1
+        assert_eq!(r.choose("l", &shape), Method::DirectSparse); // d=2: reaped
+        assert_eq!(r.take_reinstates(), 1);
+        assert_eq!(r.take_reinstates(), 0); // drained
+        // Re-trip at decision 2: cooldown doubles (2 -> 4), so the pair
+        // stays out until decision 6.
+        assert_eq!(r.record_faults(&pair), 1);
+        for _ in 0..3 {
+            assert_ne!(r.choose("l", &shape), Method::DirectSparse); // d=3..5
+        }
+        assert_eq!(r.choose("l", &shape), Method::DirectSparse); // d=6: reaped
+        assert_eq!(r.take_reinstates(), 1);
+    }
+
+    #[test]
+    fn breaker_success_resets_fault_streak() {
+        let r = Router::new(RouterConfig {
+            explore_every: 0,
+            quarantine_after: 2,
+            quarantine_cooldown: 100,
+            ..Default::default()
+        });
+        let pair = vec![("l".to_string(), Method::DirectSparse)];
+        assert_eq!(r.record_faults(&pair), 0);
+        r.record_successes(&pair); // streak broken
+        assert_eq!(r.record_faults(&pair), 0);
+        assert_eq!(r.record_faults(&pair), 1); // two consecutive again
+    }
+
+    #[test]
+    fn breaker_all_quarantined_falls_back_to_full_set() {
+        let r = Router::new(RouterConfig {
+            explore_every: 0,
+            quarantine_after: 1,
+            quarantine_cooldown: 1000,
+            ..Default::default()
+        });
+        // Dense layer: LoweredGemm is the sole candidate.
+        let shape = dense_3x3();
+        let pair = vec![("l".to_string(), Method::LoweredGemm)];
+        assert_eq!(r.record_faults(&pair), 1);
+        assert!(r.quarantined("l", Method::LoweredGemm));
+        // The layer must still be served: the full set is restored.
+        assert_eq!(r.choose("l", &shape), Method::LoweredGemm);
+    }
+
+    #[test]
+    fn breaker_disabled_when_quarantine_after_is_zero() {
+        let r = Router::new(RouterConfig {
+            explore_every: 0,
+            quarantine_after: 0,
+            ..Default::default()
+        });
+        let pair = vec![("l".to_string(), Method::DirectSparse)];
+        for _ in 0..10 {
+            assert_eq!(r.record_faults(&pair), 0);
+        }
+        assert!(!r.quarantined("l", Method::DirectSparse));
+        assert_eq!(r.choose("l", &sparse_3x3()), Method::DirectSparse);
     }
 
     #[test]

@@ -95,6 +95,26 @@
 //! finish unbalanced, coarser when the queue barely rebalances — and
 //! retiled layers rebuild through the shared cache exactly like a
 //! method flip. Tile geometry never changes logits.
+//!
+//! ## Supervision & graceful degradation
+//!
+//! Every serving turn runs under per-slot supervision: a panic raised
+//! while advancing or retiring a slot (a tile panic re-raised by the
+//! pool, a non-finite logit vector caught by the retirement
+//! finite-check) fails **only that slot** — its requests are retried
+//! once on the tenant's deterministic safe path (sequential walk,
+//! scalar `DirectSparse`, [`ServerConfig::safe_retry`]) or answered
+//! with a typed [`ServerError::Faulted`]; the slot's arena is rebuilt,
+//! `executor_restarts` bumps, and serving continues. Faulting
+//! `(layer, method)` pairs feed the router's circuit breaker
+//! (quarantine with exponential-backoff cooldown —
+//! `ARCHITECTURE.md` §12 has the full degradation ladder), and batch
+//! formation sheds requests whose deadline already expired with
+//! [`ServerError::DeadlineExpired`] before they claim a pipeline slot.
+//! Under `--features fault-inject`, `util::fault` injects seeded,
+//! bit-for-bit-replayable faults into exactly this machinery; each
+//! slot's pool jobs are tagged with its batch sequence number so a
+//! chaos plan targets one batch at any pool size.
 
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
@@ -109,20 +129,65 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Serving-layer error (the coordinator is dependency-free; no anyhow).
-#[derive(Debug)]
-pub struct ServerError(pub String);
+/// Typed so callers — and the load generator — can branch on the failure
+/// kind instead of string-matching; `Display` keeps the historical
+/// `server: ...` texts (including the `rejected` substring admission
+/// tests match on).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServerError {
+    /// The executor thread is no longer serving (shut down, or dead
+    /// after an unsupervised panic). Submits fail fast with this, and
+    /// requests stranded in flight when the executor dies are answered
+    /// with it — their admission slots restored, never leaked.
+    ExecutorGone,
+    /// Admission control rejected the submit: `inflight` requests were
+    /// already admitted against a bound of `bound`.
+    QueueFull {
+        /// Admitted-but-unanswered requests observed at the submit.
+        inflight: u64,
+        /// The configured [`ServerConfig::max_queue_depth`].
+        bound: usize,
+    },
+    /// The request's deadline had already expired when its batch was
+    /// staged, so it was shed before claiming a pipeline slot.
+    DeadlineExpired,
+    /// The serving turn faulted (tile panic or non-finite logits) and
+    /// the safe-path retry did not produce a finite answer.
+    Faulted(String),
+    /// Malformed request or configuration (unknown tenant, wrong image
+    /// size, unknown network, ...).
+    Invalid(String),
+}
 
 impl std::fmt::Display for ServerError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "server: {}", self.0)
+        match self {
+            ServerError::ExecutorGone => write!(f, "server: executor gone"),
+            ServerError::QueueFull { inflight, bound } => write!(
+                f,
+                "server: rejected: queue full ({inflight} in flight, bound {bound})"
+            ),
+            ServerError::DeadlineExpired => {
+                write!(f, "server: deadline expired before execution")
+            }
+            ServerError::Faulted(msg) => write!(f, "server: faulted: {msg}"),
+            ServerError::Invalid(msg) => write!(f, "server: {msg}"),
+        }
     }
 }
 
 impl std::error::Error for ServerError {}
 
 fn err(msg: impl Into<String>) -> ServerError {
-    ServerError(msg.into())
+    ServerError::Invalid(msg.into())
 }
+
+/// The client's end of a response channel: `Ok` carries the logits,
+/// `Err` a typed per-request failure ([`ServerError::Faulted`] after an
+/// unrecovered fault, [`ServerError::DeadlineExpired`] for a shed
+/// request, [`ServerError::ExecutorGone`] if the executor died with the
+/// request in flight).
+pub type ResponseReceiver = Receiver<Result<InferResponse, ServerError>>;
 
 /// One inference request: a single CHW image.
 pub struct InferRequest {
@@ -136,8 +201,8 @@ pub struct InferRequest {
     /// metrics, and imminent deadlines (slack below
     /// [`RouterConfig::pressure_slack`]) engage router pressure mode.
     pub deadline: Option<Instant>,
-    /// Channel the response is sent back on.
-    pub resp: Sender<InferResponse>,
+    /// Channel the response — or its typed failure — is sent back on.
+    pub resp: Sender<Result<InferResponse, ServerError>>,
 }
 
 /// The reply: class logits for the image.
@@ -215,6 +280,17 @@ pub struct ServerConfig {
     /// Geometry never changes logits — turn this off only to pin the
     /// tile layout (benchmarks comparing fixed configurations do).
     pub adaptive_tiling: bool,
+    /// Retry each request of a faulted serving turn once on the
+    /// deterministic **safe path** before failing it (on by default):
+    /// a lazily built batch-1 plan with every sparse CONV layer pinned
+    /// to the scalar `DirectSparse` oracle (`TilePolicy::unblocked()`),
+    /// driven by the sequential walk with fault injection suppressed.
+    /// A retried request whose safe logits are finite is answered
+    /// normally (tagged with the safe plan's methods); otherwise it
+    /// fails with [`ServerError::Faulted`]. Off, every request of a
+    /// faulted slot fails immediately — chaos tests asserting "exactly
+    /// the affected request fails" run with this off.
+    pub safe_retry: bool,
     /// Run the offline, simulator-guided tile-policy sweep
     /// (`simulator::tune_plan_cache`) once at startup, before the first
     /// plan compiles: every sparse CONV layer's candidate geometries
@@ -240,6 +316,7 @@ impl Default for ServerConfig {
             pipeline_depth: 2,
             strict_replan: false,
             adaptive_tiling: true,
+            safe_retry: true,
             autotune_policies: false,
         }
     }
@@ -354,7 +431,7 @@ impl ServerHandle {
 
     /// Submit one image to tenant 0 with no deadline; returns the
     /// response channel.
-    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<InferResponse>, ServerError> {
+    pub fn submit(&self, image: Vec<f32>) -> Result<ResponseReceiver, ServerError> {
         self.submit_to(0, image, None)
     }
 
@@ -370,7 +447,7 @@ impl ServerHandle {
         tenant: usize,
         image: Vec<f32>,
         deadline: Option<Instant>,
-    ) -> Result<Receiver<InferResponse>, ServerError> {
+    ) -> Result<ResponseReceiver, ServerError> {
         let info = self
             .tenants
             .get(tenant)
@@ -383,6 +460,15 @@ impl ServerHandle {
                 info.image_elems
             )));
         }
+        // Fail fast (typed, never a panic) when the intake is gone:
+        // after shutdown, or after the executor thread died. The send
+        // below re-checks — an executor that exits between this check
+        // and the send closes its channels, so the race only ever
+        // resolves to the same typed error.
+        let txs = self.txs.as_ref().ok_or(ServerError::ExecutorGone)?;
+        if self.executor.as_ref().is_none_or(|h| h.is_finished()) {
+            return Err(ServerError::ExecutorGone);
+        }
         // Reserve an in-flight slot first and undo on rejection, so
         // concurrent submitters can never all pass a depth check and
         // overshoot the bound together.
@@ -390,10 +476,10 @@ impl ServerHandle {
         if self.max_queue_depth > 0 && prev as usize >= self.max_queue_depth {
             self.inflight.fetch_sub(1, Ordering::Relaxed);
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(err(format!(
-                "rejected: queue full ({prev} in flight, bound {})",
-                self.max_queue_depth
-            )));
+            return Err(ServerError::QueueFull {
+                inflight: prev,
+                bound: self.max_queue_depth,
+            });
         }
         self.metrics
             .queue_depth
@@ -406,12 +492,9 @@ impl ServerHandle {
             deadline,
             resp: resp_tx,
         };
-        if self.txs.as_ref().expect("server already shut down")[tenant]
-            .send(req)
-            .is_err()
-        {
+        if txs[tenant].send(req).is_err() {
             self.inflight.fetch_sub(1, Ordering::Relaxed);
-            return Err(err("executor gone"));
+            return Err(ServerError::ExecutorGone);
         }
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         Ok(resp_rx)
@@ -430,7 +513,7 @@ impl ServerHandle {
             .take()
             .expect("double shutdown")
             .join()
-            .map_err(|_| err("executor panicked"))??;
+            .map_err(|_| ServerError::Faulted("executor panicked".into()))??;
         Ok(ServerStats {
             snapshot: self.metrics.snapshot(),
             plan_build_time,
@@ -490,6 +573,94 @@ struct Slot {
     arena: WorkspaceArena,
     input: Vec<f32>,
     exec_started: Instant,
+    /// Batch sequence number (first staged batch = 1) — the
+    /// fault-injection context id every pool job of this slot is tagged
+    /// with, so a seeded `FaultPlan` targets exactly one batch
+    /// regardless of pool size. Kept unconditionally (one `u64`); only
+    /// `fault-inject` builds read it.
+    #[cfg_attr(not(feature = "fault-inject"), allow(dead_code))]
+    fault_ctx: u64,
+}
+
+/// Run `f` with the fault-injection ambient context set to `ctx`
+/// (identity without the `fault-inject` feature — the default build
+/// carries no fault plumbing on the serving path).
+#[inline]
+fn with_fault_ctx<R>(ctx: u64, f: impl FnOnce() -> R) -> R {
+    #[cfg(feature = "fault-inject")]
+    return crate::util::fault::with_scope(ctx, false, f);
+    #[cfg(not(feature = "fault-inject"))]
+    {
+        let _ = ctx;
+        f()
+    }
+}
+
+/// Run `f` with fault firing suppressed (identity without the feature)
+/// — the safe-path retry runs under this so a sticky injected fault
+/// cannot re-fire during degraded recovery.
+#[inline]
+fn fault_suppressed<R>(f: impl FnOnce() -> R) -> R {
+    #[cfg(feature = "fault-inject")]
+    return crate::util::fault::suppress(f);
+    #[cfg(not(feature = "fault-inject"))]
+    f()
+}
+
+/// Best-effort human-readable panic message from a caught payload.
+fn payload_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic".to_string()
+    }
+}
+
+/// The per-tenant degraded execution path a faulted request is retried
+/// on: a batch-1 plan with every sparse CONV layer pinned to the scalar
+/// `DirectSparse` oracle (`TilePolicy::unblocked()` — the repo's
+/// byte-determinism reference), driven by the sequential walk. Built
+/// lazily on a tenant's first fault from its own `PlanCache`, so the
+/// live cache and its adapted tile policies are never perturbed.
+struct SafePath {
+    plan: Arc<NetworkPlan>,
+    methods: Arc<Vec<(String, Method)>>,
+    arena: WorkspaceArena,
+    input: Vec<f32>,
+}
+
+fn build_safe_path(net: &Network, weight_seed: u64, pool: &WorkerPool) -> SafePath {
+    let cache = PlanCache::build(net, weight_seed);
+    for l in &net.layers {
+        if matches!(&l.kind, LayerKind::Conv(_)) {
+            cache.set_tile_policy(&l.name, crate::conv::TilePolicy::unblocked());
+        }
+    }
+    let plan = Arc::new(cache.network_plan(net, 1, |_, _| Method::DirectSparse));
+    let methods = Arc::new(plan.conv_methods());
+    let arena = WorkspaceArena::for_plan(&plan, pool);
+    let input = vec![0.0f32; plan.input_dims().len()];
+    SafePath {
+        plan,
+        methods,
+        arena,
+        input,
+    }
+}
+
+/// One safe-path retry: run `image` through the tenant's safe plan with
+/// fault injection suppressed, under `catch_unwind`. Returns the logits
+/// only if the run completed and every value is finite.
+fn safe_retry_one(sp: &mut SafePath, image: &[f32], pool: &WorkerPool) -> Option<Vec<f32>> {
+    sp.input.fill(0.0);
+    sp.input[..image.len()].copy_from_slice(image);
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        fault_suppressed(|| sp.plan.run_with_input(&sp.input, pool, &mut sp.arena).to_vec())
+    }))
+    .ok()?;
+    out.iter().all(|v| v.is_finite()).then_some(out)
 }
 
 /// Everything the executor owns per registered network: config-derived
@@ -512,6 +683,10 @@ struct Tenant {
     /// Telemetry anchor for the adaptive-tiling interval.
     tile_stats: PoolStats,
     spare: Vec<(WorkspaceArena, Vec<f32>)>,
+    /// Lazily built degraded execution path ([`SafePath`]) — populated
+    /// on this tenant's first fault when [`ServerConfig::safe_retry`]
+    /// is on, reused for every later retry.
+    safe: Option<SafePath>,
 }
 
 /// Advance a slot one step: one layer of the sequential walk (feeding
@@ -546,20 +721,47 @@ fn slot_done(slot: &Slot) -> bool {
     }
 }
 
-/// Stage a formed batch into a free slot of its tenant: copy the images
-/// into the slot's staging buffer (padded tail slots stay zero) and
-/// position the plan cursor before the first layer. Branch/merge plans
-/// (GoogLeNet) start the asynchronous DAG walk, so the module branches
-/// of this batch overlap as dependency-chained jobs on the shared pool;
-/// chain plans keep the sequential cursor.
+/// Stage a formed batch into a free slot of its tenant: shed requests
+/// whose deadline already expired (a typed [`ServerError::DeadlineExpired`]
+/// response — they never occupy a pipeline slot or burn pool time),
+/// copy the surviving images into the slot's staging buffer (padded
+/// tail slots stay zero) and position the plan cursor before the first
+/// layer. Branch/merge plans (GoogLeNet) start the asynchronous DAG
+/// walk, so the module branches of this batch overlap as
+/// dependency-chained jobs on the shared pool; chain plans keep the
+/// sequential cursor. Returns whether a slot was actually staged
+/// (false when every request of the batch was shed).
 fn start_slot(
     tenant_idx: usize,
     t: &mut Tenant,
-    batch: Batch<InferRequest>,
+    mut batch: Batch<InferRequest>,
     pool: &WorkerPool,
     metrics: &Metrics,
     slots: &mut VecDeque<Slot>,
-) {
+    batch_seq: &mut u64,
+    inflight: &AtomicU64,
+) -> bool {
+    // Deadline shedding happens before the batch claims an arena: an
+    // already-lost request must not displace work that can still hit
+    // its SLO. Shed responses release their admission slots here.
+    let now = Instant::now();
+    if batch.items.iter().any(|r| r.deadline.is_some_and(|d| now > d)) {
+        let items = std::mem::take(&mut batch.items);
+        for req in items {
+            if req.deadline.is_some_and(|d| now > d) {
+                metrics.deadline_shed.fetch_add(1, Ordering::Relaxed);
+                metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                let _ = req.resp.send(Err(ServerError::DeadlineExpired));
+                let depth_now = inflight.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
+                metrics.queue_depth.store(depth_now, Ordering::Relaxed);
+            } else {
+                batch.items.push(req);
+            }
+        }
+        if batch.items.is_empty() {
+            return false;
+        }
+    }
     let (mut arena, mut input) = t.spare.pop().expect("slot arena available");
     input.fill(0.0);
     for (slot, req) in batch.items.iter().enumerate() {
@@ -570,16 +772,20 @@ fn start_slot(
         .padded_slots
         .fetch_add(batch.padding(t.batch_size) as u64, Ordering::Relaxed);
     metrics.batches.fetch_add(1, Ordering::Relaxed);
-    let cursor = if t.plan.supports_async() {
-        // SAFETY: the cursor is stored in the Slot *before* the
-        // arena (drop order joins jobs first), the slot's arena is
-        // never touched by another cursor while in flight, and
-        // retirement fully steps the cursor before the arena is
-        // recycled into `spare`.
-        SlotCursor::Dag(unsafe { t.plan.begin_run_async(Some(&input), pool, &mut arena) })
-    } else {
-        SlotCursor::Seq(t.plan.begin_run(Some(&input), pool, &mut arena))
-    };
+    *batch_seq += 1;
+    let fault_ctx = *batch_seq;
+    let cursor = with_fault_ctx(fault_ctx, || {
+        if t.plan.supports_async() {
+            // SAFETY: the cursor is stored in the Slot *before* the
+            // arena (drop order joins jobs first), the slot's arena is
+            // never touched by another cursor while in flight, and
+            // retirement fully steps the cursor before the arena is
+            // recycled into `spare`.
+            SlotCursor::Dag(unsafe { t.plan.begin_run_async(Some(&input), pool, &mut arena) })
+        } else {
+            SlotCursor::Seq(t.plan.begin_run(Some(&input), pool, &mut arena))
+        }
+    });
     slots.push_back(Slot {
         tenant: tenant_idx,
         batch,
@@ -589,7 +795,9 @@ fn start_slot(
         arena,
         input,
         exec_started: Instant::now(),
+        fault_ctx,
     });
+    true
 }
 
 /// Two-pass fair intake across tenants, staging up to the pipeline's
@@ -605,6 +813,8 @@ fn intake_batches(
     rr: &mut usize,
     pool: &WorkerPool,
     metrics: &Metrics,
+    batch_seq: &mut u64,
+    inflight: &AtomicU64,
 ) -> bool {
     let n = tenants.len();
     let mut staged = false;
@@ -620,8 +830,11 @@ fn intake_batches(
                 tenants[i].batcher.poll_batch()
             };
             if let Some(b) = batch {
-                start_slot(i, &mut tenants[i], b, pool, metrics, slots);
-                staged = true;
+                // A fully shed batch stages nothing, but still counts
+                // as progress (requests were answered) — keep polling.
+                if start_slot(i, &mut tenants[i], b, pool, metrics, slots, batch_seq, inflight) {
+                    staged = true;
+                }
                 *rr = (i + 1) % n;
             }
         }
@@ -659,12 +872,12 @@ fn retire_slot(
                     metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
                 }
             }
-            let _ = req.resp.send(InferResponse {
+            let _ = req.resp.send(Ok(InferResponse {
                 id: req.id,
                 logits: out,
                 latency,
                 methods: slot.methods.clone(),
-            });
+            }));
             let depth_now = inflight.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
             metrics.queue_depth.store(depth_now, Ordering::Relaxed);
         }
@@ -680,6 +893,169 @@ fn retire_slot(
     metrics
         .pool_imbalance_milli
         .store((ps.imbalance() * 1000.0) as u64, Ordering::Relaxed);
+}
+
+/// Tear a faulted slot down and answer its requests: the cursor is
+/// dropped first under `catch_unwind` (a DAG cursor joins its in-flight
+/// pool jobs there, and the pool's stored panic payload re-raises on
+/// that drop — caught here so supervision survives it), the slot's
+/// arena is discarded and a fresh one rebuilt into the tenant's spare
+/// list, and each request is either retried once on the tenant's
+/// [`SafePath`] (when `safe_retry` is on) or failed with a typed
+/// [`ServerError::Faulted`]. Every (layer, method) pair of the faulted
+/// plan is reported to the tenant's circuit breaker; a newly
+/// quarantined pair triggers an immediate replan so the very next
+/// staged batch avoids it.
+#[allow(clippy::too_many_arguments)]
+fn fail_slot(
+    slot: Slot,
+    why: String,
+    t: &mut Tenant,
+    pool: &WorkerPool,
+    metrics: &Metrics,
+    inflight: &AtomicU64,
+    cfg: &ServerConfig,
+    replans: &mut u64,
+) {
+    metrics.executor_restarts.fetch_add(1, Ordering::Relaxed);
+    // Destructure explicitly so the cursor provably drops before the
+    // arena its in-flight jobs reference (the begin_run_async safety
+    // contract) — a `..` pattern would drop unlisted fields, arena
+    // included, before this line runs.
+    let Slot {
+        tenant: _,
+        batch,
+        plan,
+        methods,
+        cursor,
+        arena,
+        input,
+        exec_started: _,
+        fault_ctx: _,
+    } = slot;
+    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| drop(cursor)));
+    drop(arena);
+    drop(plan);
+    // The faulted slot's arena is gone; restore the tenant's slot
+    // capacity with a fresh build against its live plan.
+    t.spare.push((WorkspaceArena::for_plan(&t.plan, pool), input));
+
+    // Answer every in-flight request of the slot.
+    for req in batch.items {
+        let answered = if cfg.safe_retry {
+            if t.safe.is_none() {
+                t.safe = Some(build_safe_path(&t.net, cfg.weight_seed, pool));
+            }
+            let sp = t.safe.as_mut().expect("safe path just built");
+            safe_retry_one(sp, &req.image, pool).map(|logits| (logits, sp.methods.clone()))
+        } else {
+            None
+        };
+        match answered {
+            Some((logits, methods)) => {
+                let latency = req.submitted.elapsed();
+                metrics.latency.record(latency);
+                metrics.responses.fetch_add(1, Ordering::Relaxed);
+                if let Some(d) = req.deadline {
+                    if Instant::now() <= d {
+                        metrics.deadline_hits.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let _ = req.resp.send(Ok(InferResponse {
+                    id: req.id,
+                    logits,
+                    latency,
+                    methods,
+                }));
+            }
+            None => {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = req.resp.send(Err(ServerError::Faulted(why.clone())));
+            }
+        }
+        let depth_now = inflight.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
+        metrics.queue_depth.store(depth_now, Ordering::Relaxed);
+    }
+
+    // Circuit breaker: the executor cannot attribute the fault to one
+    // layer, so every (layer, method) pair the faulted plan routed is
+    // charged. A pair that keeps serving cleanly resets its count at
+    // every healthy retire, so only a *repeatedly* faulting method
+    // accumulates to quarantine.
+    let newly = t.router.record_faults(&methods);
+    if newly > 0 {
+        metrics.method_quarantines.fetch_add(newly, Ordering::Relaxed);
+        let want = desired_methods(&t.net, &t.router);
+        metrics
+            .method_reinstates
+            .fetch_add(t.router.take_reinstates(), Ordering::Relaxed);
+        if want != t.plan.conv_methods() {
+            let t0 = Instant::now();
+            let builds_before = t.cache.layer_builds();
+            t.plan = Arc::new(build_plan(&t.cache, &t.net, t.batch_size, &want));
+            t.methods = Arc::new(t.plan.conv_methods());
+            metrics
+                .replan_build_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            metrics
+                .replan_layers_rebuilt
+                .fetch_add(t.cache.layer_builds() - builds_before, Ordering::Relaxed);
+            metrics.replans.fetch_add(1, Ordering::Relaxed);
+            *replans += 1;
+        }
+    }
+}
+
+/// Retire the oldest slot if it finished cleanly; otherwise hand it to
+/// [`fail_slot`]. "Cleanly" means the final logits extraction neither
+/// re-raises a stored tile panic nor yields a non-finite value — the
+/// finite-check is the last line of defence before a response leaves
+/// the server.
+#[allow(clippy::too_many_arguments)]
+fn retire_or_fail(
+    slot: Slot,
+    t: &mut Tenant,
+    pool: &WorkerPool,
+    metrics: &Metrics,
+    inflight: &AtomicU64,
+    cfg: &ServerConfig,
+    replans: &mut u64,
+) {
+    let finite = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        with_fault_ctx(slot.fault_ctx, || {
+            let logits = match &slot.cursor {
+                SlotCursor::Seq(c) => slot.plan.finish(c, &slot.arena),
+                SlotCursor::Dag(c) => slot.plan.finish_async(c, &slot.arena),
+            };
+            // Only the live rows matter: padded tail slots are zero by
+            // construction, and a fault poisons live output planes.
+            logits[..slot.batch.items.len() * t.num_classes]
+                .iter()
+                .all(|v| v.is_finite())
+        })
+    }));
+    match finite {
+        Ok(true) => {
+            t.router.record_successes(&slot.methods);
+            retire_slot(slot, t.num_classes, metrics, pool, &mut t.spare, inflight);
+        }
+        Ok(false) => fail_slot(
+            slot,
+            "non-finite logits".into(),
+            t,
+            pool,
+            metrics,
+            inflight,
+            cfg,
+            replans,
+        ),
+        Err(payload) => {
+            let why = format!("serving turn panicked: {}", payload_msg(payload.as_ref()));
+            fail_slot(slot, why, t, pool, metrics, inflight, cfg, replans);
+        }
+    }
 }
 
 fn executor_loop(
@@ -751,6 +1127,7 @@ fn executor_loop(
                 nbatches: 0,
                 tile_stats,
                 spare,
+                safe: None,
             });
         }
         Ok((pool, tenants, t0.elapsed()))
@@ -758,7 +1135,7 @@ fn executor_loop(
     let (pool, mut tenants, build_time) = match startup {
         Ok(v) => v,
         Err(e) => {
-            let msg = e.0.clone();
+            let msg = e.to_string();
             let _ = ready.send(Err(e));
             return Err(err(format!("startup failed: {msg}")));
         }
@@ -781,8 +1158,18 @@ fn executor_loop(
     let mut rr = 0usize;
     let pressure_depth = cfg.router.pressure_queue_depth;
     let pressure_slack = cfg.router.pressure_slack;
+    // Batch sequence number == fault-injection context id (first staged
+    // batch = 1). At batch size 1 with a single tenant this maps 1:1 to
+    // request submit order, which is what makes chaos scenarios
+    // deterministic at any pool size.
+    let mut batch_seq = 0u64;
 
-    loop {
+    // One more catch_unwind around the whole serving loop: the per-slot
+    // supervision below absorbs everything the fault model plans for,
+    // so an escape here is a genuine executor bug — but even then the
+    // admission counter must not leak and no client may be stranded on
+    // a silently dropped channel.
+    let served = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
         // Pressure evaluation: engage when admitted depth or any
         // in-flight request's deadline slack crosses the configured
         // thresholds; release when both clear. A transition flips every
@@ -815,6 +1202,9 @@ fn executor_loop(
                 }
                 for t in tenants.iter_mut() {
                     let want = desired_methods(&t.net, &t.router);
+                    metrics
+                        .method_reinstates
+                        .fetch_add(t.router.take_reinstates(), Ordering::Relaxed);
                     if want != t.plan.conv_methods() {
                         let t0 = Instant::now();
                         let builds_before = t.cache.layer_builds();
@@ -846,15 +1236,38 @@ fn executor_loop(
                     break;
                 }
                 match tenants[0].batcher.next_batch() {
-                    Some(b) => start_slot(0, &mut tenants[0], b, &pool, &metrics, &mut slots),
+                    Some(b) => {
+                        // A fully shed batch stages nothing; loop back
+                        // to intake.
+                        if !start_slot(
+                            0,
+                            &mut tenants[0],
+                            b,
+                            &pool,
+                            &metrics,
+                            &mut slots,
+                            &mut batch_seq,
+                            &inflight,
+                        ) {
+                            continue;
+                        }
+                    }
                     None => {
                         open = false;
                         continue;
                     }
                 }
             } else {
-                let staged =
-                    intake_batches(&mut tenants, &mut slots, depth, &mut rr, &pool, &metrics);
+                let staged = intake_batches(
+                    &mut tenants,
+                    &mut slots,
+                    depth,
+                    &mut rr,
+                    &pool,
+                    &metrics,
+                    &mut batch_seq,
+                    &inflight,
+                );
                 if !staged {
                     if tenants.iter().all(|t| t.batcher.is_drained()) {
                         break;
@@ -864,29 +1277,78 @@ fn executor_loop(
                 }
             }
         } else if slots.len() < depth {
-            let _ = intake_batches(&mut tenants, &mut slots, depth, &mut rr, &pool, &metrics);
+            let _ = intake_batches(
+                &mut tenants,
+                &mut slots,
+                depth,
+                &mut rr,
+                &pool,
+                &metrics,
+                &mut batch_seq,
+                &inflight,
+            );
         }
 
         // Advance every in-flight batch one step, oldest first: the
         // old batch's tail layers and the new batch's head layers
         // interleave on the shared pool (and, for DAG plans, each
         // batch's own branches additionally overlap as async jobs).
-        for slot in slots.iter_mut() {
-            advance_slot(slot, &pool, &tenants[slot.tenant].router);
+        // Each advance is supervised: a panicked serving turn (a tile
+        // panic re-raised by the pool, or any walk failure) removes
+        // only that slot — its requests are retried or failed by
+        // `fail_slot` — and the loop keeps serving the others.
+        let mut i = 0;
+        while i < slots.len() {
+            let ti = slots[i].tenant;
+            let ctx = slots[i].fault_ctx;
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                with_fault_ctx(ctx, || advance_slot(&mut slots[i], &pool, &tenants[ti].router))
+            }));
+            match res {
+                Ok(()) => i += 1,
+                Err(payload) => {
+                    let slot = slots.remove(i).expect("slot index in range");
+                    let why =
+                        format!("serving turn panicked: {}", payload_msg(payload.as_ref()));
+                    fail_slot(
+                        slot,
+                        why,
+                        &mut tenants[ti],
+                        &pool,
+                        &metrics,
+                        &inflight,
+                        &cfg,
+                        &mut replans,
+                    );
+                }
+            }
         }
 
-        // Retire the oldest batch once every layer has run.
+        // Retire the oldest batch once every layer has run (through the
+        // finite-check — non-finite logits divert to the fault path).
         if slots.front().is_some_and(slot_done) {
             let slot = slots.pop_front().unwrap();
             let ti = slot.tenant;
-            let nc = tenants[ti].num_classes;
-            retire_slot(slot, nc, &metrics, &pool, &mut tenants[ti].spare, &inflight);
+            retire_or_fail(
+                slot,
+                &mut tenants[ti],
+                &pool,
+                &metrics,
+                &inflight,
+                &cfg,
+                &mut replans,
+            );
 
             tenants[ti].nbatches += 1;
             if cfg.replan_every > 0 && tenants[ti].nbatches % cfg.replan_every == 0 {
                 let (want, retiled) = {
                     let t = &mut tenants[ti];
                     let want = desired_methods(&t.net, &t.router);
+                    // Re-asking the router is where expired quarantine
+                    // cooldowns lapse — publish any reinstatements.
+                    metrics
+                        .method_reinstates
+                        .fetch_add(t.router.take_reinstates(), Ordering::Relaxed);
                     // Adaptive tiling: fold the interval's measured
                     // per-job imbalance and steal rate back into the
                     // tile policies of the layers the assignment routes
@@ -937,19 +1399,43 @@ fn executor_loop(
                         // interleaved responses — ever mix method
                         // assignments.
                         while let Some(mut slot) = slots.pop_front() {
-                            while !slot_done(&slot) {
-                                advance_slot(&mut slot, &pool, &tenants[slot.tenant].router);
-                            }
                             let sti = slot.tenant;
-                            let snc = tenants[sti].num_classes;
-                            retire_slot(
-                                slot,
-                                snc,
-                                &metrics,
-                                &pool,
-                                &mut tenants[sti].spare,
-                                &inflight,
-                            );
+                            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || {
+                                    while !slot_done(&slot) {
+                                        with_fault_ctx(slot.fault_ctx, || {
+                                            advance_slot(&mut slot, &pool, &tenants[sti].router)
+                                        });
+                                    }
+                                },
+                            ));
+                            match ok {
+                                Ok(()) => retire_or_fail(
+                                    slot,
+                                    &mut tenants[sti],
+                                    &pool,
+                                    &metrics,
+                                    &inflight,
+                                    &cfg,
+                                    &mut replans,
+                                ),
+                                Err(payload) => {
+                                    let why = format!(
+                                        "serving turn panicked: {}",
+                                        payload_msg(payload.as_ref())
+                                    );
+                                    fail_slot(
+                                        slot,
+                                        why,
+                                        &mut tenants[sti],
+                                        &pool,
+                                        &metrics,
+                                        &inflight,
+                                        &cfg,
+                                        &mut replans,
+                                    );
+                                }
+                            }
                             tenants[sti].nbatches += 1;
                         }
                     }
@@ -972,8 +1458,49 @@ fn executor_loop(
                 }
             }
         }
+    }));
+    if let Err(payload) = served {
+        // Executor-level failure: every in-flight slot and every
+        // batched/queued request is answered with a typed error and its
+        // admission slot released — the inflight counter never leaks.
+        let why = payload_msg(payload.as_ref());
+        let mut stranded: Vec<InferRequest> = Vec::new();
+        while let Some(slot) = slots.pop_front() {
+            stranded.extend(dismantle_slot(slot));
+        }
+        for t in tenants.iter_mut() {
+            stranded.extend(t.batcher.drain_all());
+        }
+        for req in stranded {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = req.resp.send(Err(ServerError::ExecutorGone));
+            let depth_now = inflight.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
+            metrics.queue_depth.store(depth_now, Ordering::Relaxed);
+        }
+        return Err(ServerError::Faulted(format!("executor panicked: {why}")));
     }
     Ok((build_time, replans))
+}
+
+/// Drop a slot's execution state in the contract order (the cursor
+/// joins its in-flight jobs — panics caught — before the arena those
+/// jobs reference frees) and hand back its unanswered requests.
+fn dismantle_slot(slot: Slot) -> Vec<InferRequest> {
+    let Slot {
+        tenant: _,
+        batch,
+        plan,
+        methods: _,
+        cursor,
+        arena,
+        input: _,
+        exec_started: _,
+        fault_ctx: _,
+    } = slot;
+    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| drop(cursor)));
+    drop(arena);
+    drop(plan);
+    batch.items
 }
 
 /// Compile a plan from a frozen per-layer method assignment through the

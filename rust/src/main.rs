@@ -192,7 +192,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .map(|_| server.submit(rng.activation_vec(elems)).unwrap())
                 .collect();
             for rx in pending {
-                rx.recv()?;
+                rx.recv()??;
             }
             let wall = t0.elapsed();
             let m = server.metrics();

@@ -1,0 +1,292 @@
+//! Deterministic fault injection (`--features fault-inject` only).
+//!
+//! A seeded [`FaultPlan`] describes *which* fault fires *where*: each
+//! [`FaultSpec`] names an injection **site** (a static string like
+//! [`SITE_POOL_TILE`]), an optional **context** id (the serving batch
+//! sequence number, so a fault targets exactly one request), and a
+//! [`FaultKind`]. Install a plan with [`install`]; the instrumented
+//! sites — tile execution in `util::pool`, the sconv microkernel tail —
+//! consult it through [`fire_site`] / [`should_poison`]. Because the
+//! context id is captured into the pool job at enqueue time and the plan
+//! itself is pure data, a chaos run replays **bit-for-bit** at any pool
+//! size: the same (site, ctx) pair fires on every run, regardless of
+//! which worker happens to claim the tile.
+//!
+//! The whole module is compiled out without the `fault-inject` feature;
+//! every call site is behind the same `#[cfg]`, so the default build
+//! carries zero fault-path branches.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Site id for the worker-pool tile body (`util::pool` — both the
+/// spawned-worker drain and the single-thread inline path).
+pub const SITE_POOL_TILE: &str = "pool.tile";
+/// Site id for the direct-sparse microkernel output tail
+/// (`conv::sconv_tile` — fires after the tile's planes are written).
+pub const SITE_SCONV_TILE: &str = "sconv.tile";
+
+/// What a fault does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic inside the tile body (exercises the pool's `catch_unwind`
+    /// and the executor's slot supervision).
+    TilePanic,
+    /// Sleep for the given duration before the tile runs (a straggler;
+    /// perturbs timing, never correctness).
+    Straggle(Duration),
+    /// Overwrite the tile's output planes with NaN (exercises the
+    /// finite-check + safe-path retry).
+    PoisonNan,
+}
+
+/// One deterministic fault: fires at `site` when the ambient context id
+/// matches `ctx` (or unconditionally when `ctx` is `None`).
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// Injection site ([`SITE_POOL_TILE`], [`SITE_SCONV_TILE`], ...).
+    pub site: &'static str,
+    /// Context filter — the serving layer tags each batch with its
+    /// sequence number (first batch = 1), so `Some(n)` targets exactly
+    /// one batch; `None` matches every context, including 0 (untagged).
+    pub ctx: Option<u64>,
+    /// What happens when the spec matches.
+    pub kind: FaultKind,
+    /// A sticky spec keeps firing on every match; a one-shot spec fires
+    /// on the first matching *tile* only (claimed atomically, so exactly
+    /// one tile of the matched batch faults even under a racing pool).
+    pub sticky: bool,
+}
+
+/// A seeded collection of [`FaultSpec`]s plus per-spec fired state.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// The seed is carried for reporting only — callers derive the spec
+    /// list from it deterministically (e.g. which arrival indices to
+    /// target); the plan itself replays from the specs alone.
+    pub seed: u64,
+    specs: Vec<FaultSpec>,
+    fired: Vec<AtomicBool>,
+}
+
+impl FaultPlan {
+    /// A plan with the given seed and specs.
+    pub fn new(seed: u64, specs: Vec<FaultSpec>) -> Self {
+        let fired = specs.iter().map(|_| AtomicBool::new(false)).collect();
+        FaultPlan { seed, specs, fired }
+    }
+
+    /// The first matching spec for `(site, ctx)` that is still eligible
+    /// to fire, claiming one-shot specs atomically.
+    fn claim(&self, site: &str, ctx: u64) -> Option<&FaultSpec> {
+        for (spec, fired) in self.specs.iter().zip(&self.fired) {
+            if spec.site != site {
+                continue;
+            }
+            if let Some(want) = spec.ctx {
+                if want != ctx {
+                    continue;
+                }
+            }
+            if spec.sticky {
+                fired.store(true, Ordering::Relaxed);
+                return Some(spec);
+            }
+            // One-shot: exactly one tile wins the swap.
+            if fired
+                .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(spec);
+            }
+        }
+        None
+    }
+}
+
+static PLAN: Mutex<Option<std::sync::Arc<FaultPlan>>> = Mutex::new(None);
+/// Total faults fired since the last [`install`]/[`clear`] — lets tests
+/// assert the planned fault actually fired (and fired exactly once).
+static FIRED: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Ambient (context id, suppressed) pair. The serving executor tags
+    /// its thread per batch; the pool copies the pair into each job at
+    /// enqueue so worker threads inherit it.
+    static SCOPE: std::cell::Cell<(u64, bool)> = const { std::cell::Cell::new((0, false)) };
+}
+
+/// Install `plan` globally (replacing any previous plan) and reset the
+/// fired counter. Tests serialise on this: one chaos scenario at a time.
+pub fn install(plan: FaultPlan) {
+    *PLAN.lock().unwrap() = Some(std::sync::Arc::new(plan));
+    FIRED.store(0, Ordering::Relaxed);
+}
+
+/// Remove the installed plan; subsequent site checks are no-ops.
+pub fn clear() {
+    *PLAN.lock().unwrap() = None;
+}
+
+/// Faults fired since the last [`install`].
+pub fn fired_count() -> u64 {
+    FIRED.load(Ordering::Relaxed)
+}
+
+/// The calling thread's ambient (ctx, suppressed) pair — captured by the
+/// pool into jobs at enqueue time.
+pub fn current_scope() -> (u64, bool) {
+    SCOPE.with(|s| s.get())
+}
+
+/// Run `f` with the ambient scope set to `(ctx, safe)`, restoring the
+/// previous scope afterwards (panic-safe via a drop guard, so a fired
+/// `TilePanic` cannot leak the scope into unrelated work).
+pub fn with_scope<R>(ctx: u64, safe: bool, f: impl FnOnce() -> R) -> R {
+    struct Restore((u64, bool));
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            SCOPE.with(|s| s.set(self.0));
+        }
+    }
+    let _restore = Restore(SCOPE.with(|s| s.replace((ctx, safe))));
+    f()
+}
+
+/// Run `f` with fault firing suppressed on this thread — the safe-path
+/// retry runs under this so a sticky fault cannot re-fire during
+/// degraded recovery. (The suppression flag travels with jobs exactly
+/// like the context id, so pool workers inherit it too.)
+pub fn suppress<R>(f: impl FnOnce() -> R) -> R {
+    let (ctx, _) = current_scope();
+    with_scope(ctx, true, f)
+}
+
+fn matched(site: &str) -> Option<FaultKind> {
+    let (ctx, safe) = current_scope();
+    if safe {
+        return None;
+    }
+    let plan = PLAN.lock().unwrap().clone()?;
+    let spec = plan.claim(site, ctx)?;
+    FIRED.fetch_add(1, Ordering::Relaxed);
+    Some(spec.kind)
+}
+
+/// Consult the installed plan at `site`: a matching [`FaultKind::Straggle`]
+/// sleeps here, a matching [`FaultKind::TilePanic`] panics here.
+/// [`FaultKind::PoisonNan`] never fires from this entry point (poisoning
+/// needs the output slice — see [`should_poison`]).
+pub fn fire_site(site: &'static str) {
+    match matched(site) {
+        Some(FaultKind::TilePanic) => {
+            panic!("fault-inject: planned tile panic at {site}")
+        }
+        Some(FaultKind::Straggle(d)) => std::thread::sleep(d),
+        Some(FaultKind::PoisonNan) | None => {}
+    }
+}
+
+/// True when a [`FaultKind::PoisonNan`] spec matches `site` in the
+/// current scope — the caller owns the output slice and does the fill.
+pub fn should_poison(site: &'static str) -> bool {
+    // Peek before claiming so a TilePanic spec at the same site is not
+    // consumed by a poison probe.
+    let (ctx, safe) = current_scope();
+    if safe {
+        return false;
+    }
+    let Some(plan) = PLAN.lock().unwrap().clone() else {
+        return false;
+    };
+    for (spec, fired) in plan.specs.iter().zip(&plan.fired) {
+        if spec.site != site || !matches!(spec.kind, FaultKind::PoisonNan) {
+            continue;
+        }
+        if let Some(want) = spec.ctx {
+            if want != ctx {
+                continue;
+            }
+        }
+        let claimed = if spec.sticky {
+            fired.store(true, Ordering::Relaxed);
+            true
+        } else {
+            fired
+                .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+        };
+        if claimed {
+            FIRED.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The global plan is process-wide state; keep every test in one
+    // function so `cargo test`'s parallel runner cannot interleave them.
+    #[test]
+    fn plan_matching_one_shot_sticky_and_suppression() {
+        // One-shot spec fires exactly once, only in its context.
+        install(FaultPlan::new(
+            1,
+            vec![FaultSpec {
+                site: SITE_SCONV_TILE,
+                ctx: Some(3),
+                kind: FaultKind::PoisonNan,
+                sticky: false,
+            }],
+        ));
+        assert!(!should_poison(SITE_SCONV_TILE), "ctx 0 must not match");
+        with_scope(3, false, || {
+            assert!(should_poison(SITE_SCONV_TILE));
+            assert!(!should_poison(SITE_SCONV_TILE), "one-shot re-fired");
+        });
+        assert_eq!(fired_count(), 1);
+
+        // Sticky spec keeps firing; suppression masks it.
+        install(FaultPlan::new(
+            2,
+            vec![FaultSpec {
+                site: SITE_SCONV_TILE,
+                ctx: None,
+                kind: FaultKind::PoisonNan,
+                sticky: true,
+            }],
+        ));
+        assert!(should_poison(SITE_SCONV_TILE));
+        assert!(should_poison(SITE_SCONV_TILE));
+        suppress(|| assert!(!should_poison(SITE_SCONV_TILE), "suppressed scope fired"));
+        assert!(should_poison(SITE_SCONV_TILE), "suppression leaked");
+
+        // TilePanic fires as a panic through fire_site; the scope guard
+        // restores the ambient pair across the unwind.
+        install(FaultPlan::new(
+            3,
+            vec![FaultSpec {
+                site: SITE_POOL_TILE,
+                ctx: Some(7),
+                kind: FaultKind::TilePanic,
+                sticky: false,
+            }],
+        ));
+        fire_site(SITE_POOL_TILE); // ctx 0: no match, no panic.
+        let unwound = std::panic::catch_unwind(|| {
+            with_scope(7, false, || fire_site(SITE_POOL_TILE))
+        });
+        assert!(unwound.is_err(), "planned tile panic did not fire");
+        assert_eq!(current_scope(), (0, false), "scope leaked across unwind");
+
+        // A cleared plan is inert and poison probes never consume a
+        // panic spec at the same site.
+        clear();
+        fire_site(SITE_POOL_TILE);
+        assert!(!should_poison(SITE_POOL_TILE));
+    }
+}

@@ -6,6 +6,8 @@
 //! reproducible bit-for-bit across runs, so a tiny explicit xorshift
 //! generator is preferable to a crate whose default seeding is entropic.
 
+#[cfg(feature = "fault-inject")]
+pub mod fault;
 pub mod json;
 mod pool;
 mod rng;

@@ -208,6 +208,12 @@ struct Job {
     /// approximate per-layer latency reconstruction reads.
     done: Mutex<Option<Instant>>,
     done_cv: Condvar,
+    /// Fault-injection scope captured from the submitting thread at
+    /// enqueue: (context id, suppressed). Workers run every tile of this
+    /// job under that scope, so a plan targeting "batch N" fires on
+    /// whichever worker claims the tile — deterministic at any pool size.
+    #[cfg(feature = "fault-inject")]
+    fault_scope: (u64, bool),
 }
 
 impl Job {
@@ -315,6 +321,15 @@ impl Shared {
                 break;
             }
             let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                #[cfg(feature = "fault-inject")]
+                {
+                    let (ctx, safe) = job.fault_scope;
+                    crate::util::fault::with_scope(ctx, safe, || {
+                        crate::util::fault::fire_site(crate::util::fault::SITE_POOL_TILE);
+                        job.task.call(t, worker)
+                    })
+                }
+                #[cfg(not(feature = "fault-inject"))]
                 job.task.call(t, worker)
             }));
             if let Err(payload) = res {
@@ -897,6 +912,11 @@ impl WorkerPool {
             let guard = sh.run_lock.lock().unwrap();
             let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 for t in 0..num_tiles {
+                    // The inline path is the pool's tile body too — the
+                    // pool-tile fault site fires here so chaos scenarios
+                    // replay identically at 1 worker.
+                    #[cfg(feature = "fault-inject")]
+                    crate::util::fault::fire_site(crate::util::fault::SITE_POOL_TILE);
                     task(t, 0);
                 }
             }));
@@ -1132,6 +1152,8 @@ impl WorkerPool {
             deps,
             done: Mutex::new((num_tiles == 0).then(Instant::now)),
             done_cv: Condvar::new(),
+            #[cfg(feature = "fault-inject")]
+            fault_scope: crate::util::fault::current_scope(),
         });
         if num_tiles > 0 {
             {

@@ -192,7 +192,10 @@ fn server_round_trip_all_requests_answered() {
         pending.push(server.submit(img).unwrap());
     }
     for rx in pending {
-        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("response")
+            .expect("response ok");
         assert_eq!(resp.logits.len(), classes);
         assert!(resp.logits.iter().all(|v| v.is_finite()));
     }
@@ -208,8 +211,8 @@ fn server_identical_images_get_identical_logits_across_batches() {
     let server = ServerHandle::start(server_cfg(7)).unwrap();
     let mut rng = Rng::new(10);
     let img = rng.activation_vec(server.image_elems());
-    let a = server.submit(img.clone()).unwrap().recv().unwrap();
-    let b = server.submit(img).unwrap().recv().unwrap();
+    let a = server.submit(img.clone()).unwrap().recv().unwrap().unwrap();
+    let b = server.submit(img).unwrap().recv().unwrap().unwrap();
     // Batch padding / workspace reuse must not leak into results: same
     // image, same logits.
     for (x, y) in a.logits.iter().zip(&b.logits) {
@@ -242,8 +245,8 @@ fn server_logits_depend_on_the_submitted_image() {
     let zero = vec![0.0; server.image_elems()];
     let mut rng = Rng::new(22);
     let img = rng.activation_vec(server.image_elems());
-    let a = server.submit(zero).unwrap().recv().unwrap();
-    let b = server.submit(img).unwrap().recv().unwrap();
+    let a = server.submit(zero).unwrap().recv().unwrap().unwrap();
+    let b = server.submit(img).unwrap().recv().unwrap().unwrap();
     assert_ne!(a.logits, b.logits);
     server.shutdown().unwrap();
 }
@@ -262,9 +265,9 @@ fn server_replans_when_the_router_changes_its_mind() {
     let server = ServerHandle::start(cfg).unwrap();
     let mut rng = Rng::new(14);
     let img = rng.activation_vec(server.image_elems());
-    let first = server.submit(img.clone()).unwrap().recv().unwrap();
+    let first = server.submit(img.clone()).unwrap().recv().unwrap().unwrap();
     for _ in 0..20 {
-        let resp = server.submit(img.clone()).unwrap().recv().unwrap();
+        let resp = server.submit(img.clone()).unwrap().recv().unwrap().unwrap();
         // Methods may differ across replans; results must agree to fp
         // accumulation tolerance.
         for (x, y) in resp.logits.iter().zip(&first.logits) {
@@ -310,14 +313,20 @@ fn property_admission_accounting_under_bursty_arrivals() {
         // exercised across several bursts.
         if burst % 17 == 16 {
             for rx in pending.drain(..) {
-                let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+                let resp = rx
+                    .recv_timeout(Duration::from_secs(120))
+                    .expect("response")
+                    .expect("response ok");
                 assert_eq!(resp.logits.len(), classes);
                 assert!(resp.logits.iter().all(|v| v.is_finite()));
             }
         }
     }
     for rx in pending {
-        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("response")
+            .expect("response ok");
         assert_eq!(resp.logits.len(), classes);
         assert!(resp.logits.iter().all(|v| v.is_finite()));
     }

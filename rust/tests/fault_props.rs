@@ -1,0 +1,309 @@
+//! Deterministic chaos suite (`--features fault-inject` builds only):
+//! the ISSUE's acceptance properties for seeded fault injection and
+//! supervised serving.
+//!
+//! * **Blast radius** — a planned tile panic targeted at one serving
+//!   batch fails exactly that request with the typed
+//!   [`ServerError::Faulted`]; every other request (including ones
+//!   staged *after* the fault) answers with logits byte-identical to an
+//!   un-faulted run of the same seed — at pool sizes 1, 4, and 8,
+//!   because the fault context rides the batch sequence number, not
+//!   worker scheduling. A planned straggler perturbs timing only.
+//! * **Degradation ladder** — a NaN-poisoned sconv layer trips the
+//!   pre-retirement finite check and the slot's requests are retried
+//!   once on the safe path (batch-1, scalar `DirectSparse`,
+//!   `TilePolicy::unblocked()`), answering byte-identically to that
+//!   oracle run stand-alone — with the sticky fault suppressed during
+//!   the retry.
+//! * **Circuit breaker** — repeated faults quarantine the charged
+//!   (layer, method) pairs (visible as `method_quarantines` and an
+//!   immediate replan), and healthy traffic past the decision-counted
+//!   cooldown reinstates them (`method_reinstates`).
+//!
+//! The installed [`FaultPlan`] is process-global, so every test
+//! serialises on one mutex and clears the plan before returning.
+
+#![cfg(feature = "fault-inject")]
+
+use escoin::config::{network_by_name, LayerKind};
+use escoin::conv::{Method, PlanCache, TilePolicy, WorkspaceArena};
+use escoin::coordinator::{BatcherConfig, RouterConfig, ServerConfig, ServerError, ServerHandle};
+use escoin::util::fault::{self, FaultKind, FaultPlan, FaultSpec, SITE_POOL_TILE, SITE_SCONV_TILE};
+use escoin::util::{Rng, WorkerPool};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+/// One chaos scenario at a time: the fault plan is process-global.
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+fn chaos_guard() -> MutexGuard<'static, ()> {
+    // A panicked scenario must not wedge the rest of the suite.
+    CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Single-tenant minicnn at batch 1 with every nondeterminism source
+/// pinned (no exploration, no replans, no adaptive tiling, breaker off),
+/// so batch sequence number == request submit order and logits are a
+/// pure function of the weight seed and the image.
+fn chaos_cfg(threads: usize, safe_retry: bool) -> ServerConfig {
+    ServerConfig {
+        network: "minicnn".into(),
+        batcher: BatcherConfig {
+            batch_size: 1,
+            max_wait: Duration::from_millis(1),
+        },
+        weight_seed: 77,
+        threads,
+        router: RouterConfig {
+            explore_every: 0,
+            quarantine_after: 0,
+            ..Default::default()
+        },
+        replan_every: 0,
+        adaptive_tiling: false,
+        safe_retry,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn tile_panic_fails_exactly_the_targeted_request_at_any_pool_size() {
+    let _g = chaos_guard();
+    let nreq = 6usize;
+    let target = 3u64; // batch_seq of the third submitted request
+    for threads in [1usize, 4, 8] {
+        let mut rng = Rng::new(4000 + threads as u64);
+        let imgs: Vec<Vec<f32>> = (0..nreq).map(|_| rng.activation_vec(3 * 16 * 16)).collect();
+
+        let serve = |armed: bool| {
+            if armed {
+                fault::install(FaultPlan::new(
+                    target,
+                    vec![
+                        FaultSpec {
+                            site: SITE_POOL_TILE,
+                            ctx: Some(target),
+                            kind: FaultKind::TilePanic,
+                            sticky: false,
+                        },
+                        // A one-shot straggler on the batch before it:
+                        // timing-only, must never change an outcome.
+                        FaultSpec {
+                            site: SITE_POOL_TILE,
+                            ctx: Some(target - 1),
+                            kind: FaultKind::Straggle(Duration::from_millis(2)),
+                            sticky: false,
+                        },
+                    ],
+                ));
+            } else {
+                fault::clear();
+            }
+            // safe_retry off: the blast-radius property is "exactly the
+            // targeted request fails" — no degraded recovery masking it.
+            let server = ServerHandle::start(chaos_cfg(threads, false)).unwrap();
+            let pending: Vec<_> = imgs
+                .iter()
+                .map(|img| server.submit(img.clone()).unwrap())
+                .collect();
+            let outcomes: Vec<Result<Vec<f32>, ServerError>> = pending
+                .into_iter()
+                .map(|rx| {
+                    rx.recv_timeout(Duration::from_secs(120))
+                        .expect("response channel")
+                        .map(|r| r.logits)
+                })
+                .collect();
+            let fired = fault::fired_count();
+            let stats = server.shutdown().unwrap();
+            fault::clear();
+            (outcomes, fired, stats.snapshot)
+        };
+
+        let (baseline, _, base_snap) = serve(false);
+        assert!(baseline.iter().all(|o| o.is_ok()), "t{threads}: baseline faulted");
+        assert_eq!(base_snap.errors, 0, "t{threads}");
+
+        let (chaos, fired, snap) = serve(true);
+        assert_eq!(fired, 2, "t{threads}: planned faults did not all fire");
+        for (i, (got, want)) in chaos.iter().zip(&baseline).enumerate() {
+            if i as u64 + 1 == target {
+                match got {
+                    Err(ServerError::Faulted(_)) => {}
+                    other => panic!("t{threads}: targeted request got {other:?}"),
+                }
+            } else {
+                // Byte-identical to the un-faulted run — including the
+                // straggled request and every request staged after the
+                // fault (the rebuilt slot arena must not perturb them).
+                assert_eq!(
+                    got.as_ref().expect("healthy request failed"),
+                    want.as_ref().unwrap(),
+                    "t{threads}: request {i} diverged from un-faulted run"
+                );
+            }
+        }
+        assert_eq!(snap.errors, 1, "t{threads}");
+        assert_eq!(snap.executor_restarts, 1, "t{threads}");
+        assert_eq!(snap.responses, (nreq - 1) as u64, "t{threads}");
+    }
+}
+
+#[test]
+fn nan_poison_triggers_safe_path_retry_matching_the_scalar_oracle() {
+    let _g = chaos_guard();
+    let net = network_by_name("minicnn").unwrap();
+    let weight_seed = 77u64;
+    let target_idx = 1usize; // second request -> batch_seq (ctx) 2
+    for threads in [1usize, 4, 8] {
+        let mut rng = Rng::new(5000 + threads as u64);
+        let imgs: Vec<Vec<f32>> = (0..4).map(|_| rng.activation_vec(3 * 16 * 16)).collect();
+
+        // The oracle is the degraded path's exact program, built
+        // stand-alone: a batch-1 plan with every CONV layer's tile
+        // policy pinned to the scalar unblocked oracle and every sparse
+        // CONV routed DirectSparse.
+        fault::clear();
+        let pool = WorkerPool::new(threads);
+        let cache = PlanCache::build(&net, weight_seed);
+        for l in &net.layers {
+            if matches!(&l.kind, LayerKind::Conv(_)) {
+                cache.set_tile_policy(&l.name, TilePolicy::unblocked());
+            }
+        }
+        let plan = cache.network_plan(&net, 1, |_, _| Method::DirectSparse);
+        let mut arena = WorkspaceArena::for_plan(&plan, &pool);
+        let mut input = vec![0.0f32; plan.input_dims().len()];
+        input[..imgs[target_idx].len()].copy_from_slice(&imgs[target_idx]);
+        let oracle = plan.run_with_input(&input, &pool, &mut arena).to_vec();
+        drop(pool);
+
+        // Sticky NaN poison on every sconv tile of the targeted batch:
+        // conv3 sits after the max-pool, so the poison provably reaches
+        // the logits and the pre-retirement finite check.
+        fault::install(FaultPlan::new(
+            0xBEEF,
+            vec![FaultSpec {
+                site: SITE_SCONV_TILE,
+                ctx: Some(target_idx as u64 + 1),
+                kind: FaultKind::PoisonNan,
+                sticky: true,
+            }],
+        ));
+        let server = ServerHandle::start(chaos_cfg(threads, true)).unwrap();
+        let pending: Vec<_> = imgs
+            .iter()
+            .map(|img| server.submit(img.clone()).unwrap())
+            .collect();
+        let logits: Vec<Vec<f32>> = pending
+            .into_iter()
+            .map(|rx| {
+                rx.recv_timeout(Duration::from_secs(120))
+                    .expect("response channel")
+                    .expect("poisoned slot must recover via the safe path")
+                    .logits
+            })
+            .collect();
+        let fired = fault::fired_count();
+        let stats = server.shutdown().unwrap();
+        fault::clear();
+
+        assert!(fired >= 1, "t{threads}: poison never fired");
+        // The finite check tripped exactly once, and the retry answered
+        // the request with the oracle's bytes.
+        assert_eq!(stats.snapshot.executor_restarts, 1, "t{threads}");
+        assert_eq!(stats.snapshot.errors, 0, "t{threads}");
+        assert_eq!(stats.snapshot.responses, imgs.len() as u64, "t{threads}");
+        assert_eq!(
+            logits[target_idx], oracle,
+            "t{threads}: safe-path logits diverged from the scalar oracle"
+        );
+        for (i, l) in logits.iter().enumerate() {
+            assert!(
+                l.iter().all(|v| v.is_finite()),
+                "t{threads}: request {i} leaked a non-finite logit"
+            );
+        }
+    }
+}
+
+#[test]
+fn circuit_breaker_quarantines_and_reinstates_after_cooldown() {
+    let _g = chaos_guard();
+    let cfg = ServerConfig {
+        network: "minicnn".into(),
+        batcher: BatcherConfig {
+            batch_size: 1,
+            max_wait: Duration::from_millis(1),
+        },
+        weight_seed: 77,
+        threads: 4,
+        router: RouterConfig {
+            explore_every: 0,
+            quarantine_after: 2,
+            quarantine_cooldown: 4,
+            ..Default::default()
+        },
+        // Replanning every batch re-asks the router, which is where
+        // expired quarantine cooldowns lapse (decision-counted — no
+        // wall-clock in the loop).
+        replan_every: 1,
+        adaptive_tiling: false,
+        safe_retry: true,
+        ..Default::default()
+    };
+    // One-shot tile panics on the first two staged batches: enough to
+    // hit quarantine_after, never touching later (healthy) batches.
+    fault::install(FaultPlan::new(
+        7,
+        (1..=2)
+            .map(|k| FaultSpec {
+                site: SITE_POOL_TILE,
+                ctx: Some(k),
+                kind: FaultKind::TilePanic,
+                sticky: false,
+            })
+            .collect(),
+    ));
+    let server = ServerHandle::start(cfg).unwrap();
+    let mut rng = Rng::new(6000);
+    let elems = server.image_elems();
+
+    // Phase 1: two faulted batches — both answered via the safe path.
+    for i in 0..2 {
+        let resp = server
+            .submit(rng.activation_vec(elems))
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap_or_else(|e| panic!("faulted request {i} not recovered: {e}"));
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+    }
+    let m = server.metrics();
+    assert!(
+        m.method_quarantines >= 1,
+        "two faults at quarantine_after=2 never tripped the breaker"
+    );
+    assert_eq!(m.executor_restarts, 2);
+
+    // Phase 2: healthy traffic advances the router's decision counter
+    // past the cooldown; the lapsed quarantines must be reinstated.
+    fault::clear();
+    for _ in 0..16 {
+        let resp = server
+            .submit(rng.activation_vec(elems))
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("healthy request failed");
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+    }
+    let m = server.metrics();
+    assert!(
+        m.method_reinstates >= 1,
+        "cooldown never reinstated a quarantined method"
+    );
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.snapshot.errors, 0);
+    assert_eq!(stats.snapshot.responses, 18);
+}

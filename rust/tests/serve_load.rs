@@ -12,15 +12,19 @@
 //!   routers to the deterministic cheapest-method assignment, and the
 //!   server recovers (pressure released, counters balanced) once the
 //!   backlog drains;
+//! * **Deadline shedding** — an already-expired request is answered
+//!   with the typed `DeadlineExpired` error at batch formation, never
+//!   occupies a pipeline slot, and leaves co-served logits
+//!   byte-identical;
 //!
 //! each at pool sizes 1, 4, and 8.
 
 use escoin::bench_harness::{run_load, schedule, LoadGenConfig};
 use escoin::coordinator::{
-    BatcherConfig, InferResponse, Method, RouterConfig, ServerConfig, ServerHandle,
+    BatcherConfig, InferResponse, Method, RouterConfig, ServerConfig, ServerError, ServerHandle,
 };
 use escoin::util::Rng;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// A two-tenant server config with replans, exploration, and adaptive
 /// tiling disabled, so the method assignment — and therefore the exact
@@ -107,6 +111,7 @@ fn co_served_tenants_answer_byte_identically_to_solo_serving() {
                 .map(|rx| {
                     rx.recv_timeout(Duration::from_secs(120))
                         .expect("solo response")
+                        .expect("solo ok")
                         .logits
                 })
                 .collect();
@@ -133,6 +138,7 @@ fn co_served_tenants_answer_byte_identically_to_solo_serving() {
             co[tenant].push(
                 rx.recv_timeout(Duration::from_secs(120))
                     .expect("co-served response")
+                    .expect("co-served ok")
                     .logits,
             );
         }
@@ -140,6 +146,61 @@ fn co_served_tenants_answer_byte_identically_to_solo_serving() {
 
         assert_eq!(co[0], mini_solo, "t{threads}: minicnn logits diverged");
         assert_eq!(co[1], micro_solo, "t{threads}: microcnn logits diverged");
+    }
+}
+
+/// A request whose deadline has already expired when its batch is
+/// staged is shed with the typed [`ServerError::DeadlineExpired`] —
+/// counted (`deadline_shed`), never an `error`, never occupying a
+/// pipeline slot — and the co-served healthy stream's logits are
+/// byte-identical to a run with no shed request at all.
+#[test]
+fn expired_deadline_requests_are_shed_with_typed_error() {
+    for threads in [1, 4, 8] {
+        let mut rng = Rng::new(900 + threads as u64);
+        let imgs: Vec<Vec<f32>> = (0..6).map(|_| rng.activation_vec(3 * 16 * 16)).collect();
+        let doomed: Vec<f32> = rng.activation_vec(3 * 16 * 16);
+        let serve_all = |server: &ServerHandle| -> Vec<Vec<f32>> {
+            imgs.iter()
+                .map(|img| {
+                    server
+                        .submit(img.clone())
+                        .unwrap()
+                        .recv()
+                        .expect("channel")
+                        .expect("healthy response")
+                        .logits
+                })
+                .collect()
+        };
+
+        // Baseline: the healthy stream alone.
+        let server = ServerHandle::start(fixed_plan_cfg("minicnn", &[], threads, 1)).unwrap();
+        let baseline = serve_all(&server);
+        server.shutdown().unwrap();
+
+        // Mixed: an already-expired request rides ahead of the same
+        // stream. It must be answered typed, before any pool work.
+        let server = ServerHandle::start(fixed_plan_cfg("minicnn", &[], threads, 1)).unwrap();
+        let expired = Instant::now() - Duration::from_secs(1);
+        let rx = server.submit_to(0, doomed.clone(), Some(expired)).unwrap();
+        match rx.recv().expect("shed response channel") {
+            Err(ServerError::DeadlineExpired) => {}
+            other => panic!("t{threads}: expected DeadlineExpired, got {other:?}"),
+        }
+        let mixed = serve_all(&server);
+        let stats = server.shutdown().unwrap();
+
+        assert_eq!(
+            mixed, baseline,
+            "t{threads}: shed request perturbed co-served logits"
+        );
+        assert_eq!(stats.snapshot.deadline_shed, 1, "t{threads}");
+        // Shedding is a typed outcome, not a server error, and the shed
+        // request never became a response.
+        assert_eq!(stats.snapshot.errors, 0, "t{threads}");
+        assert_eq!(stats.snapshot.responses, imgs.len() as u64, "t{threads}");
+        assert_eq!(stats.snapshot.rejected, 0, "t{threads}");
     }
 }
 
@@ -182,7 +243,7 @@ fn saturation_flips_methods_to_cheapest_and_recovers() {
 
         // Calm: one request at a time stays below the depth trigger and
         // serves under the static (raised-threshold) assignment.
-        let calm = server.submit(img.clone()).unwrap().recv().unwrap();
+        let calm = server.submit(img.clone()).unwrap().recv().unwrap().unwrap();
         assert_eq!(method_of(&calm, "conv2"), Method::LoweredGemm, "t{threads}");
         assert_eq!(method_of(&calm, "conv3"), Method::LoweredGemm, "t{threads}");
 
@@ -195,6 +256,7 @@ fn saturation_flips_methods_to_cheapest_and_recovers() {
             .map(|rx| {
                 rx.recv_timeout(Duration::from_secs(120))
                     .expect("burst response")
+                    .expect("burst ok")
             })
             .collect();
         let pressured = responses
@@ -212,7 +274,7 @@ fn saturation_flips_methods_to_cheapest_and_recovers() {
         // Recover: the backlog has drained, so pressure releases before
         // the next request is staged; the flip is visible in balanced
         // enter/exit counters and a cleared gauge, and serving goes on.
-        let after = server.submit(img.clone()).unwrap().recv().unwrap();
+        let after = server.submit(img.clone()).unwrap().recv().unwrap().unwrap();
         assert_eq!(after.logits.len(), server.num_classes());
         let m = server.metrics();
         assert!(m.pressure_enters >= 1, "t{threads}: pressure never engaged");

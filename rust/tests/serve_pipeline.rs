@@ -59,6 +59,7 @@ fn serve_stream(cfg: ServerConfig, images: &[Vec<f32>]) -> Vec<Vec<f32>> {
         .map(|rx| {
             rx.recv_timeout(Duration::from_secs(120))
                 .expect("response")
+                .expect("response ok")
                 .logits
         })
         .collect();
@@ -166,9 +167,9 @@ fn strict_replan_drains_the_pipeline_and_answers_everything() {
     let server = ServerHandle::start(cfg).unwrap();
     let mut rng = Rng::new(15);
     let img = rng.activation_vec(server.image_elems());
-    let first = server.submit(img.clone()).unwrap().recv().unwrap();
+    let first = server.submit(img.clone()).unwrap().recv().unwrap().unwrap();
     for _ in 0..30 {
-        let resp = server.submit(img.clone()).unwrap().recv().unwrap();
+        let resp = server.submit(img.clone()).unwrap().recv().unwrap().unwrap();
         for (x, y) in resp.logits.iter().zip(&first.logits) {
             assert!(
                 (x - y).abs() <= 1e-3 + 1e-3 * y.abs().max(x.abs()),
@@ -257,9 +258,9 @@ fn server_replans_incrementally_under_router_churn() {
     let server = ServerHandle::start(cfg).unwrap();
     let mut rng = Rng::new(14);
     let img = rng.activation_vec(server.image_elems());
-    let first = server.submit(img.clone()).unwrap().recv().unwrap();
+    let first = server.submit(img.clone()).unwrap().recv().unwrap().unwrap();
     for _ in 0..30 {
-        let resp = server.submit(img.clone()).unwrap().recv().unwrap();
+        let resp = server.submit(img.clone()).unwrap().recv().unwrap().unwrap();
         for (x, y) in resp.logits.iter().zip(&first.logits) {
             assert!(
                 (x - y).abs() <= 1e-3 + 1e-3 * y.abs().max(x.abs()),
@@ -326,6 +327,7 @@ fn autotuned_serving_is_byte_identical_and_surfaces_the_gauge() {
         .map(|rx| {
             rx.recv_timeout(Duration::from_secs(120))
                 .expect("response")
+                .expect("response ok")
                 .logits
         })
         .collect();
